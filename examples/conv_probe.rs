@@ -1,0 +1,59 @@
+// Probe: per-layer divergence between centralized and decentralized SSFN
+// training, used to calibrate equivalence tolerances (see DESIGN.md).
+use dssfn::admm::*;
+use dssfn::data::*;
+use dssfn::linalg::Matrix;
+use dssfn::ssfn::*;
+
+fn main() {
+    let mut s = SynthClassification::with_shape("toy", 8, 3, 120, 60);
+    s.class_sep = 3.0;
+    s.noise = 0.6;
+    let task = s.generate().unwrap();
+    let arch = SsfnArchitecture { input_dim: 8, num_classes: 3, hidden: 36, layers: 3 };
+    let shards = shard_uniform(&task.train, 4).unwrap();
+    let random = RandomMatrices::generate(&arch, 5).unwrap();
+    let k = 300;
+    let mu = 0.1;
+    let eps = 6.0;
+    let params = AdmmParams { mu, eps, iterations: k };
+
+    let mut yc = task.train.x.clone();
+    let mut yd: Vec<Matrix> = shards.iter().map(|s| s.x.clone()).collect();
+    for l in 0..=3usize {
+        let (oc, curve_c) = solve_centralized(&yc, &task.train.t, &params).unwrap();
+        let solvers: Vec<LayerLocalSolver> = (0..4)
+            .map(|i| LayerLocalSolver::new(&yd[i], &shards[i].t, mu).unwrap())
+            .collect();
+        let sol = solve_decentralized(&solvers, 3, yc.rows(), &params, &Consensus::Exact).unwrap();
+        let od = sol.output().clone();
+        let mut maxd: f64 = 0.0;
+        let mut col = 0usize;
+        for sh in &yd {
+            for c in 0..sh.cols() {
+                for r in 0..sh.rows() {
+                    maxd = maxd.max((sh.get(r, c) - yc.get(r, col + c)).abs());
+                }
+            }
+            col += sh.cols();
+        }
+        println!(
+            "layer {l}: |Oc-Od|={:.3e}  |Oc|_F={:.3}(eps={eps})  costC={:.4} costD={:.4}  y_diff={:.3e}",
+            oc.max_abs_diff(&od),
+            oc.frobenius_norm(),
+            curve_c.last().unwrap(),
+            sol.cost_curve.last().unwrap(),
+            maxd
+        );
+        if l < 3 {
+            let wc = build_weight(&oc, random.layer(l + 1)).unwrap();
+            yc = wc.matmul(&yc).unwrap();
+            yc.relu_inplace();
+            for i in 0..4 {
+                let wd = build_weight(&sol.states[i].z, random.layer(l + 1)).unwrap();
+                yd[i] = wd.matmul(&yd[i]).unwrap();
+                yd[i].relu_inplace();
+            }
+        }
+    }
+}

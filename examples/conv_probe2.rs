@@ -1,0 +1,42 @@
+// Probe 2: decentralized ADMM convergence when the ε constraint is active.
+use dssfn::admm::*;
+use dssfn::data::*;
+use dssfn::linalg::Matrix;
+use dssfn::ssfn::*;
+
+fn main() {
+    let mut s = SynthClassification::with_shape("toy", 8, 3, 120, 60);
+    s.class_sep = 3.0;
+    s.noise = 0.6;
+    let task = s.generate().unwrap();
+    let arch = SsfnArchitecture { input_dim: 8, num_classes: 3, hidden: 36, layers: 3 };
+    let shards = shard_uniform(&task.train, 4).unwrap();
+    let random = RandomMatrices::generate(&arch, 5).unwrap();
+    let eps = 6.0;
+
+    // Advance to layer-1 features (identical both sides).
+    let p0 = AdmmParams { mu: 0.1, eps, iterations: 300 };
+    let (o0, _) = solve_centralized(&task.train.x, &task.train.t, &p0).unwrap();
+    let w1 = build_weight(&o0, random.layer(1)).unwrap();
+    let mut yc = w1.matmul(&task.train.x).unwrap();
+    yc.relu_inplace();
+    let yd: Vec<Matrix> = shards.iter().map(|sh| {
+        let mut y = w1.matmul(&sh.x).unwrap();
+        y.relu_inplace();
+        y
+    }).collect();
+
+    for mu in [0.1, 1.0] {
+        for k in [300usize, 1000, 3000, 10000] {
+            let p = AdmmParams { mu, eps, iterations: k };
+            let (oc, cc) = solve_centralized(&yc, &task.train.t, &p).unwrap();
+            let solvers: Vec<LayerLocalSolver> = (0..4)
+                .map(|i| LayerLocalSolver::new(&yd[i], &shards[i].t, mu).unwrap())
+                .collect();
+            let sol = solve_decentralized(&solvers, 3, 36, &p, &Consensus::Exact).unwrap();
+            println!("mu={mu} K={k:6} |Oc-Od|={:.3e} costC={:.5} costD={:.5} |Oc|={:.4} |Od|={:.4}",
+                oc.max_abs_diff(sol.output()), cc.last().unwrap(), sol.cost_curve.last().unwrap(),
+                oc.frobenius_norm(), sol.output().frobenius_norm());
+        }
+    }
+}

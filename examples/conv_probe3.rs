@@ -1,0 +1,37 @@
+// Probe 3: full-trainer equivalence trace (centralized vs decentralized).
+use dssfn::coordinator::*;
+use dssfn::data::*;
+use dssfn::network::*;
+use dssfn::ssfn::*;
+
+fn main() {
+    let mut s = SynthClassification::with_shape("toy", 8, 3, 120, 60);
+    s.class_sep = 3.0;
+    s.noise = 0.6;
+    let task = s.generate().unwrap();
+    let arch = SsfnArchitecture { input_dim: 8, num_classes: 3, hidden: 36, layers: 3 };
+    let h = TrainHyper { mu0: 1.0, mul: 1.0, admm_iterations: 1500, eps: None };
+    let (cm, cr) = CentralizedTrainer::new(arch, h, 5).unwrap().train(&task).unwrap();
+    for mode in [ConsensusMode::Exact, ConsensusMode::Gossip { delta: 1e-10 }] {
+        let opts = TrainOptions {
+            nodes: 4,
+            topology: Topology::Circular { nodes: 4, degree: 1 },
+            weight_rule: WeightRule::EqualNeighbor,
+            consensus: mode,
+            latency: LatencyModel::default(),
+            threads: 2,
+            record_cost_curve: true,
+        };
+        let t = DecentralizedTrainer::new(arch, h, opts, 5).unwrap();
+        let (dm, dr) = t.train_task(&task).unwrap();
+        println!("mode {mode:?}:");
+        for (i, (cw, dw)) in cm.weights().iter().zip(dm.weights()).enumerate() {
+            println!("  W_{} diff {:.3e}", i + 1, cw.max_abs_diff(dw));
+        }
+        println!("  output diff {:.3e}", cm.output().max_abs_diff(dm.output()));
+        for (cl, dl) in cr.layers.iter().zip(&dr.layers) {
+            println!("  layer {}: costC={:.5} costD={:.5}", cl.layer,
+                cl.final_cost().unwrap(), dl.final_cost().unwrap());
+        }
+    }
+}

@@ -1,0 +1,50 @@
+//! Regenerates the paper's **Table I** (dataset inventory) from the
+//! registry, and verifies each synthetic substitute actually materializes
+//! with the declared shape (EXPERIMENTS.md §E1).
+//!
+//! ```text
+//! cargo run --release --example datasets_table            # table only
+//! cargo run --release --example datasets_table -- --gen   # + generate
+//! ```
+
+use dssfn::data::table1_rows;
+
+fn main() -> dssfn::Result<()> {
+    let generate = std::env::args().any(|a| a == "--gen");
+
+    println!("TABLE I: Dataset for multi-class classification.");
+    println!(
+        "{:<12} {:>12} {:>12} {:>20} {:>16}",
+        "Dataset", "# train", "# test", "Input dim (P)", "# classes (Q)"
+    );
+    for spec in table1_rows() {
+        println!(
+            "{:<12} {:>12} {:>12} {:>20} {:>16}",
+            spec.key, spec.train_samples, spec.test_samples, spec.input_dim, spec.num_classes
+        );
+    }
+
+    if generate {
+        println!("\ngenerating the small-shape substitutes (full shapes are big; use --full configs in benches):");
+        for spec in table1_rows() {
+            let small = dssfn::data::lookup(&format!("{}-small", spec.key))?;
+            let task = small.generator(1).generate()?;
+            assert_eq!(task.train.num_samples(), small.train_samples);
+            assert_eq!(task.train.input_dim(), small.input_dim);
+            assert_eq!(task.train.num_classes, small.num_classes);
+            let hist = task.train.class_histogram();
+            let (min, max) = (
+                hist.iter().min().copied().unwrap_or(0),
+                hist.iter().max().copied().unwrap_or(0),
+            );
+            println!(
+                "  {:<18} ok: {} samples, class balance {}..{}",
+                small.key,
+                task.train.num_samples(),
+                min,
+                max
+            );
+        }
+    }
+    Ok(())
+}

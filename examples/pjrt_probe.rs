@@ -1,0 +1,48 @@
+// Probe: load the quickstart artifacts and check PJRT execution parity
+// against the native backend.
+use dssfn::linalg::Matrix;
+use dssfn::runtime::*;
+use dssfn::util::{Rng, Xoshiro256StarStar};
+
+fn main() -> dssfn::Result<()> {
+    let manifest = ArtifactManifest::load("artifacts")?;
+    let be = PjrtBackend::start(&manifest, "quickstart")?;
+    let native = NativeBackend::new();
+    let cfg = be.config().clone();
+    println!("config {:?}", cfg);
+    let mut rng = Xoshiro256StarStar::seed_from_u64(1);
+    let (p, q, n, j) = (cfg.p, cfg.q, cfg.n, cfg.j);
+
+    // first_forward parity
+    let w = Matrix::from_fn(n, p, |_, _| rng.uniform(-1.0, 1.0));
+    let x = Matrix::from_fn(p, j - 3, |_, _| rng.uniform(-1.0, 1.0)); // under-filled shard
+    let a = be.layer_forward(&w, &x)?;
+    let b = native.layer_forward(&w, &x)?;
+    println!("first_forward diff = {:.3e} (shape {:?})", a.max_abs_diff(&b), a.shape());
+
+    // forward parity
+    let wn = Matrix::from_fn(n, n, |_, _| rng.uniform(-0.3, 0.3));
+    let y = Matrix::from_fn(n, j, |_, _| rng.uniform(0.0, 1.0));
+    let a = be.layer_forward(&wn, &y)?;
+    let b = native.layer_forward(&wn, &y)?;
+    println!("forward diff = {:.3e}", a.max_abs_diff(&b));
+
+    // prepare_layer + o_update parity
+    let t = Matrix::from_fn(q, j, |_, _| rng.uniform(0.0, 1.0));
+    let sp = be.prepare_layer(&y, &t, 1.0)?;
+    let sn = native.prepare_layer(&y, &t, 1.0)?;
+    let z = Matrix::from_fn(q, n, |_, _| rng.uniform(-0.5, 0.5));
+    let lam = Matrix::from_fn(q, n, |_, _| rng.uniform(-0.5, 0.5));
+    let op = sp.o_update(&z, &lam)?;
+    let on = sn.o_update(&z, &lam)?;
+    println!("o_update diff = {:.3e} (|O|={:.3})", op.max_abs_diff(&on), on.frobenius_norm());
+    println!("cost pjrt={:.4} native={:.4}", sp.cost(&op)?, sn.cost(&on)?);
+
+    // output parity
+    let o = Matrix::from_fn(q, n, |_, _| rng.uniform(-0.5, 0.5));
+    let a = be.output_scores(&o, &y)?;
+    let b = native.output_scores(&o, &y)?;
+    println!("output diff = {:.3e}", a.max_abs_diff(&b));
+    println!("pjrt probe OK");
+    Ok(())
+}

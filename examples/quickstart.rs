@@ -1,0 +1,57 @@
+//! Quickstart: train a decentralized SSFN on a tiny synthetic task and
+//! compare it against the centralized baseline — the 60-second tour of
+//! the public API.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+
+use dssfn::config::ExperimentConfig;
+use dssfn::coordinator::DecentralizedTrainer;
+use dssfn::ssfn::CentralizedTrainer;
+use dssfn::util::human_secs;
+
+fn main() -> dssfn::Result<()> {
+    // 1. Pick a dataset preset (Table-I shapes live in the registry too:
+    //    "mnist", "satimage", ... — see `dssfn datasets`).
+    let cfg = ExperimentConfig::named_dataset("quickstart")?;
+    let task = cfg.generate_task()?;
+    println!(
+        "dataset '{}': {} train / {} test samples, P={}, Q={}",
+        task.name,
+        task.train.num_samples(),
+        task.test.num_samples(),
+        task.input_dim(),
+        task.num_classes()
+    );
+
+    // 2. Centralized SSFN (the baseline): all data in one place.
+    let central = CentralizedTrainer::new(cfg.architecture()?, cfg.hyper(), cfg.seed)?;
+    let (_, cr) = central.train(&task)?;
+    println!("centralized  : {}", cr.summary());
+
+    // 3. Decentralized SSFN: the same data sharded across M workers that
+    //    only ever exchange Q×n output matrices over a gossip ring.
+    let trainer = DecentralizedTrainer::from_config(&cfg)?;
+    let (model, dr) = trainer.train_task(&task)?;
+    println!("decentralized: {}", dr.summary());
+    println!(
+        "equivalence  : Δtrain = {:+.2}%, Δtest = {:+.2}%",
+        100.0 * (dr.train_accuracy - cr.train_accuracy),
+        100.0 * (dr.test_accuracy - cr.test_accuracy),
+    );
+    println!(
+        "network      : {} gossip rounds, {} exchanged, simulated comm {}",
+        dr.total_gossip_rounds(),
+        dssfn::util::human_bytes(dr.comm_total.bytes),
+        human_secs(dr.simulated_comm_secs),
+    );
+
+    // 4. The model is a plain value: inspect or reuse it.
+    println!(
+        "model        : {} layers, {} learned parameters",
+        model.weights().len(),
+        model.learned_parameters()
+    );
+    Ok(())
+}

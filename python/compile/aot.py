@@ -1,0 +1,163 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) → HLO text artifacts for rust.
+
+Run as ``python -m compile.aot --out-dir ../artifacts [--full]`` (this is
+what ``make artifacts`` does). For every shape configuration it lowers
+the nine entrypoints of :mod:`compile.model` and writes
+``<out>/<config>/<entry>.hlo.txt`` plus a ``manifest.txt`` the rust
+runtime parses (``rust/src/runtime/artifact.rs``).
+
+HLO **text** is the interchange format: jax ≥ 0.5 serializes
+``HloModuleProto`` with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published ``xla`` rust crate) rejects; the text
+parser reassigns ids and round-trips cleanly. Lowered with
+``return_tuple=True`` — the rust side unwraps with ``to_tuple()``.
+
+Shape configurations mirror ``rust/src/data/registry.rs`` +
+``rust/src/config.rs`` defaults: ``n = 2Q + hidden_extra`` and
+``j = ceil(J_train / M)`` (the padded per-shard width; rust zero-pads
+smaller shards, which is exactly neutral through every kernel).
+"""
+
+import argparse
+import math
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (key, P, Q, J_train) mirrored from rust/src/data/registry.rs.
+_TABLE1 = [
+    ("vowel", 10, 11, 528),
+    ("satimage", 36, 6, 4435),
+    ("caltech101", 3000, 102, 6000),
+    ("letter", 16, 26, 13333),
+    ("norb", 2048, 5, 24300),
+    ("mnist", 784, 10, 60000),
+]
+_SMALL = [
+    ("vowel-small", 10, 11, 264),
+    ("satimage-small", 36, 6, 600),
+    ("caltech101-small", 128, 102, 2040),
+    ("letter-small", 16, 26, 1000),
+    ("norb-small", 96, 5, 1000),
+    ("mnist-small", 64, 10, 2000),
+    ("quickstart", 12, 4, 200),
+]
+
+# Defaults matching ExperimentConfig::named_dataset.
+_FULL_HIDDEN_EXTRA, _FULL_NODES = 1000, 20
+_SMALL_HIDDEN_EXTRA, _SMALL_NODES = 100, 10
+
+
+def configs(full=False):
+    """Yield ``(name, p, q, n, j)`` for every configuration to build."""
+    out = []
+    for name, p, q, jtrain in _SMALL:
+        n = 2 * q + _SMALL_HIDDEN_EXTRA
+        out.append((name, p, q, n, math.ceil(jtrain / _SMALL_NODES)))
+    if full:
+        for name, p, q, jtrain in _TABLE1:
+            n = 2 * q + _FULL_HIDDEN_EXTRA
+            out.append((name, p, q, n, math.ceil(jtrain / _FULL_NODES)))
+    return out
+
+
+def to_hlo_text(lowered):
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def entrypoints(p, q, n, j):
+    """The nine (name, fn, example_args) triples for one configuration."""
+    scalar = _spec()
+    return [
+        ("first_forward", model.layer_forward, (_spec(n, p), _spec(p, j))),
+        ("forward", model.layer_forward, (_spec(n, n), _spec(n, j))),
+        ("gram_p", model.gram, (_spec(p, j), _spec(q, j), scalar)),
+        ("gram_n", model.gram, (_spec(n, j), _spec(q, j), scalar)),
+        ("inv_p", model.gram_inverse, (_spec(p, p),)),
+        ("inv_n", model.gram_inverse, (_spec(n, n),)),
+        (
+            "o_update_p",
+            model.o_update,
+            (_spec(q, p), _spec(q, p), _spec(q, p), _spec(p, p), scalar),
+        ),
+        (
+            "o_update_n",
+            model.o_update,
+            (_spec(q, n), _spec(q, n), _spec(q, n), _spec(n, n), scalar),
+        ),
+        ("output", model.output_scores, (_spec(q, n), _spec(n, j))),
+    ]
+
+
+def build(out_dir, full=False, only=None, verbose=True):
+    """Lower all configurations into ``out_dir``; returns manifest path."""
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_lines = ["# dssfn artifact manifest v1"]
+    for name, p, q, n, j in configs(full):
+        if only and name not in only:
+            continue
+        cfg_dir = os.path.join(out_dir, name)
+        os.makedirs(cfg_dir, exist_ok=True)
+        for entry, fn, args in entrypoints(p, q, n, j):
+            path = os.path.join(cfg_dir, f"{entry}.hlo.txt")
+            text = to_hlo_text(jax.jit(fn).lower(*args))
+            with open(path, "w") as f:
+                f.write(text)
+            if verbose:
+                print(f"  {path}  ({len(text) // 1024} KiB)", file=sys.stderr)
+        manifest_lines.append(f"config {name} p={p} q={q} n={n} j={j}")
+        if verbose:
+            print(f"config {name}: p={p} q={q} n={n} j={j}", file=sys.stderr)
+    manifest = os.path.join(out_dir, "manifest.txt")
+    # Merge with any configs already present (e.g. small built first,
+    # full added later).
+    existing = {}
+    if os.path.exists(manifest):
+        for line in open(manifest):
+            line = line.strip()
+            if line.startswith("config "):
+                existing[line.split()[1]] = line
+    for line in manifest_lines[1:]:
+        existing[line.split()[1]] = line
+    with open(manifest, "w") as f:
+        f.write("# dssfn artifact manifest v1\n")
+        for key in sorted(existing):
+            f.write(existing[key] + "\n")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--full",
+        action="store_true",
+        help="also build the full-size Table-I shapes (slow, large)",
+    )
+    ap.add_argument(
+        "--only",
+        nargs="*",
+        default=None,
+        help="restrict to the named configs",
+    )
+    args = ap.parse_args()
+    manifest = build(args.out_dir, full=args.full, only=args.only)
+    print(f"wrote {manifest}")
+
+
+if __name__ == "__main__":
+    main()

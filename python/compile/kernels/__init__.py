@@ -1,0 +1,22 @@
+"""L1 Pallas kernels for the dSSFN hot path.
+
+Three kernels cover the compute-dominant steps of Algorithm 1:
+
+* :mod:`.matmul_relu` — the SSFN layer forward ``g(W·Y)`` as an MXU-tiled
+  matmul with a fused ReLU epilogue;
+* :mod:`.gram` — one streaming pass over the local features producing both
+  ``Y·Yᵀ + μ⁻¹I`` and ``T·Yᵀ`` (halves HBM traffic on ``Y``);
+* :mod:`.admm_update` — the per-iteration O-update
+  ``(T·Yᵀ + μ⁻¹(Z−Λ))·G⁻¹`` as one epilogue-fused matmul.
+
+All kernels run under ``interpret=True`` (the CPU PJRT plugin cannot
+execute Mosaic custom-calls); on a real TPU the same BlockSpecs map tiles
+onto VMEM and the contractions onto the 128×128 MXU. ``ref.py`` holds the
+pure-jnp oracles the kernels are verified against.
+"""
+
+from .admm_update import o_update
+from .gram import gram
+from .matmul_relu import matmul, matmul_relu
+
+__all__ = ["matmul", "matmul_relu", "gram", "o_update"]

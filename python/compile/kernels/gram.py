@@ -1,0 +1,75 @@
+"""Fused Gram kernel: one streaming pass over the local features
+producing both ``G = Y·Yᵀ + μ⁻¹I`` and ``C = T·Yᵀ``.
+
+This is the layer-constant precompute of the ADMM solve (paper eq. 11):
+``G`` is inverted once per layer, ``C`` feeds every O-update. Computing
+both in one pass reads ``Y`` from HBM once instead of twice — on the
+sample-dimension sizes dSSFN sees (`J_m` in the thousands, `n ≈ 1k`) the
+pass over ``Y`` *is* the memory bill, so the fusion halves it.
+
+Grid layout: 1-D over ``J`` blocks (sequential), both outputs map every
+step to the same full block and accumulate. VMEM per step:
+``(n + q)·BJ + n² + q·n`` f32 words — for ``n = 1020, q = 10, BJ = 256``
+about 4.3 MiB, inside VMEM. For much larger ``n`` the output would tile
+over an extra grid axis; unnecessary at dSSFN scales (documented
+roofline in DESIGN.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BJ = 256
+
+
+def _gram_kernel(y_ref, t_ref, g_ref, c_ref):
+    jb = pl.program_id(0)
+
+    @pl.when(jb == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    yb = y_ref[...]  # (n, BJ) resident once, used twice
+    g_ref[...] += jnp.dot(yb, yb.T, preferred_element_type=jnp.float32)
+    c_ref[...] += jnp.dot(t_ref[...], yb.T, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bj",))
+def gram(y, t, mu_inv, *, bj=BJ):
+    """``(Y·Yᵀ + μ⁻¹·I, T·Yᵀ)`` for ``y (n, J)``, ``t (q, J)``.
+
+    ``mu_inv`` may be a traced scalar (it is an HLO parameter in the AOT
+    artifact — the same compiled kernel serves every μ).
+    """
+    n, j = y.shape
+    q, j2 = t.shape
+    assert j == j2, f"sample mismatch {j} vs {j2}"
+    bj_ = min(bj, max(8, j))
+    jp = pl.cdiv(j, bj_) * bj_
+    ypad = jnp.pad(y.astype(jnp.float32), ((0, 0), (0, jp - j)))
+    tpad = jnp.pad(t.astype(jnp.float32), ((0, 0), (0, jp - j)))
+
+    g, c = pl.pallas_call(
+        _gram_kernel,
+        grid=(jp // bj_,),
+        in_specs=[
+            pl.BlockSpec((n, bj_), lambda jb: (0, jb)),
+            pl.BlockSpec((q, bj_), lambda jb: (0, jb)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n, n), lambda jb: (0, 0)),
+            pl.BlockSpec((q, n), lambda jb: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, n), jnp.float32),
+            jax.ShapeDtypeStruct((q, n), jnp.float32),
+        ],
+        interpret=True,
+    )(ypad, tpad)
+    # Ridge added outside the kernel: O(n) work, keeps mu_inv a plain
+    # scalar operand instead of an SMEM block.
+    g = g + jnp.asarray(mu_inv, jnp.float32) * jnp.eye(n, dtype=jnp.float32)
+    return g, c

@@ -1,0 +1,96 @@
+"""MXU-tiled matmul with fused ReLU epilogue — the SSFN layer forward.
+
+The paper's hot spot at every layer is ``Y_{l+1} = g(W_{l+1}·Y_l)``.
+On TPU this maps onto the 128×128 MXU; the kernel tiles the output into
+``(BM, BN)`` VMEM blocks and streams the contraction dimension in ``BK``
+chunks via the grid so arbitrary `K` never has to fit in VMEM at once.
+
+Hardware-adaptation notes (DESIGN.md §Hardware-Adaptation):
+
+* block sizes are 128-multiples clamped to the problem so small layers
+  don't waste VMEM;
+* the ReLU epilogue runs on the block while it is still resident — no
+  second HBM pass (what a CUDA port would do with a separate kernel);
+* ``f32`` accumulation in the output block across the K-grid dimension
+  (the grid's last axis is sequential, so `+=` accumulates safely);
+* VMEM footprint per step: ``BM·BK + BK·BN + BM·BN`` f32 words — at the
+  default 128³ tiles that is 192 KiB, well inside the ~16 MiB VMEM.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; on-TPU this code lowers unchanged.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes (MXU-aligned).
+BM, BN, BK = 128, 128, 128
+
+
+def _matmul_kernel(w_ref, y_ref, o_ref, *, apply_relu, k_steps):
+    """One (BM, BN) output block; grid = (m/BM, n/BN, k/BK)."""
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        w_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    if apply_relu:
+        @pl.when(kb == k_steps - 1)
+        def _epilogue():
+            o_ref[...] = jnp.maximum(o_ref[...], 0.0)
+
+
+def _pad_to(x, rows, cols):
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+@functools.partial(jax.jit, static_argnames=("apply_relu", "bm", "bn", "bk"))
+def matmul(w, y, *, apply_relu=False, bm=BM, bn=BN, bk=BK):
+    """``W @ Y`` (optionally fused with ReLU) via the Pallas kernel.
+
+    Shapes: ``w (M, K)``, ``y (K, N)`` → ``(M, N)``. Inputs are padded to
+    tile multiples and the result sliced back, so any shape works.
+    """
+    m, k = w.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm_ = min(bm, max(8, m))
+    bn_ = min(bn, max(8, n))
+    bk_ = min(bk, max(8, k))
+    mp = pl.cdiv(m, bm_) * bm_
+    np_ = pl.cdiv(n, bn_) * bn_
+    kp = pl.cdiv(k, bk_) * bk_
+    wp = _pad_to(w.astype(jnp.float32), mp, kp)
+    yp = _pad_to(y.astype(jnp.float32), kp, np_)
+    k_steps = kp // bk_
+
+    out = pl.pallas_call(
+        functools.partial(
+            _matmul_kernel, apply_relu=apply_relu, k_steps=k_steps
+        ),
+        grid=(mp // bm_, np_ // bn_, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(wp, yp)
+    return out[:m, :n]
+
+
+def matmul_relu(w, y, **kw):
+    """``relu(W @ Y)`` — the layer forward ``g(W·Y)``."""
+    return matmul(w, y, apply_relu=True, **kw)

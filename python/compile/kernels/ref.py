@@ -1,0 +1,40 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+Every Pallas kernel in this package has an exact mathematical twin here;
+pytest (python/tests/) asserts allclose between the two across a
+hypothesis-driven sweep of shapes and magnitudes. The rust native ``f64``
+path is in turn tested against the PJRT execution of the lowered HLO
+(rust/tests/pjrt_parity.rs), closing the three-way verification loop::
+
+    pallas kernel  ==  jnp oracle  ==  rust f64 linalg
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_relu_ref(w, y, *, apply_relu=True):
+    """``relu(W @ Y)`` — the SSFN layer forward ``g(W·Y)``."""
+    out = w @ y
+    if apply_relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def gram_ref(y, t, mu_inv):
+    """``(Y·Yᵀ + μ⁻¹·I, T·Yᵀ)`` — the layer-constant ADMM Grams."""
+    n = y.shape[0]
+    g = y @ y.T + mu_inv * jnp.eye(n, dtype=y.dtype)
+    tyt = t @ y.T
+    return g, tyt
+
+
+def o_update_ref(tyt, z, lam, ginv, mu_inv):
+    """``(T·Yᵀ + μ⁻¹(Z − Λ)) @ G⁻¹`` — ADMM step 1 (paper eq. 11)."""
+    return (tyt + mu_inv * (z - lam)) @ ginv
+
+
+def project_frobenius_ref(z, eps):
+    """``P_ε(Z)``: rescale onto the Frobenius ball iff outside (eq. 11)."""
+    norm = jnp.linalg.norm(z)
+    scale = jnp.where(norm > eps, eps / jnp.maximum(norm, 1e-30), 1.0)
+    return z * scale

@@ -1,0 +1,75 @@
+"""L2 — the dSSFN compute graph, one jittable function per entrypoint.
+
+These are the exact functions `python/compile/aot.py` lowers to HLO text
+for the rust runtime. Each calls into the L1 Pallas kernels so the
+kernels lower into the same HLO module. Parameter order here **is** the
+ABI the rust side (`rust/src/runtime/pjrt.rs`) relies on:
+
+========= =====================================  =======================
+entry     parameters (in order)                  outputs (tupled)
+========= =====================================  =======================
+forward   ``w (n,d)``, ``y (d,j)``               ``relu(w@y) (n,j)``
+gram      ``y (d,j)``, ``t (q,j)``, ``mu_inv``   ``g (d,d)``, ``tyt (q,d)``
+inv       ``g (d,d)``                            ``g⁻¹ (d,d)``
+o_update  ``tyt``, ``z``, ``lam`` ``(q,d)``,     ``o (q,d)``
+          ``ginv (d,d)``, ``mu_inv ()``
+output    ``o (q,n)``, ``y (n,j)``               ``o@y (q,j)``
+========= =====================================  =======================
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gram as _gram
+from .kernels import matmul, matmul_relu, o_update as _o_update
+
+
+def layer_forward(w, y):
+    """``g(W·Y)`` — SSFN layer forward (L1 kernel ``matmul_relu``)."""
+    return matmul_relu(w, y)
+
+
+def gram(y, t, mu_inv):
+    """Layer-constant ADMM Grams (L1 kernel ``gram``)."""
+    return _gram(y, t, mu_inv)
+
+
+NEWTON_SCHULZ_ITERS = 60
+
+
+def gram_inverse(g):
+    """Dense SPD inverse of the ridge-regularized Gram via Newton–Schulz.
+
+    ``jnp.linalg.inv`` lowers to a LAPACK typed-FFI custom call on CPU,
+    which xla_extension 0.5.1 (behind the rust ``xla`` crate) cannot
+    compile — and which a TPU couldn't run either. Newton–Schulz
+    iteration ``X ← X(2I − G X)`` is pure matmul HLO, quadratically
+    convergent, and MXU-friendly. The classic initialization
+    ``X₀ = Gᵀ/(‖G‖₁·‖G‖_∞)`` guarantees ‖I − X₀G‖ < 1 for any
+    nonsingular ``G``; our ``G`` is SPD (ridge-regularized Gram), for
+    which convergence is monotone. 60 iterations reach f32 roundoff for
+    condition numbers ≳10⁶ beyond anything the μ-ridge admits.
+
+    This is a one-per-layer ``n³`` op — hoisting it out of the ADMM loop
+    is the optimization that matters (DESIGN.md §Perf).
+    """
+    n = g.shape[0]
+    eye2 = 2.0 * jnp.eye(n, dtype=g.dtype)
+    norm1 = jnp.max(jnp.sum(jnp.abs(g), axis=0))
+    norminf = jnp.max(jnp.sum(jnp.abs(g), axis=1))
+    x0 = g.T / (norm1 * norminf)
+
+    def body(_, x):
+        return x @ (eye2 - g @ x)
+
+    return jax.lax.fori_loop(0, NEWTON_SCHULZ_ITERS, body, x0)
+
+
+def o_update(tyt, z, lam, ginv, mu_inv):
+    """Per-iteration ADMM O-update (L1 kernel ``admm_update``)."""
+    return _o_update(tyt, z, lam, ginv, mu_inv)
+
+
+def output_scores(o, y):
+    """Prediction scores ``O·Y`` (L1 ``matmul``, no activation)."""
+    return matmul(o, y, apply_relu=False)

@@ -1,0 +1,165 @@
+"""L1 kernel correctness: Pallas vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes (including degenerate 1-row/1-col cases and
+sizes straddling the tile boundaries) and magnitudes; every kernel must
+match its oracle to f32 tolerance.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gram, matmul, matmul_relu, o_update
+from compile.kernels import ref
+
+DIM = st.integers(min_value=1, max_value=40)
+SEED = st.integers(min_value=0, max_value=2**31 - 1)
+SCALE = st.floats(min_value=0.01, max_value=100.0)
+
+COMMON = dict(deadline=None, max_examples=25)
+
+
+def _rand(rng, *shape, scale=1.0):
+    return (rng.normal(size=shape) * scale).astype(np.float32)
+
+
+def _assert_close(a, b, scale=1.0):
+    np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4 * max(scale, 1.0) ** 2
+    )
+
+
+class TestMatmulRelu:
+    @settings(**COMMON)
+    @given(m=DIM, k=DIM, n=DIM, seed=SEED, scale=SCALE)
+    def test_matches_ref(self, m, k, n, seed, scale):
+        rng = np.random.default_rng(seed)
+        w = _rand(rng, m, k, scale=scale)
+        y = _rand(rng, k, n)
+        _assert_close(matmul_relu(w, y), ref.matmul_relu_ref(w, y), scale)
+
+    @settings(**COMMON)
+    @given(m=DIM, k=DIM, n=DIM, seed=SEED)
+    def test_matmul_without_relu(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        w = _rand(rng, m, k)
+        y = _rand(rng, k, n)
+        _assert_close(matmul(w, y), w @ y)
+
+    def test_relu_clamps_negatives(self):
+        w = np.array([[1.0], [-1.0]], dtype=np.float32)
+        y = np.array([[2.0, -3.0]], dtype=np.float32)
+        out = np.asarray(matmul_relu(w, y))
+        assert (out >= 0.0).all()
+        np.testing.assert_allclose(out, [[2.0, 0.0], [0.0, 3.0]])
+
+    def test_tile_boundary_shapes(self):
+        # Exactly one tile, one tile + 1, and one tile - 1.
+        rng = np.random.default_rng(0)
+        for m in (127, 128, 129):
+            w = _rand(rng, m, 130)
+            y = _rand(rng, 130, 64)
+            _assert_close(matmul_relu(w, y), ref.matmul_relu_ref(w, y))
+
+    def test_zero_columns_stay_zero(self):
+        # The rust runtime relies on zero-padding neutrality.
+        rng = np.random.default_rng(1)
+        w = _rand(rng, 16, 8)
+        y = np.zeros((8, 5), dtype=np.float32)
+        assert np.abs(np.asarray(matmul_relu(w, y))).max() == 0.0
+
+
+class TestGram:
+    @settings(**COMMON)
+    @given(n=DIM, q=DIM, j=DIM, seed=SEED, mu_inv=st.floats(0.0, 50.0))
+    def test_matches_ref(self, n, q, j, seed, mu_inv):
+        rng = np.random.default_rng(seed)
+        y = _rand(rng, n, j)
+        t = _rand(rng, q, j)
+        g, c = gram(y, t, np.float32(mu_inv))
+        gr, cr = ref.gram_ref(y, t, np.float32(mu_inv))
+        _assert_close(g, gr)
+        _assert_close(c, cr)
+
+    def test_gram_is_symmetric_spd(self):
+        rng = np.random.default_rng(2)
+        y = _rand(rng, 20, 50)
+        g, _ = gram(y, _rand(rng, 3, 50), np.float32(1.0))
+        g = np.asarray(g)
+        np.testing.assert_allclose(g, g.T, rtol=1e-6)
+        assert np.linalg.eigvalsh(g).min() > 0.9  # ridge keeps it PD
+
+    def test_padding_neutrality(self):
+        # Zero sample columns must not change either Gram.
+        rng = np.random.default_rng(3)
+        y = _rand(rng, 10, 33)
+        t = _rand(rng, 4, 33)
+        yp = np.pad(y, ((0, 0), (0, 31)))
+        tp = np.pad(t, ((0, 0), (0, 31)))
+        g1, c1 = gram(y, t, np.float32(0.5))
+        g2, c2 = gram(yp, tp, np.float32(0.5))
+        _assert_close(g1, g2)
+        _assert_close(c1, c2)
+
+    def test_spans_multiple_j_blocks(self):
+        rng = np.random.default_rng(4)
+        y = _rand(rng, 12, 700)  # > 2 × BJ=256
+        t = _rand(rng, 3, 700)
+        g, c = gram(y, t, np.float32(2.0))
+        gr, cr = ref.gram_ref(y, t, np.float32(2.0))
+        _assert_close(g, gr)
+        _assert_close(c, cr)
+
+
+class TestOUpdate:
+    @settings(**COMMON)
+    @given(q=DIM, n=DIM, seed=SEED, mu_inv=st.floats(0.0, 50.0))
+    def test_matches_ref(self, q, n, seed, mu_inv):
+        rng = np.random.default_rng(seed)
+        tyt = _rand(rng, q, n)
+        z = _rand(rng, q, n)
+        lam = _rand(rng, q, n)
+        ginv = _rand(rng, n, n)
+        _assert_close(
+            o_update(tyt, z, lam, ginv, np.float32(mu_inv)),
+            ref.o_update_ref(tyt, z, lam, ginv, np.float32(mu_inv)),
+        )
+
+    def test_mu_zero_reduces_to_plain_matmul(self):
+        rng = np.random.default_rng(5)
+        tyt = _rand(rng, 4, 20)
+        ginv = _rand(rng, 20, 20)
+        z = _rand(rng, 4, 20)
+        out = o_update(tyt, z, z, ginv, np.float32(0.0))
+        _assert_close(out, tyt @ ginv)
+
+    def test_spans_multiple_n_blocks(self):
+        rng = np.random.default_rng(6)
+        q, n = 3, 600  # > 2 × BN=256
+        tyt, z, lam = (_rand(rng, q, n) for _ in range(3))
+        ginv = _rand(rng, n, n) / n
+        _assert_close(
+            o_update(tyt, z, lam, ginv, np.float32(0.7)),
+            ref.o_update_ref(tyt, z, lam, ginv, np.float32(0.7)),
+        )
+
+
+class TestProjection:
+    @settings(**COMMON)
+    @given(q=DIM, n=DIM, seed=SEED, eps=st.floats(0.1, 20.0))
+    def test_projection_feasible_and_idempotent(self, q, n, seed, eps):
+        rng = np.random.default_rng(seed)
+        z = _rand(rng, q, n, scale=5.0)
+        p1 = np.asarray(ref.project_frobenius_ref(z, np.float32(eps)))
+        assert np.linalg.norm(p1) <= eps * (1 + 1e-5)
+        p2 = np.asarray(ref.project_frobenius_ref(p1, np.float32(eps)))
+        np.testing.assert_allclose(p1, p2, rtol=1e-5, atol=1e-6)
+
+    def test_inside_ball_untouched(self):
+        z = np.ones((2, 2), dtype=np.float32)  # norm 2
+        out = np.asarray(ref.project_frobenius_ref(z, np.float32(10.0)))
+        np.testing.assert_array_equal(out, z)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,108 @@
+"""L2 model graph tests: gram_inverse accuracy, entrypoint shapes, and a
+full in-python dSSFN layer-solve sanity check stitched from the same
+functions the AOT artifacts are lowered from.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import aot, model
+
+COMMON = dict(deadline=None, max_examples=15)
+
+
+class TestGramInverse:
+    @settings(**COMMON)
+    @given(
+        n=st.integers(2, 64),
+        ridge=st.floats(0.05, 20.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_inverse_accuracy(self, n, ridge, seed):
+        rng = np.random.default_rng(seed)
+        a = rng.normal(size=(n, n)).astype(np.float32)
+        g = a @ a.T / n + ridge * np.eye(n, dtype=np.float32)
+        inv = np.asarray(model.gram_inverse(g))
+        resid = np.abs(inv @ g - np.eye(n)).max()
+        assert resid < 5e-4, f"residual {resid}"
+
+    def test_matches_numpy_inverse(self):
+        rng = np.random.default_rng(0)
+        a = rng.normal(size=(30, 30)).astype(np.float32)
+        g = a @ a.T / 30 + np.eye(30, dtype=np.float32)
+        inv = np.asarray(model.gram_inverse(g))
+        np.testing.assert_allclose(inv, np.linalg.inv(g), rtol=2e-3, atol=2e-4)
+
+
+class TestEntrypoints:
+    def test_shapes_and_count(self):
+        eps = aot.entrypoints(p=12, q=4, n=108, j=20)
+        names = [e[0] for e in eps]
+        assert names == [
+            "first_forward",
+            "forward",
+            "gram_p",
+            "gram_n",
+            "inv_p",
+            "inv_n",
+            "o_update_p",
+            "o_update_n",
+            "output",
+        ]
+        # Executable with zero inputs of the declared shapes.
+        for name, fn, specs in eps:
+            args = [np.zeros(s.shape, dtype=np.float32) for s in specs]
+            out = fn(*args)
+            assert out is not None, name
+
+    def test_configs_cover_small_registry(self):
+        names = {c[0] for c in aot.configs(full=False)}
+        assert "quickstart" in names
+        assert {"mnist-small", "letter-small"} <= names
+        full_names = {c[0] for c in aot.configs(full=True)}
+        assert {"mnist", "caltech101"} <= full_names
+        # n = 2Q + hidden_extra and j = ceil(J/M) invariants.
+        for name, p, q, n, j in aot.configs(full=False):
+            assert n > 2 * q, name
+            assert j >= 1
+
+    def test_hlo_text_has_no_custom_calls(self):
+        # xla_extension 0.5.1 cannot compile typed-FFI custom calls; the
+        # whole artifact set must stay within native HLO.
+        import jax
+
+        for name, fn, specs in aot.entrypoints(p=6, q=3, n=10, j=8):
+            text = aot.to_hlo_text(jax.jit(fn).lower(*specs))
+            assert "custom-call" not in text, f"{name} contains a custom call"
+
+
+class TestLayerSolveEndToEnd:
+    def test_python_admm_layer_matches_lstsq(self):
+        """Stitch gram → inverse → o_update into the ADMM loop and check
+        it solves the (unconstrained) least squares to good accuracy —
+        the same composition the rust coordinator executes via PJRT."""
+        rng = np.random.default_rng(7)
+        n, q, j = 24, 3, 80
+        y = rng.normal(size=(n, j)).astype(np.float32)
+        t = rng.normal(size=(q, j)).astype(np.float32)
+        mu_inv = np.float32(1.0)
+        g, tyt = model.gram(y, t, mu_inv)
+        ginv = model.gram_inverse(np.asarray(g))
+        z = np.zeros((q, n), dtype=np.float32)
+        lam = np.zeros((q, n), dtype=np.float32)
+        eps = np.float32(1e6)  # never binds
+        from compile.kernels.ref import project_frobenius_ref
+
+        for _ in range(300):
+            o = np.asarray(model.o_update(tyt, z, lam, ginv, mu_inv))
+            z = np.asarray(project_frobenius_ref(o + lam, eps))
+            lam = lam + o - z
+        expect = np.linalg.solve(
+            (y @ y.T).astype(np.float64), (t @ y.T).astype(np.float64).T
+        ).T
+        np.testing.assert_allclose(z, expect, rtol=5e-3, atol=5e-3)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

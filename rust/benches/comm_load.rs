@@ -1,0 +1,178 @@
+//! Bench E5 — the paper's **eq. (14)–(16)** communication-load
+//! comparison: decentralized SSFN (ADMM over `Q×n` output matrices)
+//! versus decentralized gradient descent (gossiped `n×n` weight
+//! gradients), *measured* on the wire rather than estimated.
+//!
+//! ```text
+//! cargo bench --bench comm_load [-- --dataset letter-small]
+//! ```
+//!
+//! Three measurements per dataset:
+//!  1. dSSFN bytes for one layer's `O_l` solve (ledger, eq. 15's QnBK);
+//!  2. DGD bytes to reach the *same objective value* on the same layer
+//!     problem over the same topology (eq. 14's n·n·BI for one matrix);
+//!  3. the full backprop-MLP exchange footprint per iteration (eq. 14's
+//!     Σ n_l n_{l-1} — the whole-network numerator).
+//! Prints measured η against the paper's η = n·I / (Q·K) prediction.
+
+use dssfn::admm::{solve_decentralized, AdmmParams, Consensus, LayerLocalSolver};
+use dssfn::baselines::dgd::{solve_dgd, DgdNode, DgdParams};
+use dssfn::baselines::{MlpSgdParams, MlpSgdTrainer};
+use dssfn::config::ExperimentConfig;
+use dssfn::data::shard_uniform;
+use dssfn::metrics::CsvWriter;
+use dssfn::network::{CommLedger, GossipEngine, LatencyModel, MixingMatrix, Topology, WeightRule};
+use dssfn::ssfn::{build_weight, RandomMatrices};
+use dssfn::util::human_bytes;
+use std::sync::Arc;
+
+fn main() -> dssfn::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let dataset = args
+        .iter()
+        .position(|a| a == "--dataset")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "letter-small".to_string());
+
+    let mut cfg = ExperimentConfig::named_dataset(&dataset)?;
+    cfg.degree = 2;
+    let task = cfg.generate_task()?;
+    let arch = cfg.architecture()?;
+    let (q, n, m) = (arch.num_classes, arch.hidden, cfg.nodes);
+    let k = cfg.admm_iterations;
+    let shards = shard_uniform(&task.train, m)?;
+    let topo = Topology::Circular { nodes: m, degree: cfg.degree };
+    let mk_engine = || -> dssfn::Result<GossipEngine> {
+        Ok(GossipEngine::new(
+            MixingMatrix::build(&topo, WeightRule::EqualNeighbor)?,
+            Arc::new(CommLedger::new()),
+            LatencyModel::default(),
+        ))
+    };
+
+    // Build layer-1 features on every node (identical protocol to the
+    // trainer) so the comparison runs on a representative layer problem.
+    let random = RandomMatrices::generate(&arch, cfg.seed)?;
+    let params0 = AdmmParams { mu: cfg.mu0, eps: 2.0 * q as f64, iterations: k };
+    let solvers0: Vec<LayerLocalSolver> = shards
+        .iter()
+        .map(|s| LayerLocalSolver::new(&s.x, &s.t, params0.mu))
+        .collect::<dssfn::Result<_>>()?;
+    let sol0 = solve_decentralized(&solvers0, q, arch.input_dim, &params0, &Consensus::Exact)?;
+    let w1 = build_weight(sol0.output(), random.layer(1))?;
+    let ys: Vec<_> = shards
+        .iter()
+        .map(|s| {
+            let mut y = w1.matmul(&s.x)?;
+            y.relu_inplace();
+            Ok(y)
+        })
+        .collect::<dssfn::Result<Vec<_>>>()?;
+
+    // --- 1. dSSFN: one layer solve over gossip, measured. ---
+    let params = AdmmParams { mu: cfg.mul, eps: 2.0 * q as f64, iterations: k };
+    let solvers: Vec<LayerLocalSolver> = ys
+        .iter()
+        .zip(&shards)
+        .map(|(y, s)| LayerLocalSolver::new(y, &s.t, params.mu))
+        .collect::<dssfn::Result<_>>()?;
+    let admm_engine = mk_engine()?;
+    let admm_sol = solve_decentralized(
+        &solvers,
+        q,
+        n,
+        &params,
+        &Consensus::Gossip { engine: &admm_engine, delta: cfg.delta },
+    )?;
+    let admm = admm_engine.ledger().snapshot();
+    let admm_cost = *admm_sol.cost_curve.last().unwrap();
+    let b_per_avg = admm_sol.gossip_rounds / k;
+
+    // --- 2. DGD on the same layer problem until it reaches admm_cost. ---
+    let nodes: Vec<DgdNode> = ys
+        .iter()
+        .zip(&shards)
+        .map(|(y, s)| DgdNode::new(y, &s.t))
+        .collect::<dssfn::Result<_>>()?;
+    // Lipschitz-safe step from the global Gram trace.
+    let trace: f64 = ys.iter().map(|y| y.gram().as_slice().iter().sum::<f64>()).sum();
+    let dgd_engine = mk_engine()?;
+    let max_iters = 60 * k;
+    let dgd_sol = solve_dgd(
+        &nodes,
+        q,
+        n,
+        &DgdParams { step: 0.45 / trace.abs(), iterations: max_iters, eps: params.eps, delta: cfg.delta },
+        Some(&dgd_engine),
+    )?;
+    let reached = dgd_sol
+        .cost_curve
+        .iter()
+        .position(|&c| c <= admm_cost * 1.005);
+    let dgd_total = dgd_engine.ledger().snapshot();
+    let (dgd_iters, dgd_bytes, dgd_converged) = match reached {
+        Some(i) => (
+            i + 1,
+            dgd_total.bytes * (i as u64 + 1) / max_iters as u64,
+            true,
+        ),
+        None => (max_iters, dgd_total.bytes, false),
+    };
+
+    // --- 3. Full-MLP exchange footprint (eq. 14 numerator). ---
+    let mlp = MlpSgdTrainer::new(MlpSgdParams {
+        hidden: n,
+        layers: arch.layers,
+        step: 0.01,
+        iterations: 1,
+        delta: cfg.delta,
+        seed: 1,
+    })?;
+    let mlp_scalars = mlp.scalars_per_exchange(arch.input_dim, q);
+
+    // --- Report. ---
+    println!("COMMUNICATION LOAD (eq. 14-16) on '{dataset}': M={m}, d={}, Q={q}, n={n}, K={k}", cfg.degree);
+    println!("  B (gossip rounds per averaging, measured)   : {b_per_avg}");
+    println!("  dSSFN one-layer solve (all links, measured)  : {} scalars = {} ({} rounds)",
+        admm.scalars, human_bytes(admm.bytes), admm.rounds);
+    let links = admm.messages / admm.rounds.max(1); // point-to-point links per round
+    println!("  eq.(15) per-link prediction Q·n·B·K          : {} scalars (measured/links = {})",
+        q * n * b_per_avg * k,
+        admm.scalars / links.max(1));
+    if dgd_converged {
+        println!("  DGD to the same objective ({} iters)        : ~{} ", dgd_iters, human_bytes(dgd_bytes));
+    } else {
+        println!("  DGD did NOT reach the ADMM objective in {max_iters} iters; bytes so far: {}",
+            human_bytes(dgd_bytes));
+    }
+    let eta_measured = dgd_bytes as f64 / admm.bytes as f64;
+    let eta_predicted = (n * dgd_iters) as f64 / (q * k) as f64;
+    println!("  η measured  (DGD bytes / dSSFN bytes)        : {eta_measured:.1}x");
+    println!("  η predicted (eq. 16: n·I/(Q·K))              : {eta_predicted:.1}x");
+    println!("  full-MLP gradient exchange per iteration     : {} scalars ({} vs dSSFN's Q·n={})",
+        mlp_scalars, human_bytes(8 * mlp_scalars as u64), q * n);
+
+    let mut csv = CsvWriter::new(&[
+        "dataset", "admm_bytes", "dgd_bytes", "dgd_iters", "eta_measured", "eta_predicted",
+        "mlp_scalars_per_iter", "b_per_avg",
+    ]);
+    csv.row(&[
+        dataset.clone(),
+        format!("{}", admm.bytes),
+        format!("{dgd_bytes}"),
+        format!("{dgd_iters}"),
+        format!("{eta_measured}"),
+        format!("{eta_predicted}"),
+        format!("{mlp_scalars}"),
+        format!("{b_per_avg}"),
+    ]);
+    csv.write_to(std::path::Path::new("results/comm_load.csv"))?;
+
+    // The paper's claim: η ≫ 1.
+    assert!(
+        eta_measured > 3.0,
+        "communication advantage not reproduced: η = {eta_measured:.2}"
+    );
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! Bench E3 — regenerates the paper's **Fig. 3**: decentralized
+//! objective cost versus the *total* number of ADMM iterations across
+//! all layers, for Satimage, Letter and MNIST.
+//!
+//! ```text
+//! cargo bench --bench fig3 [-- --full] [-- --layers L] [-- --iters K]
+//! ```
+//!
+//! Writes one CSV series per dataset (`results/fig3_<dataset>.csv`) and
+//! prints the per-layer staircase. Checks the two qualitative properties
+//! the paper reads off the figure: (1) within a layer, ADMM converges;
+//! (2) across layers, the converged cost is monotonically decreasing and
+//! flattens (power-law-like envelope).
+
+use dssfn::config::ExperimentConfig;
+use dssfn::coordinator::DecentralizedTrainer;
+use dssfn::metrics::CsvWriter;
+
+fn main() -> dssfn::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let full = args.iter().any(|a| a == "--full");
+    let get = |flag: &str, default: usize| -> usize {
+        args.iter()
+            .position(|a| a == flag)
+            .and_then(|i| args.get(i + 1))
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    };
+    let layers = get("--layers", if full { 20 } else { 8 });
+    let iters = get("--iters", 100); // the paper's K
+
+    for base in ["satimage", "letter", "mnist"] {
+        let ds = if full { base.to_string() } else { format!("{base}-small") };
+        let mut cfg = ExperimentConfig::named_dataset(&ds)?;
+        cfg.layers = layers;
+        cfg.admm_iterations = iters;
+        cfg.degree = 4.min(cfg.nodes / 2);
+        cfg.record_cost_curve = true;
+        let task = cfg.generate_task()?;
+        let (_, report) = DecentralizedTrainer::from_config(&cfg)?.train_task(&task)?;
+
+        let curve = report.full_cost_curve();
+        let mut csv = CsvWriter::new(&["total_admm_iteration", "cost"]);
+        for (i, c) in curve.iter().enumerate() {
+            csv.row_f64(&[i as f64, *c]);
+        }
+        let path = format!("results/fig3_{ds}.csv");
+        csv.write_to(std::path::Path::new(&path))?;
+
+        println!("\nFig.3 series '{ds}' ({} layers × K={iters} = {} points) -> {path}", report.layers.len(), curve.len());
+        println!("  per-layer converged cost (the staircase):");
+        let finals: Vec<f64> = report
+            .layers
+            .iter()
+            .map(|l| l.final_cost().unwrap())
+            .collect();
+        for (l, rec) in report.layers.iter().enumerate() {
+            let start = rec.cost_curve.first().copied().unwrap_or(f64::NAN);
+            println!(
+                "    layer {l:>2}: {start:>12.2} -> {:>12.2}",
+                rec.final_cost().unwrap()
+            );
+        }
+        // (1) within-layer convergence: last quarter of each layer's curve
+        //     is flat relative to its initial drop.
+        for (l, rec) in report.layers.iter().enumerate() {
+            let c = &rec.cost_curve;
+            let k = c.len();
+            let drop = (c[0] - c[k - 1]).abs().max(1e-12);
+            let tail = (c[3 * k / 4] - c[k - 1]).abs();
+            assert!(
+                tail <= 0.35 * drop + 1e-9,
+                "{ds} layer {l}: ADMM not converging (tail {tail} vs drop {drop})"
+            );
+        }
+        // (2) layer-over-layer monotone decrease.
+        for w in finals.windows(2) {
+            assert!(
+                w[1] <= w[0] * 1.02 + 1e-9,
+                "{ds}: cost increased across layers: {finals:?}"
+            );
+        }
+        // Flattening envelope: the decrement shrinks (power-law behaviour).
+        if finals.len() >= 4 {
+            let d_early = finals[0] - finals[1];
+            let d_late = finals[finals.len() - 2] - finals[finals.len() - 1];
+            assert!(
+                d_late <= d_early,
+                "{ds}: no flattening: first Δ={d_early}, last Δ={d_late}"
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,105 @@
+//! Bench E4 — regenerates the paper's **Fig. 4**: training time versus
+//! circular-network degree `d` on the 20-node network, for Satimage,
+//! Letter and MNIST.
+//!
+//! ```text
+//! cargo bench --bench fig4 [-- --full] [-- --layers L]
+//! ```
+//!
+//! Reports, per degree: the consensus rounds per averaging `B(d)`
+//! (derived from the mixing-matrix spectral gap), measured gossip
+//! rounds, exchanged bytes, compute wall time, and the simulated total
+//! time under the α-β latency model — the quantity whose sharp drop is
+//! the paper's "transition jump". Writes `results/fig4_<dataset>.csv`.
+
+use dssfn::config::ExperimentConfig;
+use dssfn::coordinator::DecentralizedTrainer;
+use dssfn::metrics::CsvWriter;
+use dssfn::network::{MixingMatrix, Topology, WeightRule};
+use dssfn::util::human_secs;
+
+fn main() -> dssfn::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let full = args.iter().any(|a| a == "--full");
+    let layers: usize = args
+        .iter()
+        .position(|a| a == "--layers")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if full { 20 } else { 5 });
+
+    let m = 20; // the paper's node count
+    for base in ["satimage", "letter", "mnist"] {
+        let ds = if full { base.to_string() } else { format!("{base}-small") };
+        let mut cfg = ExperimentConfig::named_dataset(&ds)?;
+        cfg.nodes = m;
+        cfg.layers = layers;
+        cfg.record_cost_curve = false;
+        let task = cfg.generate_task()?;
+        let dmax = Topology::max_circular_degree(m);
+
+        println!("\nFig.4 series '{ds}' (M={m}, L={layers}, K={}):", cfg.admm_iterations);
+        println!(
+            "{:>3} {:>7} {:>6} {:>14} {:>12} {:>12} {:>14}",
+            "d", "λ2", "B(d)", "gossip rounds", "GiB", "wall", "sim total"
+        );
+        let mut csv = CsvWriter::new(&[
+            "degree", "lambda2", "b_rounds", "gossip_rounds", "bytes",
+            "wall_secs", "sim_comm_secs", "sim_total_secs",
+        ]);
+        let mut times = Vec::new();
+        for d in 1..=dmax {
+            cfg.degree = d;
+            let mix = MixingMatrix::build(
+                &Topology::Circular { nodes: m, degree: d },
+                WeightRule::EqualNeighbor,
+            )?;
+            let b = mix.consensus_rounds(cfg.delta);
+            let trainer = DecentralizedTrainer::from_config(&cfg)?;
+            let (_, r) = trainer.train_task(&task)?;
+            let total = r.simulated_total_secs();
+            times.push(total);
+            println!(
+                "{:>3} {:>7.4} {:>6} {:>14} {:>12.3} {:>12} {:>14}",
+                d,
+                mix.lambda2(),
+                b,
+                r.total_gossip_rounds(),
+                r.comm_total.bytes as f64 / (1u64 << 30) as f64,
+                human_secs(r.wall_secs),
+                human_secs(total),
+            );
+            csv.row_f64(&[
+                d as f64,
+                mix.lambda2(),
+                b as f64,
+                r.total_gossip_rounds() as f64,
+                r.comm_total.bytes as f64,
+                r.wall_secs,
+                r.simulated_comm_secs,
+                total,
+            ]);
+        }
+        let path = format!("results/fig4_{ds}.csv");
+        csv.write_to(std::path::Path::new(&path))?;
+        eprintln!("wrote {path}");
+
+        // The paper's qualitative claims: time falls steeply with d, with
+        // a transition jump in the mid range, then flattens near d_max.
+        let first = times[0];
+        let last = *times.last().unwrap();
+        assert!(
+            first / last > 5.0,
+            "{ds}: no steep decrease: d=1 {first:.2}s vs d_max {last:.2}s"
+        );
+        let max_ratio = times
+            .windows(2)
+            .map(|w| w[0] / w[1])
+            .fold(0.0f64, f64::max);
+        assert!(
+            max_ratio > 1.5,
+            "{ds}: no transition jump (max step ratio {max_ratio:.2})"
+        );
+    }
+    Ok(())
+}

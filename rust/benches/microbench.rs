@@ -1,0 +1,144 @@
+//! Microbench — hot-path kernel timings for the perf pass
+//! (EXPERIMENTS.md §Perf). No criterion in the offline image, so this is
+//! a plain warmup+N-rep timer with median reporting.
+//!
+//! ```text
+//! cargo bench --bench microbench [-- --config mnist-small] [-- --reps 30]
+//! ```
+//!
+//! Covers, for native and (when artifacts exist) PJRT backends:
+//!   layer_forward, prepare_layer (Gram+factor/inverse), o_update,
+//! plus the gossip engine's per-round cost and a GEMM roofline probe.
+
+use dssfn::linalg::Matrix;
+use dssfn::network::{CommLedger, GossipEngine, LatencyModel, MixingMatrix, Topology, WeightRule};
+use dssfn::runtime::{ArtifactManifest, ComputeBackend, NativeBackend, PjrtBackend};
+use dssfn::util::{human_secs, median, Rng, Xoshiro256StarStar};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn time_op(reps: usize, mut f: impl FnMut()) -> f64 {
+    // warmup
+    f();
+    f();
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    median(&samples)
+}
+
+fn main() -> dssfn::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let config = args
+        .iter()
+        .position(|a| a == "--config")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "mnist-small".to_string());
+    let reps: usize = args
+        .iter()
+        .position(|a| a == "--reps")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20);
+
+    let manifest = ArtifactManifest::load("artifacts").ok();
+    let pjrt = manifest
+        .as_ref()
+        .and_then(|m| PjrtBackend::start(m, &config).ok());
+    let (p, q, n, j) = match pjrt.as_ref() {
+        Some(b) => {
+            let c = b.config();
+            (c.p, c.q, c.n, c.j)
+        }
+        None => (64, 10, 120, 200), // mnist-small shape fallback
+    };
+    println!("microbench config '{config}': p={p} q={q} n={n} j={j}, reps={reps}");
+
+    let mut rng = Xoshiro256StarStar::seed_from_u64(42);
+    let w1 = Matrix::from_fn(n, p, |_, _| rng.uniform(-1.0, 1.0));
+    let x = Matrix::from_fn(p, j, |_, _| rng.uniform(-1.0, 1.0));
+    let wn = Matrix::from_fn(n, n, |_, _| rng.uniform(-0.2, 0.2));
+    let t = Matrix::from_fn(q, j, |_, _| rng.uniform(0.0, 1.0));
+    let z = Matrix::from_fn(q, n, |_, _| rng.uniform(-0.5, 0.5));
+    let native = NativeBackend::new();
+    let y = native.layer_forward(&w1, &x)?;
+
+    let report = |name: &str, secs: f64, flops: f64| {
+        let gflops = flops / secs / 1e9;
+        println!("  {name:<34} {:>12}   {gflops:>7.2} GFLOP/s", human_secs(secs));
+    };
+
+    for (label, be) in [("native", Some(&native as &dyn ComputeBackend)), ("pjrt", pjrt.as_ref().map(|b| b as &dyn ComputeBackend))] {
+        let Some(be) = be else {
+            println!("[{label}] skipped (artifacts missing)");
+            continue;
+        };
+        println!("[{label}]");
+        let s = time_op(reps, || {
+            be.layer_forward(&w1, &x).unwrap();
+        });
+        report("layer_forward n×p @ p×j", s, 2.0 * (n * p * j) as f64);
+        let s = time_op(reps, || {
+            be.layer_forward(&wn, &y).unwrap();
+        });
+        report("layer_forward n×n @ n×j", s, 2.0 * (n * n * j) as f64);
+        let s = time_op(reps.min(10), || {
+            be.prepare_layer(&y, &t, 1.0).unwrap();
+        });
+        report(
+            "prepare_layer (gram+inv/factor)",
+            s,
+            (n * n * j) as f64 + (q * n * j) as f64 * 2.0 + (n * n * n) as f64 / 3.0,
+        );
+        let solver = be.prepare_layer(&y, &t, 1.0)?;
+        let s = time_op(reps, || {
+            solver.o_update(&z, &z).unwrap();
+        });
+        report("o_update (ADMM inner step)", s, 2.0 * (q * n * n) as f64);
+        let s = time_op(reps, || {
+            solver.cost(&z).unwrap();
+        });
+        report("cost eval (cached grams)", s, 2.0 * (q * n * n) as f64);
+        let s = time_op(reps, || {
+            be.output_scores(&z, &y).unwrap();
+        });
+        report("output_scores q×n @ n×j", s, 2.0 * (q * n * j) as f64);
+    }
+
+    // Gossip engine per-round cost at the protocol payload size (q×n).
+    println!("[gossip]");
+    for (m, d) in [(10usize, 1usize), (20, 1), (20, 4)] {
+        let mix = MixingMatrix::build(
+            &Topology::Circular { nodes: m, degree: d },
+            WeightRule::EqualNeighbor,
+        )?;
+        let engine =
+            GossipEngine::new(mix, Arc::new(CommLedger::new()), LatencyModel::default());
+        let mut vals: Vec<Matrix> = (0..m)
+            .map(|i| Matrix::from_fn(q, n, |r, c| ((r + c + i) as f64).sin()))
+            .collect();
+        let s = time_op(reps, || {
+            engine.mix_rounds(&mut vals, 1).unwrap();
+        });
+        println!(
+            "  mix_round M={m:<2} d={d} (q×n payload)      {:>12}",
+            human_secs(s)
+        );
+    }
+
+    // GEMM roofline probe (native f64).
+    println!("[gemm roofline]");
+    for size in [128usize, 256, 512] {
+        let a = Matrix::from_fn(size, size, |_, _| rng.uniform(-1.0, 1.0));
+        let b = Matrix::from_fn(size, size, |_, _| rng.uniform(-1.0, 1.0));
+        let s = time_op(reps.min(10), || {
+            a.matmul(&b).unwrap();
+        });
+        report(&format!("gemm {size}³ f64"), s, 2.0 * (size * size * size) as f64);
+    }
+    Ok(())
+}

@@ -1,0 +1,96 @@
+//! Bench E2 — regenerates the paper's **Table II**: classification
+//! performance of centralized vs decentralized SSFN on a circular
+//! network with d=4, across all six datasets.
+//!
+//! ```text
+//! cargo bench --bench table2                 # small shapes (seconds)
+//! cargo bench --bench table2 -- --full       # Table-I shapes (hours)
+//! cargo bench --bench table2 -- --seeds 5
+//! ```
+//!
+//! Prints the paper's columns (train acc ± σ, train error dB, test acc
+//! ± σ for both trainers) and writes `results/table2.csv`. Absolute
+//! accuracies come from the synthetic substitutes (DESIGN.md
+//! §Substitutions); the claim under test is the *equivalence* of the two
+//! columns, which is data-independent.
+
+use dssfn::config::ExperimentConfig;
+use dssfn::coordinator::DecentralizedTrainer;
+use dssfn::metrics::CsvWriter;
+use dssfn::ssfn::CentralizedTrainer;
+use dssfn::util::{mean, std_dev};
+
+fn main() -> dssfn::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let full = args.iter().any(|a| a == "--full");
+    let seeds: u64 = args
+        .iter()
+        .position(|a| a == "--seeds")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3);
+
+    let datasets: Vec<String> = ["vowel", "satimage", "caltech101", "letter", "norb", "mnist"]
+        .iter()
+        .map(|d| if full { d.to_string() } else { format!("{d}-small") })
+        .collect();
+
+    println!("TABLE II: centralized vs decentralized SSFN (circular network, d=4)");
+    println!(
+        "{:<18} | {:>10} {:>8} {:>10} | {:>10} {:>8} {:>10} | {:>9}",
+        "Dataset", "C train", "C errdB", "C test", "D train", "D errdB", "D test", "Δtest"
+    );
+    let mut csv = CsvWriter::new(&[
+        "dataset", "c_train_mean", "c_train_std", "c_err_db", "c_test_mean", "c_test_std",
+        "d_train_mean", "d_train_std", "d_err_db", "d_test_mean", "d_test_std",
+    ]);
+
+    for ds in &datasets {
+        let mut cfg = ExperimentConfig::named_dataset(ds)?;
+        cfg.degree = 4.min(cfg.nodes / 2);
+        cfg.record_cost_curve = false;
+
+        let (mut ctr, mut cte, mut cer) = (vec![], vec![], vec![]);
+        let (mut dtr, mut dte, mut der) = (vec![], vec![], vec![]);
+        for s in 0..seeds {
+            cfg.seed = 0xD55F + s;
+            let task = cfg.generate_task()?;
+            let (_, cr) = CentralizedTrainer::new(cfg.architecture()?, cfg.hyper(), cfg.seed)?
+                .train(&task)?;
+            ctr.push(cr.train_accuracy * 100.0);
+            cte.push(cr.test_accuracy * 100.0);
+            cer.push(cr.train_error_db);
+            let (_, dr) = DecentralizedTrainer::from_config(&cfg)?.train_task(&task)?;
+            dtr.push(dr.train_accuracy * 100.0);
+            dte.push(dr.test_accuracy * 100.0);
+            der.push(dr.train_error_db);
+        }
+        println!(
+            "{:<18} | {:>6.1}±{:<4.2} {:>7.1} {:>6.1}±{:<4.2} | {:>6.1}±{:<4.2} {:>7.1} {:>6.1}±{:<4.2} | {:>+8.2}",
+            ds,
+            mean(&ctr), std_dev(&ctr), mean(&cer), mean(&cte), std_dev(&cte),
+            mean(&dtr), std_dev(&dtr), mean(&der), mean(&dte), std_dev(&dte),
+            mean(&dte) - mean(&cte),
+        );
+        csv.row(&[
+            ds.clone(),
+            format!("{}", mean(&ctr)), format!("{}", std_dev(&ctr)), format!("{}", mean(&cer)),
+            format!("{}", mean(&cte)), format!("{}", std_dev(&cte)),
+            format!("{}", mean(&dtr)), format!("{}", std_dev(&dtr)), format!("{}", mean(&der)),
+            format!("{}", mean(&dte)), format!("{}", std_dev(&dte)),
+        ]);
+        // The reproduction criterion: decentralized ≈ centralized. The
+        // tolerance accounts for seed noise on small test sets (the same
+        // ± spread the paper reports in its own Table II).
+        let gap = (mean(&dte) - mean(&cte)).abs();
+        let noise = (std_dev(&cte).powi(2) + std_dev(&dte).powi(2)).sqrt();
+        let tol = 6.0f64.max(2.5 * noise);
+        assert!(
+            gap < tol,
+            "{ds}: test-accuracy gap {gap:.1}% (tol {tol:.1}%) violates centralized equivalence"
+        );
+    }
+    csv.write_to(std::path::Path::new("results/table2.csv"))?;
+    eprintln!("wrote results/table2.csv");
+    Ok(())
+}

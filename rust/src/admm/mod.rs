@@ -1,0 +1,104 @@
+//! Consensus-ADMM engine for the layer-wise convex problem (paper eq. 6/10/11).
+//!
+//! Per layer `l`, dSSFN solves
+//!
+//! ```text
+//!   min_{O}  Σ_m ‖T_m − O·Y_{l,m}‖²_F   s.t.  ‖O‖²_F ≤ ε
+//! ```
+//!
+//! by splitting `O` into per-node copies `O_m` tied to an auxiliary `Z`
+//! (eq. 10) and iterating (eq. 11):
+//!
+//! 1. `O_m ← (T_m Y_mᵀ + μ⁻¹(Z_m − Λ_m)) · (Y_m Y_mᵀ + μ⁻¹ I)⁻¹`
+//! 2. `Z  ← P_ε( avg_m(O_m + Λ_m) )` — the average found by **gossip**
+//! 3. `Λ_m ← Λ_m + O_m − Z`
+//!
+//! The system matrix in step 1 is constant across iterations, so
+//! [`LayerLocalSolver`] factors it **once per layer** (Cholesky) and each
+//! iteration is one GEMM + triangular solves. This hoisting is the single
+//! biggest perf lever in the whole stack (see `EXPERIMENTS.md §Perf`).
+
+mod local;
+mod solve;
+
+pub use local::LayerLocalSolver;
+pub use solve::{
+    solve_centralized, solve_decentralized, AdmmParams, Consensus, DecentralizedSolution,
+};
+
+use crate::linalg::Matrix;
+use crate::Result;
+
+/// Node-local solve interface used by the ADMM iteration: the O-update
+/// (step 1 of eq. 11) and the cached-Gram cost evaluation. Implemented by
+/// the native [`LayerLocalSolver`] and by the PJRT artifact solver.
+pub trait LocalSolve: Send + Sync {
+    /// ADMM step 1: `O = (T Yᵀ + μ⁻¹ (Z − Λ)) · (Y Yᵀ + μ⁻¹ I)⁻¹`.
+    fn o_update(&self, z: &Matrix, lambda: &Matrix) -> Result<Matrix>;
+    /// Local cost `‖T − O·Y‖²_F`.
+    fn cost(&self, o: &Matrix) -> Result<f64>;
+}
+
+impl LocalSolve for LayerLocalSolver {
+    fn o_update(&self, z: &Matrix, lambda: &Matrix) -> Result<Matrix> {
+        LayerLocalSolver::o_update(self, z, lambda)
+    }
+    fn cost(&self, o: &Matrix) -> Result<f64> {
+        LayerLocalSolver::cost(self, o)
+    }
+}
+
+impl LocalSolve for Box<dyn LocalSolve> {
+    fn o_update(&self, z: &Matrix, lambda: &Matrix) -> Result<Matrix> {
+        (**self).o_update(z, lambda)
+    }
+    fn cost(&self, o: &Matrix) -> Result<f64> {
+        (**self).cost(o)
+    }
+}
+
+/// Per-node ADMM state for one layer's solve.
+#[derive(Debug, Clone)]
+pub struct NodeState {
+    /// Local primal variable `O_m` (`Q×n`).
+    pub o: Matrix,
+    /// Scaled dual `Λ_m` (`Q×n`).
+    pub lambda: Matrix,
+    /// Node-local estimate of the consensus variable `Z` (`Q×n`). With
+    /// exact averaging all nodes hold the same `Z`; with gossip they hold
+    /// slightly different estimates — exactly as a real deployment would.
+    pub z: Matrix,
+}
+
+impl NodeState {
+    /// Zero-initialized state for a `Q×n` output matrix.
+    pub fn zeros(q: usize, n: usize) -> Self {
+        Self {
+            o: Matrix::zeros(q, n),
+            lambda: Matrix::zeros(q, n),
+            z: Matrix::zeros(q, n),
+        }
+    }
+
+    /// Primal residual ‖O_m − Z_m‖_F (consensus violation at this node).
+    pub fn primal_residual(&self) -> f64 {
+        let mut d = self.o.clone();
+        // shapes always match within one state
+        d.axpy(-1.0, &self.z).expect("state shapes consistent");
+        d.frobenius_norm()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_state_residual() {
+        let mut s = NodeState::zeros(2, 3);
+        assert_eq!(s.primal_residual(), 0.0);
+        s.o.set(0, 0, 3.0);
+        s.z.set(0, 0, -1.0);
+        assert!((s.primal_residual() - 4.0).abs() < 1e-12);
+    }
+}

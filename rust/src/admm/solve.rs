@@ -1,0 +1,329 @@
+//! One-layer consensus-ADMM solves (sequential reference implementation).
+//!
+//! [`solve_decentralized`] runs the eq.-(11) iteration over a slice of
+//! per-node [`LayerLocalSolver`]s. The coordinator module wraps the same
+//! primitives in worker threads; this sequential version is the oracle
+//! the threaded path is tested against, and it is what the equivalence
+//! benches call directly.
+
+use super::{LayerLocalSolver, LocalSolve, NodeState};
+use crate::linalg::Matrix;
+use crate::network::GossipEngine;
+use crate::{Error, Result};
+
+/// Hyper-parameters of one layer's ADMM solve.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmmParams {
+    /// Lagrangian parameter `μ_l` (the paper's per-layer knob).
+    pub mu: f64,
+    /// Frobenius-ball radius `ε` (paper: `ε = 2Q`).
+    pub eps: f64,
+    /// Iteration count `K` (paper: 100).
+    pub iterations: usize,
+}
+
+impl AdmmParams {
+    /// Validate ranges.
+    pub fn validate(&self) -> Result<()> {
+        if self.mu <= 0.0 {
+            return Err(Error::Config(format!("mu must be > 0, got {}", self.mu)));
+        }
+        if self.eps <= 0.0 {
+            return Err(Error::Config(format!("eps must be > 0, got {}", self.eps)));
+        }
+        if self.iterations == 0 {
+            return Err(Error::Config("iterations must be >= 1".into()));
+        }
+        Ok(())
+    }
+}
+
+/// How the `Z`-update average `avg_m(O_m + Λ_m)` is obtained.
+pub enum Consensus<'a> {
+    /// Exact arithmetic average (idealized; equals gossip as rounds → ∞).
+    Exact,
+    /// Gossip over the engine's mixing matrix until contraction `delta`.
+    Gossip {
+        /// The gossip engine (carries topology, ledger and sim clock).
+        engine: &'a GossipEngine,
+        /// Consensus contraction target per averaging (e.g. `1e-9`).
+        delta: f64,
+    },
+}
+
+/// Result of a decentralized layer solve.
+#[derive(Debug)]
+pub struct DecentralizedSolution {
+    /// Final per-node states (each node's `O_m`, `Λ_m`, `Z_m`).
+    pub states: Vec<NodeState>,
+    /// Global objective `Σ_m ‖T_m − Z Y_m‖²_F` after every ADMM iteration
+    /// (the Fig.-3 series).
+    pub cost_curve: Vec<f64>,
+    /// Total gossip rounds spent in this solve (0 for exact consensus).
+    pub gossip_rounds: usize,
+}
+
+impl DecentralizedSolution {
+    /// The consensus output matrix: node 0's `Z` (all nodes agree up to
+    /// the consensus tolerance — asserted by the equivalence tests).
+    pub fn output(&self) -> &Matrix {
+        &self.states[0].z
+    }
+
+    /// Largest pairwise disagreement between node `Z` estimates.
+    pub fn max_disagreement(&self) -> f64 {
+        let z0 = &self.states[0].z;
+        self.states
+            .iter()
+            .map(|s| s.z.max_abs_diff(z0))
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Solve one layer's problem across `solvers.len()` nodes (eq. 11).
+pub fn solve_decentralized<S: LocalSolve>(
+    solvers: &[S],
+    q: usize,
+    n: usize,
+    params: &AdmmParams,
+    consensus: &Consensus<'_>,
+) -> Result<DecentralizedSolution> {
+    params.validate()?;
+    let m = solvers.len();
+    if m == 0 {
+        return Err(Error::Config("no nodes".into()));
+    }
+    let mut states: Vec<NodeState> = (0..m).map(|_| NodeState::zeros(q, n)).collect();
+    let mut cost_curve = Vec::with_capacity(params.iterations);
+    let mut gossip_rounds = 0usize;
+    // Scratch for the averaging step.
+    let mut s_vals: Vec<Matrix> = (0..m).map(|_| Matrix::zeros(q, n)).collect();
+
+    for _k in 0..params.iterations {
+        // (1) local O-updates.
+        for (st, solver) in states.iter_mut().zip(solvers) {
+            st.o = solver.o_update(&st.z, &st.lambda)?;
+        }
+        // (2) averaging of O_m + Λ_m.
+        for (sv, st) in s_vals.iter_mut().zip(&states) {
+            sv.copy_from(&st.o)?;
+            sv.axpy(1.0, &st.lambda)?;
+        }
+        match consensus {
+            Consensus::Exact => {
+                let avg = GossipEngine::exact_average(&s_vals)?;
+                for sv in s_vals.iter_mut() {
+                    sv.copy_from(&avg)?;
+                }
+            }
+            Consensus::Gossip { engine, delta } => {
+                gossip_rounds += engine.consensus_average(&mut s_vals, *delta)?;
+            }
+        }
+        // (3) Z-update (projection) and dual update, per node.
+        for (st, sv) in states.iter_mut().zip(&s_vals) {
+            st.z.copy_from(sv)?;
+            st.z.project_frobenius(params.eps);
+            st.lambda.axpy(1.0, &st.o)?;
+            st.lambda.axpy(-1.0, &st.z)?;
+        }
+        // Global objective at the consensus point (each node's own Z).
+        let mut cost = 0.0;
+        for (st, solver) in states.iter().zip(solvers) {
+            cost += solver.cost(&st.z)?;
+        }
+        cost_curve.push(cost);
+    }
+    Ok(DecentralizedSolution {
+        states,
+        cost_curve,
+        gossip_rounds,
+    })
+}
+
+/// Centralized solve of eq. (6): the same ADMM with a single "node"
+/// holding all the data (this is how centralized SSFN learns `O_l` too).
+/// Returns the optimizer `O*` and the per-iteration cost curve.
+pub fn solve_centralized(
+    y: &Matrix,
+    t: &Matrix,
+    params: &AdmmParams,
+) -> Result<(Matrix, Vec<f64>)> {
+    let solver = LayerLocalSolver::new(y, t, params.mu)?;
+    let sol = solve_decentralized(
+        std::slice::from_ref(&solver),
+        t.rows(),
+        y.rows(),
+        params,
+        &Consensus::Exact,
+    )?;
+    let z = sol.states.into_iter().next().expect("one node").z;
+    Ok((z, sol.cost_curve))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::{CommLedger, LatencyModel, MixingMatrix, Topology, WeightRule};
+    use crate::util::{Rng, Xoshiro256StarStar};
+    use std::sync::Arc;
+
+    fn rand_mat(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Xoshiro256StarStar::seed_from_u64(seed);
+        Matrix::from_fn(rows, cols, |_, _| rng.uniform(-1.0, 1.0))
+    }
+
+    fn params(k: usize) -> AdmmParams {
+        AdmmParams { mu: 1.0, eps: 4.0, iterations: k }
+    }
+
+    /// Build per-node solvers from a column partition of (Y, T).
+    fn split_solvers(
+        y: &Matrix,
+        t: &Matrix,
+        m: usize,
+        mu: f64,
+    ) -> Vec<LayerLocalSolver> {
+        let j = y.cols();
+        let per = j / m;
+        (0..m)
+            .map(|i| {
+                let c0 = i * per;
+                let c1 = if i == m - 1 { j } else { (i + 1) * per };
+                LayerLocalSolver::new(
+                    &y.col_block(c0, c1).unwrap(),
+                    &t.col_block(c0, c1).unwrap(),
+                    mu,
+                )
+                .unwrap()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn centralized_unconstrained_matches_ridge_solution() {
+        // With a huge eps the projection never binds; ADMM converges to
+        // the ridge-free least squares O = TYᵀ(YYᵀ)⁻¹ as μ⁻¹→dual settles.
+        let y = rand_mat(6, 40, 1);
+        let t = rand_mat(2, 40, 2);
+        let p = AdmmParams { mu: 10.0, eps: 1e9, iterations: 400 };
+        let (o, curve) = solve_centralized(&y, &t, &p).unwrap();
+        let gram = y.gram();
+        let ls = gram
+            .cholesky()
+            .unwrap()
+            .solve_xa(&t.matmul_transb(&y).unwrap())
+            .unwrap();
+        assert!(o.max_abs_diff(&ls) < 1e-5, "diff {}", o.max_abs_diff(&ls));
+        // Cost decreases overall.
+        assert!(curve.last().unwrap() <= curve.first().unwrap());
+    }
+
+    #[test]
+    fn constraint_active_solution_on_boundary() {
+        // Tiny eps: the optimum lies on the Frobenius sphere.
+        let y = rand_mat(5, 30, 3);
+        let t = rand_mat(3, 30, 4);
+        let p = AdmmParams { mu: 1.0, eps: 0.1, iterations: 300 };
+        let (o, _) = solve_centralized(&y, &t, &p).unwrap();
+        assert!(o.frobenius_norm() <= 0.1 + 1e-9);
+        assert!((o.frobenius_norm() - 0.1).abs() < 1e-3);
+    }
+
+    #[test]
+    fn decentralized_exact_matches_centralized() {
+        // THE paper's claim: decentralized ADMM over shards converges to
+        // the same solution as the centralized solve of the pooled data.
+        let y = rand_mat(8, 60, 5);
+        let t = rand_mat(3, 60, 6);
+        let p = AdmmParams { mu: 1.0, eps: 6.0, iterations: 600 };
+        let (central, _) = solve_centralized(&y, &t, &p).unwrap();
+        let solvers = split_solvers(&y, &t, 4, p.mu);
+        let sol = solve_decentralized(&solvers, 3, 8, &p, &Consensus::Exact).unwrap();
+        let diff = sol.output().max_abs_diff(&central);
+        assert!(diff < 1e-4, "centralized equivalence violated: {diff}");
+    }
+
+    #[test]
+    fn gossip_consensus_tracks_exact_consensus() {
+        let y = rand_mat(6, 48, 7);
+        let t = rand_mat(2, 48, 8);
+        let p = AdmmParams { mu: 1.0, eps: 4.0, iterations: 60 };
+        let m = 6;
+        let solvers = split_solvers(&y, &t, m, p.mu);
+        let exact = solve_decentralized(&solvers, 2, 6, &p, &Consensus::Exact).unwrap();
+
+        let mix = MixingMatrix::build(
+            &Topology::Circular { nodes: m, degree: 2 },
+            WeightRule::EqualNeighbor,
+        )
+        .unwrap();
+        let engine = GossipEngine::new(mix, Arc::new(CommLedger::new()), LatencyModel::default());
+        let gossip = solve_decentralized(
+            &solvers,
+            2,
+            6,
+            &p,
+            &Consensus::Gossip { engine: &engine, delta: 1e-10 },
+        )
+        .unwrap();
+        assert!(gossip.gossip_rounds > 0);
+        assert!(gossip.max_disagreement() < 1e-6);
+        let diff = gossip.output().max_abs_diff(exact.output());
+        assert!(diff < 1e-6, "gossip vs exact: {diff}");
+        // Ledger charged: rounds = iterations × B.
+        let s = engine.ledger().snapshot();
+        assert_eq!(s.rounds as usize, gossip.gossip_rounds);
+    }
+
+    #[test]
+    fn z_always_feasible() {
+        let y = rand_mat(5, 40, 9);
+        let t = rand_mat(3, 40, 10);
+        let p = AdmmParams { mu: 0.5, eps: 1.0, iterations: 50 };
+        let solvers = split_solvers(&y, &t, 5, p.mu);
+        let sol = solve_decentralized(&solvers, 3, 5, &p, &Consensus::Exact).unwrap();
+        for st in &sol.states {
+            assert!(st.z.frobenius_norm() <= p.eps + 1e-9);
+        }
+        assert_eq!(sol.cost_curve.len(), 50);
+    }
+
+    #[test]
+    fn invalid_params_rejected() {
+        assert!(AdmmParams { mu: 0.0, eps: 1.0, iterations: 1 }.validate().is_err());
+        assert!(AdmmParams { mu: 1.0, eps: 0.0, iterations: 1 }.validate().is_err());
+        assert!(AdmmParams { mu: 1.0, eps: 1.0, iterations: 0 }.validate().is_err());
+        let y = rand_mat(3, 10, 11);
+        let t = rand_mat(2, 10, 12);
+        assert!(solve_centralized(&y, &t, &params(0)).is_err());
+        let empty: &[LayerLocalSolver] = &[];
+        assert!(solve_decentralized(empty, 2, 3, &params(5), &Consensus::Exact).is_err());
+    }
+
+    #[test]
+    fn uneven_shards_preserve_equivalence() {
+        // Weighted shards: the global objective counts every sample once,
+        // so equivalence cannot depend on balanced shards.
+        let y = rand_mat(6, 55, 13);
+        let t = rand_mat(2, 55, 14);
+        let p = AdmmParams { mu: 1.0, eps: 4.0, iterations: 600 };
+        let (central, _) = solve_centralized(&y, &t, &p).unwrap();
+        // shards of size 5, 20, 30
+        let cuts = [(0, 5), (5, 25), (25, 55)];
+        let solvers: Vec<LayerLocalSolver> = cuts
+            .iter()
+            .map(|&(a, b)| {
+                LayerLocalSolver::new(
+                    &y.col_block(a, b).unwrap(),
+                    &t.col_block(a, b).unwrap(),
+                    p.mu,
+                )
+                .unwrap()
+            })
+            .collect();
+        let sol = solve_decentralized(&solvers, 2, 6, &p, &Consensus::Exact).unwrap();
+        let diff = sol.output().max_abs_diff(&central);
+        assert!(diff < 1e-4, "uneven-shard equivalence violated: {diff}");
+    }
+}

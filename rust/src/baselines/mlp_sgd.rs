@@ -1,0 +1,292 @@
+//! Decentralized backprop MLP baseline.
+//!
+//! A conventional ReLU MLP of the same depth/width as the SSFN, trained
+//! with full-batch decentralized gradient descent: each step every node
+//! backpropagates on its shard and the *entire weight-stack gradient* is
+//! gossip-averaged (paper eq. 13). This is the "general gradient-based
+//! method" whose per-iteration traffic is `Σ_l n_l·n_{l-1}` scalars —
+//! versus dSSFN's `Q·n` — the numerator of eq. (16).
+
+use crate::data::{ClassificationTask, Dataset};
+use crate::linalg::{accuracy_from_predictions, Matrix};
+use crate::metrics::{error_db, TrainReport};
+use crate::network::GossipEngine;
+use crate::util::{Rng, Xoshiro256StarStar};
+use crate::{Error, Result};
+
+/// MLP + decentralized SGD parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct MlpSgdParams {
+    /// Hidden width per layer.
+    pub hidden: usize,
+    /// Hidden layer count.
+    pub layers: usize,
+    /// Step size.
+    pub step: f64,
+    /// Full-batch iterations `I`.
+    pub iterations: usize,
+    /// Gossip contraction per gradient averaging.
+    pub delta: f64,
+    /// Init scale seed.
+    pub seed: u64,
+}
+
+/// Trains the baseline MLP across shards with gossiped gradients.
+pub struct MlpSgdTrainer {
+    params: MlpSgdParams,
+}
+
+/// The trained MLP (weights only; biases omitted as in the SSFN).
+pub struct MlpModel {
+    /// `W_1..W_L` then output `O` last.
+    pub weights: Vec<Matrix>,
+}
+
+impl MlpModel {
+    /// Forward pass returning scores `Q×J`.
+    pub fn scores(&self, x: &Matrix) -> Result<Matrix> {
+        let (hidden, out) = self.weights.split_at(self.weights.len() - 1);
+        let mut y = x.clone();
+        for w in hidden {
+            y = w.matmul(&y)?;
+            y.relu_inplace();
+        }
+        out[0].matmul(&y)
+    }
+
+    /// Accuracy on a dataset.
+    pub fn accuracy(&self, d: &Dataset) -> Result<f64> {
+        accuracy_from_predictions(&self.scores(&d.x)?, &d.labels)
+    }
+}
+
+impl MlpSgdTrainer {
+    /// Create a trainer.
+    pub fn new(params: MlpSgdParams) -> Result<Self> {
+        if params.hidden == 0 || params.layers == 0 {
+            return Err(Error::Config("MLP needs hidden>0, layers>0".into()));
+        }
+        if params.step <= 0.0 || params.iterations == 0 {
+            return Err(Error::Config("MLP needs step>0, iterations>0".into()));
+        }
+        Ok(Self { params })
+    }
+
+    fn init_weights(&self, p: usize, q: usize) -> Vec<Matrix> {
+        let mut rng = Xoshiro256StarStar::seed_from_u64(self.params.seed);
+        let mut ws = Vec::with_capacity(self.params.layers + 1);
+        let mut fan_in = p;
+        for _ in 0..self.params.layers {
+            let bound = (3.0 / fan_in as f64).sqrt() * 0.7; // conservative He-ish
+            ws.push(Matrix::from_fn(self.params.hidden, fan_in, |_, _| {
+                rng.uniform(-bound, bound)
+            }));
+            fan_in = self.params.hidden;
+        }
+        let bound = (3.0 / fan_in as f64).sqrt();
+        ws.push(Matrix::from_fn(q, fan_in, |_, _| rng.uniform(-bound, bound)));
+        ws
+    }
+
+    /// Local full-batch gradient of `‖T − f(X)‖²_F` w.r.t. every weight.
+    fn gradients(ws: &[Matrix], x: &Matrix, t: &Matrix) -> Result<Vec<Matrix>> {
+        let l = ws.len();
+        // Forward, caching pre/post activations.
+        let mut acts: Vec<Matrix> = Vec::with_capacity(l); // post-ReLU (inputs to each weight)
+        acts.push(x.clone());
+        let mut pre: Vec<Matrix> = Vec::with_capacity(l - 1);
+        let mut y = x.clone();
+        for w in &ws[..l - 1] {
+            let z = w.matmul(&y)?;
+            pre.push(z.clone());
+            let mut a = z;
+            a.relu_inplace();
+            acts.push(a.clone());
+            y = a;
+        }
+        let scores = ws[l - 1].matmul(&y)?;
+        // Backward.
+        let mut grads: Vec<Matrix> = vec![Matrix::zeros(1, 1); l];
+        let mut delta = scores.sub(t)?; // d/dscores of ½‖·‖² scaled: use 2× at end
+        delta.scale_inplace(2.0);
+        grads[l - 1] = delta.matmul_transb(&acts[l - 1])?;
+        for li in (0..l - 1).rev() {
+            // delta = (W_{li+1}ᵀ delta_{li+1}) ⊙ relu'(pre_li)
+            let wt = ws[li + 1].transpose();
+            let mut d = wt.matmul(&delta)?;
+            let zpre = &pre[li];
+            for (dv, zv) in d.as_mut_slice().iter_mut().zip(zpre.as_slice()) {
+                if *zv <= 0.0 {
+                    *dv = 0.0;
+                }
+            }
+            grads[li] = d.matmul_transb(&acts[li])?;
+            delta = d;
+        }
+        Ok(grads)
+    }
+
+    /// Train across `shards`; gradients are gossip-averaged through
+    /// `engine` when given, exactly averaged otherwise. Returns the model
+    /// and a report (cost curve = global objective per iteration).
+    pub fn train(
+        &self,
+        task: &ClassificationTask,
+        shards: &[Dataset],
+        engine: Option<&GossipEngine>,
+    ) -> Result<(MlpModel, TrainReport)> {
+        if shards.is_empty() {
+            return Err(Error::Config("no shards".into()));
+        }
+        let p = task.input_dim();
+        let q = task.num_classes();
+        let mut ws = self.init_weights(p, q);
+        let mut curve = Vec::with_capacity(self.params.iterations);
+        let mut gossip_rounds = 0usize;
+        let scale = 1.0 / task.train.num_samples() as f64;
+
+        for _ in 0..self.params.iterations {
+            // Per-node gradients (layer-major for the averaging step).
+            let mut per_layer: Vec<Vec<Matrix>> = vec![Vec::with_capacity(shards.len()); ws.len()];
+            for sh in shards {
+                let gs = Self::gradients(&ws, &sh.x, &sh.t)?;
+                for (bucket, g) in per_layer.iter_mut().zip(gs) {
+                    bucket.push(g);
+                }
+            }
+            // Average each layer's gradient across nodes.
+            for (li, bucket) in per_layer.iter_mut().enumerate() {
+                let avg = match engine {
+                    Some(eng) => {
+                        gossip_rounds += eng.consensus_average(bucket, self.params.delta)?;
+                        bucket[0].clone()
+                    }
+                    None => GossipEngine::exact_average(bucket)?,
+                };
+                // Gradient sum = M × average (the objective is a sum).
+                ws[li].axpy(-self.params.step * scale * shards.len() as f64, &avg)?;
+            }
+            // Objective.
+            let model = MlpModel { weights: ws.clone() };
+            let mut cost = 0.0;
+            for sh in shards {
+                cost += sh.t.sub(&model.scores(&sh.x)?)?.frobenius_norm_sq();
+            }
+            curve.push(cost);
+        }
+
+        let model = MlpModel { weights: ws };
+        let mut report = TrainReport {
+            dataset: task.name.clone(),
+            mode: format!("mlp-sgd({} layers)", self.params.layers),
+            train_accuracy: model.accuracy(&task.train)?,
+            test_accuracy: model.accuracy(&task.test)?,
+            ..Default::default()
+        };
+        report.train_error_db = error_db(
+            task.train
+                .t
+                .sub(&model.scores(&task.train.x)?)?
+                .frobenius_norm_sq(),
+            task.train.t.frobenius_norm_sq(),
+        );
+        report.layers.push(crate::metrics::LayerRecord {
+            layer: 0,
+            cost_curve: curve,
+            gossip_rounds,
+            ..Default::default()
+        });
+        Ok((model, report))
+    }
+
+    /// Scalars exchanged per gradient averaging (eq. 14's `n_l·n_{l-1}`
+    /// summed over layers) — used by the comm-load bench.
+    pub fn scalars_per_exchange(&self, p: usize, q: usize) -> usize {
+        let mut total = self.params.hidden * p;
+        total += (self.params.layers - 1) * self.params.hidden * self.params.hidden;
+        total += q * self.params.hidden;
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{shard_uniform, SynthClassification};
+
+    fn toy_task() -> ClassificationTask {
+        let mut s = SynthClassification::with_shape("toy", 6, 3, 90, 45);
+        s.class_sep = 3.0;
+        s.noise = 0.5;
+        s.generate().unwrap()
+    }
+
+    fn params(iters: usize) -> MlpSgdParams {
+        MlpSgdParams {
+            hidden: 24,
+            layers: 2,
+            step: 0.05,
+            iterations: iters,
+            delta: 1e-9,
+            seed: 3,
+        }
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let task = toy_task();
+        let tr = MlpSgdTrainer::new(params(1)).unwrap();
+        let ws = tr.init_weights(6, 3);
+        let x = task.train.x.col_block(0, 10).unwrap();
+        let t = task.train.t.col_block(0, 10).unwrap();
+        let grads = MlpSgdTrainer::gradients(&ws, &x, &t).unwrap();
+        let cost = |ws: &[Matrix]| -> f64 {
+            let m = MlpModel { weights: ws.to_vec() };
+            t.sub(&m.scores(&x).unwrap()).unwrap().frobenius_norm_sq()
+        };
+        let h = 1e-6;
+        for li in 0..ws.len() {
+            for &(r, c) in &[(0usize, 0usize), (1, 2)] {
+                let mut wp = ws.clone();
+                let v = wp[li].get(r, c);
+                wp[li].set(r, c, v + h);
+                let mut wm = ws.clone();
+                let v = wm[li].get(r, c);
+                wm[li].set(r, c, v - h);
+                let fd = (cost(&wp) - cost(&wm)) / (2.0 * h);
+                let an = grads[li].get(r, c);
+                assert!(
+                    (fd - an).abs() < 1e-3 * (1.0 + fd.abs()),
+                    "layer {li} ({r},{c}): fd={fd} analytic={an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn training_decreases_cost_and_learns() {
+        let task = toy_task();
+        let shards = shard_uniform(&task.train, 3).unwrap();
+        let tr = MlpSgdTrainer::new(params(300)).unwrap();
+        let (model, report) = tr.train(&task, &shards, None).unwrap();
+        let curve = &report.layers[0].cost_curve;
+        assert!(curve.last().unwrap() < &(curve.first().unwrap() * 0.5));
+        assert!(report.train_accuracy > 0.7, "acc {}", report.train_accuracy);
+        assert!(model.accuracy(&task.test).unwrap() > 0.5);
+    }
+
+    #[test]
+    fn scalars_per_exchange_formula() {
+        let tr = MlpSgdTrainer::new(params(1)).unwrap();
+        // p=6,q=3,hidden=24,layers=2: 24·6 + 1·24·24 + 3·24 = 144+576+72
+        assert_eq!(tr.scalars_per_exchange(6, 3), 792);
+    }
+
+    #[test]
+    fn rejects_bad_params() {
+        assert!(MlpSgdTrainer::new(MlpSgdParams { hidden: 0, ..params(1) }).is_err());
+        assert!(MlpSgdTrainer::new(MlpSgdParams { layers: 0, ..params(1) }).is_err());
+        assert!(MlpSgdTrainer::new(MlpSgdParams { step: -0.1, ..params(1) }).is_err());
+        assert!(MlpSgdTrainer::new(MlpSgdParams { iterations: 0, ..params(1) }).is_err());
+    }
+}

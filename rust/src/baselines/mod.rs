@@ -1,0 +1,18 @@
+//! Baseline algorithms the paper compares against (§II-E).
+//!
+//! * [`dgd`] — **decentralized gradient descent** on the same layer-wise
+//!   convex objective, with gossip-averaged gradients (eq. 13). It reaches
+//!   the same solution but needs `I ≫ K` iterations, each with a gossip
+//!   averaging of the *full weight gradient* — the communication-load
+//!   comparison of eq. (14)–(16) is measured against it.
+//! * [`mlp_sgd`] — a conventional backprop MLP trained with decentralized
+//!   SGD (gradient gossip every step). This is the "general
+//!   gradient-based method" of the paper's complexity argument: the
+//!   exchanged object is the whole `n_l × n_{l-1}` weight stack, not a
+//!   `Q × n` output matrix.
+
+pub mod dgd;
+pub mod mlp_sgd;
+
+pub use dgd::{DgdParams, DgdSolution};
+pub use mlp_sgd::{MlpSgdParams, MlpSgdTrainer};

@@ -1,0 +1,396 @@
+//! Experiment configuration: programmatic builders, named presets, and a
+//! TOML-subset loader for config files.
+//!
+//! The build environment is offline (no `serde`/`toml` crates), so the
+//! loader implements the subset of TOML the configs actually use:
+//! `[section]` headers, `key = value` with string / integer / float /
+//! boolean values, and `#` comments.
+//!
+//! ```toml
+//! # examples/configs/satimage.toml
+//! [experiment]
+//! dataset = "satimage-small"
+//! seed = 7
+//!
+//! [model]
+//! layers = 20
+//! hidden_extra = 200       # n = 2Q + hidden_extra
+//!
+//! [admm]
+//! iterations = 100
+//! mu0 = 0.01
+//! mul = 1.0
+//!
+//! [network]
+//! nodes = 20
+//! degree = 4
+//! delta = 1e-9
+//! alpha = 0.001
+//! beta = 125000000.0
+//!
+//! [runtime]
+//! backend = "native"       # or "pjrt"
+//! artifacts = "artifacts"
+//! threads = 0              # 0 = auto
+//! ```
+
+use crate::coordinator::{ConsensusMode, TrainOptions};
+use crate::data::{lookup, ClassificationTask};
+use crate::network::{LatencyModel, Topology, WeightRule};
+use crate::ssfn::{SsfnArchitecture, TrainHyper};
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Which compute backend executes the dense kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust `f64` linalg.
+    Native,
+    /// AOT-compiled HLO artifacts on the PJRT CPU client.
+    Pjrt,
+}
+
+/// A complete experiment description.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Dataset registry key (see `dssfn datasets`).
+    pub dataset: String,
+    /// Master seed (data, random matrices, everything).
+    pub seed: u64,
+    /// Number of SSFN layers `L` (paper: 20).
+    pub layers: usize,
+    /// Hidden width is `n = 2Q + hidden_extra` (paper: 1000).
+    pub hidden_extra: usize,
+    /// ADMM iterations per layer `K` (paper: 100).
+    pub admm_iterations: usize,
+    /// `μ_0` for the input-layer solve.
+    pub mu0: f64,
+    /// `μ_l` for hidden-layer solves.
+    pub mul: f64,
+    /// Optional explicit `ε` (default `2Q`).
+    pub eps: Option<f64>,
+    /// Worker count `M` (paper: 20).
+    pub nodes: usize,
+    /// Circular-topology degree `d` (paper sweeps 1..10; Table II uses 4).
+    pub degree: usize,
+    /// Gossip contraction target per averaging.
+    pub delta: f64,
+    /// Use exact averaging instead of gossip (ablation).
+    pub exact_consensus: bool,
+    /// α of the latency model (s/round).
+    pub alpha: f64,
+    /// β of the latency model (bytes/s).
+    pub beta: f64,
+    /// Worker threads (`0` = auto).
+    pub threads: usize,
+    /// Record per-iteration cost curves.
+    pub record_cost_curve: bool,
+    /// Compute backend.
+    pub backend: BackendKind,
+    /// Artifact directory for the PJRT backend.
+    pub artifacts_dir: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            dataset: "quickstart".into(),
+            seed: 0xD55F,
+            layers: 20,
+            hidden_extra: 1000,
+            admm_iterations: 100,
+            mu0: 1e-2,
+            mul: 1.0,
+            eps: None,
+            nodes: 20,
+            degree: 4,
+            delta: 1e-9,
+            exact_consensus: false,
+            alpha: 1e-3,
+            beta: 125e6,
+            threads: 0,
+            record_cost_curve: true,
+            backend: BackendKind::Native,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Preset for a registered dataset: paper-scale knobs for full-size
+    /// Table-I datasets, reduced knobs for `-small`/`quickstart` variants
+    /// so tests and default benches stay fast.
+    pub fn named_dataset(key: &str) -> Result<Self> {
+        lookup(key)?; // validate early
+        let mut cfg = Self {
+            dataset: key.to_string(),
+            ..Default::default()
+        };
+        if key.ends_with("-small") || key == "quickstart" {
+            cfg.layers = 5;
+            cfg.hidden_extra = 100;
+            cfg.admm_iterations = 50;
+            cfg.nodes = 10;
+            cfg.degree = 2;
+        }
+        Ok(cfg)
+    }
+
+    /// Parse from TOML-subset text.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let map = parse_toml_subset(text)?;
+        let mut cfg = Self::default();
+        for (key, value) in &map {
+            cfg.apply(key, value)?;
+        }
+        lookup(&cfg.dataset)?;
+        Ok(cfg)
+    }
+
+    /// Load from a TOML file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Self::from_toml(&text)
+    }
+
+    fn apply(&mut self, key: &str, value: &str) -> Result<()> {
+        fn num<T: std::str::FromStr>(key: &str, v: &str) -> Result<T> {
+            v.parse()
+                .map_err(|_| Error::Config(format!("bad value '{v}' for '{key}'")))
+        }
+        match key {
+            "experiment.dataset" => self.dataset = value.to_string(),
+            "experiment.seed" => self.seed = num(key, value)?,
+            "model.layers" => self.layers = num(key, value)?,
+            "model.hidden_extra" => self.hidden_extra = num(key, value)?,
+            "admm.iterations" => self.admm_iterations = num(key, value)?,
+            "admm.mu0" => self.mu0 = num(key, value)?,
+            "admm.mul" => self.mul = num(key, value)?,
+            "admm.eps" => self.eps = Some(num(key, value)?),
+            "network.nodes" => self.nodes = num(key, value)?,
+            "network.degree" => self.degree = num(key, value)?,
+            "network.delta" => self.delta = num(key, value)?,
+            "network.exact_consensus" => self.exact_consensus = num(key, value)?,
+            "network.alpha" => self.alpha = num(key, value)?,
+            "network.beta" => self.beta = num(key, value)?,
+            "runtime.threads" => self.threads = num(key, value)?,
+            "runtime.record_cost_curve" => self.record_cost_curve = num(key, value)?,
+            "runtime.backend" => {
+                self.backend = match value {
+                    "native" => BackendKind::Native,
+                    "pjrt" => BackendKind::Pjrt,
+                    other => {
+                        return Err(Error::Config(format!(
+                            "backend must be 'native' or 'pjrt', got '{other}'"
+                        )))
+                    }
+                }
+            }
+            "runtime.artifacts" => self.artifacts_dir = value.to_string(),
+            other => return Err(Error::Config(format!("unknown config key '{other}'"))),
+        }
+        Ok(())
+    }
+
+    /// The SSFN architecture implied by the dataset and model knobs.
+    pub fn architecture(&self) -> Result<SsfnArchitecture> {
+        let spec = lookup(&self.dataset)?;
+        let arch = SsfnArchitecture {
+            input_dim: spec.input_dim,
+            num_classes: spec.num_classes,
+            hidden: 2 * spec.num_classes + self.hidden_extra,
+            layers: self.layers,
+        };
+        arch.validate()?;
+        Ok(arch)
+    }
+
+    /// Trainer hyper-parameters.
+    pub fn hyper(&self) -> TrainHyper {
+        TrainHyper {
+            mu0: self.mu0,
+            mul: self.mul,
+            admm_iterations: self.admm_iterations,
+            eps: self.eps,
+        }
+    }
+
+    /// Decentralization options.
+    pub fn train_options(&self) -> Result<TrainOptions> {
+        let opts = TrainOptions {
+            nodes: self.nodes,
+            topology: Topology::Circular {
+                nodes: self.nodes,
+                degree: self.degree,
+            },
+            weight_rule: WeightRule::EqualNeighbor,
+            consensus: if self.exact_consensus {
+                ConsensusMode::Exact
+            } else {
+                ConsensusMode::Gossip { delta: self.delta }
+            },
+            latency: LatencyModel {
+                alpha: self.alpha,
+                beta: self.beta,
+            },
+            threads: self.threads,
+            record_cost_curve: self.record_cost_curve,
+        };
+        opts.validate()?;
+        Ok(opts)
+    }
+
+    /// Generate the configured dataset.
+    pub fn generate_task(&self) -> Result<ClassificationTask> {
+        lookup(&self.dataset)?.generator(self.seed).generate()
+    }
+
+    /// Padded per-shard sample count (what the PJRT artifacts are built
+    /// for): `ceil(J_train / M)`.
+    pub fn padded_shard_samples(&self) -> Result<usize> {
+        let spec = lookup(&self.dataset)?;
+        Ok(spec.train_samples.div_ceil(self.nodes))
+    }
+}
+
+/// Parse a TOML subset into a flat `section.key -> value` map.
+/// Values keep their raw text except strings, which are unquoted.
+pub fn parse_toml_subset(text: &str) -> Result<BTreeMap<String, String>> {
+    let mut map = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = match raw.find('#') {
+            // A '#' inside a quoted string would break this; the configs
+            // this crate reads never need one.
+            Some(pos) if !raw[..pos].contains('"') || raw[..pos].matches('"').count() % 2 == 0 => {
+                &raw[..pos]
+            }
+            _ => raw,
+        }
+        .trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or_else(|| {
+                Error::Config(format!("line {}: unterminated section", lineno + 1))
+            })?;
+            section = name.trim().to_string();
+            if section.is_empty() {
+                return Err(Error::Config(format!("line {}: empty section", lineno + 1)));
+            }
+            continue;
+        }
+        let (key, value) = line.split_once('=').ok_or_else(|| {
+            Error::Config(format!("line {}: expected 'key = value'", lineno + 1))
+        })?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(Error::Config(format!("line {}: empty key", lineno + 1)));
+        }
+        let mut value = value.trim().to_string();
+        if value.starts_with('"') {
+            if !(value.len() >= 2 && value.ends_with('"')) {
+                return Err(Error::Config(format!(
+                    "line {}: unterminated string",
+                    lineno + 1
+                )));
+            }
+            value = value[1..value.len() - 1].to_string();
+        }
+        let full_key = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        map.insert(full_key, value);
+    }
+    Ok(map)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_paper_scale() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.layers, 20);
+        assert_eq!(c.admm_iterations, 100);
+        assert_eq!(c.nodes, 20);
+        assert_eq!(c.hidden_extra, 1000);
+    }
+
+    #[test]
+    fn named_dataset_presets() {
+        let full = ExperimentConfig::named_dataset("mnist").unwrap();
+        assert_eq!(full.layers, 20);
+        let small = ExperimentConfig::named_dataset("mnist-small").unwrap();
+        assert!(small.layers < full.layers);
+        assert!(ExperimentConfig::named_dataset("bogus").is_err());
+    }
+
+    #[test]
+    fn architecture_derivation() {
+        let c = ExperimentConfig::named_dataset("quickstart").unwrap();
+        let a = c.architecture().unwrap();
+        assert_eq!(a.input_dim, 12);
+        assert_eq!(a.num_classes, 4);
+        assert_eq!(a.hidden, 2 * 4 + 100);
+        assert_eq!(a.layers, 5);
+    }
+
+    #[test]
+    fn toml_subset_parser() {
+        let text = r#"
+# comment
+[experiment]
+dataset = "quickstart"   # trailing comment
+seed = 99
+
+[network]
+degree = 3
+delta = 1e-7
+exact_consensus = true
+"#;
+        let map = parse_toml_subset(text).unwrap();
+        assert_eq!(map["experiment.dataset"], "quickstart");
+        assert_eq!(map["experiment.seed"], "99");
+        assert_eq!(map["network.delta"], "1e-7");
+
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.dataset, "quickstart");
+        assert_eq!(cfg.seed, 99);
+        assert_eq!(cfg.degree, 3);
+        assert!(cfg.exact_consensus);
+        assert_eq!(cfg.delta, 1e-7);
+    }
+
+    #[test]
+    fn parser_rejects_malformed() {
+        assert!(parse_toml_subset("[unclosed").is_err());
+        assert!(parse_toml_subset("[]").is_err());
+        assert!(parse_toml_subset("novalue").is_err());
+        assert!(parse_toml_subset("= 3").is_err());
+        assert!(parse_toml_subset("s = \"open").is_err());
+        assert!(ExperimentConfig::from_toml("[experiment]\ndataset = \"nope\"").is_err());
+        assert!(ExperimentConfig::from_toml("[x]\ny = 1").is_err());
+        assert!(ExperimentConfig::from_toml("[admm]\nmu0 = abc").is_err());
+        assert!(ExperimentConfig::from_toml("[runtime]\nbackend = \"gpu\"").is_err());
+    }
+
+    #[test]
+    fn options_and_task_build() {
+        let mut cfg = ExperimentConfig::named_dataset("quickstart").unwrap();
+        cfg.nodes = 5;
+        cfg.degree = 2;
+        let opts = cfg.train_options().unwrap();
+        assert_eq!(opts.nodes, 5);
+        let task = cfg.generate_task().unwrap();
+        assert_eq!(task.train.num_samples(), 200);
+        assert_eq!(cfg.padded_shard_samples().unwrap(), 40);
+        let h = cfg.hyper();
+        assert_eq!(h.admm_iterations, cfg.admm_iterations);
+    }
+}

@@ -1,0 +1,107 @@
+//! Scoped fan-out helper for per-node parallel phases.
+//!
+//! Each synchronous phase of the dSSFN protocol ("all nodes compute their
+//! O-update", "all nodes advance their features") is expressed as a
+//! closure applied to every node index; [`for_each_node`] stripes the
+//! node indices across at most `threads` OS threads and joins them — the
+//! barrier between phases falls out of the join. Results come back in
+//! node order; the first node error (lowest index) aborts the phase.
+
+use crate::Result;
+use std::sync::Mutex;
+
+/// Run `f(node)` for every node in `0..m` across up to `threads` worker
+/// threads. Deterministic: the work done per node is identical to the
+/// sequential loop (floating-point order within a node never changes).
+pub fn for_each_node<T, F>(m: usize, threads: usize, f: F) -> Result<Vec<T>>
+where
+    T: Send,
+    F: Fn(usize) -> Result<T> + Sync,
+{
+    let threads = threads.max(1).min(m.max(1));
+    if m == 0 {
+        return Ok(Vec::new());
+    }
+    if threads == 1 {
+        return (0..m).map(&f).collect();
+    }
+    let slots: Vec<Mutex<Option<Result<T>>>> = (0..m).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for w in 0..threads {
+            let f = &f;
+            let slots = &slots;
+            scope.spawn(move || {
+                let mut node = w;
+                while node < m {
+                    let r = f(node);
+                    *slots[node].lock().expect("slot poisoned") = Some(r);
+                    node += threads;
+                }
+            });
+        }
+    });
+    let mut out = Vec::with_capacity(m);
+    for slot in slots {
+        match slot.into_inner().expect("slot poisoned") {
+            Some(Ok(v)) => out.push(v),
+            Some(Err(e)) => return Err(e),
+            None => unreachable!("every node index is visited"),
+        }
+    }
+    Ok(out)
+}
+
+/// Default worker-thread count: physical parallelism minus one for the
+/// coordinator, at least 1.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get().saturating_sub(1).max(1))
+        .unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn visits_every_node_once_in_order() {
+        let counter = AtomicUsize::new(0);
+        let out = for_each_node(23, 4, |i| {
+            counter.fetch_add(1, Ordering::Relaxed);
+            Ok(i * 2)
+        })
+        .unwrap();
+        assert_eq!(counter.load(Ordering::Relaxed), 23);
+        assert_eq!(out, (0..23).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sequential_fallback_matches() {
+        let par = for_each_node(9, 3, |i| Ok(i + 100)).unwrap();
+        let seq = for_each_node(9, 1, |i| Ok(i + 100)).unwrap();
+        assert_eq!(par, seq);
+    }
+
+    #[test]
+    fn error_propagates() {
+        let r: Result<Vec<usize>> = for_each_node(10, 4, |i| {
+            if i == 7 {
+                Err(crate::Error::Config("boom".into()))
+            } else {
+                Ok(i)
+            }
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn zero_nodes_and_thread_clamping() {
+        let empty: Vec<usize> = for_each_node(0, 8, |i| Ok(i)).unwrap();
+        assert!(empty.is_empty());
+        // threads > m must not deadlock or panic.
+        let out = for_each_node(2, 64, |i| Ok(i)).unwrap();
+        assert_eq!(out, vec![0, 1]);
+        assert!(default_threads() >= 1);
+    }
+}

@@ -1,0 +1,153 @@
+//! Dataset substrate: synthetic classification tasks shaped like the
+//! paper's Table I, plus sharding for the decentralized setting.
+//!
+//! The paper evaluates on Vowel, Satimage, Caltech101 (LC-KSVD features),
+//! Letter, NORB and MNIST. Those files are an external data gate, so per
+//! the substitution rule we generate **seeded Gaussian-mixture class
+//! clouds with identical sample counts and dimensions** (see
+//! `DESIGN.md §Substitutions`). Every dSSFN claim under test —
+//! centralized equivalence, layer-wise cost monotonicity, ADMM
+//! convergence, communication/time trade-offs — is invariant to the
+//! specific data distribution; only the absolute accuracy numbers move.
+//!
+//! [`registry`] holds full-size Table-I specs plus `*-small` variants
+//! used by tests and default bench runs (full-size runs are gated behind
+//! `--full` in the bench harness).
+
+mod registry;
+mod shard;
+mod synth;
+
+pub use registry::{dataset_names, lookup, table1_rows, DatasetSpec};
+pub use shard::{shard_uniform, shard_weighted};
+pub use synth::SynthClassification;
+
+use crate::linalg::{one_hot, Matrix};
+use crate::Result;
+
+/// A labelled sample set in the paper's column-major convention:
+/// `x` is `P×J` (one sample per column), `t` is the `Q×J` one-hot target.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// Input matrix, `P×J`.
+    pub x: Matrix,
+    /// One-hot targets, `Q×J`.
+    pub t: Matrix,
+    /// Integer class labels, length `J`.
+    pub labels: Vec<usize>,
+    /// Number of classes.
+    pub num_classes: usize,
+}
+
+impl Dataset {
+    /// Build from inputs and integer labels.
+    pub fn new(x: Matrix, labels: Vec<usize>, num_classes: usize) -> Result<Self> {
+        if x.cols() != labels.len() {
+            return Err(crate::Error::Data(format!(
+                "{} samples but {} labels",
+                x.cols(),
+                labels.len()
+            )));
+        }
+        let t = one_hot(&labels, num_classes)?;
+        Ok(Self {
+            x,
+            t,
+            labels,
+            num_classes,
+        })
+    }
+
+    /// Number of samples `J`.
+    pub fn num_samples(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// Input dimension `P`.
+    pub fn input_dim(&self) -> usize {
+        self.x.rows()
+    }
+
+    /// Normalize every sample (column) to unit ℓ2 norm — the SSFN
+    /// preprocessing convention from ref. [1] of the paper.
+    pub fn normalize_columns(&mut self) {
+        let (p, j) = self.x.shape();
+        for c in 0..j {
+            let mut norm = 0.0;
+            for r in 0..p {
+                let v = self.x.get(r, c);
+                norm += v * v;
+            }
+            let norm = norm.sqrt();
+            if norm > 0.0 {
+                for r in 0..p {
+                    let v = self.x.get(r, c);
+                    self.x.set(r, c, v / norm);
+                }
+            }
+        }
+    }
+
+    /// Per-class sample counts (diagnostics, shard-balance tests).
+    pub fn class_histogram(&self) -> Vec<usize> {
+        let mut h = vec![0usize; self.num_classes];
+        for &l in &self.labels {
+            h[l] += 1;
+        }
+        h
+    }
+}
+
+/// A train/test task pair.
+#[derive(Debug, Clone)]
+pub struct ClassificationTask {
+    /// Human-readable dataset name.
+    pub name: String,
+    /// Training split.
+    pub train: Dataset,
+    /// Test split.
+    pub test: Dataset,
+}
+
+impl ClassificationTask {
+    /// Input dimension `P`.
+    pub fn input_dim(&self) -> usize {
+        self.train.input_dim()
+    }
+
+    /// Number of classes `Q`.
+    pub fn num_classes(&self) -> usize {
+        self.train.num_classes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_construction_validates() {
+        let x = Matrix::zeros(3, 4);
+        assert!(Dataset::new(x.clone(), vec![0, 1], 2).is_err());
+        let d = Dataset::new(x, vec![0, 1, 1, 0], 2).unwrap();
+        assert_eq!(d.num_samples(), 4);
+        assert_eq!(d.input_dim(), 3);
+        assert_eq!(d.t.shape(), (2, 4));
+        assert_eq!(d.class_histogram(), vec![2, 2]);
+    }
+
+    #[test]
+    fn normalize_columns_unit_norm() {
+        let x = Matrix::from_rows(&[vec![3.0, 0.0, 0.0], vec![4.0, 2.0, 0.0]]).unwrap();
+        let mut d = Dataset::new(x, vec![0, 1, 0], 2).unwrap();
+        d.normalize_columns();
+        // col 0: (3,4)/5
+        assert!((d.x.get(0, 0) - 0.6).abs() < 1e-12);
+        assert!((d.x.get(1, 0) - 0.8).abs() < 1e-12);
+        // col 1: (0,2)→(0,1)
+        assert!((d.x.get(1, 1) - 1.0).abs() < 1e-12);
+        // zero column untouched (no NaN)
+        assert_eq!(d.x.get(0, 2), 0.0);
+        assert!(!d.x.get(1, 2).is_nan());
+    }
+}

@@ -1,0 +1,148 @@
+//! Registry of dataset specifications.
+//!
+//! Full-size entries mirror the paper's **Table I** exactly
+//! (`J_train`, `J_test`, `P`, `Q`). Each also has a `-small` variant
+//! (samples and very large feature dims scaled down) so that the test
+//! suite and default bench runs finish in seconds; the bench harness
+//! accepts `--full` to run the Table-I shapes.
+
+use super::synth::SynthClassification;
+use crate::{Error, Result};
+
+/// A named dataset specification (Table-I row + generator knobs).
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    /// Registry key, e.g. `"mnist"` or `"mnist-small"`.
+    pub key: &'static str,
+    /// Table-I training-set size.
+    pub train_samples: usize,
+    /// Table-I test-set size.
+    pub test_samples: usize,
+    /// Input dimension `P`.
+    pub input_dim: usize,
+    /// Classes `Q`.
+    pub num_classes: usize,
+    /// Class separation for the synthetic substitute.
+    pub class_sep: f64,
+    /// Noise level for the synthetic substitute.
+    pub noise: f64,
+}
+
+impl DatasetSpec {
+    /// Instantiate the generator for this spec with the given seed.
+    pub fn generator(&self, seed: u64) -> SynthClassification {
+        let mut g = SynthClassification::with_shape(
+            self.key,
+            self.input_dim,
+            self.num_classes,
+            self.train_samples,
+            self.test_samples,
+        );
+        g.class_sep = self.class_sep;
+        g.noise = self.noise;
+        g.seed = seed;
+        g
+    }
+}
+
+/// Full-size Table-I rows plus `-small` variants.
+const REGISTRY: &[DatasetSpec] = &[
+    // ---- Table I (exact shapes from the paper) ----
+    DatasetSpec { key: "vowel",      train_samples: 528,    test_samples: 462,    input_dim: 10,   num_classes: 11,  class_sep: 0.95, noise: 1.0 },
+    DatasetSpec { key: "satimage",   train_samples: 4435,   test_samples: 2000,   input_dim: 36,   num_classes: 6,   class_sep: 0.78, noise: 1.0 },
+    DatasetSpec { key: "caltech101", train_samples: 6000,   test_samples: 3000,   input_dim: 3000, num_classes: 102, class_sep: 0.72, noise: 1.0 },
+    DatasetSpec { key: "letter",     train_samples: 13333,  test_samples: 6667,   input_dim: 16,   num_classes: 26,  class_sep: 1.3, noise: 1.0 },
+    DatasetSpec { key: "norb",       train_samples: 24300,  test_samples: 24300,  input_dim: 2048, num_classes: 5,   class_sep: 0.58, noise: 1.0 },
+    DatasetSpec { key: "mnist",      train_samples: 60000,  test_samples: 10000,  input_dim: 784,  num_classes: 10,  class_sep: 0.8, noise: 1.0 },
+    // ---- reduced variants for tests / default benches ----
+    DatasetSpec { key: "vowel-small",      train_samples: 264,  test_samples: 231,  input_dim: 10,  num_classes: 11, class_sep: 0.95, noise: 1.0 },
+    DatasetSpec { key: "satimage-small",   train_samples: 600,  test_samples: 300,  input_dim: 36,  num_classes: 6,  class_sep: 0.78, noise: 1.0 },
+    DatasetSpec { key: "caltech101-small", train_samples: 2040, test_samples: 1020, input_dim: 128, num_classes: 102, class_sep: 0.72, noise: 1.0 },
+    DatasetSpec { key: "letter-small",     train_samples: 1000, test_samples: 500,  input_dim: 16,  num_classes: 26, class_sep: 1.3, noise: 1.0 },
+    DatasetSpec { key: "norb-small",       train_samples: 1000, test_samples: 1000, input_dim: 96,  num_classes: 5,  class_sep: 0.58, noise: 1.0 },
+    DatasetSpec { key: "mnist-small",      train_samples: 2000, test_samples: 1000, input_dim: 64,  num_classes: 10, class_sep: 0.8, noise: 1.0 },
+    // ---- tiny task for examples/quickstart and unit tests ----
+    DatasetSpec { key: "quickstart", train_samples: 200, test_samples: 100, input_dim: 12, num_classes: 4, class_sep: 1.2, noise: 0.8 },
+];
+
+/// Look up a spec by key.
+pub fn lookup(key: &str) -> Result<&'static DatasetSpec> {
+    REGISTRY
+        .iter()
+        .find(|s| s.key == key)
+        .ok_or_else(|| Error::Config(format!("unknown dataset '{key}' (see `dssfn datasets`)")))
+}
+
+/// All registered dataset keys.
+pub fn dataset_names() -> Vec<&'static str> {
+    REGISTRY.iter().map(|s| s.key).collect()
+}
+
+/// The six full-size Table-I rows in paper order (for `examples/datasets_table`).
+pub fn table1_rows() -> Vec<&'static DatasetSpec> {
+    ["vowel", "satimage", "caltech101", "letter", "norb", "mnist"]
+        .iter()
+        .map(|k| lookup(k).expect("registry is static"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_shapes_match_paper() {
+        // (train, test, P, Q) straight out of Table I.
+        let expect = [
+            ("vowel", 528, 462, 10, 11),
+            ("satimage", 4435, 2000, 36, 6),
+            ("caltech101", 6000, 3000, 3000, 102),
+            ("letter", 13333, 6667, 16, 26),
+            ("norb", 24300, 24300, 2048, 5),
+            ("mnist", 60000, 10000, 784, 10),
+        ];
+        for (key, tr, te, p, q) in expect {
+            let s = lookup(key).unwrap();
+            assert_eq!(s.train_samples, tr, "{key}");
+            assert_eq!(s.test_samples, te, "{key}");
+            assert_eq!(s.input_dim, p, "{key}");
+            assert_eq!(s.num_classes, q, "{key}");
+        }
+    }
+
+    #[test]
+    fn every_entry_has_small_or_is_small() {
+        for row in table1_rows() {
+            let small_key = format!("{}-small", row.key);
+            assert!(
+                lookup(&small_key).is_ok(),
+                "missing small variant for {}",
+                row.key
+            );
+        }
+    }
+
+    #[test]
+    fn unknown_key_is_config_error() {
+        assert!(matches!(lookup("nope"), Err(Error::Config(_))));
+    }
+
+    #[test]
+    fn generator_applies_spec() {
+        let g = lookup("quickstart").unwrap().generator(7);
+        assert_eq!(g.input_dim, 12);
+        assert_eq!(g.num_classes, 4);
+        assert_eq!(g.seed, 7);
+        let task = g.generate().unwrap();
+        assert_eq!(task.train.num_samples(), 200);
+    }
+
+    #[test]
+    fn names_unique() {
+        let names = dataset_names();
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(names.len(), dedup.len());
+    }
+}

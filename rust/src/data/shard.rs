@@ -1,0 +1,153 @@
+//! Sharding a training set across `M` workers.
+//!
+//! The paper "uniformly divide[s] the training dataset between the nodes";
+//! [`shard_uniform`] reproduces that. [`shard_weighted`] supports uneven
+//! shard sizes (used by ablation benches to show centralized equivalence
+//! is *not* sensitive to balanced shards — the global ADMM objective
+//! already weights every sample once, eq. (10)).
+
+use super::Dataset;
+use crate::linalg::Matrix;
+use crate::{Error, Result};
+
+/// Split `data` into `m` near-equal contiguous shards. Shard sizes differ
+/// by at most one sample; samples are assumed pre-shuffled (the synthetic
+/// generator shuffles labels at generation time).
+pub fn shard_uniform(data: &Dataset, m: usize) -> Result<Vec<Dataset>> {
+    if m == 0 {
+        return Err(Error::Data("cannot shard across 0 nodes".into()));
+    }
+    let j = data.num_samples();
+    if j < m {
+        return Err(Error::Data(format!("{j} samples cannot fill {m} shards")));
+    }
+    let weights = vec![1.0; m];
+    shard_weighted(data, &weights)
+}
+
+/// Split `data` into shards proportional to `weights` (each shard gets at
+/// least one sample).
+pub fn shard_weighted(data: &Dataset, weights: &[f64]) -> Result<Vec<Dataset>> {
+    let m = weights.len();
+    if m == 0 {
+        return Err(Error::Data("empty weight vector".into()));
+    }
+    if weights.iter().any(|&w| w <= 0.0) {
+        return Err(Error::Data("shard weights must be positive".into()));
+    }
+    let j = data.num_samples();
+    if j < m {
+        return Err(Error::Data(format!("{j} samples cannot fill {m} shards")));
+    }
+    let total: f64 = weights.iter().sum();
+    // Largest-remainder allocation with a minimum of 1 sample per shard.
+    let mut sizes: Vec<usize> = weights
+        .iter()
+        .map(|w| ((w / total) * j as f64).floor() as usize)
+        .collect();
+    for s in sizes.iter_mut() {
+        if *s == 0 {
+            *s = 1;
+        }
+    }
+    let mut assigned: usize = sizes.iter().sum();
+    // Fix up rounding drift deterministically.
+    let mut idx = 0;
+    while assigned < j {
+        sizes[idx % m] += 1;
+        assigned += 1;
+        idx += 1;
+    }
+    while assigned > j {
+        let k = sizes
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &s)| s)
+            .map(|(i, _)| i)
+            .unwrap();
+        if sizes[k] <= 1 {
+            return Err(Error::Data("cannot satisfy 1-sample minimum".into()));
+        }
+        sizes[k] -= 1;
+        assigned -= 1;
+    }
+
+    let p = data.input_dim();
+    let mut shards = Vec::with_capacity(m);
+    let mut start = 0usize;
+    for &sz in &sizes {
+        let end = start + sz;
+        let mut x = Matrix::zeros(p, sz);
+        for (jj, src) in (start..end).enumerate() {
+            for r in 0..p {
+                x.set(r, jj, data.x.get(r, src));
+            }
+        }
+        let labels = data.labels[start..end].to_vec();
+        shards.push(Dataset::new(x, labels, data.num_classes)?);
+        start = end;
+    }
+    Ok(shards)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthClassification;
+
+    fn task() -> Dataset {
+        SynthClassification::with_shape("t", 6, 3, 103, 10)
+            .generate()
+            .unwrap()
+            .train
+    }
+
+    #[test]
+    fn uniform_shards_partition_everything() {
+        let d = task();
+        let shards = shard_uniform(&d, 7).unwrap();
+        assert_eq!(shards.len(), 7);
+        let total: usize = shards.iter().map(|s| s.num_samples()).sum();
+        assert_eq!(total, 103);
+        // Sizes within 1 of each other.
+        let sizes: Vec<usize> = shards.iter().map(|s| s.num_samples()).collect();
+        let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+        assert!(max - min <= 1, "sizes {sizes:?}");
+        // Samples preserved in order: shard0 col0 == dataset col0.
+        for r in 0..6 {
+            assert_eq!(shards[0].x.get(r, 0), d.x.get(r, 0));
+        }
+        assert_eq!(shards[0].labels[0], d.labels[0]);
+    }
+
+    #[test]
+    fn weighted_shards_respect_proportions() {
+        let d = task();
+        let shards = shard_weighted(&d, &[3.0, 1.0]).unwrap();
+        assert_eq!(shards.len(), 2);
+        let s0 = shards[0].num_samples() as f64;
+        let s1 = shards[1].num_samples() as f64;
+        assert_eq!(s0 + s1, 103.0);
+        assert!((s0 / s1 - 3.0).abs() < 0.2, "ratio {}", s0 / s1);
+    }
+
+    #[test]
+    fn labels_travel_with_samples() {
+        let d = task();
+        let shards = shard_uniform(&d, 4).unwrap();
+        let mut rebuilt: Vec<usize> = Vec::new();
+        for s in &shards {
+            rebuilt.extend_from_slice(&s.labels);
+        }
+        assert_eq!(rebuilt, d.labels);
+    }
+
+    #[test]
+    fn error_cases() {
+        let d = task();
+        assert!(shard_uniform(&d, 0).is_err());
+        assert!(shard_uniform(&d, 104).is_err());
+        assert!(shard_weighted(&d, &[]).is_err());
+        assert!(shard_weighted(&d, &[1.0, -1.0]).is_err());
+    }
+}

@@ -1,0 +1,87 @@
+//! # dssfn — Decentralized SSFN with Centralized Equivalence
+//!
+//! A production-grade reproduction of *"A Low Complexity Decentralized
+//! Neural Net with Centralized Equivalence using Layer-wise Learning"*
+//! (Liang, Javid, Skoglund, Chatterjee; KTH 2020).
+//!
+//! The library trains a Self-Size-estimating Feed-forward Network (SSFN)
+//! across `M` workers that each hold a private shard of the training set.
+//! There is **no master node** and **no data sharing**: the only quantity
+//! that crosses the (simulated) network is the per-layer output matrix
+//! `O_l ∈ R^{Q×n}` plus ADMM duals, averaged by gossip over a
+//! doubly-stochastic mixing matrix. The result is *exactly* the model a
+//! centralized solver with all the data would produce (up to ADMM /
+//! consensus tolerance) — "centralized equivalence".
+//!
+//! ## Architecture (three layers, Python never on the hot path)
+//!
+//! * **L3 (this crate)** — the decentralized training runtime: worker
+//!   threads, synchronous gossip rounds, the consensus-ADMM loop,
+//!   layer-wise progression, metrics, config and CLI.
+//! * **L2 (`python/compile/model.py`)** — the JAX compute graph of every
+//!   dSSFN step, lowered once by `make artifacts` into HLO text.
+//! * **L1 (`python/compile/kernels/`)** — Pallas kernels (fused
+//!   matmul+ReLU layer forward, fused Gram accumulation, fused ADMM
+//!   O-update) called from the L2 graph.
+//! * **Runtime (`runtime`)** — loads `artifacts/*.hlo.txt` via the PJRT
+//!   CPU client (`xla` crate) and executes them from the L3 hot path. A
+//!   bit-portable native `f64` path ([`linalg`]) doubles as the oracle.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use dssfn::config::ExperimentConfig;
+//! use dssfn::coordinator::DecentralizedTrainer;
+//!
+//! let cfg = ExperimentConfig::named_dataset("satimage-small").unwrap();
+//! let task = cfg.generate_task().unwrap();
+//! let trainer = DecentralizedTrainer::from_config(&cfg).unwrap();
+//! let (_model, report) = trainer.train_task(&task).unwrap();
+//! println!("test accuracy = {:.2}%", 100.0 * report.test_accuracy);
+//! ```
+
+pub mod admm;
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod metrics;
+pub mod network;
+pub mod runtime;
+pub mod ssfn;
+pub mod testing;
+pub mod util;
+
+pub use config::ExperimentConfig;
+pub use coordinator::DecentralizedTrainer;
+pub use ssfn::CentralizedTrainer;
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Dimension mismatch in a linear-algebra operation.
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+    /// A matrix factorization failed (e.g. non-SPD input to Cholesky).
+    #[error("numerical failure: {0}")]
+    Numerical(String),
+    /// Invalid configuration value.
+    #[error("config error: {0}")]
+    Config(String),
+    /// Problem with the communication-network model.
+    #[error("network error: {0}")]
+    Network(String),
+    /// PJRT runtime failure (artifact missing, compile/execute error).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    /// Dataset construction / sharding failure.
+    #[error("data error: {0}")]
+    Data(String),
+    /// I/O error.
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

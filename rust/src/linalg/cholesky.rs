@@ -1,0 +1,211 @@
+//! Cholesky factorization and SPD solves.
+//!
+//! The ADMM O-update solves `O · (Y Yᵀ + μ⁻¹ I) = (T Yᵀ + μ⁻¹(Z − Λ))`
+//! where the system matrix is symmetric positive-definite and **constant
+//! across all `K` ADMM iterations of a layer**. We therefore factor once
+//! per layer ([`CholeskyFactor::new`]) and reuse the factor in every
+//! iteration ([`CholeskyFactor::solve_xa`]), turning the inner loop into
+//! pure GEMM + triangular solves.
+
+use super::Matrix;
+use crate::{Error, Result};
+
+/// Lower-triangular Cholesky factor `L` with `A = L·Lᵀ`.
+#[derive(Debug, Clone)]
+pub struct CholeskyFactor {
+    n: usize,
+    /// Row-major lower-triangular factor (upper part zeroed).
+    l: Vec<f64>,
+}
+
+impl CholeskyFactor {
+    /// Factor an SPD matrix. Fails with [`Error::Numerical`] if a pivot is
+    /// not strictly positive (matrix not SPD, or catastrophically
+    /// ill-conditioned).
+    pub fn new(a: &Matrix) -> Result<Self> {
+        if a.rows() != a.cols() {
+            return Err(Error::Shape(format!(
+                "cholesky of non-square {}x{}",
+                a.rows(),
+                a.cols()
+            )));
+        }
+        let n = a.rows();
+        let src = a.as_slice();
+        let mut l = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = src[i * n + j];
+                // s -= Σ_k<j L[i,k]·L[j,k]
+                s -= super::gemm::dot(&l[i * n..i * n + j], &l[j * n..j * n + j]);
+                if i == j {
+                    if s <= 0.0 {
+                        return Err(Error::Numerical(format!(
+                            "cholesky: pivot {s:.3e} at row {i} (matrix not SPD)"
+                        )));
+                    }
+                    l[i * n + i] = s.sqrt();
+                } else {
+                    l[i * n + j] = s / l[j * n + j];
+                }
+            }
+        }
+        Ok(Self { n, l })
+    }
+
+    /// Order of the factored matrix.
+    pub fn order(&self) -> usize {
+        self.n
+    }
+
+    /// Solve `A·x = b` for a single right-hand side (in place).
+    pub fn solve_vec(&self, b: &mut [f64]) -> Result<()> {
+        if b.len() != self.n {
+            return Err(Error::Shape(format!(
+                "solve_vec: rhs len {} != order {}",
+                b.len(),
+                self.n
+            )));
+        }
+        let n = self.n;
+        let l = &self.l;
+        // Forward: L·y = b
+        for i in 0..n {
+            let s = super::gemm::dot(&l[i * n..i * n + i], &b[..i]);
+            b[i] = (b[i] - s) / l[i * n + i];
+        }
+        // Backward: Lᵀ·x = y
+        for i in (0..n).rev() {
+            let mut s = b[i];
+            for k in i + 1..n {
+                s -= l[k * n + i] * b[k];
+            }
+            b[i] = s / l[i * n + i];
+        }
+        Ok(())
+    }
+
+    /// Solve `X·A = B` (i.e. `X = B·A⁻¹`) row-by-row: each row of `B` is an
+    /// independent RHS of `A·xᵀ = bᵀ` because `A` is symmetric. This is the
+    /// exact shape of the ADMM O-update (`B` is `Q×n`, `A` is `n×n`).
+    pub fn solve_xa(&self, b: &Matrix) -> Result<Matrix> {
+        if b.cols() != self.n {
+            return Err(Error::Shape(format!(
+                "solve_xa: B has {} cols, factor order {}",
+                b.cols(),
+                self.n
+            )));
+        }
+        let mut out = b.clone();
+        for r in 0..out.rows() {
+            self.solve_vec(out.row_mut(r))?;
+        }
+        Ok(out)
+    }
+
+    /// Dense inverse `A⁻¹` (the hoisted operand of the ADMM inner loop
+    /// and the PJRT O-update artifact). `A` is symmetric, so solving
+    /// `X·A = I` row-by-row yields the inverse with contiguous row
+    /// access.
+    pub fn inverse(&self) -> Matrix {
+        self.solve_xa(&Matrix::identity(self.n))
+            .expect("identity matches factor order")
+    }
+
+    /// log-determinant of `A` (sum of log of squared diagonal of `L`).
+    pub fn log_det(&self) -> f64 {
+        (0..self.n)
+            .map(|i| self.l[i * self.n + i].ln())
+            .sum::<f64>()
+            * 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{Rng, Xoshiro256StarStar};
+
+    /// Random SPD matrix A = GᵀG + n·I.
+    fn rand_spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Xoshiro256StarStar::seed_from_u64(seed);
+        let g = Matrix::from_fn(n, n, |_, _| rng.uniform(-1.0, 1.0));
+        let mut a = g.gram();
+        a.add_diag(n as f64).unwrap();
+        a
+    }
+
+    #[test]
+    fn factor_reconstructs_matrix() {
+        let a = rand_spd(17, 5);
+        let f = a.cholesky().unwrap();
+        // Reconstruct L·Lᵀ.
+        let l = Matrix::from_vec(17, 17, f.l.clone()).unwrap();
+        let rec = l.matmul_transb(&l).unwrap();
+        assert!(rec.max_abs_diff(&a) < 1e-9);
+        assert_eq!(f.order(), 17);
+    }
+
+    #[test]
+    fn rejects_non_spd_and_non_square() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]).unwrap(); // indefinite
+        assert!(matches!(a.cholesky(), Err(Error::Numerical(_))));
+        assert!(Matrix::zeros(2, 3).cholesky().is_err());
+    }
+
+    #[test]
+    fn solve_vec_residual_small() {
+        let a = rand_spd(31, 6);
+        let f = a.cholesky().unwrap();
+        let mut rng = Xoshiro256StarStar::seed_from_u64(7);
+        let x_true: Vec<f64> = (0..31).map(|_| rng.uniform(-2.0, 2.0)).collect();
+        // b = A·x_true
+        let mut b = vec![0.0; 31];
+        for i in 0..31 {
+            b[i] = super::super::gemm::dot(a.row(i), &x_true);
+        }
+        f.solve_vec(&mut b).unwrap();
+        for (xi, ti) in b.iter().zip(&x_true) {
+            assert!((xi - ti).abs() < 1e-8);
+        }
+        assert!(f.solve_vec(&mut [0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn solve_xa_matches_inverse_product() {
+        let a = rand_spd(12, 8);
+        let f = a.cholesky().unwrap();
+        let mut rng = Xoshiro256StarStar::seed_from_u64(9);
+        let b = Matrix::from_fn(5, 12, |_, _| rng.uniform(-1.0, 1.0));
+        let x = f.solve_xa(&b).unwrap();
+        // Check X·A = B.
+        let xa = x.matmul(&a).unwrap();
+        assert!(xa.max_abs_diff(&b) < 1e-8);
+        // And against the explicit inverse.
+        let via_inv = b.matmul(&f.inverse()).unwrap();
+        assert!(x.max_abs_diff(&via_inv) < 1e-8);
+        assert!(f.solve_xa(&Matrix::zeros(2, 5)).is_err());
+    }
+
+    #[test]
+    fn inverse_is_two_sided() {
+        let a = rand_spd(9, 10);
+        let inv = a.cholesky().unwrap().inverse();
+        let left = inv.matmul(&a).unwrap();
+        let right = a.matmul(&inv).unwrap();
+        let eye = Matrix::identity(9);
+        assert!(left.max_abs_diff(&eye) < 1e-9);
+        assert!(right.max_abs_diff(&eye) < 1e-9);
+    }
+
+    #[test]
+    fn log_det_matches_diagonal_matrix() {
+        let mut a = Matrix::zeros(4, 4);
+        for (i, v) in [2.0, 3.0, 4.0, 5.0].iter().enumerate() {
+            a.set(i, i, *v);
+        }
+        let f = a.cholesky().unwrap();
+        let expect = (2.0f64 * 3.0 * 4.0 * 5.0).ln();
+        assert!((f.log_det() - expect).abs() < 1e-12);
+    }
+}

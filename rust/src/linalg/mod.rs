@@ -1,0 +1,542 @@
+//! Dense linear-algebra substrate (no external BLAS).
+//!
+//! Everything dSSFN computes is dense `f64` matrix algebra over modest
+//! shapes (`n ≤ ~3000`, `Q ≤ ~102`, shard sizes in the thousands), so a
+//! compact cache-blocked implementation is both sufficient and fully
+//! portable. This module is used by
+//!
+//! * the **native reference path** (oracle for the PJRT artifacts),
+//! * the **mixing-matrix algebra** of the network simulator,
+//! * the **DGD baseline**, and
+//! * the centralized SSFN trainer.
+//!
+//! Layout is row-major. The hot kernels live in [`gemm`] (packed/blocked
+//! `i-k-j` loops that vectorize well) and [`cholesky`] (SPD factorization
+//! used to hoist the ADMM Gram inverse out of the inner loop).
+
+mod cholesky;
+mod gemm;
+mod ops;
+
+pub use cholesky::CholeskyFactor;
+pub use gemm::dot;
+
+use crate::{Error, Result};
+
+/// Dense row-major `f64` matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    /// Zero matrix of the given shape.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    /// Identity matrix of order `n`.
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a generator function `(row, col) -> value`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::Shape(format!(
+                "from_vec: buffer has {} elements, expected {rows}x{cols}={}",
+                data.len(),
+                rows * cols
+            )));
+        }
+        Ok(Self { rows, cols, data })
+    }
+
+    /// Build from nested rows (for tests / small literals).
+    pub fn from_rows(rows: &[Vec<f64>]) -> Result<Self> {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        if rows.iter().any(|row| row.len() != c) {
+            return Err(Error::Shape("from_rows: ragged input".into()));
+        }
+        Ok(Self {
+            rows: r,
+            cols: c,
+            data: rows.iter().flatten().copied().collect(),
+        })
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// `(rows, cols)`.
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Borrow the raw row-major buffer.
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Mutably borrow the raw row-major buffer.
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Element accessor.
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    /// Element setter.
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Borrow row `r` as a slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Mutably borrow row `r`.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Copy column `c` out into a vector.
+    pub fn col_to_vec(&self, c: usize) -> Vec<f64> {
+        (0..self.rows).map(|r| self.get(r, c)).collect()
+    }
+
+    /// Transpose (allocates).
+    pub fn transpose(&self) -> Self {
+        let mut t = Self::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on big matrices.
+        const B: usize = 32;
+        for rb in (0..self.rows).step_by(B) {
+            for cb in (0..self.cols).step_by(B) {
+                for r in rb..(rb + B).min(self.rows) {
+                    for c in cb..(cb + B).min(self.cols) {
+                        t.data[c * self.rows + r] = self.data[r * self.cols + c];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// `self @ other`.
+    pub fn matmul(&self, other: &Self) -> Result<Self> {
+        if self.cols != other.rows {
+            return Err(Error::Shape(format!(
+                "matmul: {}x{} @ {}x{}",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        let mut out = Self::zeros(self.rows, other.cols);
+        gemm::gemm_nn(
+            self.rows, self.cols, other.cols,
+            &self.data, &other.data, &mut out.data,
+        );
+        Ok(out)
+    }
+
+    /// `self @ otherᵀ` without materializing the transpose.
+    pub fn matmul_transb(&self, other: &Self) -> Result<Self> {
+        if self.cols != other.cols {
+            return Err(Error::Shape(format!(
+                "matmul_transb: {}x{} @ ({}x{})ᵀ",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        let mut out = Self::zeros(self.rows, other.rows);
+        gemm::gemm_nt(
+            self.rows, self.cols, other.rows,
+            &self.data, &other.data, &mut out.data,
+        );
+        Ok(out)
+    }
+
+    /// Gram matrix `self @ selfᵀ` (symmetric fast path).
+    pub fn gram(&self) -> Self {
+        let mut out = Self::zeros(self.rows, self.rows);
+        gemm::syrk(self.rows, self.cols, &self.data, &mut out.data);
+        out
+    }
+
+    /// Element-wise in-place: `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f64, other: &Self) -> Result<()> {
+        if self.shape() != other.shape() {
+            return Err(Error::Shape(format!(
+                "axpy: {:?} += {:?}",
+                self.shape(),
+                other.shape()
+            )));
+        }
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+        Ok(())
+    }
+
+    /// Owned element-wise sum.
+    pub fn add(&self, other: &Self) -> Result<Self> {
+        let mut out = self.clone();
+        out.axpy(1.0, other)?;
+        Ok(out)
+    }
+
+    /// Owned element-wise difference.
+    pub fn sub(&self, other: &Self) -> Result<Self> {
+        let mut out = self.clone();
+        out.axpy(-1.0, other)?;
+        Ok(out)
+    }
+
+    /// In-place scaling.
+    pub fn scale_inplace(&mut self, alpha: f64) {
+        for v in &mut self.data {
+            *v *= alpha;
+        }
+    }
+
+    /// Owned scaling.
+    pub fn scale(&self, alpha: f64) -> Self {
+        let mut out = self.clone();
+        out.scale_inplace(alpha);
+        out
+    }
+
+    /// Set all entries to zero (buffer reuse in hot loops).
+    pub fn fill_zero(&mut self) {
+        self.data.iter_mut().for_each(|v| *v = 0.0);
+    }
+
+    /// Copy `other` into `self` (shapes must match) without reallocating.
+    pub fn copy_from(&mut self, other: &Self) -> Result<()> {
+        if self.shape() != other.shape() {
+            return Err(Error::Shape(format!(
+                "copy_from: {:?} <- {:?}",
+                self.shape(),
+                other.shape()
+            )));
+        }
+        self.data.copy_from_slice(&other.data);
+        Ok(())
+    }
+
+    /// Add `alpha` to the diagonal in place (`self += alpha * I`).
+    pub fn add_diag(&mut self, alpha: f64) -> Result<()> {
+        if self.rows != self.cols {
+            return Err(Error::Shape(format!(
+                "add_diag on non-square {}x{}",
+                self.rows, self.cols
+            )));
+        }
+        for i in 0..self.rows {
+            self.data[i * self.cols + i] += alpha;
+        }
+        Ok(())
+    }
+
+    /// Frobenius norm.
+    pub fn frobenius_norm(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Squared Frobenius norm.
+    pub fn frobenius_norm_sq(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>()
+    }
+
+    /// Projection onto the Frobenius ball of radius `eps` — the paper's
+    /// `P_ε(Z)`: rescale iff `‖Z‖_F > eps`.
+    pub fn project_frobenius(&mut self, eps: f64) {
+        let norm = self.frobenius_norm();
+        if norm > eps && norm > 0.0 {
+            self.scale_inplace(eps / norm);
+        }
+    }
+
+    /// Maximum absolute element-wise difference (∞-norm of the difference).
+    pub fn max_abs_diff(&self, other: &Self) -> f64 {
+        debug_assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Element-wise ReLU in place.
+    pub fn relu_inplace(&mut self) {
+        for v in &mut self.data {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+
+    /// Horizontal concatenation `[self | other]`.
+    pub fn hcat(&self, other: &Self) -> Result<Self> {
+        if self.rows != other.rows {
+            return Err(Error::Shape(format!(
+                "hcat: {} vs {} rows",
+                self.rows, other.rows
+            )));
+        }
+        let mut out = Self::zeros(self.rows, self.cols + other.cols);
+        for r in 0..self.rows {
+            out.row_mut(r)[..self.cols].copy_from_slice(self.row(r));
+            out.row_mut(r)[self.cols..].copy_from_slice(other.row(r));
+        }
+        Ok(out)
+    }
+
+    /// Vertical concatenation `[self ; other]`.
+    pub fn vcat(&self, other: &Self) -> Result<Self> {
+        if self.cols != other.cols {
+            return Err(Error::Shape(format!(
+                "vcat: {} vs {} cols",
+                self.cols, other.cols
+            )));
+        }
+        let mut data = Vec::with_capacity((self.rows + other.rows) * self.cols);
+        data.extend_from_slice(&self.data);
+        data.extend_from_slice(&other.data);
+        Ok(Self {
+            rows: self.rows + other.rows,
+            cols: self.cols,
+            data,
+        })
+    }
+
+    /// Select a contiguous block of columns `[c0, c1)` (copies).
+    pub fn col_block(&self, c0: usize, c1: usize) -> Result<Self> {
+        if c0 > c1 || c1 > self.cols {
+            return Err(Error::Shape(format!(
+                "col_block [{c0},{c1}) of {}x{}",
+                self.rows, self.cols
+            )));
+        }
+        let w = c1 - c0;
+        let mut out = Self::zeros(self.rows, w);
+        for r in 0..self.rows {
+            out.row_mut(r).copy_from_slice(&self.row(r)[c0..c1]);
+        }
+        Ok(out)
+    }
+
+    /// Cast to `f32` row-major (for PJRT literals).
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        self.data.iter().map(|&v| v as f32).collect()
+    }
+
+    /// Build from an `f32` row-major buffer (from PJRT literals).
+    pub fn from_f32_slice(rows: usize, cols: usize, data: &[f32]) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::Shape(format!(
+                "from_f32_slice: {} elements for {rows}x{cols}",
+                data.len()
+            )));
+        }
+        Ok(Self {
+            rows,
+            cols,
+            data: data.iter().map(|&v| v as f64).collect(),
+        })
+    }
+
+    /// Cholesky factorization of an SPD matrix (see [`CholeskyFactor`]).
+    pub fn cholesky(&self) -> Result<CholeskyFactor> {
+        CholeskyFactor::new(self)
+    }
+
+    /// Index of the max element in each column (classification argmax).
+    pub fn argmax_per_col(&self) -> Vec<usize> {
+        let mut out = vec![0usize; self.cols];
+        let mut best = vec![f64::NEG_INFINITY; self.cols];
+        for r in 0..self.rows {
+            let row = self.row(r);
+            for c in 0..self.cols {
+                if row[c] > best[c] {
+                    best[c] = row[c];
+                    out[c] = r;
+                }
+            }
+        }
+        out
+    }
+}
+
+pub use ops::{accuracy_from_predictions, one_hot, relu};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(rows: &[Vec<f64>]) -> Matrix {
+        Matrix::from_rows(rows).unwrap()
+    }
+
+    #[test]
+    fn constructors_and_accessors() {
+        let a = Matrix::zeros(2, 3);
+        assert_eq!(a.shape(), (2, 3));
+        assert_eq!(a.as_slice(), &[0.0; 6]);
+
+        let i = Matrix::identity(3);
+        assert_eq!(i.get(1, 1), 1.0);
+        assert_eq!(i.get(1, 2), 0.0);
+
+        let f = Matrix::from_fn(2, 2, |r, c| (r * 10 + c) as f64);
+        assert_eq!(f.get(1, 0), 10.0);
+
+        assert!(Matrix::from_vec(2, 2, vec![1.0; 3]).is_err());
+        assert!(Matrix::from_rows(&[vec![1.0], vec![1.0, 2.0]]).is_err());
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = m(&[vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
+        let t = a.transpose();
+        assert_eq!(t.shape(), (3, 2));
+        assert_eq!(t.get(2, 1), 6.0);
+        assert_eq!(t.transpose(), a);
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = m(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = m(&[vec![5.0, 6.0], vec![7.0, 8.0]]);
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c, m(&[vec![19.0, 22.0], vec![43.0, 50.0]]));
+        assert!(a.matmul(&Matrix::zeros(3, 3)).is_err());
+    }
+
+    #[test]
+    fn matmul_transb_matches_explicit_transpose() {
+        let a = m(&[vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
+        let b = m(&[vec![1.0, 0.5, -1.0], vec![2.0, -2.0, 0.0]]);
+        let fast = a.matmul_transb(&b).unwrap();
+        let slow = a.matmul(&b.transpose()).unwrap();
+        assert!(fast.max_abs_diff(&slow) < 1e-12);
+    }
+
+    #[test]
+    fn gram_matches_matmul() {
+        let a = m(&[vec![1.0, 2.0, 3.0], vec![-1.0, 0.0, 2.0]]);
+        let g = a.gram();
+        let explicit = a.matmul(&a.transpose()).unwrap();
+        assert!(g.max_abs_diff(&explicit) < 1e-12);
+        // Symmetry.
+        assert_eq!(g.get(0, 1), g.get(1, 0));
+    }
+
+    #[test]
+    fn arithmetic_ops() {
+        let a = m(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = m(&[vec![0.5, 0.5], vec![0.5, 0.5]]);
+        assert_eq!(a.add(&b).unwrap().get(0, 0), 1.5);
+        assert_eq!(a.sub(&b).unwrap().get(1, 1), 3.5);
+        assert_eq!(a.scale(2.0).get(1, 0), 6.0);
+        let mut c = a.clone();
+        c.axpy(-1.0, &a).unwrap();
+        assert_eq!(c.frobenius_norm(), 0.0);
+        assert!(a.add(&Matrix::zeros(3, 3)).is_err());
+        let mut d = a.clone();
+        d.add_diag(10.0).unwrap();
+        assert_eq!(d.get(0, 0), 11.0);
+        assert_eq!(d.get(0, 1), 2.0);
+        assert!(Matrix::zeros(2, 3).add_diag(1.0).is_err());
+    }
+
+    #[test]
+    fn frobenius_projection() {
+        let mut a = m(&[vec![3.0, 0.0], vec![0.0, 4.0]]); // ‖A‖_F = 5
+        let mut b = a.clone();
+        a.project_frobenius(10.0); // inside the ball: untouched
+        assert_eq!(a, m(&[vec![3.0, 0.0], vec![0.0, 4.0]]));
+        b.project_frobenius(2.5); // outside: rescaled to the boundary
+        assert!((b.frobenius_norm() - 2.5).abs() < 1e-12);
+        // Direction preserved.
+        assert!((b.get(0, 0) / b.get(1, 1) - 3.0 / 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn relu_and_concat() {
+        let mut a = m(&[vec![-1.0, 2.0], vec![0.5, -3.0]]);
+        a.relu_inplace();
+        assert_eq!(a, m(&[vec![0.0, 2.0], vec![0.5, 0.0]]));
+
+        let b = m(&[vec![1.0], vec![2.0]]);
+        let h = a.hcat(&b).unwrap();
+        assert_eq!(h.shape(), (2, 3));
+        assert_eq!(h.get(1, 2), 2.0);
+
+        let v = a.vcat(&m(&[vec![9.0, 9.0]])).unwrap();
+        assert_eq!(v.shape(), (3, 2));
+        assert_eq!(v.get(2, 0), 9.0);
+
+        assert!(a.hcat(&Matrix::zeros(3, 1)).is_err());
+        assert!(a.vcat(&Matrix::zeros(1, 3)).is_err());
+    }
+
+    #[test]
+    fn col_block_and_argmax() {
+        let a = m(&[vec![1.0, 5.0, 3.0], vec![4.0, 2.0, 6.0]]);
+        let blk = a.col_block(1, 3).unwrap();
+        assert_eq!(blk, m(&[vec![5.0, 3.0], vec![2.0, 6.0]]));
+        assert!(a.col_block(2, 4).is_err());
+        assert_eq!(a.argmax_per_col(), vec![1, 0, 1]);
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let a = m(&[vec![1.25, -2.5], vec![3.0, 0.0]]);
+        let f = a.to_f32_vec();
+        let back = Matrix::from_f32_slice(2, 2, &f).unwrap();
+        assert!(a.max_abs_diff(&back) < 1e-7);
+        assert!(Matrix::from_f32_slice(2, 2, &[0.0; 3]).is_err());
+    }
+}

@@ -1,0 +1,80 @@
+//! Free-standing neural-net helper ops over [`Matrix`].
+
+use super::Matrix;
+use crate::{Error, Result};
+
+/// Owned element-wise ReLU.
+pub fn relu(m: &Matrix) -> Matrix {
+    let mut out = m.clone();
+    out.relu_inplace();
+    out
+}
+
+/// Build a `Q×J` one-hot target matrix from class labels.
+pub fn one_hot(labels: &[usize], num_classes: usize) -> Result<Matrix> {
+    let mut t = Matrix::zeros(num_classes, labels.len());
+    for (j, &cls) in labels.iter().enumerate() {
+        if cls >= num_classes {
+            return Err(Error::Data(format!(
+                "label {cls} out of range for {num_classes} classes"
+            )));
+        }
+        t.set(cls, j, 1.0);
+    }
+    Ok(t)
+}
+
+/// Classification accuracy of prediction scores `S (Q×J)` against labels.
+pub fn accuracy_from_predictions(scores: &Matrix, labels: &[usize]) -> Result<f64> {
+    if scores.cols() != labels.len() {
+        return Err(Error::Shape(format!(
+            "accuracy: {} predictions vs {} labels",
+            scores.cols(),
+            labels.len()
+        )));
+    }
+    if labels.is_empty() {
+        return Ok(0.0);
+    }
+    let pred = scores.argmax_per_col();
+    let correct = pred.iter().zip(labels).filter(|(p, l)| p == l).count();
+    Ok(correct as f64 / labels.len() as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu_leaves_original_untouched() {
+        let a = Matrix::from_rows(&[vec![-1.0, 2.0]]).unwrap();
+        let r = relu(&a);
+        assert_eq!(r.get(0, 0), 0.0);
+        assert_eq!(a.get(0, 0), -1.0);
+    }
+
+    #[test]
+    fn one_hot_layout() {
+        let t = one_hot(&[2, 0, 1], 3).unwrap();
+        assert_eq!(t.shape(), (3, 3));
+        assert_eq!(t.get(2, 0), 1.0);
+        assert_eq!(t.get(0, 1), 1.0);
+        assert_eq!(t.get(1, 2), 1.0);
+        assert_eq!(t.as_slice().iter().sum::<f64>(), 3.0);
+        assert!(one_hot(&[3], 3).is_err());
+    }
+
+    #[test]
+    fn accuracy_counts_argmax_hits() {
+        // scores: 2 classes × 4 samples
+        let s = Matrix::from_rows(&[
+            vec![0.9, 0.1, 0.6, 0.2],
+            vec![0.1, 0.9, 0.4, 0.8],
+        ])
+        .unwrap();
+        let acc = accuracy_from_predictions(&s, &[0, 1, 0, 0]).unwrap();
+        assert!((acc - 0.75).abs() < 1e-12);
+        assert!(accuracy_from_predictions(&s, &[0]).is_err());
+        assert_eq!(accuracy_from_predictions(&Matrix::zeros(2, 0), &[]).unwrap(), 0.0);
+    }
+}

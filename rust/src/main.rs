@@ -1,0 +1,304 @@
+//! `dssfn` — CLI launcher for decentralized SSFN training.
+//!
+//! ```text
+//! dssfn train   [--config FILE] [--dataset KEY] [--degree D] [--nodes M]
+//!               [--layers L] [--admm-iters K] [--backend native|pjrt]
+//!               [--exact-consensus] [--seed S] [--csv PATH]
+//! dssfn central [--dataset KEY] [--layers L] [--admm-iters K] [--seed S]
+//! dssfn sweep   [--dataset KEY] [--degrees 1,2,...] [--csv PATH]
+//! dssfn datasets
+//! dssfn info    [--config FILE]
+//! ```
+//!
+//! The build environment has no `clap`; argument parsing is a small
+//! hand-rolled matcher (see [`Args`]).
+
+use dssfn::config::{BackendKind, ExperimentConfig};
+use dssfn::coordinator::DecentralizedTrainer;
+use dssfn::data::{dataset_names, lookup, table1_rows};
+use dssfn::metrics::CsvWriter;
+use dssfn::ssfn::CentralizedTrainer;
+use dssfn::util::human_secs;
+use std::collections::BTreeMap;
+use std::process::ExitCode;
+
+/// Minimal flag parser: `--key value` and bare `--switch` flags.
+struct Args {
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self, String> {
+        let mut flags = BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| format!("unexpected argument '{a}'"))?;
+            let switch = matches!(key, "exact-consensus" | "no-curve" | "full");
+            if switch {
+                flags.insert(key.to_string(), "true".to_string());
+                i += 1;
+            } else {
+                let v = argv
+                    .get(i + 1)
+                    .ok_or_else(|| format!("flag --{key} needs a value"))?;
+                flags.insert(key.to_string(), v.clone());
+                i += 2;
+            }
+        }
+        Ok(Self { flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn parsed<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, String> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("bad value '{v}' for --{key}")),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn build_config(args: &Args) -> Result<ExperimentConfig, String> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::load(path).map_err(|e| e.to_string())?,
+        None => {
+            let ds = args.get("dataset").unwrap_or("quickstart");
+            ExperimentConfig::named_dataset(ds).map_err(|e| e.to_string())?
+        }
+    };
+    if let Some(ds) = args.get("dataset") {
+        cfg.dataset = ds.to_string();
+        lookup(ds).map_err(|e| e.to_string())?;
+    }
+    if let Some(v) = args.parsed("degree")? {
+        cfg.degree = v;
+    }
+    if let Some(v) = args.parsed("nodes")? {
+        cfg.nodes = v;
+    }
+    if let Some(v) = args.parsed("layers")? {
+        cfg.layers = v;
+    }
+    if let Some(v) = args.parsed("admm-iters")? {
+        cfg.admm_iterations = v;
+    }
+    if let Some(v) = args.parsed("seed")? {
+        cfg.seed = v;
+    }
+    if let Some(v) = args.parsed("mu0")? {
+        cfg.mu0 = v;
+    }
+    if let Some(v) = args.parsed("mul")? {
+        cfg.mul = v;
+    }
+    if let Some(v) = args.parsed("threads")? {
+        cfg.threads = v;
+    }
+    if let Some(b) = args.get("backend") {
+        cfg.backend = match b {
+            "native" => BackendKind::Native,
+            "pjrt" => BackendKind::Pjrt,
+            other => return Err(format!("unknown backend '{other}'")),
+        };
+    }
+    if let Some(dir) = args.get("artifacts") {
+        cfg.artifacts_dir = dir.to_string();
+    }
+    if args.has("exact-consensus") {
+        cfg.exact_consensus = true;
+    }
+    if args.has("no-curve") {
+        cfg.record_cost_curve = false;
+    }
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<(), String> {
+    let cfg = build_config(args)?;
+    eprintln!(
+        "training dSSFN on '{}' (M={}, d={}, L={}, K={}, backend={:?})",
+        cfg.dataset, cfg.nodes, cfg.degree, cfg.layers, cfg.admm_iterations, cfg.backend
+    );
+    let (_model, report) =
+        DecentralizedTrainer::run_config(&cfg).map_err(|e| e.to_string())?;
+    println!("{}", report.summary());
+    println!(
+        "simulated total time (compute + α-β comm): {}",
+        human_secs(report.simulated_total_secs())
+    );
+    if let Some(path) = args.get("csv") {
+        let mut w = CsvWriter::new(&["iteration", "cost"]);
+        for (i, c) in report.full_cost_curve().iter().enumerate() {
+            w.row_f64(&[i as f64, *c]);
+        }
+        w.write_to(std::path::Path::new(path))
+            .map_err(|e| e.to_string())?;
+        eprintln!("wrote cost curve to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_central(args: &Args) -> Result<(), String> {
+    let cfg = build_config(args)?;
+    let task = cfg.generate_task().map_err(|e| e.to_string())?;
+    let trainer = CentralizedTrainer::new(
+        cfg.architecture().map_err(|e| e.to_string())?,
+        cfg.hyper(),
+        cfg.seed,
+    )
+    .map_err(|e| e.to_string())?;
+    let (_model, report) = trainer.train(&task).map_err(|e| e.to_string())?;
+    println!("{}", report.summary());
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<(), String> {
+    let cfg = build_config(args)?;
+    let degrees: Vec<usize> = match args.get("degrees") {
+        Some(list) => list
+            .split(',')
+            .map(|s| s.trim().parse().map_err(|_| format!("bad degree '{s}'")))
+            .collect::<Result<_, _>>()?,
+        None => (1..=cfg.nodes / 2).collect(),
+    };
+    let task = cfg.generate_task().map_err(|e| e.to_string())?;
+    let mut w = CsvWriter::new(&[
+        "degree",
+        "gossip_rounds",
+        "bytes",
+        "wall_secs",
+        "sim_comm_secs",
+        "sim_total_secs",
+        "test_acc",
+    ]);
+    for d in degrees {
+        let mut c = cfg.clone();
+        c.degree = d;
+        let trainer = DecentralizedTrainer::from_config(&c).map_err(|e| e.to_string())?;
+        let (_m, r) = trainer.train_task(&task).map_err(|e| e.to_string())?;
+        println!(
+            "d={d}: rounds={} bytes={} wall={} sim_total={}",
+            r.total_gossip_rounds(),
+            r.comm_total.bytes,
+            human_secs(r.wall_secs),
+            human_secs(r.simulated_total_secs()),
+        );
+        w.row_f64(&[
+            d as f64,
+            r.total_gossip_rounds() as f64,
+            r.comm_total.bytes as f64,
+            r.wall_secs,
+            r.simulated_comm_secs,
+            r.simulated_total_secs(),
+            r.test_accuracy,
+        ]);
+    }
+    if let Some(path) = args.get("csv") {
+        w.write_to(std::path::Path::new(path))
+            .map_err(|e| e.to_string())?;
+        eprintln!("wrote sweep to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_datasets() {
+    println!(
+        "{:<18} {:>8} {:>8} {:>6} {:>4}",
+        "key", "train", "test", "P", "Q"
+    );
+    for key in dataset_names() {
+        let s = lookup(key).expect("registry");
+        println!(
+            "{:<18} {:>8} {:>8} {:>6} {:>4}",
+            s.key, s.train_samples, s.test_samples, s.input_dim, s.num_classes
+        );
+    }
+    println!(
+        "\nTable-I rows: {:?}",
+        table1_rows().iter().map(|s| s.key).collect::<Vec<_>>()
+    );
+}
+
+fn cmd_info(args: &Args) -> Result<(), String> {
+    let cfg = build_config(args)?;
+    let arch = cfg.architecture().map_err(|e| e.to_string())?;
+    println!("dataset       : {}", cfg.dataset);
+    println!(
+        "architecture  : P={} Q={} n={} L={}",
+        arch.input_dim, arch.num_classes, arch.hidden, arch.layers
+    );
+    println!(
+        "admm          : K={} mu0={} mul={} eps={}",
+        cfg.admm_iterations,
+        cfg.mu0,
+        cfg.mul,
+        cfg.eps
+            .map(|e| e.to_string())
+            .unwrap_or_else(|| format!("2Q={}", 2 * arch.num_classes))
+    );
+    println!(
+        "network       : M={} degree={} delta={}",
+        cfg.nodes, cfg.degree, cfg.delta
+    );
+    println!(
+        "padded shard J: {}",
+        cfg.padded_shard_samples().map_err(|e| e.to_string())?
+    );
+    println!(
+        "backend       : {:?} (artifacts: {})",
+        cfg.backend, cfg.artifacts_dir
+    );
+    Ok(())
+}
+
+const USAGE: &str = "usage: dssfn <train|central|sweep|datasets|info> [flags]
+  train     train decentralized SSFN        (--dataset, --degree, --nodes, --layers, --admm-iters, --backend, --csv, --config, --exact-consensus, --seed)
+  central   train the centralized baseline  (--dataset, --layers, --admm-iters, --seed)
+  sweep     degree sweep (Fig. 4)           (--dataset, --degrees 1,2,3, --csv)
+  datasets  list registered datasets
+  info      show the resolved configuration";
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        eprintln!("{USAGE}");
+        return ExitCode::from(2);
+    };
+    let args = match Args::parse(&argv[1..]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            return ExitCode::from(2);
+        }
+    };
+    let result = match cmd.as_str() {
+        "train" => cmd_train(&args),
+        "central" => cmd_central(&args),
+        "sweep" => cmd_sweep(&args),
+        "datasets" => {
+            cmd_datasets();
+            Ok(())
+        }
+        "info" => cmd_info(&args),
+        other => Err(format!("unknown command '{other}'\n{USAGE}")),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,228 @@
+//! Training metrics, reports and CSV export.
+//!
+//! Every trainer (centralized, decentralized, baselines) produces a
+//! [`TrainReport`]; the bench harness turns reports into the paper's
+//! tables and figure series.
+
+use crate::network::CommSnapshot;
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Per-layer training record.
+#[derive(Debug, Clone, Default)]
+pub struct LayerRecord {
+    /// Layer index `l` (0 = the direct input solve for `O_0`).
+    pub layer: usize,
+    /// Global objective after each ADMM iteration of this layer
+    /// (concatenated across layers this is the paper's Fig.-3 series).
+    pub cost_curve: Vec<f64>,
+    /// Wall-clock seconds spent on this layer (compute only).
+    pub wall_secs: f64,
+    /// Gossip rounds consumed by this layer.
+    pub gossip_rounds: usize,
+    /// Communication delta for this layer.
+    pub comm: CommSnapshot,
+    /// Max pairwise disagreement between node copies of `Z` at the end of
+    /// the layer (0 for centralized / exact consensus).
+    pub consensus_disagreement: f64,
+}
+
+impl LayerRecord {
+    /// Final cost of the layer (last ADMM iterate), if recorded.
+    pub fn final_cost(&self) -> Option<f64> {
+        self.cost_curve.last().copied()
+    }
+}
+
+/// End-to-end training report.
+#[derive(Debug, Clone, Default)]
+pub struct TrainReport {
+    /// Dataset key.
+    pub dataset: String,
+    /// Trainer description (e.g. `"centralized"`, `"dssfn(d=4)"`).
+    pub mode: String,
+    /// Per-layer records in training order.
+    pub layers: Vec<LayerRecord>,
+    /// Final train-set classification accuracy in `[0,1]`.
+    pub train_accuracy: f64,
+    /// Final test-set classification accuracy in `[0,1]`.
+    pub test_accuracy: f64,
+    /// Normalized train error in dB: `10·log10(‖T−Ŷ‖²_F / ‖T‖²_F)`
+    /// (the paper's "Train Error" column of Table II).
+    pub train_error_db: f64,
+    /// Total wall-clock training seconds (all layers, compute + sync).
+    pub wall_secs: f64,
+    /// Simulated communication seconds (α-β model over gossip rounds).
+    pub simulated_comm_secs: f64,
+    /// Total communication over the whole run.
+    pub comm_total: CommSnapshot,
+}
+
+impl TrainReport {
+    /// Concatenated cost curve across all layers (Fig.-3 x-axis is the
+    /// *total* ADMM iteration count).
+    pub fn full_cost_curve(&self) -> Vec<f64> {
+        self.layers
+            .iter()
+            .flat_map(|l| l.cost_curve.iter().copied())
+            .collect()
+    }
+
+    /// Total gossip rounds across layers.
+    pub fn total_gossip_rounds(&self) -> usize {
+        self.layers.iter().map(|l| l.gossip_rounds).sum()
+    }
+
+    /// Final training cost (last layer's last iterate).
+    pub fn final_cost(&self) -> Option<f64> {
+        self.layers.last().and_then(|l| l.final_cost())
+    }
+
+    /// Simulated total time: compute wall time + simulated comm time.
+    /// (On a real cluster compute overlaps per node; wall_secs here is
+    /// the max-per-node compute path as measured by the coordinator.)
+    pub fn simulated_total_secs(&self) -> f64 {
+        self.wall_secs + self.simulated_comm_secs
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} [{}]: train {:.2}% / test {:.2}% | err {:.2} dB | {} layers | {} gossip rounds | {} | wall {}",
+            self.dataset,
+            self.mode,
+            100.0 * self.train_accuracy,
+            100.0 * self.test_accuracy,
+            self.train_error_db,
+            self.layers.len(),
+            self.total_gossip_rounds(),
+            crate::util::human_bytes(self.comm_total.bytes),
+            crate::util::human_secs(self.wall_secs),
+        )
+    }
+}
+
+/// Normalized error in dB: `10·log10(residual / reference)`, with a
+/// floor to avoid `-inf` on perfect fits.
+pub fn error_db(residual_sq: f64, reference_sq: f64) -> f64 {
+    if reference_sq <= 0.0 {
+        return 0.0;
+    }
+    let ratio = (residual_sq / reference_sq).max(1e-30);
+    10.0 * ratio.log10()
+}
+
+/// Minimal CSV writer for bench/figure outputs.
+#[derive(Debug, Default)]
+pub struct CsvWriter {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvWriter {
+    /// Create with a column header.
+    pub fn new(columns: &[&str]) -> Self {
+        Self {
+            header: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (stringified cells).
+    pub fn row(&mut self, cells: &[String]) {
+        debug_assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Append a row of `f64` values.
+    pub fn row_f64(&mut self, cells: &[f64]) {
+        self.row(&cells.iter().map(|v| format!("{v}")).collect::<Vec<_>>());
+    }
+
+    /// Render the CSV document.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.header.join(","));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.join(","));
+        }
+        out
+    }
+
+    /// Write to a file, creating parent directories.
+    pub fn write_to(&self, path: &Path) -> crate::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.render())?;
+        Ok(())
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Whether there are no data rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_db_examples() {
+        assert!((error_db(0.1, 1.0) - (-10.0)).abs() < 1e-9);
+        assert!((error_db(1.0, 1.0)).abs() < 1e-9);
+        assert_eq!(error_db(1.0, 0.0), 0.0);
+        // Perfect fit is floored, not -inf.
+        assert!(error_db(0.0, 1.0).is_finite());
+    }
+
+    #[test]
+    fn report_aggregations() {
+        let mut r = TrainReport::default();
+        r.layers.push(LayerRecord {
+            layer: 0,
+            cost_curve: vec![5.0, 3.0],
+            gossip_rounds: 10,
+            ..Default::default()
+        });
+        r.layers.push(LayerRecord {
+            layer: 1,
+            cost_curve: vec![2.0, 1.0],
+            gossip_rounds: 7,
+            ..Default::default()
+        });
+        assert_eq!(r.full_cost_curve(), vec![5.0, 3.0, 2.0, 1.0]);
+        assert_eq!(r.total_gossip_rounds(), 17);
+        assert_eq!(r.final_cost(), Some(1.0));
+        assert!(r.summary().contains("train"));
+    }
+
+    #[test]
+    fn csv_round_trip() {
+        let mut w = CsvWriter::new(&["a", "b"]);
+        assert!(w.is_empty());
+        w.row_f64(&[1.5, 2.0]);
+        w.row(&["x".into(), "y".into()]);
+        assert_eq!(w.len(), 2);
+        let doc = w.render();
+        assert_eq!(doc, "a,b\n1.5,2\nx,y\n");
+    }
+
+    #[test]
+    fn csv_writes_file() {
+        let dir = std::env::temp_dir().join("dssfn_csv_test");
+        let path = dir.join("sub/out.csv");
+        let mut w = CsvWriter::new(&["v"]);
+        w.row_f64(&[1.0]);
+        w.write_to(&path).unwrap();
+        let read = std::fs::read_to_string(&path).unwrap();
+        assert!(read.starts_with("v\n"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,139 @@
+//! Communication accounting.
+//!
+//! Every simulated message is recorded here, so the eq. (14)–(16)
+//! communication-load comparison between decentralized gradient descent
+//! and dSSFN is *measured*, not estimated. Counters are atomic because
+//! worker nodes run on separate threads.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Thread-safe ledger of network traffic.
+#[derive(Debug, Default)]
+pub struct CommLedger {
+    messages: AtomicU64,
+    bytes: AtomicU64,
+    rounds: AtomicU64,
+    scalars: AtomicU64,
+}
+
+/// A point-in-time copy of the ledger counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CommSnapshot {
+    /// Point-to-point messages sent.
+    pub messages: u64,
+    /// Total payload bytes sent.
+    pub bytes: u64,
+    /// Synchronous gossip rounds executed.
+    pub rounds: u64,
+    /// Total f64 scalars exchanged (the paper counts "information
+    /// exchange" in scalars — eq. (14)/(15)).
+    pub scalars: u64,
+}
+
+impl CommSnapshot {
+    /// Difference since an earlier snapshot.
+    pub fn since(&self, earlier: &CommSnapshot) -> CommSnapshot {
+        CommSnapshot {
+            messages: self.messages - earlier.messages,
+            bytes: self.bytes - earlier.bytes,
+            rounds: self.rounds - earlier.rounds,
+            scalars: self.scalars - earlier.scalars,
+        }
+    }
+}
+
+impl CommLedger {
+    /// New empty ledger.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one synchronous round in which `messages` point-to-point
+    /// messages each carrying `scalars_per_msg` f64 values were sent.
+    pub fn record_round(&self, messages: u64, scalars_per_msg: u64) {
+        self.rounds.fetch_add(1, Ordering::Relaxed);
+        self.messages.fetch_add(messages, Ordering::Relaxed);
+        self.scalars
+            .fetch_add(messages * scalars_per_msg, Ordering::Relaxed);
+        self.bytes
+            .fetch_add(messages * scalars_per_msg * 8, Ordering::Relaxed);
+    }
+
+    /// Record a single point-to-point message of `scalars` f64 values
+    /// (used by the master-worker baseline which has no gossip rounds).
+    pub fn record_message(&self, scalars: u64) {
+        self.messages.fetch_add(1, Ordering::Relaxed);
+        self.scalars.fetch_add(scalars, Ordering::Relaxed);
+        self.bytes.fetch_add(scalars * 8, Ordering::Relaxed);
+    }
+
+    /// Current counters.
+    pub fn snapshot(&self) -> CommSnapshot {
+        CommSnapshot {
+            messages: self.messages.load(Ordering::Relaxed),
+            bytes: self.bytes.load(Ordering::Relaxed),
+            rounds: self.rounds.load(Ordering::Relaxed),
+            scalars: self.scalars.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Reset all counters to zero.
+    pub fn reset(&self) {
+        self.messages.store(0, Ordering::Relaxed);
+        self.bytes.store(0, Ordering::Relaxed);
+        self.rounds.store(0, Ordering::Relaxed);
+        self.scalars.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn rounds_and_messages_accumulate() {
+        let l = CommLedger::new();
+        l.record_round(10, 100); // 10 msgs × 100 scalars
+        l.record_round(10, 100);
+        l.record_message(7);
+        let s = l.snapshot();
+        assert_eq!(s.rounds, 2);
+        assert_eq!(s.messages, 21);
+        assert_eq!(s.scalars, 2007);
+        assert_eq!(s.bytes, 2007 * 8);
+        l.reset();
+        assert_eq!(l.snapshot(), CommSnapshot::default());
+    }
+
+    #[test]
+    fn since_computes_deltas() {
+        let l = CommLedger::new();
+        l.record_round(5, 10);
+        let before = l.snapshot();
+        l.record_round(5, 10);
+        let delta = l.snapshot().since(&before);
+        assert_eq!(delta.rounds, 1);
+        assert_eq!(delta.scalars, 50);
+    }
+
+    #[test]
+    fn concurrent_recording_is_lossless() {
+        let l = Arc::new(CommLedger::new());
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let l = Arc::clone(&l);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    l.record_message(3);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = l.snapshot();
+        assert_eq!(s.messages, 8000);
+        assert_eq!(s.scalars, 24000);
+    }
+}

@@ -1,0 +1,413 @@
+//! Synchronous gossip-averaging engine.
+//!
+//! One *round* applies the mixing matrix to the per-node state:
+//! `v_i ← Σ_j h_ij v_j`. Because `H` is doubly stochastic, the node
+//! states converge geometrically (rate `λ₂`) to the initial average while
+//! **preserving the global sum exactly** — the invariant our property
+//! tests pin down. The engine also charges every round to the
+//! [`CommLedger`] and advances the simulated α-β clock.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::{CommLedger, LatencyModel, MixingMatrix};
+use crate::linalg::Matrix;
+use crate::{Error, Result};
+
+/// Executes synchronous gossip rounds over per-node matrices.
+#[derive(Debug, Clone)]
+pub struct GossipEngine {
+    mixing: MixingMatrix,
+    /// Per-node neighbour index lists (including self), cached from `H`.
+    neighbors: Vec<Vec<usize>>,
+    ledger: Arc<CommLedger>,
+    latency: LatencyModel,
+    /// Simulated communication clock, f64 bits in an atomic.
+    sim_clock_bits: Arc<AtomicU64>,
+}
+
+impl GossipEngine {
+    /// Build an engine over a validated mixing matrix.
+    pub fn new(mixing: MixingMatrix, ledger: Arc<CommLedger>, latency: LatencyModel) -> Self {
+        let m = mixing.num_nodes();
+        let neighbors: Vec<Vec<usize>> = (0..m)
+            .map(|i| {
+                (0..m)
+                    .filter(|&j| mixing.matrix().get(i, j) != 0.0)
+                    .collect()
+            })
+            .collect();
+        Self {
+            mixing,
+            neighbors,
+            ledger,
+            latency,
+            sim_clock_bits: Arc::new(AtomicU64::new(0f64.to_bits())),
+        }
+    }
+
+    /// The underlying mixing matrix.
+    pub fn mixing(&self) -> &MixingMatrix {
+        &self.mixing
+    }
+
+    /// The shared communication ledger.
+    pub fn ledger(&self) -> &Arc<CommLedger> {
+        &self.ledger
+    }
+
+    /// Simulated communication seconds elapsed so far.
+    pub fn simulated_seconds(&self) -> f64 {
+        f64::from_bits(self.sim_clock_bits.load(Ordering::Relaxed))
+    }
+
+    /// Reset the simulated clock.
+    pub fn reset_clock(&self) {
+        self.sim_clock_bits.store(0f64.to_bits(), Ordering::Relaxed);
+    }
+
+    fn advance_clock(&self, dt: f64) {
+        // CAS loop: f64 add on an atomic u64.
+        let mut cur = self.sim_clock_bits.load(Ordering::Relaxed);
+        loop {
+            let new = (f64::from_bits(cur) + dt).to_bits();
+            match self.sim_clock_bits.compare_exchange_weak(
+                cur,
+                new,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// Run `rounds` synchronous mixing rounds over the per-node values.
+    /// `values[i]` is node `i`'s local matrix; all must share one shape.
+    pub fn mix_rounds(&self, values: &mut [Matrix], rounds: usize) -> Result<()> {
+        let m = self.mixing.num_nodes();
+        if values.len() != m {
+            return Err(Error::Network(format!(
+                "{} values for {m} nodes",
+                values.len()
+            )));
+        }
+        if m == 0 || rounds == 0 {
+            return Ok(());
+        }
+        let shape = values[0].shape();
+        if values.iter().any(|v| v.shape() != shape) {
+            return Err(Error::Network("gossip values of mixed shapes".into()));
+        }
+        let scalars = (shape.0 * shape.1) as u64;
+        // Per-round traffic: each node sends its matrix to every neighbour
+        // except itself.
+        let msgs_per_round: u64 = self
+            .neighbors
+            .iter()
+            .map(|s| s.len() as u64 - 1)
+            .sum();
+        let max_degree = self
+            .neighbors
+            .iter()
+            .map(|s| s.len() - 1)
+            .max()
+            .unwrap_or(0);
+
+        // Ping-pong between `values` and a scratch bank: writing each
+        // round into the other bank and swapping avoids a full copy-back
+        // per round (§Perf: the mixing loop dominates low-degree runs).
+        let mut scratch: Vec<Matrix> =
+            (0..m).map(|_| Matrix::zeros(shape.0, shape.1)).collect();
+        for _ in 0..rounds {
+            for i in 0..m {
+                let row = self.mixing.row(i);
+                let nbrs = &self.neighbors[i];
+                let out = &mut scratch[i];
+                // Equal-weight fast path (the paper's h_ij = 1/|N_i|):
+                // accumulate plain sums, scale once at the end.
+                let w0 = row[nbrs[0]];
+                let equal = nbrs.iter().all(|&j| row[j] == w0);
+                out.copy_from(&values[nbrs[0]])?;
+                if equal {
+                    for &j in &nbrs[1..] {
+                        out.axpy(1.0, &values[j])?;
+                    }
+                    out.scale_inplace(w0);
+                } else {
+                    out.scale_inplace(w0);
+                    for &j in &nbrs[1..] {
+                        out.axpy(row[j], &values[j])?;
+                    }
+                }
+            }
+            for (v, s) in values.iter_mut().zip(scratch.iter_mut()) {
+                std::mem::swap(v, s);
+            }
+            self.ledger.record_round(msgs_per_round, scalars);
+            self.advance_clock(self.latency.round_time(max_degree, scalars * 8));
+        }
+        Ok(())
+    }
+
+    /// Gossip until the consensus contraction reaches `delta`, i.e. run
+    /// `B(δ)` rounds (see [`MixingMatrix::consensus_rounds`]). Returns the
+    /// number of rounds executed.
+    pub fn consensus_average(&self, values: &mut [Matrix], delta: f64) -> Result<usize> {
+        let rounds = self.mixing.consensus_rounds(delta);
+        self.mix_rounds(values, rounds)?;
+        Ok(rounds)
+    }
+
+    /// Lossy-link variant (the paper's §IV future-work direction, after
+    /// Bastianello et al.): each undirected edge independently drops its
+    /// exchange with probability `loss_p` per round. A dropped edge is
+    /// handled with the *lazy* correction — both endpoints fold the lost
+    /// neighbour's weight back into their self-weight — which keeps the
+    /// effective per-round mixing matrix doubly stochastic, so the global
+    /// sum is still conserved exactly and gossip still converges to the
+    /// initial average (just with a worse contraction rate).
+    pub fn mix_rounds_lossy(
+        &self,
+        values: &mut [Matrix],
+        rounds: usize,
+        loss_p: f64,
+        rng: &mut impl crate::util::Rng,
+    ) -> Result<()> {
+        if !(0.0..1.0).contains(&loss_p) {
+            return Err(Error::Network(format!(
+                "loss probability must be in [0,1), got {loss_p}"
+            )));
+        }
+        let m = self.mixing.num_nodes();
+        if values.len() != m {
+            return Err(Error::Network(format!(
+                "{} values for {m} nodes",
+                values.len()
+            )));
+        }
+        if m == 0 || rounds == 0 {
+            return Ok(());
+        }
+        let shape = values[0].shape();
+        if values.iter().any(|v| v.shape() != shape) {
+            return Err(Error::Network("gossip values of mixed shapes".into()));
+        }
+        let scalars = (shape.0 * shape.1) as u64;
+        let max_degree = self
+            .neighbors
+            .iter()
+            .map(|s| s.len() - 1)
+            .max()
+            .unwrap_or(0);
+        let mut scratch: Vec<Matrix> =
+            (0..m).map(|_| Matrix::zeros(shape.0, shape.1)).collect();
+        for _ in 0..rounds {
+            // Sample surviving undirected edges for this round.
+            let mut dropped = std::collections::HashSet::new();
+            for (i, nbrs) in self.neighbors.iter().enumerate() {
+                for &j in nbrs {
+                    if j > i && rng.next_f64() < loss_p {
+                        dropped.insert((i, j));
+                    }
+                }
+            }
+            let mut delivered: u64 = 0;
+            for i in 0..m {
+                let row = self.mixing.row(i);
+                let out = &mut scratch[i];
+                out.copy_from(&values[i])?;
+                let mut self_w = row[i];
+                let mut acc = Matrix::zeros(shape.0, shape.1);
+                for &j in &self.neighbors[i] {
+                    if j == i {
+                        continue;
+                    }
+                    let edge = (i.min(j), i.max(j));
+                    if dropped.contains(&edge) {
+                        // Lazy correction: keep the lost weight on self.
+                        self_w += row[j];
+                    } else {
+                        acc.axpy(row[j], &values[j])?;
+                        delivered += 1;
+                    }
+                }
+                out.scale_inplace(self_w);
+                out.axpy(1.0, &acc)?;
+            }
+            for (v, s) in values.iter_mut().zip(scratch.iter_mut()) {
+                std::mem::swap(v, s);
+            }
+            self.ledger.record_round(delivered, scalars);
+            self.advance_clock(self.latency.round_time(max_degree, scalars * 8));
+        }
+        Ok(())
+    }
+
+    /// The exact average of the node values (oracle for tests; a real
+    /// deployment cannot compute this without a master).
+    pub fn exact_average(values: &[Matrix]) -> Result<Matrix> {
+        let first = values
+            .first()
+            .ok_or_else(|| Error::Network("no values".into()))?;
+        let mut avg = Matrix::zeros(first.rows(), first.cols());
+        for v in values {
+            avg.axpy(1.0, v)?;
+        }
+        avg.scale_inplace(1.0 / values.len() as f64);
+        Ok(avg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::{Topology, WeightRule};
+    use crate::util::{Rng, Xoshiro256StarStar};
+
+    fn engine(m: usize, d: usize) -> GossipEngine {
+        let mix = MixingMatrix::build(
+            &Topology::Circular { nodes: m, degree: d },
+            WeightRule::EqualNeighbor,
+        )
+        .unwrap();
+        GossipEngine::new(mix, Arc::new(CommLedger::new()), LatencyModel::default())
+    }
+
+    fn rand_values(m: usize, rows: usize, cols: usize, seed: u64) -> Vec<Matrix> {
+        let mut rng = Xoshiro256StarStar::seed_from_u64(seed);
+        (0..m)
+            .map(|_| Matrix::from_fn(rows, cols, |_, _| rng.uniform(-3.0, 3.0)))
+            .collect()
+    }
+
+    #[test]
+    fn sum_preserved_each_round() {
+        let e = engine(8, 2);
+        let mut vals = rand_values(8, 3, 4, 1);
+        let sum_before: f64 = vals.iter().map(|v| v.as_slice().iter().sum::<f64>()).sum();
+        e.mix_rounds(&mut vals, 5).unwrap();
+        let sum_after: f64 = vals.iter().map(|v| v.as_slice().iter().sum::<f64>()).sum();
+        assert!((sum_before - sum_after).abs() < 1e-9);
+    }
+
+    #[test]
+    fn converges_to_exact_average() {
+        let e = engine(10, 3);
+        let mut vals = rand_values(10, 2, 5, 2);
+        let avg = GossipEngine::exact_average(&vals).unwrap();
+        let rounds = e.consensus_average(&mut vals, 1e-10).unwrap();
+        assert!(rounds >= 1);
+        for v in &vals {
+            assert!(v.max_abs_diff(&avg) < 1e-6, "not at consensus");
+        }
+    }
+
+    #[test]
+    fn complete_graph_averages_in_one_round() {
+        let e = engine(10, 5); // d_max
+        let mut vals = rand_values(10, 4, 4, 3);
+        let avg = GossipEngine::exact_average(&vals).unwrap();
+        e.mix_rounds(&mut vals, 1).unwrap();
+        for v in &vals {
+            assert!(v.max_abs_diff(&avg) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn ledger_counts_messages_exactly() {
+        let e = engine(6, 1); // ring: every node has 2 neighbours
+        let mut vals = rand_values(6, 2, 3, 4);
+        e.mix_rounds(&mut vals, 4).unwrap();
+        let s = e.ledger().snapshot();
+        assert_eq!(s.rounds, 4);
+        assert_eq!(s.messages, 4 * 6 * 2); // 4 rounds × 6 nodes × 2 neighbours
+        assert_eq!(s.scalars, 4 * 6 * 2 * 6); // payload 2×3 = 6 scalars
+    }
+
+    #[test]
+    fn simulated_clock_advances() {
+        let e = engine(6, 1);
+        assert_eq!(e.simulated_seconds(), 0.0);
+        let mut vals = rand_values(6, 2, 3, 5);
+        e.mix_rounds(&mut vals, 10).unwrap();
+        let t = e.simulated_seconds();
+        assert!(t > 0.0);
+        e.reset_clock();
+        assert_eq!(e.simulated_seconds(), 0.0);
+    }
+
+    #[test]
+    fn shape_and_count_validation() {
+        let e = engine(4, 1);
+        let mut wrong_count = rand_values(3, 2, 2, 6);
+        assert!(e.mix_rounds(&mut wrong_count, 1).is_err());
+        let mut mixed: Vec<Matrix> = rand_values(4, 2, 2, 7);
+        mixed[2] = Matrix::zeros(3, 3);
+        assert!(e.mix_rounds(&mut mixed, 1).is_err());
+        assert!(GossipEngine::exact_average(&[]).is_err());
+    }
+
+    #[test]
+    fn lossy_gossip_preserves_sum_and_still_converges() {
+        use crate::util::Xoshiro256StarStar;
+        let e = engine(10, 2);
+        let mut vals = rand_values(10, 2, 3, 9);
+        let avg = GossipEngine::exact_average(&vals).unwrap();
+        let sum_before: f64 = vals.iter().map(|v| v.as_slice().iter().sum::<f64>()).sum();
+        let mut rng = Xoshiro256StarStar::seed_from_u64(7);
+        e.mix_rounds_lossy(&mut vals, 200, 0.25, &mut rng).unwrap();
+        let sum_after: f64 = vals.iter().map(|v| v.as_slice().iter().sum::<f64>()).sum();
+        // Lazy correction keeps the round matrix doubly stochastic.
+        assert!((sum_before - sum_after).abs() < 1e-8);
+        for v in &vals {
+            assert!(v.max_abs_diff(&avg) < 1e-6, "lossy gossip did not converge");
+        }
+    }
+
+    #[test]
+    fn lossy_gossip_slower_than_lossless() {
+        use crate::util::Xoshiro256StarStar;
+        let e = engine(12, 1);
+        let rounds = 40;
+        let mut lossless = rand_values(12, 1, 4, 11);
+        let mut lossy = lossless.clone();
+        let avg = GossipEngine::exact_average(&lossless).unwrap();
+        e.mix_rounds(&mut lossless, rounds).unwrap();
+        let mut rng = Xoshiro256StarStar::seed_from_u64(3);
+        e.mix_rounds_lossy(&mut lossy, rounds, 0.4, &mut rng).unwrap();
+        let err = |vs: &[Matrix]| {
+            vs.iter().map(|v| v.max_abs_diff(&avg)).fold(0.0, f64::max)
+        };
+        assert!(err(&lossy) > err(&lossless));
+    }
+
+    #[test]
+    fn lossy_gossip_validates_inputs() {
+        use crate::util::Xoshiro256StarStar;
+        let e = engine(4, 1);
+        let mut rng = Xoshiro256StarStar::seed_from_u64(1);
+        let mut vals = rand_values(4, 2, 2, 1);
+        assert!(e.mix_rounds_lossy(&mut vals, 1, 1.5, &mut rng).is_err());
+        let mut wrong = rand_values(3, 2, 2, 1);
+        assert!(e.mix_rounds_lossy(&mut wrong, 1, 0.1, &mut rng).is_err());
+    }
+
+    #[test]
+    fn sparser_graph_needs_more_rounds_for_same_accuracy() {
+        let mut worst = Vec::new();
+        for d in [1usize, 4] {
+            let e = engine(20, d);
+            let mut vals = rand_values(20, 1, 1, 8);
+            let avg = GossipEngine::exact_average(&vals).unwrap();
+            e.mix_rounds(&mut vals, 30).unwrap();
+            let err = vals
+                .iter()
+                .map(|v| v.max_abs_diff(&avg))
+                .fold(0.0, f64::max);
+            worst.push(err);
+        }
+        assert!(worst[0] > worst[1] * 10.0, "errors {worst:?}");
+    }
+}

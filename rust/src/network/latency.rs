@@ -1,0 +1,65 @@
+//! α-β latency model for simulated communication time.
+//!
+//! Each synchronous gossip round costs a fixed latency `alpha` (the
+//! slowest link's round-trip / synchronization barrier) plus serialization
+//! time `payload_bytes / beta` for the largest per-node payload of that
+//! round. This is the standard LogP-style simplification used to study
+//! consensus algorithms, and it is what turns "B(d) rounds of `Q×n`
+//! matrices" into the Fig.-4 training-time curve.
+
+/// Simulated link/latency parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct LatencyModel {
+    /// Per-round fixed latency in seconds (sync barrier + propagation).
+    pub alpha: f64,
+    /// Link bandwidth in bytes/second.
+    pub beta: f64,
+}
+
+impl Default for LatencyModel {
+    /// A 1 ms / 1 Gbps commodity-LAN default.
+    fn default() -> Self {
+        Self {
+            alpha: 1e-3,
+            beta: 125e6,
+        }
+    }
+}
+
+impl LatencyModel {
+    /// Simulated seconds for one synchronous round where each node sends
+    /// `bytes_per_neighbor` to each of `max_degree` neighbours. Links are
+    /// parallel across node pairs, but each node serializes onto its own
+    /// uplink — hence `max_degree` multiplies the serialization term.
+    pub fn round_time(&self, max_degree: usize, bytes_per_neighbor: u64) -> f64 {
+        self.alpha + (max_degree as u64 * bytes_per_neighbor) as f64 / self.beta
+    }
+
+    /// Simulated seconds for `rounds` identical rounds.
+    pub fn rounds_time(&self, rounds: usize, max_degree: usize, bytes_per_neighbor: u64) -> f64 {
+        rounds as f64 * self.round_time(max_degree, bytes_per_neighbor)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_time_combines_terms() {
+        let m = LatencyModel { alpha: 0.01, beta: 1000.0 };
+        // 2 neighbours × 500 bytes / 1000 B/s = 1 s, + 0.01 s latency.
+        assert!((m.round_time(2, 500) - 1.01).abs() < 1e-12);
+        assert!((m.rounds_time(3, 2, 500) - 3.03).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degree_increases_per_round_cost_but_rounds_dominate() {
+        // The Fig.-4 mechanism: per-round cost grows linearly with d but
+        // B(d) collapses much faster, so total time drops.
+        let m = LatencyModel::default();
+        let sparse = m.rounds_time(600, 2, 8000); // d=1: B≈600
+        let dense = m.rounds_time(20, 10, 8000); // d=5: B≈20
+        assert!(dense < sparse / 5.0);
+    }
+}

@@ -1,0 +1,275 @@
+//! Doubly-stochastic mixing matrices and their spectral analysis.
+//!
+//! Gossip averaging converges geometrically at rate `λ₂(H)` — the second
+//! largest eigenvalue modulus of the mixing matrix ([33] in the paper).
+//! The number of synchronous rounds needed to reach a consensus tolerance
+//! `δ` is therefore `B(δ) = ⌈ln(1/δ) / (−ln λ₂)⌉`. As the circular degree
+//! `d` grows, `λ₂` drops and `B` collapses — this is the mechanism behind
+//! the paper's Fig. 4 "transition jump" of training time versus degree.
+
+use super::Topology;
+use crate::linalg::Matrix;
+use crate::{Error, Result};
+
+/// Weight assignment rule for the mixing matrix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WeightRule {
+    /// `h_ij = 1/|N_i|` — the paper's choice. Doubly stochastic only on
+    /// regular graphs (e.g. the circular topology); constructing it on an
+    /// irregular graph is rejected.
+    EqualNeighbor,
+    /// Metropolis–Hastings: `h_ij = 1/(1+max(deg_i,deg_j))` off-diagonal,
+    /// diagonal absorbs the slack. Doubly stochastic on any connected
+    /// undirected graph.
+    Metropolis,
+}
+
+/// A validated doubly-stochastic mixing matrix over a topology.
+#[derive(Debug, Clone)]
+pub struct MixingMatrix {
+    h: Matrix,
+    lambda2: f64,
+}
+
+impl MixingMatrix {
+    /// Build the mixing matrix for `topology` under `rule` and validate
+    /// double stochasticity.
+    pub fn build(topology: &Topology, rule: WeightRule) -> Result<Self> {
+        let adj = topology.neighbor_sets()?;
+        let m = adj.len();
+        let mut h = Matrix::zeros(m, m);
+        match rule {
+            WeightRule::EqualNeighbor => {
+                let deg0 = adj[0].len();
+                if adj.iter().any(|s| s.len() != deg0) {
+                    return Err(Error::Network(
+                        "equal-neighbour weights need a regular graph; use Metropolis".into(),
+                    ));
+                }
+                for (i, set) in adj.iter().enumerate() {
+                    let w = 1.0 / set.len() as f64;
+                    for &j in set {
+                        h.set(i, j, w);
+                    }
+                }
+            }
+            WeightRule::Metropolis => {
+                // degrees excluding self.
+                let deg: Vec<usize> = adj.iter().map(|s| s.len() - 1).collect();
+                for (i, set) in adj.iter().enumerate() {
+                    let mut diag = 1.0;
+                    for &j in set {
+                        if j == i {
+                            continue;
+                        }
+                        let w = 1.0 / (1.0 + deg[i].max(deg[j]) as f64);
+                        h.set(i, j, w);
+                        diag -= w;
+                    }
+                    h.set(i, i, diag);
+                }
+            }
+        }
+        let lambda2 = second_eigenvalue(&h);
+        let mm = Self { h, lambda2 };
+        mm.validate()?;
+        Ok(mm)
+    }
+
+    /// Validate rows/columns sum to 1 and entries are non-negative.
+    fn validate(&self) -> Result<()> {
+        let m = self.h.rows();
+        for i in 0..m {
+            let mut row = 0.0;
+            let mut col = 0.0;
+            for j in 0..m {
+                let hij = self.h.get(i, j);
+                if hij < -1e-12 {
+                    return Err(Error::Network(format!("negative weight h[{i},{j}]={hij}")));
+                }
+                row += hij;
+                col += self.h.get(j, i);
+            }
+            if (row - 1.0).abs() > 1e-9 || (col - 1.0).abs() > 1e-9 {
+                return Err(Error::Network(format!(
+                    "not doubly stochastic: row{i}={row:.12}, col{i}={col:.12}"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// The matrix itself.
+    pub fn matrix(&self) -> &Matrix {
+        &self.h
+    }
+
+    /// Number of nodes.
+    pub fn num_nodes(&self) -> usize {
+        self.h.rows()
+    }
+
+    /// Second-largest eigenvalue modulus `λ₂` (consensus contraction rate).
+    pub fn lambda2(&self) -> f64 {
+        self.lambda2
+    }
+
+    /// Rounds needed to contract consensus error by `delta`:
+    /// `B = ⌈ln(1/δ)/(−ln λ₂)⌉`, with a floor of 1. For `λ₂ = 0` (complete
+    /// graph with uniform weights) one round suffices — the average is
+    /// exact.
+    pub fn consensus_rounds(&self, delta: f64) -> usize {
+        assert!(delta > 0.0 && delta < 1.0, "delta in (0,1)");
+        if self.lambda2 <= f64::EPSILON {
+            return 1;
+        }
+        let b = (1.0 / delta).ln() / (-self.lambda2.ln());
+        b.ceil().max(1.0) as usize
+    }
+
+    /// Weight row for node `i` (its neighbour averaging coefficients).
+    pub fn row(&self, i: usize) -> &[f64] {
+        self.h.row(i)
+    }
+}
+
+/// `λ₂` via power iteration on `H` deflated by the all-ones eigenvector.
+/// `H` is symmetric here (undirected graphs, symmetric rules), so power
+/// iteration on the deflated operator converges to `|λ₂|`.
+fn second_eigenvalue(h: &Matrix) -> f64 {
+    let m = h.rows();
+    if m == 1 {
+        return 0.0;
+    }
+    // Start vector orthogonal to 1: alternating ±1 plus a ramp.
+    let mut v: Vec<f64> = (0..m)
+        .map(|i| if i % 2 == 0 { 1.0 } else { -1.0 } + i as f64 * 1e-3)
+        .collect();
+    center(&mut v);
+    normalize(&mut v);
+    let mut lambda = 0.0;
+    let mut w = vec![0.0; m];
+    for _ in 0..2000 {
+        // w = H v
+        for (i, wi) in w.iter_mut().enumerate() {
+            *wi = crate::linalg::dot(h.row(i), &v);
+        }
+        center(&mut w);
+        let norm = w.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if norm < 1e-300 {
+            return 0.0;
+        }
+        let new_lambda = norm; // since v was unit-norm
+        for (vi, wi) in v.iter_mut().zip(&w) {
+            *vi = wi / norm;
+        }
+        if (new_lambda - lambda).abs() < 1e-13 {
+            return new_lambda;
+        }
+        lambda = new_lambda;
+    }
+    lambda
+}
+
+fn center(v: &mut [f64]) {
+    let mean = v.iter().sum::<f64>() / v.len() as f64;
+    for x in v.iter_mut() {
+        *x -= mean;
+    }
+}
+
+fn normalize(v: &mut [f64]) {
+    let n = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+    if n > 0.0 {
+        for x in v.iter_mut() {
+            *x /= n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn circ(m: usize, d: usize) -> MixingMatrix {
+        MixingMatrix::build(
+            &Topology::Circular { nodes: m, degree: d },
+            WeightRule::EqualNeighbor,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn equal_neighbor_weights_match_paper() {
+        let mm = circ(10, 2);
+        // |N_i| = 5, so every connected weight is 1/5.
+        assert!((mm.matrix().get(0, 0) - 0.2).abs() < 1e-12);
+        assert!((mm.matrix().get(0, 1) - 0.2).abs() < 1e-12);
+        assert!((mm.matrix().get(0, 8) - 0.2).abs() < 1e-12);
+        assert_eq!(mm.matrix().get(0, 3), 0.0);
+    }
+
+    #[test]
+    fn equal_neighbor_rejects_irregular() {
+        let err = MixingMatrix::build(&Topology::Star { nodes: 5 }, WeightRule::EqualNeighbor);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn metropolis_is_doubly_stochastic_on_star_and_rgg() {
+        for t in [
+            Topology::Star { nodes: 7 },
+            Topology::RandomGeometric { nodes: 20, radius: 0.3, seed: 5 },
+        ] {
+            let mm = MixingMatrix::build(&t, WeightRule::Metropolis).unwrap();
+            assert!(mm.lambda2() < 1.0, "{}: λ2={}", t.describe(), mm.lambda2());
+        }
+    }
+
+    #[test]
+    fn lambda2_decreases_with_degree() {
+        let l: Vec<f64> = (1..=5).map(|d| circ(20, d).lambda2()).collect();
+        for w in l.windows(2) {
+            assert!(w[1] < w[0] + 1e-9, "λ2 not decreasing: {l:?}");
+        }
+        assert!(l[0] > 0.9, "ring λ2 should be close to 1: {}", l[0]);
+    }
+
+    #[test]
+    fn lambda2_matches_ring_closed_form() {
+        // Ring with equal weights 1/3: eigenvalues (1 + 2cos(2πk/M))/3.
+        let m = 12;
+        let mm = circ(m, 1);
+        let theory = (1.0 + 2.0 * (2.0 * std::f64::consts::PI / m as f64).cos()) / 3.0;
+        assert!(
+            (mm.lambda2() - theory).abs() < 1e-6,
+            "λ2={} theory={theory}",
+            mm.lambda2()
+        );
+    }
+
+    #[test]
+    fn complete_graph_one_round() {
+        let mm = circ(10, 5); // d_max ⇒ complete with uniform 1/10 weights
+        assert!(mm.lambda2() < 1e-8);
+        assert_eq!(mm.consensus_rounds(1e-9), 1);
+    }
+
+    #[test]
+    fn consensus_rounds_monotone_in_delta_and_degree() {
+        let mm = circ(20, 2);
+        assert!(mm.consensus_rounds(1e-12) >= mm.consensus_rounds(1e-3));
+        let sparse = circ(20, 1).consensus_rounds(1e-9);
+        let dense = circ(20, 6).consensus_rounds(1e-9);
+        assert!(
+            sparse > dense,
+            "sparse ring should need more rounds: {sparse} vs {dense}"
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn consensus_rounds_rejects_bad_delta() {
+        circ(5, 1).consensus_rounds(1.5);
+    }
+}

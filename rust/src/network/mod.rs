@@ -1,0 +1,32 @@
+//! Communication-network simulator.
+//!
+//! The paper assumes a synchronous peer-to-peer network of `M` workers
+//! with **no master node**, whose information-exchange pattern is a
+//! doubly-stochastic mixing matrix `H`. This module provides:
+//!
+//! * [`Topology`] — circular topology of degree `d` (the paper's
+//!   experimental choice, Fig. 2) plus complete / star / random-geometric
+//!   variants for ablations;
+//! * [`MixingMatrix`] — equal-neighbour weights (`h_ij = 1/|N_i|`, valid
+//!   on regular graphs) and Metropolis–Hastings weights (doubly
+//!   stochastic on *any* connected graph), with spectral-gap analysis to
+//!   derive the number of gossip rounds `B(d)` needed for a consensus
+//!   tolerance (the quantity behind Fig. 4's time-vs-degree transition);
+//! * [`GossipEngine`] — executes synchronous gossip-averaging rounds over
+//!   per-node matrices, with exact per-message byte accounting;
+//! * [`CommLedger`] — thread-safe message/byte/round counters (the data
+//!   source for the eq. (14)–(16) communication-load comparison);
+//! * [`LatencyModel`] — an α-β cost model mapping (rounds, bytes) to
+//!   simulated wall-clock time.
+
+mod accounting;
+mod gossip;
+mod latency;
+mod mixing;
+mod topology;
+
+pub use accounting::{CommLedger, CommSnapshot};
+pub use gossip::GossipEngine;
+pub use latency::LatencyModel;
+pub use mixing::{MixingMatrix, WeightRule};
+pub use topology::Topology;

@@ -1,0 +1,293 @@
+//! Graph topologies for the worker communication network.
+
+use crate::util::{Rng, Xoshiro256StarStar};
+use crate::{Error, Result};
+
+/// A communication topology over `M` nodes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Topology {
+    /// The paper's circular topology: node `i` is connected to its `d`
+    /// nearest neighbours on each side (Fig. 2). `d = floor(M/2)` (`d_max`)
+    /// yields the complete graph.
+    Circular {
+        /// Number of nodes `M`.
+        nodes: usize,
+        /// Connection degree `d` (neighbours per side).
+        degree: usize,
+    },
+    /// Complete graph (every node connected to every other).
+    Complete {
+        /// Number of nodes `M`.
+        nodes: usize,
+    },
+    /// Star graph centred on node 0 — *not* used by dSSFN itself (the
+    /// paper excludes master nodes) but needed by the master-worker
+    /// baseline comparison.
+    Star {
+        /// Number of nodes `M`.
+        nodes: usize,
+    },
+    /// Random geometric graph: nodes at i.i.d. uniform points in the unit
+    /// square, edges between pairs closer than `radius`. Regenerated
+    /// deterministically from `seed`; falls back to adding the shortest
+    /// missing links until connected.
+    RandomGeometric {
+        /// Number of nodes `M`.
+        nodes: usize,
+        /// Connection radius in the unit square.
+        radius: f64,
+        /// Placement seed.
+        seed: u64,
+    },
+}
+
+impl Topology {
+    /// Number of nodes `M`.
+    pub fn num_nodes(&self) -> usize {
+        match *self {
+            Topology::Circular { nodes, .. }
+            | Topology::Complete { nodes }
+            | Topology::Star { nodes }
+            | Topology::RandomGeometric { nodes, .. } => nodes,
+        }
+    }
+
+    /// Maximum meaningful circular degree for `m` nodes: at `d_max` every
+    /// node reaches all others (`|N_i| = M`).
+    pub fn max_circular_degree(m: usize) -> usize {
+        if m <= 1 {
+            0
+        } else {
+            m / 2
+        }
+    }
+
+    /// Neighbour sets, **including self** (the paper's convention
+    /// `i ∈ N_i`), as a sorted adjacency list per node.
+    pub fn neighbor_sets(&self) -> Result<Vec<Vec<usize>>> {
+        let m = self.num_nodes();
+        if m == 0 {
+            return Err(Error::Network("topology with 0 nodes".into()));
+        }
+        let mut adj: Vec<Vec<usize>> = vec![Vec::new(); m];
+        match *self {
+            Topology::Circular { degree, .. } => {
+                let dmax = Self::max_circular_degree(m);
+                if degree == 0 && m > 1 {
+                    return Err(Error::Network("circular degree must be >= 1".into()));
+                }
+                if degree > dmax {
+                    return Err(Error::Network(format!(
+                        "circular degree {degree} exceeds d_max={dmax} for M={m}"
+                    )));
+                }
+                for i in 0..m {
+                    adj[i].push(i);
+                    for k in 1..=degree {
+                        adj[i].push((i + k) % m);
+                        adj[i].push((i + m - k) % m);
+                    }
+                    adj[i].sort_unstable();
+                    adj[i].dedup();
+                }
+            }
+            Topology::Complete { .. } => {
+                for (i, set) in adj.iter_mut().enumerate() {
+                    *set = (0..m).collect();
+                    let _ = i;
+                }
+            }
+            Topology::Star { .. } => {
+                for (i, set) in adj.iter_mut().enumerate() {
+                    if i == 0 {
+                        *set = (0..m).collect();
+                    } else {
+                        *set = vec![0, i];
+                    }
+                }
+            }
+            Topology::RandomGeometric { radius, seed, .. } => {
+                let mut rng = Xoshiro256StarStar::seed_from_u64(seed);
+                let pts: Vec<(f64, f64)> =
+                    (0..m).map(|_| (rng.next_f64(), rng.next_f64())).collect();
+                let d2 = |a: (f64, f64), b: (f64, f64)| {
+                    (a.0 - b.0).powi(2) + (a.1 - b.1).powi(2)
+                };
+                for i in 0..m {
+                    adj[i].push(i);
+                    for j in 0..m {
+                        if i != j && d2(pts[i], pts[j]) <= radius * radius {
+                            adj[i].push(j);
+                        }
+                    }
+                    adj[i].sort_unstable();
+                }
+                // Ensure connectivity: greedily add the shortest edge
+                // bridging disconnected components.
+                while let Some(components) = disconnected_components(&adj) {
+                    let (comp_a, comp_b) = components;
+                    let mut best = (f64::INFINITY, 0usize, 0usize);
+                    for &i in &comp_a {
+                        for &j in &comp_b {
+                            let d = d2(pts[i], pts[j]);
+                            if d < best.0 {
+                                best = (d, i, j);
+                            }
+                        }
+                    }
+                    adj[best.1].push(best.2);
+                    adj[best.2].push(best.1);
+                    adj[best.1].sort_unstable();
+                    adj[best.2].sort_unstable();
+                }
+            }
+        }
+        Ok(adj)
+    }
+
+    /// Whether the topology is connected (single component).
+    pub fn is_connected(&self) -> Result<bool> {
+        let adj = self.neighbor_sets()?;
+        Ok(disconnected_components(&adj).is_none())
+    }
+
+    /// Short display name for reports.
+    pub fn describe(&self) -> String {
+        match *self {
+            Topology::Circular { nodes, degree } => format!("circular(M={nodes}, d={degree})"),
+            Topology::Complete { nodes } => format!("complete(M={nodes})"),
+            Topology::Star { nodes } => format!("star(M={nodes})"),
+            Topology::RandomGeometric { nodes, radius, .. } => {
+                format!("rgg(M={nodes}, r={radius})")
+            }
+        }
+    }
+}
+
+/// If the graph is disconnected, return two node sets from different
+/// components (the BFS-reachable set from node 0 and its complement).
+fn disconnected_components(adj: &[Vec<usize>]) -> Option<(Vec<usize>, Vec<usize>)> {
+    let m = adj.len();
+    let mut seen = vec![false; m];
+    let mut stack = vec![0usize];
+    seen[0] = true;
+    while let Some(i) = stack.pop() {
+        for &j in &adj[i] {
+            if !seen[j] {
+                seen[j] = true;
+                stack.push(j);
+            }
+        }
+    }
+    if seen.iter().all(|&s| s) {
+        None
+    } else {
+        let a: Vec<usize> = (0..m).filter(|&i| seen[i]).collect();
+        let b: Vec<usize> = (0..m).filter(|&i| !seen[i]).collect();
+        Some((a, b))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn circular_degree_one_is_a_ring() {
+        let t = Topology::Circular { nodes: 6, degree: 1 };
+        let adj = t.neighbor_sets().unwrap();
+        assert_eq!(adj[0], vec![0, 1, 5]);
+        assert_eq!(adj[3], vec![2, 3, 4]);
+        assert!(t.is_connected().unwrap());
+    }
+
+    #[test]
+    fn circular_neighbor_count_matches_paper() {
+        // |N_i| = 2d+1 for d < d_max, and M at d = d_max.
+        for m in [5usize, 10, 20] {
+            let dmax = Topology::max_circular_degree(m);
+            for d in 1..=dmax {
+                let adj = Topology::Circular { nodes: m, degree: d }
+                    .neighbor_sets()
+                    .unwrap();
+                let expect = if d == dmax && m % 2 == 0 {
+                    // even M at d_max: the opposite node is reached once
+                    m
+                } else {
+                    (2 * d + 1).min(m)
+                };
+                for set in &adj {
+                    assert_eq!(set.len(), expect, "M={m} d={d}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn circular_dmax_is_complete() {
+        let m = 10;
+        let d = Topology::max_circular_degree(m);
+        let adj = Topology::Circular { nodes: m, degree: d }
+            .neighbor_sets()
+            .unwrap();
+        for set in &adj {
+            assert_eq!(set.len(), m);
+        }
+    }
+
+    #[test]
+    fn degree_bounds_enforced() {
+        assert!(Topology::Circular { nodes: 10, degree: 6 }
+            .neighbor_sets()
+            .is_err());
+        assert!(Topology::Circular { nodes: 10, degree: 0 }
+            .neighbor_sets()
+            .is_err());
+    }
+
+    #[test]
+    fn complete_and_star() {
+        let c = Topology::Complete { nodes: 4 }.neighbor_sets().unwrap();
+        for set in &c {
+            assert_eq!(set.len(), 4);
+        }
+        let s = Topology::Star { nodes: 5 }.neighbor_sets().unwrap();
+        assert_eq!(s[0].len(), 5);
+        assert_eq!(s[3], vec![0, 3]);
+        assert!(Topology::Star { nodes: 5 }.is_connected().unwrap());
+    }
+
+    #[test]
+    fn rgg_is_connected_and_deterministic() {
+        let t = Topology::RandomGeometric { nodes: 30, radius: 0.15, seed: 3 };
+        assert!(t.is_connected().unwrap());
+        let a = t.neighbor_sets().unwrap();
+        let b = t.neighbor_sets().unwrap();
+        assert_eq!(a, b);
+        // Self-inclusion everywhere.
+        for (i, set) in a.iter().enumerate() {
+            assert!(set.contains(&i));
+        }
+    }
+
+    #[test]
+    fn adjacency_is_symmetric() {
+        for t in [
+            Topology::Circular { nodes: 9, degree: 2 },
+            Topology::RandomGeometric { nodes: 25, radius: 0.3, seed: 8 },
+            Topology::Star { nodes: 6 },
+        ] {
+            let adj = t.neighbor_sets().unwrap();
+            for (i, set) in adj.iter().enumerate() {
+                for &j in set {
+                    assert!(adj[j].contains(&i), "{} asymmetric {i}-{j}", t.describe());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_nodes_rejected() {
+        assert!(Topology::Complete { nodes: 0 }.neighbor_sets().is_err());
+    }
+}

@@ -1,0 +1,218 @@
+//! AOT artifact manifest.
+//!
+//! `make artifacts` (python/compile/aot.py) lowers the L2 JAX graph —
+//! including the L1 Pallas kernels — to one HLO-text file per entrypoint
+//! and shape configuration, and writes a line-oriented manifest:
+//!
+//! ```text
+//! # dssfn artifact manifest v1
+//! config quickstart p=12 q=4 n=48 j=10
+//! config mnist-small p=64 q=10 n=220 j=100
+//! ```
+//!
+//! Entry files live at `artifacts/<config>/<entry>.hlo.txt` with a fixed
+//! entry set (see [`ENTRIES`]). HLO is shape-specialized, so each config
+//! carries its padded per-shard sample count `j`; the PJRT backend
+//! zero-pads smaller shards up to `j` (zero columns are exactly neutral:
+//! they contribute nothing to Grams and stay zero through ReLU layers).
+
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// The fixed artifact entry names per configuration.
+pub const ENTRIES: &[&str] = &[
+    "first_forward", // relu(W[n,p] @ X[p,j])
+    "forward",       // relu(W[n,n] @ Y[n,j])
+    "gram_p",        // (X Xᵀ + μ⁻¹ I [p,p], T Xᵀ [q,p])
+    "gram_n",        // (Y Yᵀ + μ⁻¹ I [n,n], T Yᵀ [q,n])
+    "inv_p",         // G⁻¹ [p,p]
+    "inv_n",         // G⁻¹ [n,n]
+    "o_update_p",    // (TYᵀ + μ⁻¹(Z−Λ)) @ G⁻¹, feature dim p
+    "o_update_n",    // (TYᵀ + μ⁻¹(Z−Λ)) @ G⁻¹, feature dim n
+    "output",        // O[q,n] @ Y[n,j]
+];
+
+/// One shape configuration in the manifest.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ManifestEntry {
+    /// Config name (usually the dataset key).
+    pub name: String,
+    /// Input dimension `P`.
+    pub p: usize,
+    /// Classes `Q`.
+    pub q: usize,
+    /// Hidden width `n`.
+    pub n: usize,
+    /// Padded per-shard sample count `J`.
+    pub j: usize,
+}
+
+impl ManifestEntry {
+    /// Path of an entry's HLO file below the artifact root.
+    pub fn entry_path(&self, root: &Path, entry: &str) -> PathBuf {
+        root.join(&self.name).join(format!("{entry}.hlo.txt"))
+    }
+
+    /// Check all expected HLO files exist.
+    pub fn verify_files(&self, root: &Path) -> Result<()> {
+        for e in ENTRIES {
+            let p = self.entry_path(root, e);
+            if !p.is_file() {
+                return Err(Error::Runtime(format!(
+                    "missing artifact {} (run `make artifacts`)",
+                    p.display()
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Parsed artifact manifest.
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactManifest {
+    root: PathBuf,
+    configs: BTreeMap<String, ManifestEntry>,
+}
+
+impl ArtifactManifest {
+    /// Load `<root>/manifest.txt`.
+    pub fn load(root: impl Into<PathBuf>) -> Result<Self> {
+        let root = root.into();
+        let path = root.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} (run `make artifacts`): {e}",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text, root)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(text: &str, root: PathBuf) -> Result<Self> {
+        let mut configs = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let kw = parts.next().unwrap_or("");
+            if kw != "config" {
+                return Err(Error::Runtime(format!(
+                    "manifest line {}: expected 'config', got '{kw}'",
+                    lineno + 1
+                )));
+            }
+            let name = parts
+                .next()
+                .ok_or_else(|| Error::Runtime(format!("manifest line {}: missing name", lineno + 1)))?
+                .to_string();
+            let mut fields: BTreeMap<&str, usize> = BTreeMap::new();
+            for kv in parts {
+                let (k, v) = kv.split_once('=').ok_or_else(|| {
+                    Error::Runtime(format!("manifest line {}: bad field '{kv}'", lineno + 1))
+                })?;
+                let v: usize = v.parse().map_err(|_| {
+                    Error::Runtime(format!("manifest line {}: bad number '{v}'", lineno + 1))
+                })?;
+                fields.insert(k, v);
+            }
+            let need = |k: &str| -> Result<usize> {
+                fields.get(k).copied().ok_or_else(|| {
+                    Error::Runtime(format!("manifest config '{name}': missing field '{k}'"))
+                })
+            };
+            let entry = ManifestEntry {
+                p: need("p")?,
+                q: need("q")?,
+                n: need("n")?,
+                j: need("j")?,
+                name: name.clone(),
+            };
+            configs.insert(name, entry);
+        }
+        Ok(Self { root, configs })
+    }
+
+    /// Artifact root directory.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Look up a configuration by name.
+    pub fn config(&self, name: &str) -> Result<&ManifestEntry> {
+        self.configs.get(name).ok_or_else(|| {
+            Error::Runtime(format!(
+                "no artifact config '{name}' in {} (have: {:?})",
+                self.root.display(),
+                self.configs.keys().collect::<Vec<_>>()
+            ))
+        })
+    }
+
+    /// All config names.
+    pub fn config_names(&self) -> Vec<&str> {
+        self.configs.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Number of configs.
+    pub fn len(&self) -> usize {
+        self.configs.len()
+    }
+
+    /// Whether the manifest is empty.
+    pub fn is_empty(&self) -> bool {
+        self.configs.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# dssfn artifact manifest v1
+config quickstart p=12 q=4 n=48 j=10
+
+config mnist-small p=64 q=10 n=220 j=100
+";
+
+    #[test]
+    fn parses_configs() {
+        let m = ArtifactManifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.len(), 2);
+        let c = m.config("quickstart").unwrap();
+        assert_eq!((c.p, c.q, c.n, c.j), (12, 4, 48, 10));
+        assert_eq!(m.config_names(), vec!["mnist-small", "quickstart"]);
+        assert!(m.config("nope").is_err());
+    }
+
+    #[test]
+    fn entry_paths_follow_convention() {
+        let m = ArtifactManifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        let c = m.config("quickstart").unwrap();
+        assert_eq!(
+            c.entry_path(m.root(), "gram_n"),
+            PathBuf::from("/tmp/a/quickstart/gram_n.hlo.txt")
+        );
+        // verify_files fails when files are absent.
+        assert!(c.verify_files(m.root()).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(ArtifactManifest::parse("bogus line", PathBuf::new()).is_err());
+        assert!(ArtifactManifest::parse("config x p=1 q=2 n=3", PathBuf::new()).is_err()); // missing j
+        assert!(ArtifactManifest::parse("config x p=z q=2 n=3 j=4", PathBuf::new()).is_err());
+        assert!(ArtifactManifest::parse("config x p 12", PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn empty_manifest_ok() {
+        let m = ArtifactManifest::parse("# nothing\n", PathBuf::new()).unwrap();
+        assert!(m.is_empty());
+    }
+}

@@ -1,0 +1,45 @@
+//! Compute backends: native `f64` reference and the PJRT artifact path.
+//!
+//! The coordinator is generic over a [`ComputeBackend`] that supplies the
+//! four dense kernels of the dSSFN hot path:
+//!
+//! 1. `layer_forward` — `g(W·Y)` (L1 Pallas kernel `matmul_relu`),
+//! 2. `prepare_layer` — Grams `G = Y Yᵀ + μ⁻¹I`, `T Yᵀ` and the hoisted
+//!    `G⁻¹` (L1 kernel `gram`, L2 `gram_inverse`),
+//! 3. the per-iteration O-update inside the returned [`LocalSolve`]
+//!    (L1 kernel `admm_o_update`),
+//! 4. `output_scores` — `O·Y` for prediction.
+//!
+//! [`NativeBackend`] implements all of it with the crate's own `f64`
+//! linalg and doubles as the bit-stable oracle; [`PjrtBackend`] executes
+//! the AOT-compiled HLO artifacts produced by `make artifacts` via the
+//! PJRT CPU client (`xla` crate). Python never runs at training time.
+
+mod artifact;
+mod native;
+mod pjrt;
+
+pub use artifact::{ArtifactManifest, ManifestEntry};
+pub use native::NativeBackend;
+pub use pjrt::PjrtBackend;
+
+use crate::admm::LocalSolve;
+use crate::linalg::Matrix;
+use crate::Result;
+
+/// Dense kernels the coordinator needs, supplied by a backend.
+pub trait ComputeBackend: Send + Sync {
+    /// Backend name for reports (`"native"`, `"pjrt"`).
+    fn name(&self) -> &str;
+
+    /// `g(W·Y)`: fused matmul + ReLU layer forward. `W` is `n×d`,
+    /// `Y` is `d×J`.
+    fn layer_forward(&self, w: &Matrix, y: &Matrix) -> Result<Matrix>;
+
+    /// Precompute one layer's node-local ADMM solver from features
+    /// `y (n×J_m)`, targets `t (Q×J_m)` and the Lagrangian `μ`.
+    fn prepare_layer(&self, y: &Matrix, t: &Matrix, mu: f64) -> Result<Box<dyn LocalSolve>>;
+
+    /// Prediction scores `O·Y`.
+    fn output_scores(&self, o: &Matrix, y: &Matrix) -> Result<Matrix>;
+}

@@ -1,0 +1,74 @@
+//! Native `f64` compute backend — the bit-stable oracle the PJRT path is
+//! verified against, and the default for the centralized baseline.
+
+use super::ComputeBackend;
+use crate::admm::{LayerLocalSolver, LocalSolve};
+use crate::linalg::Matrix;
+use crate::Result;
+
+/// Pure-Rust backend over the crate's own linalg.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    /// Create a native backend.
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl ComputeBackend for NativeBackend {
+    fn name(&self) -> &str {
+        "native"
+    }
+
+    fn layer_forward(&self, w: &Matrix, y: &Matrix) -> Result<Matrix> {
+        let mut out = w.matmul(y)?;
+        out.relu_inplace();
+        Ok(out)
+    }
+
+    fn prepare_layer(&self, y: &Matrix, t: &Matrix, mu: f64) -> Result<Box<dyn LocalSolve>> {
+        Ok(Box::new(LayerLocalSolver::new(y, t, mu)?))
+    }
+
+    fn output_scores(&self, o: &Matrix, y: &Matrix) -> Result<Matrix> {
+        o.matmul(y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{Rng, Xoshiro256StarStar};
+
+    #[test]
+    fn forward_is_relu_of_matmul() {
+        let b = NativeBackend::new();
+        let w = Matrix::from_rows(&[vec![1.0, -1.0], vec![-2.0, 0.5]]).unwrap();
+        let y = Matrix::from_rows(&[vec![1.0, 0.0], vec![0.0, 2.0]]).unwrap();
+        let out = b.layer_forward(&w, &y).unwrap();
+        // W·Y = [[1,-2],[-2,1]] → relu
+        assert_eq!(out.get(0, 0), 1.0);
+        assert_eq!(out.get(0, 1), 0.0);
+        assert_eq!(out.get(1, 0), 0.0);
+        assert_eq!(out.get(1, 1), 1.0);
+        assert_eq!(b.name(), "native");
+    }
+
+    #[test]
+    fn prepare_layer_gives_working_solver() {
+        let mut rng = Xoshiro256StarStar::seed_from_u64(1);
+        let y = Matrix::from_fn(4, 20, |_, _| rng.uniform(-1.0, 1.0));
+        let t = Matrix::from_fn(2, 20, |_, _| rng.uniform(-1.0, 1.0));
+        let b = NativeBackend::new();
+        let solver = b.prepare_layer(&y, &t, 1.0).unwrap();
+        let z = Matrix::zeros(2, 4);
+        let o = solver.o_update(&z, &z).unwrap();
+        assert_eq!(o.shape(), (2, 4));
+        let c = solver.cost(&o).unwrap();
+        assert!(c >= 0.0);
+        let scores = b.output_scores(&o, &y).unwrap();
+        assert_eq!(scores.shape(), (2, 20));
+    }
+}

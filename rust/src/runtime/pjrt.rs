@@ -1,0 +1,563 @@
+//! PJRT compute backend: executes the AOT-compiled HLO artifacts.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based and therefore not `Send`;
+//! worker threads cannot share it. The backend instead runs a dedicated
+//! **service thread** that owns the client and the compiled executables,
+//! and exposes a cloneable, `Send + Sync` handle that forwards kernel
+//! requests over an mpsc channel. CPU PJRT parallelizes internally, so a
+//! single submission thread is not the bottleneck (verified in
+//! `EXPERIMENTS.md §Perf`).
+//!
+//! Shape discipline: artifacts are compiled for a fixed padded per-shard
+//! width `J`. Inputs with fewer columns are zero-padded — zero sample
+//! columns are exactly neutral through the whole dSSFN pipeline (they add
+//! nothing to `Y Yᵀ` or `T Yᵀ`, and `g(W·0) = 0` keeps them zero through
+//! every layer).
+
+use super::artifact::{ArtifactManifest, ManifestEntry};
+use super::ComputeBackend;
+use crate::admm::LocalSolve;
+use crate::linalg::Matrix;
+use crate::{Error, Result};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// Kernel identifiers matching the artifact entry set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kernel {
+    FirstForward,
+    Forward,
+    GramP,
+    GramN,
+    InvP,
+    InvN,
+    OUpdateP,
+    OUpdateN,
+    Output,
+}
+
+impl Kernel {
+    fn entry(self) -> &'static str {
+        match self {
+            Kernel::FirstForward => "first_forward",
+            Kernel::Forward => "forward",
+            Kernel::GramP => "gram_p",
+            Kernel::GramN => "gram_n",
+            Kernel::InvP => "inv_p",
+            Kernel::InvN => "inv_n",
+            Kernel::OUpdateP => "o_update_p",
+            Kernel::OUpdateN => "o_update_n",
+            Kernel::Output => "output",
+        }
+    }
+
+    const ALL: [Kernel; 9] = [
+        Kernel::FirstForward,
+        Kernel::Forward,
+        Kernel::GramP,
+        Kernel::GramN,
+        Kernel::InvP,
+        Kernel::InvN,
+        Kernel::OUpdateP,
+        Kernel::OUpdateN,
+        Kernel::Output,
+    ];
+
+    fn index(self) -> usize {
+        Kernel::ALL.iter().position(|k| *k == self).unwrap()
+    }
+}
+
+/// Requests to the service thread.
+enum Request {
+    /// Run a kernel with host operands (uploaded per call).
+    Kernel {
+        kernel: Kernel,
+        operands: Vec<Matrix>,
+        scalar: Option<f64>,
+        reply: mpsc::Sender<Result<Vec<Matrix>>>,
+    },
+    /// Upload a layer's loop-invariant O-update operands (`T·Yᵀ`, `G⁻¹`)
+    /// to device buffers once; returns a handle for [`Request::OUpdate`].
+    /// §Perf: avoids re-uploading `n² + Q·n` f32 words on every one of
+    /// the `K` ADMM iterations.
+    LoadSolver {
+        kernel: Kernel,
+        tyt: Matrix,
+        ginv: Matrix,
+        reply: mpsc::Sender<Result<u64>>,
+    },
+    /// Per-iteration O-update against cached buffers.
+    OUpdate {
+        id: u64,
+        z: Matrix,
+        lam: Matrix,
+        mu_inv: f64,
+        reply: mpsc::Sender<Result<Vec<Matrix>>>,
+    },
+    /// Release a cached solver's buffers.
+    DropSolver { id: u64 },
+}
+
+/// Handle to the PJRT service thread. Cloneable, `Send + Sync`.
+#[derive(Clone)]
+pub struct PjrtBackend {
+    inner: Arc<Inner>,
+    cfg: ManifestEntry,
+}
+
+struct Inner {
+    tx: Mutex<Option<mpsc::Sender<Request>>>,
+    join: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Drop for Inner {
+    fn drop(&mut self) {
+        // Closing the channel stops the service loop.
+        self.tx.lock().map(|mut g| g.take()).ok();
+        if let Ok(mut g) = self.join.lock() {
+            if let Some(h) = g.take() {
+                h.join().ok();
+            }
+        }
+    }
+}
+
+impl PjrtBackend {
+    /// Start a backend for one artifact configuration. Compiles all nine
+    /// entrypoints up front; fails fast if any artifact is missing or
+    /// rejected by the PJRT compiler.
+    pub fn start(manifest: &ArtifactManifest, config: &str) -> Result<Self> {
+        let cfg = manifest.config(config)?.clone();
+        cfg.verify_files(manifest.root())?;
+        let paths: Vec<std::path::PathBuf> = Kernel::ALL
+            .iter()
+            .map(|k| cfg.entry_path(manifest.root(), k.entry()))
+            .collect();
+
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-service".into())
+            .spawn(move || service_main(paths, rx, ready_tx))
+            .map_err(|e| Error::Runtime(format!("cannot spawn pjrt thread: {e}")))?;
+        // Wait for compilation handshake.
+        match ready_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                join.join().ok();
+                return Err(e);
+            }
+            Err(_) => {
+                join.join().ok();
+                return Err(Error::Runtime("pjrt service died during startup".into()));
+            }
+        }
+        Ok(Self {
+            inner: Arc::new(Inner {
+                tx: Mutex::new(Some(tx)),
+                join: Mutex::new(Some(join)),
+            }),
+            cfg,
+        })
+    }
+
+    /// The shape configuration this backend serves.
+    pub fn config(&self) -> &ManifestEntry {
+        &self.cfg
+    }
+
+    fn send(&self, req: Request) -> Result<()> {
+        let guard = self
+            .inner
+            .tx
+            .lock()
+            .map_err(|_| Error::Runtime("pjrt handle poisoned".into()))?;
+        let tx = guard
+            .as_ref()
+            .ok_or_else(|| Error::Runtime("pjrt service stopped".into()))?;
+        tx.send(req)
+            .map_err(|_| Error::Runtime("pjrt service channel closed".into()))
+    }
+
+    fn call(&self, kernel: Kernel, operands: Vec<Matrix>, scalar: Option<f64>) -> Result<Vec<Matrix>> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::Kernel {
+            kernel,
+            operands,
+            scalar,
+            reply,
+        })?;
+        rx.recv()
+            .map_err(|_| Error::Runtime("pjrt service dropped request".into()))?
+    }
+
+    fn load_solver(&self, kernel: Kernel, tyt: Matrix, ginv: Matrix) -> Result<u64> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::LoadSolver {
+            kernel,
+            tyt,
+            ginv,
+            reply,
+        })?;
+        rx.recv()
+            .map_err(|_| Error::Runtime("pjrt service dropped request".into()))?
+    }
+
+    fn o_update_cached(&self, id: u64, z: &Matrix, lam: &Matrix, mu_inv: f64) -> Result<Vec<Matrix>> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::OUpdate {
+            id,
+            z: z.clone(),
+            lam: lam.clone(),
+            mu_inv,
+            reply,
+        })?;
+        rx.recv()
+            .map_err(|_| Error::Runtime("pjrt service dropped request".into()))?
+    }
+
+    /// Zero-pad `m` to `cols` columns (no-op if already that wide).
+    fn pad_cols(m: &Matrix, cols: usize) -> Result<Matrix> {
+        if m.cols() == cols {
+            return Ok(m.clone());
+        }
+        if m.cols() > cols {
+            return Err(Error::Runtime(format!(
+                "shard has {} samples but artifact J={cols}; regenerate artifacts",
+                m.cols()
+            )));
+        }
+        let mut out = Matrix::zeros(m.rows(), cols);
+        for r in 0..m.rows() {
+            out.row_mut(r)[..m.cols()].copy_from_slice(m.row(r));
+        }
+        Ok(out)
+    }
+
+    fn feature_kernelset(&self, dim: usize) -> Result<(Kernel, Kernel, Kernel)> {
+        if dim == self.cfg.n {
+            Ok((Kernel::GramN, Kernel::InvN, Kernel::OUpdateN))
+        } else if dim == self.cfg.p {
+            Ok((Kernel::GramP, Kernel::InvP, Kernel::OUpdateP))
+        } else {
+            Err(Error::Runtime(format!(
+                "feature dim {dim} matches neither p={} nor n={} of config '{}'",
+                self.cfg.p, self.cfg.n, self.cfg.name
+            )))
+        }
+    }
+}
+
+impl ComputeBackend for PjrtBackend {
+    fn name(&self) -> &str {
+        "pjrt"
+    }
+
+    fn layer_forward(&self, w: &Matrix, y: &Matrix) -> Result<Matrix> {
+        let kernel = if y.rows() == self.cfg.p && w.cols() == self.cfg.p && self.cfg.p != self.cfg.n
+        {
+            Kernel::FirstForward
+        } else {
+            Kernel::Forward
+        };
+        let j_orig = y.cols();
+        let y_pad = Self::pad_cols(y, self.cfg.j)?;
+        let mut out = self
+            .call(kernel, vec![w.clone(), y_pad], None)?
+            .pop()
+            .ok_or_else(|| Error::Runtime("forward returned no output".into()))?;
+        if j_orig != self.cfg.j {
+            out = out.col_block(0, j_orig)?;
+        }
+        Ok(out)
+    }
+
+    fn prepare_layer(&self, y: &Matrix, t: &Matrix, mu: f64) -> Result<Box<dyn LocalSolve>> {
+        if mu <= 0.0 {
+            return Err(Error::Config(format!("mu must be positive, got {mu}")));
+        }
+        let (gram_k, inv_k, upd_k) = self.feature_kernelset(y.rows())?;
+        let mu_inv = 1.0 / mu;
+        let y_pad = Self::pad_cols(y, self.cfg.j)?;
+        let t_pad = Self::pad_cols(t, self.cfg.j)?;
+        let mut grams = self.call(gram_k, vec![y_pad, t_pad], Some(mu_inv))?;
+        if grams.len() != 2 {
+            return Err(Error::Runtime(format!(
+                "gram kernel returned {} outputs, expected 2",
+                grams.len()
+            )));
+        }
+        let tyt = grams.pop().unwrap();
+        let g = grams.pop().unwrap();
+        let ginv = self
+            .call(inv_k, vec![g.clone()], None)?
+            .pop()
+            .ok_or_else(|| Error::Runtime("inverse returned no output".into()))?;
+        // gram0 = G − μ⁻¹I, kept in f64 for exact cost accounting.
+        let mut gram0 = g;
+        gram0.add_diag(-mu_inv)?;
+        // Park the loop-invariant operands on the device once.
+        let id = self.load_solver(upd_k, tyt.clone(), ginv)?;
+        Ok(Box::new(PjrtLayerSolver {
+            backend: self.clone(),
+            solver_id: id,
+            tyt,
+            gram0,
+            t_norm_sq: t.frobenius_norm_sq(),
+            mu_inv,
+        }))
+    }
+
+    fn output_scores(&self, o: &Matrix, y: &Matrix) -> Result<Matrix> {
+        let j_orig = y.cols();
+        let y_pad = Self::pad_cols(y, self.cfg.j)?;
+        let mut out = self
+            .call(Kernel::Output, vec![o.clone(), y_pad], None)?
+            .pop()
+            .ok_or_else(|| Error::Runtime("output returned no output".into()))?;
+        if j_orig != self.cfg.j {
+            out = out.col_block(0, j_orig)?;
+        }
+        Ok(out)
+    }
+}
+
+/// Node-local ADMM solver whose O-update runs on the PJRT artifact
+/// against device-cached loop-invariant operands.
+struct PjrtLayerSolver {
+    backend: PjrtBackend,
+    solver_id: u64,
+    tyt: Matrix,
+    gram0: Matrix,
+    t_norm_sq: f64,
+    mu_inv: f64,
+}
+
+impl Drop for PjrtLayerSolver {
+    fn drop(&mut self) {
+        self.backend
+            .send(Request::DropSolver { id: self.solver_id })
+            .ok();
+    }
+}
+
+impl LocalSolve for PjrtLayerSolver {
+    fn o_update(&self, z: &Matrix, lambda: &Matrix) -> Result<Matrix> {
+        self.backend
+            .o_update_cached(self.solver_id, z, lambda, self.mu_inv)?
+            .pop()
+            .ok_or_else(|| Error::Runtime("o_update returned no output".into()))
+    }
+
+    fn cost(&self, o: &Matrix) -> Result<f64> {
+        // ‖T‖² − 2⟨O, TYᵀ⟩ + ⟨O·(YYᵀ), O⟩ from the cached Grams.
+        let og = o.matmul(&self.gram0)?;
+        let mut quad = 0.0;
+        let mut cross = 0.0;
+        for (a, (b, c)) in o
+            .as_slice()
+            .iter()
+            .zip(og.as_slice().iter().zip(self.tyt.as_slice()))
+        {
+            quad += a * b;
+            cross += a * c;
+        }
+        Ok((self.t_norm_sq - 2.0 * cross + quad).max(0.0))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Service thread
+// ---------------------------------------------------------------------
+
+fn service_main(
+    paths: Vec<std::path::PathBuf>,
+    rx: mpsc::Receiver<Request>,
+    ready: mpsc::Sender<Result<()>>,
+) {
+    let setup = || -> Result<(xla::PjRtClient, Vec<xla::PjRtLoadedExecutable>)> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PjRtClient::cpu: {e}")))?;
+        let mut execs = Vec::with_capacity(paths.len());
+        for p in &paths {
+            let proto = xla::HloModuleProto::from_text_file(
+                p.to_str()
+                    .ok_or_else(|| Error::Runtime("non-utf8 artifact path".into()))?,
+            )
+            .map_err(|e| Error::Runtime(format!("parse {}: {e}", p.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| Error::Runtime(format!("compile {}: {e}", p.display())))?;
+            execs.push(exe);
+        }
+        Ok((client, execs))
+    };
+    let (client, execs) = match setup() {
+        Ok(v) => {
+            ready.send(Ok(())).ok();
+            v
+        }
+        Err(e) => {
+            ready.send(Err(e)).ok();
+            return;
+        }
+    };
+    // Device-cached solver operands: id -> (kernel, tyt buffer, ginv buffer).
+    let mut solvers: std::collections::HashMap<u64, (Kernel, xla::PjRtBuffer, xla::PjRtBuffer)> =
+        std::collections::HashMap::new();
+    let mut next_id = 0u64;
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Kernel {
+                kernel,
+                operands,
+                scalar,
+                reply,
+            } => {
+                let result = run_kernel(&execs[kernel.index()], &operands, scalar);
+                reply.send(result).ok();
+            }
+            Request::LoadSolver {
+                kernel,
+                tyt,
+                ginv,
+                reply,
+            } => {
+                let result = (|| -> Result<u64> {
+                    let tyt_b = upload(&client, &tyt)?;
+                    let ginv_b = upload(&client, &ginv)?;
+                    let id = next_id;
+                    next_id += 1;
+                    solvers.insert(id, (kernel, tyt_b, ginv_b));
+                    Ok(id)
+                })();
+                reply.send(result).ok();
+            }
+            Request::OUpdate {
+                id,
+                z,
+                lam,
+                mu_inv,
+                reply,
+            } => {
+                let result = (|| -> Result<Vec<Matrix>> {
+                    let (kernel, tyt_b, ginv_b) = solvers
+                        .get(&id)
+                        .ok_or_else(|| Error::Runtime(format!("no cached solver {id}")))?;
+                    let z_b = upload(&client, &z)?;
+                    let lam_b = upload(&client, &lam)?;
+                    let mu_b = client
+                        .buffer_from_host_buffer::<f32>(&[mu_inv as f32], &[], None)
+                        .map_err(|e| Error::Runtime(format!("scalar upload: {e}")))?;
+                    // Parameter order matches the o_update artifact ABI:
+                    // (tyt, z, lam, ginv, mu_inv).
+                    let buffers = execs[kernel.index()]
+                        .execute_b::<&xla::PjRtBuffer>(&[tyt_b, &z_b, &lam_b, ginv_b, &mu_b])
+                        .map_err(|e| Error::Runtime(format!("execute_b: {e}")))?;
+                    read_outputs(&buffers)
+                })();
+                reply.send(result).ok();
+            }
+            Request::DropSolver { id } => {
+                solvers.remove(&id);
+            }
+        }
+    }
+    let _client = client; // keep alive for the executables' lifetime
+}
+
+/// Upload a matrix as an f32 device buffer.
+fn upload(client: &xla::PjRtClient, m: &Matrix) -> Result<xla::PjRtBuffer> {
+    client
+        .buffer_from_host_buffer::<f32>(&m.to_f32_vec(), &[m.rows(), m.cols()], None)
+        .map_err(|e| Error::Runtime(format!("buffer upload: {e}")))
+}
+
+fn run_kernel(
+    exe: &xla::PjRtLoadedExecutable,
+    operands: &[Matrix],
+    scalar: Option<f64>,
+) -> Result<Vec<Matrix>> {
+    let mut literals: Vec<xla::Literal> = Vec::with_capacity(operands.len() + 1);
+    for m in operands {
+        let lit = xla::Literal::vec1(&m.to_f32_vec())
+            .reshape(&[m.rows() as i64, m.cols() as i64])
+            .map_err(|e| Error::Runtime(format!("literal reshape: {e}")))?;
+        literals.push(lit);
+    }
+    if let Some(s) = scalar {
+        literals.push(xla::Literal::scalar(s as f32));
+    }
+    let buffers = exe
+        .execute::<xla::Literal>(&literals)
+        .map_err(|e| Error::Runtime(format!("execute: {e}")))?;
+    read_outputs(&buffers)
+}
+
+/// Read the tupled outputs of an execution back into host matrices
+/// (aot.py lowers with `return_tuple=True`).
+fn read_outputs(buffers: &[Vec<xla::PjRtBuffer>]) -> Result<Vec<Matrix>> {
+    let out = buffers[0][0]
+        .to_literal_sync()
+        .map_err(|e| Error::Runtime(format!("to_literal: {e}")))?;
+    let parts = out
+        .to_tuple()
+        .map_err(|e| Error::Runtime(format!("untuple: {e}")))?;
+    let mut results = Vec::with_capacity(parts.len());
+    for lit in parts {
+        let shape = lit
+            .array_shape()
+            .map_err(|e| Error::Runtime(format!("shape: {e}")))?;
+        let dims = shape.dims();
+        let (rows, cols) = match dims.len() {
+            2 => (dims[0] as usize, dims[1] as usize),
+            1 => (1usize, dims[0] as usize),
+            0 => (1usize, 1usize),
+            _ => {
+                return Err(Error::Runtime(format!(
+                    "unexpected output rank {}",
+                    dims.len()
+                )))
+            }
+        };
+        let v: Vec<f32> = lit
+            .to_vec()
+            .map_err(|e| Error::Runtime(format!("to_vec: {e}")))?;
+        results.push(Matrix::from_f32_slice(rows, cols, &v)?);
+    }
+    Ok(results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_cols_behaviour() {
+        let m = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
+        let p = PjrtBackend::pad_cols(&m, 4).unwrap();
+        assert_eq!(p.shape(), (2, 4));
+        assert_eq!(p.get(0, 1), 2.0);
+        assert_eq!(p.get(0, 3), 0.0);
+        let same = PjrtBackend::pad_cols(&m, 2).unwrap();
+        assert_eq!(same, m);
+        assert!(PjrtBackend::pad_cols(&m, 1).is_err());
+    }
+
+    #[test]
+    fn missing_artifacts_fail_fast() {
+        let manifest = ArtifactManifest::parse(
+            "config ghost p=2 q=2 n=6 j=4\n",
+            std::path::PathBuf::from("/nonexistent"),
+        )
+        .unwrap();
+        assert!(PjrtBackend::start(&manifest, "ghost").is_err());
+        assert!(PjrtBackend::start(&manifest, "missing").is_err());
+    }
+
+    // End-to-end PJRT execution tests live in rust/tests/pjrt_parity.rs
+    // and run only when `make artifacts` has produced the HLO files.
+}

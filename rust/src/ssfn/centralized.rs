@@ -1,0 +1,304 @@
+//! Centralized SSFN trainer — the Table-II baseline and the reference
+//! point for the paper's "centralized equivalence" claim.
+//!
+//! Layer-wise learning (paper §II-B): starting from `Y_0 = X`, each step
+//! solves the convex problem (6) for `O_l` with ADMM, then forms
+//! `W_{l+1} = [V_Q O_l*; R_{l+1}]` (eq. 7) and advances the features with
+//! `Y_{l+1} = g(W_{l+1} Y_l)`. Only `O_l` is ever learned; `R_l` is the
+//! pre-shared random block.
+
+use super::model::SsfnModel;
+use super::weights::{build_weight, RandomMatrices, SsfnArchitecture};
+use crate::admm::{solve_centralized, AdmmParams};
+use crate::data::ClassificationTask;
+use crate::linalg::Matrix;
+use crate::metrics::{error_db, LayerRecord, TrainReport};
+use crate::util::Stopwatch;
+use crate::Result;
+
+/// Hyper-parameters shared by the centralized and decentralized trainers.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainHyper {
+    /// `μ_0` — Lagrangian parameter for the input-layer solve (`O_0`).
+    pub mu0: f64,
+    /// `μ_l` — Lagrangian parameter for all hidden-layer solves.
+    pub mul: f64,
+    /// ADMM iterations per layer `K` (paper: 100).
+    pub admm_iterations: usize,
+    /// Frobenius radius `ε`; `None` uses the paper's `ε = 2Q`.
+    pub eps: Option<f64>,
+}
+
+impl Default for TrainHyper {
+    fn default() -> Self {
+        Self {
+            mu0: 1e-3,
+            mul: 1.0,
+            admm_iterations: 100,
+            eps: None,
+        }
+    }
+}
+
+/// Layer-growth stopping policy — the *self-size-estimating* behaviour
+/// of SSFN (ref. [1]; the paper notes dSSFN supports it too, §I).
+/// Training stops adding layers once the converged layer cost improves
+/// by less than `min_relative_improvement` over the previous layer;
+/// the architecture's `layers` field acts as the maximum depth.
+#[derive(Debug, Clone, Copy)]
+pub struct GrowthPolicy {
+    /// Stop when `(cost_{l-1} − cost_l)/cost_{l-1}` falls below this.
+    pub min_relative_improvement: f64,
+}
+
+impl GrowthPolicy {
+    /// Whether to stop given the previous and current layer costs.
+    pub fn should_stop(&self, prev: f64, current: f64) -> bool {
+        if prev <= 0.0 {
+            return true;
+        }
+        (prev - current) / prev < self.min_relative_improvement
+    }
+}
+
+impl TrainHyper {
+    /// Resolve `ε` for `Q` classes.
+    pub fn eps_for(&self, num_classes: usize) -> f64 {
+        self.eps.unwrap_or(2.0 * num_classes as f64)
+    }
+
+    /// ADMM parameters for layer `l` (0 = input solve).
+    pub fn admm_params(&self, layer: usize, num_classes: usize) -> AdmmParams {
+        AdmmParams {
+            mu: if layer == 0 { self.mu0 } else { self.mul },
+            eps: self.eps_for(num_classes),
+            iterations: self.admm_iterations,
+        }
+    }
+}
+
+/// Trains an SSFN with all data in one place.
+#[derive(Debug, Clone)]
+pub struct CentralizedTrainer {
+    arch: SsfnArchitecture,
+    hyper: TrainHyper,
+    seed: u64,
+}
+
+impl CentralizedTrainer {
+    /// Create a trainer.
+    pub fn new(arch: SsfnArchitecture, hyper: TrainHyper, seed: u64) -> Result<Self> {
+        arch.validate()?;
+        Ok(Self { arch, hyper, seed })
+    }
+
+    /// The architecture being trained.
+    pub fn arch(&self) -> &SsfnArchitecture {
+        &self.arch
+    }
+
+    /// Train on a task; returns the model and a full report.
+    pub fn train(&self, task: &ClassificationTask) -> Result<(SsfnModel, TrainReport)> {
+        self.train_impl(task, None)
+    }
+
+    /// Train with self-size estimation: layers are added until `policy`
+    /// says the cost has flattened (or `arch.layers` is reached).
+    pub fn train_with_growth(
+        &self,
+        task: &ClassificationTask,
+        policy: GrowthPolicy,
+    ) -> Result<(SsfnModel, TrainReport)> {
+        self.train_impl(task, Some(policy))
+    }
+
+    fn train_impl(
+        &self,
+        task: &ClassificationTask,
+        policy: Option<GrowthPolicy>,
+    ) -> Result<(SsfnModel, TrainReport)> {
+        let q = self.arch.num_classes;
+        let random = RandomMatrices::generate(&self.arch, self.seed)?;
+        let t = &task.train.t;
+        let mut sw = Stopwatch::new();
+
+        let mut report = TrainReport {
+            dataset: task.name.clone(),
+            mode: "centralized".into(),
+            ..Default::default()
+        };
+
+        // Layer 0: solve O_0 directly on the input features.
+        let mut y: Matrix = task.train.x.clone();
+        let params0 = self.hyper.admm_params(0, q);
+        let (mut o, curve) = solve_centralized(&y, t, &params0)?;
+        report.layers.push(LayerRecord {
+            layer: 0,
+            cost_curve: curve,
+            wall_secs: sw.split("layer0"),
+            ..Default::default()
+        });
+
+        // Layers 1..L: build W_l from O_{l-1}, advance features, solve O_l.
+        let mut weights = Vec::with_capacity(self.arch.layers);
+        let mut prev_cost = report.layers[0].final_cost();
+        for l in 1..=self.arch.layers {
+            let w = build_weight(&o, random.layer(l))?;
+            y = w.matmul(&y)?;
+            y.relu_inplace();
+            weights.push(w);
+            let params = self.hyper.admm_params(l, q);
+            let (o_l, curve) = solve_centralized(&y, t, &params)?;
+            o = o_l;
+            report.layers.push(LayerRecord {
+                layer: l,
+                cost_curve: curve,
+                wall_secs: sw.split(&format!("layer{l}")),
+                ..Default::default()
+            });
+            // Self-size estimation: stop growing once the cost flattens.
+            if let (Some(p), Some(prev), Some(cur)) =
+                (policy, prev_cost, report.layers[l].final_cost())
+            {
+                if p.should_stop(prev, cur) {
+                    break;
+                }
+            }
+            prev_cost = report.layers[l].final_cost();
+        }
+
+        let arch = SsfnArchitecture {
+            layers: weights.len(),
+            ..self.arch
+        };
+        let model = SsfnModel::new(arch, weights, o)?;
+        report.train_accuracy = model.accuracy(&task.train)?;
+        report.test_accuracy = model.accuracy(&task.test)?;
+        report.train_error_db = error_db(
+            model.residual_sq(&task.train)?,
+            task.train.t.frobenius_norm_sq(),
+        );
+        report.wall_secs = sw.elapsed();
+        Ok((model, report))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthClassification;
+
+    fn toy_task() -> ClassificationTask {
+        let mut s = SynthClassification::with_shape("toy", 10, 3, 150, 60);
+        s.class_sep = 3.0;
+        s.noise = 0.6;
+        s.generate().unwrap()
+    }
+
+    fn toy_trainer(layers: usize, k: usize) -> CentralizedTrainer {
+        let arch = SsfnArchitecture {
+            input_dim: 10,
+            num_classes: 3,
+            hidden: 2 * 3 + 40,
+            layers,
+        };
+        let hyper = TrainHyper {
+            mu0: 1e-2,
+            mul: 1.0,
+            admm_iterations: k,
+            eps: None,
+        };
+        CentralizedTrainer::new(arch, hyper, 99).unwrap()
+    }
+
+    #[test]
+    fn trains_to_high_accuracy_on_separable_data() {
+        let task = toy_task();
+        let (model, report) = toy_trainer(3, 60).train(&task).unwrap();
+        assert!(
+            report.train_accuracy > 0.95,
+            "train acc {}",
+            report.train_accuracy
+        );
+        assert!(
+            report.test_accuracy > 0.85,
+            "test acc {}",
+            report.test_accuracy
+        );
+        assert!(report.train_error_db < -3.0, "err {}", report.train_error_db);
+        assert_eq!(report.layers.len(), 4); // O_0 + 3 layers
+        assert_eq!(model.weights().len(), 3);
+    }
+
+    #[test]
+    fn layerwise_cost_monotonically_non_increasing() {
+        // The lossless-flow property guarantees adding a layer cannot
+        // worsen the fit (paper §II-B); allow tiny ADMM slack.
+        let task = toy_task();
+        let (_, report) = toy_trainer(4, 80).train(&task).unwrap();
+        let finals: Vec<f64> = report
+            .layers
+            .iter()
+            .map(|l| l.final_cost().unwrap())
+            .collect();
+        for w in finals.windows(2) {
+            assert!(
+                w[1] <= w[0] * 1.02 + 1e-6,
+                "layer cost increased: {finals:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let task = toy_task();
+        let (m1, r1) = toy_trainer(2, 30).train(&task).unwrap();
+        let (m2, r2) = toy_trainer(2, 30).train(&task).unwrap();
+        assert_eq!(m1.output().max_abs_diff(m2.output()), 0.0);
+        assert_eq!(r1.train_accuracy, r2.train_accuracy);
+    }
+
+    #[test]
+    fn eps_default_is_2q() {
+        let h = TrainHyper::default();
+        assert_eq!(h.eps_for(10), 20.0);
+        let h2 = TrainHyper { eps: Some(5.0), ..Default::default() };
+        assert_eq!(h2.eps_for(10), 5.0);
+        assert_eq!(h.admm_params(0, 3).mu, h.mu0);
+        assert_eq!(h.admm_params(2, 3).mu, h.mul);
+    }
+
+    #[test]
+    fn growth_policy_stops_when_cost_flattens() {
+        let task = toy_task();
+        let trainer = toy_trainer(8, 50);
+        // Aggressive threshold: stop as soon as a layer improves < 50%.
+        let (grown, gr) = trainer
+            .train_with_growth(&task, GrowthPolicy { min_relative_improvement: 0.5 })
+            .unwrap();
+        let (full, fr) = trainer.train(&task).unwrap();
+        assert!(
+            grown.weights().len() < full.weights().len(),
+            "growth should stop early: {} vs {}",
+            grown.weights().len(),
+            fr.layers.len()
+        );
+        assert_eq!(gr.layers.len(), grown.weights().len() + 1);
+        // Permissive threshold: grows to the maximum.
+        let (max, _) = trainer
+            .train_with_growth(&task, GrowthPolicy { min_relative_improvement: 0.0 })
+            .unwrap();
+        assert_eq!(max.weights().len(), 8);
+        // The grown model still predicts.
+        assert!(grown.accuracy(&task.train).unwrap() > 0.8);
+        assert!(GrowthPolicy { min_relative_improvement: 0.1 }.should_stop(0.0, 1.0));
+    }
+
+    #[test]
+    fn output_norm_respects_constraint() {
+        let task = toy_task();
+        let (model, _) = toy_trainer(2, 50).train(&task).unwrap();
+        let eps = 2.0 * 3.0;
+        assert!(model.output().frobenius_norm() <= eps + 1e-6);
+    }
+}

@@ -1,0 +1,26 @@
+//! The SSFN model substrate (ref. [1] of the paper) and its centralized
+//! trainer — the baseline against which dSSFN's centralized equivalence
+//! is demonstrated.
+//!
+//! SSFN is a feed-forward ReLU network whose weight matrices have a fixed
+//! structure (eq. 7):
+//!
+//! ```text
+//!   W_{l+1} = [ V_Q · O_l* ]      V_Q = [I_Q; −I_Q]   (2Q×Q, fixed)
+//!             [ R_{l+1}    ]      R    random, pre-shared, never learned
+//! ```
+//!
+//! Only `O_l*` is learned, by a convex constrained least-squares solve per
+//! layer (eq. 6). The `V_Q` block realizes the **lossless flow property**:
+//! `ReLU(V_Q O y) = [max(Oy,0); max(−Oy,0)]` keeps `O y` linearly
+//! recoverable, so the next layer can always reproduce (and therefore
+//! never worsen) the previous layer's fit — with `‖[I −I 0]‖²_F = 2Q`,
+//! which is exactly why the paper sets `ε = 2Q`.
+
+mod centralized;
+mod model;
+mod weights;
+
+pub use centralized::{CentralizedTrainer, GrowthPolicy, TrainHyper};
+pub use model::SsfnModel;
+pub use weights::{build_weight, RandomMatrices, SsfnArchitecture};

@@ -1,0 +1,203 @@
+//! A trained SSFN model: structured weights plus the final output matrix.
+
+use super::weights::SsfnArchitecture;
+use crate::data::Dataset;
+use crate::linalg::{accuracy_from_predictions, Matrix};
+use crate::{Error, Result};
+
+/// A fully-trained SSFN: `t̂ = O_L · g(W_L · g( … g(W_1 x) … ))`.
+#[derive(Debug, Clone)]
+pub struct SsfnModel {
+    arch: SsfnArchitecture,
+    /// Structured weights `W_1..W_L` (each `n×fan_in`).
+    weights: Vec<Matrix>,
+    /// Final output matrix `O_L` (`Q×n`).
+    output: Matrix,
+}
+
+impl SsfnModel {
+    /// Assemble a model from trained components, validating shapes.
+    pub fn new(
+        arch: SsfnArchitecture,
+        weights: Vec<Matrix>,
+        output: Matrix,
+    ) -> Result<Self> {
+        arch.validate()?;
+        if weights.len() != arch.layers {
+            return Err(Error::Shape(format!(
+                "{} weights for {} layers",
+                weights.len(),
+                arch.layers
+            )));
+        }
+        for (i, w) in weights.iter().enumerate() {
+            let expect = (arch.hidden, arch.layer_input_dim(i + 1));
+            if w.shape() != expect {
+                return Err(Error::Shape(format!(
+                    "W_{} is {:?}, expected {:?}",
+                    i + 1,
+                    w.shape(),
+                    expect
+                )));
+            }
+        }
+        if output.shape() != (arch.num_classes, arch.hidden) {
+            return Err(Error::Shape(format!(
+                "output is {:?}, expected {:?}",
+                output.shape(),
+                (arch.num_classes, arch.hidden)
+            )));
+        }
+        Ok(Self {
+            arch,
+            weights,
+            output,
+        })
+    }
+
+    /// The architecture.
+    pub fn arch(&self) -> &SsfnArchitecture {
+        &self.arch
+    }
+
+    /// The structured weight stack.
+    pub fn weights(&self) -> &[Matrix] {
+        &self.weights
+    }
+
+    /// The final output matrix `O_L`.
+    pub fn output(&self) -> &Matrix {
+        &self.output
+    }
+
+    /// Feature map through the first `upto` layers (`upto = L` for the
+    /// full stack): `Y_l = g(W_l … g(W_1 X))`, `X` is `P×J`.
+    pub fn features(&self, x: &Matrix, upto: usize) -> Result<Matrix> {
+        if upto > self.weights.len() {
+            return Err(Error::Shape(format!(
+                "requested {upto} layers of a {}-layer model",
+                self.weights.len()
+            )));
+        }
+        let mut y = x.clone();
+        for w in &self.weights[..upto] {
+            y = w.matmul(&y)?;
+            y.relu_inplace();
+        }
+        Ok(y)
+    }
+
+    /// Class scores `O_L · Y_L` (`Q×J`).
+    pub fn scores(&self, x: &Matrix) -> Result<Matrix> {
+        let y = self.features(x, self.weights.len())?;
+        self.output.matmul(&y)
+    }
+
+    /// Predicted class per sample.
+    pub fn predict(&self, x: &Matrix) -> Result<Vec<usize>> {
+        Ok(self.scores(x)?.argmax_per_col())
+    }
+
+    /// Classification accuracy on a dataset.
+    pub fn accuracy(&self, data: &Dataset) -> Result<f64> {
+        let scores = self.scores(&data.x)?;
+        accuracy_from_predictions(&scores, &data.labels)
+    }
+
+    /// Residual `‖T − O_L Y_L‖²_F` on a dataset (for error-dB reporting).
+    pub fn residual_sq(&self, data: &Dataset) -> Result<f64> {
+        let scores = self.scores(&data.x)?;
+        Ok(data.t.sub(&scores)?.frobenius_norm_sq())
+    }
+
+    /// Total number of learned parameters (the `O_l` blocks; the random
+    /// blocks are not learned). Used in comm-cost reporting.
+    pub fn learned_parameters(&self) -> usize {
+        // Each W_l embeds a Q×fan_in learned O block; plus the final O_L.
+        let q = self.arch.num_classes;
+        let per_layer: usize = (1..=self.arch.layers)
+            .map(|l| q * self.arch.layer_input_dim(l))
+            .sum();
+        per_layer + q * self.arch.hidden
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ssfn::weights::{build_weight, RandomMatrices};
+    use crate::util::{Rng, Xoshiro256StarStar};
+
+    fn arch() -> SsfnArchitecture {
+        SsfnArchitecture {
+            input_dim: 5,
+            num_classes: 2,
+            hidden: 10,
+            layers: 3,
+        }
+    }
+
+    fn toy_model(seed: u64) -> SsfnModel {
+        let a = arch();
+        let r = RandomMatrices::generate(&a, seed).unwrap();
+        let mut rng = Xoshiro256StarStar::seed_from_u64(seed + 100);
+        let mut weights = Vec::new();
+        for l in 1..=a.layers {
+            let o = Matrix::from_fn(a.num_classes, a.layer_input_dim(l), |_, _| {
+                rng.uniform(-0.5, 0.5)
+            });
+            weights.push(build_weight(&o, r.layer(l)).unwrap());
+        }
+        let output = Matrix::from_fn(a.num_classes, a.hidden, |_, _| rng.uniform(-0.5, 0.5));
+        SsfnModel::new(a, weights, output).unwrap()
+    }
+
+    #[test]
+    fn shape_validation() {
+        let a = arch();
+        let m = toy_model(1);
+        // Wrong number of weights
+        assert!(SsfnModel::new(a, m.weights()[..2].to_vec(), m.output().clone()).is_err());
+        // Wrong output shape
+        assert!(SsfnModel::new(a, m.weights().to_vec(), Matrix::zeros(3, 10)).is_err());
+        // Wrong W_1 shape
+        let mut ws = m.weights().to_vec();
+        ws[0] = Matrix::zeros(10, 9);
+        assert!(SsfnModel::new(a, ws, m.output().clone()).is_err());
+    }
+
+    #[test]
+    fn features_compose_layerwise() {
+        let m = toy_model(2);
+        let x = Matrix::from_fn(5, 4, |r, c| ((r + c) as f64).sin());
+        let y1 = m.features(&x, 1).unwrap();
+        let y2 = m.features(&x, 2).unwrap();
+        // Recompute y2 from y1 manually.
+        let mut manual = m.weights()[1].matmul(&y1).unwrap();
+        manual.relu_inplace();
+        assert!(manual.max_abs_diff(&y2) < 1e-12);
+        // Non-negativity after ReLU.
+        assert!(y2.as_slice().iter().all(|&v| v >= 0.0));
+        assert!(m.features(&x, 4).is_err());
+    }
+
+    #[test]
+    fn predict_and_accuracy() {
+        let m = toy_model(3);
+        let x = Matrix::from_fn(5, 6, |r, c| ((r * 7 + c) as f64).cos());
+        let preds = m.predict(&x).unwrap();
+        assert_eq!(preds.len(), 6);
+        assert!(preds.iter().all(|&p| p < 2));
+        let labels = preds.clone(); // perfect labels by construction
+        let data = Dataset::new(x, labels, 2).unwrap();
+        assert_eq!(m.accuracy(&data).unwrap(), 1.0);
+        assert!(m.residual_sq(&data).unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn learned_parameter_count() {
+        let m = toy_model(4);
+        // Q=2: layer1 O is 2×5, layers 2..3 O is 2×10, final O_L 2×10.
+        assert_eq!(m.learned_parameters(), 10 + 20 + 20 + 20);
+    }
+}

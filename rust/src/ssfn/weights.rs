@@ -1,0 +1,238 @@
+//! SSFN architecture description, shared random matrices and the
+//! structured weight construction of eq. (7).
+
+use crate::linalg::Matrix;
+use crate::util::{Rng, Xoshiro256StarStar};
+use crate::{Error, Result};
+
+/// Fixed-size SSFN architecture (the paper trains a fixed-size SSFN; size
+/// self-estimation is noted as possible at higher cost).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SsfnArchitecture {
+    /// Input dimension `P`.
+    pub input_dim: usize,
+    /// Classes `Q`.
+    pub num_classes: usize,
+    /// Hidden width `n` per layer (paper: `n = 2Q + 1000`).
+    pub hidden: usize,
+    /// Number of hidden layers `L` (paper: 20).
+    pub layers: usize,
+}
+
+impl SsfnArchitecture {
+    /// The paper's default width for `Q` classes: `n = 2Q + 1000`.
+    pub fn paper_default(input_dim: usize, num_classes: usize) -> Self {
+        Self {
+            input_dim,
+            num_classes,
+            hidden: 2 * num_classes + 1000,
+            layers: 20,
+        }
+    }
+
+    /// Validate structural constraints (`n ≥ 2Q`, non-empty dims).
+    pub fn validate(&self) -> Result<()> {
+        if self.input_dim == 0 || self.num_classes == 0 {
+            return Err(Error::Config("empty architecture dims".into()));
+        }
+        if self.hidden < 2 * self.num_classes {
+            return Err(Error::Config(format!(
+                "hidden width n={} must be >= 2Q={} for the V_Q block",
+                self.hidden,
+                2 * self.num_classes
+            )));
+        }
+        if self.layers == 0 {
+            return Err(Error::Config("need at least one layer".into()));
+        }
+        Ok(())
+    }
+
+    /// Rows of the random block: `n − 2Q`.
+    pub fn random_rows(&self) -> usize {
+        self.hidden - 2 * self.num_classes
+    }
+
+    /// Input width of layer `l` (1-based): `P` for layer 1, else `n`.
+    pub fn layer_input_dim(&self, layer: usize) -> usize {
+        if layer <= 1 {
+            self.input_dim
+        } else {
+            self.hidden
+        }
+    }
+}
+
+/// The pre-shared random matrices `{R_l}` — identical on every node.
+///
+/// Entries are i.i.d. uniform on `[-√(3/fan_in), +√(3/fan_in)]`
+/// (variance `1/fan_in`), keeping the random block's output at the same
+/// energy scale as its input so deep stacks neither explode nor vanish.
+/// The paper fixes `R_l` as "an instance of random matrix" without
+/// prescribing the law; the scaling choice is documented in
+/// `DESIGN.md §Substitutions`.
+#[derive(Debug, Clone)]
+pub struct RandomMatrices {
+    mats: Vec<Matrix>,
+}
+
+impl RandomMatrices {
+    /// Generate `{R_1..R_L}` for the architecture from a shared seed.
+    /// `R_1` is `(n−2Q)×P`; `R_l`, `l ≥ 2`, is `(n−2Q)×n`.
+    pub fn generate(arch: &SsfnArchitecture, seed: u64) -> Result<Self> {
+        arch.validate()?;
+        let base = Xoshiro256StarStar::seed_from_u64(seed);
+        let rows = arch.random_rows();
+        let mut mats = Vec::with_capacity(arch.layers);
+        for l in 1..=arch.layers {
+            let fan_in = arch.layer_input_dim(l);
+            let bound = (3.0 / fan_in as f64).sqrt();
+            // Independent stream per layer so L doesn't reshuffle earlier R's.
+            let mut rng = base.derive(l as u64);
+            mats.push(Matrix::from_fn(rows, fan_in, |_, _| {
+                rng.uniform(-bound, bound)
+            }));
+        }
+        Ok(Self { mats })
+    }
+
+    /// `R_l` for 1-based layer index `l`.
+    pub fn layer(&self, l: usize) -> &Matrix {
+        &self.mats[l - 1]
+    }
+
+    /// Number of layers covered.
+    pub fn len(&self) -> usize {
+        self.mats.len()
+    }
+
+    /// Whether empty.
+    pub fn is_empty(&self) -> bool {
+        self.mats.is_empty()
+    }
+}
+
+/// Build the structured weight `W_l = [V_Q·O ; R_l] = [O ; −O ; R_l]`
+/// (eq. 7). `o` is the learned `Q×fan_in` output matrix of the previous
+/// layer, `r` the pre-shared random block.
+pub fn build_weight(o: &Matrix, r: &Matrix) -> Result<Matrix> {
+    if o.cols() != r.cols() {
+        return Err(Error::Shape(format!(
+            "build_weight: O is {}x{}, R is {}x{}",
+            o.rows(),
+            o.cols(),
+            r.rows(),
+            r.cols()
+        )));
+    }
+    let neg = o.scale(-1.0);
+    o.vcat(&neg)?.vcat(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arch() -> SsfnArchitecture {
+        SsfnArchitecture {
+            input_dim: 7,
+            num_classes: 3,
+            hidden: 16,
+            layers: 4,
+        }
+    }
+
+    #[test]
+    fn paper_default_width() {
+        let a = SsfnArchitecture::paper_default(784, 10);
+        assert_eq!(a.hidden, 1020);
+        assert_eq!(a.layers, 20);
+        a.validate().unwrap();
+    }
+
+    #[test]
+    fn validation_catches_narrow_hidden() {
+        let mut a = arch();
+        a.hidden = 5; // < 2Q = 6
+        assert!(a.validate().is_err());
+        let mut b = arch();
+        b.layers = 0;
+        assert!(b.validate().is_err());
+        let mut c = arch();
+        c.input_dim = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn random_matrices_shapes() {
+        let a = arch();
+        let r = RandomMatrices::generate(&a, 42).unwrap();
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.layer(1).shape(), (10, 7)); // (n−2Q)×P
+        assert_eq!(r.layer(2).shape(), (10, 16)); // (n−2Q)×n
+        assert_eq!(r.layer(4).shape(), (10, 16));
+    }
+
+    #[test]
+    fn random_matrices_shared_seed_identical() {
+        let a = arch();
+        let r1 = RandomMatrices::generate(&a, 7).unwrap();
+        let r2 = RandomMatrices::generate(&a, 7).unwrap();
+        for l in 1..=4 {
+            assert_eq!(r1.layer(l).max_abs_diff(r2.layer(l)), 0.0);
+        }
+        let r3 = RandomMatrices::generate(&a, 8).unwrap();
+        assert!(r1.layer(1).max_abs_diff(r3.layer(1)) > 0.0);
+    }
+
+    #[test]
+    fn random_entries_scaled_to_fan_in() {
+        let a = SsfnArchitecture {
+            input_dim: 300,
+            num_classes: 2,
+            hidden: 104,
+            layers: 1,
+        };
+        let r = RandomMatrices::generate(&a, 1).unwrap();
+        let bound = (3.0f64 / 300.0).sqrt();
+        let max = r
+            .layer(1)
+            .as_slice()
+            .iter()
+            .fold(0.0f64, |m, &v| m.max(v.abs()));
+        assert!(max <= bound + 1e-12);
+        assert!(max > bound * 0.8, "entries should fill the range");
+    }
+
+    #[test]
+    fn build_weight_layout_matches_eq7() {
+        let o = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
+        let r = Matrix::from_rows(&[vec![9.0, 9.0]]).unwrap();
+        let w = build_weight(&o, &r).unwrap();
+        assert_eq!(w.shape(), (5, 2));
+        // top block = O
+        assert_eq!(w.get(0, 0), 1.0);
+        assert_eq!(w.get(1, 1), 4.0);
+        // middle block = −O
+        assert_eq!(w.get(2, 0), -1.0);
+        assert_eq!(w.get(3, 1), -4.0);
+        // bottom block = R
+        assert_eq!(w.get(4, 0), 9.0);
+        assert!(build_weight(&o, &Matrix::zeros(1, 3)).is_err());
+    }
+
+    #[test]
+    fn lossless_flow_property() {
+        // g(V_Q O y) preserves O y: top − middle = O y exactly.
+        let o = Matrix::from_rows(&[vec![1.0, -2.0, 0.5]]).unwrap(); // Q=1, d=3
+        let r = Matrix::zeros(2, 3);
+        let w = build_weight(&o, &r).unwrap();
+        let y = Matrix::from_rows(&[vec![0.3], vec![-1.0], vec![2.0]]).unwrap();
+        let mut wy = w.matmul(&y).unwrap();
+        wy.relu_inplace();
+        // recover O y = wy[0] − wy[1]
+        let oy = o.matmul(&y).unwrap().get(0, 0);
+        let recovered = wy.get(0, 0) - wy.get(1, 0);
+        assert!((oy - recovered).abs() < 1e-12);
+    }
+}

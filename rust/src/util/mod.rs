@@ -1,0 +1,109 @@
+//! Small shared utilities: deterministic RNG, timing, formatting.
+//!
+//! The build environment is fully offline, so instead of depending on the
+//! `rand` ecosystem we ship a compact, well-tested PRNG stack of our own:
+//! [`SplitMix64`] for seeding, [`Xoshiro256StarStar`] as the workhorse
+//! generator, and Box–Muller / Marsaglia-polar Gaussian sampling on top.
+//! Determinism matters here beyond reproducibility: the paper's protocol
+//! requires every node to hold the *same* random matrices `R_l`, which we
+//! realize by seeding every node's generator identically (`shared_seed`).
+
+mod rng;
+mod stopwatch;
+
+pub use rng::{Rng, SplitMix64, Xoshiro256StarStar};
+pub use stopwatch::Stopwatch;
+
+/// Format a byte count with binary prefixes (`1.50 MiB`).
+pub fn human_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = bytes as f64;
+    let mut unit = 0;
+    while v >= 1024.0 && unit + 1 < UNITS.len() {
+        v /= 1024.0;
+        unit += 1;
+    }
+    if unit == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.2} {}", UNITS[unit])
+    }
+}
+
+/// Format a duration in seconds adaptively (`412 ms`, `3.20 s`, `2m 31s`).
+pub fn human_secs(secs: f64) -> String {
+    if secs < 1e-3 {
+        format!("{:.1} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.1} ms", secs * 1e3)
+    } else if secs < 120.0 {
+        format!("{secs:.2} s")
+    } else {
+        let m = (secs / 60.0).floor();
+        format!("{m:.0}m {:.0}s", secs - m * 60.0)
+    }
+}
+
+/// Mean of a slice (0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation of a slice (0 for n < 2).
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Median of a slice (0 for empty input). Does not mutate the input.
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_scales() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn human_secs_scales() {
+        assert_eq!(human_secs(0.5e-4), "50.0 µs");
+        assert_eq!(human_secs(0.25), "250.0 ms");
+        assert_eq!(human_secs(2.5), "2.50 s");
+        assert_eq!(human_secs(151.0), "2m 31s");
+    }
+
+    #[test]
+    fn stats_basic() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((median(&xs) - 2.5).abs() < 1e-12);
+        assert!((std_dev(&xs) - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_dev(&[1.0]), 0.0);
+        assert_eq!(median(&[]), 0.0);
+        assert_eq!(median(&[7.0, 1.0, 3.0]), 3.0);
+    }
+}

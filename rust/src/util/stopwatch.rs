@@ -1,0 +1,82 @@
+//! Wall-clock stopwatch with named splits, used by the metrics layer and
+//! the bench harness.
+
+use std::time::Instant;
+
+/// A resettable stopwatch that accumulates named splits.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+    last: Instant,
+    splits: Vec<(String, f64)>,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    /// Start a new stopwatch.
+    pub fn new() -> Self {
+        let now = Instant::now();
+        Self {
+            start: now,
+            last: now,
+            splits: Vec::new(),
+        }
+    }
+
+    /// Seconds since construction (or last [`Stopwatch::reset`]).
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Record a named split measured since the previous split (or start).
+    pub fn split(&mut self, name: &str) -> f64 {
+        let now = Instant::now();
+        let dt = now.duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.splits.push((name.to_string(), dt));
+        dt
+    }
+
+    /// All recorded splits `(name, seconds)` in order.
+    pub fn splits(&self) -> &[(String, f64)] {
+        &self.splits
+    }
+
+    /// Total time across recorded splits.
+    pub fn split_total(&self) -> f64 {
+        self.splits.iter().map(|(_, s)| s).sum()
+    }
+
+    /// Reset the stopwatch and clear splits.
+    pub fn reset(&mut self) {
+        let now = Instant::now();
+        self.start = now;
+        self.last = now;
+        self.splits.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splits_accumulate_and_reset() {
+        let mut sw = Stopwatch::new();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let a = sw.split("a");
+        assert!(a >= 0.004);
+        let b = sw.split("b");
+        assert!(b < a, "second split should measure only its own interval");
+        assert_eq!(sw.splits().len(), 2);
+        assert!((sw.split_total() - (a + b)).abs() < 1e-9);
+        sw.reset();
+        assert!(sw.splits().is_empty());
+        assert!(sw.elapsed() < 0.01);
+    }
+}

@@ -1,0 +1,125 @@
+//! Integration: the `dssfn` CLI binary.
+
+use std::process::Command;
+
+fn dssfn() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_dssfn"))
+}
+
+#[test]
+fn datasets_lists_table1() {
+    let out = dssfn().arg("datasets").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for key in ["vowel", "satimage", "caltech101", "letter", "norb", "mnist"] {
+        assert!(text.contains(key), "missing {key} in:\n{text}");
+    }
+    assert!(text.contains("60000")); // mnist train size
+}
+
+#[test]
+fn info_shows_resolved_config() {
+    let out = dssfn()
+        .args(["info", "--dataset", "letter-small", "--degree", "3"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("letter-small"));
+    assert!(text.contains("degree=3"));
+    assert!(text.contains("Q=26"));
+}
+
+#[test]
+fn train_quickstart_native_runs() {
+    let out = dssfn()
+        .args([
+            "train",
+            "--dataset",
+            "quickstart",
+            "--layers",
+            "2",
+            "--admm-iters",
+            "15",
+            "--nodes",
+            "4",
+            "--degree",
+            "1",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("train"), "no summary in:\n{text}");
+    assert!(text.contains("gossip rounds"));
+}
+
+#[test]
+fn central_quickstart_runs() {
+    let out = dssfn()
+        .args([
+            "central",
+            "--dataset",
+            "quickstart",
+            "--layers",
+            "2",
+            "--admm-iters",
+            "15",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("centralized"));
+}
+
+#[test]
+fn bad_flags_fail_gracefully() {
+    let out = dssfn().args(["train", "--dataset", "nope"]).output().unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown dataset"), "stderr: {err}");
+
+    let out = dssfn().args(["frobnicate"]).output().unwrap();
+    assert!(!out.status.success());
+
+    let out = dssfn().args(["train", "--degree"]).output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn sweep_writes_csv() {
+    let dir = std::env::temp_dir().join(format!("dssfn_cli_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let csv = dir.join("sweep.csv");
+    let out = dssfn()
+        .args([
+            "sweep",
+            "--dataset",
+            "quickstart",
+            "--layers",
+            "1",
+            "--admm-iters",
+            "10",
+            "--nodes",
+            "6",
+            "--degrees",
+            "1,3",
+            "--csv",
+        ])
+        .arg(&csv)
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let body = std::fs::read_to_string(&csv).unwrap();
+    assert!(body.starts_with("degree,"));
+    assert_eq!(body.lines().count(), 3); // header + 2 degrees
+    std::fs::remove_dir_all(&dir).ok();
+}

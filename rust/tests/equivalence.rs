@@ -1,0 +1,230 @@
+//! Integration: the paper's centralized-equivalence claim (E6).
+//!
+//! Exercises the *public* API end to end: dataset generation → sharding →
+//! decentralized training over a gossip network → comparison against the
+//! centralized trainer on the pooled data.
+
+use dssfn::admm::{solve_centralized, solve_decentralized, AdmmParams, Consensus, LayerLocalSolver};
+use dssfn::coordinator::{ConsensusMode, DecentralizedTrainer, TrainOptions};
+use dssfn::data::{shard_uniform, SynthClassification};
+use dssfn::linalg::Matrix;
+use dssfn::network::{CommLedger, GossipEngine, LatencyModel, MixingMatrix, Topology, WeightRule};
+use dssfn::ssfn::{CentralizedTrainer, SsfnArchitecture, TrainHyper};
+use dssfn::testing::property;
+use std::sync::Arc;
+
+fn task(p: usize, q: usize, j: usize, seed: u64) -> dssfn::data::ClassificationTask {
+    let mut s = SynthClassification::with_shape("eqv", p, q, j, j / 2);
+    s.class_sep = 2.5;
+    s.noise = 0.8;
+    s.seed = seed;
+    s.generate().unwrap()
+}
+
+#[test]
+fn single_layer_solve_equivalence_property() {
+    // For random shapes, shard counts and μ: decentralized consensus ADMM
+    // over shards == centralized ADMM on the pooled data (same convex
+    // problem, K large enough for both to converge).
+    property("layer solve centralized equivalence", 8, |g| {
+        let n = g.usize_in(4, 14);
+        let q = g.usize_in(2, 4);
+        let j = g.usize_in(30, 60);
+        let m = g.usize_in(2, 5);
+        let mu = *g.choose(&[0.5, 1.0, 2.0]);
+        let y = g.matrix(n, j, 1.0);
+        let t = g.matrix(q, j, 1.0);
+        let eps = 2.0 * q as f64;
+        let params = AdmmParams { mu, eps, iterations: 1200 };
+        let (central, _) = solve_centralized(&y, &t, &params).unwrap();
+        let per = j / m;
+        let solvers: Vec<LayerLocalSolver> = (0..m)
+            .map(|i| {
+                let c1 = if i == m - 1 { j } else { (i + 1) * per };
+                LayerLocalSolver::new(
+                    &y.col_block(i * per, c1).unwrap(),
+                    &t.col_block(i * per, c1).unwrap(),
+                    mu,
+                )
+                .unwrap()
+            })
+            .collect();
+        let sol = solve_decentralized(&solvers, q, n, &params, &Consensus::Exact).unwrap();
+        let diff = sol.output().max_abs_diff(&central);
+        assert!(diff < 5e-3, "diff {diff} at n={n} q={q} j={j} m={m} mu={mu}");
+    });
+}
+
+#[test]
+fn gossip_solution_matches_exact_average_solution() {
+    property("gossip == exact averaging", 4, |g| {
+        let n = g.usize_in(5, 10);
+        let q = g.usize_in(2, 3);
+        let m = g.usize_in(3, 6);
+        let j = m * g.usize_in(8, 15);
+        let d = g.usize_in(1, m / 2);
+        let y = g.matrix(n, j, 1.0);
+        let t = g.matrix(q, j, 1.0);
+        let params = AdmmParams { mu: 1.0, eps: 2.0 * q as f64, iterations: 80 };
+        let per = j / m;
+        let solvers: Vec<LayerLocalSolver> = (0..m)
+            .map(|i| {
+                LayerLocalSolver::new(
+                    &y.col_block(i * per, (i + 1) * per).unwrap(),
+                    &t.col_block(i * per, (i + 1) * per).unwrap(),
+                    params.mu,
+                )
+                .unwrap()
+            })
+            .collect();
+        let exact = solve_decentralized(&solvers, q, n, &params, &Consensus::Exact).unwrap();
+        let mix = MixingMatrix::build(
+            &Topology::Circular { nodes: m, degree: d.max(1) },
+            WeightRule::EqualNeighbor,
+        )
+        .unwrap();
+        let engine =
+            GossipEngine::new(mix, Arc::new(CommLedger::new()), LatencyModel::default());
+        let gossip = solve_decentralized(
+            &solvers,
+            q,
+            n,
+            &params,
+            &Consensus::Gossip { engine: &engine, delta: 1e-11 },
+        )
+        .unwrap();
+        let diff = gossip.output().max_abs_diff(exact.output());
+        assert!(diff < 1e-6, "gossip deviates {diff} (m={m}, d={d})");
+        assert!(gossip.max_disagreement() < 1e-7);
+    });
+}
+
+#[test]
+fn full_training_performance_equivalence() {
+    // Table-II sense: same data, same seed — decentralized training over a
+    // sparse ring must match centralized accuracy within noise.
+    let t = task(10, 3, 180, 42);
+    let arch = SsfnArchitecture {
+        input_dim: 10,
+        num_classes: 3,
+        hidden: 2 * 3 + 40,
+        layers: 4,
+    };
+    let hyper = TrainHyper {
+        mu0: 1e-2,
+        mul: 1.0,
+        admm_iterations: 100, // the paper's K
+        eps: None,
+    };
+    let (_, cr) = CentralizedTrainer::new(arch, hyper, 7)
+        .unwrap()
+        .train(&t)
+        .unwrap();
+    let opts = TrainOptions {
+        nodes: 6,
+        topology: Topology::Circular { nodes: 6, degree: 1 },
+        weight_rule: WeightRule::EqualNeighbor,
+        consensus: ConsensusMode::Gossip { delta: 1e-9 },
+        latency: LatencyModel::default(),
+        threads: 0,
+        record_cost_curve: true,
+    };
+    let (_, dr) = DecentralizedTrainer::new(arch, hyper, opts, 7)
+        .unwrap()
+        .train_task(&t)
+        .unwrap();
+    assert!(
+        (cr.train_accuracy - dr.train_accuracy).abs() < 0.06,
+        "train {} vs {}",
+        cr.train_accuracy,
+        dr.train_accuracy
+    );
+    assert!(
+        (cr.test_accuracy - dr.test_accuracy).abs() < 0.08,
+        "test {} vs {}",
+        cr.test_accuracy,
+        dr.test_accuracy
+    );
+    // The decentralized run actually used the network.
+    assert!(dr.comm_total.bytes > 0);
+    // And per-layer objective trajectories agree relative to the
+    // problem's scale (layer-0 cost). At the paper's K=100 the consensus
+    // dual has not fully converged when the ε constraint is active (see
+    // examples/conv_probe2), and deep layers sit at near-zero cost where
+    // relative gaps are meaningless — the tight-K machine-ε regime is
+    // covered by single_layer_solve_equivalence_property above and the
+    // equivalence bench.
+    let scale = cr.layers[0].final_cost().unwrap();
+    for (cl, dl) in cr.layers.iter().zip(&dr.layers) {
+        let (a, b) = (cl.final_cost().unwrap(), dl.final_cost().unwrap());
+        assert!(
+            (a - b).abs() <= 0.15 * a.max(1e-9) + 0.01 * scale,
+            "layer {}: {a} vs {b} (scale {scale})",
+            cl.layer
+        );
+    }
+}
+
+#[test]
+fn disagreement_shrinks_with_tighter_delta() {
+    let t = task(8, 3, 120, 9);
+    let arch = SsfnArchitecture {
+        input_dim: 8,
+        num_classes: 3,
+        hidden: 2 * 3 + 24,
+        layers: 2,
+    };
+    let hyper = TrainHyper { mu0: 1e-2, mul: 1.0, admm_iterations: 30, eps: None };
+    let mut worst = Vec::new();
+    for delta in [1e-3, 1e-10] {
+        let opts = TrainOptions {
+            nodes: 5,
+            topology: Topology::Circular { nodes: 5, degree: 1 },
+            weight_rule: WeightRule::EqualNeighbor,
+            consensus: ConsensusMode::Gossip { delta },
+            latency: LatencyModel::default(),
+            threads: 0,
+            record_cost_curve: false,
+        };
+        let (_, r) = DecentralizedTrainer::new(arch, hyper, opts, 3)
+            .unwrap()
+            .train_task(&t)
+            .unwrap();
+        worst.push(
+            r.layers
+                .iter()
+                .map(|l| l.consensus_disagreement)
+                .fold(0.0f64, f64::max),
+        );
+    }
+    assert!(
+        worst[1] < worst[0] / 10.0,
+        "tighter delta should shrink disagreement: {worst:?}"
+    );
+}
+
+#[test]
+fn equivalence_insensitive_to_shard_imbalance() {
+    // Uneven shards via the public sharding API.
+    let t = task(8, 3, 150, 11);
+    let shards = shard_uniform(&t.train, 5).unwrap();
+    let total: usize = shards.iter().map(|s| s.num_samples()).sum();
+    assert_eq!(total, 150);
+    // Pool back and compare against a weighted re-shard.
+    let weighted = dssfn::data::shard_weighted(&t.train, &[5.0, 1.0, 1.0, 1.0, 2.0]).unwrap();
+    let params = AdmmParams { mu: 1.0, eps: 6.0, iterations: 900 };
+    let mk = |sh: &[dssfn::data::Dataset]| -> Matrix {
+        let solvers: Vec<LayerLocalSolver> = sh
+            .iter()
+            .map(|s| LayerLocalSolver::new(&s.x, &s.t, params.mu).unwrap())
+            .collect();
+        solve_decentralized(&solvers, 3, 8, &params, &Consensus::Exact)
+            .unwrap()
+            .output()
+            .clone()
+    };
+    let a = mk(&shards);
+    let b = mk(&weighted);
+    let diff = a.max_abs_diff(&b);
+    assert!(diff < 5e-3, "shard-layout sensitivity: {diff}");
+}

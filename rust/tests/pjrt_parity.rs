@@ -1,0 +1,147 @@
+//! Integration: PJRT artifact execution vs the native f64 oracle.
+//!
+//! Requires `make artifacts` (the tests are skipped with a notice when
+//! the quickstart artifacts are missing, so `cargo test` stays green on
+//! a fresh checkout).
+
+use dssfn::config::{BackendKind, ExperimentConfig};
+use dssfn::coordinator::DecentralizedTrainer;
+use dssfn::linalg::Matrix;
+use dssfn::runtime::{ArtifactManifest, ComputeBackend, NativeBackend, PjrtBackend};
+use dssfn::util::{Rng, Xoshiro256StarStar};
+
+fn backend() -> Option<PjrtBackend> {
+    let manifest = ArtifactManifest::load("artifacts").ok()?;
+    match PjrtBackend::start(&manifest, "quickstart") {
+        Ok(b) => Some(b),
+        Err(e) => {
+            eprintln!("skipping pjrt parity ({e}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn rand_mat(rng: &mut impl Rng, rows: usize, cols: usize, mag: f64) -> Matrix {
+    Matrix::from_fn(rows, cols, |_, _| rng.uniform(-mag, mag))
+}
+
+#[test]
+fn forward_gram_update_output_parity() {
+    let Some(be) = backend() else { return };
+    let native = NativeBackend::new();
+    let cfg = be.config().clone();
+    let mut rng = Xoshiro256StarStar::seed_from_u64(11);
+    let (p, q, n, j) = (cfg.p, cfg.q, cfg.n, cfg.j);
+
+    // Forward through both layer shapes, with an under-filled shard to
+    // exercise the zero-padding path.
+    let w1 = rand_mat(&mut rng, n, p, 1.0);
+    let x = rand_mat(&mut rng, p, j - 3, 1.0);
+    let a = be.layer_forward(&w1, &x).unwrap();
+    let b = native.layer_forward(&w1, &x).unwrap();
+    assert_eq!(a.shape(), (n, j - 3));
+    assert!(a.max_abs_diff(&b) < 1e-4, "first_forward {}", a.max_abs_diff(&b));
+
+    let wn = rand_mat(&mut rng, n, n, 0.3);
+    let y = {
+        let mut y = native.layer_forward(&w1, &x).unwrap();
+        y.relu_inplace();
+        y
+    };
+    let a = be.layer_forward(&wn, &y).unwrap();
+    let b = native.layer_forward(&wn, &y).unwrap();
+    assert!(a.max_abs_diff(&b) < 1e-3 * (1.0 + b.frobenius_norm()));
+
+    // Solver parity through several ADMM iterations.
+    let t = rand_mat(&mut rng, q, j - 3, 1.0);
+    let sp = be.prepare_layer(&y, &t, 1.0).unwrap();
+    let sn = native.prepare_layer(&y, &t, 1.0).unwrap();
+    let mut z = Matrix::zeros(q, n);
+    let mut lam = Matrix::zeros(q, n);
+    for k in 0..5 {
+        let op = sp.o_update(&z, &lam).unwrap();
+        let on = sn.o_update(&z, &lam).unwrap();
+        let scale = 1.0 + on.frobenius_norm();
+        assert!(
+            op.max_abs_diff(&on) < 2e-3 * scale,
+            "iter {k}: o diff {}",
+            op.max_abs_diff(&on)
+        );
+        let (cp, cn) = (sp.cost(&on).unwrap(), sn.cost(&on).unwrap());
+        assert!((cp - cn).abs() < 1e-2 * (1.0 + cn), "cost {cp} vs {cn}");
+        z = on.clone();
+        z.project_frobenius(2.0 * q as f64);
+        lam.axpy(1.0, &on).unwrap();
+        lam.axpy(-1.0, &z).unwrap();
+    }
+
+    // Scores.
+    let o = rand_mat(&mut rng, q, n, 0.5);
+    let a = be.output_scores(&o, &y).unwrap();
+    let b = native.output_scores(&o, &y).unwrap();
+    assert!(a.max_abs_diff(&b) < 1e-3 * (1.0 + b.frobenius_norm()));
+}
+
+#[test]
+fn full_training_parity_native_vs_pjrt() {
+    if backend().is_none() {
+        return;
+    }
+    let mut cfg = ExperimentConfig::named_dataset("quickstart").unwrap();
+    cfg.layers = 3;
+    cfg.admm_iterations = 40;
+    cfg.nodes = 10;
+    cfg.degree = 2;
+
+    cfg.backend = BackendKind::Native;
+    let (_, rn) = DecentralizedTrainer::run_config(&cfg).unwrap();
+    cfg.backend = BackendKind::Pjrt;
+    let (_, rp) = DecentralizedTrainer::run_config(&cfg).unwrap();
+
+    // f32 artifacts vs f64 natives: performance metrics must agree.
+    assert!(
+        (rn.train_accuracy - rp.train_accuracy).abs() < 0.03,
+        "train {} vs {}",
+        rn.train_accuracy,
+        rp.train_accuracy
+    );
+    assert!(
+        (rn.test_accuracy - rp.test_accuracy).abs() < 0.05,
+        "test {} vs {}",
+        rn.test_accuracy,
+        rp.test_accuracy
+    );
+    for (ln, lp) in rn.layers.iter().zip(&rp.layers) {
+        let (a, b) = (ln.final_cost().unwrap(), lp.final_cost().unwrap());
+        assert!(
+            (a - b).abs() <= 0.03 * a.max(1e-9) + 1e-3,
+            "layer {} cost {a} vs {b}",
+            ln.layer
+        );
+    }
+    // Identical communication pattern regardless of backend.
+    assert_eq!(rn.total_gossip_rounds(), rp.total_gossip_rounds());
+    assert_eq!(rn.comm_total.bytes, rp.comm_total.bytes);
+}
+
+#[test]
+fn backend_handles_are_shareable_across_threads() {
+    let Some(be) = backend() else { return };
+    let cfg = be.config().clone();
+    let be = std::sync::Arc::new(be);
+    let mut handles = Vec::new();
+    for i in 0..4u64 {
+        let be = std::sync::Arc::clone(&be);
+        let (p, n, j) = (cfg.p, cfg.n, cfg.j);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Xoshiro256StarStar::seed_from_u64(i);
+            let w = rand_mat(&mut rng, n, p, 1.0);
+            let x = rand_mat(&mut rng, p, j, 1.0);
+            let out = be.layer_forward(&w, &x).unwrap();
+            assert_eq!(out.shape(), (n, j));
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}

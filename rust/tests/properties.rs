@@ -1,0 +1,165 @@
+//! Property-based invariants over the coordinator substrates (the
+//! offline-build stand-in for `proptest`, see `dssfn::testing`).
+
+use dssfn::data::{shard_uniform, shard_weighted, SynthClassification};
+use dssfn::linalg::Matrix;
+use dssfn::network::{
+    CommLedger, GossipEngine, LatencyModel, MixingMatrix, Topology, WeightRule,
+};
+use dssfn::testing::property;
+use std::sync::Arc;
+
+#[test]
+fn mixing_matrices_doubly_stochastic_on_random_topologies() {
+    property("mixing doubly stochastic", 24, |g| {
+        let m = g.usize_in(2, 24);
+        let topo = if g.bool_with(0.5) {
+            let dmax = Topology::max_circular_degree(m).max(1);
+            Topology::Circular { nodes: m, degree: g.usize_in(1, dmax) }
+        } else {
+            Topology::RandomGeometric {
+                nodes: m,
+                radius: g.f64_in(0.15, 0.6),
+                seed: g.case() as u64,
+            }
+        };
+        let rule = match topo {
+            Topology::Circular { .. } => WeightRule::EqualNeighbor,
+            _ => WeightRule::Metropolis,
+        };
+        let mix = MixingMatrix::build(&topo, rule).unwrap();
+        // validate() ran inside build; re-check the eigen bound here.
+        assert!(mix.lambda2() < 1.0 + 1e-9, "λ2 = {}", mix.lambda2());
+        // consensus_rounds must be monotone in delta.
+        assert!(mix.consensus_rounds(1e-12) >= mix.consensus_rounds(1e-2));
+    });
+}
+
+#[test]
+fn gossip_preserves_sum_and_contracts() {
+    property("gossip conservation + contraction", 16, |g| {
+        let m = g.usize_in(3, 16);
+        let dmax = Topology::max_circular_degree(m).max(1);
+        let d = g.usize_in(1, dmax);
+        let rows = g.usize_in(1, 6);
+        let cols = g.usize_in(1, 6);
+        let mix = MixingMatrix::build(
+            &Topology::Circular { nodes: m, degree: d },
+            WeightRule::EqualNeighbor,
+        )
+        .unwrap();
+        let engine =
+            GossipEngine::new(mix, Arc::new(CommLedger::new()), LatencyModel::default());
+        let mut vals: Vec<Matrix> = (0..m).map(|_| g.matrix(rows, cols, 3.0)).collect();
+        let avg = GossipEngine::exact_average(&vals).unwrap();
+        let before: f64 = vals.iter().map(|v| v.as_slice().iter().sum::<f64>()).sum();
+        let err0: f64 = vals
+            .iter()
+            .map(|v| v.max_abs_diff(&avg))
+            .fold(0.0, f64::max);
+        engine.mix_rounds(&mut vals, 12).unwrap();
+        let after: f64 = vals.iter().map(|v| v.as_slice().iter().sum::<f64>()).sum();
+        assert!(
+            (before - after).abs() < 1e-8 * (1.0 + before.abs()),
+            "sum drift"
+        );
+        let err1: f64 = vals
+            .iter()
+            .map(|v| v.max_abs_diff(&avg))
+            .fold(0.0, f64::max);
+        assert!(err1 <= err0 + 1e-12, "consensus error grew: {err0} -> {err1}");
+    });
+}
+
+#[test]
+fn sharding_partitions_every_sample_exactly_once() {
+    property("shard partition", 16, |g| {
+        let q = g.usize_in(2, 5);
+        let j = g.usize_in(20, 120);
+        let m = g.usize_in(1, j.min(12));
+        let task = {
+            let mut s = SynthClassification::with_shape("p", g.usize_in(2, 10), q, j, 10);
+            s.seed = g.case() as u64;
+            s.generate().unwrap()
+        };
+        let shards = if g.bool_with(0.5) {
+            shard_uniform(&task.train, m).unwrap()
+        } else {
+            let w: Vec<f64> = (0..m).map(|_| g.f64_in(0.2, 3.0)).collect();
+            shard_weighted(&task.train, &w).unwrap()
+        };
+        let total: usize = shards.iter().map(|s| s.num_samples()).sum();
+        assert_eq!(total, j);
+        // Column-exact reconstruction in order.
+        let mut col = 0usize;
+        for sh in &shards {
+            for c in 0..sh.num_samples() {
+                assert_eq!(sh.labels[c], task.train.labels[col]);
+                for r in 0..task.train.input_dim() {
+                    assert_eq!(sh.x.get(r, c), task.train.x.get(r, col));
+                }
+                col += 1;
+            }
+        }
+    });
+}
+
+#[test]
+fn frobenius_projection_is_projection() {
+    property("P_eps is a metric projection", 32, |g| {
+        let rows = g.usize_in(1, 8);
+        let cols = g.usize_in(1, 8);
+        let eps = g.f64_in(0.1, 10.0);
+        let z = g.matrix(rows, cols, 4.0);
+        let mut p = z.clone();
+        p.project_frobenius(eps);
+        // Feasible.
+        assert!(p.frobenius_norm() <= eps + 1e-9);
+        // Idempotent.
+        let mut pp = p.clone();
+        pp.project_frobenius(eps);
+        assert!(pp.max_abs_diff(&p) < 1e-12);
+        // Non-expansive toward any feasible point (here: scaled-down z).
+        let mut feasible = z.clone();
+        feasible.project_frobenius(eps * 0.5);
+        let dz = z.sub(&feasible).unwrap().frobenius_norm();
+        let dp = p.sub(&feasible).unwrap().frobenius_norm();
+        assert!(dp <= dz + 1e-9);
+    });
+}
+
+#[test]
+fn cholesky_solve_residuals_bounded() {
+    property("cholesky solves SPD systems", 24, |g| {
+        let n = g.usize_in(1, 40);
+        let ridge = g.f64_in(0.5, 5.0) + n as f64 * 0.1;
+        let a = g.spd(n, ridge);
+        let f = a.cholesky().unwrap();
+        let x_true = g.matrix(3, n, 2.0);
+        let b = x_true.matmul(&a).unwrap();
+        let x = f.solve_xa(&b).unwrap();
+        assert!(
+            x.max_abs_diff(&x_true) < 1e-6,
+            "n={n} err {}",
+            x.max_abs_diff(&x_true)
+        );
+    });
+}
+
+#[test]
+fn latency_model_monotonicity() {
+    property("latency monotone in load", 32, |g| {
+        let m = LatencyModel {
+            alpha: g.f64_in(1e-5, 1e-2),
+            beta: g.f64_in(1e4, 1e9),
+        };
+        let d = g.usize_in(1, 20);
+        let bytes = g.usize_in(1, 1_000_000) as u64;
+        let t1 = m.round_time(d, bytes);
+        assert!(t1 > 0.0);
+        assert!(m.round_time(d + 1, bytes) >= t1);
+        assert!(m.round_time(d, bytes * 2) >= t1);
+        let r = g.usize_in(1, 50);
+        assert!((m.rounds_time(r, d, bytes) - r as f64 * t1).abs() < 1e-9 * r as f64);
+    });
+}
