@@ -1,5 +1,6 @@
 // Probe: load the quickstart artifacts and check PJRT execution parity
 // against the native backend.
+use dssfn::admm::LocalSolve;
 use dssfn::linalg::Matrix;
 use dssfn::runtime::*;
 use dssfn::util::{Rng, Xoshiro256StarStar};

@@ -4,12 +4,21 @@
 //!
 //! ```text
 //! cargo bench --bench microbench [-- --config mnist-small] [-- --reps 30]
+//!                                [-- --json BENCH_microbench.json]
 //! ```
 //!
 //! Covers, for native and (when artifacts exist) PJRT backends:
-//!   layer_forward, prepare_layer (Gram+factor/inverse), o_update,
+//!   layer_forward, prepare_layer (Gram+factor/inverse), o_update (both
+//!   the allocating form and the workspace `o_update_into` hot path),
 //! plus the gossip engine's per-round cost and a GEMM roofline probe.
+//!
+//! Every measurement is also appended to a machine-readable JSON file
+//! (default `BENCH_microbench.json`, next to the working directory the
+//! bench runs in): a list of `{op, shape, median_secs, reps, gflops}`
+//! rows. Perf PRs diff this file against the previous run to prove the
+//! ≥2× claims instead of eyeballing console output.
 
+use dssfn::admm::LocalSolve;
 use dssfn::linalg::Matrix;
 use dssfn::network::{CommLedger, GossipEngine, LatencyModel, MixingMatrix, Topology, WeightRule};
 use dssfn::runtime::{ArtifactManifest, ComputeBackend, NativeBackend, PjrtBackend};
@@ -30,20 +39,43 @@ fn time_op(reps: usize, mut f: impl FnMut()) -> f64 {
     median(&samples)
 }
 
+/// One recorded measurement (the JSON schema, one object per row).
+struct BenchRow {
+    op: String,
+    shape: String,
+    median_secs: f64,
+    reps: usize,
+    gflops: f64,
+}
+
+fn write_json(path: &str, rows: &[BenchRow]) -> std::io::Result<()> {
+    let mut s = String::from("[\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "  {{\"op\": \"{}\", \"shape\": \"{}\", \"median_secs\": {:e}, \"reps\": {}, \"gflops\": {:.3}}}{}\n",
+            r.op,
+            r.shape,
+            r.median_secs,
+            r.reps,
+            r.gflops,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("]\n");
+    std::fs::write(path, s)
+}
+
 fn main() -> dssfn::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let config = args
-        .iter()
-        .position(|a| a == "--config")
-        .and_then(|i| args.get(i + 1))
-        .cloned()
-        .unwrap_or_else(|| "mnist-small".to_string());
-    let reps: usize = args
-        .iter()
-        .position(|a| a == "--reps")
-        .and_then(|i| args.get(i + 1))
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(20);
+    let arg = |key: &str| {
+        args.iter()
+            .position(|a| a == key)
+            .and_then(|i| args.get(i + 1))
+            .cloned()
+    };
+    let config = arg("--config").unwrap_or_else(|| "mnist-small".to_string());
+    let reps: usize = arg("--reps").and_then(|s| s.parse().ok()).unwrap_or(20);
+    let json_path = arg("--json").unwrap_or_else(|| "BENCH_microbench.json".to_string());
 
     let manifest = ArtifactManifest::load("artifacts").ok();
     let pjrt = manifest
@@ -67,12 +99,23 @@ fn main() -> dssfn::Result<()> {
     let native = NativeBackend::new();
     let y = native.layer_forward(&w1, &x)?;
 
-    let report = |name: &str, secs: f64, flops: f64| {
+    let mut rows: Vec<BenchRow> = Vec::new();
+    let mut report = |name: &str, shape: String, secs: f64, reps: usize, flops: f64| {
         let gflops = flops / secs / 1e9;
         println!("  {name:<34} {:>12}   {gflops:>7.2} GFLOP/s", human_secs(secs));
+        rows.push(BenchRow {
+            op: name.to_string(),
+            shape,
+            median_secs: secs,
+            reps,
+            gflops,
+        });
     };
 
-    for (label, be) in [("native", Some(&native as &dyn ComputeBackend)), ("pjrt", pjrt.as_ref().map(|b| b as &dyn ComputeBackend))] {
+    for (label, be) in [
+        ("native", Some(&native as &dyn ComputeBackend)),
+        ("pjrt", pjrt.as_ref().map(|b| b as &dyn ComputeBackend)),
+    ] {
         let Some(be) = be else {
             println!("[{label}] skipped (artifacts missing)");
             continue;
@@ -81,32 +124,76 @@ fn main() -> dssfn::Result<()> {
         let s = time_op(reps, || {
             be.layer_forward(&w1, &x).unwrap();
         });
-        report("layer_forward n×p @ p×j", s, 2.0 * (n * p * j) as f64);
+        report(
+            &format!("{label}/layer_forward n×p @ p×j"),
+            format!("n{n}xp{p}xj{j}"),
+            s,
+            reps,
+            2.0 * (n * p * j) as f64,
+        );
         let s = time_op(reps, || {
             be.layer_forward(&wn, &y).unwrap();
         });
-        report("layer_forward n×n @ n×j", s, 2.0 * (n * n * j) as f64);
+        report(
+            &format!("{label}/layer_forward n×n @ n×j"),
+            format!("n{n}xn{n}xj{j}"),
+            s,
+            reps,
+            2.0 * (n * n * j) as f64,
+        );
         let s = time_op(reps.min(10), || {
             be.prepare_layer(&y, &t, 1.0).unwrap();
         });
         report(
-            "prepare_layer (gram+inv/factor)",
+            &format!("{label}/prepare_layer (gram+factor)"),
+            format!("n{n}xj{j}"),
             s,
+            reps.min(10),
             (n * n * j) as f64 + (q * n * j) as f64 * 2.0 + (n * n * n) as f64 / 3.0,
         );
         let solver = be.prepare_layer(&y, &t, 1.0)?;
         let s = time_op(reps, || {
             solver.o_update(&z, &z).unwrap();
         });
-        report("o_update (ADMM inner step)", s, 2.0 * (q * n * n) as f64);
+        report(
+            &format!("{label}/o_update (allocating)"),
+            format!("q{q}xn{n}"),
+            s,
+            reps,
+            2.0 * (q * n * n) as f64,
+        );
+        // The coordinator's actual inner step: workspace form, no allocs.
+        let mut out = Matrix::zeros(q, n);
+        let s = time_op(reps, || {
+            solver.o_update_into(&z, &z, &mut out).unwrap();
+        });
+        report(
+            &format!("{label}/o_update_into (workspace)"),
+            format!("q{q}xn{n}"),
+            s,
+            reps,
+            2.0 * (q * n * n) as f64,
+        );
         let s = time_op(reps, || {
             solver.cost(&z).unwrap();
         });
-        report("cost eval (cached grams)", s, 2.0 * (q * n * n) as f64);
+        report(
+            &format!("{label}/cost eval (cached grams)"),
+            format!("q{q}xn{n}"),
+            s,
+            reps,
+            2.0 * (q * n * n) as f64,
+        );
         let s = time_op(reps, || {
             be.output_scores(&z, &y).unwrap();
         });
-        report("output_scores q×n @ n×j", s, 2.0 * (q * n * j) as f64);
+        report(
+            &format!("{label}/output_scores q×n @ n×j"),
+            format!("q{q}xn{n}xj{j}"),
+            s,
+            reps,
+            2.0 * (q * n * j) as f64,
+        );
     }
 
     // Gossip engine per-round cost at the protocol payload size (q×n).
@@ -124,9 +211,14 @@ fn main() -> dssfn::Result<()> {
         let s = time_op(reps, || {
             engine.mix_rounds(&mut vals, 1).unwrap();
         });
-        println!(
-            "  mix_round M={m:<2} d={d} (q×n payload)      {:>12}",
-            human_secs(s)
+        // FLOP estimate: one copy + (|N|−1) axpys + scale per node.
+        let axpys = (2 * d) as f64; // circular degree d ⇒ 2d neighbours
+        report(
+            &format!("gossip/mix_round M={m} d={d}"),
+            format!("q{q}xn{n}"),
+            s,
+            reps,
+            m as f64 * (axpys * 2.0 + 1.0) * (q * n) as f64,
         );
     }
 
@@ -138,7 +230,16 @@ fn main() -> dssfn::Result<()> {
         let s = time_op(reps.min(10), || {
             a.matmul(&b).unwrap();
         });
-        report(&format!("gemm {size}³ f64"), s, 2.0 * (size * size * size) as f64);
+        report(
+            &format!("gemm/{size}³ f64"),
+            format!("{size}x{size}x{size}"),
+            s,
+            reps.min(10),
+            2.0 * (size * size * size) as f64,
+        );
     }
+
+    write_json(&json_path, &rows)?;
+    println!("wrote {} rows to {json_path}", rows.len());
     Ok(())
 }

@@ -1,12 +1,16 @@
 //! Per-node layer solver: caches everything that is constant across the
-//! ADMM iterations of one layer.
+//! ADMM iterations of one layer, plus the per-node [`Workspace`] so the
+//! iterations themselves are allocation-free.
 
+use super::Workspace;
 use crate::linalg::{CholeskyFactor, Matrix};
 use crate::Result;
+use std::sync::{Mutex, PoisonError};
 
 /// Node-local cached quantities for one layer's ADMM solve:
 /// the Cholesky factor of `G = Y Yᵀ + μ⁻¹ I`, the cross-Gram `T Yᵀ`,
-/// and the scalars needed for fast cost evaluation.
+/// the scalars needed for fast cost evaluation, and the preallocated
+/// scratch buffers of the zero-allocation inner loop.
 #[derive(Debug)]
 pub struct LayerLocalSolver {
     /// Cholesky factor of `G = Y·Yᵀ + μ⁻¹·I` (`n×n`).
@@ -27,12 +31,24 @@ pub struct LayerLocalSolver {
     mu_inv: f64,
     /// Local sample count `J_m` (diagnostics).
     samples: usize,
+    /// Iteration scratch, created once here in the prepare phase. Behind
+    /// a mutex only to keep the shared `&self` API — one worker thread
+    /// owns a node at a time, so the lock is always uncontended.
+    ws: Mutex<Workspace>,
 }
 
 impl LayerLocalSolver {
     /// Precompute the layer-constant quantities from the node's local
     /// features `y` (`n×J_m`) and targets `t` (`Q×J_m`).
     pub fn new(y: &Matrix, t: &Matrix, mu: f64) -> Result<Self> {
+        Self::with_threads(y, t, mu, 1)
+    }
+
+    /// [`LayerLocalSolver::new`] with an intra-node thread budget for the
+    /// Gram build (`Y·Yᵀ` dominates the prepare phase). The result is
+    /// bit-identical for every `threads` value — see
+    /// [`Matrix::gram_threaded`].
+    pub fn with_threads(y: &Matrix, t: &Matrix, mu: f64, threads: usize) -> Result<Self> {
         if y.cols() != t.cols() {
             return Err(crate::Error::Shape(format!(
                 "features {}x{} vs targets {}x{}",
@@ -46,11 +62,12 @@ impl LayerLocalSolver {
             return Err(crate::Error::Config(format!("mu must be positive, got {mu}")));
         }
         let mu_inv = 1.0 / mu;
-        let gram0 = y.gram();
+        let gram0 = y.gram_threaded(threads);
         let mut g = gram0.clone();
         g.add_diag(mu_inv)?;
         let factor = g.cholesky()?;
         let tyt = t.matmul_transb(y)?;
+        let ws = Mutex::new(Workspace::new(t.rows(), y.rows()));
         Ok(Self {
             factor,
             ginv: std::sync::OnceLock::new(),
@@ -59,6 +76,7 @@ impl LayerLocalSolver {
             t_norm_sq: t.frobenius_norm_sq(),
             mu_inv,
             samples: y.cols(),
+            ws,
         })
     }
 
@@ -75,6 +93,7 @@ impl LayerLocalSolver {
         let mut gram0 = g.clone();
         gram0.add_diag(-mu_inv)?;
         let factor = g.cholesky()?;
+        let ws = Mutex::new(Workspace::new(tyt.rows(), tyt.cols()));
         Ok(Self {
             factor,
             ginv: std::sync::OnceLock::new(),
@@ -83,16 +102,31 @@ impl LayerLocalSolver {
             t_norm_sq,
             mu_inv,
             samples,
+            ws,
         })
     }
 
     /// ADMM step 1: `O = (T Yᵀ + μ⁻¹ (Z − Λ)) · G⁻¹`, via the hoisted
-    /// explicit inverse (one `Q×n·n×n` GEMM per call).
+    /// explicit inverse (one `Q×n·n×n` GEMM per call). Allocating form of
+    /// [`LayerLocalSolver::o_update_into`].
     pub fn o_update(&self, z: &Matrix, lambda: &Matrix) -> Result<Matrix> {
-        let mut rhs = self.tyt.clone();
+        let mut out = Matrix::zeros(self.tyt.rows(), self.tyt.cols());
+        self.o_update_into(z, lambda, &mut out)?;
+        Ok(out)
+    }
+
+    /// ADMM step 1 written into a caller-owned `Q×n` buffer: zero heap
+    /// allocations in steady state (the RHS accumulates in the workspace,
+    /// the GEMM packs from the thread-local arena). Bit-identical to
+    /// [`LayerLocalSolver::o_update`].
+    pub fn o_update_into(&self, z: &Matrix, lambda: &Matrix, out: &mut Matrix) -> Result<()> {
+        let ginv = self.ginv();
+        let mut ws = self.ws.lock().unwrap_or_else(PoisonError::into_inner);
+        let rhs = ws.rhs_mut();
+        rhs.copy_from(&self.tyt)?;
         rhs.axpy(self.mu_inv, z)?;
         rhs.axpy(-self.mu_inv, lambda)?;
-        rhs.matmul(self.ginv())
+        rhs.matmul_into(ginv, out)
     }
 
     /// The lazily-built hoisted inverse.
@@ -101,9 +135,12 @@ impl LayerLocalSolver {
     }
 
     /// Local cost `‖T − O·Y‖²_F` evaluated in `O(Q n² )` via the cached
-    /// Grams: `‖T‖² − 2⟨O, TYᵀ⟩ + ⟨O·(YYᵀ), O⟩`.
+    /// Grams: `‖T‖² − 2⟨O, TYᵀ⟩ + ⟨O·(YYᵀ), O⟩`. Allocation-free: the
+    /// `O·G₀` product lands in the workspace buffer.
     pub fn cost(&self, o: &Matrix) -> Result<f64> {
-        let og = o.matmul(&self.gram0)?;
+        let mut ws = self.ws.lock().unwrap_or_else(PoisonError::into_inner);
+        let og = ws.og_mut();
+        o.matmul_into(&self.gram0, og)?;
         let mut quad = 0.0;
         let mut cross = 0.0;
         for (a, (b, c)) in o
@@ -239,6 +276,40 @@ mod tests {
         assert!(oa.max_abs_diff(&ob) < 1e-9);
         let o = rand_mat(q, n, 15);
         assert!((a.cost(&o).unwrap() - b.cost(&o).unwrap()).abs() < 1e-8);
+    }
+
+    #[test]
+    fn o_update_into_matches_allocating_form_bitwise() {
+        let (n, j, q) = (10, 35, 4);
+        let y = rand_mat(n, j, 20);
+        let t = rand_mat(q, j, 21);
+        let s = LayerLocalSolver::new(&y, &t, 0.8).unwrap();
+        let z = rand_mat(q, n, 22);
+        let lam = rand_mat(q, n, 23);
+        let owned = s.o_update(&z, &lam).unwrap();
+        let mut out = Matrix::from_fn(q, n, |_, _| -7.0); // stale contents
+        s.o_update_into(&z, &lam, &mut out).unwrap();
+        assert_eq!(out.max_abs_diff(&owned), 0.0);
+        // Shape mismatch is rejected, not silently resized.
+        let mut wrong = Matrix::zeros(q, n + 1);
+        assert!(s.o_update_into(&z, &lam, &mut wrong).is_err());
+    }
+
+    #[test]
+    fn with_threads_matches_sequential_bitwise() {
+        // Wide enough that the threaded Gram actually splits bands.
+        let (n, j, q) = (70, 90, 3);
+        let y = rand_mat(n, j, 24);
+        let t = rand_mat(q, j, 25);
+        let a = LayerLocalSolver::new(&y, &t, 1.3).unwrap();
+        let b = LayerLocalSolver::with_threads(&y, &t, 1.3, 4).unwrap();
+        let z = rand_mat(q, n, 26);
+        let lam = rand_mat(q, n, 27);
+        let oa = a.o_update(&z, &lam).unwrap();
+        let ob = b.o_update(&z, &lam).unwrap();
+        assert_eq!(oa.max_abs_diff(&ob), 0.0);
+        let o = rand_mat(q, n, 28);
+        assert_eq!(a.cost(&o).unwrap(), b.cost(&o).unwrap());
     }
 
     #[test]

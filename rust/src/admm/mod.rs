@@ -17,14 +17,21 @@
 //! [`LayerLocalSolver`] factors it **once per layer** (Cholesky) and each
 //! iteration is one GEMM + triangular solves. This hoisting is the single
 //! biggest perf lever in the whole stack (see `EXPERIMENTS.md §Perf`).
+//! The second lever is allocation discipline: each solver carries a
+//! [`Workspace`] created in the prepare phase, and the iteration writes
+//! through [`LocalSolve::o_update_into`] into preallocated buffers — the
+//! steady-state loop performs zero heap allocations (pinned by
+//! `tests/alloc_free.rs`).
 
 mod local;
 mod solve;
+mod workspace;
 
 pub use local::LayerLocalSolver;
 pub use solve::{
     solve_centralized, solve_decentralized, AdmmParams, Consensus, DecentralizedSolution,
 };
+pub use workspace::Workspace;
 
 use crate::linalg::Matrix;
 use crate::Result;
@@ -35,6 +42,26 @@ use crate::Result;
 pub trait LocalSolve: Send + Sync {
     /// ADMM step 1: `O = (T Yᵀ + μ⁻¹ (Z − Λ)) · (Y Yᵀ + μ⁻¹ I)⁻¹`.
     fn o_update(&self, z: &Matrix, lambda: &Matrix) -> Result<Matrix>;
+
+    /// ADMM step 1 written into a caller-owned `Q×n` buffer. The hot
+    /// loops (sequential oracle and threaded coordinator alike) call this
+    /// form so the steady-state iteration allocates nothing. The default
+    /// delegates to the allocating [`LocalSolve::o_update`]; backends
+    /// with preallocated workspaces override it. A wrong-shaped `out` is
+    /// rejected on every implementation — never silently resized.
+    fn o_update_into(&self, z: &Matrix, lambda: &Matrix, out: &mut Matrix) -> Result<()> {
+        let o = self.o_update(z, lambda)?;
+        if out.shape() != o.shape() {
+            return Err(crate::Error::Shape(format!(
+                "o_update_into: output buffer {:?} vs result {:?}",
+                out.shape(),
+                o.shape()
+            )));
+        }
+        *out = o;
+        Ok(())
+    }
+
     /// Local cost `‖T − O·Y‖²_F`.
     fn cost(&self, o: &Matrix) -> Result<f64>;
 }
@@ -42,6 +69,9 @@ pub trait LocalSolve: Send + Sync {
 impl LocalSolve for LayerLocalSolver {
     fn o_update(&self, z: &Matrix, lambda: &Matrix) -> Result<Matrix> {
         LayerLocalSolver::o_update(self, z, lambda)
+    }
+    fn o_update_into(&self, z: &Matrix, lambda: &Matrix, out: &mut Matrix) -> Result<()> {
+        LayerLocalSolver::o_update_into(self, z, lambda, out)
     }
     fn cost(&self, o: &Matrix) -> Result<f64> {
         LayerLocalSolver::cost(self, o)
@@ -51,6 +81,11 @@ impl LocalSolve for LayerLocalSolver {
 impl LocalSolve for Box<dyn LocalSolve> {
     fn o_update(&self, z: &Matrix, lambda: &Matrix) -> Result<Matrix> {
         (**self).o_update(z, lambda)
+    }
+    // Forward explicitly: the trait default would route through the
+    // allocating o_update and silently lose the zero-allocation path.
+    fn o_update_into(&self, z: &Matrix, lambda: &Matrix, out: &mut Matrix) -> Result<()> {
+        (**self).o_update_into(z, lambda, out)
     }
     fn cost(&self, o: &Matrix) -> Result<f64> {
         (**self).cost(o)

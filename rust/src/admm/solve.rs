@@ -96,13 +96,17 @@ pub fn solve_decentralized<S: LocalSolve>(
     let mut states: Vec<NodeState> = (0..m).map(|_| NodeState::zeros(q, n)).collect();
     let mut cost_curve = Vec::with_capacity(params.iterations);
     let mut gossip_rounds = 0usize;
-    // Scratch for the averaging step.
+    // Scratch for the averaging step and the exact-consensus average —
+    // all buffers live outside the iteration loop, which is heap-silent
+    // in steady state (tests/alloc_free.rs counts).
     let mut s_vals: Vec<Matrix> = (0..m).map(|_| Matrix::zeros(q, n)).collect();
+    let mut avg = Matrix::zeros(q, n);
 
     for _k in 0..params.iterations {
-        // (1) local O-updates.
+        // (1) local O-updates, in place.
         for (st, solver) in states.iter_mut().zip(solvers) {
-            st.o = solver.o_update(&st.z, &st.lambda)?;
+            let NodeState { o, lambda, z } = st;
+            solver.o_update_into(z, lambda, o)?;
         }
         // (2) averaging of O_m + Λ_m.
         for (sv, st) in s_vals.iter_mut().zip(&states) {
@@ -111,7 +115,7 @@ pub fn solve_decentralized<S: LocalSolve>(
         }
         match consensus {
             Consensus::Exact => {
-                let avg = GossipEngine::exact_average(&s_vals)?;
+                GossipEngine::exact_average_into(&s_vals, &mut avg)?;
                 for sv in s_vals.iter_mut() {
                     sv.copy_from(&avg)?;
                 }

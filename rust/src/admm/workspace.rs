@@ -1,0 +1,60 @@
+//! Per-node scratch arena for the ADMM inner loop.
+//!
+//! The paper's complexity claim lives or dies on per-iteration cost: with
+//! `K = 100` ADMM iterations per layer, any allocation inside the O/Z/Λ
+//! update cycle is paid `K·M·L` times per training run. A [`Workspace`]
+//! is created **once** per node in `prepare_layer` (it lives inside
+//! [`super::LayerLocalSolver`] behind a mutex, so the `&self` solver API
+//! is unchanged) and every iteration writes into its preallocated `Q×n`
+//! buffers instead of cloning:
+//!
+//! * `rhs` — accumulator for `T·Yᵀ + μ⁻¹(Z − Λ)`, the O-update RHS;
+//! * `og`  — the `O·(Y·Yᵀ)` product of the cached-Gram cost evaluation.
+//!
+//! Together with the thread-local GEMM packing arena (`linalg::pack`) and
+//! the gossip engine's persistent double buffer, this makes the
+//! steady-state ADMM iteration perform **zero heap allocations** — pinned
+//! by the counting-allocator test in `tests/alloc_free.rs`.
+
+use crate::linalg::Matrix;
+
+/// Preallocated per-node scratch buffers for one layer's ADMM solve.
+#[derive(Debug)]
+pub struct Workspace {
+    /// O-update right-hand side accumulator (`Q×n`).
+    rhs: Matrix,
+    /// `O·G₀` product buffer for cost evaluation (`Q×n`).
+    og: Matrix,
+}
+
+impl Workspace {
+    /// Allocate buffers for a `Q×n` output matrix.
+    pub fn new(q: usize, n: usize) -> Self {
+        Self {
+            rhs: Matrix::zeros(q, n),
+            og: Matrix::zeros(q, n),
+        }
+    }
+
+    /// The RHS accumulator.
+    pub(crate) fn rhs_mut(&mut self) -> &mut Matrix {
+        &mut self.rhs
+    }
+
+    /// The cost-evaluation product buffer.
+    pub(crate) fn og_mut(&mut self) -> &mut Matrix {
+        &mut self.og
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffers_have_requested_shape() {
+        let mut ws = Workspace::new(3, 7);
+        assert_eq!(ws.rhs_mut().shape(), (3, 7));
+        assert_eq!(ws.og_mut().shape(), (3, 7));
+    }
+}

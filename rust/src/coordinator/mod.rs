@@ -22,10 +22,18 @@
 //!   advance:   W_{l+1} = [V_Q Z_m ; R_{l+1}] per node,
 //!              Y_{l+1,m} = g(W_{l+1} Y_{l,m})        [backend kernel]
 //! ```
+//!
+//! The thread budget is split by [`ParallelismBudget`]: node fan-out
+//! first, and when `M < threads` the leftover threads go to the
+//! per-node Gram build (`set_intra_threads` on the backend). Every
+//! per-node computation is bit-identical regardless of the split, so
+//! the threaded path produces exactly the sequential oracle's output
+//! (`admm::solve_decentralized`) — pinned by
+//! `tests/coordinator_oracle.rs`.
 
 mod pool;
 
-pub use pool::{default_threads, for_each_node};
+pub use pool::{default_threads, for_each_node, for_each_node_mut, ParallelismBudget};
 
 use crate::admm::{LocalSolve, NodeState};
 use crate::config::ExperimentConfig;
@@ -197,11 +205,18 @@ impl DecentralizedTrainer {
     ) -> Result<(SsfnModel, TrainReport)> {
         let m = self.opts.nodes;
         let q = self.arch.num_classes;
-        let threads = if self.opts.threads == 0 {
+        let total_threads = if self.opts.threads == 0 {
             default_threads()
         } else {
             self.opts.threads
         };
+        // Split the budget across the two parallelism axes: node fan-out
+        // first, leftover threads to intra-node kernels (the per-node
+        // Gram build of the prepare phase). Bit-exactness is preserved
+        // for every split — see ParallelismBudget.
+        let budget = ParallelismBudget::new(m, total_threads);
+        let threads = budget.node_threads;
+        self.backend.set_intra_threads(budget.intra_threads);
 
         let shards: Vec<Dataset> = shard_uniform(&task.train, m)?;
         let random = RandomMatrices::generate(&self.arch, self.seed)?;
@@ -255,20 +270,22 @@ impl DecentralizedTrainer {
             })?;
 
             // ---- ADMM loop ----
+            // All iteration buffers are preallocated here; the loop body
+            // itself writes into node state in place (the per-node
+            // workspaces live inside the solvers, built in prepare).
             let mut states: Vec<NodeState> =
                 (0..m).map(|_| NodeState::zeros(q, feat_dim)).collect();
             let mut s_vals: Vec<Matrix> = (0..m).map(|_| Matrix::zeros(q, feat_dim)).collect();
+            let mut avg = Matrix::zeros(q, feat_dim);
             let mut cost_curve = Vec::new();
             let mut gossip_rounds = 0usize;
 
             for _k in 0..params.iterations {
-                // O-update, fanned out.
-                let new_os: Vec<Matrix> = for_each_node(m, threads, |i| {
-                    solvers[i].o_update(&states[i].z, &states[i].lambda)
+                // O-update, fanned out, written into each node's state.
+                for_each_node_mut(&mut states, threads, |i, st| {
+                    let NodeState { o, lambda, z } = st;
+                    solvers[i].o_update_into(z, lambda, o)
                 })?;
-                for (st, o) in states.iter_mut().zip(new_os) {
-                    st.o = o;
-                }
                 // Averaging of O + Λ.
                 for (sv, st) in s_vals.iter_mut().zip(&states) {
                     sv.copy_from(&st.o)?;
@@ -276,7 +293,7 @@ impl DecentralizedTrainer {
                 }
                 match (&self.opts.consensus, &engine) {
                     (ConsensusMode::Exact, _) => {
-                        let avg = GossipEngine::exact_average(&s_vals)?;
+                        GossipEngine::exact_average_into(&s_vals, &mut avg)?;
                         for sv in s_vals.iter_mut() {
                             sv.copy_from(&avg)?;
                         }

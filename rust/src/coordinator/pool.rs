@@ -1,4 +1,4 @@
-//! Scoped fan-out helper for per-node parallel phases.
+//! Scoped fan-out helpers and the parallelism budget for per-node phases.
 //!
 //! Each synchronous phase of the dSSFN protocol ("all nodes compute their
 //! O-update", "all nodes advance their features") is expressed as a
@@ -6,9 +6,44 @@
 //! node indices across at most `threads` OS threads and joins them — the
 //! barrier between phases falls out of the join. Results come back in
 //! node order; the first node error (lowest index) aborts the phase.
+//! [`for_each_node_mut`] is the in-place variant the zero-allocation
+//! ADMM loop uses: it hands each worker a disjoint chunk of the per-node
+//! state slice, so the O-updates write straight into the node states.
+//!
+//! [`ParallelismBudget`] splits the thread budget across the two
+//! parallelism axes: when there are more worker threads than nodes
+//! (`M < threads`), the leftover threads are handed to intra-node
+//! kernels — concretely the row-banded Gram build of the prepare phase
+//! (`Matrix::gram_threaded`), which is bit-identical to the sequential
+//! build for every thread count, so the split never perturbs
+//! centralized-equivalence determinism.
 
 use crate::Result;
 use std::sync::Mutex;
+
+/// How a thread budget is split between node-level fan-out and
+/// intra-node kernel parallelism.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParallelismBudget {
+    /// Threads used to fan node phases out (`min(threads, nodes)`).
+    pub node_threads: usize,
+    /// Threads each concurrent node kernel may use internally
+    /// (`max(1, threads / nodes)`); `1` whenever nodes saturate the
+    /// budget.
+    pub intra_threads: usize,
+}
+
+impl ParallelismBudget {
+    /// Split `threads` across `nodes` workers.
+    pub fn new(nodes: usize, threads: usize) -> Self {
+        let threads = threads.max(1);
+        let nodes = nodes.max(1);
+        Self {
+            node_threads: threads.min(nodes),
+            intra_threads: (threads / nodes).max(1),
+        }
+    }
+}
 
 /// Run `f(node)` for every node in `0..m` across up to `threads` worker
 /// threads. Deterministic: the work done per node is identical to the
@@ -49,6 +84,62 @@ where
         }
     }
     Ok(out)
+}
+
+/// Run `f(node, &mut items[node])` for every node across up to `threads`
+/// worker threads, mutating the per-node state in place (no result
+/// vector, no per-node output allocation). Workers own disjoint
+/// contiguous chunks of `items`; the work done per node is identical to
+/// the sequential loop, so floating-point order within a node never
+/// changes. The lowest-index node error aborts the phase (after the
+/// barrier).
+pub fn for_each_node_mut<T, F>(items: &mut [T], threads: usize, f: F) -> Result<()>
+where
+    T: Send,
+    F: Fn(usize, &mut T) -> Result<()> + Sync,
+{
+    let m = items.len();
+    let threads = threads.max(1).min(m.max(1));
+    if threads == 1 {
+        for (i, item) in items.iter_mut().enumerate() {
+            f(i, item)?;
+        }
+        return Ok(());
+    }
+    let chunk = m.div_ceil(threads);
+    let errs: Vec<Mutex<Option<(usize, crate::Error)>>> =
+        (0..threads).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for (ci, chunk_items) in items.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            let errs = &errs;
+            scope.spawn(move || {
+                for (off, item) in chunk_items.iter_mut().enumerate() {
+                    let node = ci * chunk + off;
+                    if let Err(e) = f(node, item) {
+                        *errs[ci].lock().expect("slot poisoned") = Some((node, e));
+                        break;
+                    }
+                }
+            });
+        }
+    });
+    let mut first: Option<(usize, crate::Error)> = None;
+    for slot in errs {
+        if let Some((node, e)) = slot.into_inner().expect("slot poisoned") {
+            let lower = match &first {
+                Some((n, _)) => node < *n,
+                None => true,
+            };
+            if lower {
+                first = Some((node, e));
+            }
+        }
+    }
+    match first {
+        Some((_, e)) => Err(e),
+        None => Ok(()),
+    }
 }
 
 /// Default worker-thread count: physical parallelism minus one for the
@@ -93,6 +184,59 @@ mod tests {
             }
         });
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn mut_variant_visits_every_node_in_place() {
+        let mut items: Vec<usize> = vec![0; 23];
+        for_each_node_mut(&mut items, 4, |i, it| {
+            *it = i * 3;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(items, (0..23).map(|i| i * 3).collect::<Vec<_>>());
+        // Sequential fallback matches.
+        let mut seq: Vec<usize> = vec![0; 23];
+        for_each_node_mut(&mut seq, 1, |i, it| {
+            *it = i * 3;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(items, seq);
+    }
+
+    #[test]
+    fn mut_variant_reports_lowest_index_error() {
+        let mut items = vec![0u32; 12];
+        let r = for_each_node_mut(&mut items, 3, |i, _| {
+            if i == 9 || i == 5 {
+                Err(crate::Error::Config(format!("boom {i}")))
+            } else {
+                Ok(())
+            }
+        });
+        match r {
+            Err(crate::Error::Config(msg)) => assert_eq!(msg, "boom 5"),
+            other => panic!("expected config error, got {other:?}"),
+        }
+        let mut empty: Vec<u32> = Vec::new();
+        assert!(for_each_node_mut(&mut empty, 4, |_, _| Ok(())).is_ok());
+    }
+
+    #[test]
+    fn budget_splits_threads_across_axes() {
+        let b = ParallelismBudget::new(4, 8);
+        assert_eq!(b.node_threads, 4);
+        assert_eq!(b.intra_threads, 2);
+        let b = ParallelismBudget::new(20, 8);
+        assert_eq!(b.node_threads, 8);
+        assert_eq!(b.intra_threads, 1);
+        let b = ParallelismBudget::new(1, 6);
+        assert_eq!(b.node_threads, 1);
+        assert_eq!(b.intra_threads, 6);
+        let b = ParallelismBudget::new(0, 0);
+        assert_eq!(b.node_threads, 1);
+        assert_eq!(b.intra_threads, 1);
     }
 
     #[test]

@@ -40,6 +40,11 @@
 //! println!("test accuracy = {:.2}%", 100.0 * report.test_accuracy);
 //! ```
 
+// Dense-kernel code is index-loop-heavy by nature; iterator rewrites of
+// the blocked GEMM/SYRK loops obscure the access pattern LLVM needs to
+// see for vectorization without changing the generated code.
+#![allow(clippy::needless_range_loop)]
+
 pub mod admm;
 pub mod baselines;
 pub mod config;
@@ -58,29 +63,55 @@ pub use coordinator::DecentralizedTrainer;
 pub use ssfn::CentralizedTrainer;
 
 /// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+///
+/// The `Display`/`Error` impls are hand-written (the build image is fully
+/// offline, so the crate carries no `thiserror` dependency).
+#[derive(Debug)]
 pub enum Error {
     /// Dimension mismatch in a linear-algebra operation.
-    #[error("shape mismatch: {0}")]
     Shape(String),
     /// A matrix factorization failed (e.g. non-SPD input to Cholesky).
-    #[error("numerical failure: {0}")]
     Numerical(String),
     /// Invalid configuration value.
-    #[error("config error: {0}")]
     Config(String),
     /// Problem with the communication-network model.
-    #[error("network error: {0}")]
     Network(String),
     /// PJRT runtime failure (artifact missing, compile/execute error).
-    #[error("runtime error: {0}")]
     Runtime(String),
     /// Dataset construction / sharding failure.
-    #[error("data error: {0}")]
     Data(String),
     /// I/O error.
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Shape(m) => write!(f, "shape mismatch: {m}"),
+            Error::Numerical(m) => write!(f, "numerical failure: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Network(m) => write!(f, "network error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Data(m) => write!(f, "data error: {m}"),
+            // Transparent: forward the io error's own message.
+            Error::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 /// Crate-wide result alias.

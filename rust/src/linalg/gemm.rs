@@ -1,81 +1,24 @@
-//! Cache-blocked GEMM kernels over row-major `f64` buffers.
+//! GEMM kernels over row-major `f64` buffers.
 //!
 //! Three variants cover everything the crate needs:
 //!
-//! * [`gemm_nn`] — `C = A·B`
-//! * [`gemm_nt`] — `C = A·Bᵀ` (dot-product form; no transpose materialized)
-//! * [`syrk`]    — `C = A·Aᵀ` exploiting symmetry (half the FLOPs)
+//! * [`gemm_nn`] — `C += A·B`, the panel-packed register-blocked kernel
+//!   from [`super::pack`] (a 4×8 tile of independent accumulator chains
+//!   fed from a thread-local packing arena; bit-identical to the classic
+//!   `i-k-j` axpy loop it replaced, and allocation-free in steady state).
+//! * [`gemm_nt`] — `C += A·Bᵀ` (dot-product form; no transpose
+//!   materialized).
+//! * [`syrk`]    — `C = A·Aᵀ` exploiting symmetry (half the FLOPs),
+//!   4×4-tiled in [`super::pack`] with partition-independent per-element
+//!   chains (the threaded Gram build relies on this).
 //!
-//! The `nn` kernel uses the classic `i-k-j` loop order with `K`-blocking so
-//! the inner loop is a contiguous `axpy` over a row of `B` — this both
-//! auto-vectorizes and streams memory. The `nt` kernel is dot-product
-//! shaped, which is already contiguous for row-major inputs.
-//!
-//! These are deliberately single-threaded: in dSSFN the *workers* are the
-//! parallelism axis (M node threads), so nested threading inside GEMM
-//! would oversubscribe cores and distort the Fig-4 timing model.
+//! The kernels here are single-threaded: in dSSFN the *workers* are the
+//! primary parallelism axis (M node threads). When `M` is smaller than
+//! the thread budget the coordinator hands the leftover threads to
+//! [`super::pack::syrk_mt`] via `Matrix::gram_threaded` — row-banded and
+//! bit-identical to the sequential build.
 
-/// Block size along the reduction dimension for `gemm_nn`.
-const KC: usize = 256;
-/// Block size along the M dimension.
-const MC: usize = 64;
-
-/// `C[m×n] = A[m×k] · B[k×n]` (C is accumulated into; caller zeroes it).
-///
-/// Register-blocked 4-row micro-kernel: each streamed row of `B` is
-/// reused against four rows of `A`, quadrupling the arithmetic per
-/// memory access versus the plain `i-k-j` axpy loop (§Perf: ~1.6× at
-/// 256³).
-pub fn gemm_nn(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(c.len(), m * n);
-    for kb in (0..k).step_by(KC) {
-        let kmax = (kb + KC).min(k);
-        for mb in (0..m).step_by(MC) {
-            let mmax = (mb + MC).min(m);
-            let mut i = mb;
-            // 4-row micro-kernel.
-            while i + 4 <= mmax {
-                let (a0, a1, a2, a3) = (
-                    &a[i * k..(i + 1) * k],
-                    &a[(i + 1) * k..(i + 2) * k],
-                    &a[(i + 2) * k..(i + 3) * k],
-                    &a[(i + 3) * k..(i + 4) * k],
-                );
-                // Split the four C rows without overlapping borrows.
-                let (c01, c23) = c[i * n..(i + 4) * n].split_at_mut(2 * n);
-                let (c0, c1) = c01.split_at_mut(n);
-                let (c2, c3) = c23.split_at_mut(n);
-                for p in kb..kmax {
-                    let (w0, w1, w2, w3) = (a0[p], a1[p], a2[p], a3[p]);
-                    let brow = &b[p * n..(p + 1) * n];
-                    for jj in 0..n {
-                        let bv = brow[jj];
-                        c0[jj] += w0 * bv;
-                        c1[jj] += w1 * bv;
-                        c2[jj] += w2 * bv;
-                        c3[jj] += w3 * bv;
-                    }
-                }
-                i += 4;
-            }
-            // Remainder rows: plain axpy loop.
-            while i < mmax {
-                let arow = &a[i * k..(i + 1) * k];
-                let crow = &mut c[i * n..(i + 1) * n];
-                for p in kb..kmax {
-                    let aip = arow[p];
-                    let brow = &b[p * n..(p + 1) * n];
-                    for (cv, bv) in crow.iter_mut().zip(brow) {
-                        *cv += aip * bv;
-                    }
-                }
-                i += 1;
-            }
-        }
-    }
-}
+pub use super::pack::{gemm_nn, syrk};
 
 /// `C[m×n] = A[m×k] · B[n×k]ᵀ` (dot-product form; C accumulated into).
 pub fn gemm_nt(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
@@ -88,44 +31,6 @@ pub fn gemm_nt(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]
         for j in 0..n {
             let brow = &b[j * k..(j + 1) * k];
             crow[j] += dot(arow, brow);
-        }
-    }
-}
-
-/// `C[m×m] = A[m×k] · Aᵀ`, computing only the lower triangle and
-/// mirroring. Processes two `i`-rows at a time so each streamed `A[j]`
-/// row feeds two dot products (§Perf: ~1.3× on the Gram build).
-pub fn syrk(m: usize, k: usize, a: &[f64], c: &mut [f64]) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(c.len(), m * m);
-    let mut i = 0;
-    while i + 2 <= m {
-        let r0 = &a[i * k..(i + 1) * k];
-        let r1 = &a[(i + 1) * k..(i + 2) * k];
-        for j in 0..=i {
-            let brow = &a[j * k..(j + 1) * k];
-            let (mut s0, mut s1) = (0.0f64, 0.0f64);
-            for ((&x0, &x1), &bv) in r0.iter().zip(r1).zip(brow) {
-                s0 += x0 * bv;
-                s1 += x1 * bv;
-            }
-            c[i * m + j] = s0;
-            c[j * m + i] = s0;
-            c[(i + 1) * m + j] = s1;
-            c[j * m + i + 1] = s1;
-        }
-        // The (i+1, i+1) diagonal element not covered by j ≤ i.
-        let d = dot(r1, r1);
-        c[(i + 1) * m + i + 1] = d;
-        i += 2;
-    }
-    if i < m {
-        let arow = &a[i * k..(i + 1) * k];
-        for j in 0..=i {
-            let brow = &a[j * k..(j + 1) * k];
-            let v = dot(arow, brow);
-            c[i * m + j] = v;
-            c[j * m + i] = v;
         }
     }
 }

@@ -10,13 +10,21 @@
 //! * the **DGD baseline**, and
 //! * the centralized SSFN trainer.
 //!
-//! Layout is row-major. The hot kernels live in [`gemm`] (packed/blocked
-//! `i-k-j` loops that vectorize well) and [`cholesky`] (SPD factorization
-//! used to hoist the ADMM Gram inverse out of the inner loop).
+//! Layout is row-major. The hot kernels live in [`pack`] (panel-packed,
+//! register-blocked GEMM/SYRK micro-kernels fed from a thread-local
+//! packing arena — allocation-free in steady state and bit-identical to
+//! the naive loop order per element), re-exported through [`gemm`], and
+//! in [`cholesky`] (SPD factorization used to hoist the ADMM Gram
+//! inverse out of the inner loop). The hot-path entry points for the
+//! zero-allocation ADMM iteration are [`Matrix::matmul_into`] (write
+//! into a caller-owned buffer) and [`Matrix::gram_threaded`] (row-banded
+//! multi-threaded Gram build, bit-identical to [`Matrix::gram`] for
+//! every thread count).
 
 mod cholesky;
 mod gemm;
 mod ops;
+mod pack;
 
 pub use cholesky::CholeskyFactor;
 pub use gemm::dot;
@@ -181,6 +189,25 @@ impl Matrix {
         Ok(out)
     }
 
+    /// `self @ other` written into `out` without allocating. `out` is
+    /// overwritten (zeroed, then accumulated) — the zero-allocation form
+    /// of [`Matrix::matmul`] used by the ADMM hot path; both produce
+    /// bit-identical values.
+    pub fn matmul_into(&self, other: &Self, out: &mut Self) -> Result<()> {
+        if self.cols != other.rows || out.rows != self.rows || out.cols != other.cols {
+            return Err(Error::Shape(format!(
+                "matmul_into: {}x{} @ {}x{} -> {}x{}",
+                self.rows, self.cols, other.rows, other.cols, out.rows, out.cols
+            )));
+        }
+        out.fill_zero();
+        gemm::gemm_nn(
+            self.rows, self.cols, other.cols,
+            &self.data, &other.data, &mut out.data,
+        );
+        Ok(())
+    }
+
     /// `self @ otherᵀ` without materializing the transpose.
     pub fn matmul_transb(&self, other: &Self) -> Result<Self> {
         if self.cols != other.cols {
@@ -201,6 +228,17 @@ impl Matrix {
     pub fn gram(&self) -> Self {
         let mut out = Self::zeros(self.rows, self.rows);
         gemm::syrk(self.rows, self.cols, &self.data, &mut out.data);
+        out
+    }
+
+    /// Gram matrix built across `threads` row bands. Bit-identical to
+    /// [`Matrix::gram`] for every thread count (each element is the same
+    /// single-chain dot regardless of the partition), so the coordinator
+    /// can hand leftover worker threads to the per-node Gram build
+    /// without breaking centralized-equivalence determinism.
+    pub fn gram_threaded(&self, threads: usize) -> Self {
+        let mut out = Self::zeros(self.rows, self.rows);
+        pack::syrk_mt(self.rows, self.cols, &self.data, &mut out.data, threads);
         out
     }
 
@@ -529,6 +567,30 @@ mod tests {
         assert_eq!(blk, m(&[vec![5.0, 3.0], vec![2.0, 6.0]]));
         assert!(a.col_block(2, 4).is_err());
         assert_eq!(a.argmax_per_col(), vec![1, 0, 1]);
+    }
+
+    #[test]
+    fn matmul_into_matches_matmul_bitwise() {
+        let a = Matrix::from_fn(7, 13, |r, c| ((r * 31 + c * 17) as f64).sin());
+        let b = Matrix::from_fn(13, 9, |r, c| ((r * 7 + c * 3) as f64).cos());
+        let owned = a.matmul(&b).unwrap();
+        let mut out = Matrix::from_fn(7, 9, |_, _| 99.0); // stale contents overwritten
+        a.matmul_into(&b, &mut out).unwrap();
+        assert_eq!(out, owned);
+        let mut wrong = Matrix::zeros(7, 8);
+        assert!(a.matmul_into(&b, &mut wrong).is_err());
+        assert!(b.matmul_into(&b, &mut out).is_err());
+    }
+
+    #[test]
+    fn gram_threaded_matches_gram_bitwise() {
+        // Big enough to clear the syrk_mt threading threshold.
+        let a = Matrix::from_fn(80, 50, |r, c| ((r * 13 + c * 29) as f64).sin());
+        let seq = a.gram();
+        for threads in [1usize, 2, 5] {
+            let par = a.gram_threaded(threads);
+            assert_eq!(par, seq, "threads={threads}");
+        }
     }
 
     #[test]

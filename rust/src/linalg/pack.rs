@@ -1,0 +1,416 @@
+//! Panel-packed, register-blocked matrix kernels — the crate's FLOP
+//! engine.
+//!
+//! Two design constraints shape everything here:
+//!
+//! 1. **Throughput without `-ffast-math`.** Rust never reassociates
+//!    floating-point reductions, so a k-loop that feeds a *single*
+//!    accumulator is latency-bound (one add every ~4 cycles). The kernels
+//!    therefore keep an `MR×NR` (GEMM) or `TR×TR` (SYRK) block of
+//!    *independent* accumulator chains live in registers: enough ILP to
+//!    saturate the FP ports, while the compiler is still free to
+//!    vectorize across the `NR` output columns (a map, not a reduction,
+//!    hence legal without fast-math).
+//! 2. **Bit-exact, partition-independent results.** Every output element
+//!    is produced by one sequential chain over the reduction index `p`
+//!    in ascending order, starting from the value already in `C`. For
+//!    [`gemm_nn`] this is the *same* chain the classic `i-k-j` axpy
+//!    kernel produced, so the packed kernel is bit-identical to its
+//!    predecessor on every input. For [`syrk_band`] the chain depends
+//!    only on `(i, j, k)` — never on which row band or tile computed the
+//!    element — which is what lets [`syrk_mt`] fan the Gram build out
+//!    over threads with **zero** floating-point drift versus the
+//!    sequential build (the coordinator's bit-equivalence tests pin
+//!    this).
+//!
+//! `B` is packed into `NR`-wide column panels (contiguous per `p`) from a
+//! **thread-local arena** that is grown once and reused, so steady-state
+//! GEMM calls perform no heap allocation — part of the zero-allocation
+//! ADMM hot-path contract (see `admm::Workspace`).
+
+use std::cell::RefCell;
+
+/// Register-tile rows of the GEMM micro-kernel.
+const MR: usize = 4;
+/// Register-tile columns of the GEMM micro-kernel (two 4-lane vectors).
+const NR: usize = 8;
+/// Cache block along the reduction dimension.
+const KC: usize = 256;
+/// Register-tile order of the SYRK micro-kernel.
+const TR: usize = 4;
+
+thread_local! {
+    /// Per-thread packing arena; grows monotonically, never shrinks.
+    static PACK_ARENA: RefCell<Vec<f64>> = RefCell::new(Vec::new());
+}
+
+/// `C[m×n] += A[m×k] · B[k×n]`, panel-packed and register-blocked.
+///
+/// Accumulates into `C` (callers zero it first, as with the kernel this
+/// replaced). Per-element accumulation order is a single chain over `p`
+/// ascending — bit-identical to the classic blocked `i-k-j` axpy loop.
+pub fn gemm_nn(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let panels = n.div_ceil(NR);
+    let kc_max = KC.min(k);
+    PACK_ARENA.with(|arena| {
+        let mut arena = arena.borrow_mut();
+        let need = panels * NR * kc_max;
+        if arena.len() < need {
+            arena.resize(need, 0.0);
+        }
+        let buf = &mut arena[..];
+        for kb in (0..k).step_by(KC) {
+            let kc = KC.min(k - kb);
+            pack_b(&b[kb * n..], n, kc, buf);
+            for i0 in (0..m).step_by(MR) {
+                let mr = MR.min(m - i0);
+                // A sub-view starting at row i0, column kb (row stride k).
+                let asub = &a[i0 * k + kb..];
+                for pj in 0..panels {
+                    let j0 = pj * NR;
+                    let w = NR.min(n - j0);
+                    let panel = &buf[pj * NR * kc..pj * NR * kc + kc * NR];
+                    let csub = &mut c[i0 * n + j0..];
+                    if mr == MR && w == NR {
+                        kernel_full(kc, asub, k, panel, csub, n);
+                    } else {
+                        kernel_edge(mr, w, kc, asub, k, panel, csub, n);
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Pack `kc` rows of `B` (row stride `n`) into `NR`-wide column panels:
+/// `buf[panel][p][lane]`, short final panels zero-padded.
+fn pack_b(b: &[f64], n: usize, kc: usize, buf: &mut [f64]) {
+    let panels = n.div_ceil(NR);
+    for pj in 0..panels {
+        let j0 = pj * NR;
+        let w = NR.min(n - j0);
+        let dst = &mut buf[pj * NR * kc..(pj + 1) * NR * kc];
+        for p in 0..kc {
+            let src = &b[p * n + j0..p * n + j0 + w];
+            dst[p * NR..p * NR + w].copy_from_slice(src);
+            for x in &mut dst[p * NR + w..(p + 1) * NR] {
+                *x = 0.0;
+            }
+        }
+    }
+}
+
+/// Full `MR×NR` register tile: `MR·NR` independent accumulator chains,
+/// `C` loaded once before the `p` loop and stored once after it.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn kernel_full(kc: usize, a: &[f64], lda: usize, panel: &[f64], c: &mut [f64], ldc: usize) {
+    let mut acc = [[0.0f64; NR]; MR];
+    for (r, row) in acc.iter_mut().enumerate() {
+        row.copy_from_slice(&c[r * ldc..r * ldc + NR]);
+    }
+    for p in 0..kc {
+        let bp = &panel[p * NR..(p + 1) * NR];
+        for r in 0..MR {
+            let av = a[r * lda + p];
+            let row = &mut acc[r];
+            for j in 0..NR {
+                row[j] += av * bp[j];
+            }
+        }
+    }
+    for (r, row) in acc.iter().enumerate() {
+        c[r * ldc..r * ldc + NR].copy_from_slice(row);
+    }
+}
+
+/// Edge tile (`mr ≤ MR`, `w ≤ NR`): identical per-element chains, runtime
+/// bounds.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn kernel_edge(
+    mr: usize,
+    w: usize,
+    kc: usize,
+    a: &[f64],
+    lda: usize,
+    panel: &[f64],
+    c: &mut [f64],
+    ldc: usize,
+) {
+    let mut acc = [[0.0f64; NR]; MR];
+    for r in 0..mr {
+        acc[r][..w].copy_from_slice(&c[r * ldc..r * ldc + w]);
+    }
+    for p in 0..kc {
+        let bp = &panel[p * NR..(p + 1) * NR];
+        for r in 0..mr {
+            let av = a[r * lda + p];
+            let row = &mut acc[r];
+            for j in 0..w {
+                row[j] += av * bp[j];
+            }
+        }
+    }
+    for r in 0..mr {
+        c[r * ldc..r * ldc + w].copy_from_slice(&acc[r][..w]);
+    }
+}
+
+/// Single-chain dot product over `p` ascending — the canonical
+/// per-element computation every SYRK path (tiled, edge, banded,
+/// threaded) reduces to. Deliberately *not* the unrolled 4-way `dot`:
+/// one chain keeps the result a pure function of `(row_i, row_j)`.
+#[inline]
+fn dot_chain(a: &[f64], b: &[f64]) -> f64 {
+    let mut s = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        s += x * y;
+    }
+    s
+}
+
+/// Lower-triangle rows `[i0, i1)` of `C[m×m] = A[m×k]·Aᵀ`, written into
+/// `cband` (whose row 0 is global row `i0`). No mirroring — see
+/// [`mirror_lower`]. Every element is [`dot_chain`]`(row_i, row_j)`
+/// exactly, so the output is independent of the band partition.
+pub fn syrk_band(m: usize, k: usize, a: &[f64], cband: &mut [f64], i0: usize, i1: usize) {
+    debug_assert!(i0 <= i1 && i1 <= m);
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(cband.len(), (i1 - i0) * m);
+    let mut i = i0;
+    while i < i1 {
+        let ih = TR.min(i1 - i);
+        // Full TR-wide column tiles strictly below the tile diagonal.
+        let mut j0 = 0;
+        while j0 + TR <= i {
+            syrk_tile(k, a, i, ih, j0, cband, i0, m);
+            j0 += TR;
+        }
+        // Diagonal fringe: per-row scalar chains up to and including the
+        // diagonal element.
+        for r in 0..ih {
+            let gi = i + r;
+            let arow = &a[gi * k..(gi + 1) * k];
+            for j in j0..=gi {
+                let v = dot_chain(arow, &a[j * k..(j + 1) * k]);
+                cband[(gi - i0) * m + j] = v;
+            }
+        }
+        i += ih;
+    }
+}
+
+/// `ih×TR` SYRK register tile: rows `i..i+ih` against rows `j0..j0+TR`,
+/// all strictly below the diagonal (caller guarantees `j0+TR ≤ i`).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn syrk_tile(
+    k: usize,
+    a: &[f64],
+    i: usize,
+    ih: usize,
+    j0: usize,
+    cband: &mut [f64],
+    i0: usize,
+    m: usize,
+) {
+    let mut acc = [[0.0f64; TR]; TR];
+    for p in 0..k {
+        let bs = [
+            a[j0 * k + p],
+            a[(j0 + 1) * k + p],
+            a[(j0 + 2) * k + p],
+            a[(j0 + 3) * k + p],
+        ];
+        for r in 0..ih {
+            let av = a[(i + r) * k + p];
+            let row = &mut acc[r];
+            for s in 0..TR {
+                row[s] += av * bs[s];
+            }
+        }
+    }
+    for r in 0..ih {
+        let base = (i + r - i0) * m + j0;
+        cband[base..base + TR].copy_from_slice(&acc[r]);
+    }
+}
+
+/// Mirror the lower triangle of `C[m×m]` into the upper triangle.
+pub fn mirror_lower(m: usize, c: &mut [f64]) {
+    // Blocked for cache friendliness on large Grams.
+    const B: usize = 32;
+    for ib in (0..m).step_by(B) {
+        for jb in (0..ib + B).step_by(B) {
+            for i in ib..(ib + B).min(m) {
+                for j in jb..(jb + B).min(i) {
+                    c[j * m + i] = c[i * m + j];
+                }
+            }
+        }
+    }
+}
+
+/// `C[m×m] = A[m×k]·Aᵀ` (full, sequential). `C` is written, not
+/// accumulated; callers pass a zeroed buffer.
+pub fn syrk(m: usize, k: usize, a: &[f64], c: &mut [f64]) {
+    debug_assert_eq!(c.len(), m * m);
+    syrk_band(m, k, a, c, 0, m);
+    mirror_lower(m, c);
+}
+
+/// Threaded `C = A·Aᵀ`: contiguous row bands sized by triangle area
+/// (`i_t ∝ m·√(t/T)`) so each worker owns an equal share of the FLOPs.
+/// Bit-identical to [`syrk`] for every `threads` value — each element is
+/// the same [`dot_chain`] regardless of the partition.
+pub fn syrk_mt(m: usize, k: usize, a: &[f64], c: &mut [f64], threads: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(c.len(), m * m);
+    let threads = threads.max(1).min(m.max(1));
+    // Below ~64 rows the spawn cost outweighs the win; the result is
+    // identical either way, so this threshold is purely a perf knob.
+    if threads == 1 || m < 64 {
+        syrk(m, k, a, c);
+        return;
+    }
+    let mut bounds: Vec<usize> = (0..=threads)
+        .map(|t| ((m as f64) * (t as f64 / threads as f64).sqrt()).round() as usize)
+        .collect();
+    bounds[0] = 0;
+    bounds[threads] = m;
+    for t in 1..=threads {
+        let lo = bounds[t - 1];
+        bounds[t] = bounds[t].clamp(lo, m);
+    }
+    std::thread::scope(|scope| {
+        // Reborrow (not move) so `c` is usable again for the mirror pass.
+        let mut rest: &mut [f64] = &mut *c;
+        for t in 0..threads {
+            let (i0, i1) = (bounds[t], bounds[t + 1]);
+            if i1 <= i0 {
+                continue;
+            }
+            let tail = std::mem::take(&mut rest);
+            let (band, tail) = tail.split_at_mut((i1 - i0) * m);
+            rest = tail;
+            scope.spawn(move || syrk_band(m, k, a, band, i0, i1));
+        }
+    });
+    mirror_lower(m, c);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{Rng, Xoshiro256StarStar};
+
+    fn rand_buf(rng: &mut impl Rng, len: usize) -> Vec<f64> {
+        (0..len).map(|_| rng.uniform(-1.0, 1.0)).collect()
+    }
+
+    /// The pre-pack reference kernel: classic blocked i-k-j axpy loop.
+    /// The packed kernel must reproduce it bit-for-bit.
+    fn ikj_reference(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for p in 0..k {
+                let aip = arow[p];
+                let brow = &b[p * n..(p + 1) * n];
+                for (cv, bv) in crow.iter_mut().zip(brow) {
+                    *cv += aip * bv;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_gemm_bit_identical_to_ikj_reference() {
+        let mut rng = Xoshiro256StarStar::seed_from_u64(21);
+        for &(m, k, n) in &[
+            (1, 1, 1),
+            (4, 8, 8),
+            (5, 9, 11),
+            (10, 120, 120),
+            (13, 300, 7),
+            (64, 257, 40),
+        ] {
+            let a = rand_buf(&mut rng, m * k);
+            let b = rand_buf(&mut rng, k * n);
+            let mut c_new = vec![0.0; m * n];
+            let mut c_ref = vec![0.0; m * n];
+            gemm_nn(m, k, n, &a, &b, &mut c_new);
+            ikj_reference(m, k, n, &a, &b, &mut c_ref);
+            assert_eq!(c_new, c_ref, "drift at m={m} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn packed_gemm_accumulates_into_c() {
+        let mut rng = Xoshiro256StarStar::seed_from_u64(22);
+        let (m, k, n) = (6, 20, 10);
+        let a = rand_buf(&mut rng, m * k);
+        let b = rand_buf(&mut rng, k * n);
+        let seed = rand_buf(&mut rng, m * n);
+        let mut c_new = seed.clone();
+        let mut c_ref = seed.clone();
+        gemm_nn(m, k, n, &a, &b, &mut c_new);
+        ikj_reference(m, k, n, &a, &b, &mut c_ref);
+        assert_eq!(c_new, c_ref);
+    }
+
+    #[test]
+    fn syrk_band_partition_independent() {
+        let mut rng = Xoshiro256StarStar::seed_from_u64(23);
+        let (m, k) = (37, 80);
+        let a = rand_buf(&mut rng, m * k);
+        let mut full = vec![0.0; m * m];
+        syrk(m, k, &a, &mut full);
+        // Rebuild from three uneven bands; must match bit-for-bit.
+        let mut banded = vec![0.0; m * m];
+        for &(i0, i1) in &[(0usize, 5usize), (5, 23), (23, 37)] {
+            let mut band = vec![0.0; (i1 - i0) * m];
+            syrk_band(m, k, &a, &mut band, i0, i1);
+            banded[i0 * m..i1 * m].copy_from_slice(&band);
+        }
+        mirror_lower(m, &mut banded);
+        assert_eq!(full, banded);
+    }
+
+    #[test]
+    fn syrk_mt_bit_identical_to_sequential() {
+        let mut rng = Xoshiro256StarStar::seed_from_u64(24);
+        let (m, k) = (97, 64); // above the threading threshold
+        let a = rand_buf(&mut rng, m * k);
+        let mut seq = vec![0.0; m * m];
+        syrk(m, k, &a, &mut seq);
+        for threads in [2usize, 3, 8] {
+            let mut par = vec![0.0; m * m];
+            syrk_mt(m, k, &a, &mut par, threads);
+            assert_eq!(seq, par, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn syrk_matches_gemm_numerically() {
+        let mut rng = Xoshiro256StarStar::seed_from_u64(25);
+        let (m, k) = (23, 57);
+        let a = rand_buf(&mut rng, m * k);
+        let mut c = vec![0.0; m * m];
+        syrk(m, k, &a, &mut c);
+        for i in 0..m {
+            for j in 0..m {
+                let expect = dot_chain(&a[i * k..(i + 1) * k], &a[j * k..(j + 1) * k]);
+                assert!((c[i * m + j] - expect).abs() < 1e-12);
+                assert_eq!(c[i * m + j], c[j * m + i]);
+            }
+        }
+    }
+}

@@ -6,43 +6,105 @@
 //! **preserving the global sum exactly** — the invariant our property
 //! tests pin down. The engine also charges every round to the
 //! [`CommLedger`] and advances the simulated α-β clock.
+//!
+//! ## Hot-path design (§Perf)
+//!
+//! A mixing round is a handful of sparse row-axpys per node, so for
+//! low-degree topologies the round loop is memory- and overhead-bound,
+//! not FLOP-bound. Three things keep it lean:
+//!
+//! * the **mix plan** — per-node neighbour indices *and* weights (plus an
+//!   equal-weight flag for the paper's `h_ij = 1/|N_i|` rule) are cached
+//!   once at construction, so rounds never touch the dense `H`;
+//! * the **persistent double buffer** — rounds ping-pong between the
+//!   caller's matrices and an engine-owned scratch bank, swapping buffer
+//!   ownership instead of copying back; the bank is allocated on first
+//!   use per payload shape and reused across every subsequent round and
+//!   averaging call (zero steady-state allocations);
+//! * per-round ledger/clock charges are precomputed scalars.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, PoisonError};
 
 use super::{CommLedger, LatencyModel, MixingMatrix};
 use crate::linalg::Matrix;
 use crate::{Error, Result};
 
-/// Executes synchronous gossip rounds over per-node matrices.
+/// Cached mixing recipe for one node: neighbour indices (self first is
+/// not guaranteed — order follows the matrix row), matching weights, and
+/// whether all weights are equal (equal-neighbour fast path).
 #[derive(Debug, Clone)]
+struct NodePlan {
+    nbrs: Vec<usize>,
+    weights: Vec<f64>,
+    equal: bool,
+}
+
+/// Executes synchronous gossip rounds over per-node matrices.
+#[derive(Debug)]
 pub struct GossipEngine {
     mixing: MixingMatrix,
-    /// Per-node neighbour index lists (including self), cached from `H`.
-    neighbors: Vec<Vec<usize>>,
+    /// Per-node mixing recipes, cached from `H` at construction.
+    plan: Vec<NodePlan>,
+    /// Directed messages per synchronous round (ledger charge).
+    msgs_per_round: u64,
+    /// Largest neighbour count excluding self (α-β clock charge).
+    max_degree: usize,
     ledger: Arc<CommLedger>,
     latency: LatencyModel,
     /// Simulated communication clock, f64 bits in an atomic.
     sim_clock_bits: Arc<AtomicU64>,
+    /// Persistent scratch bank for the double-buffered rounds. Lazily
+    /// (re)built when the payload shape changes; a mutex (never
+    /// contended: one consensus averaging runs at a time) keeps the
+    /// engine `Sync` with interior reuse.
+    scratch: Mutex<Vec<Matrix>>,
+}
+
+impl Clone for GossipEngine {
+    fn clone(&self) -> Self {
+        Self {
+            mixing: self.mixing.clone(),
+            plan: self.plan.clone(),
+            msgs_per_round: self.msgs_per_round,
+            max_degree: self.max_degree,
+            ledger: Arc::clone(&self.ledger),
+            latency: self.latency,
+            // The simulated clock stays shared (as before); the scratch
+            // bank is per-engine cache state and starts empty.
+            sim_clock_bits: Arc::clone(&self.sim_clock_bits),
+            scratch: Mutex::new(Vec::new()),
+        }
+    }
 }
 
 impl GossipEngine {
     /// Build an engine over a validated mixing matrix.
     pub fn new(mixing: MixingMatrix, ledger: Arc<CommLedger>, latency: LatencyModel) -> Self {
         let m = mixing.num_nodes();
-        let neighbors: Vec<Vec<usize>> = (0..m)
+        let plan: Vec<NodePlan> = (0..m)
             .map(|i| {
-                (0..m)
-                    .filter(|&j| mixing.matrix().get(i, j) != 0.0)
-                    .collect()
+                let row = mixing.row(i);
+                let nbrs: Vec<usize> = (0..m).filter(|&j| row[j] != 0.0).collect();
+                let weights: Vec<f64> = nbrs.iter().map(|&j| row[j]).collect();
+                let w0 = weights.first().copied().unwrap_or(0.0);
+                let equal = weights.iter().all(|&w| w == w0);
+                NodePlan { nbrs, weights, equal }
             })
             .collect();
+        // Per-round traffic: each node sends its matrix to every
+        // neighbour except itself.
+        let msgs_per_round: u64 = plan.iter().map(|p| p.nbrs.len() as u64 - 1).sum();
+        let max_degree = plan.iter().map(|p| p.nbrs.len() - 1).max().unwrap_or(0);
         Self {
             mixing,
-            neighbors,
+            plan,
+            msgs_per_round,
+            max_degree,
             ledger,
             latency,
             sim_clock_bits: Arc::new(AtomicU64::new(0f64.to_bits())),
+            scratch: Mutex::new(Vec::new()),
         }
     }
 
@@ -83,9 +145,8 @@ impl GossipEngine {
         }
     }
 
-    /// Run `rounds` synchronous mixing rounds over the per-node values.
-    /// `values[i]` is node `i`'s local matrix; all must share one shape.
-    pub fn mix_rounds(&self, values: &mut [Matrix], rounds: usize) -> Result<()> {
+    /// Validate a per-node value bank and return its common shape.
+    fn check_values(&self, values: &[Matrix]) -> Result<(usize, usize)> {
         let m = self.mixing.num_nodes();
         if values.len() != m {
             return Err(Error::Network(format!(
@@ -93,60 +154,60 @@ impl GossipEngine {
                 values.len()
             )));
         }
-        if m == 0 || rounds == 0 {
-            return Ok(());
-        }
-        let shape = values[0].shape();
+        let shape = values.first().map(|v| v.shape()).unwrap_or((0, 0));
         if values.iter().any(|v| v.shape() != shape) {
             return Err(Error::Network("gossip values of mixed shapes".into()));
         }
-        let scalars = (shape.0 * shape.1) as u64;
-        // Per-round traffic: each node sends its matrix to every neighbour
-        // except itself.
-        let msgs_per_round: u64 = self
-            .neighbors
-            .iter()
-            .map(|s| s.len() as u64 - 1)
-            .sum();
-        let max_degree = self
-            .neighbors
-            .iter()
-            .map(|s| s.len() - 1)
-            .max()
-            .unwrap_or(0);
+        Ok(shape)
+    }
 
-        // Ping-pong between `values` and a scratch bank: writing each
-        // round into the other bank and swapping avoids a full copy-back
-        // per round (§Perf: the mixing loop dominates low-degree runs).
-        let mut scratch: Vec<Matrix> =
-            (0..m).map(|_| Matrix::zeros(shape.0, shape.1)).collect();
+    /// Lock the persistent scratch bank, (re)building it if the payload
+    /// shape changed since the last call. Steady-state rounds reuse the
+    /// bank with zero allocations.
+    fn scratch_bank(&self, m: usize, shape: (usize, usize)) -> std::sync::MutexGuard<'_, Vec<Matrix>> {
+        let mut bank = self.scratch.lock().unwrap_or_else(PoisonError::into_inner);
+        if bank.len() != m || bank.iter().any(|b| b.shape() != shape) {
+            *bank = (0..m).map(|_| Matrix::zeros(shape.0, shape.1)).collect();
+        }
+        bank
+    }
+
+    /// Run `rounds` synchronous mixing rounds over the per-node values.
+    /// `values[i]` is node `i`'s local matrix; all must share one shape.
+    pub fn mix_rounds(&self, values: &mut [Matrix], rounds: usize) -> Result<()> {
+        let shape = self.check_values(values)?;
+        let m = values.len();
+        if m == 0 || rounds == 0 {
+            return Ok(());
+        }
+        let scalars = (shape.0 * shape.1) as u64;
+        // Ping-pong between `values` and the engine's persistent scratch
+        // bank: each round writes into the other bank and swaps buffer
+        // ownership, so there is no per-round copy-back and no per-call
+        // allocation (§Perf: the mixing loop dominates low-degree runs).
+        let mut bank = self.scratch_bank(m, shape);
         for _ in 0..rounds {
-            for i in 0..m {
-                let row = self.mixing.row(i);
-                let nbrs = &self.neighbors[i];
-                let out = &mut scratch[i];
+            for (p, out) in self.plan.iter().zip(bank.iter_mut()) {
                 // Equal-weight fast path (the paper's h_ij = 1/|N_i|):
                 // accumulate plain sums, scale once at the end.
-                let w0 = row[nbrs[0]];
-                let equal = nbrs.iter().all(|&j| row[j] == w0);
-                out.copy_from(&values[nbrs[0]])?;
-                if equal {
-                    for &j in &nbrs[1..] {
+                out.copy_from(&values[p.nbrs[0]])?;
+                if p.equal {
+                    for &j in &p.nbrs[1..] {
                         out.axpy(1.0, &values[j])?;
                     }
-                    out.scale_inplace(w0);
+                    out.scale_inplace(p.weights[0]);
                 } else {
-                    out.scale_inplace(w0);
-                    for &j in &nbrs[1..] {
-                        out.axpy(row[j], &values[j])?;
+                    out.scale_inplace(p.weights[0]);
+                    for (&j, &w) in p.nbrs[1..].iter().zip(&p.weights[1..]) {
+                        out.axpy(w, &values[j])?;
                     }
                 }
             }
-            for (v, s) in values.iter_mut().zip(scratch.iter_mut()) {
+            for (v, s) in values.iter_mut().zip(bank.iter_mut()) {
                 std::mem::swap(v, s);
             }
-            self.ledger.record_round(msgs_per_round, scalars);
-            self.advance_clock(self.latency.round_time(max_degree, scalars * 8));
+            self.ledger.record_round(self.msgs_per_round, scalars);
+            self.advance_clock(self.latency.round_time(self.max_degree, scalars * 8));
         }
         Ok(())
     }
@@ -180,67 +241,53 @@ impl GossipEngine {
                 "loss probability must be in [0,1), got {loss_p}"
             )));
         }
-        let m = self.mixing.num_nodes();
-        if values.len() != m {
-            return Err(Error::Network(format!(
-                "{} values for {m} nodes",
-                values.len()
-            )));
-        }
+        let shape = self.check_values(values)?;
+        let m = values.len();
         if m == 0 || rounds == 0 {
             return Ok(());
         }
-        let shape = values[0].shape();
-        if values.iter().any(|v| v.shape() != shape) {
-            return Err(Error::Network("gossip values of mixed shapes".into()));
-        }
         let scalars = (shape.0 * shape.1) as u64;
-        let max_degree = self
-            .neighbors
-            .iter()
-            .map(|s| s.len() - 1)
-            .max()
-            .unwrap_or(0);
-        let mut scratch: Vec<Matrix> =
-            (0..m).map(|_| Matrix::zeros(shape.0, shape.1)).collect();
+        let mut bank = self.scratch_bank(m, shape);
+        // Edge-drop set reused across rounds (cleared, not reallocated).
+        let mut dropped: std::collections::HashSet<(usize, usize)> =
+            std::collections::HashSet::new();
         for _ in 0..rounds {
             // Sample surviving undirected edges for this round.
-            let mut dropped = std::collections::HashSet::new();
-            for (i, nbrs) in self.neighbors.iter().enumerate() {
-                for &j in nbrs {
+            dropped.clear();
+            for (i, p) in self.plan.iter().enumerate() {
+                for &j in &p.nbrs {
                     if j > i && rng.next_f64() < loss_p {
                         dropped.insert((i, j));
                     }
                 }
             }
             let mut delivered: u64 = 0;
-            for i in 0..m {
-                let row = self.mixing.row(i);
-                let out = &mut scratch[i];
+            for (i, (p, out)) in self.plan.iter().zip(bank.iter_mut()).enumerate() {
+                // Effective self-weight: own weight plus — lazy
+                // correction — the weight of every dropped neighbour.
+                let mut self_w = 0.0;
+                for (&j, &w) in p.nbrs.iter().zip(&p.weights) {
+                    if j == i || dropped.contains(&(i.min(j), i.max(j))) {
+                        self_w += w;
+                    }
+                }
                 out.copy_from(&values[i])?;
-                let mut self_w = row[i];
-                let mut acc = Matrix::zeros(shape.0, shape.1);
-                for &j in &self.neighbors[i] {
+                out.scale_inplace(self_w);
+                for (&j, &w) in p.nbrs.iter().zip(&p.weights) {
                     if j == i {
                         continue;
                     }
-                    let edge = (i.min(j), i.max(j));
-                    if dropped.contains(&edge) {
-                        // Lazy correction: keep the lost weight on self.
-                        self_w += row[j];
-                    } else {
-                        acc.axpy(row[j], &values[j])?;
+                    if !dropped.contains(&(i.min(j), i.max(j))) {
+                        out.axpy(w, &values[j])?;
                         delivered += 1;
                     }
                 }
-                out.scale_inplace(self_w);
-                out.axpy(1.0, &acc)?;
             }
-            for (v, s) in values.iter_mut().zip(scratch.iter_mut()) {
+            for (v, s) in values.iter_mut().zip(bank.iter_mut()) {
                 std::mem::swap(v, s);
             }
             self.ledger.record_round(delivered, scalars);
-            self.advance_clock(self.latency.round_time(max_degree, scalars * 8));
+            self.advance_clock(self.latency.round_time(self.max_degree, scalars * 8));
         }
         Ok(())
     }
@@ -252,11 +299,30 @@ impl GossipEngine {
             .first()
             .ok_or_else(|| Error::Network("no values".into()))?;
         let mut avg = Matrix::zeros(first.rows(), first.cols());
-        for v in values {
-            avg.axpy(1.0, v)?;
-        }
-        avg.scale_inplace(1.0 / values.len() as f64);
+        Self::exact_average_into(values, &mut avg)?;
         Ok(avg)
+    }
+
+    /// [`GossipEngine::exact_average`] into a caller-owned buffer —
+    /// the allocation-free form the ADMM loop's exact-consensus mode
+    /// uses. Bit-identical to the allocating form.
+    pub fn exact_average_into(values: &[Matrix], out: &mut Matrix) -> Result<()> {
+        let first = values
+            .first()
+            .ok_or_else(|| Error::Network("no values".into()))?;
+        if out.shape() != first.shape() {
+            return Err(Error::Network(format!(
+                "exact_average_into: output {:?} vs values {:?}",
+                out.shape(),
+                first.shape()
+            )));
+        }
+        out.fill_zero();
+        for v in values {
+            out.axpy(1.0, v)?;
+        }
+        out.scale_inplace(1.0 / values.len() as f64);
+        Ok(())
     }
 }
 
@@ -336,6 +402,45 @@ mod tests {
         assert!(t > 0.0);
         e.reset_clock();
         assert_eq!(e.simulated_seconds(), 0.0);
+    }
+
+    #[test]
+    fn exact_average_into_matches_allocating_form() {
+        let vals = rand_values(5, 3, 4, 21);
+        let owned = GossipEngine::exact_average(&vals).unwrap();
+        let mut out = Matrix::from_fn(3, 4, |_, _| 42.0); // stale contents
+        GossipEngine::exact_average_into(&vals, &mut out).unwrap();
+        assert_eq!(out.max_abs_diff(&owned), 0.0);
+        let mut wrong = Matrix::zeros(2, 2);
+        assert!(GossipEngine::exact_average_into(&vals, &mut wrong).is_err());
+        assert!(GossipEngine::exact_average_into(&[], &mut out).is_err());
+    }
+
+    #[test]
+    fn scratch_bank_survives_payload_shape_changes() {
+        // The engine is reused across layers whose Q×n payload differs;
+        // the persistent bank must rebuild transparently.
+        let e = engine(6, 1);
+        let mut a = rand_values(6, 2, 3, 22);
+        e.mix_rounds(&mut a, 3).unwrap();
+        let mut b = rand_values(6, 4, 5, 23);
+        let avg = GossipEngine::exact_average(&b).unwrap();
+        e.consensus_average(&mut b, 1e-10).unwrap();
+        for v in &b {
+            assert!(v.max_abs_diff(&avg) < 1e-6);
+        }
+    }
+
+    #[test]
+    fn cloned_engine_mixes_identically() {
+        let e = engine(8, 2);
+        let mut a = rand_values(8, 2, 2, 24);
+        let mut b = a.clone();
+        e.mix_rounds(&mut a, 4).unwrap();
+        e.clone().mix_rounds(&mut b, 4).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.max_abs_diff(y), 0.0);
+        }
     }
 
     #[test]

@@ -17,6 +17,16 @@
 
 mod artifact;
 mod native;
+// The real PJRT path needs the external `xla` crate, which the offline
+// build image does not ship. Without the `pjrt` feature a stub with the
+// same public surface is compiled instead: `PjrtBackend::start` reports
+// the backend as unavailable, and every artifact-dependent caller
+// (tests/pjrt_parity.rs, benches/microbench.rs, run_config) already
+// handles that error by skipping or surfacing it.
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(not(feature = "pjrt"))]
+#[path = "pjrt_stub.rs"]
 mod pjrt;
 
 pub use artifact::{ArtifactManifest, ManifestEntry};
@@ -31,6 +41,16 @@ use crate::Result;
 pub trait ComputeBackend: Send + Sync {
     /// Backend name for reports (`"native"`, `"pjrt"`).
     fn name(&self) -> &str;
+
+    /// Parallelism hint: how many threads a *single* kernel call may use
+    /// internally. The coordinator sets this from its
+    /// [`crate::coordinator::ParallelismBudget`] when there are more
+    /// worker threads than nodes, so leftover threads accelerate the
+    /// per-node Gram build instead of idling. Implementations must keep
+    /// results bit-identical for every hint value (the native backend's
+    /// threaded Gram guarantees this); backends with internal
+    /// parallelism of their own (PJRT) may ignore it. Default: no-op.
+    fn set_intra_threads(&self, _threads: usize) {}
 
     /// `g(W·Y)`: fused matmul + ReLU layer forward. `W` is `n×d`,
     /// `Y` is `d×J`.

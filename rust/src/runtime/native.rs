@@ -5,21 +5,53 @@ use super::ComputeBackend;
 use crate::admm::{LayerLocalSolver, LocalSolve};
 use crate::linalg::Matrix;
 use crate::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Pure-Rust backend over the crate's own linalg.
-#[derive(Debug, Default, Clone, Copy)]
-pub struct NativeBackend;
+///
+/// Carries the coordinator's intra-node thread hint (an atomic so the
+/// shared `&self` backend handle can be re-tuned between training runs):
+/// `prepare_layer` feeds it to the row-banded Gram build, which is
+/// bit-identical to the sequential build for every thread count.
+#[derive(Debug, Default)]
+pub struct NativeBackend {
+    /// Threads a single kernel call may use; `0` means 1.
+    intra_threads: AtomicUsize,
+}
+
+impl Clone for NativeBackend {
+    fn clone(&self) -> Self {
+        Self {
+            intra_threads: AtomicUsize::new(self.intra_threads.load(Ordering::Relaxed)),
+        }
+    }
+}
 
 impl NativeBackend {
     /// Create a native backend.
     pub fn new() -> Self {
-        Self
+        Self::default()
+    }
+
+    /// Create a native backend with an intra-kernel thread budget.
+    pub fn with_intra_threads(threads: usize) -> Self {
+        let b = Self::default();
+        b.intra_threads.store(threads, Ordering::Relaxed);
+        b
+    }
+
+    fn intra(&self) -> usize {
+        self.intra_threads.load(Ordering::Relaxed).max(1)
     }
 }
 
 impl ComputeBackend for NativeBackend {
     fn name(&self) -> &str {
         "native"
+    }
+
+    fn set_intra_threads(&self, threads: usize) {
+        self.intra_threads.store(threads, Ordering::Relaxed);
     }
 
     fn layer_forward(&self, w: &Matrix, y: &Matrix) -> Result<Matrix> {
@@ -29,7 +61,12 @@ impl ComputeBackend for NativeBackend {
     }
 
     fn prepare_layer(&self, y: &Matrix, t: &Matrix, mu: f64) -> Result<Box<dyn LocalSolve>> {
-        Ok(Box::new(LayerLocalSolver::new(y, t, mu)?))
+        Ok(Box::new(LayerLocalSolver::with_threads(
+            y,
+            t,
+            mu,
+            self.intra(),
+        )?))
     }
 
     fn output_scores(&self, o: &Matrix, y: &Matrix) -> Result<Matrix> {
@@ -54,6 +91,26 @@ mod tests {
         assert_eq!(out.get(1, 0), 0.0);
         assert_eq!(out.get(1, 1), 1.0);
         assert_eq!(b.name(), "native");
+    }
+
+    #[test]
+    fn intra_thread_hint_never_changes_results() {
+        let mut rng = Xoshiro256StarStar::seed_from_u64(3);
+        let y = Matrix::from_fn(70, 50, |_, _| rng.uniform(-1.0, 1.0));
+        let t = Matrix::from_fn(3, 50, |_, _| rng.uniform(-1.0, 1.0));
+        let b1 = NativeBackend::new();
+        let b4 = NativeBackend::with_intra_threads(4);
+        let s1 = b1.prepare_layer(&y, &t, 1.0).unwrap();
+        let s4 = b4.prepare_layer(&y, &t, 1.0).unwrap();
+        let z = Matrix::from_fn(3, 70, |r, c| ((r + 2 * c) as f64).sin());
+        let o1 = s1.o_update(&z, &z).unwrap();
+        let o4 = s4.o_update(&z, &z).unwrap();
+        assert_eq!(o1.max_abs_diff(&o4), 0.0);
+        // Re-tuning through the trait hint is equivalent.
+        let bh = NativeBackend::new();
+        bh.set_intra_threads(4);
+        let sh = bh.prepare_layer(&y, &t, 1.0).unwrap();
+        assert_eq!(sh.o_update(&z, &z).unwrap().max_abs_diff(&o1), 0.0);
     }
 
     #[test]

@@ -1,0 +1,181 @@
+//! The coordinator's threaded `for_each_node` path must produce
+//! **bit-identical** output to the sequential `solve_decentralized`
+//! oracle — the promise made in `coordinator/mod.rs`'s docs. This test
+//! replays the trainer's full per-layer pipeline (shard → prepare →
+//! gossip-ADMM → weight build → forward → final solve) with the oracle
+//! primitives on a single thread, then trains the real coordinator with
+//! a thread budget that exercises both the node fan-out *and* the
+//! intra-node threaded Gram build (`M < threads`), and compares every
+//! learned matrix with `max_abs_diff == 0.0`.
+
+use dssfn::admm::{solve_decentralized, Consensus, LayerLocalSolver};
+use dssfn::coordinator::{ConsensusMode, DecentralizedTrainer, TrainOptions};
+use dssfn::data::{shard_uniform, ClassificationTask, SynthClassification};
+use dssfn::linalg::Matrix;
+use dssfn::network::{
+    CommLedger, GossipEngine, LatencyModel, MixingMatrix, Topology, WeightRule,
+};
+use dssfn::runtime::{ComputeBackend, NativeBackend};
+use dssfn::ssfn::{build_weight, RandomMatrices, SsfnArchitecture, TrainHyper};
+use std::sync::Arc;
+
+const SEED: u64 = 5;
+const NODES: usize = 2;
+const DEGREE: usize = 1;
+const DELTA: f64 = 1e-9;
+
+fn toy_task() -> ClassificationTask {
+    let mut s = SynthClassification::with_shape("oracle-toy", 8, 3, 120, 60);
+    s.class_sep = 3.0;
+    s.noise = 0.6;
+    s.generate().unwrap()
+}
+
+fn arch() -> SsfnArchitecture {
+    SsfnArchitecture {
+        input_dim: 8,
+        num_classes: 3,
+        // ≥ 64 so the hidden-layer Gram actually takes the threaded
+        // syrk path when the coordinator hands it leftover threads.
+        hidden: 2 * 3 + 60,
+        layers: 1,
+    }
+}
+
+fn hyper() -> TrainHyper {
+    TrainHyper {
+        mu0: 1e-2,
+        mul: 1.0,
+        admm_iterations: 30,
+        eps: None,
+    }
+}
+
+fn gossip_engine() -> GossipEngine {
+    let mix = MixingMatrix::build(
+        &Topology::Circular { nodes: NODES, degree: DEGREE },
+        WeightRule::EqualNeighbor,
+    )
+    .unwrap();
+    GossipEngine::new(mix, Arc::new(CommLedger::new()), LatencyModel::default())
+}
+
+/// Replay the trainer's layer pipeline with the sequential oracle
+/// primitives: returns (W_1 of node 0, final consensus output Z).
+fn oracle_pipeline(task: &ClassificationTask) -> (Matrix, Matrix) {
+    let arch = arch();
+    let hyper = hyper();
+    let q = arch.num_classes;
+    let backend = NativeBackend::new(); // intra hint left at 1: must not matter
+    let shards = shard_uniform(&task.train, NODES).unwrap();
+    let random = RandomMatrices::generate(&arch, SEED).unwrap();
+    let engine = gossip_engine();
+
+    // Layer 0: solve on the raw shard inputs.
+    let mut ys: Vec<Matrix> = shards.iter().map(|s| s.x.clone()).collect();
+    let params0 = hyper.admm_params(0, q);
+    let solvers0: Vec<LayerLocalSolver> = (0..NODES)
+        .map(|i| LayerLocalSolver::new(&ys[i], &shards[i].t, params0.mu).unwrap())
+        .collect();
+    let sol0 = solve_decentralized(
+        &solvers0,
+        q,
+        ys[0].rows(),
+        &params0,
+        &Consensus::Gossip { engine: &engine, delta: DELTA },
+    )
+    .unwrap();
+
+    // Advance: W_1 = [V_Q Z_m ; R_1] per node, forward through ReLU.
+    let r1 = random.layer(1);
+    let ws: Vec<Matrix> = sol0
+        .states
+        .iter()
+        .map(|st| build_weight(&st.z, r1).unwrap())
+        .collect();
+    for (y, w) in ys.iter_mut().zip(&ws) {
+        *y = backend.layer_forward(w, y).unwrap();
+    }
+
+    // Layer 1 (output layer): solve on the advanced features.
+    let params1 = hyper.admm_params(1, q);
+    let solvers1: Vec<LayerLocalSolver> = (0..NODES)
+        .map(|i| LayerLocalSolver::new(&ys[i], &shards[i].t, params1.mu).unwrap())
+        .collect();
+    let sol1 = solve_decentralized(
+        &solvers1,
+        q,
+        ys[0].rows(),
+        &params1,
+        &Consensus::Gossip { engine: &engine, delta: DELTA },
+    )
+    .unwrap();
+
+    (ws.into_iter().next().unwrap(), sol1.output().clone())
+}
+
+#[test]
+fn threaded_coordinator_bit_identical_to_sequential_oracle() {
+    let task = toy_task();
+    let (oracle_w1, oracle_z) = oracle_pipeline(&task);
+
+    // threads=4 over NODES=2 ⇒ node_threads=2, intra_threads=2: both the
+    // node fan-out and the threaded per-node Gram build are live.
+    let opts = TrainOptions {
+        nodes: NODES,
+        topology: Topology::Circular { nodes: NODES, degree: DEGREE },
+        weight_rule: WeightRule::EqualNeighbor,
+        consensus: ConsensusMode::Gossip { delta: DELTA },
+        latency: LatencyModel::default(),
+        threads: 4,
+        record_cost_curve: true,
+    };
+    let trainer = DecentralizedTrainer::new(arch(), hyper(), opts, SEED).unwrap();
+    let (model, _report) = trainer.train_task(&task).unwrap();
+
+    assert_eq!(model.weights().len(), 1);
+    let w_diff = model.weights()[0].max_abs_diff(&oracle_w1);
+    assert_eq!(w_diff, 0.0, "W_1 drifted from the sequential oracle");
+    let z_diff = model.output().max_abs_diff(&oracle_z);
+    assert_eq!(z_diff, 0.0, "output Z drifted from the sequential oracle");
+}
+
+#[test]
+fn exact_consensus_coordinator_matches_oracle_too() {
+    let task = toy_task();
+    let arch = arch();
+    let hyper = hyper();
+    let q = arch.num_classes;
+
+    // Oracle, exact averaging, single thread.
+    let shards = shard_uniform(&task.train, NODES).unwrap();
+    let params0 = hyper.admm_params(0, q);
+    let solvers0: Vec<LayerLocalSolver> = (0..NODES)
+        .map(|i| LayerLocalSolver::new(&shards[i].x, &shards[i].t, params0.mu).unwrap())
+        .collect();
+    let sol0 = solve_decentralized(
+        &solvers0,
+        q,
+        shards[0].x.rows(),
+        &params0,
+        &Consensus::Exact,
+    )
+    .unwrap();
+
+    // Coordinator with the same consensus mode and a saturating thread
+    // budget; replay only layer 0's Z via the learned W_1 relationship.
+    let opts = TrainOptions {
+        nodes: NODES,
+        topology: Topology::Circular { nodes: NODES, degree: DEGREE },
+        weight_rule: WeightRule::EqualNeighbor,
+        consensus: ConsensusMode::Exact,
+        latency: LatencyModel::default(),
+        threads: 8,
+        record_cost_curve: false,
+    };
+    let trainer = DecentralizedTrainer::new(arch, hyper, opts, SEED).unwrap();
+    let (model, _) = trainer.train_task(&task).unwrap();
+    let random = RandomMatrices::generate(&arch, SEED).unwrap();
+    let expected_w1 = build_weight(&sol0.states[0].z, random.layer(1)).unwrap();
+    assert_eq!(model.weights()[0].max_abs_diff(&expected_w1), 0.0);
+}

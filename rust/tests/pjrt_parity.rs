@@ -4,6 +4,7 @@
 //! the quickstart artifacts are missing, so `cargo test` stays green on
 //! a fresh checkout).
 
+use dssfn::admm::LocalSolve;
 use dssfn::config::{BackendKind, ExperimentConfig};
 use dssfn::coordinator::DecentralizedTrainer;
 use dssfn::linalg::Matrix;
