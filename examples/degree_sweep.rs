@@ -8,9 +8,9 @@
 //! ```
 
 use dssfn::config::ExperimentConfig;
-use dssfn::coordinator::DecentralizedTrainer;
 use dssfn::network::Topology;
 use dssfn::util::human_secs;
+use std::sync::Arc;
 
 fn main() -> dssfn::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -25,7 +25,8 @@ fn main() -> dssfn::Result<()> {
     cfg.nodes = 20; // the paper's M
     cfg.layers = 4; // keep the example snappy; benches run the full L
     cfg.record_cost_curve = false;
-    let task = cfg.generate_task()?;
+    // Generate once, share across all degrees through the session API.
+    let task = Arc::new(cfg.generate_task()?);
     let dmax = Topology::max_circular_degree(cfg.nodes);
 
     println!("degree sweep on '{dataset}' (M={}, L={}, K={}):", cfg.nodes, cfg.layers, cfg.admm_iterations);
@@ -36,8 +37,8 @@ fn main() -> dssfn::Result<()> {
     let mut prev: Option<f64> = None;
     for d in 1..=dmax {
         cfg.degree = d;
-        let trainer = DecentralizedTrainer::from_config(&cfg)?;
-        let (_, r) = trainer.train_task(&task)?;
+        let session = cfg.session_builder()?.shared_task(Arc::clone(&task)).build()?;
+        let (_, r) = session.run_to_completion()?;
         let per_avg = r.total_gossip_rounds()
             / (cfg.admm_iterations * (cfg.layers + 1)).max(1);
         let total = r.simulated_total_secs();

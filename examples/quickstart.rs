@@ -7,7 +7,6 @@
 //! ```
 
 use dssfn::config::ExperimentConfig;
-use dssfn::coordinator::DecentralizedTrainer;
 use dssfn::ssfn::CentralizedTrainer;
 use dssfn::util::human_secs;
 
@@ -31,9 +30,19 @@ fn main() -> dssfn::Result<()> {
     println!("centralized  : {}", cr.summary());
 
     // 3. Decentralized SSFN: the same data sharded across M workers that
-    //    only ever exchange Q×n output matrices over a gossip ring.
-    let trainer = DecentralizedTrainer::from_config(&cfg)?;
-    let (model, dr) = trainer.train_task(&task)?;
+    //    only ever exchange Q×n output matrices over a gossip ring. The
+    //    config lowers into the session builder; an observer watches the
+    //    per-layer progress as it happens. (The legacy one-shot path,
+    //    `DecentralizedTrainer::from_config(&cfg)?.train_task(&task)?`,
+    //    still works and produces the bit-identical result.)
+    let mut session = cfg.session_builder()?.task(task.clone()).build()?;
+    session.observe_fn(|ev| {
+        if let dssfn::StepEvent::LayerAdvanced { layer, cost, .. } = ev {
+            println!("  layer {layer}: converged cost {cost:.3}");
+        }
+    });
+    let (model, dr) = session.finish()?;
+    let model = model.into_ssfn()?;
     println!("decentralized: {}", dr.summary());
     println!(
         "equivalence  : Δtrain = {:+.2}%, Δtest = {:+.2}%",

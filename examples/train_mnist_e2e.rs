@@ -15,7 +15,6 @@
 //! seconds. `--native` forces the native backend.
 
 use dssfn::config::{BackendKind, ExperimentConfig};
-use dssfn::coordinator::DecentralizedTrainer;
 use dssfn::metrics::CsvWriter;
 use dssfn::util::{human_bytes, human_secs};
 use std::path::Path;
@@ -47,19 +46,21 @@ fn main() -> dssfn::Result<()> {
         cfg.nodes, cfg.degree, cfg.layers, cfg.hidden_extra, cfg.admm_iterations, cfg.backend
     );
 
-    let (model, report) = DecentralizedTrainer::run_config(&cfg)?;
+    // Full system through the session API: the config lowers into the
+    // builder (backend included) and the run streams per-layer progress
+    // as it happens instead of only reporting at the end.
+    let mut session = cfg.session_builder()?.build()?;
+    session.observe_fn(|ev| {
+        if let dssfn::StepEvent::LayerPrepared { layer, feat_dim } = ev {
+            eprintln!("  preparing layer {layer} (n = {feat_dim}) ...");
+        }
+    });
+    let (model, report) = session.finish()?;
+    let model = model.into_ssfn()?;
 
     println!("\nper-layer objective (global, at each layer's last ADMM iterate):");
     for l in &report.layers {
-        println!(
-            "  layer {:>2}: cost {:>12.4} | {:>5} gossip rounds | {:>10} | disagreement {:.2e} | {}",
-            l.layer,
-            l.final_cost().unwrap_or(f64::NAN),
-            l.gossip_rounds,
-            human_bytes(l.comm.bytes),
-            l.consensus_disagreement,
-            human_secs(l.wall_secs),
-        );
+        println!("  {}", l.summary());
     }
 
     println!("\n{}", report.summary());

@@ -14,6 +14,10 @@
 //!  3. the full backprop-MLP exchange footprint per iteration (eq. 14's
 //!     Σ n_l n_{l-1} — the whole-network numerator).
 //! Prints measured η against the paper's η = n·I / (Q·K) prediction.
+//!
+//! Both one-layer solves (`solve_decentralized`, `solve_dgd`) execute
+//! through the unified `session::Algorithm` trait — the same step loop
+//! the trainer, CLI and figure benches drive.
 
 use dssfn::admm::{solve_decentralized, AdmmParams, Consensus, LayerLocalSolver};
 use dssfn::baselines::dgd::{solve_dgd, DgdNode, DgdParams};

@@ -13,7 +13,6 @@
 //! flattens (power-law-like envelope).
 
 use dssfn::config::ExperimentConfig;
-use dssfn::coordinator::DecentralizedTrainer;
 use dssfn::metrics::CsvWriter;
 
 fn main() -> dssfn::Result<()> {
@@ -36,8 +35,11 @@ fn main() -> dssfn::Result<()> {
         cfg.admm_iterations = iters;
         cfg.degree = 4.min(cfg.nodes / 2);
         cfg.record_cost_curve = true;
-        let task = cfg.generate_task()?;
-        let (_, report) = DecentralizedTrainer::from_config(&cfg)?.train_task(&task)?;
+        // Config lowers into the session builder; the run drives the
+        // unified Algorithm trait (identical output to the old
+        // train_task path — pinned by the coordinator oracle tests).
+        let session = cfg.session_builder()?.build()?;
+        let (_, report) = session.run_to_completion()?;
 
         let curve = report.full_cost_curve();
         let mut csv = CsvWriter::new(&["total_admm_iteration", "cost"]);

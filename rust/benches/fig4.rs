@@ -13,10 +13,10 @@
 //! the paper's "transition jump". Writes `results/fig4_<dataset>.csv`.
 
 use dssfn::config::ExperimentConfig;
-use dssfn::coordinator::DecentralizedTrainer;
 use dssfn::metrics::CsvWriter;
 use dssfn::network::{MixingMatrix, Topology, WeightRule};
 use dssfn::util::human_secs;
+use std::sync::Arc;
 
 fn main() -> dssfn::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -35,7 +35,9 @@ fn main() -> dssfn::Result<()> {
         cfg.nodes = m;
         cfg.layers = layers;
         cfg.record_cost_curve = false;
-        let task = cfg.generate_task()?;
+        // Generate once, share across the degree sweep (the session
+        // builder takes the shared task without cloning the data).
+        let task = Arc::new(cfg.generate_task()?);
         let dmax = Topology::max_circular_degree(m);
 
         println!("\nFig.4 series '{ds}' (M={m}, L={layers}, K={}):", cfg.admm_iterations);
@@ -55,8 +57,11 @@ fn main() -> dssfn::Result<()> {
                 WeightRule::EqualNeighbor,
             )?;
             let b = mix.consensus_rounds(cfg.delta);
-            let trainer = DecentralizedTrainer::from_config(&cfg)?;
-            let (_, r) = trainer.train_task(&task)?;
+            let session = cfg
+                .session_builder()?
+                .shared_task(Arc::clone(&task))
+                .build()?;
+            let (_, r) = session.run_to_completion()?;
             let total = r.simulated_total_secs();
             times.push(total);
             println!(

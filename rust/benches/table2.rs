@@ -15,7 +15,6 @@
 //! columns, which is data-independent.
 
 use dssfn::config::ExperimentConfig;
-use dssfn::coordinator::DecentralizedTrainer;
 use dssfn::metrics::CsvWriter;
 use dssfn::ssfn::CentralizedTrainer;
 use dssfn::util::{mean, std_dev};
@@ -60,7 +59,10 @@ fn main() -> dssfn::Result<()> {
             ctr.push(cr.train_accuracy * 100.0);
             cte.push(cr.test_accuracy * 100.0);
             cer.push(cr.train_error_db);
-            let (_, dr) = DecentralizedTrainer::from_config(&cfg)?.train_task(&task)?;
+            // Decentralized run through the session builder (same
+            // generated task, moved in without a data copy).
+            let session = cfg.session_builder()?.task(task).build()?;
+            let (_, dr) = session.run_to_completion()?;
             dtr.push(dr.train_accuracy * 100.0);
             dte.push(dr.test_accuracy * 100.0);
             der.push(dr.train_error_db);

@@ -30,6 +30,7 @@ mod workspace;
 pub use local::LayerLocalSolver;
 pub use solve::{
     solve_centralized, solve_decentralized, AdmmParams, Consensus, DecentralizedSolution,
+    LayerAdmmAlgorithm,
 };
 pub use workspace::Workspace;
 

@@ -5,10 +5,21 @@
 //! primitives in worker threads; this sequential version is the oracle
 //! the threaded path is tested against, and it is what the equivalence
 //! benches call directly.
+//!
+//! Since the session redesign the iteration lives in
+//! [`LayerAdmmAlgorithm`], a single-layer [`Algorithm`] that can be
+//! driven step-by-step through [`crate::session::TrainSession`];
+//! [`solve_decentralized`] is a thin loop over it. The steady-state
+//! iteration stays allocation-free ([`StepEvent`]s are `Copy` and land
+//! in a reused buffer) — pinned by `tests/alloc_free.rs`.
 
 use super::{LayerLocalSolver, LocalSolve, NodeState};
 use crate::linalg::Matrix;
+use crate::metrics::{LayerRecord, TrainReport};
 use crate::network::GossipEngine;
+use crate::session::{
+    Algorithm, AlgorithmOutput, SessionProgress, StepEvent, StopReason, TrainedModel,
+};
 use crate::{Error, Result};
 
 /// Hyper-parameters of one layer's ADMM solve.
@@ -80,69 +91,226 @@ impl DecentralizedSolution {
     }
 }
 
-/// Solve one layer's problem across `solvers.len()` nodes (eq. 11).
-pub fn solve_decentralized<S: LocalSolve>(
-    solvers: &[S],
-    q: usize,
-    n: usize,
-    params: &AdmmParams,
-    consensus: &Consensus<'_>,
-) -> Result<DecentralizedSolution> {
-    params.validate()?;
-    let m = solvers.len();
-    if m == 0 {
-        return Err(Error::Config("no nodes".into()));
-    }
-    let mut states: Vec<NodeState> = (0..m).map(|_| NodeState::zeros(q, n)).collect();
-    let mut cost_curve = Vec::with_capacity(params.iterations);
-    let mut gossip_rounds = 0usize;
-    // Scratch for the averaging step and the exact-consensus average —
-    // all buffers live outside the iteration loop, which is heap-silent
-    // in steady state (tests/alloc_free.rs counts).
-    let mut s_vals: Vec<Matrix> = (0..m).map(|_| Matrix::zeros(q, n)).collect();
-    let mut avg = Matrix::zeros(q, n);
+/// One layer's consensus-ADMM solve (eq. 11) as a step-wise
+/// [`Algorithm`]: each [`Algorithm::advance`] performs exactly one
+/// synchronous iteration — the same operation sequence the legacy
+/// `solve_decentralized` loop ran, so driving this machine to the end is
+/// bit-identical to the one-shot call (which is now implemented on top
+/// of it).
+pub struct LayerAdmmAlgorithm<'a, S: LocalSolve> {
+    solvers: &'a [S],
+    params: AdmmParams,
+    consensus: &'a Consensus<'a>,
+    states: Vec<NodeState>,
+    s_vals: Vec<Matrix>,
+    avg: Matrix,
+    cost_curve: Vec<f64>,
+    gossip_rounds: usize,
+    k: usize,
+    done: bool,
+    finalized: bool,
+    stop_reason: Option<StopReason>,
+}
 
-    for _k in 0..params.iterations {
+impl<'a, S: LocalSolve> LayerAdmmAlgorithm<'a, S> {
+    /// Validate and set up a solve across `solvers.len()` nodes for a
+    /// `q×n` output. All iteration buffers are allocated here; the
+    /// iterations themselves are heap-silent.
+    pub fn new(
+        solvers: &'a [S],
+        q: usize,
+        n: usize,
+        params: &AdmmParams,
+        consensus: &'a Consensus<'a>,
+    ) -> Result<Self> {
+        params.validate()?;
+        let m = solvers.len();
+        if m == 0 {
+            return Err(Error::Config("no nodes".into()));
+        }
+        Ok(Self {
+            solvers,
+            params: *params,
+            consensus,
+            states: (0..m).map(|_| NodeState::zeros(q, n)).collect(),
+            s_vals: (0..m).map(|_| Matrix::zeros(q, n)).collect(),
+            avg: Matrix::zeros(q, n),
+            cost_curve: Vec::with_capacity(params.iterations),
+            gossip_rounds: 0,
+            k: 0,
+            done: false,
+            finalized: false,
+            stop_reason: None,
+        })
+    }
+
+    /// Consume the finished solve into the legacy solution struct.
+    pub fn into_solution(self) -> Result<DecentralizedSolution> {
+        if !self.done {
+            return Err(Error::Config("layer solve not finished".into()));
+        }
+        Ok(DecentralizedSolution {
+            states: self.states,
+            cost_curve: self.cost_curve,
+            gossip_rounds: self.gossip_rounds,
+        })
+    }
+}
+
+impl<S: LocalSolve> Algorithm for LayerAdmmAlgorithm<'_, S> {
+    fn describe(&self) -> String {
+        format!(
+            "admm-layer({} nodes, {})",
+            self.solvers.len(),
+            match self.consensus {
+                Consensus::Exact => "exact-avg",
+                Consensus::Gossip { .. } => "gossip",
+            }
+        )
+    }
+
+    fn is_done(&self) -> bool {
+        self.done
+    }
+
+    fn advance(&mut self, events: &mut Vec<StepEvent>) -> Result<()> {
+        if self.done {
+            return Err(Error::Config("layer solve already finished".into()));
+        }
+        let k = self.k;
         // (1) local O-updates, in place.
-        for (st, solver) in states.iter_mut().zip(solvers) {
+        for (st, solver) in self.states.iter_mut().zip(self.solvers) {
             let NodeState { o, lambda, z } = st;
             solver.o_update_into(z, lambda, o)?;
         }
         // (2) averaging of O_m + Λ_m.
-        for (sv, st) in s_vals.iter_mut().zip(&states) {
+        for (sv, st) in self.s_vals.iter_mut().zip(&self.states) {
             sv.copy_from(&st.o)?;
             sv.axpy(1.0, &st.lambda)?;
         }
-        match consensus {
+        let mut gossip_event: Option<(usize, u64)> = None;
+        match self.consensus {
             Consensus::Exact => {
-                GossipEngine::exact_average_into(&s_vals, &mut avg)?;
-                for sv in s_vals.iter_mut() {
-                    sv.copy_from(&avg)?;
+                GossipEngine::exact_average_into(&self.s_vals, &mut self.avg)?;
+                for sv in self.s_vals.iter_mut() {
+                    sv.copy_from(&self.avg)?;
                 }
             }
             Consensus::Gossip { engine, delta } => {
-                gossip_rounds += engine.consensus_average(&mut s_vals, *delta)?;
+                let (rounds, bytes) =
+                    engine.consensus_average_measured(&mut self.s_vals, *delta)?;
+                self.gossip_rounds += rounds;
+                gossip_event = Some((rounds, bytes));
             }
         }
         // (3) Z-update (projection) and dual update, per node.
-        for (st, sv) in states.iter_mut().zip(&s_vals) {
+        for (st, sv) in self.states.iter_mut().zip(&self.s_vals) {
             st.z.copy_from(sv)?;
-            st.z.project_frobenius(params.eps);
+            st.z.project_frobenius(self.params.eps);
             st.lambda.axpy(1.0, &st.o)?;
             st.lambda.axpy(-1.0, &st.z)?;
         }
         // Global objective at the consensus point (each node's own Z).
         let mut cost = 0.0;
-        for (st, solver) in states.iter().zip(solvers) {
+        for (st, solver) in self.states.iter().zip(self.solvers) {
             cost += solver.cost(&st.z)?;
         }
-        cost_curve.push(cost);
+        self.cost_curve.push(cost);
+        // Consensus-gap diagnostic (read-only). Under exact averaging
+        // every node holds the identical Z by construction, so the scan
+        // is skipped and 0.0 is exact — one-shot oracle callers
+        // (equivalence tests, alloc-free pins) pay nothing for it. In
+        // gossip mode the single O(M·Q·n) pass is a ~1/(B·deg) fraction
+        // of the averaging it annotates, so it is always computed.
+        let gap = match self.consensus {
+            Consensus::Exact => 0.0,
+            Consensus::Gossip { .. } => {
+                let z0 = &self.states[0].z;
+                self.states
+                    .iter()
+                    .map(|s| s.z.max_abs_diff(z0))
+                    .fold(0.0, f64::max)
+            }
+        };
+
+        if let Some((rounds, bytes)) = gossip_event {
+            events.push(StepEvent::GossipRound { layer: 0, iteration: k, rounds, bytes });
+        }
+        events.push(StepEvent::AdmmIteration {
+            layer: 0,
+            iteration: k,
+            cost: Some(cost),
+            consensus_gap: gap,
+        });
+
+        self.k += 1;
+        if self.k >= self.params.iterations || self.stop_reason.is_some() {
+            self.done = true;
+            events.push(StepEvent::Finished {
+                reason: self.stop_reason.unwrap_or(StopReason::Completed),
+            });
+        }
+        Ok(())
     }
-    Ok(DecentralizedSolution {
-        states,
-        cost_curve,
-        gossip_rounds,
-    })
+
+    fn finalize(&mut self) -> Result<AlgorithmOutput> {
+        if !self.done {
+            return Err(Error::Config("finalize before the solve finished".into()));
+        }
+        if self.finalized {
+            return Err(Error::Config("layer solve already finalized".into()));
+        }
+        self.finalized = true;
+        let mut report = TrainReport {
+            mode: self.describe(),
+            ..Default::default()
+        };
+        report.layers.push(LayerRecord {
+            layer: 0,
+            cost_curve: self.cost_curve.clone(),
+            gossip_rounds: self.gossip_rounds,
+            ..Default::default()
+        });
+        if let Consensus::Gossip { engine, .. } = self.consensus {
+            report.comm_total = engine.ledger().snapshot();
+            report.simulated_comm_secs = engine.simulated_seconds();
+        }
+        Ok(AlgorithmOutput {
+            model: TrainedModel::Output(self.states[0].z.clone()),
+            report,
+        })
+    }
+
+    fn progress(&self) -> SessionProgress {
+        match self.consensus {
+            Consensus::Gossip { engine, .. } => SessionProgress {
+                comm_bytes: engine.ledger().snapshot().bytes,
+                simulated_secs: engine.simulated_seconds(),
+            },
+            Consensus::Exact => SessionProgress::default(),
+        }
+    }
+
+    fn request_stop(&mut self, reason: StopReason) {
+        if self.stop_reason.is_none() && !self.done {
+            self.stop_reason = Some(reason);
+        }
+    }
+}
+
+/// Solve one layer's problem across `solvers.len()` nodes (eq. 11).
+/// Implemented as a loop over [`LayerAdmmAlgorithm`] — the one-shot call
+/// and the session-driven path are the same computation.
+pub fn solve_decentralized<'a, S: LocalSolve>(
+    solvers: &'a [S],
+    q: usize,
+    n: usize,
+    params: &AdmmParams,
+    consensus: &'a Consensus<'a>,
+) -> Result<DecentralizedSolution> {
+    let mut alg = LayerAdmmAlgorithm::new(solvers, q, n, params, consensus)?;
+    crate::session::drive_to_completion(&mut alg)?;
+    alg.into_solution()
 }
 
 /// Centralized solve of eq. (6): the same ADMM with a single "node"
@@ -303,6 +471,58 @@ mod tests {
         assert!(solve_centralized(&y, &t, &params(0)).is_err());
         let empty: &[LayerLocalSolver] = &[];
         assert!(solve_decentralized(empty, 2, 3, &params(5), &Consensus::Exact).is_err());
+    }
+
+    #[test]
+    fn session_driven_layer_solve_matches_direct_call() {
+        // Driving LayerAdmmAlgorithm through a TrainSession is the same
+        // computation as the one-shot solve_decentralized.
+        let y = rand_mat(6, 40, 21);
+        let t = rand_mat(2, 40, 22);
+        let p = AdmmParams { mu: 1.0, eps: 4.0, iterations: 30 };
+        let solvers = split_solvers(&y, &t, 4, p.mu);
+        let direct = solve_decentralized(&solvers, 2, 6, &p, &Consensus::Exact).unwrap();
+
+        let consensus = Consensus::Exact;
+        let alg = LayerAdmmAlgorithm::new(&solvers, 2, 6, &p, &consensus).unwrap();
+        let session = crate::session::TrainSession::from_algorithm(Box::new(alg));
+        let (model, report) = session.run_to_completion().unwrap();
+        let o = model.into_output().unwrap();
+        assert_eq!(o.max_abs_diff(direct.output()), 0.0);
+        assert_eq!(report.layers[0].cost_curve, direct.cost_curve);
+        assert!(report.mode.starts_with("admm-layer"));
+    }
+
+    #[test]
+    fn layer_algorithm_emits_iteration_events() {
+        use crate::session::StepEvent;
+        let y = rand_mat(5, 30, 23);
+        let t = rand_mat(2, 30, 24);
+        let p = AdmmParams { mu: 1.0, eps: 4.0, iterations: 4 };
+        let solvers = split_solvers(&y, &t, 3, p.mu);
+        let consensus = Consensus::Exact;
+        let mut alg = LayerAdmmAlgorithm::new(&solvers, 2, 5, &p, &consensus).unwrap();
+        let mut events = Vec::new();
+        while !alg.is_done() {
+            alg.advance(&mut events).unwrap();
+        }
+        let iters = events
+            .iter()
+            .filter(|e| matches!(e, StepEvent::AdmmIteration { .. }))
+            .count();
+        assert_eq!(iters, 4);
+        assert!(matches!(events.last(), Some(StepEvent::Finished { .. })));
+        // Exact consensus: no gossip events, zero gap.
+        assert!(!events.iter().any(|e| matches!(e, StepEvent::GossipRound { .. })));
+        match events[0] {
+            StepEvent::AdmmIteration { consensus_gap, cost, .. } => {
+                assert_eq!(consensus_gap, 0.0);
+                assert!(cost.unwrap() >= 0.0);
+            }
+            ref other => panic!("unexpected first event {other:?}"),
+        }
+        let sol = alg.into_solution().unwrap();
+        assert_eq!(sol.cost_curve.len(), 4);
     }
 
     #[test]

@@ -10,7 +10,11 @@
 
 use crate::admm::LayerLocalSolver;
 use crate::linalg::Matrix;
+use crate::metrics::{LayerRecord, TrainReport};
 use crate::network::GossipEngine;
+use crate::session::{
+    Algorithm, AlgorithmOutput, SessionProgress, StepEvent, StopReason, TrainedModel,
+};
 use crate::{Error, Result};
 
 /// Parameters for the DGD solve.
@@ -84,9 +88,178 @@ impl DgdNode {
     }
 }
 
+/// Decentralized projected gradient descent as a step-wise
+/// [`Algorithm`]: each [`Algorithm::advance`] performs one full
+/// gradient-gossip-step iteration — the exact operation sequence of the
+/// legacy `solve_dgd` loop, which is now a wrapper over this machine.
+pub struct DgdAlgorithm<'a> {
+    nodes: &'a [DgdNode],
+    params: DgdParams,
+    engine: Option<&'a GossipEngine>,
+    o: Matrix,
+    grads: Vec<Matrix>,
+    cost_curve: Vec<f64>,
+    gossip_rounds: usize,
+    k: usize,
+    done: bool,
+    finalized: bool,
+    stop_reason: Option<StopReason>,
+}
+
+impl<'a> DgdAlgorithm<'a> {
+    /// Validate and set up a solve for a `q×n` output across the nodes.
+    /// When `engine` is `Some`, gradient averages are found by gossip
+    /// (and charged to its ledger); otherwise the exact average is used.
+    pub fn new(
+        nodes: &'a [DgdNode],
+        q: usize,
+        n: usize,
+        params: &DgdParams,
+        engine: Option<&'a GossipEngine>,
+    ) -> Result<Self> {
+        params.validate()?;
+        if nodes.is_empty() {
+            return Err(Error::Config("no nodes".into()));
+        }
+        let m = nodes.len();
+        Ok(Self {
+            nodes,
+            params: *params,
+            engine,
+            o: Matrix::zeros(q, n),
+            grads: (0..m).map(|_| Matrix::zeros(q, n)).collect(),
+            cost_curve: Vec::with_capacity(params.iterations),
+            gossip_rounds: 0,
+            k: 0,
+            done: false,
+            finalized: false,
+            stop_reason: None,
+        })
+    }
+
+    /// Consume the finished solve into the legacy solution struct.
+    pub fn into_solution(self) -> Result<DgdSolution> {
+        if !self.done {
+            return Err(Error::Config("DGD solve not finished".into()));
+        }
+        Ok(DgdSolution {
+            o: self.o,
+            cost_curve: self.cost_curve,
+            gossip_rounds: self.gossip_rounds,
+        })
+    }
+}
+
+impl Algorithm for DgdAlgorithm<'_> {
+    fn describe(&self) -> String {
+        format!(
+            "dgd({} nodes, {})",
+            self.nodes.len(),
+            if self.engine.is_some() { "gossip" } else { "exact-avg" }
+        )
+    }
+
+    fn is_done(&self) -> bool {
+        self.done
+    }
+
+    fn advance(&mut self, events: &mut Vec<StepEvent>) -> Result<()> {
+        if self.done {
+            return Err(Error::Config("DGD solve already finished".into()));
+        }
+        let k = self.k;
+        for (g, node) in self.grads.iter_mut().zip(self.nodes) {
+            let ng = node.gradient(&self.o)?;
+            g.copy_from(&ng)?;
+        }
+        let mut gossip_event: Option<(usize, u64)> = None;
+        let avg = match self.engine {
+            Some(eng) => {
+                let (rounds, bytes) =
+                    eng.consensus_average_measured(&mut self.grads, self.params.delta)?;
+                self.gossip_rounds += rounds;
+                gossip_event = Some((rounds, bytes));
+                self.grads[0].clone()
+            }
+            None => GossipEngine::exact_average(&self.grads)?,
+        };
+        self.o.axpy(-self.params.step, &avg)?;
+        self.o.project_frobenius(self.params.eps);
+        let mut c = 0.0;
+        for node in self.nodes {
+            c += node.cost(&self.o)?;
+        }
+        self.cost_curve.push(c);
+
+        if let Some((rounds, bytes)) = gossip_event {
+            events.push(StepEvent::GossipRound { layer: 0, iteration: k, rounds, bytes });
+        }
+        events.push(StepEvent::AdmmIteration {
+            layer: 0,
+            iteration: k,
+            cost: Some(c),
+            consensus_gap: 0.0,
+        });
+        self.k += 1;
+        if self.k >= self.params.iterations || self.stop_reason.is_some() {
+            self.done = true;
+            events.push(StepEvent::Finished {
+                reason: self.stop_reason.unwrap_or(StopReason::Completed),
+            });
+        }
+        Ok(())
+    }
+
+    fn finalize(&mut self) -> Result<AlgorithmOutput> {
+        if !self.done {
+            return Err(Error::Config("finalize before the solve finished".into()));
+        }
+        if self.finalized {
+            return Err(Error::Config("DGD solve already finalized".into()));
+        }
+        self.finalized = true;
+        let mut report = TrainReport {
+            mode: self.describe(),
+            ..Default::default()
+        };
+        report.layers.push(LayerRecord {
+            layer: 0,
+            cost_curve: self.cost_curve.clone(),
+            gossip_rounds: self.gossip_rounds,
+            ..Default::default()
+        });
+        if let Some(eng) = self.engine {
+            report.comm_total = eng.ledger().snapshot();
+            report.simulated_comm_secs = eng.simulated_seconds();
+        }
+        Ok(AlgorithmOutput {
+            model: TrainedModel::Output(self.o.clone()),
+            report,
+        })
+    }
+
+    fn progress(&self) -> SessionProgress {
+        match self.engine {
+            Some(eng) => SessionProgress {
+                comm_bytes: eng.ledger().snapshot().bytes,
+                simulated_secs: eng.simulated_seconds(),
+            },
+            None => SessionProgress::default(),
+        }
+    }
+
+    fn request_stop(&mut self, reason: StopReason) {
+        if self.stop_reason.is_none() && !self.done {
+            self.stop_reason = Some(reason);
+        }
+    }
+}
+
 /// Run decentralized projected gradient descent. When `engine` is `Some`,
 /// gradient averages are found by gossip (and charged to its ledger);
-/// otherwise the exact average is used.
+/// otherwise the exact average is used. Implemented as a loop over
+/// [`DgdAlgorithm`] — the one-shot call and the session-driven path are
+/// the same computation.
 pub fn solve_dgd(
     nodes: &[DgdNode],
     q: usize,
@@ -94,41 +267,9 @@ pub fn solve_dgd(
     params: &DgdParams,
     engine: Option<&GossipEngine>,
 ) -> Result<DgdSolution> {
-    params.validate()?;
-    if nodes.is_empty() {
-        return Err(Error::Config("no nodes".into()));
-    }
-    let m = nodes.len();
-    let mut o = Matrix::zeros(q, n);
-    let mut cost_curve = Vec::with_capacity(params.iterations);
-    let mut gossip_rounds = 0usize;
-    let mut grads: Vec<Matrix> = (0..m).map(|_| Matrix::zeros(q, n)).collect();
-
-    for _ in 0..params.iterations {
-        for (g, node) in grads.iter_mut().zip(nodes) {
-            let ng = node.gradient(&o)?;
-            g.copy_from(&ng)?;
-        }
-        let avg = match engine {
-            Some(eng) => {
-                gossip_rounds += eng.consensus_average(&mut grads, params.delta)?;
-                grads[0].clone()
-            }
-            None => GossipEngine::exact_average(&grads)?,
-        };
-        o.axpy(-params.step, &avg)?;
-        o.project_frobenius(params.eps);
-        let mut c = 0.0;
-        for node in nodes {
-            c += node.cost(&o)?;
-        }
-        cost_curve.push(c);
-    }
-    Ok(DgdSolution {
-        o,
-        cost_curve,
-        gossip_rounds,
-    })
+    let mut alg = DgdAlgorithm::new(nodes, q, n, params, engine)?;
+    crate::session::drive_to_completion(&mut alg)?;
+    alg.into_solution()
 }
 
 #[cfg(test)]
@@ -268,6 +409,26 @@ mod tests {
             dgd_bytes > admm_bytes,
             "DGD bytes {dgd_bytes} should exceed ADMM bytes {admm_bytes}"
         );
+    }
+
+    #[test]
+    fn session_driven_dgd_matches_direct_call() {
+        // DgdAlgorithm through a TrainSession is the same computation as
+        // the one-shot solve_dgd.
+        let y = rand_mat(5, 30, 9);
+        let t = rand_mat(2, 30, 10);
+        let nodes = split_nodes(&y, &t, 3);
+        let step = 0.5 / y.gram().as_slice().iter().sum::<f64>().abs();
+        let params = DgdParams { step, iterations: 50, eps: 4.0, delta: 1e-9 };
+        let direct = solve_dgd(&nodes, 2, 5, &params, None).unwrap();
+
+        let alg = DgdAlgorithm::new(&nodes, 2, 5, &params, None).unwrap();
+        let session = crate::session::TrainSession::from_algorithm(Box::new(alg));
+        let (model, report) = session.run_to_completion().unwrap();
+        let o = model.into_output().unwrap();
+        assert_eq!(o.max_abs_diff(&direct.o), 0.0);
+        assert_eq!(report.layers[0].cost_curve, direct.cost_curve);
+        assert!(report.mode.starts_with("dgd("));
     }
 
     #[test]

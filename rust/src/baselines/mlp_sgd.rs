@@ -9,8 +9,11 @@
 
 use crate::data::{ClassificationTask, Dataset};
 use crate::linalg::{accuracy_from_predictions, Matrix};
-use crate::metrics::{error_db, TrainReport};
+use crate::metrics::{error_db, LayerRecord, TrainReport};
 use crate::network::GossipEngine;
+use crate::session::{
+    Algorithm, AlgorithmOutput, SessionProgress, StepEvent, StopReason, TrainedModel,
+};
 use crate::util::{Rng, Xoshiro256StarStar};
 use crate::{Error, Result};
 
@@ -129,56 +132,167 @@ impl MlpSgdTrainer {
     /// Train across `shards`; gradients are gossip-averaged through
     /// `engine` when given, exactly averaged otherwise. Returns the model
     /// and a report (cost curve = global objective per iteration).
+    /// Implemented as a loop over [`MlpSgdAlgorithm`] — the one-shot call
+    /// and the session-driven path are the same computation.
     pub fn train(
         &self,
         task: &ClassificationTask,
         shards: &[Dataset],
         engine: Option<&GossipEngine>,
     ) -> Result<(MlpModel, TrainReport)> {
+        let mut alg = MlpSgdAlgorithm::new(self.params, task, shards, engine)?;
+        crate::session::drive_to_completion(&mut alg)?;
+        let out = alg.finalize()?;
+        Ok((out.model.into_mlp()?, out.report))
+    }
+
+    /// Scalars exchanged per gradient averaging (eq. 14's `n_l·n_{l-1}`
+    /// summed over layers) — used by the comm-load bench.
+    pub fn scalars_per_exchange(&self, p: usize, q: usize) -> usize {
+        let mut total = self.params.hidden * p;
+        total += (self.params.layers - 1) * self.params.hidden * self.params.hidden;
+        total += q * self.params.hidden;
+        total
+    }
+}
+
+/// The backprop-MLP baseline as a step-wise [`Algorithm`]: each
+/// [`Algorithm::advance`] performs one full-batch decentralized SGD
+/// iteration (per-shard backprop, per-layer gradient gossip, weight
+/// step, objective eval) — the exact operation sequence of the legacy
+/// `MlpSgdTrainer::train` loop, which is now a wrapper over this type.
+pub struct MlpSgdAlgorithm<'a> {
+    params: MlpSgdParams,
+    task: &'a ClassificationTask,
+    shards: &'a [Dataset],
+    engine: Option<&'a GossipEngine>,
+    ws: Vec<Matrix>,
+    curve: Vec<f64>,
+    gossip_rounds: usize,
+    scale: f64,
+    k: usize,
+    done: bool,
+    finalized: bool,
+    stop_reason: Option<StopReason>,
+}
+
+impl<'a> MlpSgdAlgorithm<'a> {
+    /// Validate the parameters and initialize the weight stack.
+    pub fn new(
+        params: MlpSgdParams,
+        task: &'a ClassificationTask,
+        shards: &'a [Dataset],
+        engine: Option<&'a GossipEngine>,
+    ) -> Result<Self> {
+        let trainer = MlpSgdTrainer::new(params)?;
         if shards.is_empty() {
             return Err(Error::Config("no shards".into()));
         }
-        let p = task.input_dim();
-        let q = task.num_classes();
-        let mut ws = self.init_weights(p, q);
-        let mut curve = Vec::with_capacity(self.params.iterations);
-        let mut gossip_rounds = 0usize;
-        let scale = 1.0 / task.train.num_samples() as f64;
+        let ws = trainer.init_weights(task.input_dim(), task.num_classes());
+        Ok(Self {
+            params,
+            task,
+            shards,
+            engine,
+            ws,
+            curve: Vec::with_capacity(params.iterations),
+            gossip_rounds: 0,
+            scale: 1.0 / task.train.num_samples() as f64,
+            k: 0,
+            done: false,
+            finalized: false,
+            stop_reason: None,
+        })
+    }
+}
 
-        for _ in 0..self.params.iterations {
-            // Per-node gradients (layer-major for the averaging step).
-            let mut per_layer: Vec<Vec<Matrix>> = vec![Vec::with_capacity(shards.len()); ws.len()];
-            for sh in shards {
-                let gs = Self::gradients(&ws, &sh.x, &sh.t)?;
-                for (bucket, g) in per_layer.iter_mut().zip(gs) {
-                    bucket.push(g);
-                }
-            }
-            // Average each layer's gradient across nodes.
-            for (li, bucket) in per_layer.iter_mut().enumerate() {
-                let avg = match engine {
-                    Some(eng) => {
-                        gossip_rounds += eng.consensus_average(bucket, self.params.delta)?;
-                        bucket[0].clone()
-                    }
-                    None => GossipEngine::exact_average(bucket)?,
-                };
-                // Gradient sum = M × average (the objective is a sum).
-                ws[li].axpy(-self.params.step * scale * shards.len() as f64, &avg)?;
-            }
-            // Objective.
-            let model = MlpModel { weights: ws.clone() };
-            let mut cost = 0.0;
-            for sh in shards {
-                cost += sh.t.sub(&model.scores(&sh.x)?)?.frobenius_norm_sq();
-            }
-            curve.push(cost);
+impl Algorithm for MlpSgdAlgorithm<'_> {
+    fn describe(&self) -> String {
+        format!("mlp-sgd({} layers)", self.params.layers)
+    }
+
+    fn is_done(&self) -> bool {
+        self.done
+    }
+
+    fn advance(&mut self, events: &mut Vec<StepEvent>) -> Result<()> {
+        if self.done {
+            return Err(Error::Config("MLP training already finished".into()));
         }
+        let k = self.k;
+        // Per-node gradients (layer-major for the averaging step).
+        let mut per_layer: Vec<Vec<Matrix>> =
+            vec![Vec::with_capacity(self.shards.len()); self.ws.len()];
+        for sh in self.shards {
+            let gs = MlpSgdTrainer::gradients(&self.ws, &sh.x, &sh.t)?;
+            for (bucket, g) in per_layer.iter_mut().zip(gs) {
+                bucket.push(g);
+            }
+        }
+        // Average each layer's gradient across nodes; one aggregated
+        // gossip event covers all per-layer averagings of the iteration.
+        let mut iter_rounds = 0usize;
+        let mut iter_bytes = 0u64;
+        for (li, bucket) in per_layer.iter_mut().enumerate() {
+            let avg = match self.engine {
+                Some(eng) => {
+                    let (rounds, bytes) =
+                        eng.consensus_average_measured(bucket, self.params.delta)?;
+                    self.gossip_rounds += rounds;
+                    iter_rounds += rounds;
+                    iter_bytes += bytes;
+                    bucket[0].clone()
+                }
+                None => GossipEngine::exact_average(bucket)?,
+            };
+            // Gradient sum = M × average (the objective is a sum).
+            self.ws[li].axpy(-self.params.step * self.scale * self.shards.len() as f64, &avg)?;
+        }
+        // Objective.
+        let model = MlpModel { weights: self.ws.clone() };
+        let mut cost = 0.0;
+        for sh in self.shards {
+            cost += sh.t.sub(&model.scores(&sh.x)?)?.frobenius_norm_sq();
+        }
+        self.curve.push(cost);
 
-        let model = MlpModel { weights: ws };
+        if self.engine.is_some() {
+            events.push(StepEvent::GossipRound {
+                layer: 0,
+                iteration: k,
+                rounds: iter_rounds,
+                bytes: iter_bytes,
+            });
+        }
+        events.push(StepEvent::AdmmIteration {
+            layer: 0,
+            iteration: k,
+            cost: Some(cost),
+            consensus_gap: 0.0,
+        });
+        self.k += 1;
+        if self.k >= self.params.iterations || self.stop_reason.is_some() {
+            self.done = true;
+            events.push(StepEvent::Finished {
+                reason: self.stop_reason.unwrap_or(StopReason::Completed),
+            });
+        }
+        Ok(())
+    }
+
+    fn finalize(&mut self) -> Result<AlgorithmOutput> {
+        if !self.done {
+            return Err(Error::Config("finalize before training finished".into()));
+        }
+        if self.finalized {
+            return Err(Error::Config("MLP training already finalized".into()));
+        }
+        self.finalized = true;
+        let model = MlpModel { weights: self.ws.clone() };
+        let task = self.task;
         let mut report = TrainReport {
             dataset: task.name.clone(),
-            mode: format!("mlp-sgd({} layers)", self.params.layers),
+            mode: self.describe(),
             train_accuracy: model.accuracy(&task.train)?,
             test_accuracy: model.accuracy(&task.test)?,
             ..Default::default()
@@ -190,22 +304,32 @@ impl MlpSgdTrainer {
                 .frobenius_norm_sq(),
             task.train.t.frobenius_norm_sq(),
         );
-        report.layers.push(crate::metrics::LayerRecord {
+        report.layers.push(LayerRecord {
             layer: 0,
-            cost_curve: curve,
-            gossip_rounds,
+            cost_curve: self.curve.clone(),
+            gossip_rounds: self.gossip_rounds,
             ..Default::default()
         });
-        Ok((model, report))
+        Ok(AlgorithmOutput {
+            model: TrainedModel::Mlp(model),
+            report,
+        })
     }
 
-    /// Scalars exchanged per gradient averaging (eq. 14's `n_l·n_{l-1}`
-    /// summed over layers) — used by the comm-load bench.
-    pub fn scalars_per_exchange(&self, p: usize, q: usize) -> usize {
-        let mut total = self.params.hidden * p;
-        total += (self.params.layers - 1) * self.params.hidden * self.params.hidden;
-        total += q * self.params.hidden;
-        total
+    fn progress(&self) -> SessionProgress {
+        match self.engine {
+            Some(eng) => SessionProgress {
+                comm_bytes: eng.ledger().snapshot().bytes,
+                simulated_secs: eng.simulated_seconds(),
+            },
+            None => SessionProgress::default(),
+        }
+    }
+
+    fn request_stop(&mut self, reason: StopReason) {
+        if self.stop_reason.is_none() && !self.done {
+            self.stop_reason = Some(reason);
+        }
     }
 }
 
@@ -273,6 +397,26 @@ mod tests {
         assert!(curve.last().unwrap() < &(curve.first().unwrap() * 0.5));
         assert!(report.train_accuracy > 0.7, "acc {}", report.train_accuracy);
         assert!(model.accuracy(&task.test).unwrap() > 0.5);
+    }
+
+    #[test]
+    fn session_driven_mlp_matches_direct_train() {
+        // MlpSgdAlgorithm through a TrainSession is the same computation
+        // as the one-shot MlpSgdTrainer::train.
+        let task = toy_task();
+        let shards = shard_uniform(&task.train, 3).unwrap();
+        let tr = MlpSgdTrainer::new(params(40)).unwrap();
+        let (direct_model, direct_report) = tr.train(&task, &shards, None).unwrap();
+
+        let alg = MlpSgdAlgorithm::new(params(40), &task, &shards, None).unwrap();
+        let session = crate::session::TrainSession::from_algorithm(Box::new(alg));
+        let (model, report) = session.run_to_completion().unwrap();
+        let model = model.into_mlp().unwrap();
+        for (a, b) in model.weights.iter().zip(&direct_model.weights) {
+            assert_eq!(a.max_abs_diff(b), 0.0);
+        }
+        assert_eq!(report.layers[0].cost_curve, direct_report.layers[0].cost_curve);
+        assert_eq!(report.mode, "mlp-sgd(2 layers)");
     }
 
     #[test]

@@ -14,5 +14,5 @@
 pub mod dgd;
 pub mod mlp_sgd;
 
-pub use dgd::{DgdParams, DgdSolution};
-pub use mlp_sgd::{MlpSgdParams, MlpSgdTrainer};
+pub use dgd::{DgdAlgorithm, DgdParams, DgdSolution};
+pub use mlp_sgd::{MlpModel, MlpSgdAlgorithm, MlpSgdParams, MlpSgdTrainer};

@@ -252,6 +252,42 @@ impl ExperimentConfig {
         let spec = lookup(&self.dataset)?;
         Ok(spec.train_samples.div_ceil(self.nodes))
     }
+
+    /// Lower this config into the fluent
+    /// [`crate::session::SessionBuilder`]. The TOML/preset front-end and
+    /// the builder share one construction-and-validation path — this
+    /// config type stays a thin file format over the session API. The
+    /// PJRT backend (when configured) is constructed eagerly so artifact
+    /// problems surface here rather than mid-training.
+    pub fn session_builder(&self) -> Result<crate::session::SessionBuilder> {
+        lookup(&self.dataset)?;
+        let mut b = crate::session::SessionBuilder::new()
+            .dataset(self.dataset.clone())
+            .seed(self.seed)
+            .layers(self.layers)
+            .hidden_extra(self.hidden_extra)
+            .admm_iterations(self.admm_iterations)
+            .mu(self.mu0, self.mul)
+            .nodes(self.nodes)
+            .degree(self.degree)
+            .latency(self.alpha, self.beta)
+            .threads(self.threads)
+            .record_cost_curve(self.record_cost_curve);
+        if let Some(e) = self.eps {
+            b = b.eps(e);
+        }
+        b = if self.exact_consensus {
+            b.exact_consensus()
+        } else {
+            b.gossip_delta(self.delta)
+        };
+        if self.backend == BackendKind::Pjrt {
+            let manifest = crate::runtime::ArtifactManifest::load(&self.artifacts_dir)?;
+            let backend = crate::runtime::PjrtBackend::start(&manifest, &self.dataset)?;
+            b = b.backend(std::sync::Arc::new(backend));
+        }
+        Ok(b)
+    }
 }
 
 /// Parse a TOML subset into a flat `section.key -> value` map.
@@ -378,6 +414,75 @@ exact_consensus = true
         assert!(ExperimentConfig::from_toml("[x]\ny = 1").is_err());
         assert!(ExperimentConfig::from_toml("[admm]\nmu0 = abc").is_err());
         assert!(ExperimentConfig::from_toml("[runtime]\nbackend = \"gpu\"").is_err());
+    }
+
+    #[test]
+    fn from_toml_rejects_unknown_keys() {
+        // Unknown section.
+        assert!(ExperimentConfig::from_toml("[bogus]\nx = 1").is_err());
+        // Unknown key in a known section.
+        assert!(ExperimentConfig::from_toml("[model]\ndepth = 3").is_err());
+        // Known key outside its section ('dataset' only exists under
+        // [experiment]).
+        assert!(ExperimentConfig::from_toml("dataset = \"quickstart\"").is_err());
+        assert!(ExperimentConfig::from_toml("[admm]\ndataset = \"quickstart\"").is_err());
+    }
+
+    #[test]
+    fn from_toml_rejects_wrong_value_types() {
+        assert!(ExperimentConfig::from_toml("[model]\nlayers = many").is_err());
+        assert!(ExperimentConfig::from_toml("[model]\nlayers = 2.5").is_err());
+        assert!(ExperimentConfig::from_toml("[model]\nlayers = -3").is_err());
+        assert!(ExperimentConfig::from_toml("[experiment]\nseed = 1.5").is_err());
+        assert!(ExperimentConfig::from_toml("[admm]\neps = true").is_err());
+        assert!(ExperimentConfig::from_toml("[network]\nexact_consensus = yes").is_err());
+        assert!(ExperimentConfig::from_toml("[network]\ndelta = tiny").is_err());
+        // Valid boolean spellings are exactly 'true'/'false'.
+        let cfg = ExperimentConfig::from_toml("[network]\nexact_consensus = false").unwrap();
+        assert!(!cfg.exact_consensus);
+    }
+
+    #[test]
+    fn from_toml_missing_sections_fall_back_to_defaults() {
+        // An empty document is a fully-defaulted experiment.
+        let cfg = ExperimentConfig::from_toml("").unwrap();
+        let def = ExperimentConfig::default();
+        assert_eq!(cfg.dataset, def.dataset);
+        assert_eq!(cfg.layers, def.layers);
+        assert_eq!(cfg.nodes, def.nodes);
+        // A document with only [admm] keeps every other section default.
+        let cfg = ExperimentConfig::from_toml("[admm]\niterations = 7").unwrap();
+        assert_eq!(cfg.admm_iterations, 7);
+        assert_eq!(cfg.layers, def.layers);
+        assert_eq!(cfg.delta, def.delta);
+        // Later duplicate keys win (flat map semantics).
+        let cfg = ExperimentConfig::from_toml("[model]\nlayers = 3\nlayers = 4").unwrap();
+        assert_eq!(cfg.layers, 4);
+    }
+
+    #[test]
+    fn session_builder_lowers_config_bit_identically() {
+        let mut cfg = ExperimentConfig::named_dataset("quickstart").unwrap();
+        cfg.layers = 1;
+        cfg.hidden_extra = 10;
+        cfg.admm_iterations = 3;
+        cfg.nodes = 2;
+        cfg.degree = 1;
+        cfg.threads = 1;
+        let session = cfg.session_builder().unwrap().build().unwrap();
+        let (model, report) = session.run_to_completion().unwrap();
+        let model = model.into_ssfn().unwrap();
+        assert_eq!(model.weights().len(), 1);
+        assert_eq!(report.layers.len(), 2);
+        // The lowered session computes exactly what the legacy config
+        // path computes.
+        let task = cfg.generate_task().unwrap();
+        let trainer = crate::coordinator::DecentralizedTrainer::from_config(&cfg).unwrap();
+        let (m2, _) = trainer.train_task(&task).unwrap();
+        assert_eq!(model.output().max_abs_diff(m2.output()), 0.0);
+        for (a, b) in model.weights().iter().zip(m2.weights()) {
+            assert_eq!(a.max_abs_diff(b), 0.0);
+        }
     }
 
     #[test]

@@ -1,0 +1,655 @@
+//! Bit-exact snapshot/restore of a dSSFN training session.
+//!
+//! A [`Checkpoint`] captures everything the
+//! [`super::DssfnAlgorithm`] state machine needs to continue a run as if
+//! it had never stopped: the full configuration (architecture,
+//! hyper-parameters, decentralization options, master seed), the
+//! per-node ADMM states `O_m/Λ_m/Z_m`, each node's current feature
+//! matrix `Y_{l,m}`, node 0's weight stack, the partial per-layer
+//! records, and the communication ledger / simulated-clock counters.
+//! Quantities that are *derived deterministically* from the seed and the
+//! task — the data shards, the pre-shared random matrices `R_l`, the
+//! Gram factorizations of the current layer — are rebuilt on restore
+//! rather than stored; every rebuild is bit-identical by construction
+//! (pinned by `tests/coordinator_oracle.rs`).
+//!
+//! The wire format is a versioned little-endian binary layout written by
+//! hand (the offline build carries no serde): all integers are `u64`/`u8`
+//! tags, all floats round-trip through `f64::to_le_bytes`, so restored
+//! state is **bit-identical**, not approximately equal.
+
+use super::{ConsensusMode, TrainOptions};
+use crate::admm::NodeState;
+use crate::linalg::Matrix;
+use crate::metrics::LayerRecord;
+use crate::network::{CommSnapshot, LatencyModel, Topology, WeightRule};
+use crate::ssfn::{SsfnArchitecture, TrainHyper};
+use crate::{Error, Result};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"DSSFNCKP";
+const VERSION: u32 = 1;
+
+/// Where inside the layer state machine the snapshot was taken.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum CkPhase {
+    /// About to run the layer's prepare phase.
+    Prepare,
+    /// About to run ADMM iteration `k` of the current layer.
+    Iterate(u64),
+    /// About to run the layer's advance phase (all `K` iterations done).
+    Advance,
+}
+
+/// A serialized-state snapshot of a [`super::TrainSession`]-driven dSSFN
+/// run. Obtain one with [`crate::session::TrainSession::checkpoint`],
+/// persist it with [`Checkpoint::save`] / [`Checkpoint::to_bytes`], and
+/// continue training with [`super::resume_session`].
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub(crate) seed: u64,
+    pub(crate) arch: SsfnArchitecture,
+    pub(crate) hyper: TrainHyper,
+    pub(crate) opts: TrainOptions,
+    pub(crate) growth: Option<f64>,
+    pub(crate) dataset: String,
+    pub(crate) train_samples: u64,
+    /// Content fingerprint of the training data (see
+    /// [`super::DssfnAlgorithm`]'s `task_checksum`): restore rejects a
+    /// same-shaped task holding different data instead of silently
+    /// continuing on it.
+    pub(crate) train_checksum: u64,
+    pub(crate) layer: u64,
+    pub(crate) phase: CkPhase,
+    pub(crate) weights: Vec<Matrix>,
+    pub(crate) ys: Vec<Matrix>,
+    pub(crate) states: Vec<NodeState>,
+    pub(crate) cost_curve: Vec<f64>,
+    pub(crate) gossip_rounds: u64,
+    pub(crate) comm_before: CommSnapshot,
+    pub(crate) ledger_total: CommSnapshot,
+    pub(crate) sim_secs: f64,
+    pub(crate) wall_base: f64,
+    pub(crate) prev_layer_cost: Option<f64>,
+    pub(crate) report_layers: Vec<LayerRecord>,
+}
+
+impl Checkpoint {
+    /// Dataset key the session was training on (restore validates the
+    /// supplied task against it).
+    pub fn dataset(&self) -> &str {
+        &self.dataset
+    }
+
+    /// Current layer index.
+    pub fn layer(&self) -> usize {
+        self.layer as usize
+    }
+
+    /// ADMM iteration about to run, when the snapshot landed mid-layer.
+    pub fn iteration(&self) -> Option<usize> {
+        match self.phase {
+            CkPhase::Iterate(k) => Some(k as usize),
+            _ => None,
+        }
+    }
+
+    /// Number of fully recorded layers.
+    pub fn layers_completed(&self) -> usize {
+        self.report_layers.len()
+    }
+
+    /// Master seed of the run.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Serialize to the versioned binary format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.bytes(MAGIC);
+        w.u32(VERSION);
+        w.u64(self.seed);
+        // Architecture.
+        w.u64(self.arch.input_dim as u64);
+        w.u64(self.arch.num_classes as u64);
+        w.u64(self.arch.hidden as u64);
+        w.u64(self.arch.layers as u64);
+        // Hyper-parameters.
+        w.f64(self.hyper.mu0);
+        w.f64(self.hyper.mul);
+        w.u64(self.hyper.admm_iterations as u64);
+        w.opt_f64(self.hyper.eps);
+        // Decentralization options.
+        w.u64(self.opts.nodes as u64);
+        match self.opts.topology {
+            Topology::Circular { nodes, degree } => {
+                w.u8(0);
+                w.u64(nodes as u64);
+                w.u64(degree as u64);
+            }
+            Topology::Complete { nodes } => {
+                w.u8(1);
+                w.u64(nodes as u64);
+            }
+            Topology::Star { nodes } => {
+                w.u8(2);
+                w.u64(nodes as u64);
+            }
+            Topology::RandomGeometric { nodes, radius, seed } => {
+                w.u8(3);
+                w.u64(nodes as u64);
+                w.f64(radius);
+                w.u64(seed);
+            }
+        }
+        w.u8(match self.opts.weight_rule {
+            WeightRule::EqualNeighbor => 0,
+            WeightRule::Metropolis => 1,
+        });
+        match self.opts.consensus {
+            ConsensusMode::Exact => w.u8(0),
+            ConsensusMode::Gossip { delta } => {
+                w.u8(1);
+                w.f64(delta);
+            }
+        }
+        w.f64(self.opts.latency.alpha);
+        w.f64(self.opts.latency.beta);
+        w.u64(self.opts.threads as u64);
+        w.u8(self.opts.record_cost_curve as u8);
+        // Growth policy, task fingerprint.
+        w.opt_f64(self.growth);
+        w.string(&self.dataset);
+        w.u64(self.train_samples);
+        w.u64(self.train_checksum);
+        // Progress.
+        w.u64(self.layer);
+        match self.phase {
+            CkPhase::Prepare => w.u8(0),
+            CkPhase::Iterate(k) => {
+                w.u8(1);
+                w.u64(k);
+            }
+            CkPhase::Advance => w.u8(2),
+        }
+        w.matrices(&self.weights);
+        w.matrices(&self.ys);
+        w.u64(self.states.len() as u64);
+        for st in &self.states {
+            w.matrix(&st.o);
+            w.matrix(&st.lambda);
+            w.matrix(&st.z);
+        }
+        w.f64s(&self.cost_curve);
+        w.u64(self.gossip_rounds);
+        w.snapshot(&self.comm_before);
+        w.snapshot(&self.ledger_total);
+        w.f64(self.sim_secs);
+        w.f64(self.wall_base);
+        w.opt_f64(self.prev_layer_cost);
+        // Completed layer records.
+        w.u64(self.report_layers.len() as u64);
+        for rec in &self.report_layers {
+            w.u64(rec.layer as u64);
+            w.f64s(&rec.cost_curve);
+            w.f64(rec.wall_secs);
+            w.u64(rec.gossip_rounds as u64);
+            w.snapshot(&rec.comm);
+            w.f64(rec.consensus_disagreement);
+        }
+        w.buf
+    }
+
+    /// Parse the versioned binary format.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        let mut r = Reader::new(bytes);
+        if r.bytes(8)? != &MAGIC[..] {
+            return Err(Error::Checkpoint("bad magic (not a dssfn checkpoint)".into()));
+        }
+        let version = r.u32()?;
+        if version != VERSION {
+            return Err(Error::Checkpoint(format!(
+                "unsupported checkpoint version {version} (this build reads {VERSION})"
+            )));
+        }
+        let seed = r.u64()?;
+        let arch = SsfnArchitecture {
+            input_dim: r.usize_()?,
+            num_classes: r.usize_()?,
+            hidden: r.usize_()?,
+            layers: r.usize_()?,
+        };
+        let hyper = TrainHyper {
+            mu0: r.f64()?,
+            mul: r.f64()?,
+            admm_iterations: r.usize_()?,
+            eps: r.opt_f64()?,
+        };
+        let nodes = r.usize_()?;
+        let topology = match r.u8()? {
+            0 => Topology::Circular { nodes: r.usize_()?, degree: r.usize_()? },
+            1 => Topology::Complete { nodes: r.usize_()? },
+            2 => Topology::Star { nodes: r.usize_()? },
+            3 => Topology::RandomGeometric {
+                nodes: r.usize_()?,
+                radius: r.f64()?,
+                seed: r.u64()?,
+            },
+            t => return Err(Error::Checkpoint(format!("unknown topology tag {t}"))),
+        };
+        let weight_rule = match r.u8()? {
+            0 => WeightRule::EqualNeighbor,
+            1 => WeightRule::Metropolis,
+            t => return Err(Error::Checkpoint(format!("unknown weight-rule tag {t}"))),
+        };
+        let consensus = match r.u8()? {
+            0 => ConsensusMode::Exact,
+            1 => ConsensusMode::Gossip { delta: r.f64()? },
+            t => return Err(Error::Checkpoint(format!("unknown consensus tag {t}"))),
+        };
+        let latency = LatencyModel { alpha: r.f64()?, beta: r.f64()? };
+        let threads = r.usize_()?;
+        let record_cost_curve = r.u8()? != 0;
+        let opts = TrainOptions {
+            nodes,
+            topology,
+            weight_rule,
+            consensus,
+            latency,
+            threads,
+            record_cost_curve,
+        };
+        let growth = r.opt_f64()?;
+        let dataset = r.string()?;
+        let train_samples = r.u64()?;
+        let train_checksum = r.u64()?;
+        let layer = r.u64()?;
+        let phase = match r.u8()? {
+            0 => CkPhase::Prepare,
+            1 => CkPhase::Iterate(r.u64()?),
+            2 => CkPhase::Advance,
+            t => return Err(Error::Checkpoint(format!("unknown phase tag {t}"))),
+        };
+        let weights = r.matrices()?;
+        let ys = r.matrices()?;
+        let n_states = r.usize_()?;
+        let mut states = Vec::with_capacity(n_states.min(1 << 20));
+        for _ in 0..n_states {
+            let o = r.matrix()?;
+            let lambda = r.matrix()?;
+            let z = r.matrix()?;
+            states.push(NodeState { o, lambda, z });
+        }
+        let cost_curve = r.f64s()?;
+        let gossip_rounds = r.u64()?;
+        let comm_before = r.snapshot()?;
+        let ledger_total = r.snapshot()?;
+        let sim_secs = r.f64()?;
+        let wall_base = r.f64()?;
+        let prev_layer_cost = r.opt_f64()?;
+        let n_layers = r.usize_()?;
+        let mut report_layers = Vec::with_capacity(n_layers.min(1 << 20));
+        for _ in 0..n_layers {
+            report_layers.push(LayerRecord {
+                layer: r.usize_()?,
+                cost_curve: r.f64s()?,
+                wall_secs: r.f64()?,
+                gossip_rounds: r.usize_()?,
+                comm: r.snapshot()?,
+                consensus_disagreement: r.f64()?,
+            });
+        }
+        if !r.is_empty() {
+            return Err(Error::Checkpoint("trailing bytes after checkpoint".into()));
+        }
+        Ok(Self {
+            seed,
+            arch,
+            hyper,
+            opts,
+            growth,
+            dataset,
+            train_samples,
+            train_checksum,
+            layer,
+            phase,
+            weights,
+            ys,
+            states,
+            cost_curve,
+            gossip_rounds,
+            comm_before,
+            ledger_total,
+            sim_secs,
+            wall_base,
+            prev_layer_cost,
+            report_layers,
+        })
+    }
+
+    /// Write the checkpoint to a file (parent directories created).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, self.to_bytes())?;
+        Ok(())
+    }
+
+    /// Read a checkpoint from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let bytes = std::fs::read(path.as_ref())?;
+        Self::from_bytes(&bytes)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Minimal little-endian codec.
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn new() -> Self {
+        Self { buf: Vec::with_capacity(256) }
+    }
+    fn bytes(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn opt_f64(&mut self, v: Option<f64>) {
+        match v {
+            Some(x) => {
+                self.u8(1);
+                self.f64(x);
+            }
+            None => self.u8(0),
+        }
+    }
+    fn string(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.bytes(s.as_bytes());
+    }
+    fn f64s(&mut self, xs: &[f64]) {
+        self.u64(xs.len() as u64);
+        for &x in xs {
+            self.f64(x);
+        }
+    }
+    fn matrix(&mut self, m: &Matrix) {
+        self.u64(m.rows() as u64);
+        self.u64(m.cols() as u64);
+        for &x in m.as_slice() {
+            self.f64(x);
+        }
+    }
+    fn matrices(&mut self, ms: &[Matrix]) {
+        self.u64(ms.len() as u64);
+        for m in ms {
+            self.matrix(m);
+        }
+    }
+    fn snapshot(&mut self, s: &CommSnapshot) {
+        self.u64(s.messages);
+        self.u64(s.bytes);
+        self.u64(s.rounds);
+        self.u64(s.scalars);
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+    fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(Error::Checkpoint("truncated checkpoint".into()));
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.bytes(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.bytes(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+    fn usize_(&mut self) -> Result<usize> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| Error::Checkpoint(format!("count {v} overflows usize")))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        let b = self.bytes(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(f64::from_le_bytes(a))
+    }
+    fn opt_f64(&mut self) -> Result<Option<f64>> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.f64()?)),
+            t => Err(Error::Checkpoint(format!("bad option tag {t}"))),
+        }
+    }
+    fn string(&mut self) -> Result<String> {
+        let n = self.usize_()?;
+        let b = self.bytes(n)?;
+        String::from_utf8(b.to_vec())
+            .map_err(|_| Error::Checkpoint("non-utf8 string in checkpoint".into()))
+    }
+    fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.usize_()?;
+        if self.remaining() < n.saturating_mul(8) {
+            return Err(Error::Checkpoint("truncated f64 array".into()));
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f64()?);
+        }
+        Ok(out)
+    }
+    fn matrix(&mut self) -> Result<Matrix> {
+        let rows = self.usize_()?;
+        let cols = self.usize_()?;
+        let len = rows.saturating_mul(cols);
+        if self.remaining() < len.saturating_mul(8) {
+            return Err(Error::Checkpoint("truncated matrix payload".into()));
+        }
+        let mut data = Vec::with_capacity(len);
+        for _ in 0..len {
+            data.push(self.f64()?);
+        }
+        Matrix::from_vec(rows, cols, data)
+            .map_err(|e| Error::Checkpoint(format!("bad matrix in checkpoint: {e}")))
+    }
+    fn matrices(&mut self) -> Result<Vec<Matrix>> {
+        let n = self.usize_()?;
+        let mut out = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            out.push(self.matrix()?);
+        }
+        Ok(out)
+    }
+    fn snapshot(&mut self) -> Result<CommSnapshot> {
+        Ok(CommSnapshot {
+            messages: self.u64()?,
+            bytes: self.u64()?,
+            rounds: self.u64()?,
+            scalars: self.u64()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            seed: 42,
+            arch: SsfnArchitecture { input_dim: 8, num_classes: 3, hidden: 16, layers: 2 },
+            hyper: TrainHyper { mu0: 1e-2, mul: 1.0, admm_iterations: 30, eps: Some(6.0) },
+            opts: TrainOptions {
+                nodes: 2,
+                topology: Topology::Circular { nodes: 2, degree: 1 },
+                weight_rule: WeightRule::EqualNeighbor,
+                consensus: ConsensusMode::Gossip { delta: 1e-9 },
+                latency: LatencyModel::default(),
+                threads: 4,
+                record_cost_curve: true,
+            },
+            growth: Some(0.25),
+            dataset: "oracle-toy".into(),
+            train_samples: 120,
+            train_checksum: 0xABCD_EF01_2345_6789,
+            layer: 1,
+            phase: CkPhase::Iterate(7),
+            weights: vec![Matrix::from_fn(4, 3, |r, c| (r * 3 + c) as f64 * 0.1)],
+            ys: vec![
+                Matrix::from_fn(3, 5, |r, c| (r + c) as f64),
+                Matrix::from_fn(3, 5, |r, c| (r * c) as f64 + 0.5),
+            ],
+            states: vec![
+                NodeState {
+                    o: Matrix::from_fn(3, 3, |r, c| r as f64 - c as f64),
+                    lambda: Matrix::zeros(3, 3),
+                    z: Matrix::from_fn(3, 3, |_, _| 0.125),
+                },
+                NodeState::zeros(3, 3),
+            ],
+            cost_curve: vec![5.0, 4.0, 3.5],
+            gossip_rounds: 66,
+            comm_before: CommSnapshot { messages: 10, bytes: 80, rounds: 5, scalars: 10 },
+            ledger_total: CommSnapshot { messages: 20, bytes: 160, rounds: 10, scalars: 20 },
+            sim_secs: 1.25,
+            wall_base: 0.5,
+            prev_layer_cost: Some(5.5),
+            report_layers: vec![LayerRecord {
+                layer: 0,
+                cost_curve: vec![9.0, 8.0],
+                wall_secs: 0.25,
+                gossip_rounds: 33,
+                comm: CommSnapshot { messages: 10, bytes: 80, rounds: 5, scalars: 10 },
+                consensus_disagreement: 1e-9,
+            }],
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let ck = sample();
+        let bytes = ck.to_bytes();
+        let back = Checkpoint::from_bytes(&bytes).unwrap();
+        assert_eq!(back.seed, ck.seed);
+        assert_eq!(back.arch, ck.arch);
+        assert_eq!(back.hyper.mu0.to_bits(), ck.hyper.mu0.to_bits());
+        assert_eq!(back.hyper.eps, ck.hyper.eps);
+        assert_eq!(back.opts.nodes, ck.opts.nodes);
+        assert_eq!(back.opts.topology, ck.opts.topology);
+        assert_eq!(back.opts.consensus, ck.opts.consensus);
+        assert_eq!(back.opts.record_cost_curve, ck.opts.record_cost_curve);
+        assert_eq!(back.growth, ck.growth);
+        assert_eq!(back.train_checksum, ck.train_checksum);
+        assert_eq!(back.dataset(), "oracle-toy");
+        assert_eq!(back.layer(), 1);
+        assert_eq!(back.iteration(), Some(7));
+        assert_eq!(back.layers_completed(), 1);
+        assert_eq!(back.weights.len(), 1);
+        assert_eq!(back.weights[0].max_abs_diff(&ck.weights[0]), 0.0);
+        for (a, b) in back.ys.iter().zip(&ck.ys) {
+            assert_eq!(a.max_abs_diff(b), 0.0);
+        }
+        for (a, b) in back.states.iter().zip(&ck.states) {
+            assert_eq!(a.o.max_abs_diff(&b.o), 0.0);
+            assert_eq!(a.lambda.max_abs_diff(&b.lambda), 0.0);
+            assert_eq!(a.z.max_abs_diff(&b.z), 0.0);
+        }
+        assert_eq!(back.cost_curve, ck.cost_curve);
+        assert_eq!(back.gossip_rounds, ck.gossip_rounds);
+        assert_eq!(back.comm_before, ck.comm_before);
+        assert_eq!(back.ledger_total, ck.ledger_total);
+        assert_eq!(back.sim_secs.to_bits(), ck.sim_secs.to_bits());
+        assert_eq!(back.prev_layer_cost, ck.prev_layer_cost);
+        assert_eq!(back.report_layers.len(), 1);
+        assert_eq!(back.report_layers[0].cost_curve, vec![9.0, 8.0]);
+    }
+
+    #[test]
+    fn rejects_corrupt_input() {
+        let ck = sample();
+        let bytes = ck.to_bytes();
+        // Bad magic.
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(Checkpoint::from_bytes(&bad).is_err());
+        // Unsupported version.
+        let mut bad = bytes.clone();
+        bad[8] = 99;
+        assert!(Checkpoint::from_bytes(&bad).is_err());
+        // Truncations at every prefix length must error, never panic.
+        for cut in [0, 4, 8, 12, 40, bytes.len() / 2, bytes.len() - 1] {
+            assert!(Checkpoint::from_bytes(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+        // Trailing garbage.
+        let mut bad = bytes.clone();
+        bad.push(0);
+        assert!(Checkpoint::from_bytes(&bad).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let ck = sample();
+        let dir = std::env::temp_dir().join(format!("dssfn_ckpt_{}", std::process::id()));
+        let path = dir.join("sub/state.ckpt");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.seed(), 42);
+        assert_eq!(back.dataset(), ck.dataset());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn exact_phase_tags() {
+        for phase in [CkPhase::Prepare, CkPhase::Iterate(3), CkPhase::Advance] {
+            let mut ck = sample();
+            ck.phase = phase;
+            let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+            assert_eq!(back.phase, phase);
+        }
+    }
+}

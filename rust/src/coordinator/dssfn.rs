@@ -1,0 +1,698 @@
+//! The dSSFN coordinator as an incremental [`Algorithm`] state machine.
+//!
+//! This is the paper's Algorithm 1 cut at its natural seams: one
+//! [`Algorithm::advance`] call performs exactly one of
+//!
+//! * **prepare** — shard-local Grams built and factored for layer `l`
+//!   (parallel over nodes, intra-node threads per the budget),
+//! * **iterate** — one synchronous consensus-ADMM iteration
+//!   (O-update ‖ gossip averaging ‖ Z/Λ-update, optional cost eval),
+//! * **advance** — layer diagnostics, growth decision, weight build and
+//!   feature forward (or final-output freeze on the last layer).
+//!
+//! The operations and their order are exactly those of the legacy
+//! one-shot `train_task` loop, so driving this machine to completion is
+//! **bit-identical** to the historical behaviour — `train_task` itself
+//! is now a thin wrapper over this type, and
+//! `tests/coordinator_oracle.rs` pins the equivalence against the
+//! sequential `admm::solve_decentralized` oracle.
+//!
+//! [`DssfnAlgorithm::checkpoint`] snapshots the machine between any two
+//! `advance` calls; [`DssfnAlgorithm::restore`] rebuilds the derived
+//! state (shards, random matrices, Gram factors) deterministically and
+//! continues bit-identically — the oracle test checkpoints mid-layer,
+//! serializes, restores and compares every learned matrix at
+//! `max_abs_diff == 0.0`.
+
+use super::checkpoint::{Checkpoint, CkPhase};
+use super::{
+    default_threads, for_each_node, for_each_node_mut, ConsensusMode, ParallelismBudget,
+    TrainOptions,
+};
+use crate::admm::{LocalSolve, NodeState};
+use crate::data::{shard_uniform, ClassificationTask, Dataset};
+use crate::linalg::Matrix;
+use crate::metrics::{error_db, LayerRecord, TrainReport};
+use crate::network::{CommLedger, CommSnapshot, GossipEngine, MixingMatrix};
+use crate::runtime::ComputeBackend;
+use crate::session::{
+    Algorithm, AlgorithmOutput, SessionProgress, StepEvent, StopReason, TrainedModel,
+};
+use crate::ssfn::{build_weight, GrowthPolicy, RandomMatrices, SsfnArchitecture, TrainHyper};
+use crate::util::Stopwatch;
+use crate::{Error, Result};
+use std::sync::Arc;
+
+/// A task handle that is either borrowed (the legacy `train_task(&task)`
+/// call shape) or shared (the [`crate::session::SessionBuilder`] shape).
+pub enum TaskRef<'t> {
+    /// Borrowed from the caller for the session's lifetime.
+    Borrowed(&'t ClassificationTask),
+    /// Shared ownership (sessions built by the builder are `'static`).
+    Shared(Arc<ClassificationTask>),
+}
+
+impl TaskRef<'_> {
+    /// The underlying task.
+    pub fn get(&self) -> &ClassificationTask {
+        match self {
+            TaskRef::Borrowed(t) => t,
+            TaskRef::Shared(t) => t,
+        }
+    }
+}
+
+/// Cheap content fingerprint of the training data (Frobenius-norm bit
+/// patterns of inputs and targets, mixed). Name and sample count alone
+/// cannot distinguish the same dataset generated from a different seed;
+/// this catches that on restore instead of silently training on wrong
+/// data.
+fn task_checksum(task: &ClassificationTask) -> u64 {
+    // Both splits: the test set feeds the final report's accuracies, so
+    // a restored run must see the same test data too.
+    task.train.x.frobenius_norm_sq().to_bits()
+        ^ task.train.t.frobenius_norm_sq().to_bits().rotate_left(17)
+        ^ task.test.x.frobenius_norm_sq().to_bits().rotate_left(29)
+        ^ task.test.t.frobenius_norm_sq().to_bits().rotate_left(43)
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Prepare,
+    Iterate { k: usize },
+    Advance,
+    Done,
+}
+
+/// The decentralized SSFN trainer as a resumable state machine. Usually
+/// constructed through [`crate::session::SessionBuilder`]; construct
+/// directly (and wrap in a [`crate::session::TrainSession`]) when the
+/// task is borrowed or the backend is custom.
+pub struct DssfnAlgorithm<'t> {
+    arch: SsfnArchitecture,
+    hyper: TrainHyper,
+    opts: TrainOptions,
+    seed: u64,
+    backend: Arc<dyn ComputeBackend>,
+    task: TaskRef<'t>,
+    growth: Option<GrowthPolicy>,
+
+    threads: usize,
+    shards: Vec<Dataset>,
+    random: RandomMatrices,
+    ledger: Arc<CommLedger>,
+    engine: Option<GossipEngine>,
+
+    report: TrainReport,
+    sw: Stopwatch,
+    wall_base: f64,
+    ys: Vec<Matrix>,
+    weights: Vec<Matrix>,
+    final_o: Option<Matrix>,
+    prev_layer_cost: Option<f64>,
+
+    layer: usize,
+    phase: Phase,
+    solvers: Vec<Box<dyn LocalSolve>>,
+    states: Vec<NodeState>,
+    s_vals: Vec<Matrix>,
+    avg: Matrix,
+    cost_curve: Vec<f64>,
+    gossip_rounds: usize,
+    comm_before: CommSnapshot,
+    stop_reason: Option<StopReason>,
+}
+
+impl<'t> DssfnAlgorithm<'t> {
+    /// Validate the configuration and set up a fresh run (shards, random
+    /// matrices, network plumbing) without doing any layer work yet.
+    pub fn new(
+        arch: SsfnArchitecture,
+        hyper: TrainHyper,
+        opts: TrainOptions,
+        seed: u64,
+        backend: Arc<dyn ComputeBackend>,
+        task: TaskRef<'t>,
+        growth: Option<GrowthPolicy>,
+    ) -> Result<Self> {
+        arch.validate()?;
+        opts.validate()?;
+        let m = opts.nodes;
+        let total_threads = if opts.threads == 0 {
+            default_threads()
+        } else {
+            opts.threads
+        };
+        // Split the budget across the two parallelism axes: node fan-out
+        // first, leftover threads to intra-node kernels. Bit-exactness
+        // is preserved for every split — see ParallelismBudget.
+        let budget = ParallelismBudget::new(m, total_threads);
+        backend.set_intra_threads(budget.intra_threads);
+        let threads = budget.node_threads;
+
+        let shards: Vec<Dataset> = shard_uniform(&task.get().train, m)?;
+        let random = RandomMatrices::generate(&arch, seed)?;
+
+        // Network plumbing (only in gossip mode).
+        let ledger = Arc::new(CommLedger::new());
+        let engine = match opts.consensus {
+            ConsensusMode::Gossip { .. } => {
+                let mix = MixingMatrix::build(&opts.topology, opts.weight_rule)?;
+                Some(GossipEngine::new(mix, Arc::clone(&ledger), opts.latency))
+            }
+            ConsensusMode::Exact => None,
+        };
+
+        let report = TrainReport {
+            dataset: task.get().name.clone(),
+            mode: format!(
+                "dssfn({}, {}, {})",
+                opts.topology.describe(),
+                match opts.consensus {
+                    ConsensusMode::Exact => "exact-avg".to_string(),
+                    ConsensusMode::Gossip { delta } => format!("gossip δ={delta:.0e}"),
+                },
+                backend.name()
+            ),
+            ..Default::default()
+        };
+
+        // Per-node features, starting at the raw shard inputs.
+        let ys: Vec<Matrix> = shards.iter().map(|s| s.x.clone()).collect();
+
+        Ok(Self {
+            arch,
+            hyper,
+            opts,
+            seed,
+            backend,
+            task,
+            growth,
+            threads,
+            shards,
+            random,
+            ledger,
+            engine,
+            report,
+            sw: Stopwatch::new(),
+            wall_base: 0.0,
+            ys,
+            weights: Vec::with_capacity(arch.layers),
+            final_o: None,
+            prev_layer_cost: None,
+            layer: 0,
+            phase: Phase::Prepare,
+            solvers: Vec::new(),
+            states: Vec::new(),
+            s_vals: Vec::new(),
+            avg: Matrix::zeros(0, 0),
+            cost_curve: Vec::new(),
+            gossip_rounds: 0,
+            comm_before: CommSnapshot::default(),
+            stop_reason: None,
+        })
+    }
+
+    /// Rebuild a machine from a checkpoint. Derived state (shards,
+    /// random matrices, the current layer's Gram factorizations) is
+    /// recomputed deterministically; everything else is restored from
+    /// the snapshot, so the continued run is bit-identical to an
+    /// uninterrupted one.
+    pub fn restore(
+        ck: &Checkpoint,
+        task: TaskRef<'t>,
+        backend: Arc<dyn ComputeBackend>,
+    ) -> Result<Self> {
+        if task.get().name != ck.dataset {
+            return Err(Error::Checkpoint(format!(
+                "checkpoint was taken on dataset '{}', got task '{}'",
+                ck.dataset,
+                task.get().name
+            )));
+        }
+        if task.get().train.num_samples() as u64 != ck.train_samples {
+            return Err(Error::Checkpoint(format!(
+                "checkpoint expects {} training samples, task has {}",
+                ck.train_samples,
+                task.get().train.num_samples()
+            )));
+        }
+        if task_checksum(task.get()) != ck.train_checksum {
+            return Err(Error::Checkpoint(format!(
+                "task content differs from the checkpointed run (same name and \
+                 shape, different data — e.g. '{}' generated from another seed)",
+                ck.dataset
+            )));
+        }
+        let growth = ck
+            .growth
+            .map(|f| GrowthPolicy { min_relative_improvement: f });
+        let mut alg = Self::new(
+            ck.arch,
+            ck.hyper,
+            ck.opts.clone(),
+            ck.seed,
+            backend,
+            task,
+            growth,
+        )?;
+        // Structural validation beyond the codec: a corrupt or crafted
+        // checkpoint must fail here with Err, never panic mid-training.
+        let m = alg.opts.nodes;
+        if ck.layer as usize > ck.arch.layers {
+            return Err(Error::Checkpoint(format!(
+                "checkpoint layer {} exceeds architecture depth {}",
+                ck.layer, ck.arch.layers
+            )));
+        }
+        if ck.ys.len() != m {
+            return Err(Error::Checkpoint(format!(
+                "checkpoint carries {} feature matrices for M={m}",
+                ck.ys.len()
+            )));
+        }
+        if ck.weights.len() != ck.layer as usize {
+            return Err(Error::Checkpoint(format!(
+                "checkpoint carries {} weights at layer {} (expected one per completed layer)",
+                ck.weights.len(),
+                ck.layer
+            )));
+        }
+        alg.ledger.restore(&ck.ledger_total);
+        if let Some(eng) = &alg.engine {
+            eng.set_simulated_seconds(ck.sim_secs);
+        }
+        alg.report.layers = ck.report_layers.clone();
+        alg.ys = ck.ys.clone();
+        alg.weights = ck.weights.clone();
+        alg.prev_layer_cost = ck.prev_layer_cost;
+        alg.wall_base = ck.wall_base;
+        alg.layer = ck.layer as usize;
+        alg.cost_curve = ck.cost_curve.clone();
+        alg.gossip_rounds = ck.gossip_rounds as usize;
+        alg.comm_before = ck.comm_before;
+        match ck.phase {
+            CkPhase::Prepare => alg.phase = Phase::Prepare,
+            CkPhase::Iterate(k) => {
+                alg.rebuild_layer_transients(ck)?;
+                alg.phase = Phase::Iterate { k: k as usize };
+            }
+            CkPhase::Advance => {
+                alg.rebuild_layer_transients(ck)?;
+                alg.phase = Phase::Advance;
+            }
+        }
+        Ok(alg)
+    }
+
+    /// Override the growth (self-size-estimation) policy. Used by the
+    /// resume path to lower a [`crate::session::StopPolicy`] cost-plateau
+    /// clause onto the trainer, exactly as `SessionBuilder::build` does
+    /// for fresh sessions, so the flag means the same thing both ways.
+    pub fn set_growth(&mut self, policy: GrowthPolicy) {
+        self.growth = Some(policy);
+    }
+
+    /// Rebuild the mid-layer transient state a checkpoint does not carry
+    /// verbatim: the per-node solvers (re-derived from the restored
+    /// features, bit-identical) and the averaging scratch buffers.
+    fn rebuild_layer_transients(&mut self, ck: &Checkpoint) -> Result<()> {
+        let m = self.opts.nodes;
+        if ck.ys.len() != m || ck.states.len() != m {
+            return Err(Error::Checkpoint(format!(
+                "checkpoint carries {} feature / {} state matrices for M={m}",
+                ck.ys.len(),
+                ck.states.len()
+            )));
+        }
+        let q = self.arch.num_classes;
+        let feat_dim = self.ys[0].rows();
+        for st in &ck.states {
+            if st.z.shape() != (q, feat_dim) {
+                return Err(Error::Checkpoint(format!(
+                    "node state shape {:?} does not match layer shape ({q}, {feat_dim})",
+                    st.z.shape()
+                )));
+            }
+        }
+        let params = self.hyper.admm_params(self.layer, q);
+        params.validate()?;
+        let solvers = {
+            let backend = &self.backend;
+            let ys = &self.ys;
+            let shards = &self.shards;
+            for_each_node(m, self.threads, |i| {
+                backend.prepare_layer(&ys[i], &shards[i].t, params.mu)
+            })?
+        };
+        self.solvers = solvers;
+        self.states = ck.states.clone();
+        self.s_vals = (0..m).map(|_| Matrix::zeros(q, feat_dim)).collect();
+        self.avg = Matrix::zeros(q, feat_dim);
+        Ok(())
+    }
+
+    fn sim_comm_secs(&self) -> f64 {
+        self.engine
+            .as_ref()
+            .map(|e| e.simulated_seconds())
+            .unwrap_or(0.0)
+    }
+
+    /// Prepare phase: Gram + factor per node, iteration state allocated.
+    fn do_prepare(&mut self, events: &mut Vec<StepEvent>) -> Result<()> {
+        let m = self.opts.nodes;
+        let q = self.arch.num_classes;
+        self.comm_before = self.ledger.snapshot();
+        let params = self.hyper.admm_params(self.layer, q);
+        params.validate()?;
+        let feat_dim = self.ys[0].rows();
+        let solvers = {
+            let backend = &self.backend;
+            let ys = &self.ys;
+            let shards = &self.shards;
+            for_each_node(m, self.threads, |i| {
+                backend.prepare_layer(&ys[i], &shards[i].t, params.mu)
+            })?
+        };
+        self.solvers = solvers;
+        // All iteration buffers are preallocated here; the iterate phase
+        // writes into them in place (per-node workspaces live inside the
+        // solvers, built during prepare).
+        self.states = (0..m).map(|_| NodeState::zeros(q, feat_dim)).collect();
+        self.s_vals = (0..m).map(|_| Matrix::zeros(q, feat_dim)).collect();
+        self.avg = Matrix::zeros(q, feat_dim);
+        self.cost_curve = Vec::new();
+        self.gossip_rounds = 0;
+        self.phase = Phase::Iterate { k: 0 };
+        events.push(StepEvent::LayerPrepared { layer: self.layer, feat_dim });
+        Ok(())
+    }
+
+    /// One synchronous consensus-ADMM iteration — the exact operation
+    /// sequence of the legacy inner loop.
+    fn do_iterate(&mut self, k: usize, events: &mut Vec<StepEvent>) -> Result<()> {
+        let m = self.opts.nodes;
+        let q = self.arch.num_classes;
+        let params = self.hyper.admm_params(self.layer, q);
+
+        // (1) O-update, fanned out, written into each node's state.
+        {
+            let solvers = &self.solvers;
+            for_each_node_mut(&mut self.states, self.threads, |i, st| {
+                let NodeState { o, lambda, z } = st;
+                solvers[i].o_update_into(z, lambda, o)
+            })?;
+        }
+        // (2) Averaging of O + Λ.
+        for (sv, st) in self.s_vals.iter_mut().zip(&self.states) {
+            sv.copy_from(&st.o)?;
+            sv.axpy(1.0, &st.lambda)?;
+        }
+        let mut gossip_event: Option<(usize, u64)> = None;
+        match (&self.opts.consensus, &self.engine) {
+            (ConsensusMode::Exact, _) => {
+                GossipEngine::exact_average_into(&self.s_vals, &mut self.avg)?;
+                for sv in self.s_vals.iter_mut() {
+                    sv.copy_from(&self.avg)?;
+                }
+            }
+            (ConsensusMode::Gossip { delta }, Some(eng)) => {
+                let (rounds, bytes) =
+                    eng.consensus_average_measured(&mut self.s_vals, *delta)?;
+                self.gossip_rounds += rounds;
+                gossip_event = Some((rounds, bytes));
+            }
+            (ConsensusMode::Gossip { .. }, None) => unreachable!(),
+        }
+        // (3) Z-projection + dual ascent.
+        for (st, sv) in self.states.iter_mut().zip(&self.s_vals) {
+            st.z.copy_from(sv)?;
+            st.z.project_frobenius(params.eps);
+            st.lambda.axpy(1.0, &st.o)?;
+            st.lambda.axpy(-1.0, &st.z)?;
+        }
+        // Cost recording (same condition and order as the legacy loop).
+        let mut cost = None;
+        if self.opts.record_cost_curve {
+            let costs: Vec<f64> = {
+                let solvers = &self.solvers;
+                let states = &self.states;
+                for_each_node(m, self.threads, |i| solvers[i].cost(&states[i].z))?
+            };
+            let c: f64 = costs.iter().sum();
+            self.cost_curve.push(c);
+            cost = Some(c);
+        }
+        // Consensus-gap diagnostic (read-only; never perturbs FP state).
+        // Gated on the same knob as the cost curve so throughput runs
+        // (record_cost_curve = false, e.g. fig4) pay no per-iteration
+        // O(M·Q·n) scan; the per-layer disagreement in LayerRecord is
+        // still always computed once, in the advance phase.
+        let gap = if self.opts.record_cost_curve {
+            let z0 = &self.states[0].z;
+            self.states
+                .iter()
+                .map(|s| s.z.max_abs_diff(z0))
+                .fold(0.0, f64::max)
+        } else {
+            0.0
+        };
+
+        if let Some((rounds, bytes)) = gossip_event {
+            events.push(StepEvent::GossipRound {
+                layer: self.layer,
+                iteration: k,
+                rounds,
+                bytes,
+            });
+        }
+        events.push(StepEvent::AdmmIteration {
+            layer: self.layer,
+            iteration: k,
+            cost,
+            consensus_gap: gap,
+        });
+
+        // A budget stop truncates the layer after the current iteration;
+        // Z is feasible at every iterate, so the model stays well-formed.
+        // Layer 0 always completes: an SSFN needs at least one structured
+        // weight, so the earliest truncation point is inside layer 1.
+        if k + 1 >= params.iterations || (self.stop_reason.is_some() && self.layer >= 1) {
+            self.phase = Phase::Advance;
+        } else {
+            self.phase = Phase::Iterate { k: k + 1 };
+        }
+        Ok(())
+    }
+
+    /// Advance phase: diagnostics, growth/stop decision, weight build and
+    /// feature forward (or final-output freeze on the last layer).
+    fn do_advance(&mut self, events: &mut Vec<StepEvent>) -> Result<()> {
+        let m = self.opts.nodes;
+
+        // Consensus diagnostics.
+        let z0 = self.states[0].z.clone();
+        let disagreement = self
+            .states
+            .iter()
+            .map(|s| s.z.max_abs_diff(&z0))
+            .fold(0.0, f64::max);
+
+        // Global layer cost (for the record, and for size estimation).
+        let layer_cost = match self.cost_curve.last().copied() {
+            Some(c) => c,
+            None => {
+                let costs: Vec<f64> = {
+                    let solvers = &self.solvers;
+                    let states = &self.states;
+                    for_each_node(m, self.threads, |i| solvers[i].cost(&states[i].z))?
+                };
+                costs.iter().sum()
+            }
+        };
+        // Self-size estimation: stop growing once the cost flattens.
+        let stop_growth = match (self.growth, self.prev_layer_cost) {
+            (Some(p), Some(prev)) => p.should_stop(prev, layer_cost),
+            _ => false,
+        };
+        self.prev_layer_cost = Some(layer_cost);
+
+        // Budget stops bind from layer 1 on (see do_iterate): the model
+        // needs at least one structured weight and a Q×n output.
+        let budget_stop = self.stop_reason.is_some() && self.layer >= 1;
+        let last_layer = self.layer == self.arch.layers || stop_growth || budget_stop;
+        if !last_layer {
+            let r_next = self.random.layer(self.layer + 1);
+            let ws: Vec<Matrix> = {
+                let states = &self.states;
+                for_each_node(m, self.threads, |i| build_weight(&states[i].z, r_next))?
+            };
+            let new_ys: Vec<Matrix> = {
+                let backend = &self.backend;
+                let ys = &self.ys;
+                for_each_node(m, self.threads, |i| backend.layer_forward(&ws[i], &ys[i]))?
+            };
+            self.ys = new_ys;
+            self.weights.push(ws.into_iter().next().expect("m >= 1"));
+        } else {
+            self.final_o = Some(z0);
+        }
+
+        let layer = self.layer;
+        self.report.layers.push(LayerRecord {
+            layer,
+            cost_curve: std::mem::take(&mut self.cost_curve),
+            wall_secs: self.sw.split(&format!("layer{layer}")),
+            gossip_rounds: self.gossip_rounds,
+            comm: self.ledger.snapshot().since(&self.comm_before),
+            consensus_disagreement: disagreement,
+        });
+        events.push(StepEvent::LayerAdvanced { layer, cost: layer_cost, last: last_layer });
+
+        // Drop the per-layer transients eagerly.
+        self.solvers = Vec::new();
+        self.states = Vec::new();
+        self.s_vals = Vec::new();
+        self.avg = Matrix::zeros(0, 0);
+        self.gossip_rounds = 0;
+
+        if last_layer {
+            self.phase = Phase::Done;
+            let reason = if budget_stop {
+                self.stop_reason.unwrap_or(StopReason::Requested)
+            } else if stop_growth {
+                StopReason::GrowthStopped
+            } else {
+                StopReason::Completed
+            };
+            events.push(StepEvent::Finished { reason });
+        } else {
+            self.layer += 1;
+            self.phase = Phase::Prepare;
+        }
+        Ok(())
+    }
+}
+
+impl Algorithm for DssfnAlgorithm<'_> {
+    fn describe(&self) -> String {
+        self.report.mode.clone()
+    }
+
+    fn is_done(&self) -> bool {
+        self.phase == Phase::Done
+    }
+
+    fn advance(&mut self, events: &mut Vec<StepEvent>) -> Result<()> {
+        match self.phase {
+            Phase::Prepare => self.do_prepare(events),
+            Phase::Iterate { k } => self.do_iterate(k, events),
+            Phase::Advance => self.do_advance(events),
+            Phase::Done => Err(Error::Config("dssfn session already finished".into())),
+        }
+    }
+
+    fn finalize(&mut self) -> Result<AlgorithmOutput> {
+        if self.phase != Phase::Done {
+            return Err(Error::Config(
+                "finalize called before the session finished".into(),
+            ));
+        }
+        let final_o = self
+            .final_o
+            .take()
+            .ok_or_else(|| Error::Config("session already finalized".into()))?;
+        let arch = SsfnArchitecture {
+            layers: self.weights.len(),
+            ..self.arch
+        };
+        let weights = std::mem::take(&mut self.weights);
+        let model = crate::ssfn::SsfnModel::new(arch, weights, final_o)?;
+        let (train_acc, test_acc, err_db) = {
+            let task = self.task.get();
+            (
+                model.accuracy(&task.train)?,
+                model.accuracy(&task.test)?,
+                error_db(
+                    model.residual_sq(&task.train)?,
+                    task.train.t.frobenius_norm_sq(),
+                ),
+            )
+        };
+        self.report.train_accuracy = train_acc;
+        self.report.test_accuracy = test_acc;
+        self.report.train_error_db = err_db;
+        self.report.wall_secs = self.wall_base + self.sw.elapsed();
+        self.report.comm_total = self.ledger.snapshot();
+        self.report.simulated_comm_secs = self.sim_comm_secs();
+        let report = std::mem::take(&mut self.report);
+        Ok(AlgorithmOutput {
+            model: TrainedModel::Ssfn(model),
+            report,
+        })
+    }
+
+    fn progress(&self) -> SessionProgress {
+        SessionProgress {
+            comm_bytes: self.ledger.snapshot().bytes,
+            simulated_secs: self.sim_comm_secs() + self.wall_base + self.sw.elapsed(),
+        }
+    }
+
+    fn request_stop(&mut self, reason: StopReason) {
+        if self.stop_reason.is_none() && self.phase != Phase::Done {
+            self.stop_reason = Some(reason);
+        }
+    }
+
+    fn adopt_cost_plateau(&mut self, min_relative_improvement: f64) -> bool {
+        // Lower the clause onto the growth policy (exact
+        // train_task_with_growth semantics). An explicitly configured
+        // growth policy takes precedence but still handles the clause.
+        if self.growth.is_none() {
+            self.growth = Some(GrowthPolicy { min_relative_improvement });
+        }
+        true
+    }
+
+    fn checkpoint(&self) -> Result<Checkpoint> {
+        let phase = match self.phase {
+            Phase::Prepare => CkPhase::Prepare,
+            Phase::Iterate { k } => CkPhase::Iterate(k as u64),
+            Phase::Advance => CkPhase::Advance,
+            Phase::Done => {
+                return Err(Error::Checkpoint(
+                    "session already finished; nothing left to checkpoint".into(),
+                ))
+            }
+        };
+        let states = match self.phase {
+            Phase::Prepare => Vec::new(),
+            _ => self.states.clone(),
+        };
+        Ok(Checkpoint {
+            seed: self.seed,
+            arch: self.arch,
+            hyper: self.hyper,
+            opts: self.opts.clone(),
+            growth: self.growth.map(|g| g.min_relative_improvement),
+            dataset: self.report.dataset.clone(),
+            train_samples: self.task.get().train.num_samples() as u64,
+            train_checksum: task_checksum(self.task.get()),
+            layer: self.layer as u64,
+            phase,
+            weights: self.weights.clone(),
+            ys: self.ys.clone(),
+            states,
+            cost_curve: self.cost_curve.clone(),
+            gossip_rounds: self.gossip_rounds as u64,
+            comm_before: self.comm_before,
+            ledger_total: self.ledger.snapshot(),
+            sim_secs: self.sim_comm_secs(),
+            wall_base: self.wall_base + self.sw.elapsed(),
+            prev_layer_cost: self.prev_layer_cost,
+            report_layers: self.report.layers.clone(),
+        })
+    }
+}

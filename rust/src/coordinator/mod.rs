@@ -23,29 +23,53 @@
 //!              Y_{l+1,m} = g(W_{l+1} Y_{l,m})        [backend kernel]
 //! ```
 //!
+//! ## Session lifecycle (the step API)
+//!
+//! Since the `TrainSession` redesign this loop lives in
+//! [`DssfnAlgorithm`], an incremental state machine driven through
+//! [`crate::session::TrainSession`]: each `step()` performs one prepare /
+//! iterate / advance unit and yields typed
+//! [`crate::session::StepEvent`]s, so callers can observe, budget
+//! ([`crate::session::StopPolicy`]), pause and cancel training
+//! mid-flight. [`DssfnAlgorithm::checkpoint`] snapshots the full machine
+//! into a serializable [`Checkpoint`]; [`resume_session`] restores it
+//! and continues **bit-identically** — resumed runs produce exactly the
+//! model an uninterrupted run would (pinned by
+//! `tests/coordinator_oracle.rs`).
+//!
+//! ## Legacy entry points
+//!
+//! [`DecentralizedTrainer::train_task`] (and `train_task_with_growth` /
+//! `run_config`) remain the one-shot convenience path. They are now thin
+//! wrappers that build a default session and run it to completion —
+//! bit-identical to the historical behaviour. New code that wants
+//! progress events, budgets or checkpoints should construct sessions via
+//! [`crate::session::SessionBuilder`] (or
+//! [`crate::config::ExperimentConfig::session_builder`]); the one-shot
+//! wrappers stay supported as the stable simple API.
+//!
 //! The thread budget is split by [`ParallelismBudget`]: node fan-out
 //! first, and when `M < threads` the leftover threads go to the
 //! per-node Gram build (`set_intra_threads` on the backend). Every
 //! per-node computation is bit-identical regardless of the split, so
 //! the threaded path produces exactly the sequential oracle's output
-//! (`admm::solve_decentralized`) — pinned by
-//! `tests/coordinator_oracle.rs`.
+//! (`admm::solve_decentralized`).
 
+mod checkpoint;
+mod dssfn;
 mod pool;
 
+pub use checkpoint::Checkpoint;
+pub use dssfn::{DssfnAlgorithm, TaskRef};
 pub use pool::{default_threads, for_each_node, for_each_node_mut, ParallelismBudget};
 
-use crate::admm::{LocalSolve, NodeState};
 use crate::config::ExperimentConfig;
-use crate::data::{shard_uniform, ClassificationTask, Dataset};
-use crate::linalg::Matrix;
-use crate::metrics::{error_db, LayerRecord, TrainReport};
-use crate::network::{
-    CommLedger, GossipEngine, LatencyModel, MixingMatrix, Topology, WeightRule,
-};
+use crate::data::ClassificationTask;
+use crate::metrics::TrainReport;
+use crate::network::{LatencyModel, Topology, WeightRule};
 use crate::runtime::{ComputeBackend, NativeBackend};
-use crate::ssfn::{build_weight, RandomMatrices, SsfnArchitecture, SsfnModel, TrainHyper};
-use crate::util::Stopwatch;
+use crate::session::TrainSession;
+use crate::ssfn::{SsfnArchitecture, SsfnModel, TrainHyper};
 use crate::{Error, Result};
 use std::sync::Arc;
 
@@ -123,7 +147,45 @@ impl TrainOptions {
     }
 }
 
+/// Restore a checkpointed dSSFN session on the native backend. The
+/// caller supplies the task (checkpoints carry a fingerprint, not the
+/// data); the resumed session continues bit-identically. For a custom
+/// backend, use [`DssfnAlgorithm::restore`] directly — checkpoints do
+/// not record which backend produced them, so matching numerics on
+/// resume is the caller's responsibility.
+pub fn resume_session<'t>(
+    ck: &Checkpoint,
+    task: &'t ClassificationTask,
+) -> Result<TrainSession<'t>> {
+    resume_session_with_policy(ck, task, crate::session::StopPolicy::none())
+}
+
+/// [`resume_session`] with a [`crate::session::StopPolicy`]. Like every
+/// session construction path, the policy's cost-plateau clause is
+/// lowered onto the trainer's growth policy inside
+/// [`TrainSession::with_policy`], so budgets and plateau flags mean the
+/// same thing on fresh and resumed runs (bit-identical stop points,
+/// `GrowthStopped` reason; a growth policy recorded in the checkpoint
+/// takes precedence).
+pub fn resume_session_with_policy<'t>(
+    ck: &Checkpoint,
+    task: &'t ClassificationTask,
+    policy: crate::session::StopPolicy,
+) -> Result<TrainSession<'t>> {
+    let alg = DssfnAlgorithm::restore(
+        ck,
+        TaskRef::Borrowed(task),
+        Arc::new(NativeBackend::new()),
+    )?;
+    TrainSession::from_algorithm(Box::new(alg)).with_policy(policy)
+}
+
 /// Trains an SSFN across `M` decentralized workers.
+///
+/// This is the stable one-shot API: every call builds a default
+/// [`TrainSession`] over a [`DssfnAlgorithm`] and runs it to completion,
+/// bit-identical to the pre-session behaviour. Use the session API
+/// directly for events, budgets and checkpoints.
 pub struct DecentralizedTrainer {
     arch: SsfnArchitecture,
     hyper: TrainHyper,
@@ -179,6 +241,29 @@ impl DecentralizedTrainer {
         &self.opts
     }
 
+    /// Build the trainer's configuration into a session algorithm over a
+    /// borrowed task (the session is tied to the task's lifetime).
+    pub fn session<'t>(&self, task: &'t ClassificationTask) -> Result<TrainSession<'t>> {
+        self.session_impl(task, None)
+    }
+
+    fn session_impl<'t>(
+        &self,
+        task: &'t ClassificationTask,
+        policy: Option<crate::ssfn::GrowthPolicy>,
+    ) -> Result<TrainSession<'t>> {
+        let alg = DssfnAlgorithm::new(
+            self.arch,
+            self.hyper,
+            self.opts.clone(),
+            self.seed,
+            Arc::clone(&self.backend),
+            TaskRef::Borrowed(task),
+            policy,
+        )?;
+        Ok(TrainSession::from_algorithm(Box::new(alg)))
+    }
+
     /// Train on a task. Returns node 0's model and the full report.
     pub fn train_task(&self, task: &ClassificationTask) -> Result<(SsfnModel, TrainReport)> {
         self.train_task_impl(task, None)
@@ -203,190 +288,9 @@ impl DecentralizedTrainer {
         task: &ClassificationTask,
         policy: Option<crate::ssfn::GrowthPolicy>,
     ) -> Result<(SsfnModel, TrainReport)> {
-        let m = self.opts.nodes;
-        let q = self.arch.num_classes;
-        let total_threads = if self.opts.threads == 0 {
-            default_threads()
-        } else {
-            self.opts.threads
-        };
-        // Split the budget across the two parallelism axes: node fan-out
-        // first, leftover threads to intra-node kernels (the per-node
-        // Gram build of the prepare phase). Bit-exactness is preserved
-        // for every split — see ParallelismBudget.
-        let budget = ParallelismBudget::new(m, total_threads);
-        let threads = budget.node_threads;
-        self.backend.set_intra_threads(budget.intra_threads);
-
-        let shards: Vec<Dataset> = shard_uniform(&task.train, m)?;
-        let random = RandomMatrices::generate(&self.arch, self.seed)?;
-
-        // Network plumbing (only in gossip mode).
-        let ledger = Arc::new(CommLedger::new());
-        let engine = match self.opts.consensus {
-            ConsensusMode::Gossip { .. } => {
-                let mix = MixingMatrix::build(&self.opts.topology, self.opts.weight_rule)?;
-                Some(GossipEngine::new(
-                    mix,
-                    Arc::clone(&ledger),
-                    self.opts.latency,
-                ))
-            }
-            ConsensusMode::Exact => None,
-        };
-
-        let mut report = TrainReport {
-            dataset: task.name.clone(),
-            mode: format!(
-                "dssfn({}, {}, {})",
-                self.opts.topology.describe(),
-                match self.opts.consensus {
-                    ConsensusMode::Exact => "exact-avg".to_string(),
-                    ConsensusMode::Gossip { delta } => format!("gossip δ={delta:.0e}"),
-                },
-                self.backend.name()
-            ),
-            ..Default::default()
-        };
-
-        let mut sw = Stopwatch::new();
-        // Per-node features, starting at the raw shard inputs.
-        let mut ys: Vec<Matrix> = shards.iter().map(|s| s.x.clone()).collect();
-        // Node 0's weight stack (the reported model).
-        let mut weights: Vec<Matrix> = Vec::with_capacity(self.arch.layers);
-        let mut final_o: Option<Matrix> = None;
-        let mut prev_layer_cost: Option<f64> = None;
-
-        for l in 0..=self.arch.layers {
-            let comm_before = ledger.snapshot();
-            let params = self.hyper.admm_params(l, q);
-            params.validate()?;
-            let feat_dim = ys[0].rows();
-
-            // ---- prepare phase (parallel): Gram + factor per node ----
-            let backend = &self.backend;
-            let solvers: Vec<Box<dyn LocalSolve>> = for_each_node(m, threads, |i| {
-                backend.prepare_layer(&ys[i], &shards[i].t, params.mu)
-            })?;
-
-            // ---- ADMM loop ----
-            // All iteration buffers are preallocated here; the loop body
-            // itself writes into node state in place (the per-node
-            // workspaces live inside the solvers, built in prepare).
-            let mut states: Vec<NodeState> =
-                (0..m).map(|_| NodeState::zeros(q, feat_dim)).collect();
-            let mut s_vals: Vec<Matrix> = (0..m).map(|_| Matrix::zeros(q, feat_dim)).collect();
-            let mut avg = Matrix::zeros(q, feat_dim);
-            let mut cost_curve = Vec::new();
-            let mut gossip_rounds = 0usize;
-
-            for _k in 0..params.iterations {
-                // O-update, fanned out, written into each node's state.
-                for_each_node_mut(&mut states, threads, |i, st| {
-                    let NodeState { o, lambda, z } = st;
-                    solvers[i].o_update_into(z, lambda, o)
-                })?;
-                // Averaging of O + Λ.
-                for (sv, st) in s_vals.iter_mut().zip(&states) {
-                    sv.copy_from(&st.o)?;
-                    sv.axpy(1.0, &st.lambda)?;
-                }
-                match (&self.opts.consensus, &engine) {
-                    (ConsensusMode::Exact, _) => {
-                        GossipEngine::exact_average_into(&s_vals, &mut avg)?;
-                        for sv in s_vals.iter_mut() {
-                            sv.copy_from(&avg)?;
-                        }
-                    }
-                    (ConsensusMode::Gossip { delta }, Some(eng)) => {
-                        gossip_rounds += eng.consensus_average(&mut s_vals, *delta)?;
-                    }
-                    (ConsensusMode::Gossip { .. }, None) => unreachable!(),
-                }
-                // Z-projection + dual ascent.
-                for (st, sv) in states.iter_mut().zip(&s_vals) {
-                    st.z.copy_from(sv)?;
-                    st.z.project_frobenius(params.eps);
-                    st.lambda.axpy(1.0, &st.o)?;
-                    st.lambda.axpy(-1.0, &st.z)?;
-                }
-                if self.opts.record_cost_curve {
-                    let costs: Vec<f64> =
-                        for_each_node(m, threads, |i| solvers[i].cost(&states[i].z))?;
-                    cost_curve.push(costs.iter().sum());
-                }
-            }
-
-            // Consensus diagnostics.
-            let z0 = states[0].z.clone();
-            let disagreement = states
-                .iter()
-                .map(|s| s.z.max_abs_diff(&z0))
-                .fold(0.0, f64::max);
-
-            // Global layer cost (for the record, and for size estimation).
-            let layer_cost = match cost_curve.last().copied() {
-                Some(c) => c,
-                None => {
-                    let costs: Vec<f64> =
-                        for_each_node(m, threads, |i| solvers[i].cost(&states[i].z))?;
-                    costs.iter().sum()
-                }
-            };
-            // Self-size estimation: stop growing once the cost flattens.
-            let stop_growth = match (policy, prev_layer_cost) {
-                (Some(p), Some(prev)) => p.should_stop(prev, layer_cost),
-                _ => false,
-            };
-            prev_layer_cost = Some(layer_cost);
-
-            // ---- advance phase: build W_{l+1} per node, forward ----
-            let last_layer = l == self.arch.layers || stop_growth;
-            if !last_layer {
-                let r_next = random.layer(l + 1);
-                let ws: Vec<Matrix> =
-                    for_each_node(m, threads, |i| build_weight(&states[i].z, r_next))?;
-                let new_ys: Vec<Matrix> = for_each_node(m, threads, |i| {
-                    backend.layer_forward(&ws[i], &ys[i])
-                })?;
-                ys = new_ys;
-                weights.push(ws.into_iter().next().expect("m >= 1"));
-            } else {
-                final_o = Some(z0);
-            }
-
-            report.layers.push(LayerRecord {
-                layer: l,
-                cost_curve,
-                wall_secs: sw.split(&format!("layer{l}")),
-                gossip_rounds,
-                comm: ledger.snapshot().since(&comm_before),
-                consensus_disagreement: disagreement,
-            });
-            if last_layer {
-                break;
-            }
-        }
-
-        let arch = crate::ssfn::SsfnArchitecture {
-            layers: weights.len(),
-            ..self.arch
-        };
-        let model = SsfnModel::new(
-            arch,
-            weights,
-            final_o.expect("layer loop ran"),
-        )?;
-        report.train_accuracy = model.accuracy(&task.train)?;
-        report.test_accuracy = model.accuracy(&task.test)?;
-        report.train_error_db = error_db(
-            model.residual_sq(&task.train)?,
-            task.train.t.frobenius_norm_sq(),
-        );
-        report.wall_secs = sw.elapsed();
-        report.comm_total = ledger.snapshot();
-        report.simulated_comm_secs = engine.map(|e| e.simulated_seconds()).unwrap_or(0.0);
-        Ok((model, report))
+        let session = self.session_impl(task, policy)?;
+        let (model, report) = session.run_to_completion()?;
+        Ok((model.into_ssfn()?, report))
     }
 
     /// One-stop entrypoint: generate the dataset named by `cfg`, build a
@@ -410,6 +314,7 @@ impl DecentralizedTrainer {
 mod tests {
     use super::*;
     use crate::data::SynthClassification;
+    use crate::session::{StepEvent, StopPolicy, StopReason};
     use crate::ssfn::CentralizedTrainer;
 
     fn toy_task() -> ClassificationTask {
@@ -587,6 +492,13 @@ mod tests {
         o3.topology = Topology::Circular { nodes: 0, degree: 1 };
         assert!(o3.validate().is_err());
         assert!(TrainOptions::paper_default(4).validate().is_ok());
+        // Gossip delta edge values.
+        let mut o4 = opts(4, 1);
+        o4.consensus = ConsensusMode::Gossip { delta: 0.0 };
+        assert!(o4.validate().is_err());
+        let mut o5 = opts(4, 1);
+        o5.consensus = ConsensusMode::Gossip { delta: 1.0 };
+        assert!(o5.validate().is_err());
     }
 
     #[test]
@@ -627,5 +539,99 @@ mod tests {
         for w in finals.windows(2) {
             assert!(w[1] <= w[0] * 1.05 + 1e-6, "costs {finals:?}");
         }
+    }
+
+    #[test]
+    fn session_emits_structured_event_stream() {
+        let task = toy_task();
+        let trainer = DecentralizedTrainer::new(arch(), hyper(5), opts(4, 1), 5).unwrap();
+        let mut session = trainer.session(&task).unwrap();
+        let mut events = Vec::new();
+        while let Some(ev) = session.step().unwrap() {
+            events.push(ev);
+        }
+        // 4 layer records (L=3 plus the input solve), K=5 iterations each.
+        let prepared = events
+            .iter()
+            .filter(|e| matches!(e, StepEvent::LayerPrepared { .. }))
+            .count();
+        let iters = events
+            .iter()
+            .filter(|e| matches!(e, StepEvent::AdmmIteration { .. }))
+            .count();
+        let gossips = events
+            .iter()
+            .filter(|e| matches!(e, StepEvent::GossipRound { .. }))
+            .count();
+        let advanced = events
+            .iter()
+            .filter(|e| matches!(e, StepEvent::LayerAdvanced { .. }))
+            .count();
+        assert_eq!(prepared, 4);
+        assert_eq!(iters, 4 * 5);
+        assert_eq!(gossips, 4 * 5, "every gossip-mode iteration averages once");
+        assert_eq!(advanced, 4);
+        assert_eq!(
+            events.last(),
+            Some(&StepEvent::Finished { reason: StopReason::Completed })
+        );
+        // Costs are recorded and the consensus gap is tight by the end.
+        match events[events.len() - 3] {
+            StepEvent::AdmmIteration { cost, consensus_gap, .. } => {
+                assert!(cost.is_some());
+                assert!(consensus_gap < 1e-6);
+            }
+            ref other => panic!("expected the last AdmmIteration, got {other:?}"),
+        }
+        let (model, report) = session.finish().unwrap();
+        let model = model.into_ssfn().unwrap();
+        assert_eq!(model.weights().len(), 3);
+        assert_eq!(report.layers.len(), 4);
+    }
+
+    #[test]
+    fn session_run_to_completion_is_bit_identical_to_train_task() {
+        let task = toy_task();
+        let trainer = DecentralizedTrainer::new(arch(), hyper(25), opts(4, 1), 7).unwrap();
+        let (m1, r1) = trainer.train_task(&task).unwrap();
+        let session = trainer.session(&task).unwrap();
+        let (m2, r2) = session.run_to_completion().unwrap();
+        let m2 = m2.into_ssfn().unwrap();
+        assert_eq!(m1.output().max_abs_diff(m2.output()), 0.0);
+        for (a, b) in m1.weights().iter().zip(m2.weights()) {
+            assert_eq!(a.max_abs_diff(b), 0.0);
+        }
+        assert_eq!(r1.full_cost_curve(), r2.full_cost_curve());
+        assert_eq!(r1.comm_total, r2.comm_total);
+        assert_eq!(r1.total_gossip_rounds(), r2.total_gossip_rounds());
+    }
+
+    #[test]
+    fn byte_budget_truncates_training_with_valid_model() {
+        let task = toy_task();
+        let trainer = DecentralizedTrainer::new(arch(), hyper(30), opts(4, 1), 5).unwrap();
+        // First measure one full run's traffic, then budget well below it.
+        let (_, full) = trainer.train_task(&task).unwrap();
+        let budget = full.comm_total.bytes / 4;
+        let session = trainer
+            .session(&task)
+            .unwrap()
+            .with_policy(StopPolicy::none().with_max_comm_bytes(budget))
+            .unwrap();
+        let mut session = session;
+        let mut reason = None;
+        while let Some(ev) = session.step().unwrap() {
+            if let StepEvent::Finished { reason: r } = ev {
+                reason = Some(r);
+            }
+        }
+        assert_eq!(reason, Some(StopReason::BudgetBytes));
+        let (model, report) = session.finish().unwrap();
+        let model = model.into_ssfn().unwrap();
+        // The truncated model is still a valid SSFN that predicts.
+        assert!(report.layers.len() < full.layers.len());
+        assert!(model.accuracy(&task.train).unwrap() > 0.3);
+        // The budget bound the traffic to within one layer's slack.
+        assert!(report.comm_total.bytes < full.comm_total.bytes);
     }
 }

@@ -27,7 +27,37 @@
 //!   CPU client (`xla` crate) and executes them from the L3 hot path. A
 //!   bit-portable native `f64` path ([`linalg`]) doubles as the oracle.
 //!
-//! ## Quick start
+//! ## Quick start — the session API
+//!
+//! Training is a drivable state machine: build a [`session::TrainSession`]
+//! (fluently, or by lowering an [`ExperimentConfig`]), then step it for
+//! typed events or run it to completion:
+//!
+//! ```no_run
+//! use dssfn::session::SessionBuilder;
+//!
+//! let session = SessionBuilder::new()
+//!     .dataset("satimage-small")
+//!     .seed(7)
+//!     .build()
+//!     .unwrap();
+//! let (_model, report) = session.run_to_completion().unwrap();
+//! println!("test accuracy = {:.2}%", 100.0 * report.test_accuracy);
+//! ```
+//!
+//! Sessions can be observed ([`session::TrainObserver`]), budgeted
+//! ([`session::StopPolicy`]: simulated seconds, communicated bytes,
+//! cost plateau), checkpointed mid-layer
+//! ([`coordinator::Checkpoint`]) and resumed **bit-identically**
+//! ([`coordinator::resume_session`]). The dSSFN trainer, the
+//! single-layer ADMM oracle and the DGD / backprop-MLP baselines all
+//! implement one [`session::Algorithm`] trait, so the CLI, benches and
+//! examples drive every method through the same loop.
+//!
+//! ## Quick start — legacy one-shot path
+//!
+//! The pre-session entry points remain supported (they now wrap a
+//! default session and are bit-identical to the historical behaviour):
 //!
 //! ```no_run
 //! use dssfn::config::ExperimentConfig;
@@ -54,12 +84,18 @@ pub mod linalg;
 pub mod metrics;
 pub mod network;
 pub mod runtime;
+pub mod session;
 pub mod ssfn;
 pub mod testing;
 pub mod util;
 
 pub use config::ExperimentConfig;
-pub use coordinator::DecentralizedTrainer;
+pub use coordinator::{
+    resume_session, resume_session_with_policy, Checkpoint, DecentralizedTrainer,
+};
+pub use session::{
+    SessionBuilder, StepEvent, StopPolicy, StopReason, TrainObserver, TrainSession,
+};
 pub use ssfn::CentralizedTrainer;
 
 /// Crate-wide error type.
@@ -76,6 +112,9 @@ pub enum Error {
     Config(String),
     /// Problem with the communication-network model.
     Network(String),
+    /// Checkpoint serialization/restore failure (corrupt bytes,
+    /// version mismatch, task/config fingerprint mismatch).
+    Checkpoint(String),
     /// PJRT runtime failure (artifact missing, compile/execute error).
     Runtime(String),
     /// Dataset construction / sharding failure.
@@ -91,6 +130,7 @@ impl std::fmt::Display for Error {
             Error::Numerical(m) => write!(f, "numerical failure: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Network(m) => write!(f, "network error: {m}"),
+            Error::Checkpoint(m) => write!(f, "checkpoint error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Data(m) => write!(f, "data error: {m}"),
             // Transparent: forward the io error's own message.

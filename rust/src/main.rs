@@ -3,22 +3,32 @@
 //! ```text
 //! dssfn train   [--config FILE] [--dataset KEY] [--degree D] [--nodes M]
 //!               [--layers L] [--admm-iters K] [--backend native|pjrt]
-//!               [--exact-consensus] [--seed S] [--csv PATH]
+//!               [--exact-consensus] [--seed S] [--csv PATH] [--verbose]
+//!               [--checkpoint PATH] [--resume PATH]
+//!               [--max-bytes N] [--max-sim-secs S] [--cost-plateau F]
 //! dssfn central [--dataset KEY] [--layers L] [--admm-iters K] [--seed S]
 //! dssfn sweep   [--dataset KEY] [--degrees 1,2,...] [--csv PATH]
 //! dssfn datasets
 //! dssfn info    [--config FILE]
 //! ```
 //!
+//! `train` drives the resumable session API: `--verbose` streams the
+//! typed step events, `--checkpoint` snapshots the full training state
+//! at every layer boundary, `--resume` continues a snapshot
+//! bit-identically, and the `--max-*` / `--cost-plateau` flags set
+//! [`StopPolicy`] budgets.
+//!
 //! The build environment has no `clap`; argument parsing is a small
 //! hand-rolled matcher (see [`Args`]).
 
 use dssfn::config::{BackendKind, ExperimentConfig};
 use dssfn::coordinator::DecentralizedTrainer;
-use dssfn::data::{dataset_names, lookup, table1_rows};
+use dssfn::data::{dataset_names, lookup, table1_rows, ClassificationTask};
 use dssfn::metrics::CsvWriter;
+use dssfn::session::{StepEvent, StopPolicy};
 use dssfn::ssfn::CentralizedTrainer;
 use dssfn::util::human_secs;
+use dssfn::Checkpoint;
 use std::collections::BTreeMap;
 use std::process::ExitCode;
 
@@ -36,7 +46,7 @@ impl Args {
             let key = a
                 .strip_prefix("--")
                 .ok_or_else(|| format!("unexpected argument '{a}'"))?;
-            let switch = matches!(key, "exact-consensus" | "no-curve" | "full");
+            let switch = matches!(key, "exact-consensus" | "no-curve" | "full" | "verbose");
             if switch {
                 flags.insert(key.to_string(), "true".to_string());
                 i += 1;
@@ -127,12 +137,101 @@ fn build_config(args: &Args) -> Result<ExperimentConfig, String> {
 
 fn cmd_train(args: &Args) -> Result<(), String> {
     let cfg = build_config(args)?;
-    eprintln!(
-        "training dSSFN on '{}' (M={}, d={}, L={}, K={}, backend={:?})",
-        cfg.dataset, cfg.nodes, cfg.degree, cfg.layers, cfg.admm_iterations, cfg.backend
-    );
-    let (_model, report) =
-        DecentralizedTrainer::run_config(&cfg).map_err(|e| e.to_string())?;
+    let verbose = args.has("verbose");
+    let ckpt_path = args.get("checkpoint").map(|s| s.to_string());
+    let mut policy = StopPolicy::none();
+    if let Some(v) = args.parsed::<u64>("max-bytes")? {
+        policy.max_comm_bytes = Some(v);
+    }
+    if let Some(v) = args.parsed::<f64>("max-sim-secs")? {
+        policy.max_simulated_secs = Some(v);
+    }
+    if let Some(v) = args.parsed::<f64>("cost-plateau")? {
+        policy.min_layer_improvement = Some(v);
+    }
+
+    // The session either resumes from a checkpoint (regenerating the
+    // checkpoint's own dataset/seed) or lowers the CLI config through
+    // the builder. Both paths run the same Algorithm-trait loop.
+    let resume_task: ClassificationTask;
+    let mut session = match args.get("resume") {
+        Some(path) => {
+            // The checkpoint carries the run's full configuration; CLI
+            // config flags are ignored on resume except the budget
+            // flags above. The CLI resume path is native-only — the
+            // checkpoint does not record its backend, so a PJRT resume
+            // must go through the API where the caller supplies one.
+            if args.get("backend") == Some("pjrt") {
+                return Err(
+                    "--resume runs on the native backend; resume PJRT sessions via \
+                     DssfnAlgorithm::restore with an explicit backend"
+                        .into(),
+                );
+            }
+            // The training configuration comes from the checkpoint; any
+            // training flags on the command line would change the run
+            // and are refused rather than silently dropped.
+            for flag in [
+                "config", "dataset", "degree", "nodes", "layers", "admm-iters", "seed",
+                "mu0", "mul", "threads", "exact-consensus", "no-curve",
+            ] {
+                if args.has(flag) {
+                    return Err(format!(
+                        "--{flag} cannot be combined with --resume: the checkpoint \
+                         carries the run's configuration"
+                    ));
+                }
+            }
+            let ck = Checkpoint::load(path).map_err(|e| e.to_string())?;
+            eprintln!(
+                "resuming dSSFN on '{}' from {path} (layer {}, {} layers recorded)",
+                ck.dataset(),
+                ck.layer(),
+                ck.layers_completed()
+            );
+            resume_task = lookup(ck.dataset())
+                .map_err(|e| e.to_string())?
+                .generator(ck.seed())
+                .generate()
+                .map_err(|e| e.to_string())?;
+            dssfn::resume_session_with_policy(&ck, &resume_task, policy)
+                .map_err(|e| e.to_string())?
+        }
+        None => {
+            eprintln!(
+                "training dSSFN on '{}' (M={}, d={}, L={}, K={}, backend={:?})",
+                cfg.dataset, cfg.nodes, cfg.degree, cfg.layers, cfg.admm_iterations, cfg.backend
+            );
+            cfg.session_builder()
+                .map_err(|e| e.to_string())?
+                .stop_policy(policy)
+                .build()
+                .map_err(|e| e.to_string())?
+        }
+    };
+    if verbose {
+        session.observe_fn(|ev| eprintln!("event: {ev:?}"));
+    }
+    // With --checkpoint, snapshot the full session state at every layer
+    // boundary; otherwise just drive the session to the end.
+    if let Some(path) = &ckpt_path {
+        loop {
+            match session.step().map_err(|e| e.to_string())? {
+                Some(StepEvent::LayerAdvanced { last, layer, .. }) if !last => {
+                    session
+                        .checkpoint()
+                        .and_then(|c| c.save(path))
+                        .map_err(|e| e.to_string())?;
+                    if verbose {
+                        eprintln!("checkpoint after layer {layer} -> {path}");
+                    }
+                }
+                Some(_) => {}
+                None => break,
+            }
+        }
+    }
+    let (_model, report) = session.finish().map_err(|e| e.to_string())?;
     println!("{}", report.summary());
     println!(
         "simulated total time (compute + α-β comm): {}",
@@ -264,7 +363,8 @@ fn cmd_info(args: &Args) -> Result<(), String> {
 }
 
 const USAGE: &str = "usage: dssfn <train|central|sweep|datasets|info> [flags]
-  train     train decentralized SSFN        (--dataset, --degree, --nodes, --layers, --admm-iters, --backend, --csv, --config, --exact-consensus, --seed)
+  train     train decentralized SSFN        (--dataset, --degree, --nodes, --layers, --admm-iters, --backend, --csv, --config, --exact-consensus, --seed,
+                                             --verbose, --checkpoint PATH, --resume PATH, --max-bytes N, --max-sim-secs S, --cost-plateau F)
   central   train the centralized baseline  (--dataset, --layers, --admm-iters, --seed)
   sweep     degree sweep (Fig. 4)           (--dataset, --degrees 1,2,3, --csv)
   datasets  list registered datasets

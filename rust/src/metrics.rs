@@ -32,6 +32,25 @@ impl LayerRecord {
     pub fn final_cost(&self) -> Option<f64> {
         self.cost_curve.last().copied()
     }
+
+    /// Number of recorded iterations (0 when cost recording is off).
+    pub fn iterations(&self) -> usize {
+        self.cost_curve.len()
+    }
+
+    /// One-line human summary (used by the CLI's verbose session
+    /// observer and the e2e example).
+    pub fn summary(&self) -> String {
+        format!(
+            "layer {:>2}: cost {:>12.4} | {:>5} gossip rounds | {:>10} | disagreement {:.2e} | {}",
+            self.layer,
+            self.final_cost().unwrap_or(f64::NAN),
+            self.gossip_rounds,
+            crate::util::human_bytes(self.comm.bytes),
+            self.consensus_disagreement,
+            crate::util::human_secs(self.wall_secs),
+        )
+    }
 }
 
 /// End-to-end training report.
@@ -201,6 +220,10 @@ mod tests {
         assert_eq!(r.total_gossip_rounds(), 17);
         assert_eq!(r.final_cost(), Some(1.0));
         assert!(r.summary().contains("train"));
+        assert_eq!(r.layers[0].iterations(), 2);
+        let line = r.layers[1].summary();
+        assert!(line.contains("layer  1"), "{line}");
+        assert!(line.contains("gossip rounds"), "{line}");
     }
 
     #[test]

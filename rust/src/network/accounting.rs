@@ -84,6 +84,16 @@ impl CommLedger {
         self.rounds.store(0, Ordering::Relaxed);
         self.scalars.store(0, Ordering::Relaxed);
     }
+
+    /// Overwrite the counters from a snapshot — used when a checkpointed
+    /// training session is restored, so resumed runs report the same
+    /// cumulative traffic an uninterrupted run would.
+    pub fn restore(&self, snapshot: &CommSnapshot) {
+        self.messages.store(snapshot.messages, Ordering::Relaxed);
+        self.bytes.store(snapshot.bytes, Ordering::Relaxed);
+        self.rounds.store(snapshot.rounds, Ordering::Relaxed);
+        self.scalars.store(snapshot.scalars, Ordering::Relaxed);
+    }
 }
 
 #[cfg(test)]
@@ -104,6 +114,18 @@ mod tests {
         assert_eq!(s.bytes, 2007 * 8);
         l.reset();
         assert_eq!(l.snapshot(), CommSnapshot::default());
+    }
+
+    #[test]
+    fn restore_overwrites_counters() {
+        let l = CommLedger::new();
+        l.record_round(3, 4);
+        let snap = CommSnapshot { messages: 7, bytes: 56, rounds: 2, scalars: 7 };
+        l.restore(&snap);
+        assert_eq!(l.snapshot(), snap);
+        // Recording continues from the restored base.
+        l.record_message(1);
+        assert_eq!(l.snapshot().messages, 8);
     }
 
     #[test]

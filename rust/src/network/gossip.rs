@@ -128,6 +128,13 @@ impl GossipEngine {
         self.sim_clock_bits.store(0f64.to_bits(), Ordering::Relaxed);
     }
 
+    /// Overwrite the simulated clock — used when a checkpointed training
+    /// session is restored, so the resumed α-β clock continues from the
+    /// exact bit pattern the interrupted run had reached.
+    pub fn set_simulated_seconds(&self, secs: f64) {
+        self.sim_clock_bits.store(secs.to_bits(), Ordering::Relaxed);
+    }
+
     fn advance_clock(&self, dt: f64) {
         // CAS loop: f64 add on an atomic u64.
         let mut cur = self.sim_clock_bits.load(Ordering::Relaxed);
@@ -219,6 +226,20 @@ impl GossipEngine {
         let rounds = self.mixing.consensus_rounds(delta);
         self.mix_rounds(values, rounds)?;
         Ok(rounds)
+    }
+
+    /// [`GossipEngine::consensus_average`] plus the payload bytes it
+    /// charged to the ledger: `(rounds, bytes)`. The session algorithms
+    /// build their `GossipRound` events from this one helper so the
+    /// measurement logic lives in a single place. Allocation-free.
+    pub fn consensus_average_measured(
+        &self,
+        values: &mut [Matrix],
+        delta: f64,
+    ) -> Result<(usize, u64)> {
+        let before = self.ledger.snapshot().bytes;
+        let rounds = self.consensus_average(values, delta)?;
+        Ok((rounds, self.ledger.snapshot().bytes - before))
     }
 
     /// Lossy-link variant (the paper's §IV future-work direction, after
@@ -402,6 +423,41 @@ mod tests {
         assert!(t > 0.0);
         e.reset_clock();
         assert_eq!(e.simulated_seconds(), 0.0);
+    }
+
+    #[test]
+    fn clock_restore_is_bit_exact() {
+        let e = engine(6, 1);
+        let mut vals = rand_values(6, 2, 3, 31);
+        e.mix_rounds(&mut vals, 7).unwrap();
+        let t = e.simulated_seconds();
+        let f = engine(6, 1);
+        f.set_simulated_seconds(t);
+        assert_eq!(f.simulated_seconds().to_bits(), t.to_bits());
+        // Further rounds advance identically from the restored base.
+        let mut a = rand_values(6, 2, 3, 32);
+        let mut b = a.clone();
+        e.mix_rounds(&mut a, 3).unwrap();
+        f.mix_rounds(&mut b, 3).unwrap();
+        assert_eq!(e.simulated_seconds().to_bits(), f.simulated_seconds().to_bits());
+    }
+
+    #[test]
+    fn measured_average_reports_ledger_delta() {
+        let e = engine(6, 2);
+        let mut vals = rand_values(6, 2, 3, 41);
+        let before = e.ledger().snapshot().bytes;
+        let (rounds, bytes) = e.consensus_average_measured(&mut vals, 1e-9).unwrap();
+        assert!(rounds > 0);
+        assert_eq!(bytes, e.ledger().snapshot().bytes - before);
+        assert!(bytes > 0);
+        // Mixing result identical to the unmeasured form.
+        let f = engine(6, 2);
+        let mut vals2 = rand_values(6, 2, 3, 41);
+        f.consensus_average(&mut vals2, 1e-9).unwrap();
+        for (a, b) in vals.iter().zip(&vals2) {
+            assert_eq!(a.max_abs_diff(b), 0.0);
+        }
     }
 
     #[test]

@@ -1,0 +1,354 @@
+//! Fluent, validating session configuration.
+
+use super::{StopPolicy, TrainSession};
+use crate::coordinator::{ConsensusMode, DssfnAlgorithm, TaskRef, TrainOptions};
+use crate::data::{lookup, ClassificationTask};
+use crate::network::{LatencyModel, Topology, WeightRule};
+use crate::runtime::{ComputeBackend, NativeBackend};
+use crate::ssfn::{GrowthPolicy, SsfnArchitecture, TrainHyper};
+use crate::{Error, Result};
+use std::sync::Arc;
+
+/// Builder for dSSFN [`TrainSession`]s — the fluent replacement for
+/// poking [`crate::config::ExperimentConfig`] fields. Every knob has the
+/// paper-scale default; [`SessionBuilder::build`] validates the complete
+/// configuration before any work starts.
+///
+/// ```no_run
+/// use dssfn::session::SessionBuilder;
+///
+/// let session = SessionBuilder::new()
+///     .dataset("satimage-small")
+///     .seed(7)
+///     .layers(5)
+///     .nodes(10)
+///     .degree(2)
+///     .build()
+///     .unwrap();
+/// let (_model, report) = session.run_to_completion().unwrap();
+/// println!("{}", report.summary());
+/// ```
+///
+/// [`crate::config::ExperimentConfig::session_builder`] lowers a
+/// TOML/preset config into this builder, so config files and the fluent
+/// API share one construction and validation path.
+pub struct SessionBuilder {
+    dataset: Option<String>,
+    task: Option<Arc<ClassificationTask>>,
+    arch: Option<SsfnArchitecture>,
+    layers: Option<usize>,
+    hidden_extra: Option<usize>,
+    hyper: TrainHyper,
+    seed: u64,
+    nodes: usize,
+    degree: usize,
+    topology: Option<Topology>,
+    weight_rule: WeightRule,
+    consensus: ConsensusMode,
+    latency: LatencyModel,
+    threads: usize,
+    record_cost_curve: bool,
+    backend: Option<Arc<dyn ComputeBackend>>,
+    policy: StopPolicy,
+    growth: Option<GrowthPolicy>,
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SessionBuilder {
+    /// A builder at the paper's defaults (`M = 20`, `d = 4`, `L = 20`,
+    /// `K = 100`, `n = 2Q + 1000`, gossip to `δ = 1e-9`).
+    pub fn new() -> Self {
+        Self {
+            dataset: None,
+            task: None,
+            arch: None,
+            layers: None,
+            hidden_extra: None,
+            hyper: TrainHyper {
+                mu0: 1e-2,
+                mul: 1.0,
+                admm_iterations: 100,
+                eps: None,
+            },
+            seed: 0xD55F,
+            nodes: 20,
+            degree: 4,
+            topology: None,
+            weight_rule: WeightRule::EqualNeighbor,
+            consensus: ConsensusMode::Gossip { delta: 1e-9 },
+            latency: LatencyModel::default(),
+            threads: 0,
+            record_cost_curve: true,
+            backend: None,
+            policy: StopPolicy::none(),
+            growth: None,
+        }
+    }
+
+    /// Train on a registered dataset (generated from the session seed).
+    pub fn dataset(mut self, key: impl Into<String>) -> Self {
+        self.dataset = Some(key.into());
+        self
+    }
+
+    /// Train on an explicit task (takes precedence over `dataset`).
+    pub fn task(self, task: ClassificationTask) -> Self {
+        self.shared_task(Arc::new(task))
+    }
+
+    /// Train on a shared task without cloning the data.
+    pub fn shared_task(mut self, task: Arc<ClassificationTask>) -> Self {
+        self.task = Some(task);
+        self
+    }
+
+    /// Explicit architecture (otherwise derived from the task: `P`, `Q`
+    /// from the data, `n = 2Q + hidden_extra`, `L = layers`).
+    pub fn arch(mut self, arch: SsfnArchitecture) -> Self {
+        self.arch = Some(arch);
+        self
+    }
+
+    /// Number of SSFN layers `L`.
+    pub fn layers(mut self, layers: usize) -> Self {
+        self.layers = Some(layers);
+        self
+    }
+
+    /// Hidden width is `n = 2Q + hidden_extra`.
+    pub fn hidden_extra(mut self, extra: usize) -> Self {
+        self.hidden_extra = Some(extra);
+        self
+    }
+
+    /// Master seed (data generation, random matrices, everything).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// ADMM iterations per layer `K`.
+    pub fn admm_iterations(mut self, k: usize) -> Self {
+        self.hyper.admm_iterations = k;
+        self
+    }
+
+    /// Lagrangian parameters: `μ_0` for the input solve, `μ_l` for the
+    /// hidden-layer solves.
+    pub fn mu(mut self, mu0: f64, mul: f64) -> Self {
+        self.hyper.mu0 = mu0;
+        self.hyper.mul = mul;
+        self
+    }
+
+    /// Explicit Frobenius radius `ε` (default: the paper's `2Q`).
+    pub fn eps(mut self, eps: f64) -> Self {
+        self.hyper.eps = Some(eps);
+        self
+    }
+
+    /// Worker count `M`.
+    pub fn nodes(mut self, nodes: usize) -> Self {
+        self.nodes = nodes;
+        self
+    }
+
+    /// Circular-topology degree `d` (ignored when an explicit topology
+    /// is set).
+    pub fn degree(mut self, degree: usize) -> Self {
+        self.degree = degree;
+        self
+    }
+
+    /// Explicit communication topology (otherwise circular of `degree`).
+    pub fn topology(mut self, topology: Topology) -> Self {
+        self.topology = Some(topology);
+        self
+    }
+
+    /// Mixing-weight rule.
+    pub fn weight_rule(mut self, rule: WeightRule) -> Self {
+        self.weight_rule = rule;
+        self
+    }
+
+    /// Use idealized exact averaging instead of gossip.
+    pub fn exact_consensus(mut self) -> Self {
+        self.consensus = ConsensusMode::Exact;
+        self
+    }
+
+    /// Gossip to the given per-averaging contraction `δ`.
+    pub fn gossip_delta(mut self, delta: f64) -> Self {
+        self.consensus = ConsensusMode::Gossip { delta };
+        self
+    }
+
+    /// α-β latency model parameters (s/round, bytes/s).
+    pub fn latency(mut self, alpha: f64, beta: f64) -> Self {
+        self.latency = LatencyModel { alpha, beta };
+        self
+    }
+
+    /// Worker threads (`0` = auto).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Record the full per-iteration cost curve (Fig. 3).
+    pub fn record_cost_curve(mut self, record: bool) -> Self {
+        self.record_cost_curve = record;
+        self
+    }
+
+    /// Compute backend (default: native `f64`).
+    pub fn backend(mut self, backend: Arc<dyn ComputeBackend>) -> Self {
+        self.backend = Some(backend);
+        self
+    }
+
+    /// Budget policy. Its cost-plateau clause lowers onto the trainer's
+    /// own growth policy, so the stop point is bit-identical to
+    /// `train_task_with_growth`.
+    pub fn stop_policy(mut self, policy: StopPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Self-size-estimation growth policy (explicit form).
+    pub fn growth(mut self, policy: GrowthPolicy) -> Self {
+        self.growth = Some(policy);
+        self
+    }
+
+    /// Validate the complete configuration and build the session.
+    pub fn build(self) -> Result<TrainSession<'static>> {
+        self.policy.validate()?;
+        let task: Arc<ClassificationTask> = match (self.task, &self.dataset) {
+            (Some(t), _) => t,
+            (None, Some(key)) => Arc::new(lookup(key)?.generator(self.seed).generate()?),
+            (None, None) => {
+                return Err(Error::Config(
+                    "SessionBuilder needs a dataset key or an explicit task".into(),
+                ))
+            }
+        };
+        let arch = match self.arch {
+            Some(mut a) => {
+                if let Some(l) = self.layers {
+                    a.layers = l;
+                }
+                if let Some(h) = self.hidden_extra {
+                    a.hidden = 2 * a.num_classes + h;
+                }
+                a
+            }
+            None => SsfnArchitecture {
+                input_dim: task.input_dim(),
+                num_classes: task.num_classes(),
+                hidden: 2 * task.num_classes() + self.hidden_extra.unwrap_or(1000),
+                layers: self.layers.unwrap_or(20),
+            },
+        };
+        let topology = self
+            .topology
+            .unwrap_or(Topology::Circular { nodes: self.nodes, degree: self.degree });
+        let opts = TrainOptions {
+            nodes: self.nodes,
+            topology,
+            weight_rule: self.weight_rule,
+            consensus: self.consensus,
+            latency: self.latency,
+            threads: self.threads,
+            record_cost_curve: self.record_cost_curve,
+        };
+        let backend: Arc<dyn ComputeBackend> = match self.backend {
+            Some(b) => b,
+            None => Arc::new(NativeBackend::new()),
+        };
+        let alg = DssfnAlgorithm::new(
+            arch,
+            self.hyper,
+            opts,
+            self.seed,
+            backend,
+            TaskRef::Shared(task),
+            self.growth,
+        )?;
+        // with_policy lowers the cost-plateau clause onto the trainer's
+        // growth policy (Algorithm::adopt_cost_plateau) — one place for
+        // every construction path.
+        TrainSession::from_algorithm(Box::new(alg)).with_policy(self.policy)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::session::StepEvent;
+
+    #[test]
+    fn rejects_missing_task_and_unknown_dataset() {
+        assert!(SessionBuilder::new().build().is_err());
+        assert!(SessionBuilder::new().dataset("bogus").build().is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_topology() {
+        // Explicit topology over 6 nodes with M = 4.
+        let err = SessionBuilder::new()
+            .dataset("quickstart")
+            .nodes(4)
+            .topology(Topology::Circular { nodes: 6, degree: 1 })
+            .layers(1)
+            .hidden_extra(8)
+            .build();
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn rejects_bad_gossip_delta_and_policy() {
+        assert!(SessionBuilder::new()
+            .dataset("quickstart")
+            .layers(1)
+            .hidden_extra(8)
+            .nodes(4)
+            .degree(1)
+            .gossip_delta(2.0)
+            .build()
+            .is_err());
+        assert!(SessionBuilder::new()
+            .dataset("quickstart")
+            .stop_policy(StopPolicy::none().with_max_simulated_secs(-3.0))
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn builds_and_steps_a_tiny_session() {
+        let mut session = SessionBuilder::new()
+            .dataset("quickstart")
+            .seed(3)
+            .layers(1)
+            .hidden_extra(10)
+            .admm_iterations(2)
+            .nodes(2)
+            .degree(1)
+            .threads(1)
+            .build()
+            .unwrap();
+        let first = session.step().unwrap();
+        assert!(matches!(first, Some(StepEvent::LayerPrepared { layer: 0, .. })));
+        let (model, report) = session.finish().unwrap();
+        let model = model.into_ssfn().unwrap();
+        assert_eq!(model.weights().len(), 1);
+        assert_eq!(report.layers.len(), 2);
+        assert!(report.mode.starts_with("dssfn("));
+    }
+}

@@ -1,0 +1,389 @@
+//! The [`TrainSession`] driver: steps an [`Algorithm`], fans events out
+//! to observers, enforces the [`StopPolicy`] and exposes checkpoints.
+
+use super::observer::{dispatch, FnObserver, TrainObserver};
+use super::{Algorithm, SessionProgress, StepEvent, StopPolicy, StopReason};
+use crate::coordinator::Checkpoint;
+use crate::metrics::TrainReport;
+use crate::session::TrainedModel;
+use crate::Result;
+use std::collections::VecDeque;
+
+/// A resumable, observable training run.
+///
+/// Create one from [`super::SessionBuilder`] (or wrap any algorithm with
+/// [`TrainSession::from_algorithm`]), then either drive it manually with
+/// [`TrainSession::step`] or let [`TrainSession::run_to_completion`]
+/// reproduce the legacy one-shot behaviour bit-identically.
+pub struct TrainSession<'a> {
+    alg: Box<dyn Algorithm + 'a>,
+    observers: Vec<Box<dyn TrainObserver + 'a>>,
+    policy: StopPolicy,
+    queue: VecDeque<StepEvent>,
+    scratch: Vec<StepEvent>,
+    finished: bool,
+    stop_sent: bool,
+    prev_layer_cost: Option<f64>,
+}
+
+impl<'a> TrainSession<'a> {
+    /// Wrap an algorithm in a session with no observers and a no-op
+    /// stop policy.
+    pub fn from_algorithm(alg: Box<dyn Algorithm + 'a>) -> Self {
+        Self {
+            alg,
+            observers: Vec::new(),
+            policy: StopPolicy::none(),
+            queue: VecDeque::new(),
+            scratch: Vec::with_capacity(4),
+            finished: false,
+            stop_sent: false,
+            prev_layer_cost: None,
+        }
+    }
+
+    /// Set the stop policy (validated; fluent). The cost-plateau clause
+    /// is first offered to the algorithm
+    /// ([`Algorithm::adopt_cost_plateau`]); only algorithms without a
+    /// native implementation get the session-level fallback, so the
+    /// clause means the same thing through every construction path
+    /// (builder, resume, manual `with_policy`).
+    pub fn with_policy(mut self, policy: StopPolicy) -> Result<Self> {
+        policy.validate()?;
+        let mut policy = policy;
+        if let Some(f) = policy.min_layer_improvement {
+            if self.alg.adopt_cost_plateau(f) {
+                policy.min_layer_improvement = None;
+            }
+        }
+        self.policy = policy;
+        Ok(self)
+    }
+
+    /// Attach an observer.
+    pub fn add_observer(&mut self, obs: Box<dyn TrainObserver + 'a>) {
+        self.observers.push(obs);
+    }
+
+    /// Attach a closure observer called with every event.
+    pub fn observe_fn(&mut self, f: impl FnMut(&StepEvent) + 'a) {
+        self.observers.push(Box::new(FnObserver(f)));
+    }
+
+    /// The algorithm's description (mirrors `TrainReport::mode`).
+    pub fn describe(&self) -> String {
+        self.alg.describe()
+    }
+
+    /// Whether the algorithm has emitted its `Finished` event. Queued
+    /// events may still be pending in [`TrainSession::step`].
+    pub fn is_finished(&self) -> bool {
+        self.finished
+    }
+
+    /// Current progress counters (bytes on the wire, simulated seconds).
+    pub fn progress(&self) -> SessionProgress {
+        self.alg.progress()
+    }
+
+    /// Advance the session and return the next event, or `None` once the
+    /// run has finished and every event has been delivered. Events are
+    /// delivered in generation order; one unit of algorithm work may
+    /// yield several events (they queue and drain across `step` calls).
+    pub fn step(&mut self) -> Result<Option<StepEvent>> {
+        loop {
+            if let Some(ev) = self.queue.pop_front() {
+                return Ok(Some(ev));
+            }
+            if self.finished {
+                return Ok(None);
+            }
+            self.pump(true)?;
+        }
+    }
+
+    /// Ask the run to stop at the next well-defined boundary; the
+    /// terminal event will carry [`StopReason::Requested`].
+    pub fn request_stop(&mut self) {
+        if !self.stop_sent && !self.finished {
+            self.alg.request_stop(StopReason::Requested);
+            self.stop_sent = true;
+        }
+    }
+
+    /// Snapshot the full training state for later bit-identical resume
+    /// (see [`crate::coordinator::resume_session`]). Works at any step
+    /// boundary; only checkpointable algorithms (dSSFN) support it.
+    pub fn checkpoint(&self) -> Result<Checkpoint> {
+        self.alg.checkpoint()
+    }
+
+    /// Drive the remaining work to the end and return the trained model
+    /// and report. Undelivered queued events are dropped (observers have
+    /// already seen them).
+    pub fn finish(&mut self) -> Result<(TrainedModel, TrainReport)> {
+        while !self.finished {
+            self.pump(false)?;
+        }
+        self.queue.clear();
+        let out = self.alg.finalize()?;
+        Ok((out.model, out.report))
+    }
+
+    /// One-shot convenience: run everything and return the result. For a
+    /// default-configured dSSFN session this is bit-identical to the
+    /// legacy `DecentralizedTrainer::train_task` (which now runs through
+    /// this very path).
+    pub fn run_to_completion(mut self) -> Result<(TrainedModel, TrainReport)> {
+        self.finish()
+    }
+
+    /// One unit of algorithm work: advance, dispatch observers, apply
+    /// the stop policy, optionally queue the events for `step`.
+    fn pump(&mut self, queue_events: bool) -> Result<()> {
+        let mut scratch = std::mem::take(&mut self.scratch);
+        scratch.clear();
+        let result = self.alg.advance(&mut scratch);
+        for ev in &scratch {
+            for obs in self.observers.iter_mut() {
+                dispatch(obs.as_mut(), ev);
+            }
+            self.apply_policy(ev);
+            if let StepEvent::Finished { .. } = ev {
+                self.finished = true;
+            }
+            if queue_events {
+                self.queue.push_back(*ev);
+            }
+        }
+        self.scratch = scratch;
+        result
+    }
+
+    fn apply_policy(&mut self, ev: &StepEvent) {
+        // Cost-plateau bookkeeping runs on every LayerAdvanced event.
+        if let StepEvent::LayerAdvanced { cost, .. } = ev {
+            let prev = self.prev_layer_cost.replace(*cost);
+            if !self.stop_sent {
+                if let (Some(thresh), Some(prev)) =
+                    (self.policy.min_layer_improvement, prev)
+                {
+                    if prev <= 0.0 || (prev - cost) / prev < thresh {
+                        self.alg.request_stop(StopReason::CostPlateau);
+                        self.stop_sent = true;
+                    }
+                }
+            }
+        }
+        if self.stop_sent || !self.policy.is_active() {
+            return;
+        }
+        let p = self.alg.progress();
+        let mut reason = None;
+        if let Some(limit) = self.policy.max_comm_bytes {
+            if p.comm_bytes >= limit {
+                reason = Some(StopReason::BudgetBytes);
+            }
+        }
+        if reason.is_none() {
+            if let Some(limit) = self.policy.max_simulated_secs {
+                if p.simulated_secs >= limit {
+                    reason = Some(StopReason::BudgetSimTime);
+                }
+            }
+        }
+        if let Some(r) = reason {
+            self.alg.request_stop(r);
+            self.stop_sent = true;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::session::AlgorithmOutput;
+    use crate::{Error, Result};
+
+    /// Scripted algorithm: `layers` layers of `iters` iterations each,
+    /// charging `bytes_per_iter` to a fake ledger.
+    struct Toy {
+        layers: usize,
+        iters: usize,
+        bytes_per_iter: u64,
+        layer: usize,
+        k: usize,
+        bytes: u64,
+        stop: Option<StopReason>,
+        done: bool,
+        finalized: bool,
+    }
+
+    impl Toy {
+        fn new(layers: usize, iters: usize, bytes_per_iter: u64) -> Self {
+            Self {
+                layers,
+                iters,
+                bytes_per_iter,
+                layer: 0,
+                k: 0,
+                bytes: 0,
+                stop: None,
+                done: false,
+                finalized: false,
+            }
+        }
+    }
+
+    impl Algorithm for Toy {
+        fn describe(&self) -> String {
+            "toy".into()
+        }
+        fn is_done(&self) -> bool {
+            self.done
+        }
+        fn advance(&mut self, events: &mut Vec<StepEvent>) -> Result<()> {
+            if self.done {
+                return Err(Error::Config("advance after done".into()));
+            }
+            self.bytes += self.bytes_per_iter;
+            events.push(StepEvent::AdmmIteration {
+                layer: self.layer,
+                iteration: self.k,
+                cost: Some(100.0 / (1 + self.layer + self.k) as f64),
+                consensus_gap: 0.0,
+            });
+            self.k += 1;
+            let stop_now = self.stop.is_some();
+            if self.k >= self.iters || stop_now {
+                let cost = 100.0 / (1 + self.layer) as f64;
+                let last = self.layer + 1 >= self.layers || stop_now;
+                events.push(StepEvent::LayerAdvanced { layer: self.layer, cost, last });
+                if last {
+                    self.done = true;
+                    events.push(StepEvent::Finished {
+                        reason: self.stop.unwrap_or(StopReason::Completed),
+                    });
+                } else {
+                    self.layer += 1;
+                    self.k = 0;
+                }
+            }
+            Ok(())
+        }
+        fn finalize(&mut self) -> Result<AlgorithmOutput> {
+            if !self.done || self.finalized {
+                return Err(Error::Config("bad finalize".into()));
+            }
+            self.finalized = true;
+            Ok(AlgorithmOutput {
+                model: TrainedModel::Output(Matrix::zeros(1, 1)),
+                report: crate::metrics::TrainReport::default(),
+            })
+        }
+        fn progress(&self) -> SessionProgress {
+            SessionProgress { comm_bytes: self.bytes, simulated_secs: 0.0 }
+        }
+        fn request_stop(&mut self, reason: StopReason) {
+            if self.stop.is_none() && !self.done {
+                self.stop = Some(reason);
+            }
+        }
+    }
+
+    #[test]
+    fn step_yields_all_events_then_none() {
+        let mut s = TrainSession::from_algorithm(Box::new(Toy::new(2, 3, 0)));
+        let mut events = Vec::new();
+        while let Some(ev) = s.step().unwrap() {
+            events.push(ev);
+        }
+        // 2 layers × (3 iterations + LayerAdvanced) + Finished.
+        assert_eq!(events.len(), 2 * 4 + 1);
+        assert!(matches!(events.last(), Some(StepEvent::Finished { reason: StopReason::Completed })));
+        assert!(s.is_finished());
+        // Further steps keep returning None.
+        assert!(s.step().unwrap().is_none());
+    }
+
+    #[test]
+    fn observers_see_every_event_in_order() {
+        let seen = std::cell::RefCell::new(Vec::new());
+        let mut s = TrainSession::from_algorithm(Box::new(Toy::new(1, 2, 0)));
+        s.observe_fn(|ev| seen.borrow_mut().push(*ev));
+        let (model, _report) = s.finish().unwrap();
+        assert!(matches!(model, TrainedModel::Output(_)));
+        drop(s); // release the observer's borrow of `seen`
+        let seen = seen.into_inner();
+        assert_eq!(seen.len(), 2 + 1 + 1);
+        assert!(matches!(seen[0], StepEvent::AdmmIteration { iteration: 0, .. }));
+    }
+
+    #[test]
+    fn byte_budget_stops_early_with_reason() {
+        let policy = StopPolicy::none().with_max_comm_bytes(250);
+        let s = TrainSession::from_algorithm(Box::new(Toy::new(100, 10, 100)))
+            .with_policy(policy)
+            .unwrap();
+        let mut s = s;
+        let mut last = None;
+        while let Some(ev) = s.step().unwrap() {
+            last = Some(ev);
+        }
+        assert_eq!(last, Some(StepEvent::Finished { reason: StopReason::BudgetBytes }));
+        // Stopped long before the scripted 100 layers.
+        assert!(s.progress().comm_bytes < 1000);
+    }
+
+    #[test]
+    fn plateau_policy_stops_when_layer_cost_flattens() {
+        // Toy layer costs: 100, 50, 33.3, ... → improvement from layer 1
+        // to layer 2 is 33%, below a 40% threshold.
+        let policy = StopPolicy::none().with_min_layer_improvement(0.4);
+        let s = TrainSession::from_algorithm(Box::new(Toy::new(100, 1, 0)))
+            .with_policy(policy)
+            .unwrap();
+        let mut s = s;
+        let mut finished_reason = None;
+        let mut layers = 0;
+        while let Some(ev) = s.step().unwrap() {
+            match ev {
+                StepEvent::LayerAdvanced { .. } => layers += 1,
+                StepEvent::Finished { reason } => finished_reason = Some(reason),
+                _ => {}
+            }
+        }
+        assert_eq!(finished_reason, Some(StopReason::CostPlateau));
+        assert!(layers < 100, "plateau never fired ({layers} layers)");
+    }
+
+    #[test]
+    fn request_stop_finishes_with_requested_reason() {
+        let mut s = TrainSession::from_algorithm(Box::new(Toy::new(100, 10, 0)));
+        // Deliver a few events, then ask for a stop.
+        for _ in 0..3 {
+            s.step().unwrap();
+        }
+        s.request_stop();
+        let mut last = None;
+        while let Some(ev) = s.step().unwrap() {
+            last = Some(ev);
+        }
+        assert_eq!(last, Some(StepEvent::Finished { reason: StopReason::Requested }));
+    }
+
+    #[test]
+    fn finish_is_single_shot_and_checkpoint_unsupported() {
+        let mut s = TrainSession::from_algorithm(Box::new(Toy::new(1, 1, 0)));
+        assert!(s.checkpoint().is_err(), "toy must not checkpoint");
+        s.finish().unwrap();
+        assert!(s.finish().is_err(), "second finalize must fail");
+    }
+
+    #[test]
+    fn invalid_policy_rejected() {
+        let s = TrainSession::from_algorithm(Box::new(Toy::new(1, 1, 0)));
+        assert!(s.with_policy(StopPolicy::none().with_max_simulated_secs(-1.0)).is_err());
+    }
+}

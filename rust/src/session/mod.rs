@@ -1,0 +1,312 @@
+//! Resumable step-wise training sessions.
+//!
+//! The paper's Algorithm 1 is naturally incremental — layer-wise
+//! progression with `K` synchronous consensus-ADMM iterations per layer —
+//! and this module exposes exactly that structure as a drivable state
+//! machine instead of a monolithic blocking call:
+//!
+//! * [`Algorithm`] — the unit-of-work interface every trainer implements:
+//!   the full dSSFN coordinator
+//!   ([`crate::coordinator::DssfnAlgorithm`]), the single-layer ADMM
+//!   oracle ([`crate::admm::LayerAdmmAlgorithm`]), decentralized gradient
+//!   descent ([`crate::baselines::dgd::DgdAlgorithm`]) and the backprop
+//!   MLP baseline ([`crate::baselines::mlp_sgd::MlpSgdAlgorithm`]).
+//! * [`TrainSession`] — the driver: repeatedly calls
+//!   [`Algorithm::advance`], yields typed [`StepEvent`]s from
+//!   [`TrainSession::step`], feeds [`TrainObserver`] callbacks, enforces
+//!   [`StopPolicy`] budgets, and hands out [`crate::coordinator::Checkpoint`]s.
+//! * [`SessionBuilder`] — fluent, validating configuration
+//!   ([`crate::config::ExperimentConfig`] lowers into it).
+//!
+//! ## Session lifecycle
+//!
+//! ```text
+//!   SessionBuilder::new().dataset("mnist-small").nodes(10) ... .build()?
+//!        │
+//!        ▼
+//!   TrainSession ── step() ──► StepEvent::LayerPrepared { .. }
+//!        │                     StepEvent::GossipRound   { .. }   (gossip mode)
+//!        │                     StepEvent::AdmmIteration { cost, consensus_gap, .. }
+//!        │                     ...
+//!        │                     StepEvent::LayerAdvanced { .. }
+//!        │                     ...
+//!        │                     StepEvent::Finished { reason }
+//!        │
+//!        ├─ checkpoint()  at any step boundary → Checkpoint (serialize,
+//!        │                restore later with coordinator::resume_session;
+//!        │                the resumed run is bit-identical)
+//!        ▼
+//!   finish() / run_to_completion() ──► (TrainedModel, TrainReport)
+//! ```
+//!
+//! [`TrainSession::run_to_completion`] reproduces the one-shot
+//! [`crate::coordinator::DecentralizedTrainer::train_task`] behaviour
+//! **bit-identically** — in fact `train_task` is implemented on top of
+//! the session (pinned by `tests/coordinator_oracle.rs`).
+
+mod builder;
+mod driver;
+mod observer;
+mod policy;
+
+pub use builder::SessionBuilder;
+pub use driver::TrainSession;
+pub use observer::{FnObserver, TrainObserver};
+pub use policy::StopPolicy;
+
+use crate::baselines::mlp_sgd::MlpModel;
+use crate::coordinator::Checkpoint;
+use crate::linalg::Matrix;
+use crate::metrics::TrainReport;
+use crate::ssfn::SsfnModel;
+use crate::{Error, Result};
+
+/// Why a session finished.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopReason {
+    /// The configured layer/iteration budget ran to its natural end.
+    Completed,
+    /// The self-size-estimation growth policy stopped adding layers.
+    GrowthStopped,
+    /// The [`StopPolicy`] communicated-bytes budget was exhausted.
+    BudgetBytes,
+    /// The [`StopPolicy`] simulated-seconds budget was exhausted.
+    BudgetSimTime,
+    /// The [`StopPolicy`] cost-plateau early exit fired.
+    CostPlateau,
+    /// [`TrainSession::request_stop`] was called.
+    Requested,
+}
+
+impl std::fmt::Display for StopReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            StopReason::Completed => "completed",
+            StopReason::GrowthStopped => "growth-stopped",
+            StopReason::BudgetBytes => "byte-budget-exhausted",
+            StopReason::BudgetSimTime => "time-budget-exhausted",
+            StopReason::CostPlateau => "cost-plateau",
+            StopReason::Requested => "stop-requested",
+        };
+        f.write_str(s)
+    }
+}
+
+/// A typed event produced by one unit of session work. All variants are
+/// `Copy` (no heap behind them) so the hot loop can emit events without
+/// allocating — the zero-allocation contract of `tests/alloc_free.rs`
+/// extends to the session-driven solve path.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StepEvent {
+    /// A layer's prepare phase completed: Grams built and factored,
+    /// per-node iteration state allocated.
+    LayerPrepared {
+        /// Layer index `l` (0 = the direct input solve).
+        layer: usize,
+        /// Feature dimension `n` of this layer's solve.
+        feat_dim: usize,
+    },
+    /// One consensus averaging completed over the gossip network
+    /// (`rounds` synchronous mixing rounds). Only emitted in gossip mode.
+    GossipRound {
+        /// Layer index.
+        layer: usize,
+        /// ADMM iteration this averaging belongs to.
+        iteration: usize,
+        /// Mixing rounds executed for this averaging (`B(δ)`).
+        rounds: usize,
+        /// Payload bytes charged to the communication ledger.
+        bytes: u64,
+    },
+    /// One solver iteration completed (ADMM for dSSFN / the layer
+    /// oracle; a gradient step for the DGD and MLP baselines).
+    AdmmIteration {
+        /// Layer index.
+        layer: usize,
+        /// Iteration index `k` within the layer.
+        iteration: usize,
+        /// Global objective after this iteration, when cost recording is
+        /// enabled.
+        cost: Option<f64>,
+        /// Max pairwise disagreement between node copies of the
+        /// consensus variable (0 under exact averaging). The dSSFN
+        /// trainer computes it only when cost-curve recording is on —
+        /// throughput runs (`record_cost_curve = false`) report 0 so
+        /// the hot loop carries no extra per-iteration scan.
+        consensus_gap: f64,
+    },
+    /// A layer finished: diagnostics recorded, features advanced (or the
+    /// final output frozen when `last` is true).
+    LayerAdvanced {
+        /// Layer index that completed.
+        layer: usize,
+        /// Converged global objective of the layer.
+        cost: f64,
+        /// Whether this was the final layer of the run.
+        last: bool,
+    },
+    /// The session is complete; call [`TrainSession::finish`] (or let
+    /// [`TrainSession::run_to_completion`] return) for the model.
+    Finished {
+        /// Why the session ended.
+        reason: StopReason,
+    },
+}
+
+/// Lightweight progress counters a [`StopPolicy`] budgets against.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SessionProgress {
+    /// Total bytes charged to the communication ledger so far.
+    pub comm_bytes: u64,
+    /// Simulated total seconds so far (compute wall time + α-β model
+    /// communication time).
+    pub simulated_secs: f64,
+}
+
+/// The model produced by a finished session — one variant per algorithm
+/// family.
+pub enum TrainedModel {
+    /// A decentralized/centralized SSFN.
+    Ssfn(SsfnModel),
+    /// The backprop-MLP baseline.
+    Mlp(MlpModel),
+    /// A bare output matrix (single-layer solves: layer-ADMM, DGD).
+    Output(Matrix),
+}
+
+impl TrainedModel {
+    /// Unwrap the SSFN variant.
+    pub fn into_ssfn(self) -> Result<SsfnModel> {
+        match self {
+            TrainedModel::Ssfn(m) => Ok(m),
+            _ => Err(Error::Config("session did not train an SSFN".into())),
+        }
+    }
+
+    /// Unwrap the MLP variant.
+    pub fn into_mlp(self) -> Result<MlpModel> {
+        match self {
+            TrainedModel::Mlp(m) => Ok(m),
+            _ => Err(Error::Config("session did not train an MLP".into())),
+        }
+    }
+
+    /// Unwrap the bare output-matrix variant.
+    pub fn into_output(self) -> Result<Matrix> {
+        match self {
+            TrainedModel::Output(m) => Ok(m),
+            _ => Err(Error::Config("session did not produce a bare output".into())),
+        }
+    }
+}
+
+/// What [`Algorithm::finalize`] hands back to the session.
+pub struct AlgorithmOutput {
+    /// The trained model.
+    pub model: TrainedModel,
+    /// The full training report.
+    pub report: TrainReport,
+}
+
+/// Drive an algorithm straight to completion, discarding events — the
+/// shared one-shot loop behind `solve_decentralized`, `solve_dgd` and
+/// `MlpSgdTrainer::train`. A single small event buffer is reused across
+/// iterations ([`StepEvent`] is `Copy`), so the allocation count is
+/// independent of the iteration count (pinned by `tests/alloc_free.rs`).
+pub fn drive_to_completion(alg: &mut impl Algorithm) -> Result<()> {
+    let mut events = Vec::with_capacity(4);
+    while !alg.is_done() {
+        events.clear();
+        alg.advance(&mut events)?;
+    }
+    Ok(())
+}
+
+/// The unit-of-work interface the [`TrainSession`] drives. One
+/// [`Algorithm::advance`] call performs one atomic unit of training work
+/// (one prepare phase, one solver iteration, one layer advance) and
+/// pushes the [`StepEvent`]s it produced. State only changes inside
+/// `advance`, so a [`Checkpoint`] taken between calls always lands on a
+/// well-defined boundary.
+pub trait Algorithm {
+    /// Human-readable description (mirrors `TrainReport::mode`).
+    fn describe(&self) -> String;
+
+    /// Whether all work is done (a `Finished` event was emitted).
+    fn is_done(&self) -> bool;
+
+    /// Perform the next unit of work, appending the events it produced.
+    /// Implementations must push at least one event per call and must
+    /// not be called again once [`Algorithm::is_done`] returns true.
+    fn advance(&mut self, events: &mut Vec<StepEvent>) -> Result<()>;
+
+    /// Consume the trained state into a model and report. Only valid
+    /// once [`Algorithm::is_done`]; at most one call returns `Ok`.
+    fn finalize(&mut self) -> Result<AlgorithmOutput>;
+
+    /// Progress counters for [`StopPolicy`] budget checks.
+    fn progress(&self) -> SessionProgress {
+        SessionProgress::default()
+    }
+
+    /// Ask the algorithm to stop at the next well-defined boundary and
+    /// report `reason` in its `Finished` event. For dSSFN this means: at
+    /// most one more ADMM iteration runs on the current layer, then the
+    /// current consensus iterate becomes the model's output layer —
+    /// except during layer 0, which always runs to completion (an SSFN
+    /// needs at least one structured weight), so a stop requested there
+    /// takes effect one iteration into layer 1.
+    fn request_stop(&mut self, reason: StopReason) {
+        let _ = reason;
+    }
+
+    /// Offer the algorithm the [`StopPolicy`] cost-plateau clause to
+    /// implement natively. Return `true` when handled (the session then
+    /// drops its own, coarser plateau handling — which can only react
+    /// *after* a layer has advanced). dSSFN lowers the clause onto its
+    /// [`crate::ssfn::GrowthPolicy`], making the stop point bit-identical
+    /// to `train_task_with_growth` no matter how the session was built;
+    /// an algorithm-level growth policy that is already set wins.
+    fn adopt_cost_plateau(&mut self, min_relative_improvement: f64) -> bool {
+        let _ = min_relative_improvement;
+        false
+    }
+
+    /// Snapshot the full training state for later bit-identical resume.
+    /// Only the dSSFN coordinator supports this; other algorithms return
+    /// a config error.
+    fn checkpoint(&self) -> Result<Checkpoint> {
+        Err(Error::Checkpoint(format!(
+            "'{}' does not support checkpointing",
+            self.describe()
+        )))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_event_is_copy_and_comparable() {
+        let e = StepEvent::AdmmIteration {
+            layer: 1,
+            iteration: 3,
+            cost: Some(2.0),
+            consensus_gap: 0.5,
+        };
+        let f = e; // Copy
+        assert_eq!(e, f);
+        let g = StepEvent::Finished { reason: StopReason::Completed };
+        assert_ne!(f, g);
+        assert_eq!(format!("{}", StopReason::CostPlateau), "cost-plateau");
+    }
+
+    #[test]
+    fn trained_model_unwrap_helpers() {
+        let m = TrainedModel::Output(Matrix::zeros(2, 2));
+        assert!(m.into_ssfn().is_err());
+        let m = TrainedModel::Output(Matrix::zeros(2, 2));
+        assert_eq!(m.into_output().unwrap().shape(), (2, 2));
+    }
+}

@@ -1,0 +1,118 @@
+//! Observer callbacks fed by the session driver.
+
+use super::{StepEvent, StopReason};
+
+/// Callback hooks invoked by [`super::TrainSession`] for every event an
+/// algorithm produces, as it is produced (before the event is returned
+/// from `step()`). All hooks default to no-ops; implement whichever
+/// granularity is useful. `on_event` fires for *every* event in addition
+/// to the specific hook.
+pub trait TrainObserver {
+    /// Every event, in order.
+    fn on_event(&mut self, event: &StepEvent) {
+        let _ = event;
+    }
+
+    /// A layer's prepare phase completed.
+    fn on_layer_prepared(&mut self, layer: usize, feat_dim: usize) {
+        let _ = (layer, feat_dim);
+    }
+
+    /// One consensus averaging completed (gossip mode only).
+    fn on_gossip_round(&mut self, layer: usize, iteration: usize, rounds: usize, bytes: u64) {
+        let _ = (layer, iteration, rounds, bytes);
+    }
+
+    /// One solver iteration completed.
+    fn on_admm_iteration(
+        &mut self,
+        layer: usize,
+        iteration: usize,
+        cost: Option<f64>,
+        consensus_gap: f64,
+    ) {
+        let _ = (layer, iteration, cost, consensus_gap);
+    }
+
+    /// A layer finished.
+    fn on_layer_advanced(&mut self, layer: usize, cost: f64, last: bool) {
+        let _ = (layer, cost, last);
+    }
+
+    /// The session finished.
+    fn on_finished(&mut self, reason: StopReason) {
+        let _ = reason;
+    }
+}
+
+/// Adapter turning any `FnMut(&StepEvent)` closure into a
+/// [`TrainObserver`] (see [`super::TrainSession::observe_fn`]).
+pub struct FnObserver<F>(pub F);
+
+impl<F: FnMut(&StepEvent)> TrainObserver for FnObserver<F> {
+    fn on_event(&mut self, event: &StepEvent) {
+        (self.0)(event)
+    }
+}
+
+/// Dispatch an event to both the generic and the specific hook.
+pub(super) fn dispatch(obs: &mut dyn TrainObserver, event: &StepEvent) {
+    obs.on_event(event);
+    match *event {
+        StepEvent::LayerPrepared { layer, feat_dim } => obs.on_layer_prepared(layer, feat_dim),
+        StepEvent::GossipRound { layer, iteration, rounds, bytes } => {
+            obs.on_gossip_round(layer, iteration, rounds, bytes)
+        }
+        StepEvent::AdmmIteration { layer, iteration, cost, consensus_gap } => {
+            obs.on_admm_iteration(layer, iteration, cost, consensus_gap)
+        }
+        StepEvent::LayerAdvanced { layer, cost, last } => {
+            obs.on_layer_advanced(layer, cost, last)
+        }
+        StepEvent::Finished { reason } => obs.on_finished(reason),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fn_observer_sees_events() {
+        let mut seen = Vec::new();
+        {
+            let mut obs = FnObserver(|e: &StepEvent| seen.push(*e));
+            let ev = StepEvent::LayerPrepared { layer: 0, feat_dim: 8 };
+            dispatch(&mut obs, &ev);
+        }
+        assert_eq!(seen, vec![StepEvent::LayerPrepared { layer: 0, feat_dim: 8 }]);
+    }
+
+    #[test]
+    fn specific_hooks_fire() {
+        struct Counter {
+            layers: usize,
+            iters: usize,
+            finished: usize,
+        }
+        impl TrainObserver for Counter {
+            fn on_layer_advanced(&mut self, _l: usize, _c: f64, _last: bool) {
+                self.layers += 1;
+            }
+            fn on_admm_iteration(&mut self, _l: usize, _k: usize, _c: Option<f64>, _g: f64) {
+                self.iters += 1;
+            }
+            fn on_finished(&mut self, _r: StopReason) {
+                self.finished += 1;
+            }
+        }
+        let mut c = Counter { layers: 0, iters: 0, finished: 0 };
+        dispatch(&mut c, &StepEvent::LayerAdvanced { layer: 0, cost: 1.0, last: false });
+        dispatch(
+            &mut c,
+            &StepEvent::AdmmIteration { layer: 0, iteration: 0, cost: None, consensus_gap: 0.0 },
+        );
+        dispatch(&mut c, &StepEvent::Finished { reason: StopReason::Completed });
+        assert_eq!((c.layers, c.iters, c.finished), (1, 1, 1));
+    }
+}

@@ -1,0 +1,129 @@
+//! Budget-based stopping policies for training sessions.
+
+use crate::{Error, Result};
+
+/// Declarative budgets the [`super::TrainSession`] enforces over any
+/// [`super::Algorithm`]. All limits are optional; the default policy
+/// never stops a run, which is what keeps
+/// [`super::TrainSession::run_to_completion`] bit-identical to the
+/// legacy one-shot trainers.
+///
+/// Budgets bind at iteration granularity: when one trips, the algorithm
+/// is asked to stop ([`super::Algorithm::request_stop`]) and completes
+/// at most one more solver iteration before finalizing with the current
+/// consensus iterate — the dSSFN `Z` is feasible at every iteration, so
+/// the truncated model is always well-formed. (Exception: dSSFN's layer
+/// 0 always runs to completion — an SSFN needs at least one structured
+/// weight — so the earliest truncation point is inside layer 1.)
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StopPolicy {
+    /// Stop once simulated total seconds (compute wall time + α-β
+    /// communication time) exceed this.
+    pub max_simulated_secs: Option<f64>,
+    /// Stop once the communication ledger has charged this many bytes.
+    pub max_comm_bytes: Option<u64>,
+    /// Cost-plateau early exit: stop adding layers once a layer's
+    /// converged cost improves by less than this fraction over the
+    /// previous layer (the self-size-estimation rule of the paper §I).
+    /// [`super::TrainSession::with_policy`] offers this clause to the
+    /// algorithm first ([`super::Algorithm::adopt_cost_plateau`]); dSSFN
+    /// lowers it onto its own [`crate::ssfn::GrowthPolicy`], so the stop
+    /// point is bit-identical to `train_task_with_growth` through every
+    /// construction path (builder, resume, manual). Single-layer
+    /// algorithms (layer-ADMM, DGD, MLP-SGD) never advance a layer, so
+    /// the clause is inert for them.
+    pub min_layer_improvement: Option<f64>,
+}
+
+impl StopPolicy {
+    /// A policy with no limits (never stops a run).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Set the simulated-seconds budget.
+    pub fn with_max_simulated_secs(mut self, secs: f64) -> Self {
+        self.max_simulated_secs = Some(secs);
+        self
+    }
+
+    /// Set the communicated-bytes budget.
+    pub fn with_max_comm_bytes(mut self, bytes: u64) -> Self {
+        self.max_comm_bytes = Some(bytes);
+        self
+    }
+
+    /// Set the cost-plateau threshold.
+    pub fn with_min_layer_improvement(mut self, fraction: f64) -> Self {
+        self.min_layer_improvement = Some(fraction);
+        self
+    }
+
+    /// Whether any limit is configured.
+    pub fn is_active(&self) -> bool {
+        self.max_simulated_secs.is_some()
+            || self.max_comm_bytes.is_some()
+            || self.min_layer_improvement.is_some()
+    }
+
+    /// Validate ranges.
+    pub fn validate(&self) -> Result<()> {
+        if let Some(s) = self.max_simulated_secs {
+            if !(s > 0.0) {
+                return Err(Error::Config(format!(
+                    "max_simulated_secs must be > 0, got {s}"
+                )));
+            }
+        }
+        if let Some(b) = self.max_comm_bytes {
+            if b == 0 {
+                return Err(Error::Config("max_comm_bytes must be > 0".into()));
+            }
+        }
+        if let Some(f) = self.min_layer_improvement {
+            if !(0.0..1.0).contains(&f) {
+                return Err(Error::Config(format!(
+                    "min_layer_improvement must be in [0,1), got {f}"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_inactive_and_valid() {
+        let p = StopPolicy::none();
+        assert!(!p.is_active());
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn builders_set_fields() {
+        let p = StopPolicy::none()
+            .with_max_comm_bytes(1 << 20)
+            .with_max_simulated_secs(3.5)
+            .with_min_layer_improvement(0.05);
+        assert!(p.is_active());
+        assert_eq!(p.max_comm_bytes, Some(1 << 20));
+        assert_eq!(p.max_simulated_secs, Some(3.5));
+        assert_eq!(p.min_layer_improvement, Some(0.05));
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn validation_rejects_bad_ranges() {
+        assert!(StopPolicy::none().with_max_simulated_secs(0.0).validate().is_err());
+        assert!(StopPolicy::none().with_max_simulated_secs(-1.0).validate().is_err());
+        assert!(StopPolicy { max_comm_bytes: Some(0), ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(StopPolicy::none().with_min_layer_improvement(1.0).validate().is_err());
+        assert!(StopPolicy::none().with_min_layer_improvement(-0.1).validate().is_err());
+        assert!(StopPolicy::none().with_min_layer_improvement(0.0).validate().is_ok());
+    }
+}

@@ -91,6 +91,81 @@ fn bad_flags_fail_gracefully() {
 }
 
 #[test]
+fn train_checkpoint_and_resume_roundtrip() {
+    let dir = std::env::temp_dir().join(format!("dssfn_cli_ckpt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("state.ckpt");
+    let out = dssfn()
+        .args([
+            "train",
+            "--dataset",
+            "quickstart",
+            "--layers",
+            "2",
+            "--admm-iters",
+            "8",
+            "--nodes",
+            "4",
+            "--degree",
+            "1",
+            "--checkpoint",
+        ])
+        .arg(&ckpt)
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(ckpt.exists(), "no checkpoint written");
+    // Resume from the snapshot: regenerates the checkpoint's dataset and
+    // replays the remaining layers.
+    let out = dssfn().args(["train", "--resume"]).arg(&ckpt).output().unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("gossip rounds"), "no summary in:\n{text}");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("resuming"), "stderr: {err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn train_with_byte_budget_stops_early_and_verbose_streams_events() {
+    let out = dssfn()
+        .args([
+            "train",
+            "--dataset",
+            "quickstart",
+            "--layers",
+            "3",
+            "--admm-iters",
+            "10",
+            "--nodes",
+            "4",
+            "--degree",
+            "1",
+            "--max-bytes",
+            "1",
+            "--verbose",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("event:"), "verbose events missing: {err}");
+    assert!(err.contains("BudgetBytes"), "budget stop missing: {err}");
+}
+
+#[test]
 fn sweep_writes_csv() {
     let dir = std::env::temp_dir().join(format!("dssfn_cli_{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();

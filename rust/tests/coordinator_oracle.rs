@@ -9,13 +9,14 @@
 //! learned matrix with `max_abs_diff == 0.0`.
 
 use dssfn::admm::{solve_decentralized, Consensus, LayerLocalSolver};
-use dssfn::coordinator::{ConsensusMode, DecentralizedTrainer, TrainOptions};
+use dssfn::coordinator::{resume_session, Checkpoint, ConsensusMode, DecentralizedTrainer, TrainOptions};
 use dssfn::data::{shard_uniform, ClassificationTask, SynthClassification};
 use dssfn::linalg::Matrix;
 use dssfn::network::{
     CommLedger, GossipEngine, LatencyModel, MixingMatrix, Topology, WeightRule,
 };
 use dssfn::runtime::{ComputeBackend, NativeBackend};
+use dssfn::session::StepEvent;
 use dssfn::ssfn::{build_weight, RandomMatrices, SsfnArchitecture, TrainHyper};
 use std::sync::Arc;
 
@@ -138,6 +139,135 @@ fn threaded_coordinator_bit_identical_to_sequential_oracle() {
     assert_eq!(w_diff, 0.0, "W_1 drifted from the sequential oracle");
     let z_diff = model.output().max_abs_diff(&oracle_z);
     assert_eq!(z_diff, 0.0, "output Z drifted from the sequential oracle");
+}
+
+fn two_layer_trainer() -> DecentralizedTrainer {
+    let arch = SsfnArchitecture { layers: 2, ..arch() };
+    let opts = TrainOptions {
+        nodes: NODES,
+        topology: Topology::Circular { nodes: NODES, degree: DEGREE },
+        weight_rule: WeightRule::EqualNeighbor,
+        consensus: ConsensusMode::Gossip { delta: DELTA },
+        latency: LatencyModel::default(),
+        threads: 4,
+        record_cost_curve: true,
+    };
+    DecentralizedTrainer::new(arch, hyper(), opts, SEED).unwrap()
+}
+
+/// The tentpole resumability claim: a session checkpointed mid-layer,
+/// serialized to bytes, restored and run to completion is bit-identical
+/// to the uninterrupted one-shot `train_task` — every learned matrix,
+/// the full cost curve, and the communication ledger agree exactly.
+#[test]
+fn mid_layer_checkpoint_resumes_bit_identical_to_one_shot() {
+    let task = toy_task();
+    let trainer = two_layer_trainer();
+    let (one_model, one_report) = trainer.train_task(&task).unwrap();
+
+    // Drive a fresh session until iteration 6 of layer 1 has completed,
+    // snapshot (the machine is about to run iteration 7), serialize,
+    // abandon the session entirely.
+    let mut session = trainer.session(&task).unwrap();
+    let ck = loop {
+        match session.step().unwrap() {
+            Some(StepEvent::AdmmIteration { layer: 1, iteration: 6, .. }) => {
+                break session.checkpoint().unwrap();
+            }
+            Some(_) => {}
+            None => panic!("session finished before the checkpoint point"),
+        }
+    };
+    assert_eq!(ck.layer(), 1);
+    assert_eq!(ck.iteration(), Some(7));
+    assert_eq!(ck.layers_completed(), 1);
+    let bytes = ck.to_bytes();
+    drop(session);
+
+    // Restore from the serialized bytes and run to completion.
+    let ck = Checkpoint::from_bytes(&bytes).unwrap();
+    let mut resumed = resume_session(&ck, &task).unwrap();
+    let (model, report) = resumed.finish().unwrap();
+    let model = model.into_ssfn().unwrap();
+
+    assert_eq!(model.weights().len(), one_model.weights().len());
+    for (a, b) in model.weights().iter().zip(one_model.weights()) {
+        assert_eq!(a.max_abs_diff(b), 0.0, "restored weight drifted");
+    }
+    assert_eq!(
+        model.output().max_abs_diff(one_model.output()),
+        0.0,
+        "restored output drifted"
+    );
+    assert_eq!(report.full_cost_curve(), one_report.full_cost_curve());
+    assert_eq!(report.comm_total, one_report.comm_total);
+    assert_eq!(report.total_gossip_rounds(), one_report.total_gossip_rounds());
+    assert_eq!(report.layers.len(), one_report.layers.len());
+    for (a, b) in report.layers.iter().zip(&one_report.layers) {
+        assert_eq!(a.consensus_disagreement, b.consensus_disagreement);
+        assert_eq!(a.comm, b.comm);
+        assert_eq!(a.gossip_rounds, b.gossip_rounds);
+    }
+    assert_eq!(report.train_accuracy, one_report.train_accuracy);
+    assert_eq!(report.test_accuracy, one_report.test_accuracy);
+}
+
+/// Same claim at a layer boundary: a checkpoint taken right after a
+/// layer advanced (the machine is about to prepare the next layer)
+/// restores with no transient state and still matches bit-identically.
+#[test]
+fn layer_boundary_checkpoint_resumes_bit_identically() {
+    let task = toy_task();
+    let trainer = two_layer_trainer();
+    let (one_model, one_report) = trainer.train_task(&task).unwrap();
+
+    let mut session = trainer.session(&task).unwrap();
+    let ck = loop {
+        match session.step().unwrap() {
+            Some(StepEvent::LayerAdvanced { layer: 0, .. }) => {
+                break session.checkpoint().unwrap();
+            }
+            Some(_) => {}
+            None => panic!("session finished before layer 0 advanced"),
+        }
+    };
+    assert_eq!(ck.layer(), 1);
+    assert_eq!(ck.iteration(), None);
+    drop(session);
+
+    let ck = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+    let mut resumed = resume_session(&ck, &task).unwrap();
+    let (model, report) = resumed.finish().unwrap();
+    let model = model.into_ssfn().unwrap();
+    assert_eq!(model.output().max_abs_diff(one_model.output()), 0.0);
+    for (a, b) in model.weights().iter().zip(one_model.weights()) {
+        assert_eq!(a.max_abs_diff(b), 0.0);
+    }
+    assert_eq!(report.full_cost_curve(), one_report.full_cost_curve());
+    assert_eq!(report.comm_total, one_report.comm_total);
+}
+
+/// Restore validates the supplied task against the checkpoint's
+/// fingerprint instead of silently training on the wrong data.
+#[test]
+fn restore_rejects_mismatched_task() {
+    let task = toy_task();
+    let trainer = two_layer_trainer();
+    let mut session = trainer.session(&task).unwrap();
+    session.step().unwrap();
+    let ck = session.checkpoint().unwrap();
+    let mut other = SynthClassification::with_shape("other-task", 8, 3, 120, 60);
+    other.class_sep = 3.0;
+    let other_task = other.generate().unwrap();
+    assert!(resume_session(&ck, &other_task).is_err());
+
+    // Same name, same shape, *different data* (different generator
+    // knobs) — the content checksum must catch it.
+    let mut imposter = SynthClassification::with_shape("oracle-toy", 8, 3, 120, 60);
+    imposter.class_sep = 3.0;
+    imposter.noise = 0.3;
+    let imposter_task = imposter.generate().unwrap();
+    assert!(resume_session(&ck, &imposter_task).is_err());
 }
 
 #[test]

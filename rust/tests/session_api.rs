@@ -1,0 +1,197 @@
+//! Integration: the resumable `TrainSession` step API — builder
+//! validation, typed event streams, stop-policy budgets, and the
+//! plateau-to-growth lowering.
+
+use dssfn::session::{SessionBuilder, StepEvent, StopPolicy, StopReason};
+use dssfn::ssfn::GrowthPolicy;
+use dssfn::{DecentralizedTrainer, ExperimentConfig};
+
+fn tiny_builder() -> SessionBuilder {
+    SessionBuilder::new()
+        .dataset("quickstart")
+        .seed(3)
+        .layers(2)
+        .hidden_extra(12)
+        .admm_iterations(5)
+        .nodes(4)
+        .degree(1)
+        .threads(2)
+}
+
+#[test]
+fn event_stream_shape_matches_configuration() {
+    let mut session = tiny_builder().build().unwrap();
+    let mut events = Vec::new();
+    while let Some(ev) = session.step().unwrap() {
+        events.push(ev);
+    }
+    // L=2 → 3 layer solves (input solve + 2 layers), K=5 each.
+    let prepared = events.iter().filter(|e| matches!(e, StepEvent::LayerPrepared { .. })).count();
+    let iters = events.iter().filter(|e| matches!(e, StepEvent::AdmmIteration { .. })).count();
+    let advanced = events.iter().filter(|e| matches!(e, StepEvent::LayerAdvanced { .. })).count();
+    let gossip = events.iter().filter(|e| matches!(e, StepEvent::GossipRound { .. })).count();
+    assert_eq!(prepared, 3);
+    assert_eq!(iters, 3 * 5);
+    assert_eq!(advanced, 3);
+    assert_eq!(gossip, 3 * 5, "one averaging per gossip-mode iteration");
+    assert!(matches!(
+        events.last(),
+        Some(StepEvent::Finished { reason: StopReason::Completed })
+    ));
+    // Every gossip event charges traffic.
+    for ev in &events {
+        if let StepEvent::GossipRound { rounds, bytes, .. } = ev {
+            assert!(*rounds > 0);
+            assert!(*bytes > 0);
+        }
+    }
+    let (model, report) = session.finish().unwrap();
+    let model = model.into_ssfn().unwrap();
+    assert_eq!(model.weights().len(), 2);
+    assert_eq!(report.layers.len(), 3);
+}
+
+#[test]
+fn exact_consensus_sessions_emit_no_gossip_events() {
+    let mut session = tiny_builder().exact_consensus().build().unwrap();
+    let mut gossip = 0;
+    while let Some(ev) = session.step().unwrap() {
+        if matches!(ev, StepEvent::GossipRound { .. }) {
+            gossip += 1;
+        }
+        if let StepEvent::AdmmIteration { consensus_gap, .. } = ev {
+            assert_eq!(consensus_gap, 0.0, "exact averaging keeps nodes identical");
+        }
+    }
+    assert_eq!(gossip, 0);
+}
+
+#[test]
+fn observer_hooks_and_progress_counters_fire() {
+    use std::cell::RefCell;
+    let counts = RefCell::new((0usize, 0usize));
+    let mut session = tiny_builder().build().unwrap();
+    session.observe_fn(|ev| {
+        let mut c = counts.borrow_mut();
+        match ev {
+            StepEvent::AdmmIteration { .. } => c.0 += 1,
+            StepEvent::LayerAdvanced { .. } => c.1 += 1,
+            _ => {}
+        }
+    });
+    assert_eq!(session.progress().comm_bytes, 0);
+    let (_, report) = session.finish().unwrap();
+    drop(session); // release the observer's borrow of `counts`
+    let (iters, layers) = counts.into_inner();
+    assert_eq!(iters, 3 * 5);
+    assert_eq!(layers, 3);
+    assert!(report.comm_total.bytes > 0);
+}
+
+#[test]
+fn simulated_time_budget_truncates_inside_layer_one() {
+    // A vanishing time budget trips on the very first event; layer 0
+    // still completes (the model needs one structured weight), then
+    // layer 1 truncates after a single iteration.
+    let session = tiny_builder()
+        .build()
+        .unwrap()
+        .with_policy(StopPolicy::none().with_max_simulated_secs(1e-9))
+        .unwrap();
+    let mut session = session;
+    let mut reason = None;
+    while let Some(ev) = session.step().unwrap() {
+        if let StepEvent::Finished { reason: r } = ev {
+            reason = Some(r);
+        }
+    }
+    assert_eq!(reason, Some(StopReason::BudgetSimTime));
+    let (model, report) = session.finish().unwrap();
+    let model = model.into_ssfn().unwrap();
+    assert_eq!(report.layers.len(), 2, "layer 0 full + truncated layer 1");
+    assert_eq!(report.layers[0].iterations(), 5);
+    assert_eq!(report.layers[1].iterations(), 1);
+    assert_eq!(model.weights().len(), 1);
+    // The truncated model still classifies.
+    assert!(report.train_accuracy > 0.25);
+}
+
+#[test]
+fn builder_plateau_lowers_onto_growth_bit_identically() {
+    // The StopPolicy cost-plateau clause must reproduce the legacy
+    // train_task_with_growth stop point and model exactly.
+    let threshold = 0.9;
+    let mut session = SessionBuilder::new()
+        .dataset("quickstart")
+        .seed(3)
+        .layers(4)
+        .hidden_extra(20)
+        .admm_iterations(20)
+        .nodes(4)
+        .degree(1)
+        .threads(2)
+        .stop_policy(StopPolicy::none().with_min_layer_improvement(threshold))
+        .build()
+        .unwrap();
+    let mut finished = None;
+    while let Some(ev) = session.step().unwrap() {
+        if let StepEvent::Finished { reason } = ev {
+            finished = Some(reason);
+        }
+    }
+    let (m_session, r_session) = session.finish().unwrap();
+    let m_session = m_session.into_ssfn().unwrap();
+
+    let mut cfg = ExperimentConfig::named_dataset("quickstart").unwrap();
+    cfg.seed = 3;
+    cfg.layers = 4;
+    cfg.hidden_extra = 20;
+    cfg.admm_iterations = 20;
+    cfg.nodes = 4;
+    cfg.degree = 1;
+    cfg.threads = 2;
+    let task = cfg.generate_task().unwrap();
+    let trainer = DecentralizedTrainer::from_config(&cfg).unwrap();
+    let (m_legacy, r_legacy) = trainer
+        .train_task_with_growth(&task, GrowthPolicy { min_relative_improvement: threshold })
+        .unwrap();
+
+    assert_eq!(m_session.weights().len(), m_legacy.weights().len());
+    for (a, b) in m_session.weights().iter().zip(m_legacy.weights()) {
+        assert_eq!(a.max_abs_diff(b), 0.0);
+    }
+    assert_eq!(m_session.output().max_abs_diff(m_legacy.output()), 0.0);
+    assert_eq!(r_session.full_cost_curve(), r_legacy.full_cost_curve());
+    if m_session.weights().len() < 4 {
+        // Growth actually stopped early → the session reports it.
+        assert_eq!(finished, Some(StopReason::GrowthStopped));
+    }
+}
+
+#[test]
+fn request_stop_truncates_and_reports_requested() {
+    let mut session = tiny_builder().admm_iterations(50).build().unwrap();
+    // Let layer 0 start, then ask for a stop.
+    for _ in 0..5 {
+        session.step().unwrap();
+    }
+    session.request_stop();
+    let mut reason = None;
+    while let Some(ev) = session.step().unwrap() {
+        if let StepEvent::Finished { reason: r } = ev {
+            reason = Some(r);
+        }
+    }
+    assert_eq!(reason, Some(StopReason::Requested));
+    let (model, report) = session.finish().unwrap();
+    let model = model.into_ssfn().unwrap();
+    assert_eq!(model.weights().len(), 1);
+    assert!(report.layers.len() < 3);
+}
+
+#[test]
+fn checkpoint_after_finish_is_rejected() {
+    let mut session = tiny_builder().build().unwrap();
+    session.finish().unwrap();
+    assert!(session.checkpoint().is_err());
+}
