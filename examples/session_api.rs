@@ -38,7 +38,7 @@ fn main() -> dssfn::Result<()> {
                 println!("layer {layer}: converged cost {cost:.3} (last = {last})");
             }
             StepEvent::Finished { reason } => println!("finished: {reason}"),
-            StepEvent::GossipRound { .. } => {}
+            StepEvent::GossipRound { .. } | StepEvent::DeltaAdjusted { .. } => {}
         }
     }
     let (model, report) = session.finish()?;
@@ -110,6 +110,42 @@ fn main() -> dssfn::Result<()> {
         dssfn::util::human_bytes(budget_report.comm_total.bytes),
         budget_report.layers.len(),
         100.0 * budget_report.test_accuracy,
+    );
+
+    // 5. Communication fabrics: the same session runs over a
+    //    semi-synchronous gossip schedule (neighbour values up to 2
+    //    rounds stale), and the adaptive-δ controller throttles gossip
+    //    precision while a layer's objective is plateaued.
+    println!("\n=== communication fabrics ===");
+    let (_, sync_report) = builder().build()?.run_to_completion()?;
+    let (_, semi_report) = builder().staleness(2).build()?.run_to_completion()?;
+    println!(
+        "sync     : {:<46} {:>10}  acc {:.1}%",
+        sync_report.mode,
+        dssfn::util::human_bytes(sync_report.comm_total.bytes),
+        100.0 * sync_report.test_accuracy,
+    );
+    println!(
+        "semisync : {:<46} {:>10}  acc {:.1}%",
+        semi_report.mode,
+        dssfn::util::human_bytes(semi_report.comm_total.bytes),
+        100.0 * semi_report.test_accuracy,
+    );
+    let mut adaptive = builder()
+        .adaptive_delta(dssfn::network::AdaptiveDeltaPolicy::default())
+        .build()?;
+    let mut adjustments = 0usize;
+    while let Some(ev) = adaptive.step()? {
+        if let StepEvent::DeltaAdjusted { .. } = ev {
+            adjustments += 1;
+        }
+    }
+    let (_, adaptive_report) = adaptive.finish()?;
+    println!(
+        "adaptive : {:<46} {:>10}  acc {:.1}%  ({adjustments} δ adjustments)",
+        adaptive_report.mode,
+        dssfn::util::human_bytes(adaptive_report.comm_total.bytes),
+        100.0 * adaptive_report.test_accuracy,
     );
     Ok(())
 }

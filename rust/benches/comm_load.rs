@@ -25,7 +25,10 @@ use dssfn::baselines::{MlpSgdParams, MlpSgdTrainer};
 use dssfn::config::ExperimentConfig;
 use dssfn::data::shard_uniform;
 use dssfn::metrics::CsvWriter;
-use dssfn::network::{CommLedger, GossipEngine, LatencyModel, MixingMatrix, Topology, WeightRule};
+use dssfn::network::{
+    CommFabric, CommLedger, GossipEngine, LatencyModel, MixingMatrix, SynchronousFabric,
+    Topology, WeightRule,
+};
 use dssfn::ssfn::{build_weight, RandomMatrices};
 use dssfn::util::human_bytes;
 use std::sync::Arc;
@@ -99,22 +102,24 @@ fn main() -> dssfn::Result<()> {
         .zip(&shards)
         .map(|(y, s)| DgdNode::new(y, &s.t))
         .collect::<dssfn::Result<_>>()?;
-    // Lipschitz-safe step from the global Gram trace.
+    // Lipschitz-safe step from the global Gram trace. DGD runs over the
+    // same pluggable CommFabric interface as the trainer (synchronous
+    // schedule here, matching the eq.-14 model).
     let trace: f64 = ys.iter().map(|y| y.gram().as_slice().iter().sum::<f64>()).sum();
-    let dgd_engine = mk_engine()?;
+    let dgd_fabric = SynchronousFabric::new(mk_engine()?);
     let max_iters = 60 * k;
     let dgd_sol = solve_dgd(
         &nodes,
         q,
         n,
         &DgdParams { step: 0.45 / trace.abs(), iterations: max_iters, eps: params.eps, delta: cfg.delta },
-        Some(&dgd_engine),
+        Some(&dgd_fabric),
     )?;
     let reached = dgd_sol
         .cost_curve
         .iter()
         .position(|&c| c <= admm_cost * 1.005);
-    let dgd_total = dgd_engine.ledger().snapshot();
+    let dgd_total = dgd_fabric.engine().ledger().snapshot();
     let (dgd_iters, dgd_bytes, dgd_converged) = match reached {
         Some(i) => (
             i + 1,

@@ -11,7 +11,7 @@
 use crate::admm::LayerLocalSolver;
 use crate::linalg::Matrix;
 use crate::metrics::{LayerRecord, TrainReport};
-use crate::network::GossipEngine;
+use crate::network::{CommFabric, GossipEngine};
 use crate::session::{
     Algorithm, AlgorithmOutput, SessionProgress, StepEvent, StopReason, TrainedModel,
 };
@@ -92,10 +92,13 @@ impl DgdNode {
 /// [`Algorithm`]: each [`Algorithm::advance`] performs one full
 /// gradient-gossip-step iteration — the exact operation sequence of the
 /// legacy `solve_dgd` loop, which is now a wrapper over this machine.
+/// Gradient averages run through a [`CommFabric`], so the baseline
+/// exercises the same sync / semi-sync / lossy schedules as the dSSFN
+/// trainer.
 pub struct DgdAlgorithm<'a> {
     nodes: &'a [DgdNode],
     params: DgdParams,
-    engine: Option<&'a GossipEngine>,
+    fabric: Option<&'a dyn CommFabric>,
     o: Matrix,
     grads: Vec<Matrix>,
     cost_curve: Vec<f64>,
@@ -108,14 +111,15 @@ pub struct DgdAlgorithm<'a> {
 
 impl<'a> DgdAlgorithm<'a> {
     /// Validate and set up a solve for a `q×n` output across the nodes.
-    /// When `engine` is `Some`, gradient averages are found by gossip
-    /// (and charged to its ledger); otherwise the exact average is used.
+    /// When `fabric` is `Some`, gradient averages run over it (and are
+    /// charged to its engine's ledger); otherwise the exact average is
+    /// used.
     pub fn new(
         nodes: &'a [DgdNode],
         q: usize,
         n: usize,
         params: &DgdParams,
-        engine: Option<&'a GossipEngine>,
+        fabric: Option<&'a dyn CommFabric>,
     ) -> Result<Self> {
         params.validate()?;
         if nodes.is_empty() {
@@ -125,7 +129,7 @@ impl<'a> DgdAlgorithm<'a> {
         Ok(Self {
             nodes,
             params: *params,
-            engine,
+            fabric,
             o: Matrix::zeros(q, n),
             grads: (0..m).map(|_| Matrix::zeros(q, n)).collect(),
             cost_curve: Vec::with_capacity(params.iterations),
@@ -155,7 +159,10 @@ impl Algorithm for DgdAlgorithm<'_> {
         format!(
             "dgd({} nodes, {})",
             self.nodes.len(),
-            if self.engine.is_some() { "gossip" } else { "exact-avg" }
+            match self.fabric {
+                Some(fab) => format!("gossip {}", fab.describe()),
+                None => "exact-avg".to_string(),
+            }
         )
     }
 
@@ -173,10 +180,9 @@ impl Algorithm for DgdAlgorithm<'_> {
             g.copy_from(&ng)?;
         }
         let mut gossip_event: Option<(usize, u64)> = None;
-        let avg = match self.engine {
-            Some(eng) => {
-                let (rounds, bytes) =
-                    eng.consensus_average_measured(&mut self.grads, self.params.delta)?;
+        let avg = match self.fabric {
+            Some(fab) => {
+                let (rounds, bytes) = fab.average(&mut self.grads, self.params.delta)?;
                 self.gossip_rounds += rounds;
                 gossip_event = Some((rounds, bytes));
                 self.grads[0].clone()
@@ -228,9 +234,9 @@ impl Algorithm for DgdAlgorithm<'_> {
             gossip_rounds: self.gossip_rounds,
             ..Default::default()
         });
-        if let Some(eng) = self.engine {
-            report.comm_total = eng.ledger().snapshot();
-            report.simulated_comm_secs = eng.simulated_seconds();
+        if let Some(fab) = self.fabric {
+            report.comm_total = fab.engine().ledger().snapshot();
+            report.simulated_comm_secs = fab.engine().simulated_seconds();
         }
         Ok(AlgorithmOutput {
             model: TrainedModel::Output(self.o.clone()),
@@ -239,10 +245,10 @@ impl Algorithm for DgdAlgorithm<'_> {
     }
 
     fn progress(&self) -> SessionProgress {
-        match self.engine {
-            Some(eng) => SessionProgress {
-                comm_bytes: eng.ledger().snapshot().bytes,
-                simulated_secs: eng.simulated_seconds(),
+        match self.fabric {
+            Some(fab) => SessionProgress {
+                comm_bytes: fab.engine().ledger().snapshot().bytes,
+                simulated_secs: fab.engine().simulated_seconds(),
             },
             None => SessionProgress::default(),
         }
@@ -255,19 +261,19 @@ impl Algorithm for DgdAlgorithm<'_> {
     }
 }
 
-/// Run decentralized projected gradient descent. When `engine` is `Some`,
-/// gradient averages are found by gossip (and charged to its ledger);
-/// otherwise the exact average is used. Implemented as a loop over
-/// [`DgdAlgorithm`] — the one-shot call and the session-driven path are
-/// the same computation.
+/// Run decentralized projected gradient descent. When `fabric` is
+/// `Some`, gradient averages run over it (and are charged to its
+/// engine's ledger); otherwise the exact average is used. Implemented as
+/// a loop over [`DgdAlgorithm`] — the one-shot call and the
+/// session-driven path are the same computation.
 pub fn solve_dgd(
     nodes: &[DgdNode],
     q: usize,
     n: usize,
     params: &DgdParams,
-    engine: Option<&GossipEngine>,
+    fabric: Option<&dyn CommFabric>,
 ) -> Result<DgdSolution> {
-    let mut alg = DgdAlgorithm::new(nodes, q, n, params, engine)?;
+    let mut alg = DgdAlgorithm::new(nodes, q, n, params, fabric)?;
     crate::session::drive_to_completion(&mut alg)?;
     alg.into_solution()
 }
@@ -347,6 +353,7 @@ mod tests {
     fn gossip_dgd_charges_much_more_traffic_than_admm_for_same_accuracy() {
         // The eq.(16) mechanism in miniature: same topology, same target
         // objective gap, DGD needs far more scalars on the wire.
+        use crate::network::SynchronousFabric;
         let y = rand_mat(6, 48, 5);
         let t = rand_mat(2, 48, 6);
         let eps = 4.0;
@@ -389,13 +396,13 @@ mod tests {
         // DGD side: run until it reaches the same objective value.
         let nodes = split_nodes(&y, &t, m);
         let step = 0.5 / y.gram().as_slice().iter().sum::<f64>().abs();
-        let dgd_engine = mk_engine();
+        let dgd_fabric = SynchronousFabric::new(mk_engine());
         let sol = solve_dgd(
             &nodes,
             2,
             6,
             &DgdParams { step, iterations: 3000, eps, delta: 1e-8 },
-            Some(&dgd_engine),
+            Some(&dgd_fabric),
         )
         .unwrap();
         let reached = sol
@@ -403,8 +410,8 @@ mod tests {
             .iter()
             .position(|&c| c <= admm_cost * 1.001)
             .unwrap_or(sol.cost_curve.len());
-        let dgd_bytes =
-            dgd_engine.ledger().snapshot().bytes * reached as u64 / sol.cost_curve.len() as u64;
+        let dgd_bytes = dgd_fabric.engine().ledger().snapshot().bytes * reached as u64
+            / sol.cost_curve.len() as u64;
         assert!(
             dgd_bytes > admm_bytes,
             "DGD bytes {dgd_bytes} should exceed ADMM bytes {admm_bytes}"
@@ -429,6 +436,49 @@ mod tests {
         assert_eq!(o.max_abs_diff(&direct.o), 0.0);
         assert_eq!(report.layers[0].cost_curve, direct.cost_curve);
         assert!(report.mode.starts_with("dgd("));
+    }
+
+    #[test]
+    fn dgd_over_semisync_fabric_still_converges() {
+        // The baseline exercises the same pluggable schedules as the
+        // trainer: a staleness-2 fabric perturbs each gradient average
+        // slightly but projected GD still reaches the ADMM optimum's
+        // neighbourhood.
+        use crate::network::SemiSyncFabric;
+        let y = rand_mat(6, 60, 31);
+        let t = rand_mat(2, 60, 32);
+        let eps = 4.0;
+        let admm = solve_centralized(
+            &y,
+            &t,
+            &AdmmParams { mu: 1.0, eps, iterations: 500 },
+        )
+        .unwrap()
+        .0;
+        let m = 4;
+        let engine = GossipEngine::new(
+            MixingMatrix::build(
+                &Topology::Circular { nodes: m, degree: 2 },
+                WeightRule::EqualNeighbor,
+            )
+            .unwrap(),
+            Arc::new(CommLedger::new()),
+            LatencyModel::default(),
+        );
+        let fabric = SemiSyncFabric::new(engine, 2, 5);
+        let nodes = split_nodes(&y, &t, m);
+        let step = 0.5 / y.gram().as_slice().iter().sum::<f64>().abs();
+        let sol = solve_dgd(
+            &nodes,
+            2,
+            6,
+            &DgdParams { step, iterations: 4000, eps, delta: 1e-9 },
+            Some(&fabric),
+        )
+        .unwrap();
+        let diff = sol.o.max_abs_diff(&admm);
+        assert!(diff < 2e-2, "semisync DGD vs ADMM diff {diff}");
+        assert!(sol.gossip_rounds > 0);
     }
 
     #[test]

@@ -25,6 +25,10 @@
 //! nodes = 20
 //! degree = 4
 //! delta = 1e-9
+//! schedule = "sync"        # or "semisync" / "lossy"
+//! staleness = 2            # semisync: neighbour reads up to s rounds stale
+//! loss_p = 0.1             # lossy: per-round edge-drop probability
+//! adaptive_delta = 1e-4    # enable adaptive δ with this max_delta
 //! alpha = 0.001
 //! beta = 125000000.0
 //!
@@ -36,7 +40,7 @@
 
 use crate::coordinator::{ConsensusMode, TrainOptions};
 use crate::data::{lookup, ClassificationTask};
-use crate::network::{LatencyModel, Topology, WeightRule};
+use crate::network::{AdaptiveDeltaPolicy, CommSchedule, LatencyModel, Topology, WeightRule};
 use crate::ssfn::{SsfnArchitecture, TrainHyper};
 use crate::{Error, Result};
 use std::collections::BTreeMap;
@@ -76,6 +80,15 @@ pub struct ExperimentConfig {
     pub degree: usize,
     /// Gossip contraction target per averaging.
     pub delta: f64,
+    /// Communication schedule: `"sync"`, `"semisync"` or `"lossy"`.
+    pub schedule: String,
+    /// Staleness bound `s` for the semi-sync schedule.
+    pub staleness: usize,
+    /// Per-round edge-drop probability for the lossy schedule.
+    pub loss_p: f64,
+    /// Enable adaptive δ with this `max_delta` (plateau/loosen at their
+    /// [`AdaptiveDeltaPolicy`] defaults).
+    pub adaptive_delta: Option<f64>,
     /// Use exact averaging instead of gossip (ablation).
     pub exact_consensus: bool,
     /// α of the latency model (s/round).
@@ -106,6 +119,10 @@ impl Default for ExperimentConfig {
             nodes: 20,
             degree: 4,
             delta: 1e-9,
+            schedule: "sync".into(),
+            staleness: 2,
+            loss_p: 0.1,
+            adaptive_delta: None,
             exact_consensus: false,
             alpha: 1e-3,
             beta: 125e6,
@@ -171,6 +188,15 @@ impl ExperimentConfig {
             "network.nodes" => self.nodes = num(key, value)?,
             "network.degree" => self.degree = num(key, value)?,
             "network.delta" => self.delta = num(key, value)?,
+            "network.schedule" => {
+                if !SCHEDULE_NAMES.contains(&value) {
+                    return Err(unknown_schedule(value));
+                }
+                self.schedule = value.to_string();
+            }
+            "network.staleness" => self.staleness = num(key, value)?,
+            "network.loss_p" => self.loss_p = num(key, value)?,
+            "network.adaptive_delta" => self.adaptive_delta = Some(num(key, value)?),
             "network.exact_consensus" => self.exact_consensus = num(key, value)?,
             "network.alpha" => self.alpha = num(key, value)?,
             "network.beta" => self.beta = num(key, value)?,
@@ -241,6 +267,19 @@ impl ExperimentConfig {
         Ok(opts)
     }
 
+    /// The typed communication schedule the `network.schedule` /
+    /// `network.staleness` / `network.loss_p` knobs describe.
+    pub fn comm_schedule(&self) -> Result<CommSchedule> {
+        let schedule = match self.schedule.as_str() {
+            "sync" => CommSchedule::Synchronous,
+            "semisync" => CommSchedule::SemiSync { staleness: self.staleness },
+            "lossy" => CommSchedule::Lossy { loss_p: self.loss_p },
+            other => return Err(unknown_schedule(other)),
+        };
+        schedule.validate()?;
+        Ok(schedule)
+    }
+
     /// Generate the configured dataset.
     pub fn generate_task(&self) -> Result<ClassificationTask> {
         lookup(&self.dataset)?.generator(self.seed).generate()
@@ -277,10 +316,21 @@ impl ExperimentConfig {
             b = b.eps(e);
         }
         b = if self.exact_consensus {
+            if self.comm_schedule()? != CommSchedule::Synchronous {
+                return Err(Error::Config(
+                    "schedule applies to gossip consensus only (exact_consensus is set)".into(),
+                ));
+            }
             b.exact_consensus()
         } else {
-            b.gossip_delta(self.delta)
+            b.gossip_delta(self.delta).comm_fabric(self.comm_schedule()?)
         };
+        if let Some(max_delta) = self.adaptive_delta {
+            b = b.adaptive_delta(AdaptiveDeltaPolicy {
+                max_delta,
+                ..AdaptiveDeltaPolicy::default()
+            });
+        }
         if self.backend == BackendKind::Pjrt {
             let manifest = crate::runtime::ArtifactManifest::load(&self.artifacts_dir)?;
             let backend = crate::runtime::PjrtBackend::start(&manifest, &self.dataset)?;
@@ -288,6 +338,17 @@ impl ExperimentConfig {
         }
         Ok(b)
     }
+}
+
+/// The accepted `network.schedule` names (TOML and `--schedule` share
+/// this list; [`ExperimentConfig::comm_schedule`] holds the one
+/// name-to-variant mapping).
+pub const SCHEDULE_NAMES: [&str; 3] = ["sync", "semisync", "lossy"];
+
+fn unknown_schedule(got: &str) -> Error {
+    Error::Config(format!(
+        "schedule must be one of {SCHEDULE_NAMES:?}, got '{got}'"
+    ))
 }
 
 /// Parse a TOML subset into a flat `section.key -> value` map.
@@ -458,6 +519,55 @@ exact_consensus = true
         // Later duplicate keys win (flat map semantics).
         let cfg = ExperimentConfig::from_toml("[model]\nlayers = 3\nlayers = 4").unwrap();
         assert_eq!(cfg.layers, 4);
+    }
+
+    #[test]
+    fn comm_schedule_keys_parse_and_validate() {
+        let cfg = ExperimentConfig::from_toml(
+            "[network]\nschedule = \"semisync\"\nstaleness = 3",
+        )
+        .unwrap();
+        assert_eq!(cfg.comm_schedule().unwrap(), CommSchedule::SemiSync { staleness: 3 });
+        let cfg = ExperimentConfig::from_toml(
+            "[network]\nschedule = \"lossy\"\nloss_p = 0.25",
+        )
+        .unwrap();
+        assert_eq!(cfg.comm_schedule().unwrap(), CommSchedule::Lossy { loss_p: 0.25 });
+        assert_eq!(
+            ExperimentConfig::default().comm_schedule().unwrap(),
+            CommSchedule::Synchronous
+        );
+        // Unknown schedule names and invalid probabilities are rejected.
+        assert!(ExperimentConfig::from_toml("[network]\nschedule = \"psync\"").is_err());
+        let bad = ExperimentConfig::from_toml("[network]\nschedule = \"lossy\"\nloss_p = 1.5")
+            .unwrap();
+        assert!(bad.comm_schedule().is_err());
+        // Adaptive δ lowers into the builder.
+        let cfg = ExperimentConfig::from_toml("[network]\nadaptive_delta = 1e-4").unwrap();
+        assert_eq!(cfg.adaptive_delta, Some(1e-4));
+        assert!(cfg.session_builder().is_ok());
+        // Exact consensus refuses a relaxed schedule.
+        let cfg = ExperimentConfig::from_toml(
+            "[network]\nexact_consensus = true\nschedule = \"semisync\"",
+        )
+        .unwrap();
+        assert!(cfg.session_builder().is_err());
+    }
+
+    #[test]
+    fn semisync_config_trains_end_to_end() {
+        let mut cfg = ExperimentConfig::named_dataset("quickstart").unwrap();
+        cfg.layers = 1;
+        cfg.hidden_extra = 10;
+        cfg.admm_iterations = 3;
+        cfg.nodes = 2;
+        cfg.degree = 1;
+        cfg.threads = 1;
+        cfg.schedule = "semisync".into();
+        cfg.staleness = 1;
+        let session = cfg.session_builder().unwrap().build().unwrap();
+        let (_model, report) = session.run_to_completion().unwrap();
+        assert!(report.mode.contains("semisync(s=1)"), "{}", report.mode);
     }
 
     #[test]

@@ -3,32 +3,48 @@
 //! A [`Checkpoint`] captures everything the
 //! [`super::DssfnAlgorithm`] state machine needs to continue a run as if
 //! it had never stopped: the full configuration (architecture,
-//! hyper-parameters, decentralization options, master seed), the
-//! per-node ADMM states `O_m/Λ_m/Z_m`, each node's current feature
-//! matrix `Y_{l,m}`, node 0's weight stack, the partial per-layer
-//! records, and the communication ledger / simulated-clock counters.
-//! Quantities that are *derived deterministically* from the seed and the
-//! task — the data shards, the pre-shared random matrices `R_l`, the
-//! Gram factorizations of the current layer — are rebuilt on restore
-//! rather than stored; every rebuild is bit-identical by construction
-//! (pinned by `tests/coordinator_oracle.rs`).
+//! hyper-parameters, decentralization options, communication fabric,
+//! master seed), the per-node ADMM states `O_m/Λ_m/Z_m`, each node's
+//! current feature matrix `Y_{l,m}`, node 0's weight stack, the partial
+//! per-layer records, and the communication ledger / simulated-clock /
+//! fabric-schedule counters. Quantities that are *derived
+//! deterministically* from the seed and the task — the data shards, the
+//! pre-shared random matrices `R_l`, the Gram factorizations of the
+//! current layer — are rebuilt on restore rather than stored; every
+//! rebuild is bit-identical by construction (pinned by
+//! `tests/coordinator_oracle.rs`).
 //!
 //! The wire format is a versioned little-endian binary layout written by
 //! hand (the offline build carries no serde): all integers are `u64`/`u8`
 //! tags, all floats round-trip through `f64::to_le_bytes`, so restored
 //! state is **bit-identical**, not approximately equal.
+//!
+//! Serialization streams through any [`std::io::Write`]
+//! ([`Checkpoint::write_to`]) and parses from any [`std::io::Read`]
+//! ([`Checkpoint::read_from`]), so paper-scale sessions checkpoint to
+//! disk without materializing a second copy of the state in memory;
+//! [`Checkpoint::to_bytes`] / [`Checkpoint::from_bytes`] are thin
+//! adapters over the same codec and produce identical bytes.
 
 use super::{ConsensusMode, TrainOptions};
 use crate::admm::NodeState;
 use crate::linalg::Matrix;
 use crate::metrics::LayerRecord;
-use crate::network::{CommSnapshot, LatencyModel, Topology, WeightRule};
+use crate::network::{
+    AdaptiveDeltaPolicy, CommConfig, CommSchedule, CommSnapshot, LatencyModel, Topology,
+    WeightRule,
+};
 use crate::ssfn::{SsfnArchitecture, TrainHyper};
 use crate::{Error, Result};
+use std::io;
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"DSSFNCKP";
-const VERSION: u32 = 1;
+/// Version 2 added the communication-fabric configuration (schedule,
+/// adaptive-δ policy) and its runtime cursors (`fabric_calls`,
+/// `current_delta`). Version-1 checkpoints predate pluggable fabrics
+/// and are rejected with a clear error.
+const VERSION: u32 = 2;
 
 /// Where inside the layer state machine the snapshot was taken.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -41,16 +57,18 @@ pub(crate) enum CkPhase {
     Advance,
 }
 
-/// A serialized-state snapshot of a [`super::TrainSession`]-driven dSSFN
-/// run. Obtain one with [`crate::session::TrainSession::checkpoint`],
-/// persist it with [`Checkpoint::save`] / [`Checkpoint::to_bytes`], and
-/// continue training with [`super::resume_session`].
+/// A serialized-state snapshot of a [`crate::session::TrainSession`]-driven
+/// dSSFN run. Obtain one with
+/// [`crate::session::TrainSession::checkpoint`], persist it with
+/// [`Checkpoint::save`] / [`Checkpoint::write_to`], and continue
+/// training with [`super::resume_session`].
 #[derive(Debug, Clone)]
 pub struct Checkpoint {
     pub(crate) seed: u64,
     pub(crate) arch: SsfnArchitecture,
     pub(crate) hyper: TrainHyper,
     pub(crate) opts: TrainOptions,
+    pub(crate) comm: CommConfig,
     pub(crate) growth: Option<f64>,
     pub(crate) dataset: String,
     pub(crate) train_samples: u64,
@@ -66,6 +84,12 @@ pub struct Checkpoint {
     pub(crate) states: Vec<NodeState>,
     pub(crate) cost_curve: Vec<f64>,
     pub(crate) gossip_rounds: u64,
+    /// Fabric schedule cursor: averaging calls performed so far, so
+    /// seeded schedules (staleness draws, edge drops) replay exactly.
+    pub(crate) fabric_calls: u64,
+    /// Working consensus tolerance of the current layer (differs from
+    /// the configured δ only under the adaptive controller).
+    pub(crate) current_delta: f64,
     pub(crate) comm_before: CommSnapshot,
     pub(crate) ledger_total: CommSnapshot,
     pub(crate) sim_secs: f64,
@@ -104,107 +128,146 @@ impl Checkpoint {
         self.seed
     }
 
-    /// Serialize to the versioned binary format.
-    pub fn to_bytes(&self) -> Vec<u8> {
-        let mut w = Writer::new();
-        w.bytes(MAGIC);
-        w.u32(VERSION);
-        w.u64(self.seed);
+    /// The communication configuration of the checkpointed run.
+    pub fn comm_config(&self) -> CommConfig {
+        self.comm
+    }
+
+    /// Stream the versioned binary format into any writer. The bytes
+    /// are identical to [`Checkpoint::to_bytes`]; no intermediate
+    /// buffer of the full state is built.
+    pub fn write_to<W: io::Write>(&self, w: W) -> Result<()> {
+        let mut w = Encoder { w };
+        w.bytes(MAGIC)?;
+        w.u32(VERSION)?;
+        w.u64(self.seed)?;
         // Architecture.
-        w.u64(self.arch.input_dim as u64);
-        w.u64(self.arch.num_classes as u64);
-        w.u64(self.arch.hidden as u64);
-        w.u64(self.arch.layers as u64);
+        w.u64(self.arch.input_dim as u64)?;
+        w.u64(self.arch.num_classes as u64)?;
+        w.u64(self.arch.hidden as u64)?;
+        w.u64(self.arch.layers as u64)?;
         // Hyper-parameters.
-        w.f64(self.hyper.mu0);
-        w.f64(self.hyper.mul);
-        w.u64(self.hyper.admm_iterations as u64);
-        w.opt_f64(self.hyper.eps);
+        w.f64(self.hyper.mu0)?;
+        w.f64(self.hyper.mul)?;
+        w.u64(self.hyper.admm_iterations as u64)?;
+        w.opt_f64(self.hyper.eps)?;
         // Decentralization options.
-        w.u64(self.opts.nodes as u64);
+        w.u64(self.opts.nodes as u64)?;
         match self.opts.topology {
             Topology::Circular { nodes, degree } => {
-                w.u8(0);
-                w.u64(nodes as u64);
-                w.u64(degree as u64);
+                w.u8(0)?;
+                w.u64(nodes as u64)?;
+                w.u64(degree as u64)?;
             }
             Topology::Complete { nodes } => {
-                w.u8(1);
-                w.u64(nodes as u64);
+                w.u8(1)?;
+                w.u64(nodes as u64)?;
             }
             Topology::Star { nodes } => {
-                w.u8(2);
-                w.u64(nodes as u64);
+                w.u8(2)?;
+                w.u64(nodes as u64)?;
             }
             Topology::RandomGeometric { nodes, radius, seed } => {
-                w.u8(3);
-                w.u64(nodes as u64);
-                w.f64(radius);
-                w.u64(seed);
+                w.u8(3)?;
+                w.u64(nodes as u64)?;
+                w.f64(radius)?;
+                w.u64(seed)?;
             }
         }
         w.u8(match self.opts.weight_rule {
             WeightRule::EqualNeighbor => 0,
             WeightRule::Metropolis => 1,
-        });
+        })?;
         match self.opts.consensus {
-            ConsensusMode::Exact => w.u8(0),
+            ConsensusMode::Exact => w.u8(0)?,
             ConsensusMode::Gossip { delta } => {
-                w.u8(1);
-                w.f64(delta);
+                w.u8(1)?;
+                w.f64(delta)?;
             }
         }
-        w.f64(self.opts.latency.alpha);
-        w.f64(self.opts.latency.beta);
-        w.u64(self.opts.threads as u64);
-        w.u8(self.opts.record_cost_curve as u8);
+        w.f64(self.opts.latency.alpha)?;
+        w.f64(self.opts.latency.beta)?;
+        w.u64(self.opts.threads as u64)?;
+        w.u8(self.opts.record_cost_curve as u8)?;
+        // Communication fabric (v2).
+        match self.comm.schedule {
+            CommSchedule::Synchronous => w.u8(0)?,
+            CommSchedule::SemiSync { staleness } => {
+                w.u8(1)?;
+                w.u64(staleness as u64)?;
+            }
+            CommSchedule::Lossy { loss_p } => {
+                w.u8(2)?;
+                w.f64(loss_p)?;
+            }
+        }
+        match self.comm.adaptive_delta {
+            None => w.u8(0)?,
+            Some(p) => {
+                w.u8(1)?;
+                w.f64(p.max_delta)?;
+                w.f64(p.plateau)?;
+                w.f64(p.loosen)?;
+            }
+        }
         // Growth policy, task fingerprint.
-        w.opt_f64(self.growth);
-        w.string(&self.dataset);
-        w.u64(self.train_samples);
-        w.u64(self.train_checksum);
+        w.opt_f64(self.growth)?;
+        w.string(&self.dataset)?;
+        w.u64(self.train_samples)?;
+        w.u64(self.train_checksum)?;
         // Progress.
-        w.u64(self.layer);
+        w.u64(self.layer)?;
         match self.phase {
-            CkPhase::Prepare => w.u8(0),
+            CkPhase::Prepare => w.u8(0)?,
             CkPhase::Iterate(k) => {
-                w.u8(1);
-                w.u64(k);
+                w.u8(1)?;
+                w.u64(k)?;
             }
-            CkPhase::Advance => w.u8(2),
+            CkPhase::Advance => w.u8(2)?,
         }
-        w.matrices(&self.weights);
-        w.matrices(&self.ys);
-        w.u64(self.states.len() as u64);
+        w.matrices(&self.weights)?;
+        w.matrices(&self.ys)?;
+        w.u64(self.states.len() as u64)?;
         for st in &self.states {
-            w.matrix(&st.o);
-            w.matrix(&st.lambda);
-            w.matrix(&st.z);
+            w.matrix(&st.o)?;
+            w.matrix(&st.lambda)?;
+            w.matrix(&st.z)?;
         }
-        w.f64s(&self.cost_curve);
-        w.u64(self.gossip_rounds);
-        w.snapshot(&self.comm_before);
-        w.snapshot(&self.ledger_total);
-        w.f64(self.sim_secs);
-        w.f64(self.wall_base);
-        w.opt_f64(self.prev_layer_cost);
+        w.f64s(&self.cost_curve)?;
+        w.u64(self.gossip_rounds)?;
+        w.u64(self.fabric_calls)?;
+        w.f64(self.current_delta)?;
+        w.snapshot(&self.comm_before)?;
+        w.snapshot(&self.ledger_total)?;
+        w.f64(self.sim_secs)?;
+        w.f64(self.wall_base)?;
+        w.opt_f64(self.prev_layer_cost)?;
         // Completed layer records.
-        w.u64(self.report_layers.len() as u64);
+        w.u64(self.report_layers.len() as u64)?;
         for rec in &self.report_layers {
-            w.u64(rec.layer as u64);
-            w.f64s(&rec.cost_curve);
-            w.f64(rec.wall_secs);
-            w.u64(rec.gossip_rounds as u64);
-            w.snapshot(&rec.comm);
-            w.f64(rec.consensus_disagreement);
+            w.u64(rec.layer as u64)?;
+            w.f64s(&rec.cost_curve)?;
+            w.f64(rec.wall_secs)?;
+            w.u64(rec.gossip_rounds as u64)?;
+            w.snapshot(&rec.comm)?;
+            w.f64(rec.consensus_disagreement)?;
         }
-        w.buf
+        w.flush()
     }
 
-    /// Parse the versioned binary format.
-    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
-        let mut r = Reader::new(bytes);
-        if r.bytes(8)? != &MAGIC[..] {
+    /// Serialize to the versioned binary format in memory.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(256);
+        self.write_to(&mut buf)
+            .expect("writing a checkpoint to a Vec cannot fail");
+        buf
+    }
+
+    /// Parse the versioned binary format from any reader, consuming it
+    /// to the end (trailing bytes are an error).
+    pub fn read_from<R: io::Read>(r: R) -> Result<Self> {
+        let mut r = Decoder { r };
+        if r.take(8)?.as_slice() != &MAGIC[..] {
             return Err(Error::Checkpoint("bad magic (not a dssfn checkpoint)".into()));
         }
         let version = r.u32()?;
@@ -260,6 +323,22 @@ impl Checkpoint {
             threads,
             record_cost_curve,
         };
+        let schedule = match r.u8()? {
+            0 => CommSchedule::Synchronous,
+            1 => CommSchedule::SemiSync { staleness: r.usize_()? },
+            2 => CommSchedule::Lossy { loss_p: r.f64()? },
+            t => return Err(Error::Checkpoint(format!("unknown schedule tag {t}"))),
+        };
+        let adaptive_delta = match r.u8()? {
+            0 => None,
+            1 => Some(AdaptiveDeltaPolicy {
+                max_delta: r.f64()?,
+                plateau: r.f64()?,
+                loosen: r.f64()?,
+            }),
+            t => return Err(Error::Checkpoint(format!("bad adaptive-δ tag {t}"))),
+        };
+        let comm = CommConfig { schedule, adaptive_delta };
         let growth = r.opt_f64()?;
         let dataset = r.string()?;
         let train_samples = r.u64()?;
@@ -283,6 +362,8 @@ impl Checkpoint {
         }
         let cost_curve = r.f64s()?;
         let gossip_rounds = r.u64()?;
+        let fabric_calls = r.u64()?;
+        let current_delta = r.f64()?;
         let comm_before = r.snapshot()?;
         let ledger_total = r.snapshot()?;
         let sim_secs = r.f64()?;
@@ -300,14 +381,13 @@ impl Checkpoint {
                 consensus_disagreement: r.f64()?,
             });
         }
-        if !r.is_empty() {
-            return Err(Error::Checkpoint("trailing bytes after checkpoint".into()));
-        }
+        r.finish()?;
         Ok(Self {
             seed,
             arch,
             hyper,
             opts,
+            comm,
             growth,
             dataset,
             train_samples,
@@ -319,6 +399,8 @@ impl Checkpoint {
             states,
             cost_curve,
             gossip_rounds,
+            fabric_calls,
+            current_delta,
             comm_before,
             ledger_total,
             sim_secs,
@@ -328,7 +410,13 @@ impl Checkpoint {
         })
     }
 
-    /// Write the checkpoint to a file (parent directories created).
+    /// Parse the versioned binary format from an in-memory buffer.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        Self::read_from(bytes)
+    }
+
+    /// Stream the checkpoint to a file (parent directories created); the
+    /// state is never duplicated in memory.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         let path = path.as_ref();
         if let Some(parent) = path.parent() {
@@ -336,128 +424,138 @@ impl Checkpoint {
                 std::fs::create_dir_all(parent)?;
             }
         }
-        std::fs::write(path, self.to_bytes())?;
-        Ok(())
+        let file = std::fs::File::create(path)?;
+        self.write_to(io::BufWriter::new(file))
     }
 
-    /// Read a checkpoint from a file.
+    /// Read a checkpoint from a file, parsing as it streams in.
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
-        let bytes = std::fs::read(path.as_ref())?;
-        Self::from_bytes(&bytes)
+        let file = std::fs::File::open(path.as_ref())?;
+        Self::read_from(io::BufReader::new(file))
     }
 }
 
 // ---------------------------------------------------------------------
-// Minimal little-endian codec.
+// Minimal little-endian codec over std::io.
 
-struct Writer {
-    buf: Vec<u8>,
+struct Encoder<W: io::Write> {
+    w: W,
 }
 
-impl Writer {
-    fn new() -> Self {
-        Self { buf: Vec::with_capacity(256) }
+impl<W: io::Write> Encoder<W> {
+    fn bytes(&mut self, b: &[u8]) -> Result<()> {
+        self.w.write_all(b).map_err(Error::Io)
     }
-    fn bytes(&mut self, b: &[u8]) {
-        self.buf.extend_from_slice(b);
+    fn u8(&mut self, v: u8) -> Result<()> {
+        self.bytes(&[v])
     }
-    fn u8(&mut self, v: u8) {
-        self.buf.push(v);
+    fn u32(&mut self, v: u32) -> Result<()> {
+        self.bytes(&v.to_le_bytes())
     }
-    fn u32(&mut self, v: u32) {
-        self.buf.extend_from_slice(&v.to_le_bytes());
+    fn u64(&mut self, v: u64) -> Result<()> {
+        self.bytes(&v.to_le_bytes())
     }
-    fn u64(&mut self, v: u64) {
-        self.buf.extend_from_slice(&v.to_le_bytes());
+    fn f64(&mut self, v: f64) -> Result<()> {
+        self.bytes(&v.to_le_bytes())
     }
-    fn f64(&mut self, v: f64) {
-        self.buf.extend_from_slice(&v.to_le_bytes());
-    }
-    fn opt_f64(&mut self, v: Option<f64>) {
+    fn opt_f64(&mut self, v: Option<f64>) -> Result<()> {
         match v {
             Some(x) => {
-                self.u8(1);
-                self.f64(x);
+                self.u8(1)?;
+                self.f64(x)
             }
             None => self.u8(0),
         }
     }
-    fn string(&mut self, s: &str) {
-        self.u64(s.len() as u64);
-        self.bytes(s.as_bytes());
+    fn string(&mut self, s: &str) -> Result<()> {
+        self.u64(s.len() as u64)?;
+        self.bytes(s.as_bytes())
     }
-    fn f64s(&mut self, xs: &[f64]) {
-        self.u64(xs.len() as u64);
+    fn f64s(&mut self, xs: &[f64]) -> Result<()> {
+        self.u64(xs.len() as u64)?;
         for &x in xs {
-            self.f64(x);
+            self.f64(x)?;
         }
+        Ok(())
     }
-    fn matrix(&mut self, m: &Matrix) {
-        self.u64(m.rows() as u64);
-        self.u64(m.cols() as u64);
+    fn matrix(&mut self, m: &Matrix) -> Result<()> {
+        self.u64(m.rows() as u64)?;
+        self.u64(m.cols() as u64)?;
         for &x in m.as_slice() {
-            self.f64(x);
+            self.f64(x)?;
         }
+        Ok(())
     }
-    fn matrices(&mut self, ms: &[Matrix]) {
-        self.u64(ms.len() as u64);
+    fn matrices(&mut self, ms: &[Matrix]) -> Result<()> {
+        self.u64(ms.len() as u64)?;
         for m in ms {
-            self.matrix(m);
+            self.matrix(m)?;
         }
+        Ok(())
     }
-    fn snapshot(&mut self, s: &CommSnapshot) {
-        self.u64(s.messages);
-        self.u64(s.bytes);
-        self.u64(s.rounds);
-        self.u64(s.scalars);
+    fn snapshot(&mut self, s: &CommSnapshot) -> Result<()> {
+        self.u64(s.messages)?;
+        self.u64(s.bytes)?;
+        self.u64(s.rounds)?;
+        self.u64(s.scalars)
+    }
+    fn flush(&mut self) -> Result<()> {
+        self.w.flush().map_err(Error::Io)
     }
 }
 
-struct Reader<'a> {
-    buf: &'a [u8],
-    pos: usize,
+/// Map an unexpected-EOF to the codec's own truncation error; pass
+/// genuine I/O failures through.
+fn read_err(e: io::Error) -> Error {
+    if e.kind() == io::ErrorKind::UnexpectedEof {
+        Error::Checkpoint("truncated checkpoint".into())
+    } else {
+        Error::Io(e)
+    }
 }
 
-impl<'a> Reader<'a> {
-    fn new(buf: &'a [u8]) -> Self {
-        Self { buf, pos: 0 }
-    }
-    fn remaining(&self) -> usize {
-        self.buf.len() - self.pos
-    }
-    fn is_empty(&self) -> bool {
-        self.remaining() == 0
-    }
-    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.remaining() < n {
-            return Err(Error::Checkpoint("truncated checkpoint".into()));
+struct Decoder<R: io::Read> {
+    r: R,
+}
+
+impl<R: io::Read> Decoder<R> {
+    fn take(&mut self, n: usize) -> Result<Vec<u8>> {
+        // Grow as bytes actually arrive so a bogus length prefix cannot
+        // force a huge up-front allocation.
+        let mut out = Vec::with_capacity(n.min(1 << 20));
+        let mut chunk = [0u8; 4096];
+        let mut left = n;
+        while left > 0 {
+            let want = left.min(chunk.len());
+            self.r.read_exact(&mut chunk[..want]).map_err(read_err)?;
+            out.extend_from_slice(&chunk[..want]);
+            left -= want;
         }
-        let out = &self.buf[self.pos..self.pos + n];
-        self.pos += n;
         Ok(out)
     }
     fn u8(&mut self) -> Result<u8> {
-        Ok(self.bytes(1)?[0])
+        let mut b = [0u8; 1];
+        self.r.read_exact(&mut b).map_err(read_err)?;
+        Ok(b[0])
     }
     fn u32(&mut self) -> Result<u32> {
-        let b = self.bytes(4)?;
-        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        let mut b = [0u8; 4];
+        self.r.read_exact(&mut b).map_err(read_err)?;
+        Ok(u32::from_le_bytes(b))
     }
     fn u64(&mut self) -> Result<u64> {
-        let b = self.bytes(8)?;
-        let mut a = [0u8; 8];
-        a.copy_from_slice(b);
-        Ok(u64::from_le_bytes(a))
+        let mut b = [0u8; 8];
+        self.r.read_exact(&mut b).map_err(read_err)?;
+        Ok(u64::from_le_bytes(b))
     }
     fn usize_(&mut self) -> Result<usize> {
         let v = self.u64()?;
         usize::try_from(v).map_err(|_| Error::Checkpoint(format!("count {v} overflows usize")))
     }
     fn f64(&mut self) -> Result<f64> {
-        let b = self.bytes(8)?;
-        let mut a = [0u8; 8];
-        a.copy_from_slice(b);
-        Ok(f64::from_le_bytes(a))
+        let mut b = [0u8; 8];
+        self.r.read_exact(&mut b).map_err(read_err)?;
+        Ok(f64::from_le_bytes(b))
     }
     fn opt_f64(&mut self) -> Result<Option<f64>> {
         match self.u8()? {
@@ -468,16 +566,13 @@ impl<'a> Reader<'a> {
     }
     fn string(&mut self) -> Result<String> {
         let n = self.usize_()?;
-        let b = self.bytes(n)?;
-        String::from_utf8(b.to_vec())
+        let b = self.take(n)?;
+        String::from_utf8(b)
             .map_err(|_| Error::Checkpoint("non-utf8 string in checkpoint".into()))
     }
     fn f64s(&mut self) -> Result<Vec<f64>> {
         let n = self.usize_()?;
-        if self.remaining() < n.saturating_mul(8) {
-            return Err(Error::Checkpoint("truncated f64 array".into()));
-        }
-        let mut out = Vec::with_capacity(n);
+        let mut out = Vec::with_capacity(n.min(1 << 20));
         for _ in 0..n {
             out.push(self.f64()?);
         }
@@ -487,10 +582,7 @@ impl<'a> Reader<'a> {
         let rows = self.usize_()?;
         let cols = self.usize_()?;
         let len = rows.saturating_mul(cols);
-        if self.remaining() < len.saturating_mul(8) {
-            return Err(Error::Checkpoint("truncated matrix payload".into()));
-        }
-        let mut data = Vec::with_capacity(len);
+        let mut data = Vec::with_capacity(len.min(1 << 20));
         for _ in 0..len {
             data.push(self.f64()?);
         }
@@ -513,6 +605,21 @@ impl<'a> Reader<'a> {
             scalars: self.u64()?,
         })
     }
+    /// Assert end-of-stream.
+    fn finish(mut self) -> Result<()> {
+        let mut b = [0u8; 1];
+        loop {
+            match self.r.read(&mut b) {
+                Ok(0) => return Ok(()),
+                Ok(_) => {
+                    return Err(Error::Checkpoint("trailing bytes after checkpoint".into()))
+                }
+                // read_exact retries EINTR internally; match that here.
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(Error::Io(e)),
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -532,6 +639,14 @@ mod tests {
                 latency: LatencyModel::default(),
                 threads: 4,
                 record_cost_curve: true,
+            },
+            comm: CommConfig {
+                schedule: CommSchedule::SemiSync { staleness: 2 },
+                adaptive_delta: Some(AdaptiveDeltaPolicy {
+                    max_delta: 1e-4,
+                    plateau: 1e-3,
+                    loosen: 10.0,
+                }),
             },
             growth: Some(0.25),
             dataset: "oracle-toy".into(),
@@ -554,6 +669,8 @@ mod tests {
             ],
             cost_curve: vec![5.0, 4.0, 3.5],
             gossip_rounds: 66,
+            fabric_calls: 37,
+            current_delta: 1e-7,
             comm_before: CommSnapshot { messages: 10, bytes: 80, rounds: 5, scalars: 10 },
             ledger_total: CommSnapshot { messages: 20, bytes: 160, rounds: 10, scalars: 20 },
             sim_secs: 1.25,
@@ -583,6 +700,10 @@ mod tests {
         assert_eq!(back.opts.topology, ck.opts.topology);
         assert_eq!(back.opts.consensus, ck.opts.consensus);
         assert_eq!(back.opts.record_cost_curve, ck.opts.record_cost_curve);
+        assert_eq!(back.comm, ck.comm);
+        assert_eq!(back.comm_config(), ck.comm);
+        assert_eq!(back.fabric_calls, 37);
+        assert_eq!(back.current_delta.to_bits(), ck.current_delta.to_bits());
         assert_eq!(back.growth, ck.growth);
         assert_eq!(back.train_checksum, ck.train_checksum);
         assert_eq!(back.dataset(), "oracle-toy");
@@ -610,6 +731,49 @@ mod tests {
     }
 
     #[test]
+    fn roundtrip_covers_every_schedule_variant() {
+        for (schedule, adaptive) in [
+            (CommSchedule::Synchronous, None),
+            (CommSchedule::SemiSync { staleness: 4 }, None),
+            (CommSchedule::Lossy { loss_p: 0.125 }, Some(AdaptiveDeltaPolicy::default())),
+        ] {
+            let mut ck = sample();
+            ck.comm = CommConfig { schedule, adaptive_delta: adaptive };
+            let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+            assert_eq!(back.comm, ck.comm);
+        }
+    }
+
+    #[test]
+    fn streaming_encoder_matches_in_memory_bytes() {
+        // The Write-based encoder IS to_bytes's implementation, but pin
+        // the equivalence through an independent chunked writer anyway.
+        struct OneByte(Vec<u8>);
+        impl io::Write for OneByte {
+            fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+                // Accept at most one byte per call to exercise write_all
+                // looping inside the encoder.
+                if buf.is_empty() {
+                    return Ok(0);
+                }
+                self.0.push(buf[0]);
+                Ok(1)
+            }
+            fn flush(&mut self) -> io::Result<()> {
+                Ok(())
+            }
+        }
+        let ck = sample();
+        let mut chunked = OneByte(Vec::new());
+        ck.write_to(&mut chunked).unwrap();
+        assert_eq!(chunked.0, ck.to_bytes());
+        // And the streaming decoder parses it back.
+        let back = Checkpoint::read_from(&chunked.0[..]).unwrap();
+        assert_eq!(back.seed, ck.seed);
+        assert_eq!(back.comm, ck.comm);
+    }
+
+    #[test]
     fn rejects_corrupt_input() {
         let ck = sample();
         let bytes = ck.to_bytes();
@@ -617,9 +781,9 @@ mod tests {
         let mut bad = bytes.clone();
         bad[0] = b'X';
         assert!(Checkpoint::from_bytes(&bad).is_err());
-        // Unsupported version.
+        // Unsupported version (v1 checkpoints predate comm fabrics).
         let mut bad = bytes.clone();
-        bad[8] = 99;
+        bad[8] = 1;
         assert!(Checkpoint::from_bytes(&bad).is_err());
         // Truncations at every prefix length must error, never panic.
         for cut in [0, 4, 8, 12, 40, bytes.len() / 2, bytes.len() - 1] {
@@ -640,6 +804,8 @@ mod tests {
         let back = Checkpoint::load(&path).unwrap();
         assert_eq!(back.seed(), 42);
         assert_eq!(back.dataset(), ck.dataset());
+        // The streamed file carries exactly the in-memory bytes.
+        assert_eq!(std::fs::read(&path).unwrap(), ck.to_bytes());
         std::fs::remove_dir_all(&dir).ok();
     }
 

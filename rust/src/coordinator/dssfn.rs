@@ -33,13 +33,15 @@ use crate::admm::{LocalSolve, NodeState};
 use crate::data::{shard_uniform, ClassificationTask, Dataset};
 use crate::linalg::Matrix;
 use crate::metrics::{error_db, LayerRecord, TrainReport};
-use crate::network::{CommLedger, CommSnapshot, GossipEngine, MixingMatrix};
+use crate::network::{
+    CommConfig, CommFabric, CommLedger, CommSchedule, CommSnapshot, GossipEngine, MixingMatrix,
+};
 use crate::runtime::ComputeBackend;
 use crate::session::{
     Algorithm, AlgorithmOutput, SessionProgress, StepEvent, StopReason, TrainedModel,
 };
 use crate::ssfn::{build_weight, GrowthPolicy, RandomMatrices, SsfnArchitecture, TrainHyper};
-use crate::util::Stopwatch;
+use crate::util::{Rng, SplitMix64, Stopwatch};
 use crate::{Error, Result};
 use std::sync::Arc;
 
@@ -92,6 +94,7 @@ pub struct DssfnAlgorithm<'t> {
     arch: SsfnArchitecture,
     hyper: TrainHyper,
     opts: TrainOptions,
+    comm: CommConfig,
     seed: u64,
     backend: Arc<dyn ComputeBackend>,
     task: TaskRef<'t>,
@@ -101,7 +104,7 @@ pub struct DssfnAlgorithm<'t> {
     shards: Vec<Dataset>,
     random: RandomMatrices,
     ledger: Arc<CommLedger>,
-    engine: Option<GossipEngine>,
+    fabric: Option<Box<dyn CommFabric>>,
 
     report: TrainReport,
     sw: Stopwatch,
@@ -121,15 +124,38 @@ pub struct DssfnAlgorithm<'t> {
     gossip_rounds: usize,
     comm_before: CommSnapshot,
     stop_reason: Option<StopReason>,
+    /// Working consensus tolerance of the current layer — the base
+    /// gossip δ unless the adaptive controller loosened it.
+    current_delta: f64,
 }
 
 impl<'t> DssfnAlgorithm<'t> {
     /// Validate the configuration and set up a fresh run (shards, random
-    /// matrices, network plumbing) without doing any layer work yet.
+    /// matrices, network plumbing) without doing any layer work yet,
+    /// under the default synchronous communication fabric.
     pub fn new(
         arch: SsfnArchitecture,
         hyper: TrainHyper,
         opts: TrainOptions,
+        seed: u64,
+        backend: Arc<dyn ComputeBackend>,
+        task: TaskRef<'t>,
+        growth: Option<GrowthPolicy>,
+    ) -> Result<Self> {
+        Self::with_comm(arch, hyper, opts, CommConfig::default(), seed, backend, task, growth)
+    }
+
+    /// [`DssfnAlgorithm::new`] with an explicit communication
+    /// configuration: the exchange schedule (sync / semi-sync / lossy)
+    /// and the optional adaptive-δ controller. Both apply to gossip
+    /// consensus only; combining them with
+    /// [`super::ConsensusMode::Exact`] is rejected.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_comm(
+        arch: SsfnArchitecture,
+        hyper: TrainHyper,
+        opts: TrainOptions,
+        comm: CommConfig,
         seed: u64,
         backend: Arc<dyn ComputeBackend>,
         task: TaskRef<'t>,
@@ -153,16 +179,34 @@ impl<'t> DssfnAlgorithm<'t> {
         let shards: Vec<Dataset> = shard_uniform(&task.get().train, m)?;
         let random = RandomMatrices::generate(&arch, seed)?;
 
-        // Network plumbing (only in gossip mode).
+        // Network plumbing (only in gossip mode). The schedule seed is
+        // derived from the master seed, so every run configuration is a
+        // pure function of (config, seed) as before.
         let ledger = Arc::new(CommLedger::new());
-        let engine = match opts.consensus {
-            ConsensusMode::Gossip { .. } => {
+        let fabric = match opts.consensus {
+            ConsensusMode::Gossip { delta } => {
+                comm.validate_for(delta, opts.record_cost_curve)?;
                 let mix = MixingMatrix::build(&opts.topology, opts.weight_rule)?;
-                Some(GossipEngine::new(mix, Arc::clone(&ledger), opts.latency))
+                let engine = GossipEngine::new(mix, Arc::clone(&ledger), opts.latency);
+                let comm_seed = SplitMix64::new(seed ^ 0x636f_6d6d_5eed).next_u64();
+                Some(comm.schedule.build_fabric(engine, comm_seed)?)
             }
-            ConsensusMode::Exact => None,
+            ConsensusMode::Exact => {
+                if comm.schedule != CommSchedule::Synchronous || comm.adaptive_delta.is_some() {
+                    return Err(Error::Config(
+                        "communication schedules and adaptive δ apply to gossip \
+                         consensus only"
+                            .into(),
+                    ));
+                }
+                None
+            }
         };
 
+        let base_delta = match opts.consensus {
+            ConsensusMode::Gossip { delta } => delta,
+            ConsensusMode::Exact => 0.0,
+        };
         let report = TrainReport {
             dataset: task.get().name.clone(),
             mode: format!(
@@ -170,7 +214,17 @@ impl<'t> DssfnAlgorithm<'t> {
                 opts.topology.describe(),
                 match opts.consensus {
                     ConsensusMode::Exact => "exact-avg".to_string(),
-                    ConsensusMode::Gossip { delta } => format!("gossip δ={delta:.0e}"),
+                    ConsensusMode::Gossip { delta } => {
+                        let mut s = format!("gossip δ={delta:.0e}");
+                        if comm.schedule != CommSchedule::Synchronous {
+                            s.push(' ');
+                            s.push_str(&comm.schedule.describe());
+                        }
+                        if comm.adaptive_delta.is_some() {
+                            s.push_str(" adaptive-δ");
+                        }
+                        s
+                    }
                 },
                 backend.name()
             ),
@@ -184,6 +238,7 @@ impl<'t> DssfnAlgorithm<'t> {
             arch,
             hyper,
             opts,
+            comm,
             seed,
             backend,
             task,
@@ -192,7 +247,7 @@ impl<'t> DssfnAlgorithm<'t> {
             shards,
             random,
             ledger,
-            engine,
+            fabric,
             report,
             sw: Stopwatch::new(),
             wall_base: 0.0,
@@ -210,6 +265,7 @@ impl<'t> DssfnAlgorithm<'t> {
             gossip_rounds: 0,
             comm_before: CommSnapshot::default(),
             stop_reason: None,
+            current_delta: base_delta,
         })
     }
 
@@ -247,10 +303,11 @@ impl<'t> DssfnAlgorithm<'t> {
         let growth = ck
             .growth
             .map(|f| GrowthPolicy { min_relative_improvement: f });
-        let mut alg = Self::new(
+        let mut alg = Self::with_comm(
             ck.arch,
             ck.hyper,
             ck.opts.clone(),
+            ck.comm,
             ck.seed,
             backend,
             task,
@@ -279,9 +336,13 @@ impl<'t> DssfnAlgorithm<'t> {
             )));
         }
         alg.ledger.restore(&ck.ledger_total);
-        if let Some(eng) = &alg.engine {
-            eng.set_simulated_seconds(ck.sim_secs);
+        if let Some(fab) = &alg.fabric {
+            fab.engine().set_simulated_seconds(ck.sim_secs);
+            // Fast-forward the schedule cursor so seeded schedules
+            // (staleness draws, edge drops) replay bit-identically.
+            fab.set_calls(ck.fabric_calls);
         }
+        alg.current_delta = ck.current_delta;
         alg.report.layers = ck.report_layers.clone();
         alg.ys = ck.ys.clone();
         alg.weights = ck.weights.clone();
@@ -353,9 +414,9 @@ impl<'t> DssfnAlgorithm<'t> {
     }
 
     fn sim_comm_secs(&self) -> f64 {
-        self.engine
+        self.fabric
             .as_ref()
-            .map(|e| e.simulated_seconds())
+            .map(|f| f.engine().simulated_seconds())
             .unwrap_or(0.0)
     }
 
@@ -384,6 +445,11 @@ impl<'t> DssfnAlgorithm<'t> {
         self.avg = Matrix::zeros(q, feat_dim);
         self.cost_curve = Vec::new();
         self.gossip_rounds = 0;
+        // Each layer starts back at the configured base δ; the adaptive
+        // controller re-loosens it as this layer's objective plateaus.
+        if let ConsensusMode::Gossip { delta } = self.opts.consensus {
+            self.current_delta = delta;
+        }
         self.phase = Phase::Iterate { k: 0 };
         events.push(StepEvent::LayerPrepared { layer: self.layer, feat_dim });
         Ok(())
@@ -410,16 +476,24 @@ impl<'t> DssfnAlgorithm<'t> {
             sv.axpy(1.0, &st.lambda)?;
         }
         let mut gossip_event: Option<(usize, u64)> = None;
-        match (&self.opts.consensus, &self.engine) {
+        match (&self.opts.consensus, &self.fabric) {
             (ConsensusMode::Exact, _) => {
                 GossipEngine::exact_average_into(&self.s_vals, &mut self.avg)?;
                 for sv in self.s_vals.iter_mut() {
                     sv.copy_from(&self.avg)?;
                 }
             }
-            (ConsensusMode::Gossip { delta }, Some(eng)) => {
-                let (rounds, bytes) =
-                    eng.consensus_average_measured(&mut self.s_vals, *delta)?;
+            (ConsensusMode::Gossip { delta }, Some(fab)) => {
+                // The fabric decides how the averaging executes; the
+                // adaptive controller decides to what tolerance. Without
+                // the controller the working δ is the configured one, so
+                // this path is bit-identical to the pre-fabric loop.
+                let eff_delta = if self.comm.adaptive_delta.is_some() {
+                    self.current_delta
+                } else {
+                    *delta
+                };
+                let (rounds, bytes) = fab.average(&mut self.s_vals, eff_delta)?;
                 self.gossip_rounds += rounds;
                 gossip_event = Some((rounds, bytes));
             }
@@ -434,6 +508,7 @@ impl<'t> DssfnAlgorithm<'t> {
         }
         // Cost recording (same condition and order as the legacy loop).
         let mut cost = None;
+        let mut delta_event: Option<f64> = None;
         if self.opts.record_cost_curve {
             let costs: Vec<f64> = {
                 let solvers = &self.solvers;
@@ -441,6 +516,21 @@ impl<'t> DssfnAlgorithm<'t> {
                 for_each_node(m, self.threads, |i| solvers[i].cost(&states[i].z))?
             };
             let c: f64 = costs.iter().sum();
+            // Adaptive-δ controller (L-FGADMM-style): a plateaued cost
+            // loosens the working δ for the *next* averaging, renewed
+            // progress snaps it back to the configured base.
+            if let (Some(policy), ConsensusMode::Gossip { delta }) =
+                (&self.comm.adaptive_delta, &self.opts.consensus)
+            {
+                if let Some(&prev) = self.cost_curve.last() {
+                    let rel = (prev - c) / prev.abs().max(f64::MIN_POSITIVE);
+                    let next = policy.next_delta(self.current_delta, *delta, rel);
+                    if next != self.current_delta {
+                        self.current_delta = next;
+                        delta_event = Some(next);
+                    }
+                }
+            }
             self.cost_curve.push(c);
             cost = Some(c);
         }
@@ -473,6 +563,9 @@ impl<'t> DssfnAlgorithm<'t> {
             cost,
             consensus_gap: gap,
         });
+        if let Some(delta) = delta_event {
+            events.push(StepEvent::DeltaAdjusted { layer: self.layer, iteration: k, delta });
+        }
 
         // A budget stop truncates the layer after the current iteration;
         // Z is feasible at every iterate, so the model stays well-formed.
@@ -676,6 +769,7 @@ impl Algorithm for DssfnAlgorithm<'_> {
             arch: self.arch,
             hyper: self.hyper,
             opts: self.opts.clone(),
+            comm: self.comm,
             growth: self.growth.map(|g| g.min_relative_improvement),
             dataset: self.report.dataset.clone(),
             train_samples: self.task.get().train.num_samples() as u64,
@@ -687,6 +781,8 @@ impl Algorithm for DssfnAlgorithm<'_> {
             states,
             cost_curve: self.cost_curve.clone(),
             gossip_rounds: self.gossip_rounds as u64,
+            fabric_calls: self.fabric.as_ref().map(|f| f.calls()).unwrap_or(0),
+            current_delta: self.current_delta,
             comm_before: self.comm_before,
             ledger_total: self.ledger.snapshot(),
             sim_secs: self.sim_comm_secs(),

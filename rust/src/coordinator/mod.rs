@@ -17,7 +17,7 @@
 //!   prepare:   node m computes G_m = Y_m Y_mᵀ + μ⁻¹I, factors it,
 //!              caches T_m Y_mᵀ                       [backend kernel]
 //!   iterate K× O-update  (parallel per node)         [backend kernel]
-//!              gossip     (B(δ) mixing rounds)       [network simulator]
+//!              gossip     (B(δ) mixing rounds)       [CommFabric]
 //!              Z/Λ-update (parallel per node)
 //!   advance:   W_{l+1} = [V_Q Z_m ; R_{l+1}] per node,
 //!              Y_{l+1,m} = g(W_{l+1} Y_{l,m})        [backend kernel]
@@ -47,6 +47,20 @@
 //! [`crate::session::SessionBuilder`] (or
 //! [`crate::config::ExperimentConfig::session_builder`]); the one-shot
 //! wrappers stay supported as the stable simple API.
+//!
+//! ## Communication fabrics
+//!
+//! The gossip averaging executes through a pluggable
+//! [`crate::network::CommFabric`]: the synchronous schedule (the paper's
+//! model, and the default — bit-identical to the pre-fabric path), a
+//! semi-synchronous schedule with bounded staleness (Liang et al. 2020),
+//! or a lossy schedule with per-round edge drops. Configure it with
+//! [`crate::session::SessionBuilder::comm_fabric`] (or the
+//! `[network] schedule` TOML keys / `--schedule` CLI flag);
+//! [`DssfnAlgorithm::with_comm`] is the direct constructor. An optional
+//! [`crate::network::AdaptiveDeltaPolicy`] loosens the per-layer
+//! consensus tolerance δ while the layer objective is plateaued,
+//! trading no measurable accuracy for fewer gossip rounds.
 //!
 //! The thread budget is split by [`ParallelismBudget`]: node fan-out
 //! first, and when `M < threads` the leftover threads go to the

@@ -54,6 +54,14 @@
 //! implement one [`session::Algorithm`] trait, so the CLI, benches and
 //! examples drive every method through the same loop.
 //!
+//! The communication layer is pluggable too: gossip runs behind a
+//! [`network::CommFabric`] — synchronous (the paper's model),
+//! semi-synchronous with bounded staleness, or lossy links — and an
+//! optional [`network::AdaptiveDeltaPolicy`] throttles the consensus
+//! tolerance δ while a layer's objective is plateaued
+//! ([`session::SessionBuilder::comm_fabric`],
+//! [`session::SessionBuilder::adaptive_delta`]).
+//!
 //! ## Quick start — legacy one-shot path
 //!
 //! The pre-session entry points remain supported (they now wrap a

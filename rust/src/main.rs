@@ -4,7 +4,9 @@
 //! dssfn train   [--config FILE] [--dataset KEY] [--degree D] [--nodes M]
 //!               [--layers L] [--admm-iters K] [--backend native|pjrt]
 //!               [--exact-consensus] [--seed S] [--csv PATH] [--verbose]
-//!               [--checkpoint PATH] [--resume PATH]
+//!               [--schedule sync|semisync|lossy] [--staleness S]
+//!               [--loss-p P] [--adaptive-delta MAX]
+//!               [--checkpoint PATH] [--checkpoint-every K] [--resume PATH]
 //!               [--max-bytes N] [--max-sim-secs S] [--cost-plateau F]
 //! dssfn central [--dataset KEY] [--layers L] [--admm-iters K] [--seed S]
 //! dssfn sweep   [--dataset KEY] [--degrees 1,2,...] [--csv PATH]
@@ -14,9 +16,13 @@
 //!
 //! `train` drives the resumable session API: `--verbose` streams the
 //! typed step events, `--checkpoint` snapshots the full training state
-//! at every layer boundary, `--resume` continues a snapshot
+//! at every layer boundary (plus every `K` ADMM iterations with
+//! `--checkpoint-every`), `--resume` continues a snapshot
 //! bit-identically, and the `--max-*` / `--cost-plateau` flags set
-//! [`StopPolicy`] budgets.
+//! [`StopPolicy`] budgets. `--schedule` picks the communication fabric
+//! (synchronous / semi-synchronous / lossy gossip) and
+//! `--adaptive-delta` enables the L-FGADMM-style adaptive consensus
+//! tolerance.
 //!
 //! The build environment has no `clap`; argument parsing is a small
 //! hand-rolled matcher (see [`Args`]).
@@ -126,6 +132,24 @@ fn build_config(args: &Args) -> Result<ExperimentConfig, String> {
     if let Some(dir) = args.get("artifacts") {
         cfg.artifacts_dir = dir.to_string();
     }
+    if let Some(s) = args.get("schedule") {
+        if !dssfn::config::SCHEDULE_NAMES.contains(&s) {
+            return Err(format!(
+                "unknown schedule '{s}' (expected one of {:?})",
+                dssfn::config::SCHEDULE_NAMES
+            ));
+        }
+        cfg.schedule = s.to_string();
+    }
+    if let Some(v) = args.parsed("staleness")? {
+        cfg.staleness = v;
+    }
+    if let Some(v) = args.parsed("loss-p")? {
+        cfg.loss_p = v;
+    }
+    if let Some(v) = args.parsed("adaptive-delta")? {
+        cfg.adaptive_delta = Some(v);
+    }
     if args.has("exact-consensus") {
         cfg.exact_consensus = true;
     }
@@ -139,6 +163,13 @@ fn cmd_train(args: &Args) -> Result<(), String> {
     let cfg = build_config(args)?;
     let verbose = args.has("verbose");
     let ckpt_path = args.get("checkpoint").map(|s| s.to_string());
+    let ckpt_every = args.parsed::<usize>("checkpoint-every")?;
+    if ckpt_every == Some(0) {
+        return Err("--checkpoint-every must be >= 1".into());
+    }
+    if ckpt_every.is_some() && ckpt_path.is_none() {
+        return Err("--checkpoint-every needs --checkpoint PATH".into());
+    }
     let mut policy = StopPolicy::none();
     if let Some(v) = args.parsed::<u64>("max-bytes")? {
         policy.max_comm_bytes = Some(v);
@@ -173,7 +204,8 @@ fn cmd_train(args: &Args) -> Result<(), String> {
             // and are refused rather than silently dropped.
             for flag in [
                 "config", "dataset", "degree", "nodes", "layers", "admm-iters", "seed",
-                "mu0", "mul", "threads", "exact-consensus", "no-curve",
+                "mu0", "mul", "threads", "exact-consensus", "no-curve", "schedule",
+                "staleness", "loss-p", "adaptive-delta",
             ] {
                 if args.has(flag) {
                     return Err(format!(
@@ -213,8 +245,10 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         session.observe_fn(|ev| eprintln!("event: {ev:?}"));
     }
     // With --checkpoint, snapshot the full session state at every layer
-    // boundary; otherwise just drive the session to the end.
+    // boundary (and, with --checkpoint-every K, additionally every K
+    // ADMM iterations); otherwise just drive the session to the end.
     if let Some(path) = &ckpt_path {
+        let mut iters_since_ckpt = 0usize;
         loop {
             match session.step().map_err(|e| e.to_string())? {
                 Some(StepEvent::LayerAdvanced { last, layer, .. }) if !last => {
@@ -222,8 +256,26 @@ fn cmd_train(args: &Args) -> Result<(), String> {
                         .checkpoint()
                         .and_then(|c| c.save(path))
                         .map_err(|e| e.to_string())?;
+                    iters_since_ckpt = 0;
                     if verbose {
                         eprintln!("checkpoint after layer {layer} -> {path}");
+                    }
+                }
+                Some(StepEvent::AdmmIteration { layer, iteration, .. }) => {
+                    if let Some(every) = ckpt_every {
+                        iters_since_ckpt += 1;
+                        if iters_since_ckpt >= every {
+                            session
+                                .checkpoint()
+                                .and_then(|c| c.save(path))
+                                .map_err(|e| e.to_string())?;
+                            iters_since_ckpt = 0;
+                            if verbose {
+                                eprintln!(
+                                    "checkpoint at layer {layer} iteration {iteration} -> {path}"
+                                );
+                            }
+                        }
                     }
                 }
                 Some(_) => {}
@@ -352,6 +404,14 @@ fn cmd_info(args: &Args) -> Result<(), String> {
         cfg.nodes, cfg.degree, cfg.delta
     );
     println!(
+        "comm fabric   : {}{}",
+        cfg.comm_schedule().map_err(|e| e.to_string())?.describe(),
+        match cfg.adaptive_delta {
+            Some(m) => format!(" adaptive-delta<={m}"),
+            None => String::new(),
+        }
+    );
+    println!(
         "padded shard J: {}",
         cfg.padded_shard_samples().map_err(|e| e.to_string())?
     );
@@ -364,7 +424,8 @@ fn cmd_info(args: &Args) -> Result<(), String> {
 
 const USAGE: &str = "usage: dssfn <train|central|sweep|datasets|info> [flags]
   train     train decentralized SSFN        (--dataset, --degree, --nodes, --layers, --admm-iters, --backend, --csv, --config, --exact-consensus, --seed,
-                                             --verbose, --checkpoint PATH, --resume PATH, --max-bytes N, --max-sim-secs S, --cost-plateau F)
+                                             --schedule sync|semisync|lossy, --staleness S, --loss-p P, --adaptive-delta MAX,
+                                             --verbose, --checkpoint PATH, --checkpoint-every K, --resume PATH, --max-bytes N, --max-sim-secs S, --cost-plateau F)
   central   train the centralized baseline  (--dataset, --layers, --admm-iters, --seed)
   sweep     degree sweep (Fig. 4)           (--dataset, --degrees 1,2,3, --csv)
   datasets  list registered datasets

@@ -1,0 +1,597 @@
+//! Pluggable communication fabrics: *how and when* gossip exchanges are
+//! scheduled, measured, and degraded.
+//!
+//! The mixing *math* — which doubly-stochastic combination each node
+//! applies — lives in [`MixingMatrix`] and is executed by
+//! [`GossipEngine`]. A [`CommFabric`] decides the execution model on top
+//! of it:
+//!
+//! * [`SynchronousFabric`] — the paper's model: every consensus
+//!   averaging runs `B(δ)` fully synchronized mixing rounds. This path
+//!   is **bit-identical** to calling
+//!   [`GossipEngine::consensus_average_measured`] directly (the
+//!   pre-fabric behaviour, pinned by `tests/coordinator_oracle.rs`).
+//! * [`SemiSyncFabric`] — the barrier-relaxed model of *Asynchronous
+//!   Decentralized Learning of a Neural Network* (Liang et al., 2020):
+//!   nodes proceed with neighbour values up to `s` rounds stale. The
+//!   staleness of every directed edge in every round is drawn from a
+//!   seeded schedule, so runs are exactly reproducible (and
+//!   checkpoint-resumable through the call cursor).
+//! * [`LossyFabric`] — the drop-with-lazy-correction model
+//!   ([`GossipEngine::mix_rounds_lossy`]) behind the same interface,
+//!   with a seeded per-call drop schedule and a first-order round-count
+//!   compensation for the slower expected contraction.
+//!
+//! All fabrics reuse the engine's persistent scratch banks, so the
+//! zero-allocation steady-state contract of `tests/alloc_free.rs`
+//! extends to every schedule.
+//!
+//! [`AdaptiveDeltaPolicy`] is the L-FGADMM-inspired controller (Elgabli
+//! et al., 2019) that rides on top of any fabric: instead of gossiping
+//! to a fixed per-averaging contraction `δ`, the dSSFN trainer loosens
+//! `δ` while the layer objective is plateaued — the same signal the
+//! [`crate::session::StopPolicy`] cost-plateau clause watches, throttling
+//! communication instead of stopping the run. Decisions surface as
+//! [`crate::session::StepEvent::DeltaAdjusted`] events to observers.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::{GossipEngine, MixingMatrix};
+use crate::linalg::Matrix;
+use crate::util::Xoshiro256StarStar;
+use crate::{Error, Result};
+
+/// A serializable description of *when* gossip exchanges happen — the
+/// configuration half of a [`CommFabric`]. Stored in checkpoints and
+/// lowered from TOML / CLI flags.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum CommSchedule {
+    /// Fully synchronized rounds (the paper's model; the default).
+    #[default]
+    Synchronous,
+    /// Nodes proceed with neighbour values up to `staleness` rounds
+    /// stale (Liang et al., 2020). `staleness = 0` degenerates to the
+    /// synchronous schedule bit-identically.
+    SemiSync {
+        /// Maximum rounds of staleness `s` per neighbour read.
+        staleness: usize,
+    },
+    /// Each undirected edge independently drops its exchange with
+    /// probability `loss_p` per round, with the lazy self-weight
+    /// correction that keeps the effective round matrix doubly
+    /// stochastic.
+    Lossy {
+        /// Per-round, per-edge drop probability in `[0, 1)`.
+        loss_p: f64,
+    },
+}
+
+impl CommSchedule {
+    /// Validate parameter ranges.
+    pub fn validate(&self) -> Result<()> {
+        if let CommSchedule::Lossy { loss_p } = self {
+            if !(0.0..1.0).contains(loss_p) {
+                return Err(Error::Network(format!(
+                    "loss probability must be in [0,1), got {loss_p}"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Short display tag for reports and mode strings.
+    pub fn describe(&self) -> String {
+        match self {
+            CommSchedule::Synchronous => "sync".to_string(),
+            CommSchedule::SemiSync { staleness } => format!("semisync(s={staleness})"),
+            CommSchedule::Lossy { loss_p } => format!("lossy(p={loss_p})"),
+        }
+    }
+
+    /// Build the fabric this schedule describes over a gossip engine.
+    /// `seed` drives every randomized schedule decision (staleness
+    /// draws, edge drops); two fabrics built from the same schedule,
+    /// engine configuration and seed replay identical exchanges.
+    pub fn build_fabric(&self, engine: GossipEngine, seed: u64) -> Result<Box<dyn CommFabric>> {
+        self.validate()?;
+        Ok(match *self {
+            CommSchedule::Synchronous => Box::new(SynchronousFabric::new(engine)),
+            CommSchedule::SemiSync { staleness } => {
+                Box::new(SemiSyncFabric::new(engine, staleness, seed))
+            }
+            CommSchedule::Lossy { loss_p } => Box::new(LossyFabric::new(engine, loss_p, seed)?),
+        })
+    }
+}
+
+/// L-FGADMM-inspired adaptive consensus tolerance: while the layer
+/// objective is plateaued (relative per-iteration improvement below
+/// `plateau`), each further iteration loosens the working `δ` by a
+/// factor of `loosen`, up to `max_delta`; renewed progress (or a cost
+/// regression beyond the plateau band) snaps `δ` back to the configured
+/// base. Fewer gossip rounds are spent exactly where extra consensus
+/// precision cannot move the objective, which is what reduces total
+/// communicated bytes without hurting the final cost.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdaptiveDeltaPolicy {
+    /// Loosest per-averaging contraction the controller may choose.
+    pub max_delta: f64,
+    /// Relative per-iteration cost improvement below which the layer
+    /// counts as plateaued.
+    pub plateau: f64,
+    /// Multiplicative loosening applied per plateaued iteration.
+    pub loosen: f64,
+}
+
+impl Default for AdaptiveDeltaPolicy {
+    fn default() -> Self {
+        Self { max_delta: 1e-4, plateau: 1e-3, loosen: 10.0 }
+    }
+}
+
+impl AdaptiveDeltaPolicy {
+    /// Validate against the configured base gossip `δ`.
+    pub fn validate(&self, base_delta: f64) -> Result<()> {
+        if !(self.max_delta > 0.0 && self.max_delta < 1.0) {
+            return Err(Error::Config(format!(
+                "adaptive max_delta must be in (0,1), got {}",
+                self.max_delta
+            )));
+        }
+        if self.max_delta < base_delta {
+            return Err(Error::Config(format!(
+                "adaptive max_delta {} is tighter than the base gossip δ {base_delta}",
+                self.max_delta
+            )));
+        }
+        if !(self.plateau > 0.0 && self.plateau < 1.0) {
+            return Err(Error::Config(format!(
+                "adaptive plateau must be in (0,1), got {}",
+                self.plateau
+            )));
+        }
+        if self.loosen <= 1.0 {
+            return Err(Error::Config(format!(
+                "adaptive loosen factor must be > 1, got {}",
+                self.loosen
+            )));
+        }
+        Ok(())
+    }
+
+    /// The next working `δ` given the current one and the latest
+    /// relative cost improvement. `base_delta` is the configured floor.
+    pub fn next_delta(&self, current: f64, base_delta: f64, rel_improvement: f64) -> f64 {
+        if rel_improvement.abs() < self.plateau {
+            (current * self.loosen).min(self.max_delta)
+        } else {
+            base_delta
+        }
+    }
+}
+
+/// The complete communication configuration of a training run: the
+/// exchange schedule plus the optional adaptive-δ controller.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CommConfig {
+    /// How exchanges are scheduled (sync / semi-sync / lossy).
+    pub schedule: CommSchedule,
+    /// Optional adaptive consensus tolerance.
+    pub adaptive_delta: Option<AdaptiveDeltaPolicy>,
+}
+
+impl CommConfig {
+    /// Validate against the consensus configuration it will drive.
+    /// `record_cost_curve` must be on for the adaptive controller — it
+    /// steers off the per-iteration objective.
+    pub fn validate_for(&self, base_delta: f64, record_cost_curve: bool) -> Result<()> {
+        self.schedule.validate()?;
+        if let Some(policy) = &self.adaptive_delta {
+            policy.validate(base_delta)?;
+            if !record_cost_curve {
+                return Err(Error::Config(
+                    "adaptive δ steers off the cost curve; enable record_cost_curve".into(),
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The execution model of the communication layer. Implementations own
+/// a [`GossipEngine`] (mixing plan, ledger, simulated clock, scratch
+/// banks) and decide how one *consensus averaging* — the only network
+/// operation the training algorithms perform — maps onto mixing rounds.
+///
+/// Methods take `&self` with interior mutability for schedule cursors,
+/// matching the engine's own scratch-bank design, so algorithms can hold
+/// a fabric next to the mutable value banks they average.
+pub trait CommFabric: Send + Sync {
+    /// The underlying engine (mixing math, ledger, simulated clock).
+    fn engine(&self) -> &GossipEngine;
+
+    /// The serializable schedule this fabric executes.
+    fn schedule(&self) -> CommSchedule;
+
+    /// Display tag for reports.
+    fn describe(&self) -> String {
+        self.schedule().describe()
+    }
+
+    /// Run one consensus averaging of the per-node `values` to the
+    /// contraction target `delta`. Returns `(rounds executed, payload
+    /// bytes charged to the ledger)`. Allocation-free in steady state.
+    fn average(&self, values: &mut [Matrix], delta: f64) -> Result<(usize, u64)>;
+
+    /// Averaging calls performed so far — the schedule cursor a
+    /// checkpoint stores so a restored run replays the exact same
+    /// randomized schedule decisions.
+    fn calls(&self) -> u64;
+
+    /// Restore the schedule cursor (checkpoint resume).
+    fn set_calls(&self, calls: u64);
+
+    /// Convenience accessor for the mixing matrix.
+    fn mixing(&self) -> &MixingMatrix {
+        self.engine().mixing()
+    }
+}
+
+/// The paper's fully synchronized schedule — a transparent shim over
+/// [`GossipEngine::consensus_average_measured`], bit-identical to the
+/// pre-fabric gossip path.
+pub struct SynchronousFabric {
+    engine: GossipEngine,
+    calls: AtomicU64,
+}
+
+impl SynchronousFabric {
+    /// Wrap an engine.
+    pub fn new(engine: GossipEngine) -> Self {
+        Self { engine, calls: AtomicU64::new(0) }
+    }
+}
+
+impl CommFabric for SynchronousFabric {
+    fn engine(&self) -> &GossipEngine {
+        &self.engine
+    }
+
+    fn schedule(&self) -> CommSchedule {
+        CommSchedule::Synchronous
+    }
+
+    fn average(&self, values: &mut [Matrix], delta: f64) -> Result<(usize, u64)> {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.engine.consensus_average_measured(values, delta)
+    }
+
+    fn calls(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+
+    fn set_calls(&self, calls: u64) {
+        self.calls.store(calls, Ordering::Relaxed);
+    }
+}
+
+/// Barrier-relaxed schedule: neighbour reads may be up to `staleness`
+/// rounds old (Liang et al., 2020). Every staleness draw comes from a
+/// stream keyed on `(seed, call index, round)`, so the schedule is a
+/// pure function of the cursor — deterministic, and bit-identically
+/// resumable from a checkpointed call count. Each averaging runs
+/// `B(δ) + staleness` rounds (the tail rounds flush the delay pipeline).
+pub struct SemiSyncFabric {
+    engine: GossipEngine,
+    staleness: usize,
+    seed: u64,
+    calls: AtomicU64,
+}
+
+impl SemiSyncFabric {
+    /// Wrap an engine with a staleness bound and schedule seed.
+    pub fn new(engine: GossipEngine, staleness: usize, seed: u64) -> Self {
+        Self { engine, staleness, seed, calls: AtomicU64::new(0) }
+    }
+
+    /// The staleness bound `s`.
+    pub fn staleness(&self) -> usize {
+        self.staleness
+    }
+}
+
+impl CommFabric for SemiSyncFabric {
+    fn engine(&self) -> &GossipEngine {
+        &self.engine
+    }
+
+    fn schedule(&self) -> CommSchedule {
+        CommSchedule::SemiSync { staleness: self.staleness }
+    }
+
+    fn average(&self, values: &mut [Matrix], delta: f64) -> Result<(usize, u64)> {
+        let rounds = self.engine.mixing().consensus_rounds(delta) + self.staleness;
+        let call = self.calls.fetch_add(1, Ordering::Relaxed);
+        let before = self.engine.ledger().snapshot().bytes;
+        self.engine
+            .mix_rounds_semisync(values, rounds, self.staleness, self.seed, call)?;
+        Ok((rounds, self.engine.ledger().snapshot().bytes - before))
+    }
+
+    fn calls(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+
+    fn set_calls(&self, calls: u64) {
+        self.calls.store(calls, Ordering::Relaxed);
+    }
+}
+
+/// Lossy-link schedule: per-round independent edge drops with the lazy
+/// self-weight correction (sum-conserving), seeded per averaging call.
+/// The round count is compensated to first order for the slower
+/// expected contraction: dropping each edge with probability `p` scales
+/// the expected off-diagonal mixing mass by `1 − p`, so the fabric runs
+/// `⌈B(δ) / (1 − p)⌉` rounds where the synchronous schedule runs `B(δ)`.
+pub struct LossyFabric {
+    engine: GossipEngine,
+    loss_p: f64,
+    seed: u64,
+    calls: AtomicU64,
+}
+
+impl LossyFabric {
+    /// Wrap an engine with a drop probability and schedule seed.
+    pub fn new(engine: GossipEngine, loss_p: f64, seed: u64) -> Result<Self> {
+        CommSchedule::Lossy { loss_p }.validate()?;
+        Ok(Self { engine, loss_p, seed, calls: AtomicU64::new(0) })
+    }
+
+    /// The per-round, per-edge drop probability.
+    pub fn loss_p(&self) -> f64 {
+        self.loss_p
+    }
+}
+
+impl CommFabric for LossyFabric {
+    fn engine(&self) -> &GossipEngine {
+        &self.engine
+    }
+
+    fn schedule(&self) -> CommSchedule {
+        CommSchedule::Lossy { loss_p: self.loss_p }
+    }
+
+    fn average(&self, values: &mut [Matrix], delta: f64) -> Result<(usize, u64)> {
+        let base = self.engine.mixing().consensus_rounds(delta);
+        let rounds = (base as f64 / (1.0 - self.loss_p)).ceil() as usize;
+        let call = self.calls.fetch_add(1, Ordering::Relaxed);
+        let before = self.engine.ledger().snapshot().bytes;
+        let mut rng = Xoshiro256StarStar::seed_from_u64(self.seed).derive(call);
+        self.engine
+            .mix_rounds_lossy(values, rounds, self.loss_p, &mut rng)?;
+        Ok((rounds, self.engine.ledger().snapshot().bytes - before))
+    }
+
+    fn calls(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+
+    fn set_calls(&self, calls: u64) {
+        self.calls.store(calls, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::{CommLedger, LatencyModel, Topology, WeightRule};
+    use crate::util::Rng;
+    use std::sync::Arc;
+
+    fn engine(m: usize, d: usize) -> GossipEngine {
+        let mix = MixingMatrix::build(
+            &Topology::Circular { nodes: m, degree: d },
+            WeightRule::EqualNeighbor,
+        )
+        .unwrap();
+        GossipEngine::new(mix, Arc::new(CommLedger::new()), LatencyModel::default())
+    }
+
+    fn rand_values(m: usize, rows: usize, cols: usize, seed: u64) -> Vec<Matrix> {
+        let mut rng = Xoshiro256StarStar::seed_from_u64(seed);
+        (0..m)
+            .map(|_| Matrix::from_fn(rows, cols, |_, _| rng.uniform(-3.0, 3.0)))
+            .collect()
+    }
+
+    #[test]
+    fn synchronous_fabric_is_bit_identical_to_engine_path() {
+        let fab = SynchronousFabric::new(engine(8, 2));
+        let mut a = rand_values(8, 3, 4, 1);
+        let mut b = a.clone();
+        let (rounds_f, bytes_f) = fab.average(&mut a, 1e-9).unwrap();
+        let plain = engine(8, 2);
+        let (rounds_e, bytes_e) = plain.consensus_average_measured(&mut b, 1e-9).unwrap();
+        assert_eq!(rounds_f, rounds_e);
+        assert_eq!(bytes_f, bytes_e);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.max_abs_diff(y), 0.0);
+        }
+        assert_eq!(fab.calls(), 1);
+        assert_eq!(fab.schedule(), CommSchedule::Synchronous);
+        assert_eq!(fab.describe(), "sync");
+    }
+
+    #[test]
+    fn semisync_reaches_consensus_inside_the_initial_hull() {
+        let fab = SemiSyncFabric::new(engine(8, 3), 2, 7);
+        let mut vals = rand_values(8, 2, 3, 2);
+        let lo = vals
+            .iter()
+            .flat_map(|v| v.as_slice().iter().copied())
+            .fold(f64::INFINITY, f64::min);
+        let hi = vals
+            .iter()
+            .flat_map(|v| v.as_slice().iter().copied())
+            .fold(f64::NEG_INFINITY, f64::max);
+        let (rounds, bytes) = fab.average(&mut vals, 1e-12).unwrap();
+        assert!(rounds > 0);
+        assert!(bytes > 0);
+        // All nodes agree (consensus; staleness slows the contraction,
+        // hence the loose tolerance), and the limit is a convex
+        // combination of initial entries, so it stays inside the hull.
+        let v0 = &vals[0];
+        for v in &vals {
+            assert!(v.max_abs_diff(v0) < 1e-3, "no consensus: {}", v.max_abs_diff(v0));
+        }
+        for &x in vals[0].as_slice() {
+            assert!(x >= lo - 1e-9 && x <= hi + 1e-9, "{x} escaped [{lo}, {hi}]");
+        }
+    }
+
+    #[test]
+    fn semisync_stays_near_the_true_average() {
+        // Staleness perturbs the limit away from the exact initial
+        // average, but with a pre-filled history (round 0 is exact) the
+        // deviation is a small fraction of the initial spread.
+        let fab = SemiSyncFabric::new(engine(10, 3), 2, 3);
+        let mut vals = rand_values(10, 2, 2, 5);
+        let avg = GossipEngine::exact_average(&vals).unwrap();
+        let spread = vals
+            .iter()
+            .map(|v| v.max_abs_diff(&avg))
+            .fold(0.0, f64::max);
+        fab.average(&mut vals, 1e-10).unwrap();
+        let bias = vals[0].max_abs_diff(&avg);
+        assert!(bias < 0.5 * spread, "bias {bias} vs spread {spread}");
+    }
+
+    #[test]
+    fn semisync_is_deterministic_and_cursor_resumable() {
+        let mk = || SemiSyncFabric::new(engine(6, 1), 2, 11);
+        let a = mk();
+        let b = mk();
+        let mut va = rand_values(6, 2, 2, 8);
+        let mut vb = va.clone();
+        // Same seed, same cursor -> identical trajectories over calls.
+        for _ in 0..2 {
+            a.average(&mut va, 1e-6).unwrap();
+            b.average(&mut vb, 1e-6).unwrap();
+        }
+        for (x, y) in va.iter().zip(&vb) {
+            assert_eq!(x.max_abs_diff(y), 0.0);
+        }
+        // A fresh fabric fast-forwarded to call 2 replays call 2 exactly.
+        let c = mk();
+        c.set_calls(2);
+        let mut vc = va.clone();
+        a.average(&mut va, 1e-6).unwrap();
+        c.average(&mut vc, 1e-6).unwrap();
+        assert_eq!(a.calls(), 3);
+        assert_eq!(c.calls(), 3);
+        for (x, y) in va.iter().zip(&vc) {
+            assert_eq!(x.max_abs_diff(y), 0.0);
+        }
+    }
+
+    #[test]
+    fn semisync_staleness_zero_matches_synchronous_bit_exactly() {
+        let semi = SemiSyncFabric::new(engine(6, 2), 0, 9);
+        let sync = SynchronousFabric::new(engine(6, 2));
+        let mut a = rand_values(6, 2, 3, 13);
+        let mut b = a.clone();
+        let (ra, _) = semi.average(&mut a, 1e-9).unwrap();
+        let (rb, _) = sync.average(&mut b, 1e-9).unwrap();
+        assert_eq!(ra, rb);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.max_abs_diff(y), 0.0);
+        }
+    }
+
+    #[test]
+    fn lossy_fabric_converges_and_compensates_rounds() {
+        let fab = LossyFabric::new(engine(10, 2), 0.25, 5).unwrap();
+        let mut vals = rand_values(10, 2, 3, 21);
+        let avg = GossipEngine::exact_average(&vals).unwrap();
+        let base = fab.engine().mixing().consensus_rounds(1e-9);
+        let (rounds, bytes) = fab.average(&mut vals, 1e-9).unwrap();
+        assert!(rounds > base, "no compensation: {rounds} vs B={base}");
+        assert!(bytes > 0);
+        // Lazy correction conserves the sum, so the limit is the true
+        // average.
+        for v in &vals {
+            assert!(v.max_abs_diff(&avg) < 1e-5, "lossy did not converge");
+        }
+    }
+
+    #[test]
+    fn lossy_fabric_is_deterministic_per_cursor() {
+        let mk = || LossyFabric::new(engine(8, 1), 0.3, 17).unwrap();
+        let a = mk();
+        let b = mk();
+        let mut va = rand_values(8, 1, 4, 30);
+        let mut vb = va.clone();
+        a.average(&mut va, 1e-4).unwrap();
+        b.average(&mut vb, 1e-4).unwrap();
+        for (x, y) in va.iter().zip(&vb) {
+            assert_eq!(x.max_abs_diff(y), 0.0);
+        }
+        // Different cursors draw different drop schedules.
+        let c = mk();
+        c.set_calls(5);
+        let mut vc = vb.clone();
+        let mut vd = vb.clone();
+        b.average(&mut vc, 1e-4).unwrap(); // call 1
+        c.average(&mut vd, 1e-4).unwrap(); // call 5
+        let identical = vc
+            .iter()
+            .zip(&vd)
+            .all(|(x, y)| x.max_abs_diff(y) == 0.0);
+        assert!(!identical, "distinct cursors should mix differently");
+    }
+
+    #[test]
+    fn schedule_validation_and_factory() {
+        assert!(CommSchedule::Lossy { loss_p: 1.5 }.validate().is_err());
+        assert!(CommSchedule::Lossy { loss_p: 0.5 }.validate().is_ok());
+        assert!(CommSchedule::SemiSync { staleness: 3 }.validate().is_ok());
+        assert!(LossyFabric::new(engine(4, 1), -0.1, 0).is_err());
+        for schedule in [
+            CommSchedule::Synchronous,
+            CommSchedule::SemiSync { staleness: 2 },
+            CommSchedule::Lossy { loss_p: 0.2 },
+        ] {
+            let fab = schedule.build_fabric(engine(4, 1), 3).unwrap();
+            assert_eq!(fab.schedule(), schedule);
+            assert_eq!(fab.calls(), 0);
+            assert_eq!(fab.mixing().num_nodes(), 4);
+        }
+        assert!(CommSchedule::Lossy { loss_p: -0.2 }
+            .build_fabric(engine(4, 1), 3)
+            .is_err());
+    }
+
+    #[test]
+    fn adaptive_delta_policy_rules() {
+        let p = AdaptiveDeltaPolicy::default();
+        p.validate(1e-9).unwrap();
+        // Plateaued: loosen one decade, capped at max_delta.
+        let d1 = p.next_delta(1e-9, 1e-9, 1e-5);
+        assert!((d1 - 1e-8).abs() < 1e-20);
+        assert_eq!(p.next_delta(1e-4, 1e-9, 0.0), 1e-4);
+        // Renewed progress (or regression) snaps back to base.
+        assert_eq!(p.next_delta(1e-5, 1e-9, 0.5), 1e-9);
+        assert_eq!(p.next_delta(1e-5, 1e-9, -0.5), 1e-9);
+        // Validation.
+        assert!(AdaptiveDeltaPolicy { max_delta: 0.0, ..p }.validate(1e-9).is_err());
+        assert!(AdaptiveDeltaPolicy { max_delta: 1e-10, ..p }.validate(1e-9).is_err());
+        assert!(AdaptiveDeltaPolicy { plateau: 0.0, ..p }.validate(1e-9).is_err());
+        assert!(AdaptiveDeltaPolicy { loosen: 1.0, ..p }.validate(1e-9).is_err());
+        // CommConfig couples adaptive δ to cost recording.
+        let cfg = CommConfig { schedule: CommSchedule::Synchronous, adaptive_delta: Some(p) };
+        assert!(cfg.validate_for(1e-9, true).is_ok());
+        assert!(cfg.validate_for(1e-9, false).is_err());
+        assert!(CommConfig::default().validate_for(1e-9, false).is_ok());
+    }
+}

@@ -28,6 +28,7 @@ use std::sync::{Arc, Mutex, PoisonError};
 
 use super::{CommLedger, LatencyModel, MixingMatrix};
 use crate::linalg::Matrix;
+use crate::util::{Rng, Xoshiro256StarStar};
 use crate::{Error, Result};
 
 /// Cached mixing recipe for one node: neighbour indices (self first is
@@ -59,6 +60,10 @@ pub struct GossipEngine {
     /// contended: one consensus averaging runs at a time) keeps the
     /// engine `Sync` with interior reuse.
     scratch: Mutex<Vec<Matrix>>,
+    /// Persistent history ring for the semi-synchronous schedule
+    /// (`staleness` banks of `m` matrices, flat). Same lazy-rebuild
+    /// policy as `scratch`; empty until a semi-sync round runs.
+    hist: Mutex<Vec<Matrix>>,
 }
 
 impl Clone for GossipEngine {
@@ -74,6 +79,7 @@ impl Clone for GossipEngine {
             // bank is per-engine cache state and starts empty.
             sim_clock_bits: Arc::clone(&self.sim_clock_bits),
             scratch: Mutex::new(Vec::new()),
+            hist: Mutex::new(Vec::new()),
         }
     }
 }
@@ -105,6 +111,7 @@ impl GossipEngine {
             latency,
             sim_clock_bits: Arc::new(AtomicU64::new(0f64.to_bits())),
             scratch: Mutex::new(Vec::new()),
+            hist: Mutex::new(Vec::new()),
         }
     }
 
@@ -309,6 +316,119 @@ impl GossipEngine {
             }
             self.ledger.record_round(delivered, scalars);
             self.advance_clock(self.latency.round_time(self.max_degree, scalars * 8));
+        }
+        Ok(())
+    }
+
+    /// Lock the persistent semi-sync history ring, (re)building it for
+    /// the given payload shape and staleness bound. Steady-state rounds
+    /// reuse it with zero allocations.
+    fn hist_bank(
+        &self,
+        m: usize,
+        shape: (usize, usize),
+        staleness: usize,
+    ) -> std::sync::MutexGuard<'_, Vec<Matrix>> {
+        let want = m * staleness;
+        let mut bank = self.hist.lock().unwrap_or_else(PoisonError::into_inner);
+        if bank.len() != want || bank.iter().any(|b| b.shape() != shape) {
+            *bank = (0..want).map(|_| Matrix::zeros(shape.0, shape.1)).collect();
+        }
+        bank
+    }
+
+    /// Semi-synchronous variant (Liang et al. 2020, "Asynchronous
+    /// Decentralized Learning of a Neural Network"): each neighbour read
+    /// uses a value up to `staleness` rounds old, with the per-edge
+    /// staleness drawn uniformly from `{0, …, s}` out of a stream keyed
+    /// on `(seed, call_index, round)` — the schedule is a pure function
+    /// of those three numbers, so runs are reproducible and
+    /// checkpoint-resumable. A node's own value is always current, and
+    /// reads that reach past round 0 see the initial values (the history
+    /// ring is pre-filled), so round 0 is exact.
+    ///
+    /// The **last `staleness` rounds run fully synchronized** — a flush
+    /// barrier that drains the delay pipeline. Without it the final
+    /// round would re-inject noise from `s`-rounds-old (barely
+    /// contracted, on fast-mixing graphs essentially *uncontracted*)
+    /// values, and the averaging error would not shrink with the round
+    /// count; with it, every stale injection is followed by at least `s`
+    /// contracting rounds, which is what keeps semi-sync averaging
+    /// centralized-equivalent to within the gossip tolerance.
+    ///
+    /// Every round still ships the full message complement (staleness
+    /// relaxes *waiting*, not traffic). Relaxed rounds charge the
+    /// simulated clock the barrier term `α` amortized over `s + 1`
+    /// rounds ([`LatencyModel::relaxed_round_time`]); flush rounds
+    /// charge the full synchronous round time.
+    pub fn mix_rounds_semisync(
+        &self,
+        values: &mut [Matrix],
+        rounds: usize,
+        staleness: usize,
+        seed: u64,
+        call_index: u64,
+    ) -> Result<()> {
+        if staleness == 0 {
+            // Degenerate case: no delay pipeline, bit-identical to the
+            // synchronous schedule.
+            return self.mix_rounds(values, rounds);
+        }
+        let shape = self.check_values(values)?;
+        let m = values.len();
+        if m == 0 || rounds == 0 {
+            return Ok(());
+        }
+        let scalars = (shape.0 * shape.1) as u64;
+        let mut bank = self.scratch_bank(m, shape);
+        let mut hist = self.hist_bank(m, shape, staleness);
+        // Pre-fill every history slot with the initial values: stale
+        // reads that would reach before round 0 see x_0.
+        for slot in 0..staleness {
+            for (h, v) in hist[slot * m..(slot + 1) * m].iter_mut().zip(values.iter()) {
+                h.copy_from(v)?;
+            }
+        }
+        let call_rng = Xoshiro256StarStar::seed_from_u64(seed).derive(call_index);
+        for r in 0..rounds {
+            // Relaxed rounds first; the trailing `staleness` rounds are
+            // the synchronous flush.
+            let relaxed = r + staleness < rounds;
+            let mut rng = call_rng.derive(r as u64);
+            for (i, (p, out)) in self.plan.iter().zip(bank.iter_mut()).enumerate() {
+                out.fill_zero();
+                for (&j, &w) in p.nbrs.iter().zip(&p.weights) {
+                    if j == i {
+                        out.axpy(w, &values[i])?;
+                    } else {
+                        let a = if relaxed { rng.next_below(staleness + 1) } else { 0 };
+                        let src = if a == 0 {
+                            &values[j]
+                        } else {
+                            // Slot (r - a) mod s holds x_{r-a} (or the
+                            // pre-filled x_0 while r < a).
+                            &hist[((r + staleness - a) % staleness) * m + j]
+                        };
+                        out.axpy(w, src)?;
+                    }
+                }
+            }
+            // Archive x_r before it is replaced, then swap in x_{r+1}.
+            let slot = (r % staleness) * m;
+            for (h, v) in hist[slot..slot + m].iter_mut().zip(values.iter()) {
+                h.copy_from(v)?;
+            }
+            for (v, s) in values.iter_mut().zip(bank.iter_mut()) {
+                std::mem::swap(v, s);
+            }
+            self.ledger.record_round(self.msgs_per_round, scalars);
+            let dt = if relaxed {
+                self.latency
+                    .relaxed_round_time(self.max_degree, scalars * 8, staleness)
+            } else {
+                self.latency.round_time(self.max_degree, scalars * 8)
+            };
+            self.advance_clock(dt);
         }
         Ok(())
     }
@@ -553,6 +673,65 @@ mod tests {
         assert!(e.mix_rounds_lossy(&mut vals, 1, 1.5, &mut rng).is_err());
         let mut wrong = rand_values(3, 2, 2, 1);
         assert!(e.mix_rounds_lossy(&mut wrong, 1, 0.1, &mut rng).is_err());
+    }
+
+    #[test]
+    fn semisync_rounds_reach_consensus_and_charge_the_ledger() {
+        let e = engine(8, 2);
+        let mut vals = rand_values(8, 2, 3, 17);
+        let lo = vals
+            .iter()
+            .flat_map(|v| v.as_slice().iter().copied())
+            .fold(f64::INFINITY, f64::min);
+        let hi = vals
+            .iter()
+            .flat_map(|v| v.as_slice().iter().copied())
+            .fold(f64::NEG_INFINITY, f64::max);
+        e.mix_rounds_semisync(&mut vals, 60, 2, 9, 0).unwrap();
+        let v0 = vals[0].clone();
+        for v in &vals {
+            assert!(v.max_abs_diff(&v0) < 1e-8, "semisync did not reach consensus");
+        }
+        // Convex combinations only: the limit stays in the initial hull.
+        for &x in vals[0].as_slice() {
+            assert!(x >= lo - 1e-9 && x <= hi + 1e-9);
+        }
+        let s = e.ledger().snapshot();
+        assert_eq!(s.rounds, 60);
+        assert!(e.simulated_seconds() > 0.0);
+    }
+
+    #[test]
+    fn semisync_is_deterministic_in_seed_and_call() {
+        let e = engine(6, 1);
+        let f = engine(6, 1);
+        let mut a = rand_values(6, 2, 2, 18);
+        let mut b = a.clone();
+        e.mix_rounds_semisync(&mut a, 12, 2, 42, 3).unwrap();
+        f.mix_rounds_semisync(&mut b, 12, 2, 42, 3).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.max_abs_diff(y), 0.0);
+        }
+        // A different call index draws a different staleness schedule.
+        let g = engine(6, 1);
+        let mut c = rand_values(6, 2, 2, 18);
+        g.mix_rounds_semisync(&mut c, 12, 2, 42, 4).unwrap();
+        let identical = a.iter().zip(&c).all(|(x, y)| x.max_abs_diff(y) == 0.0);
+        assert!(!identical, "call index must vary the schedule");
+    }
+
+    #[test]
+    fn semisync_relaxed_clock_advances_slower_than_sync() {
+        let e = engine(6, 1);
+        let f = engine(6, 1);
+        let mut a = rand_values(6, 2, 2, 19);
+        let mut b = a.clone();
+        e.mix_rounds(&mut a, 10).unwrap();
+        f.mix_rounds_semisync(&mut b, 10, 3, 1, 0).unwrap();
+        assert!(f.simulated_seconds() < e.simulated_seconds());
+        // Traffic accounting is identical: staleness relaxes waiting,
+        // not bytes.
+        assert_eq!(e.ledger().snapshot(), f.ledger().snapshot());
     }
 
     #[test]

@@ -39,6 +39,22 @@ impl LatencyModel {
     pub fn rounds_time(&self, rounds: usize, max_degree: usize, bytes_per_neighbor: u64) -> f64 {
         rounds as f64 * self.round_time(max_degree, bytes_per_neighbor)
     }
+
+    /// Per-round time under a relaxed barrier: with up to `slack` rounds
+    /// of tolerated staleness, a node never stalls on the synchronization
+    /// barrier more than once per `slack + 1` rounds, so the fixed `α`
+    /// term amortizes while the serialization term is unchanged (the
+    /// traffic still flows every round). `slack = 0` is exactly
+    /// [`LatencyModel::round_time`].
+    pub fn relaxed_round_time(
+        &self,
+        max_degree: usize,
+        bytes_per_neighbor: u64,
+        slack: usize,
+    ) -> f64 {
+        self.alpha / (slack as f64 + 1.0)
+            + (max_degree as u64 * bytes_per_neighbor) as f64 / self.beta
+    }
 }
 
 #[cfg(test)]
@@ -51,6 +67,19 @@ mod tests {
         // 2 neighbours × 500 bytes / 1000 B/s = 1 s, + 0.01 s latency.
         assert!((m.round_time(2, 500) - 1.01).abs() < 1e-12);
         assert!((m.rounds_time(3, 2, 500) - 3.03).abs() < 1e-12);
+    }
+
+    #[test]
+    fn relaxed_round_time_amortizes_the_barrier_only() {
+        let m = LatencyModel { alpha: 0.01, beta: 1000.0 };
+        // slack 0 == the synchronous round time, bit for bit.
+        assert_eq!(
+            m.relaxed_round_time(2, 500, 0).to_bits(),
+            m.round_time(2, 500).to_bits()
+        );
+        // slack 1 halves alpha, leaves the serialization term alone.
+        assert!((m.relaxed_round_time(2, 500, 1) - (0.005 + 1.0)).abs() < 1e-12);
+        assert!(m.relaxed_round_time(2, 500, 4) < m.round_time(2, 500));
     }
 
     #[test]

@@ -236,6 +236,78 @@ mod tests {
     }
 
     #[test]
+    fn metropolis_doubly_stochastic_on_random_geometric_property() {
+        // Property sweep over placements and radii: every irregular
+        // graph the generator produces must yield exactly row- and
+        // column-stochastic non-negative Metropolis weights with a
+        // contracting spectral gap. (The RGG generator bridges
+        // components, so every instance is connected.)
+        let mut checked = 0;
+        for seed in 0..12u64 {
+            for &radius in &[0.3, 0.45, 0.7] {
+                let t = Topology::RandomGeometric { nodes: 16, radius, seed };
+                let mm = MixingMatrix::build(&t, WeightRule::Metropolis).unwrap();
+                let m = mm.num_nodes();
+                for i in 0..m {
+                    let mut row = 0.0;
+                    let mut col = 0.0;
+                    for j in 0..m {
+                        let hij = mm.matrix().get(i, j);
+                        assert!(hij >= -1e-12, "negative h[{i},{j}]={hij} ({seed},{radius})");
+                        // Symmetric rule on an undirected graph.
+                        assert!(
+                            (hij - mm.matrix().get(j, i)).abs() < 1e-12,
+                            "asymmetric Metropolis weights ({seed},{radius})"
+                        );
+                        row += hij;
+                        col += mm.matrix().get(j, i);
+                    }
+                    assert!((row - 1.0).abs() < 1e-9, "row {i} sums to {row} ({seed},{radius})");
+                    assert!((col - 1.0).abs() < 1e-9, "col {i} sums to {col} ({seed},{radius})");
+                }
+                let l2 = mm.lambda2();
+                assert!(l2 < 1.0, "λ2={l2} not contracting ({seed},{radius})");
+                checked += 1;
+            }
+        }
+        assert_eq!(checked, 36);
+    }
+
+    #[test]
+    fn lambda2_monotone_in_circular_degree_up_to_complete() {
+        // The Fig. 4 mechanism, swept to the complete graph: λ₂ never
+        // increases with the circular degree, the ring end is near 1,
+        // the complete end is (numerically) 0, and the implied round
+        // count B(δ) collapses accordingly.
+        for m in [16usize, 24] {
+            let dmax = Topology::max_circular_degree(m);
+            let lambdas: Vec<f64> = (1..=dmax).map(|d| circ(m, d).lambda2()).collect();
+            for (i, w) in lambdas.windows(2).enumerate() {
+                assert!(
+                    w[1] <= w[0] + 1e-9,
+                    "M={m}: λ2 increased from d={} to d={}: {lambdas:?}",
+                    i + 1,
+                    i + 2
+                );
+            }
+            assert!(lambdas[0] > 0.9, "M={m} ring λ2 {}", lambdas[0]);
+            assert!(lambdas[dmax - 1] < 1e-8, "M={m} complete λ2 {}", lambdas[dmax - 1]);
+            let rounds: Vec<usize> = (1..=dmax)
+                .map(|d| circ(m, d).consensus_rounds(1e-9))
+                .collect();
+            for w in rounds.windows(2) {
+                assert!(w[1] <= w[0], "M={m}: B(δ) increased: {rounds:?}");
+            }
+            assert!(
+                rounds[0] > 4 * rounds[dmax - 1],
+                "M={m}: ring B={} vs complete B={}",
+                rounds[0],
+                rounds[dmax - 1]
+            );
+        }
+    }
+
+    #[test]
     fn lambda2_matches_ring_closed_form() {
         // Ring with equal weights 1/3: eigenvalues (1 + 2cos(2πk/M))/3.
         let m = 12;

@@ -12,20 +12,34 @@
 //!   stochastic on *any* connected graph), with spectral-gap analysis to
 //!   derive the number of gossip rounds `B(d)` needed for a consensus
 //!   tolerance (the quantity behind Fig. 4's time-vs-degree transition);
-//! * [`GossipEngine`] — executes synchronous gossip-averaging rounds over
-//!   per-node matrices, with exact per-message byte accounting;
+//! * [`GossipEngine`] — executes gossip-averaging rounds over per-node
+//!   matrices, with exact per-message byte accounting;
+//! * [`CommFabric`] — the pluggable execution model on top of the
+//!   engine: [`SynchronousFabric`] (the paper's barrier per round),
+//!   [`SemiSyncFabric`] (neighbour values up to `s` rounds stale, Liang
+//!   et al. 2020), and [`LossyFabric`] (per-round edge drops with the
+//!   lazy correction) all schedule, measure and degrade exchanges behind
+//!   one trait, configured by a serializable [`CommSchedule`];
+//! * [`AdaptiveDeltaPolicy`] — L-FGADMM-style controller that loosens
+//!   the per-layer consensus tolerance δ while the objective is
+//!   plateaued, throttling communication instead of stopping the run;
 //! * [`CommLedger`] — thread-safe message/byte/round counters (the data
 //!   source for the eq. (14)–(16) communication-load comparison);
 //! * [`LatencyModel`] — an α-β cost model mapping (rounds, bytes) to
 //!   simulated wall-clock time.
 
 mod accounting;
+mod fabric;
 mod gossip;
 mod latency;
 mod mixing;
 mod topology;
 
 pub use accounting::{CommLedger, CommSnapshot};
+pub use fabric::{
+    AdaptiveDeltaPolicy, CommConfig, CommFabric, CommSchedule, LossyFabric, SemiSyncFabric,
+    SynchronousFabric,
+};
 pub use gossip::GossipEngine;
 pub use latency::LatencyModel;
 pub use mixing::{MixingMatrix, WeightRule};

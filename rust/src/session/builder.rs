@@ -3,7 +3,9 @@
 use super::{StopPolicy, TrainSession};
 use crate::coordinator::{ConsensusMode, DssfnAlgorithm, TaskRef, TrainOptions};
 use crate::data::{lookup, ClassificationTask};
-use crate::network::{LatencyModel, Topology, WeightRule};
+use crate::network::{
+    AdaptiveDeltaPolicy, CommConfig, CommSchedule, LatencyModel, Topology, WeightRule,
+};
 use crate::runtime::{ComputeBackend, NativeBackend};
 use crate::ssfn::{GrowthPolicy, SsfnArchitecture, TrainHyper};
 use crate::{Error, Result};
@@ -45,6 +47,8 @@ pub struct SessionBuilder {
     topology: Option<Topology>,
     weight_rule: WeightRule,
     consensus: ConsensusMode,
+    schedule: CommSchedule,
+    adaptive_delta: Option<AdaptiveDeltaPolicy>,
     latency: LatencyModel,
     threads: usize,
     record_cost_curve: bool,
@@ -81,6 +85,8 @@ impl SessionBuilder {
             topology: None,
             weight_rule: WeightRule::EqualNeighbor,
             consensus: ConsensusMode::Gossip { delta: 1e-9 },
+            schedule: CommSchedule::Synchronous,
+            adaptive_delta: None,
             latency: LatencyModel::default(),
             threads: 0,
             record_cost_curve: true,
@@ -189,6 +195,28 @@ impl SessionBuilder {
         self
     }
 
+    /// Communication fabric schedule: how and when gossip exchanges run
+    /// ([`CommSchedule::Synchronous`] is the paper's model and the
+    /// default; semi-sync and lossy schedules relax it).
+    pub fn comm_fabric(mut self, schedule: CommSchedule) -> Self {
+        self.schedule = schedule;
+        self
+    }
+
+    /// Shorthand for the semi-synchronous fabric with the given
+    /// staleness bound `s` (Liang et al., 2020).
+    pub fn staleness(self, staleness: usize) -> Self {
+        self.comm_fabric(CommSchedule::SemiSync { staleness })
+    }
+
+    /// L-FGADMM-style adaptive consensus tolerance: loosen the working
+    /// `δ` while the layer objective is plateaued (requires cost-curve
+    /// recording, which is on by default).
+    pub fn adaptive_delta(mut self, policy: AdaptiveDeltaPolicy) -> Self {
+        self.adaptive_delta = Some(policy);
+        self
+    }
+
     /// α-β latency model parameters (s/round, bytes/s).
     pub fn latency(mut self, alpha: f64, beta: f64) -> Self {
         self.latency = LatencyModel { alpha, beta };
@@ -272,10 +300,15 @@ impl SessionBuilder {
             Some(b) => b,
             None => Arc::new(NativeBackend::new()),
         };
-        let alg = DssfnAlgorithm::new(
+        let comm = CommConfig {
+            schedule: self.schedule,
+            adaptive_delta: self.adaptive_delta,
+        };
+        let alg = DssfnAlgorithm::with_comm(
             arch,
             self.hyper,
             opts,
+            comm,
             self.seed,
             backend,
             TaskRef::Shared(task),
@@ -328,6 +361,72 @@ mod tests {
             .stop_policy(StopPolicy::none().with_max_simulated_secs(-3.0))
             .build()
             .is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_comm_config() {
+        // Schedules and adaptive δ require gossip consensus.
+        assert!(SessionBuilder::new()
+            .dataset("quickstart")
+            .layers(1)
+            .hidden_extra(8)
+            .nodes(4)
+            .degree(1)
+            .exact_consensus()
+            .staleness(2)
+            .build()
+            .is_err());
+        assert!(SessionBuilder::new()
+            .dataset("quickstart")
+            .layers(1)
+            .hidden_extra(8)
+            .nodes(4)
+            .degree(1)
+            .exact_consensus()
+            .adaptive_delta(AdaptiveDeltaPolicy::default())
+            .build()
+            .is_err());
+        // Adaptive δ needs the cost curve it steers off.
+        assert!(SessionBuilder::new()
+            .dataset("quickstart")
+            .layers(1)
+            .hidden_extra(8)
+            .nodes(4)
+            .degree(1)
+            .record_cost_curve(false)
+            .adaptive_delta(AdaptiveDeltaPolicy::default())
+            .build()
+            .is_err());
+        // Lossy probability out of range.
+        assert!(SessionBuilder::new()
+            .dataset("quickstart")
+            .layers(1)
+            .hidden_extra(8)
+            .nodes(4)
+            .degree(1)
+            .comm_fabric(CommSchedule::Lossy { loss_p: 1.0 })
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn semisync_session_trains_and_reports_its_schedule() {
+        let session = SessionBuilder::new()
+            .dataset("quickstart")
+            .seed(3)
+            .layers(1)
+            .hidden_extra(10)
+            .admm_iterations(3)
+            .nodes(4)
+            .degree(1)
+            .threads(1)
+            .staleness(2)
+            .build()
+            .unwrap();
+        assert!(session.describe().contains("semisync(s=2)"), "{}", session.describe());
+        let (_model, report) = session.run_to_completion().unwrap();
+        assert!(report.mode.contains("semisync(s=2)"));
+        assert!(report.comm_total.bytes > 0);
     }
 
     #[test]

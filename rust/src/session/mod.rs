@@ -135,6 +135,17 @@ pub enum StepEvent {
         /// the hot loop carries no extra per-iteration scan.
         consensus_gap: f64,
     },
+    /// The [`crate::network::AdaptiveDeltaPolicy`] controller changed
+    /// the consensus tolerance used for subsequent gossip averagings of
+    /// the current layer. Only emitted when adaptive δ is configured.
+    DeltaAdjusted {
+        /// Layer index.
+        layer: usize,
+        /// Iteration whose cost observation triggered the change.
+        iteration: usize,
+        /// The new per-averaging contraction target δ.
+        delta: f64,
+    },
     /// A layer finished: diagnostics recorded, features advanced (or the
     /// final output frozen when `last` is true).
     LayerAdvanced {

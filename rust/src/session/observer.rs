@@ -34,6 +34,12 @@ pub trait TrainObserver {
         let _ = (layer, iteration, cost, consensus_gap);
     }
 
+    /// The adaptive-δ controller changed the working consensus
+    /// tolerance (only fires when adaptive δ is configured).
+    fn on_delta_adjusted(&mut self, layer: usize, iteration: usize, delta: f64) {
+        let _ = (layer, iteration, delta);
+    }
+
     /// A layer finished.
     fn on_layer_advanced(&mut self, layer: usize, cost: f64, last: bool) {
         let _ = (layer, cost, last);
@@ -65,6 +71,9 @@ pub(super) fn dispatch(obs: &mut dyn TrainObserver, event: &StepEvent) {
         }
         StepEvent::AdmmIteration { layer, iteration, cost, consensus_gap } => {
             obs.on_admm_iteration(layer, iteration, cost, consensus_gap)
+        }
+        StepEvent::DeltaAdjusted { layer, iteration, delta } => {
+            obs.on_delta_adjusted(layer, iteration, delta)
         }
         StepEvent::LayerAdvanced { layer, cost, last } => {
             obs.on_layer_advanced(layer, cost, last)

@@ -135,6 +135,125 @@ fn train_checkpoint_and_resume_roundtrip() {
 }
 
 #[test]
+fn train_with_semisync_schedule_and_adaptive_delta() {
+    let out = dssfn()
+        .args([
+            "train",
+            "--dataset",
+            "quickstart",
+            "--layers",
+            "1",
+            "--admm-iters",
+            "10",
+            "--nodes",
+            "4",
+            "--degree",
+            "1",
+            "--schedule",
+            "semisync",
+            "--staleness",
+            "2",
+            "--adaptive-delta",
+            "1e-4",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("semisync(s=2)"), "schedule missing from mode:\n{text}");
+    assert!(text.contains("adaptive"), "adaptive tag missing from mode:\n{text}");
+
+    // Unknown schedule names fail fast.
+    let out = dssfn()
+        .args(["train", "--dataset", "quickstart", "--schedule", "psync"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown schedule"));
+
+    // Schedule flags conflict with --resume (the checkpoint carries the
+    // run's configuration).
+    let out = dssfn()
+        .args(["train", "--resume", "nope.ckpt", "--schedule", "lossy"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("cannot be combined"));
+}
+
+#[test]
+fn train_checkpoint_every_iterations_and_resume() {
+    let dir = std::env::temp_dir().join(format!("dssfn_cli_ckpt_every_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("mid.ckpt");
+    let out = dssfn()
+        .args([
+            "train",
+            "--dataset",
+            "quickstart",
+            "--layers",
+            "1",
+            "--admm-iters",
+            "9",
+            "--nodes",
+            "4",
+            "--degree",
+            "1",
+            "--checkpoint-every",
+            "4",
+            "--verbose",
+            "--checkpoint",
+        ])
+        .arg(&ckpt)
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        err.contains("checkpoint at layer"),
+        "no per-iteration checkpoint logged: {err}"
+    );
+    assert!(ckpt.exists());
+    // The mid-layer snapshot resumes cleanly.
+    let out = dssfn().args(["train", "--resume"]).arg(&ckpt).output().unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    // --checkpoint-every without --checkpoint (or with 0) is refused.
+    let out = dssfn()
+        .args(["train", "--dataset", "quickstart", "--checkpoint-every", "4"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("needs --checkpoint"));
+    let out = dssfn()
+        .args([
+            "train",
+            "--dataset",
+            "quickstart",
+            "--checkpoint-every",
+            "0",
+            "--checkpoint",
+        ])
+        .arg(&ckpt)
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn train_with_byte_budget_stops_early_and_verbose_streams_events() {
     let out = dssfn()
         .args([

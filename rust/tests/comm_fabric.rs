@@ -1,0 +1,210 @@
+//! Integration: the pluggable `CommFabric` API — centralized-equivalent
+//! training under relaxed communication schedules, adaptive-δ
+//! communication savings, and bit-identical checkpoint/resume of seeded
+//! schedules.
+
+use dssfn::data::lookup;
+use dssfn::network::{AdaptiveDeltaPolicy, CommSchedule};
+use dssfn::session::{SessionBuilder, StepEvent};
+use dssfn::{resume_session, Checkpoint};
+
+/// A small-but-real configuration on the synthetic mnist-small task
+/// (P = 64, Q = 10): one structured layer plus the input solve.
+fn mnist_small_builder() -> SessionBuilder {
+    SessionBuilder::new()
+        .dataset("mnist-small")
+        .seed(11)
+        .layers(1)
+        .hidden_extra(30)
+        .admm_iterations(30)
+        .nodes(6)
+        .degree(2)
+        .gossip_delta(1e-8)
+        .threads(2)
+}
+
+#[test]
+fn semisync_final_cost_within_5_percent_of_synchronous() {
+    let (_, sync_report) = mnist_small_builder()
+        .build()
+        .unwrap()
+        .run_to_completion()
+        .unwrap();
+    let (_, semi_report) = mnist_small_builder()
+        .staleness(2)
+        .build()
+        .unwrap()
+        .run_to_completion()
+        .unwrap();
+
+    let sync_cost = sync_report.layers.last().unwrap().final_cost().unwrap();
+    let semi_cost = semi_report.layers.last().unwrap().final_cost().unwrap();
+    assert!(
+        (semi_cost - sync_cost).abs() <= 0.05 * sync_cost.abs(),
+        "semisync final-layer cost {semi_cost} vs sync {sync_cost}"
+    );
+    // Accuracy is preserved too, not just the objective.
+    assert!(
+        (semi_report.train_accuracy - sync_report.train_accuracy).abs() < 0.05,
+        "train acc {} vs {}",
+        semi_report.train_accuracy,
+        sync_report.train_accuracy
+    );
+    assert!(semi_report.mode.contains("semisync(s=2)"), "{}", semi_report.mode);
+    // Staleness buys pipeline of rounds: the flush rounds add traffic,
+    // but the relaxed barrier makes the simulated clock run faster.
+    assert!(semi_report.comm_total.rounds > sync_report.comm_total.rounds);
+    assert!(
+        semi_report.simulated_comm_secs < sync_report.simulated_comm_secs,
+        "semisync sim time {} should beat sync {}",
+        semi_report.simulated_comm_secs,
+        sync_report.simulated_comm_secs
+    );
+}
+
+#[test]
+fn adaptive_delta_saves_bytes_without_hurting_cost() {
+    let (_, fixed_report) = mnist_small_builder()
+        .build()
+        .unwrap()
+        .run_to_completion()
+        .unwrap();
+
+    let mut session = mnist_small_builder()
+        .adaptive_delta(AdaptiveDeltaPolicy {
+            max_delta: 1e-4,
+            plateau: 0.02,
+            loosen: 10.0,
+        })
+        .build()
+        .unwrap();
+    let mut adjustments = 0usize;
+    while let Some(ev) = session.step().unwrap() {
+        if let StepEvent::DeltaAdjusted { delta, .. } = ev {
+            adjustments += 1;
+            assert!(delta <= 1e-4 && delta >= 1e-8, "δ {delta} escaped its bounds");
+        }
+    }
+    let (_, adaptive_report) = session.finish().unwrap();
+
+    assert!(adjustments > 0, "the controller never adjusted δ");
+    assert!(
+        adaptive_report.comm_total.bytes < fixed_report.comm_total.bytes,
+        "adaptive δ did not save traffic: {} vs {}",
+        adaptive_report.comm_total.bytes,
+        fixed_report.comm_total.bytes
+    );
+    let fixed_cost = fixed_report.layers.last().unwrap().final_cost().unwrap();
+    let adaptive_cost = adaptive_report.layers.last().unwrap().final_cost().unwrap();
+    assert!(
+        adaptive_cost <= fixed_cost * 1.01 + 1e-12,
+        "adaptive δ worsened the final cost beyond 1%: {adaptive_cost} vs {fixed_cost}"
+    );
+    assert!(adaptive_report.mode.contains("adaptive-δ"), "{}", adaptive_report.mode);
+}
+
+#[test]
+fn lossy_schedule_trains_to_comparable_accuracy() {
+    let (_, sync_report) = mnist_small_builder()
+        .build()
+        .unwrap()
+        .run_to_completion()
+        .unwrap();
+    let (_, lossy_report) = mnist_small_builder()
+        .comm_fabric(CommSchedule::Lossy { loss_p: 0.2 })
+        .build()
+        .unwrap()
+        .run_to_completion()
+        .unwrap();
+    let sync_cost = sync_report.layers.last().unwrap().final_cost().unwrap();
+    let lossy_cost = lossy_report.layers.last().unwrap().final_cost().unwrap();
+    assert!(
+        (lossy_cost - sync_cost).abs() <= 0.05 * sync_cost.abs(),
+        "lossy final-layer cost {lossy_cost} vs sync {sync_cost}"
+    );
+    // The compensation runs extra rounds, so the drop schedule costs
+    // rounds, not accuracy.
+    assert!(lossy_report.comm_total.rounds > sync_report.comm_total.rounds);
+    assert!(lossy_report.mode.contains("lossy(p=0.2)"), "{}", lossy_report.mode);
+}
+
+/// Checkpoint/resume must replay seeded schedules bit-identically: the
+/// fabric's call cursor and the adaptive controller's working δ are
+/// part of the snapshot.
+#[test]
+fn semisync_adaptive_run_resumes_bit_identically() {
+    let task = std::sync::Arc::new(lookup("quickstart").unwrap().generator(5).generate().unwrap());
+    let builder = || {
+        SessionBuilder::new()
+            .shared_task(std::sync::Arc::clone(&task))
+            .seed(5)
+            .layers(2)
+            .hidden_extra(12)
+            .admm_iterations(12)
+            .nodes(4)
+            .degree(1)
+            .gossip_delta(1e-8)
+            .threads(2)
+            .staleness(2)
+            .adaptive_delta(AdaptiveDeltaPolicy {
+                max_delta: 1e-4,
+                plateau: 0.05,
+                loosen: 10.0,
+            })
+    };
+    let (one_model, one_report) = builder().build().unwrap().run_to_completion().unwrap();
+    let one_model = one_model.into_ssfn().unwrap();
+
+    // Interrupt mid-layer-1, serialize, restore, finish.
+    let mut session = builder().build().unwrap();
+    let ck = loop {
+        match session.step().unwrap() {
+            Some(StepEvent::AdmmIteration { layer: 1, iteration: 5, .. }) => {
+                break session.checkpoint().unwrap();
+            }
+            Some(_) => {}
+            None => panic!("session finished before the checkpoint point"),
+        }
+    };
+    let bytes = ck.to_bytes();
+    drop(session);
+
+    let ck = Checkpoint::from_bytes(&bytes).unwrap();
+    let mut resumed = resume_session(&ck, &task).unwrap();
+    let (model, report) = resumed.finish().unwrap();
+    let model = model.into_ssfn().unwrap();
+
+    assert_eq!(model.output().max_abs_diff(one_model.output()), 0.0);
+    for (a, b) in model.weights().iter().zip(one_model.weights()) {
+        assert_eq!(a.max_abs_diff(b), 0.0, "restored weight drifted");
+    }
+    assert_eq!(report.full_cost_curve(), one_report.full_cost_curve());
+    assert_eq!(report.comm_total, one_report.comm_total);
+    assert_eq!(report.total_gossip_rounds(), one_report.total_gossip_rounds());
+}
+
+/// The synchronous fabric really is the old path: a default-schedule
+/// session and one built through the explicit `comm_fabric(Synchronous)`
+/// knob produce bit-identical models and ledgers.
+#[test]
+fn explicit_synchronous_fabric_is_bit_identical_to_default() {
+    let (m1, r1) = mnist_small_builder()
+        .build()
+        .unwrap()
+        .run_to_completion()
+        .unwrap();
+    let (m2, r2) = mnist_small_builder()
+        .comm_fabric(CommSchedule::Synchronous)
+        .build()
+        .unwrap()
+        .run_to_completion()
+        .unwrap();
+    let m1 = m1.into_ssfn().unwrap();
+    let m2 = m2.into_ssfn().unwrap();
+    assert_eq!(m1.output().max_abs_diff(m2.output()), 0.0);
+    for (a, b) in m1.weights().iter().zip(m2.weights()) {
+        assert_eq!(a.max_abs_diff(b), 0.0);
+    }
+    assert_eq!(r1.comm_total, r2.comm_total);
+    assert_eq!(r1.full_cost_curve(), r2.full_cost_curve());
+}
