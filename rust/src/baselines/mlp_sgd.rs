@@ -10,7 +10,7 @@
 use crate::data::{ClassificationTask, Dataset};
 use crate::linalg::{accuracy_from_predictions, Matrix};
 use crate::metrics::{error_db, LayerRecord, TrainReport};
-use crate::network::GossipEngine;
+use crate::network::{CommFabric, GossipEngine};
 use crate::session::{
     Algorithm, AlgorithmOutput, SessionProgress, StepEvent, StopReason, TrainedModel,
 };
@@ -129,18 +129,20 @@ impl MlpSgdTrainer {
         Ok(grads)
     }
 
-    /// Train across `shards`; gradients are gossip-averaged through
-    /// `engine` when given, exactly averaged otherwise. Returns the model
-    /// and a report (cost curve = global objective per iteration).
-    /// Implemented as a loop over [`MlpSgdAlgorithm`] — the one-shot call
-    /// and the session-driven path are the same computation.
+    /// Train across `shards`; gradients are averaged over the
+    /// [`CommFabric`] when given (so the baseline sweeps the same sync /
+    /// semi-sync / lossy schedules as the dSSFN trainer and DGD),
+    /// exactly averaged otherwise. Returns the model and a report (cost
+    /// curve = global objective per iteration). Implemented as a loop
+    /// over [`MlpSgdAlgorithm`] — the one-shot call and the
+    /// session-driven path are the same computation.
     pub fn train(
         &self,
         task: &ClassificationTask,
         shards: &[Dataset],
-        engine: Option<&GossipEngine>,
+        fabric: Option<&dyn CommFabric>,
     ) -> Result<(MlpModel, TrainReport)> {
-        let mut alg = MlpSgdAlgorithm::new(self.params, task, shards, engine)?;
+        let mut alg = MlpSgdAlgorithm::new(self.params, task, shards, fabric)?;
         crate::session::drive_to_completion(&mut alg)?;
         let out = alg.finalize()?;
         Ok((out.model.into_mlp()?, out.report))
@@ -161,11 +163,13 @@ impl MlpSgdTrainer {
 /// iteration (per-shard backprop, per-layer gradient gossip, weight
 /// step, objective eval) — the exact operation sequence of the legacy
 /// `MlpSgdTrainer::train` loop, which is now a wrapper over this type.
+/// Gradient averages run through a [`CommFabric`], so baseline-table
+/// sweeps exercise the same pluggable schedules as the trainer.
 pub struct MlpSgdAlgorithm<'a> {
     params: MlpSgdParams,
     task: &'a ClassificationTask,
     shards: &'a [Dataset],
-    engine: Option<&'a GossipEngine>,
+    fabric: Option<&'a dyn CommFabric>,
     ws: Vec<Matrix>,
     curve: Vec<f64>,
     gossip_rounds: usize,
@@ -182,7 +186,7 @@ impl<'a> MlpSgdAlgorithm<'a> {
         params: MlpSgdParams,
         task: &'a ClassificationTask,
         shards: &'a [Dataset],
-        engine: Option<&'a GossipEngine>,
+        fabric: Option<&'a dyn CommFabric>,
     ) -> Result<Self> {
         let trainer = MlpSgdTrainer::new(params)?;
         if shards.is_empty() {
@@ -193,7 +197,7 @@ impl<'a> MlpSgdAlgorithm<'a> {
             params,
             task,
             shards,
-            engine,
+            fabric,
             ws,
             curve: Vec::with_capacity(params.iterations),
             gossip_rounds: 0,
@@ -208,7 +212,14 @@ impl<'a> MlpSgdAlgorithm<'a> {
 
 impl Algorithm for MlpSgdAlgorithm<'_> {
     fn describe(&self) -> String {
-        format!("mlp-sgd({} layers)", self.params.layers)
+        match self.fabric {
+            Some(fab) => format!(
+                "mlp-sgd({} layers, gossip {})",
+                self.params.layers,
+                fab.describe()
+            ),
+            None => format!("mlp-sgd({} layers)", self.params.layers),
+        }
     }
 
     fn is_done(&self) -> bool {
@@ -234,10 +245,9 @@ impl Algorithm for MlpSgdAlgorithm<'_> {
         let mut iter_rounds = 0usize;
         let mut iter_bytes = 0u64;
         for (li, bucket) in per_layer.iter_mut().enumerate() {
-            let avg = match self.engine {
-                Some(eng) => {
-                    let (rounds, bytes) =
-                        eng.consensus_average_measured(bucket, self.params.delta)?;
+            let avg = match self.fabric {
+                Some(fab) => {
+                    let (rounds, bytes) = fab.average(bucket, self.params.delta)?;
                     self.gossip_rounds += rounds;
                     iter_rounds += rounds;
                     iter_bytes += bytes;
@@ -256,7 +266,7 @@ impl Algorithm for MlpSgdAlgorithm<'_> {
         }
         self.curve.push(cost);
 
-        if self.engine.is_some() {
+        if self.fabric.is_some() {
             events.push(StepEvent::GossipRound {
                 layer: 0,
                 iteration: k,
@@ -317,10 +327,10 @@ impl Algorithm for MlpSgdAlgorithm<'_> {
     }
 
     fn progress(&self) -> SessionProgress {
-        match self.engine {
-            Some(eng) => SessionProgress {
-                comm_bytes: eng.ledger().snapshot().bytes,
-                simulated_secs: eng.simulated_seconds(),
+        match self.fabric {
+            Some(fab) => SessionProgress {
+                comm_bytes: fab.engine().ledger().snapshot().bytes,
+                simulated_secs: fab.engine().simulated_seconds(),
             },
             None => SessionProgress::default(),
         }
@@ -417,6 +427,65 @@ mod tests {
         }
         assert_eq!(report.layers[0].cost_curve, direct_report.layers[0].cost_curve);
         assert_eq!(report.mode, "mlp-sgd(2 layers)");
+    }
+
+    #[test]
+    fn mlp_trains_over_sync_and_semisync_fabrics() {
+        use crate::network::{
+            CommLedger, LatencyModel, MixingMatrix, SemiSyncFabric, SynchronousFabric,
+            Topology, WeightRule,
+        };
+        use std::sync::Arc;
+        let task = toy_task();
+        // A true ring (6 nodes, degree 1): B(δ) is large enough that the
+        // semi-sync flush tail amortizes and the relaxed clock wins.
+        let shards = shard_uniform(&task.train, 6).unwrap();
+        let mk_engine = || {
+            GossipEngine::new(
+                MixingMatrix::build(
+                    &Topology::Circular { nodes: 6, degree: 1 },
+                    WeightRule::EqualNeighbor,
+                )
+                .unwrap(),
+                Arc::new(CommLedger::new()),
+                LatencyModel::default(),
+            )
+        };
+        let tr = MlpSgdTrainer::new(params(300)).unwrap();
+        // Synchronous fabric: the baseline charges real traffic and
+        // still learns.
+        let sync_fab = SynchronousFabric::new(mk_engine());
+        let (_, sync_report) = tr.train(&task, &shards, Some(&sync_fab)).unwrap();
+        assert!(sync_report.mode.contains("gossip sync"), "{}", sync_report.mode);
+        assert!(sync_fab.engine().ledger().snapshot().bytes > 0);
+        assert!(sync_report.layers[0].gossip_rounds > 0);
+        // Semi-sync fabric: same sweep surface as the trainer and DGD —
+        // this used to run silently synchronous through the bare
+        // GossipEngine plumbing.
+        let semi_fab = SemiSyncFabric::new(mk_engine(), 2, 7);
+        let (_, semi_report) = tr.train(&task, &shards, Some(&semi_fab)).unwrap();
+        assert!(semi_report.mode.contains("semisync(s=2)"), "{}", semi_report.mode);
+        assert!(
+            semi_fab.engine().ledger().snapshot().rounds
+                > sync_fab.engine().ledger().snapshot().rounds,
+            "staleness flush rounds missing"
+        );
+        assert!(
+            semi_fab.engine().simulated_seconds()
+                < sync_fab.engine().simulated_seconds(),
+            "relaxed barrier should beat the synchronous clock"
+        );
+        // Both schedules learn the task (the objective is nonconvex, so
+        // the two trajectories need not land on the same minimum — the
+        // claim is that staleness does not break training).
+        let semi_curve = &semi_report.layers[0].cost_curve;
+        assert!(semi_curve.last().unwrap() < &(semi_curve.first().unwrap() * 0.5));
+        assert!(
+            semi_report.train_accuracy > 0.7,
+            "semisync MLP failed to learn: acc {}",
+            semi_report.train_accuracy
+        );
+        assert!(sync_report.train_accuracy > 0.7);
     }
 
     #[test]

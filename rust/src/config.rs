@@ -26,9 +26,13 @@
 //! degree = 4
 //! delta = 1e-9
 //! schedule = "sync"        # or "semisync" / "lossy"
-//! staleness = 2            # semisync: neighbour reads up to s rounds stale
-//! loss_p = 0.1             # lossy: per-round edge-drop probability
+//! staleness = 2            # semisync only: reads up to s rounds stale
+//! loss_p = 0.1             # lossy only: per-round edge-drop probability
 //! adaptive_delta = 1e-4    # enable adaptive δ with this max_delta
+//! adaptive_period = 4      # L-FGADMM period doubling cap (needs adaptive_delta)
+//! iter_staleness = 2       # ADMM updates vs consensus up to s iterations stale
+//! straggler_sigma = 0.5    # lognormal per-node α heterogeneity (0 = homogeneous)
+//! straggler_seed = 7       # seed of the per-node straggler draw
 //! alpha = 0.001
 //! beta = 125000000.0
 //!
@@ -40,7 +44,9 @@
 
 use crate::coordinator::{ConsensusMode, TrainOptions};
 use crate::data::{lookup, ClassificationTask};
-use crate::network::{AdaptiveDeltaPolicy, CommSchedule, LatencyModel, Topology, WeightRule};
+use crate::network::{
+    AdaptiveDeltaPolicy, CommSchedule, LatencyModel, NodeLatency, Topology, WeightRule,
+};
 use crate::ssfn::{SsfnArchitecture, TrainHyper};
 use crate::{Error, Result};
 use std::collections::BTreeMap;
@@ -82,13 +88,28 @@ pub struct ExperimentConfig {
     pub delta: f64,
     /// Communication schedule: `"sync"`, `"semisync"` or `"lossy"`.
     pub schedule: String,
-    /// Staleness bound `s` for the semi-sync schedule.
-    pub staleness: usize,
-    /// Per-round edge-drop probability for the lossy schedule.
-    pub loss_p: f64,
+    /// Staleness bound `s` for the semi-sync schedule. Setting it with
+    /// any other schedule is an error (it would otherwise be silently
+    /// ignored); `None` lets semi-sync default to 2.
+    pub staleness: Option<usize>,
+    /// Per-round edge-drop probability for the lossy schedule. Setting
+    /// it with any other schedule is an error; `None` lets lossy
+    /// default to 0.1.
+    pub loss_p: Option<f64>,
     /// Enable adaptive δ with this `max_delta` (plateau/loosen at their
     /// [`AdaptiveDeltaPolicy`] defaults).
     pub adaptive_delta: Option<f64>,
+    /// L-FGADMM communication-period doubling cap (1 = off; > 1
+    /// requires `adaptive_delta`).
+    pub adaptive_period: usize,
+    /// Iteration-level staleness bound for the ADMM loop (0 = off;
+    /// requires the `"sync"` schedule).
+    pub iter_staleness: usize,
+    /// Lognormal σ of the per-node straggler latency model (0 =
+    /// homogeneous, the paper's cost model).
+    pub straggler_sigma: f64,
+    /// Seed of the per-node straggler draw.
+    pub straggler_seed: u64,
     /// Use exact averaging instead of gossip (ablation).
     pub exact_consensus: bool,
     /// α of the latency model (s/round).
@@ -120,9 +141,13 @@ impl Default for ExperimentConfig {
             degree: 4,
             delta: 1e-9,
             schedule: "sync".into(),
-            staleness: 2,
-            loss_p: 0.1,
+            staleness: None,
+            loss_p: None,
             adaptive_delta: None,
+            adaptive_period: 1,
+            iter_staleness: 0,
+            straggler_sigma: 0.0,
+            straggler_seed: 0,
             exact_consensus: false,
             alpha: 1e-3,
             beta: 125e6,
@@ -194,9 +219,13 @@ impl ExperimentConfig {
                 }
                 self.schedule = value.to_string();
             }
-            "network.staleness" => self.staleness = num(key, value)?,
-            "network.loss_p" => self.loss_p = num(key, value)?,
+            "network.staleness" => self.staleness = Some(num(key, value)?),
+            "network.loss_p" => self.loss_p = Some(num(key, value)?),
             "network.adaptive_delta" => self.adaptive_delta = Some(num(key, value)?),
+            "network.adaptive_period" => self.adaptive_period = num(key, value)?,
+            "network.iter_staleness" => self.iter_staleness = num(key, value)?,
+            "network.straggler_sigma" => self.straggler_sigma = num(key, value)?,
+            "network.straggler_seed" => self.straggler_seed = num(key, value)?,
             "network.exact_consensus" => self.exact_consensus = num(key, value)?,
             "network.alpha" => self.alpha = num(key, value)?,
             "network.beta" => self.beta = num(key, value)?,
@@ -268,16 +297,110 @@ impl ExperimentConfig {
     }
 
     /// The typed communication schedule the `network.schedule` /
-    /// `network.staleness` / `network.loss_p` knobs describe.
+    /// `network.staleness` / `network.loss_p` knobs describe. A knob
+    /// set for a schedule that does not read it is an error, not a
+    /// silent no-op: `--staleness 3` under the default `sync` schedule
+    /// would otherwise configure nothing.
     pub fn comm_schedule(&self) -> Result<CommSchedule> {
+        if self.staleness.is_some() && self.schedule != "semisync" {
+            return Err(Error::Config(format!(
+                "staleness only applies to schedule = \"semisync\" (schedule is \
+                 '{}'); drop the flag or switch the schedule",
+                self.schedule
+            )));
+        }
+        if self.loss_p.is_some() && self.schedule != "lossy" {
+            return Err(Error::Config(format!(
+                "loss_p only applies to schedule = \"lossy\" (schedule is '{}'); \
+                 drop the flag or switch the schedule",
+                self.schedule
+            )));
+        }
         let schedule = match self.schedule.as_str() {
             "sync" => CommSchedule::Synchronous,
-            "semisync" => CommSchedule::SemiSync { staleness: self.staleness },
-            "lossy" => CommSchedule::Lossy { loss_p: self.loss_p },
+            "semisync" => CommSchedule::SemiSync {
+                staleness: self.staleness.unwrap_or(2),
+            },
+            "lossy" => CommSchedule::Lossy {
+                loss_p: self.loss_p.unwrap_or(0.1),
+            },
             other => return Err(unknown_schedule(other)),
         };
         schedule.validate()?;
         Ok(schedule)
+    }
+
+    /// The complete typed communication configuration — schedule,
+    /// adaptive-δ policy (with period), straggler model, iteration
+    /// staleness — with every cross-knob validation the trainer
+    /// applies, so `info` and `train` agree on what is runnable
+    /// without generating any data. Returns the config `train` will
+    /// execute, or the same error `train` would raise.
+    pub fn comm_config(&self) -> Result<crate::network::CommConfig> {
+        let schedule = self.comm_schedule()?;
+        if self.straggler_seed != 0 && self.straggler_sigma == 0.0 {
+            return Err(Error::Config(
+                "straggler_seed needs straggler_sigma > 0 (a homogeneous cluster \
+                 draws nothing from the seed)"
+                    .into(),
+            ));
+        }
+        let adaptive_delta = match self.adaptive_delta {
+            Some(max_delta) => Some(AdaptiveDeltaPolicy {
+                max_delta,
+                period: self.adaptive_period,
+                ..AdaptiveDeltaPolicy::default()
+            }),
+            None if self.adaptive_period > 1 => {
+                return Err(Error::Config(
+                    "adaptive_period needs adaptive_delta (the period doubles on \
+                     the same plateau signal the δ controller watches)"
+                        .into(),
+                ));
+            }
+            None => None,
+        };
+        if self.exact_consensus {
+            if schedule != CommSchedule::Synchronous {
+                return Err(Error::Config(
+                    "schedule applies to gossip consensus only (exact_consensus is set)".into(),
+                ));
+            }
+            if adaptive_delta.is_some() {
+                return Err(Error::Config(
+                    "adaptive_delta applies to gossip consensus only \
+                     (exact_consensus is set)"
+                        .into(),
+                ));
+            }
+            if self.iter_staleness > 0 {
+                return Err(Error::Config(
+                    "iter_staleness applies to gossip consensus only \
+                     (exact_consensus is set)"
+                        .into(),
+                ));
+            }
+            if self.straggler_sigma != 0.0 {
+                return Err(Error::Config(
+                    "straggler_sigma applies to gossip consensus only \
+                     (exact_consensus is set)"
+                        .into(),
+                ));
+            }
+        }
+        let comm = crate::network::CommConfig {
+            schedule,
+            adaptive_delta,
+            node_latency: NodeLatency {
+                sigma: self.straggler_sigma,
+                seed: self.straggler_seed,
+            },
+            iter_staleness: self.iter_staleness,
+        };
+        if !self.exact_consensus {
+            comm.validate_with_iterations(self.delta, self.record_cost_curve, self.admm_iterations)?;
+        }
+        Ok(comm)
     }
 
     /// Generate the configured dataset.
@@ -315,21 +438,21 @@ impl ExperimentConfig {
         if let Some(e) = self.eps {
             b = b.eps(e);
         }
+        // The typed comm config carries every cross-knob validation
+        // (unused schedule knobs, exact-consensus conflicts, degenerate
+        // staleness bounds) — `info` runs the same method, so what it
+        // prints is what `train` will accept.
+        let comm = self.comm_config()?;
         b = if self.exact_consensus {
-            if self.comm_schedule()? != CommSchedule::Synchronous {
-                return Err(Error::Config(
-                    "schedule applies to gossip consensus only (exact_consensus is set)".into(),
-                ));
-            }
             b.exact_consensus()
         } else {
-            b.gossip_delta(self.delta).comm_fabric(self.comm_schedule()?)
+            b.gossip_delta(self.delta)
+                .comm_fabric(comm.schedule)
+                .node_latency(comm.node_latency)
+                .iter_staleness(comm.iter_staleness)
         };
-        if let Some(max_delta) = self.adaptive_delta {
-            b = b.adaptive_delta(AdaptiveDeltaPolicy {
-                max_delta,
-                ..AdaptiveDeltaPolicy::default()
-            });
+        if let Some(policy) = comm.adaptive_delta {
+            b = b.adaptive_delta(policy);
         }
         if self.backend == BackendKind::Pjrt {
             let manifest = crate::runtime::ArtifactManifest::load(&self.artifacts_dir)?;
@@ -555,6 +678,119 @@ exact_consensus = true
     }
 
     #[test]
+    fn unused_schedule_knobs_are_rejected_not_ignored() {
+        // --staleness with the default sync schedule used to be a silent
+        // no-op; it is now an error, from TOML and the CLI alike.
+        let cfg = ExperimentConfig::from_toml("[network]\nstaleness = 3").unwrap();
+        let err = format!("{}", cfg.comm_schedule().unwrap_err());
+        assert!(err.contains("semisync"), "{err}");
+        assert!(cfg.session_builder().is_err());
+        // loss_p without the lossy schedule, same story.
+        let cfg = ExperimentConfig::from_toml("[network]\nloss_p = 0.2").unwrap();
+        let err = format!("{}", cfg.comm_schedule().unwrap_err());
+        assert!(err.contains("lossy"), "{err}");
+        // Cross-pairings are rejected too.
+        let cfg = ExperimentConfig::from_toml(
+            "[network]\nschedule = \"lossy\"\nstaleness = 2",
+        )
+        .unwrap();
+        assert!(cfg.comm_schedule().is_err());
+        let cfg = ExperimentConfig::from_toml(
+            "[network]\nschedule = \"semisync\"\nloss_p = 0.2",
+        )
+        .unwrap();
+        assert!(cfg.comm_schedule().is_err());
+        // The matching pairings still parse.
+        let cfg = ExperimentConfig::from_toml(
+            "[network]\nschedule = \"semisync\"\nstaleness = 4",
+        )
+        .unwrap();
+        assert_eq!(cfg.comm_schedule().unwrap(), CommSchedule::SemiSync { staleness: 4 });
+        // Unset knobs take the schedule defaults.
+        let cfg = ExperimentConfig::from_toml("[network]\nschedule = \"semisync\"").unwrap();
+        assert_eq!(cfg.comm_schedule().unwrap(), CommSchedule::SemiSync { staleness: 2 });
+        let cfg = ExperimentConfig::from_toml("[network]\nschedule = \"lossy\"").unwrap();
+        assert_eq!(cfg.comm_schedule().unwrap(), CommSchedule::Lossy { loss_p: 0.1 });
+    }
+
+    #[test]
+    fn exact_consensus_rejects_gossip_only_knobs_with_clear_errors() {
+        for (body, needle) in [
+            ("adaptive_delta = 1e-4", "adaptive_delta"),
+            ("iter_staleness = 2", "iter_staleness"),
+            ("straggler_sigma = 0.5", "straggler_sigma"),
+        ] {
+            let cfg = ExperimentConfig::from_toml(&format!(
+                "[network]\nexact_consensus = true\n{body}"
+            ))
+            .unwrap();
+            let err = format!("{}", cfg.session_builder().unwrap_err());
+            assert!(err.contains(needle), "{body}: {err}");
+            assert!(err.contains("exact_consensus"), "{body}: {err}");
+        }
+    }
+
+    #[test]
+    fn straggler_and_iter_staleness_keys_lower_into_the_builder() {
+        let cfg = ExperimentConfig::from_toml(
+            "[experiment]\ndataset = \"quickstart\"\n\
+             [network]\niter_staleness = 2\nstraggler_sigma = 0.5\nstraggler_seed = 9",
+        )
+        .unwrap();
+        assert_eq!(cfg.iter_staleness, 2);
+        assert_eq!(cfg.straggler_sigma, 0.5);
+        assert_eq!(cfg.straggler_seed, 9);
+        assert!(cfg.session_builder().is_ok());
+        // iter_staleness refuses a relaxed fabric schedule (two
+        // resolutions of the same relaxation) — before any data work.
+        let cfg = ExperimentConfig::from_toml(
+            "[network]\nschedule = \"semisync\"\niter_staleness = 2",
+        )
+        .unwrap();
+        let err = cfg.session_builder().unwrap_err();
+        assert!(err.to_string().contains("staleness"), "{err}");
+        assert!(cfg.comm_config().is_err());
+        // ... and a degenerate bound (s >= K: every iteration would sit
+        // inside the drain).
+        let cfg = ExperimentConfig::from_toml(
+            "[admm]\niterations = 5\n[network]\niter_staleness = 5",
+        )
+        .unwrap();
+        let err = cfg.session_builder().unwrap_err();
+        assert!(err.to_string().contains("admm_iterations"), "{err}");
+        // A straggler seed without a sigma draws nothing — rejected, not
+        // silently homogeneous.
+        let cfg = ExperimentConfig::from_toml("[network]\nstraggler_seed = 42").unwrap();
+        let err = cfg.session_builder().unwrap_err();
+        assert!(err.to_string().contains("straggler_sigma"), "{err}");
+        // The typed lowering carries the knobs it validated.
+        let cfg = ExperimentConfig::from_toml(
+            "[network]\niter_staleness = 2\nstraggler_sigma = 0.5\nstraggler_seed = 9",
+        )
+        .unwrap();
+        let comm = cfg.comm_config().unwrap();
+        assert_eq!(comm.iter_staleness, 2);
+        assert_eq!(comm.node_latency, NodeLatency { sigma: 0.5, seed: 9 });
+        let cfg = ExperimentConfig::from_toml(
+            "[network]\nadaptive_delta = 1e-4\nadaptive_period = 4",
+        )
+        .unwrap();
+        assert_eq!(cfg.comm_config().unwrap().adaptive_delta.unwrap().period, 4);
+        // adaptive_period rides adaptive_delta.
+        let cfg = ExperimentConfig::from_toml("[network]\nadaptive_period = 4").unwrap();
+        assert!(cfg
+            .session_builder()
+            .unwrap_err()
+            .to_string()
+            .contains("adaptive_delta"));
+        let cfg = ExperimentConfig::from_toml(
+            "[network]\nadaptive_delta = 1e-4\nadaptive_period = 4",
+        )
+        .unwrap();
+        assert!(cfg.session_builder().is_ok());
+    }
+
+    #[test]
     fn semisync_config_trains_end_to_end() {
         let mut cfg = ExperimentConfig::named_dataset("quickstart").unwrap();
         cfg.layers = 1;
@@ -564,7 +800,7 @@ exact_consensus = true
         cfg.degree = 1;
         cfg.threads = 1;
         cfg.schedule = "semisync".into();
-        cfg.staleness = 1;
+        cfg.staleness = Some(1);
         let session = cfg.session_builder().unwrap().build().unwrap();
         let (_model, report) = session.run_to_completion().unwrap();
         assert!(report.mode.contains("semisync(s=1)"), "{}", report.mode);

@@ -31,8 +31,8 @@ use crate::admm::NodeState;
 use crate::linalg::Matrix;
 use crate::metrics::LayerRecord;
 use crate::network::{
-    AdaptiveDeltaPolicy, CommConfig, CommSchedule, CommSnapshot, LatencyModel, Topology,
-    WeightRule,
+    AdaptiveDeltaPolicy, CommConfig, CommSchedule, CommSnapshot, LatencyModel, NodeLatency,
+    Topology, WeightRule,
 };
 use crate::ssfn::{SsfnArchitecture, TrainHyper};
 use crate::{Error, Result};
@@ -40,11 +40,16 @@ use std::io;
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"DSSFNCKP";
-/// Version 2 added the communication-fabric configuration (schedule,
-/// adaptive-δ policy) and its runtime cursors (`fabric_calls`,
-/// `current_delta`). Version-1 checkpoints predate pluggable fabrics
-/// and are rejected with a clear error.
-const VERSION: u32 = 2;
+/// Version 3 added the straggler (per-node latency) model, the
+/// iteration-staleness configuration + cursor + history ring, and the
+/// adaptive controller's communication period. Version 2 added the
+/// communication-fabric configuration (schedule, adaptive-δ policy) and
+/// its runtime cursors (`fabric_calls`, `current_delta`). Writers emit
+/// the current version; the reader upgrades v1 (pre-fabric) and v2
+/// snapshots in place by defaulting the missing fields (default
+/// synchronous `CommConfig`, zero cursors, period 1) — a v1/v2 resume
+/// is exactly the run the file described.
+const VERSION: u32 = 3;
 
 /// Where inside the layer state machine the snapshot was taken.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -90,6 +95,18 @@ pub struct Checkpoint {
     /// Working consensus tolerance of the current layer (differs from
     /// the configured δ only under the adaptive controller).
     pub(crate) current_delta: f64,
+    /// Working communication period of the current layer (1 unless the
+    /// adaptive controller's period doubling engaged).
+    pub(crate) current_period: u64,
+    /// Iterations since the last consensus averaging (period skipping).
+    pub(crate) iters_since_comm: u64,
+    /// Iteration-staleness schedule cursor (staleness-mode iterations
+    /// performed), so restored runs replay identical per-node draws.
+    pub(crate) iter_stale_cursor: u64,
+    /// Iteration-staleness history ring (`iter_staleness × M` past
+    /// consensus averages, flat) — carried verbatim: unlike every other
+    /// derived quantity it cannot be rebuilt from the seed.
+    pub(crate) stale_hist: Vec<Matrix>,
     pub(crate) comm_before: CommSnapshot,
     pub(crate) ledger_total: CommSnapshot,
     pub(crate) sim_secs: f64,
@@ -137,9 +154,17 @@ impl Checkpoint {
     /// are identical to [`Checkpoint::to_bytes`]; no intermediate
     /// buffer of the full state is built.
     pub fn write_to<W: io::Write>(&self, w: W) -> Result<()> {
+        self.write_versioned(w, VERSION)
+    }
+
+    /// The writer behind [`Checkpoint::write_to`], parameterized on the
+    /// format version so tests can produce historical (v1/v2) fixtures
+    /// and pin the upgrade reader against the exact old layouts.
+    /// Production code always writes [`VERSION`].
+    fn write_versioned<W: io::Write>(&self, w: W, version: u32) -> Result<()> {
         let mut w = Encoder { w };
         w.bytes(MAGIC)?;
-        w.u32(VERSION)?;
+        w.u32(version)?;
         w.u64(self.seed)?;
         // Architecture.
         w.u64(self.arch.input_dim as u64)?;
@@ -189,25 +214,35 @@ impl Checkpoint {
         w.f64(self.opts.latency.beta)?;
         w.u64(self.opts.threads as u64)?;
         w.u8(self.opts.record_cost_curve as u8)?;
-        // Communication fabric (v2).
-        match self.comm.schedule {
-            CommSchedule::Synchronous => w.u8(0)?,
-            CommSchedule::SemiSync { staleness } => {
-                w.u8(1)?;
-                w.u64(staleness as u64)?;
+        // Communication fabric (v2; v3 adds period, straggler, staleness).
+        if version >= 2 {
+            match self.comm.schedule {
+                CommSchedule::Synchronous => w.u8(0)?,
+                CommSchedule::SemiSync { staleness } => {
+                    w.u8(1)?;
+                    w.u64(staleness as u64)?;
+                }
+                CommSchedule::Lossy { loss_p } => {
+                    w.u8(2)?;
+                    w.f64(loss_p)?;
+                }
             }
-            CommSchedule::Lossy { loss_p } => {
-                w.u8(2)?;
-                w.f64(loss_p)?;
+            match self.comm.adaptive_delta {
+                None => w.u8(0)?,
+                Some(p) => {
+                    w.u8(1)?;
+                    w.f64(p.max_delta)?;
+                    w.f64(p.plateau)?;
+                    w.f64(p.loosen)?;
+                    if version >= 3 {
+                        w.u64(p.period as u64)?;
+                    }
+                }
             }
-        }
-        match self.comm.adaptive_delta {
-            None => w.u8(0)?,
-            Some(p) => {
-                w.u8(1)?;
-                w.f64(p.max_delta)?;
-                w.f64(p.plateau)?;
-                w.f64(p.loosen)?;
+            if version >= 3 {
+                w.f64(self.comm.node_latency.sigma)?;
+                w.u64(self.comm.node_latency.seed)?;
+                w.u64(self.comm.iter_staleness as u64)?;
             }
         }
         // Growth policy, task fingerprint.
@@ -235,8 +270,16 @@ impl Checkpoint {
         }
         w.f64s(&self.cost_curve)?;
         w.u64(self.gossip_rounds)?;
-        w.u64(self.fabric_calls)?;
-        w.f64(self.current_delta)?;
+        if version >= 2 {
+            w.u64(self.fabric_calls)?;
+            w.f64(self.current_delta)?;
+        }
+        if version >= 3 {
+            w.u64(self.current_period)?;
+            w.u64(self.iters_since_comm)?;
+            w.u64(self.iter_stale_cursor)?;
+            w.matrices(&self.stale_hist)?;
+        }
         w.snapshot(&self.comm_before)?;
         w.snapshot(&self.ledger_total)?;
         w.f64(self.sim_secs)?;
@@ -271,9 +314,9 @@ impl Checkpoint {
             return Err(Error::Checkpoint("bad magic (not a dssfn checkpoint)".into()));
         }
         let version = r.u32()?;
-        if version != VERSION {
+        if !(1..=VERSION).contains(&version) {
             return Err(Error::Checkpoint(format!(
-                "unsupported checkpoint version {version} (this build reads {VERSION})"
+                "unsupported checkpoint version {version} (this build reads 1..={VERSION})"
             )));
         }
         let seed = r.u64()?;
@@ -323,22 +366,40 @@ impl Checkpoint {
             threads,
             record_cost_curve,
         };
-        let schedule = match r.u8()? {
-            0 => CommSchedule::Synchronous,
-            1 => CommSchedule::SemiSync { staleness: r.usize_()? },
-            2 => CommSchedule::Lossy { loss_p: r.f64()? },
-            t => return Err(Error::Checkpoint(format!("unknown schedule tag {t}"))),
+        // v1 predates pluggable fabrics: upgrade in place with the
+        // default synchronous CommConfig (exactly the schedule every v1
+        // run executed).
+        let comm = if version >= 2 {
+            let schedule = match r.u8()? {
+                0 => CommSchedule::Synchronous,
+                1 => CommSchedule::SemiSync { staleness: r.usize_()? },
+                2 => CommSchedule::Lossy { loss_p: r.f64()? },
+                t => return Err(Error::Checkpoint(format!("unknown schedule tag {t}"))),
+            };
+            let adaptive_delta = match r.u8()? {
+                0 => None,
+                1 => Some(AdaptiveDeltaPolicy {
+                    max_delta: r.f64()?,
+                    plateau: r.f64()?,
+                    loosen: r.f64()?,
+                    // v2 predates period doubling: every iteration
+                    // averaged, which is exactly period 1.
+                    period: if version >= 3 { r.usize_()? } else { 1 },
+                }),
+                t => return Err(Error::Checkpoint(format!("bad adaptive-δ tag {t}"))),
+            };
+            let (node_latency, iter_staleness) = if version >= 3 {
+                (
+                    NodeLatency { sigma: r.f64()?, seed: r.u64()? },
+                    r.usize_()?,
+                )
+            } else {
+                (NodeLatency::default(), 0)
+            };
+            CommConfig { schedule, adaptive_delta, node_latency, iter_staleness }
+        } else {
+            CommConfig::default()
         };
-        let adaptive_delta = match r.u8()? {
-            0 => None,
-            1 => Some(AdaptiveDeltaPolicy {
-                max_delta: r.f64()?,
-                plateau: r.f64()?,
-                loosen: r.f64()?,
-            }),
-            t => return Err(Error::Checkpoint(format!("bad adaptive-δ tag {t}"))),
-        };
-        let comm = CommConfig { schedule, adaptive_delta };
         let growth = r.opt_f64()?;
         let dataset = r.string()?;
         let train_samples = r.u64()?;
@@ -362,8 +423,23 @@ impl Checkpoint {
         }
         let cost_curve = r.f64s()?;
         let gossip_rounds = r.u64()?;
-        let fabric_calls = r.u64()?;
-        let current_delta = r.f64()?;
+        // v1 carried no fabric cursors; a zero cursor plus the working
+        // δ = configured δ is exactly the state of every v1 run (the
+        // synchronous schedule draws nothing from the cursor).
+        let (fabric_calls, current_delta) = if version >= 2 {
+            (r.u64()?, r.f64()?)
+        } else {
+            let delta = match consensus {
+                ConsensusMode::Gossip { delta } => delta,
+                ConsensusMode::Exact => 0.0,
+            };
+            (0, delta)
+        };
+        let (current_period, iters_since_comm, iter_stale_cursor, stale_hist) = if version >= 3 {
+            (r.u64()?, r.u64()?, r.u64()?, r.matrices()?)
+        } else {
+            (1, 0, 0, Vec::new())
+        };
         let comm_before = r.snapshot()?;
         let ledger_total = r.snapshot()?;
         let sim_secs = r.f64()?;
@@ -401,6 +477,10 @@ impl Checkpoint {
             gossip_rounds,
             fabric_calls,
             current_delta,
+            current_period,
+            iters_since_comm,
+            iter_stale_cursor,
+            stale_hist,
             comm_before,
             ledger_total,
             sim_secs,
@@ -646,7 +726,10 @@ mod tests {
                     max_delta: 1e-4,
                     plateau: 1e-3,
                     loosen: 10.0,
+                    period: 4,
                 }),
+                node_latency: NodeLatency { sigma: 0.25, seed: 99 },
+                iter_staleness: 0,
             },
             growth: Some(0.25),
             dataset: "oracle-toy".into(),
@@ -671,6 +754,10 @@ mod tests {
             gossip_rounds: 66,
             fabric_calls: 37,
             current_delta: 1e-7,
+            current_period: 2,
+            iters_since_comm: 1,
+            iter_stale_cursor: 12,
+            stale_hist: vec![Matrix::from_fn(3, 3, |r, c| (r + 2 * c) as f64 * 0.25)],
             comm_before: CommSnapshot { messages: 10, bytes: 80, rounds: 5, scalars: 10 },
             ledger_total: CommSnapshot { messages: 20, bytes: 160, rounds: 10, scalars: 20 },
             sim_secs: 1.25,
@@ -704,6 +791,11 @@ mod tests {
         assert_eq!(back.comm_config(), ck.comm);
         assert_eq!(back.fabric_calls, 37);
         assert_eq!(back.current_delta.to_bits(), ck.current_delta.to_bits());
+        assert_eq!(back.current_period, 2);
+        assert_eq!(back.iters_since_comm, 1);
+        assert_eq!(back.iter_stale_cursor, 12);
+        assert_eq!(back.stale_hist.len(), 1);
+        assert_eq!(back.stale_hist[0].max_abs_diff(&ck.stale_hist[0]), 0.0);
         assert_eq!(back.growth, ck.growth);
         assert_eq!(back.train_checksum, ck.train_checksum);
         assert_eq!(back.dataset(), "oracle-toy");
@@ -738,7 +830,12 @@ mod tests {
             (CommSchedule::Lossy { loss_p: 0.125 }, Some(AdaptiveDeltaPolicy::default())),
         ] {
             let mut ck = sample();
-            ck.comm = CommConfig { schedule, adaptive_delta: adaptive };
+            ck.comm = CommConfig {
+                schedule,
+                adaptive_delta: adaptive,
+                node_latency: NodeLatency { sigma: 1.5, seed: 4 },
+                iter_staleness: 3,
+            };
             let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
             assert_eq!(back.comm, ck.comm);
         }
@@ -781,7 +878,15 @@ mod tests {
         let mut bad = bytes.clone();
         bad[0] = b'X';
         assert!(Checkpoint::from_bytes(&bad).is_err());
-        // Unsupported version (v1 checkpoints predate comm fabrics).
+        // Unsupported versions (0 and future) are refused outright; a
+        // v3 body re-labelled v1 misparses and errors too (older
+        // layouts are shorter, so the stream cannot line up).
+        for v in [0u8, 9] {
+            let mut bad = bytes.clone();
+            bad[8] = v;
+            let err = format!("{}", Checkpoint::from_bytes(&bad).unwrap_err());
+            assert!(err.contains("unsupported checkpoint version"), "{err}");
+        }
         let mut bad = bytes.clone();
         bad[8] = 1;
         assert!(Checkpoint::from_bytes(&bad).is_err());
@@ -793,6 +898,88 @@ mod tests {
         let mut bad = bytes.clone();
         bad.push(0);
         assert!(Checkpoint::from_bytes(&bad).is_err());
+    }
+
+    /// A state only a v1 (pre-fabric) run could have been in: default
+    /// synchronous comm config, zero cursors, base working δ.
+    fn v1_state() -> Checkpoint {
+        let mut ck = sample();
+        ck.comm = CommConfig::default();
+        ck.fabric_calls = 0;
+        ck.current_delta = 1e-9; // the configured gossip δ of sample()
+        ck.current_period = 1;
+        ck.iters_since_comm = 0;
+        ck.iter_stale_cursor = 0;
+        ck.stale_hist = Vec::new();
+        ck
+    }
+
+    #[test]
+    fn v1_checkpoints_upgrade_with_default_comm_config() {
+        let ck = v1_state();
+        let mut buf = Vec::new();
+        ck.write_versioned(&mut buf, 1).unwrap();
+        assert_eq!(buf[8], 1); // really a v1 stream
+        assert!(buf.len() < ck.to_bytes().len());
+        let back = Checkpoint::from_bytes(&buf).unwrap();
+        // The upgraded snapshot is the run the v1 file described: every
+        // stored field round-trips, every post-v1 field defaults.
+        assert_eq!(back.seed, ck.seed);
+        assert_eq!(back.arch, ck.arch);
+        assert_eq!(back.opts.consensus, ck.opts.consensus);
+        assert_eq!(back.dataset(), ck.dataset());
+        assert_eq!(back.train_checksum, ck.train_checksum);
+        assert_eq!(back.layer(), ck.layer());
+        assert_eq!(back.phase, ck.phase);
+        assert_eq!(back.cost_curve, ck.cost_curve);
+        for (a, b) in back.states.iter().zip(&ck.states) {
+            assert_eq!(a.z.max_abs_diff(&b.z), 0.0);
+        }
+        assert_eq!(back.comm, CommConfig::default());
+        assert_eq!(back.fabric_calls, 0);
+        assert_eq!(back.current_delta, 1e-9);
+        assert_eq!(back.current_period, 1);
+        assert_eq!(back.iters_since_comm, 0);
+        assert_eq!(back.iter_stale_cursor, 0);
+        assert!(back.stale_hist.is_empty());
+        assert_eq!(back.report_layers.len(), ck.report_layers.len());
+    }
+
+    #[test]
+    fn v1_exact_consensus_upgrade_defaults_delta_to_zero() {
+        let mut ck = v1_state();
+        ck.opts.consensus = ConsensusMode::Exact;
+        ck.current_delta = 0.0;
+        let mut buf = Vec::new();
+        ck.write_versioned(&mut buf, 1).unwrap();
+        let back = Checkpoint::from_bytes(&buf).unwrap();
+        assert_eq!(back.opts.consensus, ConsensusMode::Exact);
+        assert_eq!(back.current_delta, 0.0);
+    }
+
+    #[test]
+    fn v2_checkpoints_upgrade_with_default_straggler_and_staleness() {
+        let mut ck = sample();
+        // A v2 run could carry any schedule and adaptive δ, but no
+        // period doubling, straggler model or iteration staleness.
+        ck.comm.adaptive_delta = Some(AdaptiveDeltaPolicy {
+            period: 1,
+            ..ck.comm.adaptive_delta.unwrap()
+        });
+        ck.comm.node_latency = NodeLatency::default();
+        ck.comm.iter_staleness = 0;
+        ck.current_period = 1;
+        ck.iters_since_comm = 0;
+        ck.iter_stale_cursor = 0;
+        ck.stale_hist = Vec::new();
+        let mut buf = Vec::new();
+        ck.write_versioned(&mut buf, 2).unwrap();
+        let back = Checkpoint::from_bytes(&buf).unwrap();
+        assert_eq!(back.comm, ck.comm);
+        assert_eq!(back.fabric_calls, 37);
+        assert_eq!(back.current_delta.to_bits(), 1e-7f64.to_bits());
+        assert_eq!(back.current_period, 1);
+        assert!(back.stale_hist.is_empty());
     }
 
     #[test]

@@ -41,7 +41,7 @@ use crate::session::{
     Algorithm, AlgorithmOutput, SessionProgress, StepEvent, StopReason, TrainedModel,
 };
 use crate::ssfn::{build_weight, GrowthPolicy, RandomMatrices, SsfnArchitecture, TrainHyper};
-use crate::util::{Rng, SplitMix64, Stopwatch};
+use crate::util::{Rng, SplitMix64, Stopwatch, Xoshiro256StarStar};
 use crate::{Error, Result};
 use std::sync::Arc;
 
@@ -127,6 +127,24 @@ pub struct DssfnAlgorithm<'t> {
     /// Working consensus tolerance of the current layer — the base
     /// gossip δ unless the adaptive controller loosened it.
     current_delta: f64,
+    /// Working communication period of the current layer — 1 unless the
+    /// adaptive controller's period doubling engaged on a plateau.
+    current_period: usize,
+    /// ADMM iterations since the last consensus averaging (period
+    /// skipping); 0 right after an averaging.
+    iters_since_comm: usize,
+    /// Seed of the iteration-staleness draw stream (derived from the
+    /// master seed).
+    iter_seed: u64,
+    /// Iteration-staleness schedule cursor: staleness-mode iterations
+    /// performed so far. Checkpointed, so a restored run replays the
+    /// exact same per-node staleness draws.
+    iter_stale_cursor: u64,
+    /// History ring of post-averaging consensus values for the
+    /// iteration-staleness mode: `iter_staleness` banks of `M` matrices,
+    /// flat (slot `(k % s) * M + i` holds node `i`'s average from
+    /// iteration `k`). Empty when staleness is off.
+    stale_hist: Vec<Matrix>,
 }
 
 impl<'t> DssfnAlgorithm<'t> {
@@ -185,17 +203,32 @@ impl<'t> DssfnAlgorithm<'t> {
         let ledger = Arc::new(CommLedger::new());
         let fabric = match opts.consensus {
             ConsensusMode::Gossip { delta } => {
-                comm.validate_for(delta, opts.record_cost_curve)?;
+                comm.validate_with_iterations(
+                    delta,
+                    opts.record_cost_curve,
+                    hyper.admm_iterations,
+                )?;
                 let mix = MixingMatrix::build(&opts.topology, opts.weight_rule)?;
-                let engine = GossipEngine::new(mix, Arc::clone(&ledger), opts.latency);
+                let mut engine = GossipEngine::new(mix, Arc::clone(&ledger), opts.latency);
+                // Heterogeneous clusters: the simulated clock charges the
+                // max node on barriers and the median on relaxed rounds.
+                // The profile is a pure function of (node-latency seed,
+                // M), so restored runs replay identical charges.
+                if comm.node_latency.is_heterogeneous() {
+                    engine.set_straggler(comm.node_latency.profile(m));
+                }
                 let comm_seed = SplitMix64::new(seed ^ 0x636f_6d6d_5eed).next_u64();
                 Some(comm.schedule.build_fabric(engine, comm_seed)?)
             }
             ConsensusMode::Exact => {
-                if comm.schedule != CommSchedule::Synchronous || comm.adaptive_delta.is_some() {
+                if comm.schedule != CommSchedule::Synchronous
+                    || comm.adaptive_delta.is_some()
+                    || comm.iter_staleness > 0
+                    || comm.node_latency.is_heterogeneous()
+                {
                     return Err(Error::Config(
-                        "communication schedules and adaptive δ apply to gossip \
-                         consensus only"
+                        "communication schedules, adaptive δ, iteration staleness \
+                         and the straggler model apply to gossip consensus only"
                             .into(),
                     ));
                 }
@@ -222,6 +255,12 @@ impl<'t> DssfnAlgorithm<'t> {
                         }
                         if comm.adaptive_delta.is_some() {
                             s.push_str(" adaptive-δ");
+                        }
+                        if comm.iter_staleness > 0 {
+                            s.push_str(&format!(" iter-stale(s={})", comm.iter_staleness));
+                        }
+                        if comm.node_latency.is_heterogeneous() {
+                            s.push_str(&format!(" straggler(σ={})", comm.node_latency.sigma));
                         }
                         s
                     }
@@ -266,6 +305,11 @@ impl<'t> DssfnAlgorithm<'t> {
             comm_before: CommSnapshot::default(),
             stop_reason: None,
             current_delta: base_delta,
+            current_period: 1,
+            iters_since_comm: 0,
+            iter_seed: SplitMix64::new(seed ^ 0x17e7_5741_1e5f_5eed).next_u64(),
+            iter_stale_cursor: 0,
+            stale_hist: Vec::new(),
         })
     }
 
@@ -343,6 +387,14 @@ impl<'t> DssfnAlgorithm<'t> {
             fab.set_calls(ck.fabric_calls);
         }
         alg.current_delta = ck.current_delta;
+        if ck.current_period == 0 {
+            return Err(Error::Checkpoint(
+                "checkpoint carries a zero communication period".into(),
+            ));
+        }
+        alg.current_period = ck.current_period as usize;
+        alg.iters_since_comm = ck.iters_since_comm as usize;
+        alg.iter_stale_cursor = ck.iter_stale_cursor;
         alg.report.layers = ck.report_layers.clone();
         alg.ys = ck.ys.clone();
         alg.weights = ck.weights.clone();
@@ -410,6 +462,24 @@ impl<'t> DssfnAlgorithm<'t> {
         self.states = ck.states.clone();
         self.s_vals = (0..m).map(|_| Matrix::zeros(q, feat_dim)).collect();
         self.avg = Matrix::zeros(q, feat_dim);
+        // The staleness history ring cannot be rebuilt (it holds past
+        // averaging results), so the checkpoint carries it verbatim.
+        let s = self.comm.iter_staleness;
+        if ck.stale_hist.len() != s * m {
+            return Err(Error::Checkpoint(format!(
+                "checkpoint carries {} stale-history matrices for staleness {s} over M={m}",
+                ck.stale_hist.len()
+            )));
+        }
+        for h in &ck.stale_hist {
+            if h.shape() != (q, feat_dim) {
+                return Err(Error::Checkpoint(format!(
+                    "stale-history shape {:?} does not match layer shape ({q}, {feat_dim})",
+                    h.shape()
+                )));
+            }
+        }
+        self.stale_hist = ck.stale_hist.clone();
         Ok(())
     }
 
@@ -445,11 +515,21 @@ impl<'t> DssfnAlgorithm<'t> {
         self.avg = Matrix::zeros(q, feat_dim);
         self.cost_curve = Vec::new();
         self.gossip_rounds = 0;
-        // Each layer starts back at the configured base δ; the adaptive
-        // controller re-loosens it as this layer's objective plateaus.
+        // Each layer starts back at the configured base δ and period 1;
+        // the adaptive controller re-loosens them as this layer's
+        // objective plateaus.
         if let ConsensusMode::Gossip { delta } = self.opts.consensus {
             self.current_delta = delta;
         }
+        self.current_period = 1;
+        self.iters_since_comm = 0;
+        self.stale_hist = if self.comm.iter_staleness > 0 {
+            (0..self.comm.iter_staleness * m)
+                .map(|_| Matrix::zeros(q, feat_dim))
+                .collect()
+        } else {
+            Vec::new()
+        };
         self.phase = Phase::Iterate { k: 0 };
         events.push(StepEvent::LayerPrepared { layer: self.layer, feat_dim });
         Ok(())
@@ -470,41 +550,119 @@ impl<'t> DssfnAlgorithm<'t> {
                 solvers[i].o_update_into(z, lambda, o)
             })?;
         }
-        // (2) Averaging of O + Λ.
-        for (sv, st) in self.s_vals.iter_mut().zip(&self.states) {
-            sv.copy_from(&st.o)?;
-            sv.axpy(1.0, &st.lambda)?;
-        }
+        // Which relaxations apply to this iteration. The layer's final
+        // iteration (by count or by budget truncation) always
+        // synchronizes, and iteration staleness additionally drains the
+        // last `s` iterations — every stale injection is followed by
+        // enough synchronized iterations to restore consensus before the
+        // advance phase reads Z.
+        let s = self.comm.iter_staleness;
+        let last_iter =
+            k + 1 >= params.iterations || (self.stop_reason.is_some() && self.layer >= 1);
+        let relaxed_iter = s > 0 && !last_iter && k + s < params.iterations;
+        // Communication-period doubling (L-FGADMM): while the working
+        // period says so, whole averaging calls are skipped. Period 1 —
+        // the default, and the only value outside the adaptive
+        // controller — averages every iteration, exactly the pre-period
+        // loop.
+        let comm_this_iter = match self.opts.consensus {
+            ConsensusMode::Exact => true,
+            ConsensusMode::Gossip { .. } => {
+                last_iter || self.iters_since_comm + 1 >= self.current_period
+            }
+        };
+
         let mut gossip_event: Option<(usize, u64)> = None;
-        match (&self.opts.consensus, &self.fabric) {
-            (ConsensusMode::Exact, _) => {
-                GossipEngine::exact_average_into(&self.s_vals, &mut self.avg)?;
-                for sv in self.s_vals.iter_mut() {
-                    sv.copy_from(&self.avg)?;
+        if comm_this_iter {
+            // (2) Averaging of O + Λ.
+            for (sv, st) in self.s_vals.iter_mut().zip(&self.states) {
+                sv.copy_from(&st.o)?;
+                sv.axpy(1.0, &st.lambda)?;
+            }
+            match (&self.opts.consensus, &self.fabric) {
+                (ConsensusMode::Exact, _) => {
+                    GossipEngine::exact_average_into(&self.s_vals, &mut self.avg)?;
+                    for sv in self.s_vals.iter_mut() {
+                        sv.copy_from(&self.avg)?;
+                    }
                 }
+                (ConsensusMode::Gossip { delta }, Some(fab)) => {
+                    // The fabric decides how the averaging executes; the
+                    // adaptive controller decides to what tolerance.
+                    // Without the controller the working δ is the
+                    // configured one, so this path is bit-identical to
+                    // the pre-fabric loop. Staleness-relaxed iterations
+                    // tell the fabric their barrier slack — same math,
+                    // relaxed simulated-clock charge.
+                    let eff_delta = if self.comm.adaptive_delta.is_some() {
+                        self.current_delta
+                    } else {
+                        *delta
+                    };
+                    let (rounds, bytes) = if relaxed_iter {
+                        fab.average_relaxed(&mut self.s_vals, eff_delta, s)?
+                    } else {
+                        fab.average(&mut self.s_vals, eff_delta)?
+                    };
+                    self.gossip_rounds += rounds;
+                    gossip_event = Some((rounds, bytes));
+                }
+                (ConsensusMode::Gossip { .. }, None) => unreachable!(),
             }
-            (ConsensusMode::Gossip { delta }, Some(fab)) => {
-                // The fabric decides how the averaging executes; the
-                // adaptive controller decides to what tolerance. Without
-                // the controller the working δ is the configured one, so
-                // this path is bit-identical to the pre-fabric loop.
-                let eff_delta = if self.comm.adaptive_delta.is_some() {
-                    self.current_delta
-                } else {
-                    *delta
-                };
-                let (rounds, bytes) = fab.average(&mut self.s_vals, eff_delta)?;
-                self.gossip_rounds += rounds;
-                gossip_event = Some((rounds, bytes));
-            }
-            (ConsensusMode::Gossip { .. }, None) => unreachable!(),
+            self.iters_since_comm = 0;
+        } else {
+            self.iters_since_comm += 1;
         }
+
         // (3) Z-projection + dual ascent.
-        for (st, sv) in self.states.iter_mut().zip(&self.s_vals) {
-            st.z.copy_from(sv)?;
-            st.z.project_frobenius(params.eps);
-            st.lambda.axpy(1.0, &st.o)?;
-            st.lambda.axpy(-1.0, &st.z)?;
+        if !comm_this_iter {
+            // Averaging skipped (period doubling): the consensus Z is
+            // held fixed — still identical on every node — and the dual
+            // ascent keeps charging the constraint violation against it.
+            for st in self.states.iter_mut() {
+                st.lambda.axpy(1.0, &st.o)?;
+                st.lambda.axpy(-1.0, &st.z)?;
+            }
+        } else if s > 0 {
+            // Iteration-level bounded staleness (Liang et al. 2020):
+            // each node projects a consensus average up to `s` ADMM
+            // iterations old. The per-node draw is a pure function of
+            // (iter seed, cursor, node order), so runs — and checkpoint
+            // resumes through the cursor — replay identical schedules.
+            // Reads never reach before the layer's first averaging.
+            let mut rng =
+                Xoshiro256StarStar::seed_from_u64(self.iter_seed).derive(self.iter_stale_cursor);
+            for (i, st) in self.states.iter_mut().enumerate() {
+                let a = if relaxed_iter {
+                    rng.next_below(s + 1).min(k)
+                } else {
+                    0
+                };
+                let src = if a == 0 {
+                    &self.s_vals[i]
+                } else {
+                    &self.stale_hist[((k - a) % s) * m + i]
+                };
+                st.z.copy_from(src)?;
+                st.z.project_frobenius(params.eps);
+                st.lambda.axpy(1.0, &st.o)?;
+                st.lambda.axpy(-1.0, &st.z)?;
+            }
+            // Archive this iteration's fresh averages for future stale
+            // reads (after every node has read — slot k % s still holds
+            // iteration k − s until here).
+            let slot = (k % s) * m;
+            for (h, sv) in self.stale_hist[slot..slot + m].iter_mut().zip(&self.s_vals) {
+                h.copy_from(sv)?;
+            }
+            self.iter_stale_cursor += 1;
+        } else {
+            for (st, sv) in self.states.iter_mut().zip(&self.s_vals) {
+                st.z.copy_from(sv)?;
+                st.z.project_frobenius(params.eps);
+                st.lambda.axpy(1.0, &st.o)?;
+                st.lambda.axpy(-1.0, &st.z)?;
+            }
         }
         // Cost recording (same condition and order as the legacy loop).
         let mut cost = None;
@@ -517,17 +675,23 @@ impl<'t> DssfnAlgorithm<'t> {
             };
             let c: f64 = costs.iter().sum();
             // Adaptive-δ controller (L-FGADMM-style): a plateaued cost
-            // loosens the working δ for the *next* averaging, renewed
-            // progress snaps it back to the configured base.
+            // loosens the working δ (and doubles the working period) for
+            // the *next* averaging, renewed progress snaps both back.
+            // Evaluated on communicating iterations only — skipped
+            // iterations hold Z, so their cost repeats the last averaged
+            // one and carries no new signal.
             if let (Some(policy), ConsensusMode::Gossip { delta }) =
                 (&self.comm.adaptive_delta, &self.opts.consensus)
             {
-                if let Some(&prev) = self.cost_curve.last() {
-                    let rel = (prev - c) / prev.abs().max(f64::MIN_POSITIVE);
-                    let next = policy.next_delta(self.current_delta, *delta, rel);
-                    if next != self.current_delta {
-                        self.current_delta = next;
-                        delta_event = Some(next);
+                if comm_this_iter {
+                    if let Some(&prev) = self.cost_curve.last() {
+                        let rel = (prev - c) / prev.abs().max(f64::MIN_POSITIVE);
+                        let next = policy.next_delta(self.current_delta, *delta, rel);
+                        if next != self.current_delta {
+                            self.current_delta = next;
+                            delta_event = Some(next);
+                        }
+                        self.current_period = policy.next_period(self.current_period, rel);
                     }
                 }
             }
@@ -571,7 +735,9 @@ impl<'t> DssfnAlgorithm<'t> {
         // Z is feasible at every iterate, so the model stays well-formed.
         // Layer 0 always completes: an SSFN needs at least one structured
         // weight, so the earliest truncation point is inside layer 1.
-        if k + 1 >= params.iterations || (self.stop_reason.is_some() && self.layer >= 1) {
+        // (`last_iter` above is exactly this condition, and it also
+        // forces the final iteration to communicate.)
+        if last_iter {
             self.phase = Phase::Advance;
         } else {
             self.phase = Phase::Iterate { k: k + 1 };
@@ -648,6 +814,7 @@ impl<'t> DssfnAlgorithm<'t> {
         self.states = Vec::new();
         self.s_vals = Vec::new();
         self.avg = Matrix::zeros(0, 0);
+        self.stale_hist = Vec::new();
         self.gossip_rounds = 0;
 
         if last_layer {
@@ -764,6 +931,10 @@ impl Algorithm for DssfnAlgorithm<'_> {
             Phase::Prepare => Vec::new(),
             _ => self.states.clone(),
         };
+        let stale_hist = match self.phase {
+            Phase::Prepare => Vec::new(),
+            _ => self.stale_hist.clone(),
+        };
         Ok(Checkpoint {
             seed: self.seed,
             arch: self.arch,
@@ -783,6 +954,10 @@ impl Algorithm for DssfnAlgorithm<'_> {
             gossip_rounds: self.gossip_rounds as u64,
             fabric_calls: self.fabric.as_ref().map(|f| f.calls()).unwrap_or(0),
             current_delta: self.current_delta,
+            current_period: self.current_period as u64,
+            iters_since_comm: self.iters_since_comm as u64,
+            iter_stale_cursor: self.iter_stale_cursor,
+            stale_hist,
             comm_before: self.comm_before,
             ledger_total: self.ledger.snapshot(),
             sim_secs: self.sim_comm_secs(),

@@ -5,7 +5,8 @@
 //!               [--layers L] [--admm-iters K] [--backend native|pjrt]
 //!               [--exact-consensus] [--seed S] [--csv PATH] [--verbose]
 //!               [--schedule sync|semisync|lossy] [--staleness S]
-//!               [--loss-p P] [--adaptive-delta MAX]
+//!               [--loss-p P] [--adaptive-delta MAX] [--adaptive-period P]
+//!               [--iter-staleness S] [--straggler-sigma F] [--straggler-seed N]
 //!               [--checkpoint PATH] [--checkpoint-every K] [--resume PATH]
 //!               [--max-bytes N] [--max-sim-secs S] [--cost-plateau F]
 //! dssfn central [--dataset KEY] [--layers L] [--admm-iters K] [--seed S]
@@ -20,9 +21,14 @@
 //! `--checkpoint-every`), `--resume` continues a snapshot
 //! bit-identically, and the `--max-*` / `--cost-plateau` flags set
 //! [`StopPolicy`] budgets. `--schedule` picks the communication fabric
-//! (synchronous / semi-synchronous / lossy gossip) and
-//! `--adaptive-delta` enables the L-FGADMM-style adaptive consensus
-//! tolerance.
+//! (synchronous / semi-synchronous / lossy gossip), `--adaptive-delta`
+//! enables the L-FGADMM-style adaptive consensus tolerance (with
+//! `--adaptive-period` for communication-period doubling),
+//! `--iter-staleness` runs ADMM updates against bounded-stale consensus
+//! state (Liang et al. 2020), and `--straggler-sigma` simulates a
+//! heterogeneous cluster where synchronous barriers pay the slowest
+//! node. Flags that the selected schedule does not read (e.g.
+//! `--staleness` under `sync`) are rejected, not ignored.
 //!
 //! The build environment has no `clap`; argument parsing is a small
 //! hand-rolled matcher (see [`Args`]).
@@ -142,13 +148,25 @@ fn build_config(args: &Args) -> Result<ExperimentConfig, String> {
         cfg.schedule = s.to_string();
     }
     if let Some(v) = args.parsed("staleness")? {
-        cfg.staleness = v;
+        cfg.staleness = Some(v);
     }
     if let Some(v) = args.parsed("loss-p")? {
-        cfg.loss_p = v;
+        cfg.loss_p = Some(v);
     }
     if let Some(v) = args.parsed("adaptive-delta")? {
         cfg.adaptive_delta = Some(v);
+    }
+    if let Some(v) = args.parsed("adaptive-period")? {
+        cfg.adaptive_period = v;
+    }
+    if let Some(v) = args.parsed("iter-staleness")? {
+        cfg.iter_staleness = v;
+    }
+    if let Some(v) = args.parsed("straggler-sigma")? {
+        cfg.straggler_sigma = v;
+    }
+    if let Some(v) = args.parsed("straggler-seed")? {
+        cfg.straggler_seed = v;
     }
     if args.has("exact-consensus") {
         cfg.exact_consensus = true;
@@ -205,7 +223,8 @@ fn cmd_train(args: &Args) -> Result<(), String> {
             for flag in [
                 "config", "dataset", "degree", "nodes", "layers", "admm-iters", "seed",
                 "mu0", "mul", "threads", "exact-consensus", "no-curve", "schedule",
-                "staleness", "loss-p", "adaptive-delta",
+                "staleness", "loss-p", "adaptive-delta", "adaptive-period",
+                "iter-staleness", "straggler-sigma", "straggler-seed",
             ] {
                 if args.has(flag) {
                     return Err(format!(
@@ -403,12 +422,29 @@ fn cmd_info(args: &Args) -> Result<(), String> {
         "network       : M={} degree={} delta={}",
         cfg.nodes, cfg.degree, cfg.delta
     );
+    // The same validated construction `train` lowers into the session
+    // builder — an invalid knob combination fails here too instead of
+    // printing an unrunnable configuration.
+    let comm = cfg.comm_config().map_err(|e| e.to_string())?;
     println!(
-        "comm fabric   : {}{}",
-        cfg.comm_schedule().map_err(|e| e.to_string())?.describe(),
-        match cfg.adaptive_delta {
-            Some(m) => format!(" adaptive-delta<={m}"),
+        "comm fabric   : {}{}{}{}",
+        comm.schedule.describe(),
+        match comm.adaptive_delta {
+            Some(p) if p.period > 1 =>
+                format!(" adaptive-delta<={} period<={}", p.max_delta, p.period),
+            Some(p) => format!(" adaptive-delta<={}", p.max_delta),
             None => String::new(),
+        },
+        if comm.iter_staleness > 0 {
+            format!(" iter-stale(s={})", comm.iter_staleness)
+        } else {
+            String::new()
+        },
+        if comm.node_latency.is_heterogeneous() {
+            // Same token the training report's mode string uses.
+            format!(" straggler(σ={})", comm.node_latency.sigma)
+        } else {
+            String::new()
         }
     );
     println!(
@@ -424,7 +460,8 @@ fn cmd_info(args: &Args) -> Result<(), String> {
 
 const USAGE: &str = "usage: dssfn <train|central|sweep|datasets|info> [flags]
   train     train decentralized SSFN        (--dataset, --degree, --nodes, --layers, --admm-iters, --backend, --csv, --config, --exact-consensus, --seed,
-                                             --schedule sync|semisync|lossy, --staleness S, --loss-p P, --adaptive-delta MAX,
+                                             --schedule sync|semisync|lossy, --staleness S, --loss-p P, --adaptive-delta MAX, --adaptive-period P,
+                                             --iter-staleness S, --straggler-sigma F, --straggler-seed N,
                                              --verbose, --checkpoint PATH, --checkpoint-every K, --resume PATH, --max-bytes N, --max-sim-secs S, --cost-plateau F)
   central   train the centralized baseline  (--dataset, --layers, --admm-iters, --seed)
   sweep     degree sweep (Fig. 4)           (--dataset, --degrees 1,2,3, --csv)

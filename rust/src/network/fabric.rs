@@ -36,7 +36,7 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use super::{GossipEngine, MixingMatrix};
+use super::{GossipEngine, MixingMatrix, NodeLatency};
 use crate::linalg::Matrix;
 use crate::util::Xoshiro256StarStar;
 use crate::{Error, Result};
@@ -121,11 +121,20 @@ pub struct AdaptiveDeltaPolicy {
     pub plateau: f64,
     /// Multiplicative loosening applied per plateaued iteration.
     pub loosen: f64,
+    /// Maximum communication period (L-FGADMM period doubling, Elgabli
+    /// et al. 2019): while the layer is plateaued the working period
+    /// doubles `1 → 2 → 4 → …` up to this cap, and the trainer gossips
+    /// only every period-th ADMM iteration (the skipped iterations hold
+    /// the consensus `Z` and keep the dual ascent running). Renewed
+    /// progress snaps the period back to 1. `1` (the default) disables
+    /// skipping — every iteration averages, exactly the pre-period
+    /// behaviour.
+    pub period: usize,
 }
 
 impl Default for AdaptiveDeltaPolicy {
     fn default() -> Self {
-        Self { max_delta: 1e-4, plateau: 1e-3, loosen: 10.0 }
+        Self { max_delta: 1e-4, plateau: 1e-3, loosen: 10.0, period: 1 }
     }
 }
 
@@ -156,6 +165,11 @@ impl AdaptiveDeltaPolicy {
                 self.loosen
             )));
         }
+        if self.period == 0 {
+            return Err(Error::Config(
+                "adaptive communication period must be >= 1 (1 disables skipping)".into(),
+            ));
+        }
         Ok(())
     }
 
@@ -168,16 +182,46 @@ impl AdaptiveDeltaPolicy {
             base_delta
         }
     }
+
+    /// The next working communication period: doubled (capped at
+    /// [`AdaptiveDeltaPolicy::period`]) while plateaued, snapped back to
+    /// 1 on renewed progress. Always 1 when the cap is 1.
+    pub fn next_period(&self, current: usize, rel_improvement: f64) -> usize {
+        if self.period <= 1 {
+            return 1;
+        }
+        if rel_improvement.abs() < self.plateau {
+            (current.max(1) * 2).min(self.period)
+        } else {
+            1
+        }
+    }
 }
 
 /// The complete communication configuration of a training run: the
-/// exchange schedule plus the optional adaptive-δ controller.
+/// exchange schedule, the optional adaptive-δ controller, the
+/// heterogeneous node-latency (straggler) model, and the
+/// iteration-level staleness bound.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct CommConfig {
     /// How exchanges are scheduled (sync / semi-sync / lossy).
     pub schedule: CommSchedule,
-    /// Optional adaptive consensus tolerance.
+    /// Optional adaptive consensus tolerance (and communication-period
+    /// doubling, via [`AdaptiveDeltaPolicy::period`]).
     pub adaptive_delta: Option<AdaptiveDeltaPolicy>,
+    /// Seeded per-node lognormal α straggler model (simulated-clock
+    /// only; the homogeneous default is bit-identical to the plain α-β
+    /// charges).
+    pub node_latency: NodeLatency,
+    /// Iteration-level bounded staleness `s` (Liang et al. 2020): nodes
+    /// run their ADMM updates against consensus state up to `s`
+    /// iterations old, drawn from a seeded schedule, with the last `s`
+    /// iterations of every layer running a synchronous drain. `0` (the
+    /// default) is the paper's fully synchronous iterate, bit-identical
+    /// to the pre-staleness path. Requires the synchronous fabric
+    /// schedule — fabric-level (round) staleness and iteration-level
+    /// staleness are two resolutions of the same relaxation; pick one.
+    pub iter_staleness: usize,
 }
 
 impl CommConfig {
@@ -186,6 +230,7 @@ impl CommConfig {
     /// steers off the per-iteration objective.
     pub fn validate_for(&self, base_delta: f64, record_cost_curve: bool) -> Result<()> {
         self.schedule.validate()?;
+        self.node_latency.validate()?;
         if let Some(policy) = &self.adaptive_delta {
             policy.validate(base_delta)?;
             if !record_cost_curve {
@@ -193,6 +238,47 @@ impl CommConfig {
                     "adaptive δ steers off the cost curve; enable record_cost_curve".into(),
                 ));
             }
+        }
+        if self.iter_staleness > 0 {
+            if self.schedule != CommSchedule::Synchronous {
+                return Err(Error::Config(format!(
+                    "iteration staleness requires the synchronous fabric schedule \
+                     (got '{}'): round-level and iteration-level staleness are two \
+                     resolutions of the same relaxation — pick one",
+                    self.schedule.describe()
+                )));
+            }
+            if self.adaptive_delta.map(|p| p.period).unwrap_or(1) > 1 {
+                return Err(Error::Config(
+                    "iteration staleness cannot combine with communication-period \
+                     doubling (adaptive period > 1): both skip consensus work per \
+                     iteration — pick one"
+                        .into(),
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// [`CommConfig::validate_for`] plus the per-layer iteration budget:
+    /// the last `s` iterations of every layer drain synchronously, so
+    /// iteration staleness must leave at least one iteration to relax
+    /// (`s < K`). The one place this bound lives — the config front-end
+    /// and the trainer both call it.
+    pub fn validate_with_iterations(
+        &self,
+        base_delta: f64,
+        record_cost_curve: bool,
+        admm_iterations: usize,
+    ) -> Result<()> {
+        self.validate_for(base_delta, record_cost_curve)?;
+        if self.iter_staleness > 0 && self.iter_staleness >= admm_iterations {
+            return Err(Error::Config(format!(
+                "iteration staleness s = {} must be < admm_iterations K = \
+                 {admm_iterations}: the last s iterations of a layer drain \
+                 synchronously, so s >= K leaves no iteration to relax",
+                self.iter_staleness
+            )));
         }
         Ok(())
     }
@@ -222,6 +308,23 @@ pub trait CommFabric: Send + Sync {
     /// contraction target `delta`. Returns `(rounds executed, payload
     /// bytes charged to the ledger)`. Allocation-free in steady state.
     fn average(&self, values: &mut [Matrix], delta: f64) -> Result<(usize, u64)>;
+
+    /// [`CommFabric::average`] invoked from an iteration that tolerates
+    /// `slack` iterations of staleness around it (iteration-level
+    /// staleness, Liang et al. 2020): the mixing math is unchanged, but
+    /// schedules with a hard per-round barrier may charge the simulated
+    /// clock the relaxed (median-node, amortized) cost instead of the
+    /// full barrier. The default ignores `slack` — schedules that
+    /// already relax their own barriers (semi-sync, lossy) keep their
+    /// native charging.
+    fn average_relaxed(
+        &self,
+        values: &mut [Matrix],
+        delta: f64,
+        _slack: usize,
+    ) -> Result<(usize, u64)> {
+        self.average(values, delta)
+    }
 
     /// Averaging calls performed so far — the schedule cursor a
     /// checkpoint stores so a restored run replays the exact same
@@ -264,6 +367,22 @@ impl CommFabric for SynchronousFabric {
     fn average(&self, values: &mut [Matrix], delta: f64) -> Result<(usize, u64)> {
         self.calls.fetch_add(1, Ordering::Relaxed);
         self.engine.consensus_average_measured(values, delta)
+    }
+
+    fn average_relaxed(
+        &self,
+        values: &mut [Matrix],
+        delta: f64,
+        slack: usize,
+    ) -> Result<(usize, u64)> {
+        if slack == 0 {
+            return self.average(values, delta);
+        }
+        // Same rounds, same math, same traffic — only the clock relaxes
+        // (the caller's iteration no longer stalls on the barrier).
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.engine
+            .consensus_average_measured_relaxed(values, delta, slack)
     }
 
     fn calls(&self) -> u64 {
@@ -588,10 +707,114 @@ mod tests {
         assert!(AdaptiveDeltaPolicy { max_delta: 1e-10, ..p }.validate(1e-9).is_err());
         assert!(AdaptiveDeltaPolicy { plateau: 0.0, ..p }.validate(1e-9).is_err());
         assert!(AdaptiveDeltaPolicy { loosen: 1.0, ..p }.validate(1e-9).is_err());
+        assert!(AdaptiveDeltaPolicy { period: 0, ..p }.validate(1e-9).is_err());
         // CommConfig couples adaptive δ to cost recording.
-        let cfg = CommConfig { schedule: CommSchedule::Synchronous, adaptive_delta: Some(p) };
+        let cfg = CommConfig {
+            schedule: CommSchedule::Synchronous,
+            adaptive_delta: Some(p),
+            ..CommConfig::default()
+        };
         assert!(cfg.validate_for(1e-9, true).is_ok());
         assert!(cfg.validate_for(1e-9, false).is_err());
         assert!(CommConfig::default().validate_for(1e-9, false).is_ok());
+    }
+
+    #[test]
+    fn adaptive_period_doubling_rules() {
+        let p = AdaptiveDeltaPolicy { period: 8, ..AdaptiveDeltaPolicy::default() };
+        p.validate(1e-9).unwrap();
+        // Plateaued: 1 -> 2 -> 4 -> 8, capped.
+        assert_eq!(p.next_period(1, 1e-5), 2);
+        assert_eq!(p.next_period(2, 0.0), 4);
+        assert_eq!(p.next_period(4, 1e-5), 8);
+        assert_eq!(p.next_period(8, 1e-5), 8);
+        // Renewed progress (or regression) snaps back to 1.
+        assert_eq!(p.next_period(8, 0.5), 1);
+        assert_eq!(p.next_period(4, -0.5), 1);
+        // Cap 1 never skips, whatever the signal.
+        let one = AdaptiveDeltaPolicy::default();
+        assert_eq!(one.period, 1);
+        assert_eq!(one.next_period(1, 1e-9), 1);
+        assert_eq!(one.next_period(7, 1e-9), 1);
+    }
+
+    #[test]
+    fn comm_config_validates_staleness_and_straggler_knobs() {
+        use crate::network::NodeLatency;
+        // Iteration staleness rides the synchronous schedule only.
+        let ok = CommConfig { iter_staleness: 2, ..CommConfig::default() };
+        ok.validate_for(1e-9, true).unwrap();
+        // ... and must leave at least one iteration outside the drain.
+        ok.validate_with_iterations(1e-9, true, 3).unwrap();
+        assert!(ok.validate_with_iterations(1e-9, true, 2).is_err());
+        assert!(ok.validate_with_iterations(1e-9, true, 1).is_err());
+        let bad = CommConfig {
+            schedule: CommSchedule::SemiSync { staleness: 2 },
+            iter_staleness: 2,
+            ..CommConfig::default()
+        };
+        assert!(bad.validate_for(1e-9, true).is_err());
+        // ... and not period doubling on top.
+        let bad = CommConfig {
+            iter_staleness: 2,
+            adaptive_delta: Some(AdaptiveDeltaPolicy {
+                period: 2,
+                ..AdaptiveDeltaPolicy::default()
+            }),
+            ..CommConfig::default()
+        };
+        assert!(bad.validate_for(1e-9, true).is_err());
+        // Straggler sigma must be sane.
+        let bad = CommConfig {
+            node_latency: NodeLatency { sigma: -1.0, seed: 0 },
+            ..CommConfig::default()
+        };
+        assert!(bad.validate_for(1e-9, true).is_err());
+        let ok = CommConfig {
+            node_latency: NodeLatency { sigma: 0.5, seed: 3 },
+            ..CommConfig::default()
+        };
+        ok.validate_for(1e-9, false).unwrap();
+    }
+
+    #[test]
+    fn synchronous_average_relaxed_same_math_faster_clock() {
+        let sync = SynchronousFabric::new(engine(8, 2));
+        let relaxed = SynchronousFabric::new(engine(8, 2));
+        let mut a = rand_values(8, 3, 4, 61);
+        let mut b = a.clone();
+        let (ra, ba) = sync.average(&mut a, 1e-9).unwrap();
+        let (rb, bb) = relaxed.average_relaxed(&mut b, 1e-9, 2).unwrap();
+        assert_eq!(ra, rb);
+        assert_eq!(ba, bb);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.max_abs_diff(y), 0.0);
+        }
+        assert_eq!(relaxed.calls(), 1);
+        assert!(
+            relaxed.engine().simulated_seconds() < sync.engine().simulated_seconds()
+        );
+        // Slack 0 delegates to the plain synchronous average.
+        let zero = SynchronousFabric::new(engine(8, 2));
+        let mut c = rand_values(8, 3, 4, 61);
+        zero.average_relaxed(&mut c, 1e-9, 0).unwrap();
+        assert_eq!(
+            zero.engine().simulated_seconds().to_bits(),
+            sync.engine().simulated_seconds().to_bits()
+        );
+        // Non-synchronous fabrics ignore the slack hint (native charging).
+        let semi = SemiSyncFabric::new(engine(8, 2), 1, 3);
+        let semi2 = SemiSyncFabric::new(engine(8, 2), 1, 3);
+        let mut d = rand_values(8, 3, 4, 62);
+        let mut e = d.clone();
+        semi.average(&mut d, 1e-6).unwrap();
+        semi2.average_relaxed(&mut e, 1e-6, 4).unwrap();
+        for (x, y) in d.iter().zip(&e) {
+            assert_eq!(x.max_abs_diff(y), 0.0);
+        }
+        assert_eq!(
+            semi.engine().simulated_seconds().to_bits(),
+            semi2.engine().simulated_seconds().to_bits()
+        );
     }
 }

@@ -26,7 +26,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, PoisonError};
 
-use super::{CommLedger, LatencyModel, MixingMatrix};
+use super::{CommLedger, LatencyModel, MixingMatrix, StragglerProfile};
 use crate::linalg::Matrix;
 use crate::util::{Rng, Xoshiro256StarStar};
 use crate::{Error, Result};
@@ -53,6 +53,11 @@ pub struct GossipEngine {
     max_degree: usize,
     ledger: Arc<CommLedger>,
     latency: LatencyModel,
+    /// Heterogeneous per-node latency aggregates (see
+    /// [`crate::network::NodeLatency`]): synchronous rounds charge the
+    /// max node, relaxed rounds the median. `None` is the homogeneous
+    /// paper model, bit-identical to the plain α-β charges.
+    straggler: Option<StragglerProfile>,
     /// Simulated communication clock, f64 bits in an atomic.
     sim_clock_bits: Arc<AtomicU64>,
     /// Persistent scratch bank for the double-buffered rounds. Lazily
@@ -75,6 +80,7 @@ impl Clone for GossipEngine {
             max_degree: self.max_degree,
             ledger: Arc::clone(&self.ledger),
             latency: self.latency,
+            straggler: self.straggler,
             // The simulated clock stays shared (as before); the scratch
             // bank is per-engine cache state and starts empty.
             sim_clock_bits: Arc::clone(&self.sim_clock_bits),
@@ -109,9 +115,50 @@ impl GossipEngine {
             max_degree,
             ledger,
             latency,
+            straggler: None,
             sim_clock_bits: Arc::new(AtomicU64::new(0f64.to_bits())),
             scratch: Mutex::new(Vec::new()),
             hist: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Install a heterogeneous per-node latency profile. Synchronous
+    /// rounds then charge `max_i α_i` to the simulated clock and relaxed
+    /// rounds the `(slack+1)`-amortized median — the traffic accounting
+    /// is untouched (stragglers slow the clock, never the math).
+    pub fn set_straggler(&mut self, profile: StragglerProfile) {
+        self.straggler = Some(profile);
+    }
+
+    /// The installed straggler profile, if any.
+    pub fn straggler(&self) -> Option<StragglerProfile> {
+        self.straggler
+    }
+
+    /// Simulated seconds one fully synchronized round costs (barrier
+    /// waits for the slowest node when a straggler profile is set).
+    fn sync_round_dt(&self, payload_bytes: u64) -> f64 {
+        match &self.straggler {
+            None => self.latency.round_time(self.max_degree, payload_bytes),
+            Some(p) => self
+                .latency
+                .round_time_straggler(p, self.max_degree, payload_bytes),
+        }
+    }
+
+    /// Simulated seconds one barrier-relaxed round costs under `slack`
+    /// rounds of tolerated staleness (median node, amortized barrier).
+    fn relaxed_round_dt(&self, payload_bytes: u64, slack: usize) -> f64 {
+        match &self.straggler {
+            None => self
+                .latency
+                .relaxed_round_time(self.max_degree, payload_bytes, slack),
+            Some(p) => self.latency.relaxed_round_time_straggler(
+                p,
+                self.max_degree,
+                payload_bytes,
+                slack,
+            ),
         }
     }
 
@@ -189,6 +236,32 @@ impl GossipEngine {
     /// Run `rounds` synchronous mixing rounds over the per-node values.
     /// `values[i]` is node `i`'s local matrix; all must share one shape.
     pub fn mix_rounds(&self, values: &mut [Matrix], rounds: usize) -> Result<()> {
+        self.mix_rounds_clocked(values, rounds, 0)
+    }
+
+    /// [`GossipEngine::mix_rounds`] with the simulated clock charged the
+    /// *relaxed* per-round cost for `clock_slack` rounds of tolerated
+    /// staleness. The mixing math is bit-identical to the synchronous
+    /// rounds — this is the charging model for **iteration-level**
+    /// staleness (Liang et al. 2020), where the averaging itself still
+    /// runs every mixing round but nodes no longer stall on the
+    /// inter-iteration barrier. `clock_slack = 0` is exactly
+    /// [`GossipEngine::mix_rounds`].
+    pub fn mix_rounds_relaxed_clock(
+        &self,
+        values: &mut [Matrix],
+        rounds: usize,
+        clock_slack: usize,
+    ) -> Result<()> {
+        self.mix_rounds_clocked(values, rounds, clock_slack)
+    }
+
+    fn mix_rounds_clocked(
+        &self,
+        values: &mut [Matrix],
+        rounds: usize,
+        clock_slack: usize,
+    ) -> Result<()> {
         let shape = self.check_values(values)?;
         let m = values.len();
         if m == 0 || rounds == 0 {
@@ -221,7 +294,12 @@ impl GossipEngine {
                 std::mem::swap(v, s);
             }
             self.ledger.record_round(self.msgs_per_round, scalars);
-            self.advance_clock(self.latency.round_time(self.max_degree, scalars * 8));
+            let dt = if clock_slack == 0 {
+                self.sync_round_dt(scalars * 8)
+            } else {
+                self.relaxed_round_dt(scalars * 8, clock_slack)
+            };
+            self.advance_clock(dt);
         }
         Ok(())
     }
@@ -244,8 +322,25 @@ impl GossipEngine {
         values: &mut [Matrix],
         delta: f64,
     ) -> Result<(usize, u64)> {
+        self.consensus_average_measured_relaxed(values, delta, 0)
+    }
+
+    /// [`GossipEngine::consensus_average_measured`] with the simulated
+    /// clock charged the relaxed per-round cost for `clock_slack` rounds
+    /// of tolerated staleness (see
+    /// [`GossipEngine::mix_rounds_relaxed_clock`]) — the one place the
+    /// rounds/bytes measurement lives for both the synchronous and the
+    /// iteration-staleness charging models. `clock_slack = 0` is
+    /// bit-identical to the plain measured form.
+    pub fn consensus_average_measured_relaxed(
+        &self,
+        values: &mut [Matrix],
+        delta: f64,
+        clock_slack: usize,
+    ) -> Result<(usize, u64)> {
+        let rounds = self.mixing.consensus_rounds(delta);
         let before = self.ledger.snapshot().bytes;
-        let rounds = self.consensus_average(values, delta)?;
+        self.mix_rounds_clocked(values, rounds, clock_slack)?;
         Ok((rounds, self.ledger.snapshot().bytes - before))
     }
 
@@ -315,7 +410,7 @@ impl GossipEngine {
                 std::mem::swap(v, s);
             }
             self.ledger.record_round(delivered, scalars);
-            self.advance_clock(self.latency.round_time(self.max_degree, scalars * 8));
+            self.advance_clock(self.sync_round_dt(scalars * 8));
         }
         Ok(())
     }
@@ -423,10 +518,9 @@ impl GossipEngine {
             }
             self.ledger.record_round(self.msgs_per_round, scalars);
             let dt = if relaxed {
-                self.latency
-                    .relaxed_round_time(self.max_degree, scalars * 8, staleness)
+                self.relaxed_round_dt(scalars * 8, staleness)
             } else {
-                self.latency.round_time(self.max_degree, scalars * 8)
+                self.sync_round_dt(scalars * 8)
             };
             self.advance_clock(dt);
         }
@@ -732,6 +826,56 @@ mod tests {
         // Traffic accounting is identical: staleness relaxes waiting,
         // not bytes.
         assert_eq!(e.ledger().snapshot(), f.ledger().snapshot());
+    }
+
+    #[test]
+    fn straggler_profile_slows_the_clock_but_never_the_math() {
+        use crate::network::NodeLatency;
+        let plain = engine(8, 2);
+        let mut het = engine(8, 2);
+        het.set_straggler(NodeLatency { sigma: 0.7, seed: 5 }.profile(8));
+        assert!(het.straggler().is_some());
+        let mut a = rand_values(8, 2, 3, 51);
+        let mut b = a.clone();
+        plain.mix_rounds(&mut a, 6).unwrap();
+        het.mix_rounds(&mut b, 6).unwrap();
+        // Identical values and traffic; only the simulated clock differs
+        // (the synchronous barrier waits for the max-α node).
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.max_abs_diff(y), 0.0);
+        }
+        assert_eq!(plain.ledger().snapshot(), het.ledger().snapshot());
+        assert!(het.simulated_seconds() > plain.simulated_seconds());
+    }
+
+    #[test]
+    fn relaxed_clock_mixing_is_bit_identical_and_faster() {
+        use crate::network::NodeLatency;
+        let mk = || {
+            let mut e = engine(6, 1);
+            e.set_straggler(NodeLatency { sigma: 0.8, seed: 9 }.profile(6));
+            e
+        };
+        let sync = mk();
+        let relaxed = mk();
+        let mut a = rand_values(6, 2, 2, 52);
+        let mut b = a.clone();
+        sync.mix_rounds(&mut a, 10).unwrap();
+        relaxed.mix_rounds_relaxed_clock(&mut b, 10, 2).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.max_abs_diff(y), 0.0);
+        }
+        assert_eq!(sync.ledger().snapshot(), relaxed.ledger().snapshot());
+        // Median-amortized barrier strictly beats the max-node barrier.
+        assert!(relaxed.simulated_seconds() < sync.simulated_seconds());
+        // Slack 0 is the synchronous charge, bit for bit.
+        let c = mk();
+        let mut vals = rand_values(6, 2, 2, 53);
+        c.mix_rounds_relaxed_clock(&mut vals, 10, 0).unwrap();
+        assert_eq!(
+            c.simulated_seconds().to_bits(),
+            sync.simulated_seconds().to_bits()
+        );
     }
 
     #[test]

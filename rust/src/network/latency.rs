@@ -6,6 +6,26 @@
 //! round. This is the standard LogP-style simplification used to study
 //! consensus algorithms, and it is what turns "B(d) rounds of `Q×n`
 //! matrices" into the Fig.-4 training-time curve.
+//!
+//! ## Stragglers ([`NodeLatency`])
+//!
+//! The paper's cost model (Sec. V) charges every round the same `α` — a
+//! homogeneous cluster. Real decentralized deployments are
+//! heterogeneous: each node `i` has its own barrier cost `α_i`, and a
+//! synchronous round waits for the *slowest* node, so the barrier term
+//! becomes `max_i α_i`. [`NodeLatency`] models this with a seeded
+//! per-node lognormal multiplier (`α_i = α·exp(σ·g_i)`, `g_i` standard
+//! normal — median-1, heavy right tail, the classic straggler shape).
+//! Relaxed schedules are where the distribution matters: a node that
+//! tolerates `s` rounds of staleness stalls on the barrier at most once
+//! per `s + 1` rounds and never on the same straggler twice in a row,
+//! so the steady-state per-round barrier cost tracks the *median* node,
+//! amortized over the window — `median_i α_i / (s + 1)` — instead of
+//! the max. [`StragglerProfile`] carries the two aggregates the clock
+//! charges.
+
+use crate::util::{Rng, Xoshiro256StarStar};
+use crate::{Error, Result};
 
 /// Simulated link/latency parameters.
 #[derive(Debug, Clone, Copy)]
@@ -55,6 +75,105 @@ impl LatencyModel {
         self.alpha / (slack as f64 + 1.0)
             + (max_degree as u64 * bytes_per_neighbor) as f64 / self.beta
     }
+
+    /// [`LatencyModel::round_time`] under a heterogeneous cluster: the
+    /// barrier waits for the slowest node, so `α` scales by the profile's
+    /// max multiplier. The serialization term is per-link and unchanged.
+    pub fn round_time_straggler(
+        &self,
+        profile: &StragglerProfile,
+        max_degree: usize,
+        bytes_per_neighbor: u64,
+    ) -> f64 {
+        self.alpha * profile.max_mult
+            + (max_degree as u64 * bytes_per_neighbor) as f64 / self.beta
+    }
+
+    /// [`LatencyModel::relaxed_round_time`] under a heterogeneous
+    /// cluster: with `slack` rounds of tolerated staleness the
+    /// steady-state barrier cost tracks the *median* node (stragglers
+    /// hide inside the slack window), amortized over `slack + 1` rounds.
+    pub fn relaxed_round_time_straggler(
+        &self,
+        profile: &StragglerProfile,
+        max_degree: usize,
+        bytes_per_neighbor: u64,
+        slack: usize,
+    ) -> f64 {
+        self.alpha * profile.median_mult / (slack as f64 + 1.0)
+            + (max_degree as u64 * bytes_per_neighbor) as f64 / self.beta
+    }
+}
+
+/// Seeded per-node latency heterogeneity: node `i`'s barrier cost is
+/// `α · exp(sigma · g_i)` with `g_i` a standard normal drawn from a
+/// stream keyed on `seed` — a lognormal multiplier with median 1 and a
+/// heavy right tail (the straggler shape). `sigma = 0` is the paper's
+/// homogeneous cluster, bit-identical to the plain α-β model.
+///
+/// The multipliers are a pure function of `(seed, node count)`, so runs
+/// (and checkpoint resumes) replay identical straggler assignments.
+/// Serialized inside [`super::CommConfig`].
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct NodeLatency {
+    /// Log-std of the per-node α multiplier (`0` = homogeneous).
+    pub sigma: f64,
+    /// Seed of the per-node draw stream.
+    pub seed: u64,
+}
+
+impl NodeLatency {
+    /// Whether any node differs from the nominal α.
+    pub fn is_heterogeneous(&self) -> bool {
+        self.sigma > 0.0
+    }
+
+    /// Validate parameter ranges.
+    pub fn validate(&self) -> Result<()> {
+        if !(self.sigma.is_finite() && self.sigma >= 0.0) {
+            return Err(Error::Config(format!(
+                "straggler sigma must be finite and >= 0, got {}",
+                self.sigma
+            )));
+        }
+        Ok(())
+    }
+
+    /// The per-node α multipliers for an `m`-node cluster. Deterministic
+    /// in `(seed, m)`; all `1.0` when homogeneous.
+    pub fn multipliers(&self, m: usize) -> Vec<f64> {
+        if !self.is_heterogeneous() {
+            return vec![1.0; m];
+        }
+        let mut rng = Xoshiro256StarStar::seed_from_u64(self.seed);
+        (0..m).map(|_| (self.sigma * rng.gaussian()).exp()).collect()
+    }
+
+    /// The aggregate multipliers the simulated clock charges: the max
+    /// (synchronous barrier) and the median (relaxed steady state) over
+    /// the `m` per-node draws.
+    pub fn profile(&self, m: usize) -> StragglerProfile {
+        let mults = self.multipliers(m);
+        if mults.is_empty() {
+            return StragglerProfile { max_mult: 1.0, median_mult: 1.0 };
+        }
+        StragglerProfile {
+            max_mult: mults.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+            median_mult: crate::util::median(&mults),
+        }
+    }
+}
+
+/// The two aggregates of a [`NodeLatency`] draw that the α-β clock
+/// actually charges per round: synchronous rounds pay the max node,
+/// relaxed rounds pay the median node.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StragglerProfile {
+    /// `max_i exp(σ g_i)` — what a full barrier waits for.
+    pub max_mult: f64,
+    /// `median_i exp(σ g_i)` — the steady-state cost once staleness
+    /// hides the tail.
+    pub median_mult: f64,
 }
 
 #[cfg(test)]
@@ -80,6 +199,58 @@ mod tests {
         // slack 1 halves alpha, leaves the serialization term alone.
         assert!((m.relaxed_round_time(2, 500, 1) - (0.005 + 1.0)).abs() < 1e-12);
         assert!(m.relaxed_round_time(2, 500, 4) < m.round_time(2, 500));
+    }
+
+    #[test]
+    fn homogeneous_node_latency_is_the_plain_model_bit_for_bit() {
+        let m = LatencyModel { alpha: 0.01, beta: 1000.0 };
+        let nl = NodeLatency::default();
+        assert!(!nl.is_heterogeneous());
+        nl.validate().unwrap();
+        assert_eq!(nl.multipliers(5), vec![1.0; 5]);
+        let p = nl.profile(5);
+        assert_eq!(p, StragglerProfile { max_mult: 1.0, median_mult: 1.0 });
+        assert_eq!(
+            m.round_time_straggler(&p, 2, 500).to_bits(),
+            m.round_time(2, 500).to_bits()
+        );
+        assert_eq!(
+            m.relaxed_round_time_straggler(&p, 2, 500, 3).to_bits(),
+            m.relaxed_round_time(2, 500, 3).to_bits()
+        );
+    }
+
+    #[test]
+    fn straggler_draws_are_seeded_and_lognormal_shaped() {
+        let nl = NodeLatency { sigma: 0.8, seed: 17 };
+        nl.validate().unwrap();
+        assert!(nl.is_heterogeneous());
+        // Deterministic in (seed, m).
+        assert_eq!(nl.multipliers(10), nl.multipliers(10));
+        let other = NodeLatency { sigma: 0.8, seed: 18 };
+        assert_ne!(nl.multipliers(10), other.multipliers(10));
+        // All positive; max dominates the median (heavy right tail).
+        let p = nl.profile(20);
+        assert!(nl.multipliers(20).iter().all(|&x| x > 0.0));
+        assert!(p.max_mult > p.median_mult, "{p:?}");
+        // The median of a median-1 lognormal sits near 1.
+        let big = NodeLatency { sigma: 0.5, seed: 3 }.profile(4001);
+        assert!((big.median_mult - 1.0).abs() < 0.1, "{}", big.median_mult);
+        // Validation rejects nonsense.
+        assert!(NodeLatency { sigma: -0.1, seed: 0 }.validate().is_err());
+        assert!(NodeLatency { sigma: f64::NAN, seed: 0 }.validate().is_err());
+    }
+
+    #[test]
+    fn straggler_sync_charges_max_relaxed_charges_median() {
+        let m = LatencyModel { alpha: 0.01, beta: 1e12 }; // ~1e-9 s byte term
+        let p = StragglerProfile { max_mult: 3.0, median_mult: 1.1 };
+        let sync = m.round_time_straggler(&p, 2, 500);
+        assert!((sync - 0.03).abs() < 1e-7, "{sync}");
+        let relaxed = m.relaxed_round_time_straggler(&p, 2, 500, 2);
+        assert!((relaxed - 0.011 / 3.0).abs() < 1e-7, "{relaxed}");
+        // The straggler gap: sync pays the tail, relaxed hides it.
+        assert!(relaxed < sync / 3.0);
     }
 
     #[test]

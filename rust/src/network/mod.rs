@@ -26,7 +26,9 @@
 //! * [`CommLedger`] — thread-safe message/byte/round counters (the data
 //!   source for the eq. (14)–(16) communication-load comparison);
 //! * [`LatencyModel`] — an α-β cost model mapping (rounds, bytes) to
-//!   simulated wall-clock time.
+//!   simulated wall-clock time, with an optional seeded per-node
+//!   lognormal straggler distribution ([`NodeLatency`]): synchronous
+//!   barriers charge the max node, staleness-relaxed rounds the median.
 
 mod accounting;
 mod fabric;
@@ -41,6 +43,6 @@ pub use fabric::{
     SynchronousFabric,
 };
 pub use gossip::GossipEngine;
-pub use latency::LatencyModel;
+pub use latency::{LatencyModel, NodeLatency, StragglerProfile};
 pub use mixing::{MixingMatrix, WeightRule};
 pub use topology::Topology;

@@ -4,7 +4,8 @@ use super::{StopPolicy, TrainSession};
 use crate::coordinator::{ConsensusMode, DssfnAlgorithm, TaskRef, TrainOptions};
 use crate::data::{lookup, ClassificationTask};
 use crate::network::{
-    AdaptiveDeltaPolicy, CommConfig, CommSchedule, LatencyModel, Topology, WeightRule,
+    AdaptiveDeltaPolicy, CommConfig, CommSchedule, LatencyModel, NodeLatency, Topology,
+    WeightRule,
 };
 use crate::runtime::{ComputeBackend, NativeBackend};
 use crate::ssfn::{GrowthPolicy, SsfnArchitecture, TrainHyper};
@@ -49,6 +50,8 @@ pub struct SessionBuilder {
     consensus: ConsensusMode,
     schedule: CommSchedule,
     adaptive_delta: Option<AdaptiveDeltaPolicy>,
+    node_latency: NodeLatency,
+    iter_staleness: usize,
     latency: LatencyModel,
     threads: usize,
     record_cost_curve: bool,
@@ -87,6 +90,8 @@ impl SessionBuilder {
             consensus: ConsensusMode::Gossip { delta: 1e-9 },
             schedule: CommSchedule::Synchronous,
             adaptive_delta: None,
+            node_latency: NodeLatency::default(),
+            iter_staleness: 0,
             latency: LatencyModel::default(),
             threads: 0,
             record_cost_curve: true,
@@ -211,9 +216,34 @@ impl SessionBuilder {
 
     /// L-FGADMM-style adaptive consensus tolerance: loosen the working
     /// `δ` while the layer objective is plateaued (requires cost-curve
-    /// recording, which is on by default).
+    /// recording, which is on by default). The policy's
+    /// [`AdaptiveDeltaPolicy::period`] additionally enables
+    /// communication-period doubling on the same plateau signal.
     pub fn adaptive_delta(mut self, policy: AdaptiveDeltaPolicy) -> Self {
         self.adaptive_delta = Some(policy);
+        self
+    }
+
+    /// Heterogeneous per-node latency (straggler) model: node `i`'s
+    /// barrier cost is `α·exp(σ·g_i)` from a seeded lognormal draw.
+    /// Synchronous rounds then charge the simulated clock the max node,
+    /// staleness-relaxed rounds the median — the trained model and the
+    /// traffic accounting are unaffected (stragglers slow the clock,
+    /// never the math).
+    pub fn node_latency(mut self, node_latency: NodeLatency) -> Self {
+        self.node_latency = node_latency;
+        self
+    }
+
+    /// Iteration-level bounded staleness (Liang et al., 2020): nodes
+    /// run ADMM updates against consensus state up to `s` iterations
+    /// old (seeded per-node schedule), with a synchronous drain over the
+    /// last `s` iterations of every layer. Requires the synchronous
+    /// fabric schedule; `0` disables. Contrast with
+    /// [`SessionBuilder::staleness`], which relaxes individual gossip
+    /// *rounds* inside one averaging instead.
+    pub fn iter_staleness(mut self, s: usize) -> Self {
+        self.iter_staleness = s;
         self
     }
 
@@ -303,6 +333,8 @@ impl SessionBuilder {
         let comm = CommConfig {
             schedule: self.schedule,
             adaptive_delta: self.adaptive_delta,
+            node_latency: self.node_latency,
+            iter_staleness: self.iter_staleness,
         };
         let alg = DssfnAlgorithm::with_comm(
             arch,
@@ -407,6 +439,89 @@ mod tests {
             .comm_fabric(CommSchedule::Lossy { loss_p: 1.0 })
             .build()
             .is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_staleness_and_straggler_config() {
+        // Iteration staleness needs the synchronous fabric schedule.
+        assert!(SessionBuilder::new()
+            .dataset("quickstart")
+            .layers(1)
+            .hidden_extra(8)
+            .nodes(4)
+            .degree(1)
+            .staleness(2)
+            .iter_staleness(2)
+            .build()
+            .is_err());
+        // ... and no period doubling on top.
+        assert!(SessionBuilder::new()
+            .dataset("quickstart")
+            .layers(1)
+            .hidden_extra(8)
+            .nodes(4)
+            .degree(1)
+            .iter_staleness(2)
+            .adaptive_delta(AdaptiveDeltaPolicy {
+                period: 4,
+                ..AdaptiveDeltaPolicy::default()
+            })
+            .build()
+            .is_err());
+        // Exact consensus takes neither relaxation.
+        assert!(SessionBuilder::new()
+            .dataset("quickstart")
+            .layers(1)
+            .hidden_extra(8)
+            .nodes(4)
+            .degree(1)
+            .exact_consensus()
+            .iter_staleness(2)
+            .build()
+            .is_err());
+        assert!(SessionBuilder::new()
+            .dataset("quickstart")
+            .layers(1)
+            .hidden_extra(8)
+            .nodes(4)
+            .degree(1)
+            .exact_consensus()
+            .node_latency(NodeLatency { sigma: 0.5, seed: 1 })
+            .build()
+            .is_err());
+        // Straggler sigma must be sane.
+        assert!(SessionBuilder::new()
+            .dataset("quickstart")
+            .layers(1)
+            .hidden_extra(8)
+            .nodes(4)
+            .degree(1)
+            .node_latency(NodeLatency { sigma: -0.5, seed: 1 })
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn iter_staleness_session_trains_and_reports_its_mode() {
+        let session = SessionBuilder::new()
+            .dataset("quickstart")
+            .seed(3)
+            .layers(1)
+            .hidden_extra(10)
+            .admm_iterations(6)
+            .nodes(4)
+            .degree(1)
+            .threads(1)
+            .iter_staleness(2)
+            .node_latency(NodeLatency { sigma: 0.5, seed: 7 })
+            .build()
+            .unwrap();
+        assert!(session.describe().contains("iter-stale(s=2)"), "{}", session.describe());
+        assert!(session.describe().contains("straggler"), "{}", session.describe());
+        let (_model, report) = session.run_to_completion().unwrap();
+        assert!(report.mode.contains("iter-stale(s=2)"));
+        assert!(report.comm_total.bytes > 0);
+        assert!(report.simulated_comm_secs > 0.0);
     }
 
     #[test]

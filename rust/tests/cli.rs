@@ -186,6 +186,131 @@ fn train_with_semisync_schedule_and_adaptive_delta() {
 }
 
 #[test]
+fn unused_comm_flags_are_rejected_not_ignored() {
+    // --staleness under the default sync schedule used to be a silent
+    // no-op; now it fails fast with a pointer at the right schedule.
+    let out = dssfn()
+        .args(["train", "--dataset", "quickstart", "--staleness", "3"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("semisync"), "stderr: {err}");
+
+    // --loss-p without the lossy schedule, same story.
+    let out = dssfn()
+        .args(["train", "--dataset", "quickstart", "--loss-p", "0.2"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("lossy"));
+
+    // Cross-pairing: --staleness with the lossy schedule.
+    let out = dssfn()
+        .args([
+            "train", "--dataset", "quickstart", "--schedule", "lossy", "--staleness", "2",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("semisync"));
+
+    // --adaptive-delta under exact consensus.
+    let out = dssfn()
+        .args([
+            "train", "--dataset", "quickstart", "--exact-consensus",
+            "--adaptive-delta", "1e-4",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("exact_consensus"), "stderr: {err}");
+
+    // --iter-staleness refuses a relaxed fabric schedule.
+    let out = dssfn()
+        .args([
+            "train", "--dataset", "quickstart", "--schedule", "semisync",
+            "--iter-staleness", "2",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("staleness"));
+
+    // --adaptive-period rides --adaptive-delta.
+    let out = dssfn()
+        .args(["train", "--dataset", "quickstart", "--adaptive-period", "4"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("adaptive_delta"));
+
+    // The `info` command surfaces the same validation — it never prints
+    // a configuration `train` would refuse.
+    let out = dssfn()
+        .args(["info", "--dataset", "quickstart", "--staleness", "3"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let out = dssfn()
+        .args([
+            "info", "--dataset", "quickstart", "--exact-consensus",
+            "--iter-staleness", "2",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("exact_consensus"));
+    // ... and a valid combination prints the full fabric line.
+    let out = dssfn()
+        .args([
+            "info", "--dataset", "quickstart", "--iter-staleness", "2",
+            "--straggler-sigma", "0.5",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("iter-stale(s=2)"), "{text}");
+    assert!(text.contains("straggler(σ=0.5)"), "{text}");
+}
+
+#[test]
+fn train_with_iter_staleness_and_straggler_model() {
+    let out = dssfn()
+        .args([
+            "train",
+            "--dataset",
+            "quickstart",
+            "--layers",
+            "1",
+            "--admm-iters",
+            "10",
+            "--nodes",
+            "4",
+            "--degree",
+            "1",
+            "--iter-staleness",
+            "2",
+            "--straggler-sigma",
+            "0.5",
+            "--straggler-seed",
+            "7",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("iter-stale(s=2)"), "mode missing iter-stale:\n{text}");
+    assert!(text.contains("straggler"), "mode missing straggler:\n{text}");
+}
+
+#[test]
 fn train_checkpoint_every_iterations_and_resume() {
     let dir = std::env::temp_dir().join(format!("dssfn_cli_ckpt_every_{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();

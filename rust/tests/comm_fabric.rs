@@ -1,10 +1,11 @@
 //! Integration: the pluggable `CommFabric` API — centralized-equivalent
-//! training under relaxed communication schedules, adaptive-δ
-//! communication savings, and bit-identical checkpoint/resume of seeded
-//! schedules.
+//! training under relaxed communication schedules, adaptive-δ /
+//! communication-period savings, the heterogeneous (straggler) latency
+//! model, iteration-level staleness, and bit-identical
+//! checkpoint/resume of seeded schedules.
 
 use dssfn::data::lookup;
-use dssfn::network::{AdaptiveDeltaPolicy, CommSchedule};
+use dssfn::network::{AdaptiveDeltaPolicy, CommSchedule, NodeLatency};
 use dssfn::session::{SessionBuilder, StepEvent};
 use dssfn::{resume_session, Checkpoint};
 
@@ -75,6 +76,7 @@ fn adaptive_delta_saves_bytes_without_hurting_cost() {
             max_delta: 1e-4,
             plateau: 0.02,
             loosen: 10.0,
+            period: 1,
         })
         .build()
         .unwrap();
@@ -150,6 +152,7 @@ fn semisync_adaptive_run_resumes_bit_identically() {
                 max_delta: 1e-4,
                 plateau: 0.05,
                 loosen: 10.0,
+                period: 1,
             })
     };
     let (one_model, one_report) = builder().build().unwrap().run_to_completion().unwrap();
@@ -181,6 +184,220 @@ fn semisync_adaptive_run_resumes_bit_identically() {
     assert_eq!(report.full_cost_curve(), one_report.full_cost_curve());
     assert_eq!(report.comm_total, one_report.comm_total);
     assert_eq!(report.total_gossip_rounds(), one_report.total_gossip_rounds());
+}
+
+/// A heterogeneous (lognormal-α) cluster for the straggler tests.
+fn straggler() -> NodeLatency {
+    NodeLatency { sigma: 0.8, seed: 17 }
+}
+
+/// The straggler model's simulated-seconds ordering: a heterogeneous
+/// cluster makes the synchronous barrier pay the slowest node (slower
+/// than the homogeneous run), while the semi-sync fabric's relaxed
+/// rounds pay the amortized median and beat it. The trained model and
+/// the traffic accounting are untouched — stragglers slow the clock,
+/// never the math.
+#[test]
+fn straggler_sync_pays_the_max_node_semisync_recovers_the_median() {
+    let (homog_model, homog) = mnist_small_builder()
+        .build()
+        .unwrap()
+        .run_to_completion()
+        .unwrap();
+    let (het_model, het) = mnist_small_builder()
+        .node_latency(straggler())
+        .build()
+        .unwrap()
+        .run_to_completion()
+        .unwrap();
+    let (_, semi_het) = mnist_small_builder()
+        .node_latency(straggler())
+        .staleness(2)
+        .build()
+        .unwrap()
+        .run_to_completion()
+        .unwrap();
+
+    // Same math, same bytes — only the clock knows about stragglers.
+    let homog_model = homog_model.into_ssfn().unwrap();
+    let het_model = het_model.into_ssfn().unwrap();
+    assert_eq!(het_model.output().max_abs_diff(homog_model.output()), 0.0);
+    for (a, b) in het_model.weights().iter().zip(homog_model.weights()) {
+        assert_eq!(a.max_abs_diff(b), 0.0);
+    }
+    assert_eq!(het.comm_total, homog.comm_total);
+    assert!(het.mode.contains("straggler"), "{}", het.mode);
+
+    // Heterogeneity slows the synchronous barrier...
+    assert!(
+        het.simulated_comm_secs > homog.simulated_comm_secs,
+        "het sync {} should exceed homogeneous sync {}",
+        het.simulated_comm_secs,
+        homog.simulated_comm_secs
+    );
+    // ... and the semi-sync schedule recovers most of it: under the
+    // same straggler draw its relaxed rounds beat the synchronous run.
+    assert!(
+        semi_het.simulated_comm_secs < het.simulated_comm_secs,
+        "semisync under stragglers {} should beat sync under stragglers {}",
+        semi_het.simulated_comm_secs,
+        het.simulated_comm_secs
+    );
+}
+
+/// The acceptance criterion for iteration-level staleness: an s=2 run
+/// on mnist-small lands within 5% of the synchronous final-layer cost
+/// while its simulated seconds strictly beat the synchronous run under
+/// the heterogeneous node-latency model — and it ships exactly the same
+/// bytes (staleness relaxes waiting, not traffic).
+#[test]
+fn iteration_staleness_matches_sync_cost_and_beats_its_clock() {
+    let (_, sync_report) = mnist_small_builder()
+        .node_latency(straggler())
+        .build()
+        .unwrap()
+        .run_to_completion()
+        .unwrap();
+    let (_, stale_report) = mnist_small_builder()
+        .node_latency(straggler())
+        .iter_staleness(2)
+        .build()
+        .unwrap()
+        .run_to_completion()
+        .unwrap();
+
+    let sync_cost = sync_report.layers.last().unwrap().final_cost().unwrap();
+    let stale_cost = stale_report.layers.last().unwrap().final_cost().unwrap();
+    assert!(
+        (stale_cost - sync_cost).abs() <= 0.05 * sync_cost.abs(),
+        "iteration-staleness final-layer cost {stale_cost} vs sync {sync_cost}"
+    );
+    assert!(
+        (stale_report.train_accuracy - sync_report.train_accuracy).abs() < 0.05,
+        "train acc {} vs {}",
+        stale_report.train_accuracy,
+        sync_report.train_accuracy
+    );
+    assert!(stale_report.mode.contains("iter-stale(s=2)"), "{}", stale_report.mode);
+    // Same rounds, same bytes: the relaxation is in the waiting.
+    assert_eq!(stale_report.comm_total, sync_report.comm_total);
+    assert!(
+        stale_report.simulated_comm_secs < sync_report.simulated_comm_secs,
+        "iteration staleness sim time {} should strictly beat sync {}",
+        stale_report.simulated_comm_secs,
+        sync_report.simulated_comm_secs
+    );
+}
+
+/// L-FGADMM communication-period doubling: with the δ controller held
+/// fixed (max_delta = base δ), the period knob alone skips whole
+/// averaging calls on plateaus — measurably fewer gossip rounds and
+/// `GossipRound` events at a near-unchanged final cost.
+#[test]
+fn adaptive_period_doubling_skips_averaging_calls() {
+    let (_, fixed_report) = mnist_small_builder()
+        .build()
+        .unwrap()
+        .run_to_completion()
+        .unwrap();
+
+    let mut session = mnist_small_builder()
+        .adaptive_delta(AdaptiveDeltaPolicy {
+            max_delta: 1e-8, // = base δ: isolates the period effect
+            plateau: 0.02,
+            loosen: 10.0,
+            period: 8,
+        })
+        .build()
+        .unwrap();
+    let mut gossip_events = 0usize;
+    let mut iterations = 0usize;
+    while let Some(ev) = session.step().unwrap() {
+        match ev {
+            StepEvent::GossipRound { .. } => gossip_events += 1,
+            StepEvent::AdmmIteration { .. } => iterations += 1,
+            _ => {}
+        }
+    }
+    let (_, period_report) = session.finish().unwrap();
+
+    assert!(
+        gossip_events < iterations,
+        "period doubling never skipped an averaging ({gossip_events} events over \
+         {iterations} iterations)"
+    );
+    assert!(
+        period_report.total_gossip_rounds() < fixed_report.total_gossip_rounds(),
+        "period doubling saved no rounds: {} vs {}",
+        period_report.total_gossip_rounds(),
+        fixed_report.total_gossip_rounds()
+    );
+    assert!(
+        period_report.comm_total.bytes < fixed_report.comm_total.bytes,
+        "period doubling saved no bytes"
+    );
+    let fixed_cost = fixed_report.layers.last().unwrap().final_cost().unwrap();
+    let period_cost = period_report.layers.last().unwrap().final_cost().unwrap();
+    assert!(
+        (period_cost - fixed_cost).abs() <= 0.05 * fixed_cost.abs(),
+        "period doubling moved the final cost beyond 5%: {period_cost} vs {fixed_cost}"
+    );
+}
+
+/// Iteration-staleness runs — seeded per-node draws, history ring,
+/// cursor — checkpoint and resume bit-identically, straggler clock
+/// included.
+#[test]
+fn iteration_staleness_run_resumes_bit_identically() {
+    let task = std::sync::Arc::new(lookup("quickstart").unwrap().generator(5).generate().unwrap());
+    let builder = || {
+        SessionBuilder::new()
+            .shared_task(std::sync::Arc::clone(&task))
+            .seed(5)
+            .layers(2)
+            .hidden_extra(12)
+            .admm_iterations(12)
+            .nodes(4)
+            .degree(1)
+            .gossip_delta(1e-8)
+            .threads(2)
+            .iter_staleness(2)
+            .node_latency(straggler())
+    };
+    let (one_model, one_report) = builder().build().unwrap().run_to_completion().unwrap();
+    let one_model = one_model.into_ssfn().unwrap();
+
+    // Interrupt mid-layer-1 (inside the staleness window), serialize,
+    // restore, finish.
+    let mut session = builder().build().unwrap();
+    let ck = loop {
+        match session.step().unwrap() {
+            Some(StepEvent::AdmmIteration { layer: 1, iteration: 5, .. }) => {
+                break session.checkpoint().unwrap();
+            }
+            Some(_) => {}
+            None => panic!("session finished before the checkpoint point"),
+        }
+    };
+    let bytes = ck.to_bytes();
+    drop(session);
+
+    let ck = Checkpoint::from_bytes(&bytes).unwrap();
+    let mut resumed = resume_session(&ck, &task).unwrap();
+    let (model, report) = resumed.finish().unwrap();
+    let model = model.into_ssfn().unwrap();
+
+    assert_eq!(model.output().max_abs_diff(one_model.output()), 0.0);
+    for (a, b) in model.weights().iter().zip(one_model.weights()) {
+        assert_eq!(a.max_abs_diff(b), 0.0, "restored weight drifted");
+    }
+    assert_eq!(report.full_cost_curve(), one_report.full_cost_curve());
+    assert_eq!(report.comm_total, one_report.comm_total);
+    assert_eq!(
+        report.simulated_comm_secs.to_bits(),
+        one_report.simulated_comm_secs.to_bits(),
+        "straggler clock drifted across resume"
+    );
 }
 
 /// The synchronous fabric really is the old path: a default-schedule
