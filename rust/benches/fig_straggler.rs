@@ -1,0 +1,230 @@
+//! Bench E6 — the straggler figure: simulated training time under a
+//! heterogeneous cluster, per communication mode and staleness
+//! schedule. The Sec.-V extension the ROADMAP asked for: it quantifies
+//! how much of the straggler tax each relaxation recovers.
+//!
+//! ```text
+//! cargo bench --bench fig_straggler [-- --dataset mnist-small]
+//!                                   [-- --corr 0.5] [-- --layers 1]
+//!                                   [-- --json BENCH_fig_straggler.json]
+//! ```
+//!
+//! Sweeps the per-round lognormal straggler σ over {0, 0.4, 0.8, 1.2}
+//! crossed with the communication mode — `sync` (the paper's barrier),
+//! `semisync` (round-level staleness s = 2, Liang et al. 2020), and
+//! `iter-stale` (iteration-level staleness s = 2) under each
+//! [`StalenessSchedule`] (`iid`, `fixed:2`, `oneslow:0:2`) — and emits
+//! `BENCH_fig_straggler.json` rows of
+//! `{sigma, mode, schedule, sim_secs, bytes, final_cost}`.
+//!
+//! Asserted invariants (the acceptance criteria of the straggler PR):
+//!
+//! * at every σ > 0: sync-heterogeneous ≥ semisync-heterogeneous ≥
+//!   sync-homogeneous simulated seconds — relaxed schedules genuinely
+//!   hide slow nodes, but slack never beats a homogeneous cluster;
+//! * every heterogeneous run's trained model is **bit-identical** to
+//!   the homogeneous run of the same mode and seed (stragglers slow the
+//!   clock, never the math), and ships identical bytes.
+
+use dssfn::network::{NodeLatency, StalenessSchedule};
+use dssfn::session::SessionBuilder;
+use dssfn::util::human_secs;
+
+struct Row {
+    sigma: f64,
+    mode: &'static str,
+    schedule: &'static str,
+    sim_secs: f64,
+    bytes: u64,
+    final_cost: f64,
+}
+
+fn write_json(path: &str, rows: &[Row]) -> std::io::Result<()> {
+    let mut s = String::from("[\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "  {{\"sigma\": {}, \"mode\": \"{}\", \"schedule\": \"{}\", \
+             \"sim_secs\": {:e}, \"bytes\": {}, \"final_cost\": {:e}}}{}\n",
+            r.sigma,
+            r.mode,
+            r.schedule,
+            r.sim_secs,
+            r.bytes,
+            r.final_cost,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("]\n");
+    std::fs::write(path, s)
+}
+
+fn main() -> dssfn::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let arg = |key: &str| {
+        args.iter()
+            .position(|a| a == key)
+            .and_then(|i| args.get(i + 1))
+            .cloned()
+    };
+    let dataset = arg("--dataset").unwrap_or_else(|| "mnist-small".to_string());
+    let corr: f64 = arg("--corr").and_then(|s| s.parse().ok()).unwrap_or(0.5);
+    let layers: usize = arg("--layers").and_then(|s| s.parse().ok()).unwrap_or(1);
+    let json_path = arg("--json").unwrap_or_else(|| "BENCH_fig_straggler.json".to_string());
+
+    const SIGMAS: [f64; 4] = [0.0, 0.4, 0.8, 1.2];
+    const STALENESS: usize = 2;
+    let seed = 11u64;
+    let straggler_seed = 17u64;
+
+    // (mode, iteration schedule) grid. The schedule column only varies
+    // the iter-stale mode; sync/semisync rows carry "-".
+    let modes: [(&str, &str, Option<StalenessSchedule>); 5] = [
+        ("sync", "-", None),
+        ("semisync", "-", None),
+        ("iter-stale", "iid", Some(StalenessSchedule::Iid)),
+        ("iter-stale", "fixed", Some(StalenessSchedule::FixedLag(STALENESS))),
+        (
+            "iter-stale",
+            "oneslow",
+            Some(StalenessSchedule::OneSlow { node: 0, lag: STALENESS }),
+        ),
+    ];
+
+    let builder = |sigma: f64, mode: &str, schedule: Option<StalenessSchedule>| {
+        let mut b = SessionBuilder::new()
+            .dataset(dataset.clone())
+            .seed(seed)
+            .layers(layers)
+            .hidden_extra(30)
+            .admm_iterations(20)
+            .nodes(10)
+            .degree(2)
+            .gossip_delta(1e-8)
+            .record_cost_curve(true);
+        if sigma > 0.0 {
+            b = b.node_latency(NodeLatency { sigma, seed: straggler_seed, corr });
+        }
+        match mode {
+            "sync" => {}
+            "semisync" => b = b.staleness(STALENESS),
+            "iter-stale" => {
+                b = b.iter_staleness(STALENESS);
+                if let Some(s) = schedule {
+                    b = b.iter_schedule(s);
+                }
+            }
+            other => unreachable!("unknown mode {other}"),
+        }
+        b
+    };
+
+    println!(
+        "FIG_STRAGGLER on '{dataset}': M=10 d=2 K=20 L={layers}, s={STALENESS}, ρ={corr}"
+    );
+    println!(
+        "{:>5} {:>10} {:>9} {:>14} {:>12} {:>14}",
+        "σ", "mode", "schedule", "sim secs", "MiB", "final cost"
+    );
+
+    let mut rows: Vec<Row> = Vec::new();
+    // Homogeneous reference weights per mode (bit-identity check) and
+    // the homogeneous sync clock (the ordering floor).
+    let mut homog_weights: Vec<(usize, Vec<dssfn::linalg::Matrix>)> = Vec::new();
+    let mut sync_homog_secs = 0.0f64;
+
+    for &sigma in &SIGMAS {
+        for (mi, &(mode, schedule, iter_schedule)) in modes.iter().enumerate() {
+            let session = builder(sigma, mode, iter_schedule).build()?;
+            let (model, report) = session.run_to_completion()?;
+            let model = model.into_ssfn()?;
+            let final_cost = report
+                .layers
+                .last()
+                .and_then(|l| l.final_cost())
+                .unwrap_or(f64::NAN);
+            let row = Row {
+                sigma,
+                mode,
+                schedule,
+                sim_secs: report.simulated_comm_secs,
+                bytes: report.comm_total.bytes,
+                final_cost,
+            };
+            println!(
+                "{:>5} {:>10} {:>9} {:>14} {:>12.3} {:>14.6}",
+                sigma,
+                mode,
+                schedule,
+                human_secs(row.sim_secs),
+                row.bytes as f64 / (1u64 << 20) as f64,
+                final_cost
+            );
+
+            if sigma == 0.0 {
+                if mode == "sync" && mi == 0 {
+                    sync_homog_secs = row.sim_secs;
+                }
+                let mut ws: Vec<dssfn::linalg::Matrix> = model.weights().to_vec();
+                ws.push(model.output().clone());
+                homog_weights.push((mi, ws));
+            } else {
+                // Stragglers slow the clock, never the math: every
+                // learned matrix is bit-identical to the homogeneous run
+                // of the same mode and seed, and the bytes match.
+                let (_, ref_ws) = homog_weights
+                    .iter()
+                    .find(|(i, _)| *i == mi)
+                    .expect("homogeneous reference ran first");
+                let mut got: Vec<dssfn::linalg::Matrix> = model.weights().to_vec();
+                got.push(model.output().clone());
+                assert_eq!(got.len(), ref_ws.len(), "{mode}/{schedule} σ={sigma}");
+                for (a, b) in got.iter().zip(ref_ws) {
+                    assert_eq!(
+                        a.max_abs_diff(b),
+                        0.0,
+                        "{mode}/{schedule} σ={sigma}: model drifted under stragglers"
+                    );
+                }
+                let homog_bytes = rows
+                    .iter()
+                    .find(|r| r.sigma == 0.0 && r.mode == row.mode && r.schedule == row.schedule)
+                    .expect("homogeneous row recorded")
+                    .bytes;
+                assert_eq!(row.bytes, homog_bytes, "{mode}/{schedule} σ={sigma}: bytes drifted");
+            }
+            rows.push(row);
+        }
+
+        if sigma > 0.0 {
+            // The ordering the straggler model must produce: the full
+            // barrier pays the tail, round staleness hides most of it,
+            // and no heterogeneous run beats the homogeneous clock.
+            let find = |mode: &str, schedule: &str| {
+                rows.iter()
+                    .find(|r| r.sigma == sigma && r.mode == mode && r.schedule == schedule)
+                    .expect("row recorded")
+                    .sim_secs
+            };
+            let sync_het = find("sync", "-");
+            let semi_het = find("semisync", "-");
+            assert!(
+                sync_het >= semi_het,
+                "σ={sigma}: semisync {semi_het} did not beat sync {sync_het}"
+            );
+            assert!(
+                semi_het >= sync_homog_secs,
+                "σ={sigma}: semisync {semi_het} beat the homogeneous sync clock \
+                 {sync_homog_secs} — slack cannot outrun a homogeneous cluster"
+            );
+            let iter_het = find("iter-stale", "iid");
+            assert!(
+                sync_het >= iter_het,
+                "σ={sigma}: iter-staleness {iter_het} did not beat sync {sync_het}"
+            );
+        }
+    }
+
+    write_json(&json_path, &rows).map_err(dssfn::Error::Io)?;
+    eprintln!("wrote {json_path} ({} rows)", rows.len());
+    Ok(())
+}

@@ -1,0 +1,317 @@
+//! The CLI's single source of truth: one flag table that renders both
+//! the `dssfn` usage text ([`usage`]) and the committed flag reference
+//! `docs/CLI.md` ([`markdown`], printed by `dssfn cli-doc`).
+//!
+//! Because both artifacts are generated from [`FLAGS`] / [`COMMANDS`] /
+//! [`CONFLICTS`], the help text and the documentation cannot drift:
+//! `rust/tests/cli.rs` pins the committed `docs/CLI.md` byte-for-byte
+//! against [`markdown`], so adding a flag without regenerating the doc
+//! fails CI. Regenerate with:
+//!
+//! ```text
+//! cargo run --release -- cli-doc > docs/CLI.md
+//! ```
+
+/// The subcommands and their one-line purposes.
+pub const COMMANDS: &[(&str, &str)] = &[
+    ("train", "train the decentralized SSFN (session-driven: typed events, checkpoints, budgets)"),
+    ("central", "train the centralized baseline on the full data"),
+    ("sweep", "degree sweep over the circular topology (Fig. 4)"),
+    ("datasets", "list registered datasets"),
+    ("info", "show the resolved configuration without training"),
+    ("cli-doc", "print the generated CLI reference (docs/CLI.md)"),
+];
+
+/// One CLI flag: its value shape (empty = boolean switch), the commands
+/// it affects, its default, and a one-line description.
+pub struct Flag {
+    /// Flag name including the leading `--`.
+    pub name: &'static str,
+    /// Value placeholder (`""` for bare switches).
+    pub value: &'static str,
+    /// Space-separated commands the flag affects.
+    pub commands: &'static str,
+    /// Default when the flag is absent (`""` = none / off).
+    pub default: &'static str,
+    /// One-line description.
+    pub help: &'static str,
+}
+
+/// Every flag the binary accepts — the one table the usage text and
+/// `docs/CLI.md` are rendered from.
+pub const FLAGS: &[Flag] = &[
+    Flag { name: "--config", value: "FILE", commands: "train central sweep info", default: "",
+        help: "load a TOML experiment file first; later flags override it" },
+    Flag { name: "--dataset", value: "KEY", commands: "train central sweep info", default: "quickstart",
+        help: "dataset registry key (see `dssfn datasets`)" },
+    Flag { name: "--seed", value: "S", commands: "train central sweep info", default: "0xD55F",
+        help: "master seed: data, random matrices, comm schedules, stragglers" },
+    Flag { name: "--layers", value: "L", commands: "train central sweep info", default: "20 (5 for -small presets)",
+        help: "SSFN depth L" },
+    Flag { name: "--admm-iters", value: "K", commands: "train central sweep info", default: "100 (50 for -small presets)",
+        help: "ADMM iterations per layer K" },
+    Flag { name: "--mu0", value: "F", commands: "train central sweep info", default: "0.01",
+        help: "Lagrangian mu for the input-layer solve" },
+    Flag { name: "--mul", value: "F", commands: "train central sweep info", default: "1.0",
+        help: "Lagrangian mu for the hidden-layer solves" },
+    Flag { name: "--nodes", value: "M", commands: "train sweep info", default: "20 (10 for -small presets)",
+        help: "worker count M" },
+    Flag { name: "--degree", value: "D", commands: "train sweep info", default: "4 (2 for -small presets)",
+        help: "circular-topology degree d" },
+    Flag { name: "--degrees", value: "1,2,...", commands: "sweep", default: "1..=M/2",
+        help: "explicit degree list for the sweep" },
+    Flag { name: "--exact-consensus", value: "", commands: "train sweep info", default: "",
+        help: "idealized exact averaging instead of gossip (ablation)" },
+    Flag { name: "--schedule", value: "sync|semisync|lossy", commands: "train sweep info", default: "sync",
+        help: "communication fabric: synchronous, bounded-staleness, or lossy gossip" },
+    Flag { name: "--staleness", value: "S", commands: "train sweep info", default: "2 when semisync",
+        help: "semisync only: neighbour reads up to S rounds stale" },
+    Flag { name: "--loss-p", value: "P", commands: "train sweep info", default: "0.1 when lossy",
+        help: "lossy only: per-round, per-edge drop probability in [0,1)" },
+    Flag { name: "--adaptive-delta", value: "MAX", commands: "train sweep info", default: "",
+        help: "L-FGADMM adaptive consensus tolerance: loosen gossip delta up to MAX on cost plateaus" },
+    Flag { name: "--adaptive-period", value: "P", commands: "train sweep info", default: "1",
+        help: "L-FGADMM communication-period doubling cap (skips whole averaging calls on plateaus)" },
+    Flag { name: "--iter-staleness", value: "S", commands: "train sweep info", default: "0",
+        help: "bounded-staleness ADMM (Liang et al. 2020): updates read consensus state up to S iterations old" },
+    Flag { name: "--iter-schedule", value: "iid|fixed:D|oneslow:NODE:LAG", commands: "train sweep info", default: "iid",
+        help: "how staleness ages are assigned: seeded draws, a fixed lag, or one slow node" },
+    Flag { name: "--straggler-sigma", value: "F", commands: "train sweep info", default: "0",
+        help: "per-round lognormal latency heterogeneity (0 = the paper's homogeneous cluster)" },
+    Flag { name: "--straggler-seed", value: "N", commands: "train sweep info", default: "0",
+        help: "seed of the per-round, per-node straggler draw stream" },
+    Flag { name: "--straggler-corr", value: "R", commands: "train sweep info", default: "0",
+        help: "AR(1) persistence of slowness in [0,1]: 0 = transient spikes, 1 = fixed multipliers" },
+    Flag { name: "--backend", value: "native|pjrt", commands: "train info", default: "native",
+        help: "compute backend for the dense kernels" },
+    Flag { name: "--artifacts", value: "DIR", commands: "train info", default: "artifacts",
+        help: "HLO artifact directory for the PJRT backend" },
+    Flag { name: "--threads", value: "N", commands: "train sweep", default: "0 (auto)",
+        help: "worker threads (node fan-out first, leftovers to intra-node kernels)" },
+    Flag { name: "--no-curve", value: "", commands: "train sweep", default: "",
+        help: "skip per-iteration cost recording (throughput runs)" },
+    Flag { name: "--verbose", value: "", commands: "train", default: "",
+        help: "stream every typed StepEvent to stderr" },
+    Flag { name: "--csv", value: "PATH", commands: "train sweep", default: "",
+        help: "write the cost curve (train) or sweep rows (sweep) as CSV" },
+    Flag { name: "--checkpoint", value: "PATH", commands: "train", default: "",
+        help: "snapshot the full session state at every layer boundary" },
+    Flag { name: "--checkpoint-every", value: "K", commands: "train", default: "",
+        help: "additionally snapshot every K ADMM iterations (needs --checkpoint)" },
+    Flag { name: "--resume", value: "PATH", commands: "train", default: "",
+        help: "continue a checkpoint bit-identically (the file carries the run's configuration)" },
+    Flag { name: "--max-bytes", value: "N", commands: "train", default: "",
+        help: "stop after N communicated bytes (model stays well-formed)" },
+    Flag { name: "--max-sim-secs", value: "S", commands: "train", default: "",
+        help: "stop after S simulated seconds (compute + alpha-beta comm)" },
+    Flag { name: "--cost-plateau", value: "F", commands: "train", default: "",
+        help: "stop growing layers once the relative cost improvement falls below F" },
+];
+
+/// One row of the cross-knob rejection matrix: a knob, the
+/// configuration it is rejected under, and the token the error message
+/// names (flags a configuration does not read are errors, not no-ops).
+pub struct Conflict {
+    /// The offending knob (or knob combination).
+    pub knob: &'static str,
+    /// When it is rejected.
+    pub rejected_when: &'static str,
+    /// A token the error message is guaranteed to contain.
+    pub names: &'static str,
+}
+
+/// The rejection matrix `docs/CLI.md` documents and `rust/tests/cli.rs`
+/// exercises.
+pub const CONFLICTS: &[Conflict] = &[
+    Conflict { knob: "`--staleness`", rejected_when: "schedule is not `semisync`",
+        names: "semisync" },
+    Conflict { knob: "`--loss-p`", rejected_when: "schedule is not `lossy`",
+        names: "lossy" },
+    Conflict { knob: "`--schedule semisync|lossy`", rejected_when: "`--exact-consensus` is set",
+        names: "exact_consensus" },
+    Conflict { knob: "`--adaptive-delta`", rejected_when: "`--exact-consensus` is set",
+        names: "exact_consensus" },
+    Conflict { knob: "`--adaptive-delta`", rejected_when: "`--no-curve` is set (the controller steers off the cost curve)",
+        names: "record_cost_curve" },
+    Conflict { knob: "`--adaptive-period`", rejected_when: "`--adaptive-delta` is not set",
+        names: "adaptive_delta" },
+    Conflict { knob: "`--iter-staleness`", rejected_when: "`--exact-consensus` is set",
+        names: "exact_consensus" },
+    Conflict { knob: "`--iter-staleness`", rejected_when: "schedule is `semisync` or `lossy` (two resolutions of one relaxation)",
+        names: "staleness" },
+    Conflict { knob: "`--iter-staleness`", rejected_when: "S >= K (the last S iterations of a layer drain synchronously)",
+        names: "admm_iterations" },
+    Conflict { knob: "`--iter-staleness` + `--adaptive-period` > 1", rejected_when: "always (both skip consensus work per iteration)",
+        names: "period" },
+    Conflict { knob: "`--iter-schedule fixed:D|oneslow:...`", rejected_when: "`--iter-staleness` is 0, or the lag is outside `1..=S`",
+        names: "iter_staleness" },
+    Conflict { knob: "`--iter-schedule oneslow:NODE:LAG`", rejected_when: "NODE >= M",
+        names: "nodes" },
+    Conflict { knob: "`--iter-schedule`", rejected_when: "`--exact-consensus` is set",
+        names: "exact_consensus" },
+    Conflict { knob: "`--straggler-sigma`", rejected_when: "`--exact-consensus` is set",
+        names: "exact_consensus" },
+    Conflict { knob: "`--straggler-seed`", rejected_when: "`--straggler-sigma` is 0 (nothing is drawn)",
+        names: "straggler_sigma" },
+    Conflict { knob: "`--straggler-corr`", rejected_when: "`--straggler-sigma` is 0 (no slowness to correlate)",
+        names: "straggler_sigma" },
+    Conflict { knob: "`--checkpoint-every`", rejected_when: "`--checkpoint` is not set, or K = 0",
+        names: "checkpoint" },
+    Conflict { knob: "any training flag", rejected_when: "`--resume` is set (the checkpoint carries the configuration)",
+        names: "cannot be combined" },
+    Conflict { knob: "`--backend pjrt`", rejected_when: "`--resume` is set (checkpoints do not record a backend)",
+        names: "native" },
+];
+
+/// Whether `key` (without the leading `--`) is a bare switch, derived
+/// from the flag table (`value == ""`).
+pub fn is_switch(key: &str) -> bool {
+    FLAGS
+        .iter()
+        .any(|f| f.value.is_empty() && f.name.strip_prefix("--") == Some(key))
+}
+
+/// The usage text the binary prints — rendered from the same table as
+/// [`markdown`], so help and docs cannot drift.
+pub fn usage() -> String {
+    let mut s = String::from("usage: dssfn <command> [--flag value ...]\n\ncommands:\n");
+    for (name, purpose) in COMMANDS {
+        s.push_str(&format!("  {name:<9} {purpose}\n"));
+    }
+    s.push_str("\nflags (docs/CLI.md has the full reference and the conflict rules):\n");
+    for f in FLAGS {
+        let head = if f.value.is_empty() {
+            f.name.to_string()
+        } else {
+            format!("{} {}", f.name, f.value)
+        };
+        s.push_str(&format!("  {head:<42} [{}] {}\n", f.commands, f.help));
+    }
+    let _ = s.pop(); // callers add their own trailing newline
+    s
+}
+
+/// Escape `|` for GitHub-flavored-Markdown table cells (a pipe splits
+/// the cell even inside a backtick code span unless written as `\|`).
+fn escape_cell(s: &str) -> String {
+    s.replace('|', "\\|")
+}
+
+/// Render `docs/CLI.md` — the committed flag reference, pinned
+/// byte-for-byte against this function by `rust/tests/cli.rs`.
+pub fn markdown() -> String {
+    let mut s = String::new();
+    s.push_str("# `dssfn` CLI reference\n\n");
+    s.push_str(
+        "Generated from the flag table in `rust/src/clidoc.rs` — the same table\n\
+         that renders the binary's usage text, so this document cannot drift\n\
+         from the code. Regenerate after editing the table:\n\n\
+         ```sh\n\
+         cargo run --release -- cli-doc > docs/CLI.md\n\
+         ```\n\n\
+         `rust/tests/cli.rs` pins this file byte-for-byte against the renderer.\n\n",
+    );
+    s.push_str("## Commands\n\n| command | purpose |\n|---|---|\n");
+    for (name, purpose) in COMMANDS {
+        s.push_str(&format!("| `{name}` | {purpose} |\n"));
+    }
+    s.push_str(
+        "\n## Flags\n\nThe *commands* column lists where a flag has effect. Flags a\n\
+         configuration does not read are **errors, not silent no-ops** — see the\n\
+         rejection matrix below.\n\n",
+    );
+    s.push_str("| flag | value | commands | default | description |\n|---|---|---|---|---|\n");
+    for f in FLAGS {
+        let value = if f.value.is_empty() {
+            "switch".to_string()
+        } else {
+            format!("`{}`", escape_cell(f.value))
+        };
+        let default = if f.default.is_empty() {
+            "—".to_string()
+        } else {
+            format!("`{}`", escape_cell(f.default))
+        };
+        s.push_str(&format!(
+            "| `{}` | {} | {} | {} | {} |\n",
+            f.name,
+            value,
+            f.commands,
+            default,
+            escape_cell(f.help)
+        ));
+    }
+    s.push_str(
+        "\n## Cross-knob rejection matrix\n\nEvery row is enforced by `ExperimentConfig::comm_config()` (the one\n\
+         validation path `train`, `sweep` and `info` share — `info` rejects\n\
+         exactly what `train` rejects) and exercised by `rust/tests/cli.rs`.\n\n",
+    );
+    s.push_str("| knob | rejected when | the error names |\n|---|---|---|\n");
+    for c in CONFLICTS {
+        s.push_str(&format!(
+            "| {} | {} | `{}` |\n",
+            escape_cell(c.knob),
+            escape_cell(c.rejected_when),
+            escape_cell(c.names)
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn switches_are_derived_from_the_table() {
+        assert!(is_switch("exact-consensus"));
+        assert!(is_switch("no-curve"));
+        assert!(is_switch("verbose"));
+        assert!(!is_switch("schedule"));
+        assert!(!is_switch("dataset"));
+        assert!(!is_switch("bogus"));
+    }
+
+    #[test]
+    fn usage_and_markdown_cover_every_flag_and_command() {
+        let usage = usage();
+        let md = markdown();
+        for f in FLAGS {
+            assert!(usage.contains(f.name), "usage missing {}", f.name);
+            assert!(md.contains(f.name), "markdown missing {}", f.name);
+        }
+        for (name, _) in COMMANDS {
+            assert!(usage.contains(name), "usage missing command {name}");
+            assert!(md.contains(name), "markdown missing command {name}");
+        }
+        // The rejection matrix is rendered in full.
+        for c in CONFLICTS {
+            assert!(md.contains(c.names), "matrix missing {}", c.names);
+        }
+    }
+
+    #[test]
+    fn flag_table_is_well_formed() {
+        for f in FLAGS {
+            assert!(f.name.starts_with("--"), "{} lacks --", f.name);
+            assert!(!f.help.is_empty());
+            assert!(!f.commands.is_empty());
+            // Commands must come from the command table.
+            for c in f.commands.split(' ') {
+                assert!(
+                    COMMANDS.iter().any(|(n, _)| *n == c),
+                    "{}: unknown command '{c}'",
+                    f.name
+                );
+            }
+        }
+        // No duplicate flag names.
+        for (i, f) in FLAGS.iter().enumerate() {
+            assert!(
+                FLAGS.iter().skip(i + 1).all(|g| g.name != f.name),
+                "duplicate flag {}",
+                f.name
+            );
+        }
+    }
+}

@@ -31,8 +31,10 @@
 //! adaptive_delta = 1e-4    # enable adaptive δ with this max_delta
 //! adaptive_period = 4      # L-FGADMM period doubling cap (needs adaptive_delta)
 //! iter_staleness = 2       # ADMM updates vs consensus up to s iterations stale
-//! straggler_sigma = 0.5    # lognormal per-node α heterogeneity (0 = homogeneous)
-//! straggler_seed = 7       # seed of the per-node straggler draw
+//! iter_schedule = "iid"    # staleness ages: "iid", "fixed:D", "oneslow:NODE:LAG"
+//! straggler_sigma = 0.5    # lognormal per-round α heterogeneity (0 = homogeneous)
+//! straggler_seed = 7       # seed of the per-round straggler draw
+//! straggler_corr = 0.8     # AR(1) persistence of slowness (0 = iid, 1 = fixed)
 //! alpha = 0.001
 //! beta = 125000000.0
 //!
@@ -45,7 +47,8 @@
 use crate::coordinator::{ConsensusMode, TrainOptions};
 use crate::data::{lookup, ClassificationTask};
 use crate::network::{
-    AdaptiveDeltaPolicy, CommSchedule, LatencyModel, NodeLatency, Topology, WeightRule,
+    AdaptiveDeltaPolicy, CommSchedule, LatencyModel, NodeLatency, StalenessSchedule, Topology,
+    WeightRule,
 };
 use crate::ssfn::{SsfnArchitecture, TrainHyper};
 use crate::{Error, Result};
@@ -105,11 +108,20 @@ pub struct ExperimentConfig {
     /// Iteration-level staleness bound for the ADMM loop (0 = off;
     /// requires the `"sync"` schedule).
     pub iter_staleness: usize,
-    /// Lognormal σ of the per-node straggler latency model (0 =
+    /// How iteration-staleness ages are assigned: `"iid"` (seeded
+    /// per-node draws, the default), `"fixed:D"` (every node reads
+    /// exactly D-old state) or `"oneslow:NODE:LAG"` (one slow node at
+    /// constant lag). Requires `iter_staleness > 0` for the non-default
+    /// forms.
+    pub iter_schedule: String,
+    /// Lognormal σ of the per-round straggler latency model (0 =
     /// homogeneous, the paper's cost model).
     pub straggler_sigma: f64,
-    /// Seed of the per-node straggler draw.
+    /// Seed of the per-round, per-node straggler draw stream.
     pub straggler_seed: u64,
+    /// AR(1) persistence of each node's slowness in `[0, 1]`: 0 draws
+    /// every round independently, 1 freezes the round-0 multipliers.
+    pub straggler_corr: f64,
     /// Use exact averaging instead of gossip (ablation).
     pub exact_consensus: bool,
     /// α of the latency model (s/round).
@@ -146,8 +158,10 @@ impl Default for ExperimentConfig {
             adaptive_delta: None,
             adaptive_period: 1,
             iter_staleness: 0,
+            iter_schedule: "iid".into(),
             straggler_sigma: 0.0,
             straggler_seed: 0,
+            straggler_corr: 0.0,
             exact_consensus: false,
             alpha: 1e-3,
             beta: 125e6,
@@ -224,8 +238,13 @@ impl ExperimentConfig {
             "network.adaptive_delta" => self.adaptive_delta = Some(num(key, value)?),
             "network.adaptive_period" => self.adaptive_period = num(key, value)?,
             "network.iter_staleness" => self.iter_staleness = num(key, value)?,
+            "network.iter_schedule" => {
+                parse_iter_schedule(value)?; // validate the shape early
+                self.iter_schedule = value.to_string();
+            }
             "network.straggler_sigma" => self.straggler_sigma = num(key, value)?,
             "network.straggler_seed" => self.straggler_seed = num(key, value)?,
+            "network.straggler_corr" => self.straggler_corr = num(key, value)?,
             "network.exact_consensus" => self.exact_consensus = num(key, value)?,
             "network.alpha" => self.alpha = num(key, value)?,
             "network.beta" => self.beta = num(key, value)?,
@@ -345,6 +364,14 @@ impl ExperimentConfig {
                     .into(),
             ));
         }
+        if self.straggler_corr != 0.0 && self.straggler_sigma == 0.0 {
+            return Err(Error::Config(
+                "straggler_corr needs straggler_sigma > 0 (a homogeneous cluster \
+                 has no slowness to correlate)"
+                    .into(),
+            ));
+        }
+        let iter_schedule = parse_iter_schedule(&self.iter_schedule)?;
         let adaptive_delta = match self.adaptive_delta {
             Some(max_delta) => Some(AdaptiveDeltaPolicy {
                 max_delta,
@@ -380,6 +407,13 @@ impl ExperimentConfig {
                         .into(),
                 ));
             }
+            if iter_schedule != StalenessSchedule::Iid {
+                return Err(Error::Config(
+                    "iter_schedule applies to gossip consensus only \
+                     (exact_consensus is set)"
+                        .into(),
+                ));
+            }
             if self.straggler_sigma != 0.0 {
                 return Err(Error::Config(
                     "straggler_sigma applies to gossip consensus only \
@@ -394,11 +428,18 @@ impl ExperimentConfig {
             node_latency: NodeLatency {
                 sigma: self.straggler_sigma,
                 seed: self.straggler_seed,
+                corr: self.straggler_corr,
             },
             iter_staleness: self.iter_staleness,
+            iter_schedule,
         };
         if !self.exact_consensus {
-            comm.validate_with_iterations(self.delta, self.record_cost_curve, self.admm_iterations)?;
+            comm.validate_with_iterations(
+                self.delta,
+                self.record_cost_curve,
+                self.admm_iterations,
+                self.nodes,
+            )?;
         }
         Ok(comm)
     }
@@ -450,6 +491,7 @@ impl ExperimentConfig {
                 .comm_fabric(comm.schedule)
                 .node_latency(comm.node_latency)
                 .iter_staleness(comm.iter_staleness)
+                .iter_schedule(comm.iter_schedule)
         };
         if let Some(policy) = comm.adaptive_delta {
             b = b.adaptive_delta(policy);
@@ -467,6 +509,39 @@ impl ExperimentConfig {
 /// this list; [`ExperimentConfig::comm_schedule`] holds the one
 /// name-to-variant mapping).
 pub const SCHEDULE_NAMES: [&str; 3] = ["sync", "semisync", "lossy"];
+
+/// Parse the `iter_schedule` / `--iter-schedule` forms — `"iid"`,
+/// `"fixed:D"`, `"oneslow:NODE:LAG"` — into a typed
+/// [`StalenessSchedule`]. The one place the string syntax lives (TOML
+/// and the CLI share it).
+pub fn parse_iter_schedule(text: &str) -> Result<StalenessSchedule> {
+    fn num(part: &str, what: &str) -> Result<usize> {
+        part.parse().map_err(|_| {
+            Error::Config(format!("bad {what} '{part}' in iter_schedule"))
+        })
+    }
+    if text == "iid" {
+        return Ok(StalenessSchedule::Iid);
+    }
+    if let Some(rest) = text.strip_prefix("fixed:") {
+        return Ok(StalenessSchedule::FixedLag(num(rest, "fixed-lag delay")?));
+    }
+    if let Some(rest) = text.strip_prefix("oneslow:") {
+        if let Some((node, lag)) = rest.split_once(':') {
+            return Ok(StalenessSchedule::OneSlow {
+                node: num(node, "one-slow node")?,
+                lag: num(lag, "one-slow lag")?,
+            });
+        }
+        return Err(Error::Config(format!(
+            "one-slow schedule needs both a node and a lag \
+             ('oneslow:NODE:LAG'), got '{text}'"
+        )));
+    }
+    Err(Error::Config(format!(
+        "iter_schedule must be 'iid', 'fixed:D' or 'oneslow:NODE:LAG', got '{text}'"
+    )))
+}
 
 fn unknown_schedule(got: &str) -> Error {
     Error::Config(format!(
@@ -770,7 +845,7 @@ exact_consensus = true
         .unwrap();
         let comm = cfg.comm_config().unwrap();
         assert_eq!(comm.iter_staleness, 2);
-        assert_eq!(comm.node_latency, NodeLatency { sigma: 0.5, seed: 9 });
+        assert_eq!(comm.node_latency, NodeLatency { sigma: 0.5, seed: 9, corr: 0.0 });
         let cfg = ExperimentConfig::from_toml(
             "[network]\nadaptive_delta = 1e-4\nadaptive_period = 4",
         )
@@ -788,6 +863,75 @@ exact_consensus = true
         )
         .unwrap();
         assert!(cfg.session_builder().is_ok());
+    }
+
+    #[test]
+    fn straggler_corr_and_iter_schedule_keys_parse_and_validate() {
+        // corr lowers into the typed config...
+        let cfg = ExperimentConfig::from_toml(
+            "[network]\nstraggler_sigma = 0.5\nstraggler_corr = 0.8",
+        )
+        .unwrap();
+        let comm = cfg.comm_config().unwrap();
+        assert_eq!(comm.node_latency.corr, 0.8);
+        // ... needs a sigma to correlate ...
+        let cfg = ExperimentConfig::from_toml("[network]\nstraggler_corr = 0.8").unwrap();
+        let err = cfg.comm_config().unwrap_err();
+        assert!(err.to_string().contains("straggler_sigma"), "{err}");
+        // ... and must sit in [0, 1].
+        let cfg = ExperimentConfig::from_toml(
+            "[network]\nstraggler_sigma = 0.5\nstraggler_corr = 1.5",
+        )
+        .unwrap();
+        assert!(cfg.comm_config().is_err());
+
+        // iter_schedule string forms.
+        assert_eq!(parse_iter_schedule("iid").unwrap(), StalenessSchedule::Iid);
+        assert_eq!(
+            parse_iter_schedule("fixed:2").unwrap(),
+            StalenessSchedule::FixedLag(2)
+        );
+        assert_eq!(
+            parse_iter_schedule("oneslow:3:2").unwrap(),
+            StalenessSchedule::OneSlow { node: 3, lag: 2 }
+        );
+        assert!(parse_iter_schedule("psync").is_err());
+        assert!(parse_iter_schedule("fixed:x").is_err());
+        assert!(parse_iter_schedule("oneslow:3").is_err());
+        // Malformed forms are rejected at TOML-apply time already.
+        assert!(ExperimentConfig::from_toml("[network]\niter_schedule = \"nope\"").is_err());
+        // A non-default schedule rides iter_staleness...
+        let cfg = ExperimentConfig::from_toml("[network]\niter_schedule = \"fixed:2\"").unwrap();
+        let err = cfg.comm_config().unwrap_err();
+        assert!(err.to_string().contains("iter_staleness"), "{err}");
+        // ... its lag must respect the bound ...
+        let cfg = ExperimentConfig::from_toml(
+            "[network]\niter_staleness = 2\niter_schedule = \"fixed:3\"",
+        )
+        .unwrap();
+        assert!(cfg.comm_config().is_err());
+        // ... the one-slow node must exist ...
+        let cfg = ExperimentConfig::from_toml(
+            "[network]\nnodes = 4\niter_staleness = 2\niter_schedule = \"oneslow:9:2\"",
+        )
+        .unwrap();
+        assert!(cfg.comm_config().is_err());
+        // ... and valid forms lower into the builder.
+        let cfg = ExperimentConfig::from_toml(
+            "[experiment]\ndataset = \"quickstart\"\n\
+             [network]\niter_staleness = 2\niter_schedule = \"fixed:2\"",
+        )
+        .unwrap();
+        let comm = cfg.comm_config().unwrap();
+        assert_eq!(comm.iter_schedule, StalenessSchedule::FixedLag(2));
+        assert!(cfg.session_builder().is_ok());
+        // Exact consensus refuses the schedule knob.
+        let cfg = ExperimentConfig::from_toml(
+            "[network]\nexact_consensus = true\niter_schedule = \"fixed:2\"",
+        )
+        .unwrap();
+        let err = cfg.comm_config().unwrap_err();
+        assert!(err.to_string().contains("exact_consensus"), "{err}");
     }
 
     #[test]

@@ -32,7 +32,7 @@ use crate::linalg::Matrix;
 use crate::metrics::LayerRecord;
 use crate::network::{
     AdaptiveDeltaPolicy, CommConfig, CommSchedule, CommSnapshot, LatencyModel, NodeLatency,
-    Topology, WeightRule,
+    StalenessSchedule, Topology, WeightRule,
 };
 use crate::ssfn::{SsfnArchitecture, TrainHyper};
 use crate::{Error, Result};
@@ -40,16 +40,24 @@ use std::io;
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"DSSFNCKP";
-/// Version 3 added the straggler (per-node latency) model, the
-/// iteration-staleness configuration + cursor + history ring, and the
-/// adaptive controller's communication period. Version 2 added the
-/// communication-fabric configuration (schedule, adaptive-δ policy) and
-/// its runtime cursors (`fabric_calls`, `current_delta`). Writers emit
-/// the current version; the reader upgrades v1 (pre-fabric) and v2
-/// snapshots in place by defaulting the missing fields (default
-/// synchronous `CommConfig`, zero cursors, period 1) — a v1/v2 resume
-/// is exactly the run the file described.
-const VERSION: u32 = 3;
+/// Version 4 added the per-round straggler critical path: the AR(1)
+/// temporal-correlation knob (`NodeLatency::corr`), the iteration
+/// staleness age schedule ([`StalenessSchedule`]), and the straggler
+/// sampler's runtime state (round cursor + AR(1) vector) so per-round
+/// latency draws resume bit-exactly. Version 3 added the (then
+/// aggregate) straggler model, the iteration-staleness configuration +
+/// cursor + history ring, and the adaptive controller's communication
+/// period. Version 2 added the communication-fabric configuration
+/// (schedule, adaptive-δ policy) and its runtime cursors
+/// (`fabric_calls`, `current_delta`). Writers emit the current version;
+/// the reader upgrades v1–v3 snapshots in place by defaulting the
+/// missing fields (default synchronous `CommConfig`, zero cursors,
+/// period 1, `corr = 0`, i.i.d. schedule, fresh sampler state) — a
+/// v1/v2 resume is exactly the run the file described, and a v3
+/// heterogeneous resume replays the run under the per-round clock model
+/// from round 0 (the aggregate charging it was written under no longer
+/// exists; model weights and traffic are unaffected either way).
+const VERSION: u32 = 4;
 
 /// Where inside the layer state machine the snapshot was taken.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -107,6 +115,14 @@ pub struct Checkpoint {
     /// consensus averages, flat) — carried verbatim: unlike every other
     /// derived quantity it cannot be rebuilt from the seed.
     pub(crate) stale_hist: Vec<Matrix>,
+    /// Straggler sampler round cursor (rounds drawn so far); 0 for
+    /// homogeneous runs.
+    pub(crate) straggler_cursor: u64,
+    /// Straggler sampler AR(1) state (one latent per node); empty for
+    /// homogeneous runs. Carried verbatim: under `corr > 0` the state
+    /// depends on every past round, so rebuilding it would mean
+    /// replaying the whole draw history.
+    pub(crate) straggler_g: Vec<f64>,
     pub(crate) comm_before: CommSnapshot,
     pub(crate) ledger_total: CommSnapshot,
     pub(crate) sim_secs: f64,
@@ -244,6 +260,21 @@ impl Checkpoint {
                 w.u64(self.comm.node_latency.seed)?;
                 w.u64(self.comm.iter_staleness as u64)?;
             }
+            if version >= 4 {
+                w.f64(self.comm.node_latency.corr)?;
+                match self.comm.iter_schedule {
+                    StalenessSchedule::Iid => w.u8(0)?,
+                    StalenessSchedule::FixedLag(d) => {
+                        w.u8(1)?;
+                        w.u64(d as u64)?;
+                    }
+                    StalenessSchedule::OneSlow { node, lag } => {
+                        w.u8(2)?;
+                        w.u64(node as u64)?;
+                        w.u64(lag as u64)?;
+                    }
+                }
+            }
         }
         // Growth policy, task fingerprint.
         w.opt_f64(self.growth)?;
@@ -279,6 +310,10 @@ impl Checkpoint {
             w.u64(self.iters_since_comm)?;
             w.u64(self.iter_stale_cursor)?;
             w.matrices(&self.stale_hist)?;
+        }
+        if version >= 4 {
+            w.u64(self.straggler_cursor)?;
+            w.f64s(&self.straggler_g)?;
         }
         w.snapshot(&self.comm_before)?;
         w.snapshot(&self.ledger_total)?;
@@ -388,15 +423,33 @@ impl Checkpoint {
                 }),
                 t => return Err(Error::Checkpoint(format!("bad adaptive-δ tag {t}"))),
             };
-            let (node_latency, iter_staleness) = if version >= 3 {
+            let (mut node_latency, iter_staleness) = if version >= 3 {
                 (
-                    NodeLatency { sigma: r.f64()?, seed: r.u64()? },
+                    NodeLatency { sigma: r.f64()?, seed: r.u64()?, corr: 0.0 },
                     r.usize_()?,
                 )
             } else {
                 (NodeLatency::default(), 0)
             };
-            CommConfig { schedule, adaptive_delta, node_latency, iter_staleness }
+            // v3 predates the AR(1) knob and the age schedule: corr 0
+            // (i.i.d. rounds) and i.i.d. ages are the draws every v3
+            // run performed.
+            let iter_schedule = if version >= 4 {
+                node_latency.corr = r.f64()?;
+                match r.u8()? {
+                    0 => StalenessSchedule::Iid,
+                    1 => StalenessSchedule::FixedLag(r.usize_()?),
+                    2 => StalenessSchedule::OneSlow { node: r.usize_()?, lag: r.usize_()? },
+                    t => {
+                        return Err(Error::Checkpoint(format!(
+                            "unknown staleness-schedule tag {t}"
+                        )))
+                    }
+                }
+            } else {
+                StalenessSchedule::Iid
+            };
+            CommConfig { schedule, adaptive_delta, node_latency, iter_staleness, iter_schedule }
         } else {
             CommConfig::default()
         };
@@ -440,6 +493,13 @@ impl Checkpoint {
         } else {
             (1, 0, 0, Vec::new())
         };
+        // v1–v3 carried no sampler state: the per-round straggler clock
+        // (when heterogeneous) restarts its draw stream at round 0.
+        let (straggler_cursor, straggler_g) = if version >= 4 {
+            (r.u64()?, r.f64s()?)
+        } else {
+            (0, Vec::new())
+        };
         let comm_before = r.snapshot()?;
         let ledger_total = r.snapshot()?;
         let sim_secs = r.f64()?;
@@ -481,6 +541,8 @@ impl Checkpoint {
             iters_since_comm,
             iter_stale_cursor,
             stale_hist,
+            straggler_cursor,
+            straggler_g,
             comm_before,
             ledger_total,
             sim_secs,
@@ -728,8 +790,9 @@ mod tests {
                     loosen: 10.0,
                     period: 4,
                 }),
-                node_latency: NodeLatency { sigma: 0.25, seed: 99 },
+                node_latency: NodeLatency { sigma: 0.25, seed: 99, corr: 0.5 },
                 iter_staleness: 0,
+                iter_schedule: StalenessSchedule::Iid,
             },
             growth: Some(0.25),
             dataset: "oracle-toy".into(),
@@ -758,6 +821,8 @@ mod tests {
             iters_since_comm: 1,
             iter_stale_cursor: 12,
             stale_hist: vec![Matrix::from_fn(3, 3, |r, c| (r + 2 * c) as f64 * 0.25)],
+            straggler_cursor: 44,
+            straggler_g: vec![0.25, -1.5],
             comm_before: CommSnapshot { messages: 10, bytes: 80, rounds: 5, scalars: 10 },
             ledger_total: CommSnapshot { messages: 20, bytes: 160, rounds: 10, scalars: 20 },
             sim_secs: 1.25,
@@ -796,6 +861,8 @@ mod tests {
         assert_eq!(back.iter_stale_cursor, 12);
         assert_eq!(back.stale_hist.len(), 1);
         assert_eq!(back.stale_hist[0].max_abs_diff(&ck.stale_hist[0]), 0.0);
+        assert_eq!(back.straggler_cursor, 44);
+        assert_eq!(back.straggler_g, ck.straggler_g);
         assert_eq!(back.growth, ck.growth);
         assert_eq!(back.train_checksum, ck.train_checksum);
         assert_eq!(back.dataset(), "oracle-toy");
@@ -833,10 +900,30 @@ mod tests {
             ck.comm = CommConfig {
                 schedule,
                 adaptive_delta: adaptive,
-                node_latency: NodeLatency { sigma: 1.5, seed: 4 },
+                node_latency: NodeLatency { sigma: 1.5, seed: 4, corr: 0.25 },
                 iter_staleness: 3,
+                iter_schedule: StalenessSchedule::Iid,
             };
             let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+            assert_eq!(back.comm, ck.comm);
+        }
+    }
+
+    #[test]
+    fn roundtrip_covers_every_staleness_schedule_variant() {
+        for iter_schedule in [
+            StalenessSchedule::Iid,
+            StalenessSchedule::FixedLag(2),
+            StalenessSchedule::OneSlow { node: 1, lag: 3 },
+        ] {
+            let mut ck = sample();
+            ck.comm = CommConfig {
+                iter_staleness: 3,
+                iter_schedule,
+                ..ck.comm
+            };
+            let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+            assert_eq!(back.comm.iter_schedule, iter_schedule);
             assert_eq!(back.comm, ck.comm);
         }
     }
@@ -911,6 +998,8 @@ mod tests {
         ck.iters_since_comm = 0;
         ck.iter_stale_cursor = 0;
         ck.stale_hist = Vec::new();
+        ck.straggler_cursor = 0;
+        ck.straggler_g = Vec::new();
         ck
     }
 
@@ -968,10 +1057,13 @@ mod tests {
         });
         ck.comm.node_latency = NodeLatency::default();
         ck.comm.iter_staleness = 0;
+        ck.comm.iter_schedule = StalenessSchedule::Iid;
         ck.current_period = 1;
         ck.iters_since_comm = 0;
         ck.iter_stale_cursor = 0;
         ck.stale_hist = Vec::new();
+        ck.straggler_cursor = 0;
+        ck.straggler_g = Vec::new();
         let mut buf = Vec::new();
         ck.write_versioned(&mut buf, 2).unwrap();
         let back = Checkpoint::from_bytes(&buf).unwrap();
@@ -980,6 +1072,36 @@ mod tests {
         assert_eq!(back.current_delta.to_bits(), 1e-7f64.to_bits());
         assert_eq!(back.current_period, 1);
         assert!(back.stale_hist.is_empty());
+        assert_eq!(back.straggler_cursor, 0);
+        assert!(back.straggler_g.is_empty());
+    }
+
+    #[test]
+    fn v3_checkpoints_upgrade_with_iid_schedule_and_fresh_sampler() {
+        // A v3 run could carry a straggler sigma/seed and iteration
+        // staleness, but no AR(1) corr, no age schedule and no sampler
+        // state (its straggler charging was aggregate, not per-round).
+        let mut ck = sample();
+        ck.comm.node_latency = NodeLatency { sigma: 0.25, seed: 99, corr: 0.0 };
+        ck.comm.iter_staleness = 2;
+        ck.comm.iter_schedule = StalenessSchedule::Iid;
+        ck.stale_hist = vec![Matrix::zeros(3, 3); 2 * 2];
+        ck.straggler_cursor = 0;
+        ck.straggler_g = Vec::new();
+        let mut buf = Vec::new();
+        ck.write_versioned(&mut buf, 3).unwrap();
+        assert_eq!(buf[8], 3); // really a v3 stream
+        assert!(buf.len() < ck.to_bytes().len());
+        let back = Checkpoint::from_bytes(&buf).unwrap();
+        assert_eq!(back.comm, ck.comm);
+        assert_eq!(back.comm.node_latency.corr, 0.0);
+        assert_eq!(back.comm.iter_schedule, StalenessSchedule::Iid);
+        assert_eq!(back.fabric_calls, ck.fabric_calls);
+        assert_eq!(back.iter_stale_cursor, ck.iter_stale_cursor);
+        assert_eq!(back.stale_hist.len(), 4);
+        // The sampler restarts at round 0 on resume.
+        assert_eq!(back.straggler_cursor, 0);
+        assert!(back.straggler_g.is_empty());
     }
 
     #[test]

@@ -35,6 +35,7 @@ use crate::linalg::Matrix;
 use crate::metrics::{error_db, LayerRecord, TrainReport};
 use crate::network::{
     CommConfig, CommFabric, CommLedger, CommSchedule, CommSnapshot, GossipEngine, MixingMatrix,
+    StalenessSchedule,
 };
 use crate::runtime::ComputeBackend;
 use crate::session::{
@@ -207,15 +208,25 @@ impl<'t> DssfnAlgorithm<'t> {
                     delta,
                     opts.record_cost_curve,
                     hyper.admm_iterations,
+                    m,
                 )?;
                 let mix = MixingMatrix::build(&opts.topology, opts.weight_rule)?;
                 let mut engine = GossipEngine::new(mix, Arc::clone(&ledger), opts.latency);
-                // Heterogeneous clusters: the simulated clock charges the
-                // max node on barriers and the median on relaxed rounds.
-                // The profile is a pure function of (node-latency seed,
-                // M), so restored runs replay identical charges.
+                // A OneSlow staleness schedule earns barrier slack for
+                // the lagged node only; the cap profile is pure config
+                // and is rebuilt (not checkpointed) on restore.
+                if let Some(slack) = comm.iter_schedule.node_slack(m) {
+                    engine.set_node_slack(slack);
+                }
+                // Heterogeneous clusters: every round samples each
+                // node's latency (seeded AR(1) lognormal) and the clock
+                // charges the round's critical path — max node on
+                // barriers, slack-adjusted path on relaxed rounds. The
+                // trajectory is a pure function of (node-latency seed,
+                // corr, M, round cursor), so restored runs replay
+                // identical charges through the checkpointed cursor.
                 if comm.node_latency.is_heterogeneous() {
-                    engine.set_straggler(comm.node_latency.profile(m));
+                    engine.set_straggler(comm.node_latency);
                 }
                 let comm_seed = SplitMix64::new(seed ^ 0x636f_6d6d_5eed).next_u64();
                 Some(comm.schedule.build_fabric(engine, comm_seed)?)
@@ -224,6 +235,7 @@ impl<'t> DssfnAlgorithm<'t> {
                 if comm.schedule != CommSchedule::Synchronous
                     || comm.adaptive_delta.is_some()
                     || comm.iter_staleness > 0
+                    || comm.iter_schedule != StalenessSchedule::Iid
                     || comm.node_latency.is_heterogeneous()
                 {
                     return Err(Error::Config(
@@ -256,12 +268,9 @@ impl<'t> DssfnAlgorithm<'t> {
                         if comm.adaptive_delta.is_some() {
                             s.push_str(" adaptive-δ");
                         }
-                        if comm.iter_staleness > 0 {
-                            s.push_str(&format!(" iter-stale(s={})", comm.iter_staleness));
-                        }
-                        if comm.node_latency.is_heterogeneous() {
-                            s.push_str(&format!(" straggler(σ={})", comm.node_latency.sigma));
-                        }
+                        // Shared with `dssfn info` (CommConfig owns the
+                        // formatter, so report and info cannot drift).
+                        s.push_str(&comm.relaxation_tokens());
                         s
                     }
                 },
@@ -385,6 +394,14 @@ impl<'t> DssfnAlgorithm<'t> {
             // Fast-forward the schedule cursor so seeded schedules
             // (staleness draws, edge drops) replay bit-identically.
             fab.set_calls(ck.fabric_calls);
+            // ... and the straggler sampler's round cursor + AR(1)
+            // state, so per-round latency draws continue bit-exactly.
+            // (v1–v3 files carry none: the sampler restarts at round 0,
+            // which is the only state those formats could describe.)
+            if ck.comm.node_latency.is_heterogeneous() && !ck.straggler_g.is_empty() {
+                fab.engine()
+                    .restore_straggler_state(ck.straggler_cursor, ck.straggler_g.clone())?;
+            }
         }
         alg.current_delta = ck.current_delta;
         if ck.current_period == 0 {
@@ -600,7 +617,11 @@ impl<'t> DssfnAlgorithm<'t> {
                         *delta
                     };
                     let (rounds, bytes) = if relaxed_iter {
-                        fab.average_relaxed(&mut self.s_vals, eff_delta, s)?
+                        // The barrier slack the clock may claim is the
+                        // largest age the schedule can produce (s for
+                        // i.i.d. draws, the configured lag otherwise).
+                        let slack = self.comm.iter_schedule.clock_slack(s);
+                        fab.average_relaxed(&mut self.s_vals, eff_delta, slack)?
                     } else {
                         fab.average(&mut self.s_vals, eff_delta)?
                     };
@@ -626,15 +647,27 @@ impl<'t> DssfnAlgorithm<'t> {
         } else if s > 0 {
             // Iteration-level bounded staleness (Liang et al. 2020):
             // each node projects a consensus average up to `s` ADMM
-            // iterations old. The per-node draw is a pure function of
-            // (iter seed, cursor, node order), so runs — and checkpoint
-            // resumes through the cursor — replay identical schedules.
+            // iterations old. Under the Iid schedule the per-node draw
+            // is a pure function of (iter seed, cursor, node order), so
+            // runs — and checkpoint resumes through the cursor — replay
+            // identical schedules; FixedLag and OneSlow consume no
+            // randomness at all (Liang et al.'s fixed-delay sweeps).
             // Reads never reach before the layer's first averaging.
             let mut rng =
                 Xoshiro256StarStar::seed_from_u64(self.iter_seed).derive(self.iter_stale_cursor);
             for (i, st) in self.states.iter_mut().enumerate() {
                 let a = if relaxed_iter {
-                    rng.next_below(s + 1).min(k)
+                    match self.comm.iter_schedule {
+                        StalenessSchedule::Iid => rng.next_below(s + 1).min(k),
+                        StalenessSchedule::FixedLag(d) => d.min(k),
+                        StalenessSchedule::OneSlow { node, lag } => {
+                            if i == node {
+                                lag.min(k)
+                            } else {
+                                0
+                            }
+                        }
+                    }
                 } else {
                     0
                 };
@@ -935,6 +968,14 @@ impl Algorithm for DssfnAlgorithm<'_> {
             Phase::Prepare => Vec::new(),
             _ => self.stale_hist.clone(),
         };
+        // The straggler sampler's slack window never spans averaging
+        // calls and checkpoints land between calls, so (cursor, AR(1)
+        // state) is its complete state.
+        let (straggler_cursor, straggler_g) = self
+            .fabric
+            .as_ref()
+            .and_then(|f| f.engine().straggler_state())
+            .unwrap_or((0, Vec::new()));
         Ok(Checkpoint {
             seed: self.seed,
             arch: self.arch,
@@ -958,6 +999,8 @@ impl Algorithm for DssfnAlgorithm<'_> {
             iters_since_comm: self.iters_since_comm as u64,
             iter_stale_cursor: self.iter_stale_cursor,
             stale_hist,
+            straggler_cursor,
+            straggler_g,
             comm_before: self.comm_before,
             ledger_total: self.ledger.snapshot(),
             sim_secs: self.sim_comm_secs(),

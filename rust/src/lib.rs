@@ -85,6 +85,7 @@
 
 pub mod admm;
 pub mod baselines;
+pub mod clidoc;
 pub mod config;
 pub mod coordinator;
 pub mod data;

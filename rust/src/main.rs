@@ -1,19 +1,9 @@
 //! `dssfn` — CLI launcher for decentralized SSFN training.
 //!
-//! ```text
-//! dssfn train   [--config FILE] [--dataset KEY] [--degree D] [--nodes M]
-//!               [--layers L] [--admm-iters K] [--backend native|pjrt]
-//!               [--exact-consensus] [--seed S] [--csv PATH] [--verbose]
-//!               [--schedule sync|semisync|lossy] [--staleness S]
-//!               [--loss-p P] [--adaptive-delta MAX] [--adaptive-period P]
-//!               [--iter-staleness S] [--straggler-sigma F] [--straggler-seed N]
-//!               [--checkpoint PATH] [--checkpoint-every K] [--resume PATH]
-//!               [--max-bytes N] [--max-sim-secs S] [--cost-plateau F]
-//! dssfn central [--dataset KEY] [--layers L] [--admm-iters K] [--seed S]
-//! dssfn sweep   [--dataset KEY] [--degrees 1,2,...] [--csv PATH]
-//! dssfn datasets
-//! dssfn info    [--config FILE]
-//! ```
+//! Run `dssfn` without arguments for the usage text, or see
+//! `docs/CLI.md` for the full flag reference — both are rendered from
+//! the one flag table in [`dssfn::clidoc`], so they cannot drift from
+//! the code (`dssfn cli-doc` regenerates the markdown).
 //!
 //! `train` drives the resumable session API: `--verbose` streams the
 //! typed step events, `--checkpoint` snapshots the full training state
@@ -25,14 +15,18 @@
 //! enables the L-FGADMM-style adaptive consensus tolerance (with
 //! `--adaptive-period` for communication-period doubling),
 //! `--iter-staleness` runs ADMM updates against bounded-stale consensus
-//! state (Liang et al. 2020), and `--straggler-sigma` simulates a
-//! heterogeneous cluster where synchronous barriers pay the slowest
-//! node. Flags that the selected schedule does not read (e.g.
+//! state (Liang et al. 2020, with `--iter-schedule` choosing i.i.d. /
+//! fixed-lag / one-slow-node ages), and `--straggler-sigma` /
+//! `--straggler-corr` simulate a heterogeneous cluster where every
+//! round's barrier pays that round's slowest node (AR(1)-persistent
+//! slowness). Flags that the selected schedule does not read (e.g.
 //! `--staleness` under `sync`) are rejected, not ignored.
 //!
 //! The build environment has no `clap`; argument parsing is a small
-//! hand-rolled matcher (see [`Args`]).
+//! hand-rolled matcher (see [`Args`]) whose switch list comes from the
+//! same flag table.
 
+use dssfn::clidoc;
 use dssfn::config::{BackendKind, ExperimentConfig};
 use dssfn::coordinator::DecentralizedTrainer;
 use dssfn::data::{dataset_names, lookup, table1_rows, ClassificationTask};
@@ -58,7 +52,7 @@ impl Args {
             let key = a
                 .strip_prefix("--")
                 .ok_or_else(|| format!("unexpected argument '{a}'"))?;
-            let switch = matches!(key, "exact-consensus" | "no-curve" | "full" | "verbose");
+            let switch = clidoc::is_switch(key);
             if switch {
                 flags.insert(key.to_string(), "true".to_string());
                 i += 1;
@@ -162,11 +156,20 @@ fn build_config(args: &Args) -> Result<ExperimentConfig, String> {
     if let Some(v) = args.parsed("iter-staleness")? {
         cfg.iter_staleness = v;
     }
+    if let Some(s) = args.get("iter-schedule") {
+        // Validate the shape early (the full bounds are checked against
+        // iter_staleness / M when the typed comm config is built).
+        dssfn::config::parse_iter_schedule(s).map_err(|e| e.to_string())?;
+        cfg.iter_schedule = s.to_string();
+    }
     if let Some(v) = args.parsed("straggler-sigma")? {
         cfg.straggler_sigma = v;
     }
     if let Some(v) = args.parsed("straggler-seed")? {
         cfg.straggler_seed = v;
+    }
+    if let Some(v) = args.parsed("straggler-corr")? {
+        cfg.straggler_corr = v;
     }
     if args.has("exact-consensus") {
         cfg.exact_consensus = true;
@@ -224,7 +227,8 @@ fn cmd_train(args: &Args) -> Result<(), String> {
                 "config", "dataset", "degree", "nodes", "layers", "admm-iters", "seed",
                 "mu0", "mul", "threads", "exact-consensus", "no-curve", "schedule",
                 "staleness", "loss-p", "adaptive-delta", "adaptive-period",
-                "iter-staleness", "straggler-sigma", "straggler-seed",
+                "iter-staleness", "iter-schedule", "straggler-sigma", "straggler-seed",
+                "straggler-corr",
             ] {
                 if args.has(flag) {
                     return Err(format!(
@@ -427,7 +431,7 @@ fn cmd_info(args: &Args) -> Result<(), String> {
     // printing an unrunnable configuration.
     let comm = cfg.comm_config().map_err(|e| e.to_string())?;
     println!(
-        "comm fabric   : {}{}{}{}",
+        "comm fabric   : {}{}{}",
         comm.schedule.describe(),
         match comm.adaptive_delta {
             Some(p) if p.period > 1 =>
@@ -435,17 +439,9 @@ fn cmd_info(args: &Args) -> Result<(), String> {
             Some(p) => format!(" adaptive-delta<={}", p.max_delta),
             None => String::new(),
         },
-        if comm.iter_staleness > 0 {
-            format!(" iter-stale(s={})", comm.iter_staleness)
-        } else {
-            String::new()
-        },
-        if comm.node_latency.is_heterogeneous() {
-            // Same token the training report's mode string uses.
-            format!(" straggler(σ={})", comm.node_latency.sigma)
-        } else {
-            String::new()
-        }
+        // Same tokens the training report's mode string uses (one
+        // formatter on CommConfig, so info cannot drift from it).
+        comm.relaxation_tokens()
     );
     println!(
         "padded shard J: {}",
@@ -458,26 +454,16 @@ fn cmd_info(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-const USAGE: &str = "usage: dssfn <train|central|sweep|datasets|info> [flags]
-  train     train decentralized SSFN        (--dataset, --degree, --nodes, --layers, --admm-iters, --backend, --csv, --config, --exact-consensus, --seed,
-                                             --schedule sync|semisync|lossy, --staleness S, --loss-p P, --adaptive-delta MAX, --adaptive-period P,
-                                             --iter-staleness S, --straggler-sigma F, --straggler-seed N,
-                                             --verbose, --checkpoint PATH, --checkpoint-every K, --resume PATH, --max-bytes N, --max-sim-secs S, --cost-plateau F)
-  central   train the centralized baseline  (--dataset, --layers, --admm-iters, --seed)
-  sweep     degree sweep (Fig. 4)           (--dataset, --degrees 1,2,3, --csv)
-  datasets  list registered datasets
-  info      show the resolved configuration";
-
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first() else {
-        eprintln!("{USAGE}");
+        eprintln!("{}", clidoc::usage());
         return ExitCode::from(2);
     };
     let args = match Args::parse(&argv[1..]) {
         Ok(a) => a,
         Err(e) => {
-            eprintln!("error: {e}\n{USAGE}");
+            eprintln!("error: {e}\n{}", clidoc::usage());
             return ExitCode::from(2);
         }
     };
@@ -490,7 +476,12 @@ fn main() -> ExitCode {
             Ok(())
         }
         "info" => cmd_info(&args),
-        other => Err(format!("unknown command '{other}'\n{USAGE}")),
+        "cli-doc" => {
+            // The generated flag reference: `dssfn cli-doc > docs/CLI.md`.
+            print!("{}", clidoc::markdown());
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}'\n{}", clidoc::usage())),
     };
     match result {
         Ok(()) => ExitCode::SUCCESS,

@@ -92,6 +92,21 @@ impl CommSchedule {
     /// `seed` drives every randomized schedule decision (staleness
     /// draws, edge drops); two fabrics built from the same schedule,
     /// engine configuration and seed replay identical exchanges.
+    ///
+    /// ```
+    /// use dssfn::network::{CommLedger, CommSchedule, GossipEngine, LatencyModel,
+    ///     MixingMatrix, Topology, WeightRule};
+    /// use std::sync::Arc;
+    ///
+    /// let mix = MixingMatrix::build(
+    ///     &Topology::Circular { nodes: 6, degree: 2 },
+    ///     WeightRule::EqualNeighbor,
+    /// ).unwrap();
+    /// let engine = GossipEngine::new(mix, Arc::new(CommLedger::new()), LatencyModel::default());
+    /// let fabric = CommSchedule::SemiSync { staleness: 2 }.build_fabric(engine, 7).unwrap();
+    /// assert_eq!(fabric.describe(), "semisync(s=2)");
+    /// assert_eq!(fabric.calls(), 0);
+    /// ```
     pub fn build_fabric(&self, engine: GossipEngine, seed: u64) -> Result<Box<dyn CommFabric>> {
         self.validate()?;
         Ok(match *self {
@@ -198,10 +213,109 @@ impl AdaptiveDeltaPolicy {
     }
 }
 
+/// How the per-node *ages* of iteration-level staleness are chosen
+/// (Liang et al. 2020). The bound `s` lives in
+/// [`CommConfig::iter_staleness`]; the schedule decides which node reads
+/// how-old consensus state at each relaxed ADMM iteration:
+///
+/// * [`StalenessSchedule::Iid`] — every node draws its age uniformly
+///   from `{0, …, s}` out of a stream keyed on `(derived iteration
+///   seed, cursor, node order)`. The default, and the only variant that
+///   consumes randomness.
+/// * [`StalenessSchedule::FixedLag`] — every node reads exactly
+///   `d`-iterations-old state, every relaxed iteration. Deterministic
+///   (no draws), which is what Liang et al.'s Fig.-2 fixed-delay sweep
+///   needs.
+/// * [`StalenessSchedule::OneSlow`] — one designated node reads
+///   `lag`-old state; everyone else reads fresh. Models a single slow
+///   worker at constant lag. Only the lagged node earns barrier slack
+///   on the simulated clock — the critical path still charges every
+///   other node's current-round latency.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StalenessSchedule {
+    /// Per-node ages drawn i.i.d. uniform over `{0, …, s}` (seeded).
+    #[default]
+    Iid,
+    /// Every node reads exactly `d`-iterations-old state (`1 ≤ d ≤ s`).
+    FixedLag(usize),
+    /// Node `node` reads `lag`-old state; all other nodes read fresh.
+    OneSlow {
+        /// The lagged node's index (must be `< M`).
+        node: usize,
+        /// Its constant lag in iterations (`1 ≤ lag ≤ s`).
+        lag: usize,
+    },
+}
+
+impl StalenessSchedule {
+    /// Short display tag for reports and mode strings.
+    pub fn describe(&self) -> String {
+        match self {
+            StalenessSchedule::Iid => "iid".to_string(),
+            StalenessSchedule::FixedLag(d) => format!("fixed-lag({d})"),
+            StalenessSchedule::OneSlow { node, lag } => {
+                format!("one-slow(node={node}, lag={lag})")
+            }
+        }
+    }
+
+    /// Validate against the staleness bound `s` (the history-ring depth
+    /// and drain length — ages can never exceed it).
+    pub fn validate(&self, iter_staleness: usize) -> Result<()> {
+        match *self {
+            StalenessSchedule::Iid => Ok(()),
+            StalenessSchedule::FixedLag(d) => {
+                if !(1..=iter_staleness).contains(&d) {
+                    return Err(Error::Config(format!(
+                        "fixed-lag delay d = {d} must satisfy 1 <= d <= iter_staleness \
+                         = {iter_staleness} (the history ring holds s past averages)"
+                    )));
+                }
+                Ok(())
+            }
+            StalenessSchedule::OneSlow { lag, .. } => {
+                if !(1..=iter_staleness).contains(&lag) {
+                    return Err(Error::Config(format!(
+                        "one-slow lag = {lag} must satisfy 1 <= lag <= iter_staleness \
+                         = {iter_staleness} (the history ring holds s past averages)"
+                    )));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// The barrier slack the simulated clock may claim per relaxed
+    /// iteration: the largest age the schedule can produce.
+    pub fn clock_slack(&self, iter_staleness: usize) -> usize {
+        match *self {
+            StalenessSchedule::Iid => iter_staleness,
+            StalenessSchedule::FixedLag(d) => d,
+            StalenessSchedule::OneSlow { lag, .. } => lag,
+        }
+    }
+
+    /// The per-node slack caps this schedule implies, when non-uniform
+    /// (`OneSlow`: only the lagged node earns slack; everyone else still
+    /// stalls on every barrier).
+    pub fn node_slack(&self, m: usize) -> Option<Vec<usize>> {
+        match *self {
+            StalenessSchedule::OneSlow { node, lag } => {
+                let mut v = vec![0; m];
+                if node < m {
+                    v[node] = lag;
+                }
+                Some(v)
+            }
+            _ => None,
+        }
+    }
+}
+
 /// The complete communication configuration of a training run: the
 /// exchange schedule, the optional adaptive-δ controller, the
 /// heterogeneous node-latency (straggler) model, and the
-/// iteration-level staleness bound.
+/// iteration-level staleness bound plus its age schedule.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct CommConfig {
     /// How exchanges are scheduled (sync / semi-sync / lossy).
@@ -222,6 +336,11 @@ pub struct CommConfig {
     /// schedule — fabric-level (round) staleness and iteration-level
     /// staleness are two resolutions of the same relaxation; pick one.
     pub iter_staleness: usize,
+    /// How per-node staleness ages are chosen when `iter_staleness > 0`
+    /// (i.i.d. draws, a fixed lag for every node, or one slow node at
+    /// constant lag). Ignored — and required to be the default
+    /// [`StalenessSchedule::Iid`] — when staleness is off.
+    pub iter_schedule: StalenessSchedule,
 }
 
 impl CommConfig {
@@ -256,20 +375,29 @@ impl CommConfig {
                         .into(),
                 ));
             }
+            self.iter_schedule.validate(self.iter_staleness)?;
+        } else if self.iter_schedule != StalenessSchedule::Iid {
+            return Err(Error::Config(format!(
+                "staleness schedule '{}' needs iter_staleness > 0 (with staleness \
+                 off there are no ages to schedule)",
+                self.iter_schedule.describe()
+            )));
         }
         Ok(())
     }
 
-    /// [`CommConfig::validate_for`] plus the per-layer iteration budget:
-    /// the last `s` iterations of every layer drain synchronously, so
-    /// iteration staleness must leave at least one iteration to relax
-    /// (`s < K`). The one place this bound lives — the config front-end
-    /// and the trainer both call it.
+    /// [`CommConfig::validate_for`] plus the per-layer iteration budget
+    /// and cluster size: the last `s` iterations of every layer drain
+    /// synchronously, so iteration staleness must leave at least one
+    /// iteration to relax (`s < K`), and a `OneSlow` schedule's node
+    /// index must exist (`node < M`). The one place these bounds live —
+    /// the config front-end and the trainer both call it.
     pub fn validate_with_iterations(
         &self,
         base_delta: f64,
         record_cost_curve: bool,
         admm_iterations: usize,
+        nodes: usize,
     ) -> Result<()> {
         self.validate_for(base_delta, record_cost_curve)?;
         if self.iter_staleness > 0 && self.iter_staleness >= admm_iterations {
@@ -280,7 +408,45 @@ impl CommConfig {
                 self.iter_staleness
             )));
         }
+        if let StalenessSchedule::OneSlow { node, .. } = self.iter_schedule {
+            if node >= nodes {
+                return Err(Error::Config(format!(
+                    "one-slow schedule lags node {node}, but the cluster has only \
+                     M = {nodes} nodes"
+                )));
+            }
+        }
         Ok(())
+    }
+
+    /// The iteration-staleness and straggler display tokens (leading
+    /// space; empty when neither applies) — the one formatter behind
+    /// both the training report's mode string and `dssfn info`, so the
+    /// two cannot drift.
+    pub fn relaxation_tokens(&self) -> String {
+        let mut s = String::new();
+        if self.iter_staleness > 0 {
+            if self.iter_schedule == StalenessSchedule::Iid {
+                s.push_str(&format!(" iter-stale(s={})", self.iter_staleness));
+            } else {
+                s.push_str(&format!(
+                    " iter-stale(s={}, {})",
+                    self.iter_staleness,
+                    self.iter_schedule.describe()
+                ));
+            }
+        }
+        if self.node_latency.is_heterogeneous() {
+            if self.node_latency.corr > 0.0 {
+                s.push_str(&format!(
+                    " straggler(σ={}, ρ={})",
+                    self.node_latency.sigma, self.node_latency.corr
+                ));
+            } else {
+                s.push_str(&format!(" straggler(σ={})", self.node_latency.sigma));
+            }
+        }
+        s
     }
 }
 
@@ -745,9 +911,9 @@ mod tests {
         let ok = CommConfig { iter_staleness: 2, ..CommConfig::default() };
         ok.validate_for(1e-9, true).unwrap();
         // ... and must leave at least one iteration outside the drain.
-        ok.validate_with_iterations(1e-9, true, 3).unwrap();
-        assert!(ok.validate_with_iterations(1e-9, true, 2).is_err());
-        assert!(ok.validate_with_iterations(1e-9, true, 1).is_err());
+        ok.validate_with_iterations(1e-9, true, 3, 4).unwrap();
+        assert!(ok.validate_with_iterations(1e-9, true, 2, 4).is_err());
+        assert!(ok.validate_with_iterations(1e-9, true, 1, 4).is_err());
         let bad = CommConfig {
             schedule: CommSchedule::SemiSync { staleness: 2 },
             iter_staleness: 2,
@@ -764,17 +930,103 @@ mod tests {
             ..CommConfig::default()
         };
         assert!(bad.validate_for(1e-9, true).is_err());
-        // Straggler sigma must be sane.
+        // Straggler sigma and corr must be sane.
         let bad = CommConfig {
-            node_latency: NodeLatency { sigma: -1.0, seed: 0 },
+            node_latency: NodeLatency { sigma: -1.0, seed: 0, corr: 0.0 },
+            ..CommConfig::default()
+        };
+        assert!(bad.validate_for(1e-9, true).is_err());
+        let bad = CommConfig {
+            node_latency: NodeLatency { sigma: 0.5, seed: 0, corr: 2.0 },
             ..CommConfig::default()
         };
         assert!(bad.validate_for(1e-9, true).is_err());
         let ok = CommConfig {
-            node_latency: NodeLatency { sigma: 0.5, seed: 3 },
+            node_latency: NodeLatency { sigma: 0.5, seed: 3, corr: 0.5 },
             ..CommConfig::default()
         };
         ok.validate_for(1e-9, false).unwrap();
+    }
+
+    #[test]
+    fn staleness_schedule_validation_and_descriptions() {
+        assert_eq!(StalenessSchedule::default(), StalenessSchedule::Iid);
+        assert_eq!(StalenessSchedule::Iid.describe(), "iid");
+        assert_eq!(StalenessSchedule::FixedLag(2).describe(), "fixed-lag(2)");
+        assert_eq!(
+            StalenessSchedule::OneSlow { node: 3, lag: 2 }.describe(),
+            "one-slow(node=3, lag=2)"
+        );
+        // Lag bounds ride the staleness bound s.
+        StalenessSchedule::FixedLag(2).validate(2).unwrap();
+        assert!(StalenessSchedule::FixedLag(0).validate(2).is_err());
+        assert!(StalenessSchedule::FixedLag(3).validate(2).is_err());
+        StalenessSchedule::OneSlow { node: 0, lag: 1 }.validate(2).unwrap();
+        assert!(StalenessSchedule::OneSlow { node: 0, lag: 0 }.validate(2).is_err());
+        assert!(StalenessSchedule::OneSlow { node: 0, lag: 5 }.validate(2).is_err());
+        // The clock slack is the largest age the schedule can produce.
+        assert_eq!(StalenessSchedule::Iid.clock_slack(3), 3);
+        assert_eq!(StalenessSchedule::FixedLag(2).clock_slack(3), 2);
+        assert_eq!(StalenessSchedule::OneSlow { node: 1, lag: 2 }.clock_slack(3), 2);
+        // Per-node slack caps exist only for OneSlow.
+        assert_eq!(StalenessSchedule::Iid.node_slack(4), None);
+        assert_eq!(StalenessSchedule::FixedLag(2).node_slack(4), None);
+        assert_eq!(
+            StalenessSchedule::OneSlow { node: 2, lag: 3 }.node_slack(4),
+            Some(vec![0, 0, 3, 0])
+        );
+    }
+
+    #[test]
+    fn relaxation_tokens_render_the_shared_mode_suffix() {
+        assert_eq!(CommConfig::default().relaxation_tokens(), "");
+        let cfg = CommConfig { iter_staleness: 2, ..CommConfig::default() };
+        assert_eq!(cfg.relaxation_tokens(), " iter-stale(s=2)");
+        let cfg = CommConfig {
+            iter_staleness: 2,
+            iter_schedule: StalenessSchedule::FixedLag(2),
+            node_latency: NodeLatency { sigma: 0.5, seed: 1, corr: 0.0 },
+            ..CommConfig::default()
+        };
+        assert_eq!(
+            cfg.relaxation_tokens(),
+            " iter-stale(s=2, fixed-lag(2)) straggler(σ=0.5)"
+        );
+        let cfg = CommConfig {
+            node_latency: NodeLatency { sigma: 0.5, seed: 1, corr: 0.8 },
+            ..CommConfig::default()
+        };
+        assert_eq!(cfg.relaxation_tokens(), " straggler(σ=0.5, ρ=0.8)");
+    }
+
+    #[test]
+    fn comm_config_validates_staleness_schedules() {
+        // A non-default schedule needs staleness to be on...
+        let bad = CommConfig {
+            iter_schedule: StalenessSchedule::FixedLag(1),
+            ..CommConfig::default()
+        };
+        assert!(bad.validate_for(1e-9, true).is_err());
+        // ... and its lag must respect the bound.
+        let bad = CommConfig {
+            iter_staleness: 2,
+            iter_schedule: StalenessSchedule::FixedLag(3),
+            ..CommConfig::default()
+        };
+        assert!(bad.validate_for(1e-9, true).is_err());
+        let ok = CommConfig {
+            iter_staleness: 2,
+            iter_schedule: StalenessSchedule::OneSlow { node: 1, lag: 2 },
+            ..CommConfig::default()
+        };
+        ok.validate_for(1e-9, true).unwrap();
+        // The node index is checked against the cluster size.
+        ok.validate_with_iterations(1e-9, true, 5, 4).unwrap();
+        let bad = CommConfig {
+            iter_schedule: StalenessSchedule::OneSlow { node: 9, lag: 2 },
+            ..ok
+        };
+        assert!(bad.validate_with_iterations(1e-9, true, 5, 4).is_err());
     }
 
     #[test]

@@ -26,7 +26,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, PoisonError};
 
-use super::{CommLedger, LatencyModel, MixingMatrix, StragglerProfile};
+use super::{CommLedger, LatencyModel, MixingMatrix, NodeLatency, StragglerSampler};
 use crate::linalg::Matrix;
 use crate::util::{Rng, Xoshiro256StarStar};
 use crate::{Error, Result};
@@ -53,11 +53,18 @@ pub struct GossipEngine {
     max_degree: usize,
     ledger: Arc<CommLedger>,
     latency: LatencyModel,
-    /// Heterogeneous per-node latency aggregates (see
-    /// [`crate::network::NodeLatency`]): synchronous rounds charge the
-    /// max node, relaxed rounds the median. `None` is the homogeneous
-    /// paper model, bit-identical to the plain α-β charges.
-    straggler: Option<StragglerProfile>,
+    /// Per-round critical-path straggler sampler (see
+    /// [`crate::network::NodeLatency`]): every round draws each node's
+    /// latency multiplier; synchronous rounds charge this round's max
+    /// node, relaxed rounds the slack-adjusted critical path. `None` is
+    /// the homogeneous paper model, bit-identical to the plain α-β
+    /// charges. Behind a mutex (never contended: one consensus averaging
+    /// runs at a time) because each round advances the AR(1) state.
+    straggler: Mutex<Option<StragglerSampler>>,
+    /// Optional per-node staleness-slack caps (the `OneSlow` schedule
+    /// relaxes one node only). Caps both the sampler's per-node windows
+    /// and the homogeneous barrier amortization.
+    node_slack: Option<Vec<usize>>,
     /// Simulated communication clock, f64 bits in an atomic.
     sim_clock_bits: Arc<AtomicU64>,
     /// Persistent scratch bank for the double-buffered rounds. Lazily
@@ -80,7 +87,13 @@ impl Clone for GossipEngine {
             max_degree: self.max_degree,
             ledger: Arc::clone(&self.ledger),
             latency: self.latency,
-            straggler: self.straggler,
+            straggler: Mutex::new(
+                self.straggler
+                    .lock()
+                    .unwrap_or_else(PoisonError::into_inner)
+                    .clone(),
+            ),
+            node_slack: self.node_slack.clone(),
             // The simulated clock stays shared (as before); the scratch
             // bank is per-engine cache state and starts empty.
             sim_clock_bits: Arc::clone(&self.sim_clock_bits),
@@ -115,50 +128,133 @@ impl GossipEngine {
             max_degree,
             ledger,
             latency,
-            straggler: None,
+            straggler: Mutex::new(None),
+            node_slack: None,
             sim_clock_bits: Arc::new(AtomicU64::new(0f64.to_bits())),
             scratch: Mutex::new(Vec::new()),
             hist: Mutex::new(Vec::new()),
         }
     }
 
-    /// Install a heterogeneous per-node latency profile. Synchronous
-    /// rounds then charge `max_i α_i` to the simulated clock and relaxed
-    /// rounds the `(slack+1)`-amortized median — the traffic accounting
-    /// is untouched (stragglers slow the clock, never the math).
-    pub fn set_straggler(&mut self, profile: StragglerProfile) {
-        self.straggler = Some(profile);
-    }
-
-    /// The installed straggler profile, if any.
-    pub fn straggler(&self) -> Option<StragglerProfile> {
-        self.straggler
-    }
-
-    /// Simulated seconds one fully synchronized round costs (barrier
-    /// waits for the slowest node when a straggler profile is set).
-    fn sync_round_dt(&self, payload_bytes: u64) -> f64 {
-        match &self.straggler {
-            None => self.latency.round_time(self.max_degree, payload_bytes),
-            Some(p) => self
-                .latency
-                .round_time_straggler(p, self.max_degree, payload_bytes),
+    /// Install a heterogeneous per-node latency model: every subsequent
+    /// round samples each node's multiplier from the seeded AR(1)
+    /// lognormal stream and charges the simulated clock the round's
+    /// critical path (max node on barriers, slack-adjusted path on
+    /// relaxed rounds) — the traffic accounting is untouched (stragglers
+    /// slow the clock, never the math). A homogeneous `NodeLatency`
+    /// clears the sampler, restoring the plain α-β charges bit-exactly.
+    pub fn set_straggler(&mut self, node_latency: NodeLatency) {
+        if node_latency.is_heterogeneous() {
+            let m = self.mixing.num_nodes();
+            let mut sampler = StragglerSampler::new(node_latency, m);
+            if let Some(slack) = &self.node_slack {
+                sampler.set_node_slack(slack.clone());
+            }
+            *self.straggler.get_mut().unwrap_or_else(PoisonError::into_inner) = Some(sampler);
+        } else {
+            *self.straggler.get_mut().unwrap_or_else(PoisonError::into_inner) = None;
         }
     }
 
-    /// Simulated seconds one barrier-relaxed round costs under `slack`
-    /// rounds of tolerated staleness (median node, amortized barrier).
-    fn relaxed_round_dt(&self, payload_bytes: u64, slack: usize) -> f64 {
-        match &self.straggler {
-            None => self
-                .latency
-                .relaxed_round_time(self.max_degree, payload_bytes, slack),
-            Some(p) => self.latency.relaxed_round_time_straggler(
-                p,
-                self.max_degree,
-                payload_bytes,
-                slack,
-            ),
+    /// The installed straggler configuration, if any.
+    pub fn straggler(&self) -> Option<NodeLatency> {
+        self.straggler
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .as_ref()
+            .map(|s| s.config())
+    }
+
+    /// Install per-node staleness-slack caps (length `M`): node `i`'s
+    /// effective slack in a relaxed round is `min(node_slack[i], slack)`.
+    /// Used by the `OneSlow` staleness schedule, where only one node may
+    /// lag — everyone else still synchronizes, so the homogeneous
+    /// barrier amortization collapses to the least-slack node and the
+    /// heterogeneous critical path hides only the lagged node's spikes.
+    pub fn set_node_slack(&mut self, node_slack: Vec<usize>) {
+        if let Some(sampler) = self
+            .straggler
+            .get_mut()
+            .unwrap_or_else(PoisonError::into_inner)
+            .as_mut()
+        {
+            sampler.set_node_slack(node_slack.clone());
+        }
+        self.node_slack = Some(node_slack);
+    }
+
+    /// The straggler sampler's checkpointable `(round cursor, AR(1)
+    /// state)` pair, when a heterogeneous model is installed.
+    pub fn straggler_state(&self) -> Option<(u64, Vec<f64>)> {
+        self.straggler
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .as_ref()
+            .map(|s| s.state())
+    }
+
+    /// Restore a checkpointed straggler `(cursor, state)` pair so the
+    /// resumed run replays the exact per-round draws (checkpoint resume;
+    /// requires a heterogeneous model to be installed).
+    pub fn restore_straggler_state(&self, cursor: u64, g: Vec<f64>) -> Result<()> {
+        match self
+            .straggler
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .as_mut()
+        {
+            Some(s) => s.restore_state(cursor, g),
+            None => Err(Error::Checkpoint(
+                "checkpoint carries straggler state but the run is homogeneous".into(),
+            )),
+        }
+    }
+
+    /// Reset the straggler sampler's slack window at an averaging-call
+    /// boundary (windows never span calls, so checkpoints taken between
+    /// calls need no window state).
+    fn begin_straggler_call(&self) {
+        if let Some(s) = self
+            .straggler
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .as_mut()
+        {
+            s.begin_call();
+        }
+    }
+
+    /// Simulated seconds one round costs under `slack` rounds of
+    /// tolerated staleness (`slack = 0` is a full barrier). Homogeneous
+    /// clusters charge the α-β formulas (amortized barrier on relaxed
+    /// rounds); heterogeneous clusters advance the per-round sampler and
+    /// charge the critical path, whose floor is the full homogeneous
+    /// barrier — slack overlaps per-node work, it never skips it (see
+    /// the deliberate σ → 0 discontinuity note on
+    /// [`crate::network::StragglerSampler`]).
+    fn round_dt(&self, payload_bytes: u64, slack: usize) -> f64 {
+        let mut guard = self.straggler.lock().unwrap_or_else(PoisonError::into_inner);
+        match guard.as_mut() {
+            Some(sampler) => {
+                let mult = sampler.round_mult(slack);
+                self.latency
+                    .round_time_mult(mult, self.max_degree, payload_bytes)
+            }
+            None => {
+                // A per-node slack profile caps the homogeneous barrier
+                // amortization at the least-slack node (it is the one
+                // that still stalls every round).
+                let eff = match &self.node_slack {
+                    Some(v) => v.iter().map(|&x| x.min(slack)).min().unwrap_or(0),
+                    None => slack,
+                };
+                if eff == 0 {
+                    self.latency.round_time(self.max_degree, payload_bytes)
+                } else {
+                    self.latency
+                        .relaxed_round_time(self.max_degree, payload_bytes, eff)
+                }
+            }
         }
     }
 
@@ -268,6 +364,7 @@ impl GossipEngine {
             return Ok(());
         }
         let scalars = (shape.0 * shape.1) as u64;
+        self.begin_straggler_call();
         // Ping-pong between `values` and the engine's persistent scratch
         // bank: each round writes into the other bank and swaps buffer
         // ownership, so there is no per-round copy-back and no per-call
@@ -294,12 +391,7 @@ impl GossipEngine {
                 std::mem::swap(v, s);
             }
             self.ledger.record_round(self.msgs_per_round, scalars);
-            let dt = if clock_slack == 0 {
-                self.sync_round_dt(scalars * 8)
-            } else {
-                self.relaxed_round_dt(scalars * 8, clock_slack)
-            };
-            self.advance_clock(dt);
+            self.advance_clock(self.round_dt(scalars * 8, clock_slack));
         }
         Ok(())
     }
@@ -370,6 +462,7 @@ impl GossipEngine {
             return Ok(());
         }
         let scalars = (shape.0 * shape.1) as u64;
+        self.begin_straggler_call();
         let mut bank = self.scratch_bank(m, shape);
         // Edge-drop set reused across rounds (cleared, not reallocated).
         let mut dropped: std::collections::HashSet<(usize, usize)> =
@@ -410,7 +503,7 @@ impl GossipEngine {
                 std::mem::swap(v, s);
             }
             self.ledger.record_round(delivered, scalars);
-            self.advance_clock(self.sync_round_dt(scalars * 8));
+            self.advance_clock(self.round_dt(scalars * 8, 0));
         }
         Ok(())
     }
@@ -454,8 +547,11 @@ impl GossipEngine {
     /// Every round still ships the full message complement (staleness
     /// relaxes *waiting*, not traffic). Relaxed rounds charge the
     /// simulated clock the barrier term `α` amortized over `s + 1`
-    /// rounds ([`LatencyModel::relaxed_round_time`]); flush rounds
-    /// charge the full synchronous round time.
+    /// rounds ([`LatencyModel::relaxed_round_time`]) on a homogeneous
+    /// cluster, or the slack-adjusted per-round critical path
+    /// ([`crate::network::StragglerSampler`]) on a heterogeneous one;
+    /// flush rounds charge the full synchronous round time (this
+    /// round's slowest node).
     pub fn mix_rounds_semisync(
         &self,
         values: &mut [Matrix],
@@ -475,6 +571,7 @@ impl GossipEngine {
             return Ok(());
         }
         let scalars = (shape.0 * shape.1) as u64;
+        self.begin_straggler_call();
         let mut bank = self.scratch_bank(m, shape);
         let mut hist = self.hist_bank(m, shape, staleness);
         // Pre-fill every history slot with the initial values: stale
@@ -518,9 +615,9 @@ impl GossipEngine {
             }
             self.ledger.record_round(self.msgs_per_round, scalars);
             let dt = if relaxed {
-                self.relaxed_round_dt(scalars * 8, staleness)
+                self.round_dt(scalars * 8, staleness)
             } else {
-                self.sync_round_dt(scalars * 8)
+                self.round_dt(scalars * 8, 0)
             };
             self.advance_clock(dt);
         }
@@ -829,11 +926,10 @@ mod tests {
     }
 
     #[test]
-    fn straggler_profile_slows_the_clock_but_never_the_math() {
-        use crate::network::NodeLatency;
+    fn straggler_sampler_slows_the_clock_but_never_the_math() {
         let plain = engine(8, 2);
         let mut het = engine(8, 2);
-        het.set_straggler(NodeLatency { sigma: 0.7, seed: 5 }.profile(8));
+        het.set_straggler(NodeLatency { sigma: 0.7, seed: 5, corr: 0.0 });
         assert!(het.straggler().is_some());
         let mut a = rand_values(8, 2, 3, 51);
         let mut b = a.clone();
@@ -850,10 +946,9 @@ mod tests {
 
     #[test]
     fn relaxed_clock_mixing_is_bit_identical_and_faster() {
-        use crate::network::NodeLatency;
         let mk = || {
             let mut e = engine(6, 1);
-            e.set_straggler(NodeLatency { sigma: 0.8, seed: 9 }.profile(6));
+            e.set_straggler(NodeLatency { sigma: 0.8, seed: 9, corr: 0.0 });
             e
         };
         let sync = mk();
@@ -876,6 +971,37 @@ mod tests {
             c.simulated_seconds().to_bits(),
             sync.simulated_seconds().to_bits()
         );
+    }
+
+    #[test]
+    fn straggler_state_restores_bit_identical_clock_charges() {
+        let mk = || {
+            let mut e = engine(6, 1);
+            e.set_straggler(NodeLatency { sigma: 0.6, seed: 21, corr: 0.7 });
+            e
+        };
+        let a = mk();
+        let mut vals = rand_values(6, 2, 2, 71);
+        a.mix_rounds(&mut vals, 5).unwrap();
+        let (cursor, g) = a.straggler_state().unwrap();
+        assert_eq!(cursor, 5);
+        // A fresh engine fast-forwarded to the same (cursor, state) and
+        // clock charges the continuation identically, bit for bit.
+        let b = mk();
+        b.restore_straggler_state(cursor, g).unwrap();
+        b.set_simulated_seconds(a.simulated_seconds());
+        let mut va = rand_values(6, 2, 2, 72);
+        let mut vb = va.clone();
+        a.mix_rounds_relaxed_clock(&mut va, 4, 2).unwrap();
+        b.mix_rounds_relaxed_clock(&mut vb, 4, 2).unwrap();
+        assert_eq!(
+            a.simulated_seconds().to_bits(),
+            b.simulated_seconds().to_bits()
+        );
+        // Homogeneous engines reject straggler state.
+        let plain = engine(6, 1);
+        assert!(plain.straggler_state().is_none());
+        assert!(plain.restore_straggler_state(1, vec![0.0; 6]).is_err());
     }
 
     #[test]

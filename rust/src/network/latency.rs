@@ -7,22 +7,61 @@
 //! consensus algorithms, and it is what turns "B(d) rounds of `Q×n`
 //! matrices" into the Fig.-4 training-time curve.
 //!
-//! ## Stragglers ([`NodeLatency`])
+//! ## Stragglers ([`NodeLatency`], [`StragglerSampler`])
 //!
 //! The paper's cost model (Sec. V) charges every round the same `α` — a
 //! homogeneous cluster. Real decentralized deployments are
-//! heterogeneous: each node `i` has its own barrier cost `α_i`, and a
-//! synchronous round waits for the *slowest* node, so the barrier term
-//! becomes `max_i α_i`. [`NodeLatency`] models this with a seeded
-//! per-node lognormal multiplier (`α_i = α·exp(σ·g_i)`, `g_i` standard
-//! normal — median-1, heavy right tail, the classic straggler shape).
-//! Relaxed schedules are where the distribution matters: a node that
-//! tolerates `s` rounds of staleness stalls on the barrier at most once
-//! per `s + 1` rounds and never on the same straggler twice in a row,
-//! so the steady-state per-round barrier cost tracks the *median* node,
-//! amortized over the window — `median_i α_i / (s + 1)` — instead of
-//! the max. [`StragglerProfile`] carries the two aggregates the clock
-//! charges.
+//! heterogeneous: each node `i` has its own barrier cost per round, and
+//! a synchronous round waits for the *slowest node of that round*.
+//! [`NodeLatency`] models this with a seeded per-round lognormal
+//! multiplier (`α_i(r) = α·exp(σ·g_i(r))`, `g_i(r)` standard normal —
+//! median-1, heavy right tail, the classic straggler shape) whose latent
+//! state follows an AR(1) recursion with correlation `corr`:
+//!
+//! ```text
+//! g_i(r) = corr · g_i(r−1) + sqrt(1 − corr²) · ε_i(r)
+//! ```
+//!
+//! `corr = 0` draws every round independently (transient stragglers);
+//! `corr = 1` freezes the round-0 draw — each node keeps one fixed
+//! multiplier forever, which is exactly the aggregate heterogeneity
+//! model this sampler replaced. In between, slowness persists over
+//! `~1/(1−corr)` rounds, so *which node gates which round* is visible
+//! to relaxed schedules instead of being amortized into a constant.
+//!
+//! Charging (executed by [`StragglerSampler`], driven per round by the
+//! gossip engine):
+//!
+//! * a **synchronous** round waits for this round's slowest node:
+//!   `α · max_i exp(σ·g_i(r))`;
+//! * a round relaxed by `slack` rounds of tolerated staleness charges
+//!   the **slack-adjusted critical path**: a node that may lag `s`
+//!   rounds stalls the barrier only if it has been slow for `s + 1`
+//!   consecutive rounds, so node `i` contributes the *minimum* of its
+//!   last `s_i + 1` multipliers and the barrier pays the max of those —
+//!   `α · max_i min_{w ≤ s_i} exp(σ·g_i(r−w))`. Transient spikes hide
+//!   inside the slack window; a persistently slow node (high `corr`)
+//!   still gates every round, which is the bounded-staleness reality:
+//!   slack buys reordering, not a free pass.
+//!
+//! The per-node slack bound `s_i` defaults to the uniform `slack` of the
+//! call; a [`StragglerSampler::set_node_slack`] profile caps it per node
+//! (the `OneSlow` staleness schedule lags one node only — everyone else
+//! still synchronizes, so only that node's spikes hide).
+//!
+//! **The two charging models deliberately differ in the σ → 0 limit.**
+//! The homogeneous relaxed formula
+//! ([`LatencyModel::relaxed_round_time`]) treats `α` as pure barrier
+//! *overhead* and amortizes it over `slack + 1` rounds; the
+//! heterogeneous critical path treats each node's `α_i(r)` as *work*
+//! that slack can overlap but never skip, so its floor is the
+//! homogeneous synchronous cost `α`, not `α/(slack + 1)`. A cluster
+//! with vanishing σ therefore charges relaxed rounds up to
+//! `(slack + 1)×` more than an exactly-homogeneous one. This is the
+//! modeling choice that keeps the `fig_straggler` invariant
+//! `semisync-heterogeneous ≥ sync-homogeneous` true at every σ > 0 —
+//! under an amortized heterogeneous barrier, mild heterogeneity plus
+//! slack would (absurdly) simulate faster than a perfect cluster.
 
 use crate::util::{Rng, Xoshiro256StarStar};
 use crate::{Error, Result};
@@ -76,54 +115,44 @@ impl LatencyModel {
             + (max_degree as u64 * bytes_per_neighbor) as f64 / self.beta
     }
 
-    /// [`LatencyModel::round_time`] under a heterogeneous cluster: the
-    /// barrier waits for the slowest node, so `α` scales by the profile's
-    /// max multiplier. The serialization term is per-link and unchanged.
-    pub fn round_time_straggler(
+    /// One heterogeneous round: the barrier multiplier `mult` (from a
+    /// [`StragglerSampler`] round draw) scales `α`; the serialization
+    /// term is per-link and unchanged.
+    pub fn round_time_mult(
         &self,
-        profile: &StragglerProfile,
+        mult: f64,
         max_degree: usize,
         bytes_per_neighbor: u64,
     ) -> f64 {
-        self.alpha * profile.max_mult
-            + (max_degree as u64 * bytes_per_neighbor) as f64 / self.beta
-    }
-
-    /// [`LatencyModel::relaxed_round_time`] under a heterogeneous
-    /// cluster: with `slack` rounds of tolerated staleness the
-    /// steady-state barrier cost tracks the *median* node (stragglers
-    /// hide inside the slack window), amortized over `slack + 1` rounds.
-    pub fn relaxed_round_time_straggler(
-        &self,
-        profile: &StragglerProfile,
-        max_degree: usize,
-        bytes_per_neighbor: u64,
-        slack: usize,
-    ) -> f64 {
-        self.alpha * profile.median_mult / (slack as f64 + 1.0)
-            + (max_degree as u64 * bytes_per_neighbor) as f64 / self.beta
+        self.alpha * mult + (max_degree as u64 * bytes_per_neighbor) as f64 / self.beta
     }
 }
 
-/// Seeded per-node latency heterogeneity: node `i`'s barrier cost is
-/// `α · exp(sigma · g_i)` with `g_i` a standard normal drawn from a
-/// stream keyed on `seed` — a lognormal multiplier with median 1 and a
-/// heavy right tail (the straggler shape). `sigma = 0` is the paper's
-/// homogeneous cluster, bit-identical to the plain α-β model.
+/// Seeded per-node latency heterogeneity: node `i`'s barrier cost in
+/// round `r` is `α · exp(sigma · g_i(r))` with `g_i(r)` a standard
+/// normal following an AR(1) recursion of correlation `corr` (see the
+/// module docs). `sigma = 0` is the paper's homogeneous cluster,
+/// bit-identical to the plain α-β model; `corr = 0` draws rounds
+/// independently; `corr = 1` keeps each node's round-0 draw forever.
 ///
-/// The multipliers are a pure function of `(seed, node count)`, so runs
-/// (and checkpoint resumes) replay identical straggler assignments.
+/// The draw stream is keyed on `(seed, round, node order)`, so the whole
+/// latency trajectory is a pure function of `(seed, corr, node count)` —
+/// runs replay identical straggler assignments, and checkpoints carry
+/// the round cursor plus the AR(1) state for bit-identical resume.
 /// Serialized inside [`super::CommConfig`].
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct NodeLatency {
     /// Log-std of the per-node α multiplier (`0` = homogeneous).
     pub sigma: f64,
-    /// Seed of the per-node draw stream.
+    /// Seed of the per-round, per-node draw stream.
     pub seed: u64,
+    /// AR(1) temporal correlation of each node's latent slowness in
+    /// `[0, 1]` (`0` = i.i.d. rounds, `1` = fixed per-node multipliers).
+    pub corr: f64,
 }
 
 impl NodeLatency {
-    /// Whether any node differs from the nominal α.
+    /// Whether any node ever differs from the nominal α.
     pub fn is_heterogeneous(&self) -> bool {
         self.sigma > 0.0
     }
@@ -136,44 +165,207 @@ impl NodeLatency {
                 self.sigma
             )));
         }
+        if !(self.corr.is_finite() && (0.0..=1.0).contains(&self.corr)) {
+            return Err(Error::Config(format!(
+                "straggler corr must be in [0, 1], got {}",
+                self.corr
+            )));
+        }
+        if self.corr != 0.0 && self.sigma == 0.0 {
+            return Err(Error::Config(
+                "straggler corr needs sigma > 0 (a homogeneous cluster has no \
+                 slowness to correlate)"
+                    .into(),
+            ));
+        }
         Ok(())
     }
 
-    /// The per-node α multipliers for an `m`-node cluster. Deterministic
-    /// in `(seed, m)`; all `1.0` when homogeneous.
+    /// The round-0 per-node α multipliers for an `m`-node cluster —
+    /// under `corr = 1` these are the permanent multipliers every round
+    /// charges. Deterministic in `(seed, m)`; all `1.0` when homogeneous.
     pub fn multipliers(&self, m: usize) -> Vec<f64> {
         if !self.is_heterogeneous() {
             return vec![1.0; m];
         }
-        let mut rng = Xoshiro256StarStar::seed_from_u64(self.seed);
+        let mut rng = Xoshiro256StarStar::seed_from_u64(self.seed).derive(0);
         (0..m).map(|_| (self.sigma * rng.gaussian()).exp()).collect()
-    }
-
-    /// The aggregate multipliers the simulated clock charges: the max
-    /// (synchronous barrier) and the median (relaxed steady state) over
-    /// the `m` per-node draws.
-    pub fn profile(&self, m: usize) -> StragglerProfile {
-        let mults = self.multipliers(m);
-        if mults.is_empty() {
-            return StragglerProfile { max_mult: 1.0, median_mult: 1.0 };
-        }
-        StragglerProfile {
-            max_mult: mults.iter().copied().fold(f64::NEG_INFINITY, f64::max),
-            median_mult: crate::util::median(&mults),
-        }
     }
 }
 
-/// The two aggregates of a [`NodeLatency`] draw that the α-β clock
-/// actually charges per round: synchronous rounds pay the max node,
-/// relaxed rounds pay the median node.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct StragglerProfile {
-    /// `max_i exp(σ g_i)` — what a full barrier waits for.
-    pub max_mult: f64,
-    /// `median_i exp(σ g_i)` — the steady-state cost once staleness
-    /// hides the tail.
-    pub median_mult: f64,
+/// Per-round critical-path sampler for a heterogeneous cluster (see the
+/// module docs). Owned by the gossip engine; one `round_mult` call per
+/// mixing round advances the AR(1) state, archives the round's
+/// multipliers in a small per-call window ring, and returns the barrier
+/// multiplier the α-β clock charges.
+///
+/// The window ring never spans averaging calls ([`StragglerSampler::begin_call`]
+/// resets it), so the only state a checkpoint must carry is the round
+/// cursor and the AR(1) vector ([`StragglerSampler::state`]) — both live
+/// in checkpoint format v4.
+///
+/// **Deliberate σ → 0 discontinuity.** The homogeneous relaxed formula
+/// ([`LatencyModel::relaxed_round_time`]) amortizes the barrier `α`
+/// over `slack + 1` rounds; this sampler's critical path instead treats
+/// each node's `α_i(r)` as work slack can overlap but never skip, so
+/// its floor is the full homogeneous barrier `α`. A cluster with
+/// vanishing σ therefore charges relaxed rounds up to `(slack + 1)×`
+/// more than an exactly-homogeneous one — the modeling choice that
+/// keeps `semisync-heterogeneous ≥ sync-homogeneous` true at every
+/// σ > 0 (the `fig_straggler` invariant): under an amortized
+/// heterogeneous barrier, mild heterogeneity plus slack would
+/// (absurdly) simulate faster than a perfect cluster.
+#[derive(Debug, Clone)]
+pub struct StragglerSampler {
+    cfg: NodeLatency,
+    m: usize,
+    /// AR(1) latent state per node (standard-normal marginals).
+    g: Vec<f64>,
+    /// Rounds sampled so far — the seeded-draw cursor.
+    cursor: u64,
+    /// Flat window ring of recent per-node multipliers: slot `w*m + i`.
+    hist: Vec<f64>,
+    /// Valid slots in the ring (grows from 0 at each call start).
+    hist_len: usize,
+    /// Next slot to overwrite.
+    hist_head: usize,
+    /// Optional per-node slack caps (the `OneSlow` schedule relaxes one
+    /// node only; everyone else keeps slack 0).
+    node_slack: Option<Vec<usize>>,
+}
+
+impl StragglerSampler {
+    /// A fresh sampler at round 0. `cfg` must be heterogeneous and valid.
+    pub fn new(cfg: NodeLatency, m: usize) -> Self {
+        Self {
+            cfg,
+            m,
+            g: vec![0.0; m],
+            cursor: 0,
+            hist: Vec::new(),
+            hist_len: 0,
+            hist_head: 0,
+            node_slack: None,
+        }
+    }
+
+    /// The configuration this sampler draws from.
+    pub fn config(&self) -> NodeLatency {
+        self.cfg
+    }
+
+    /// Install per-node slack caps (length `m`). A node's effective
+    /// slack in a relaxed round is `min(node_slack[i], call slack)`.
+    pub fn set_node_slack(&mut self, slack: Vec<usize>) {
+        debug_assert_eq!(slack.len(), self.m);
+        self.node_slack = Some(slack);
+    }
+
+    /// The checkpointable state: `(round cursor, AR(1) state vector)`.
+    pub fn state(&self) -> (u64, Vec<f64>) {
+        (self.cursor, self.g.clone())
+    }
+
+    /// Restore a checkpointed `(cursor, AR(1) state)` pair. The window
+    /// ring restarts empty — checkpoints land between averaging calls,
+    /// where the ring is reset anyway.
+    pub fn restore_state(&mut self, cursor: u64, g: Vec<f64>) -> Result<()> {
+        if g.len() != self.m {
+            return Err(Error::Checkpoint(format!(
+                "straggler state carries {} nodes, cluster has {}",
+                g.len(),
+                self.m
+            )));
+        }
+        self.cursor = cursor;
+        self.g = g;
+        self.hist_len = 0;
+        self.hist_head = 0;
+        Ok(())
+    }
+
+    /// Start a new averaging call: the slack window never reaches into a
+    /// previous call, so checkpoint/resume at call boundaries is exact.
+    pub fn begin_call(&mut self) {
+        self.hist_len = 0;
+        self.hist_head = 0;
+    }
+
+    /// Draw round `cursor`'s per-node multipliers: advance the AR(1)
+    /// state by one step from the `(seed, cursor, node order)` stream.
+    fn advance_round(&mut self) {
+        let mut rng = Xoshiro256StarStar::seed_from_u64(self.cfg.seed).derive(self.cursor);
+        let rho = self.cfg.corr;
+        let innov = (1.0 - rho * rho).max(0.0).sqrt();
+        for g in self.g.iter_mut() {
+            let eps = rng.gaussian();
+            *g = if self.cursor == 0 { eps } else { rho * *g + innov * eps };
+        }
+        self.cursor += 1;
+    }
+
+    /// Archive this round's multipliers into the window ring, growing it
+    /// to hold at least `want` rounds. Allocation happens only when the
+    /// observed slack grows; the steady state reuses the ring.
+    fn push_hist(&mut self, want: usize) {
+        let m = self.m.max(1);
+        let cap = self.hist.len() / m;
+        if cap < want {
+            // Re-lay-out chronologically: oldest bank at slot 0, newest
+            // at slot `hist_len - 1`, next write at `hist_len`.
+            let mut grown = vec![1.0; want * m];
+            for w in 0..self.hist_len {
+                let src = ((self.hist_head + cap - 1 - w) % cap) * m;
+                let dst = (self.hist_len - 1 - w) * m;
+                grown[dst..dst + m].copy_from_slice(&self.hist[src..src + m]);
+            }
+            self.hist = grown;
+            self.hist_head = self.hist_len;
+        }
+        let cap = self.hist.len() / m;
+        let slot = self.hist_head * m;
+        for i in 0..self.m {
+            self.hist[slot + i] = (self.cfg.sigma * self.g[i]).exp();
+        }
+        self.hist_head = (self.hist_head + 1) % cap;
+        self.hist_len = (self.hist_len + 1).min(cap);
+    }
+
+    /// Multiplier of the w-rounds-ago bank for node `i` (w = 0 is the
+    /// current round). `w` must be `< hist_len`.
+    fn hist_at(&self, w: usize, i: usize) -> f64 {
+        let cap = self.hist.len() / self.m.max(1);
+        let slot = (self.hist_head + cap - 1 - w) % cap;
+        self.hist[slot * self.m + i]
+    }
+
+    /// Advance one round and return the barrier multiplier the clock
+    /// charges: the per-round critical path. `slack = 0` is the full
+    /// barrier (`max_i` of this round's draws); `slack > 0` is the
+    /// slack-adjusted path (`max_i min` over each node's last
+    /// `min(slack, node_slack_i) + 1` draws).
+    pub fn round_mult(&mut self, slack: usize) -> f64 {
+        self.advance_round();
+        self.push_hist(slack + 1);
+        let mut path = f64::NEG_INFINITY;
+        for i in 0..self.m {
+            let s_i = match &self.node_slack {
+                Some(v) => v[i].min(slack),
+                None => slack,
+            };
+            let window = (s_i + 1).min(self.hist_len);
+            let mut best = f64::INFINITY;
+            for w in 0..window {
+                best = best.min(self.hist_at(w, i));
+            }
+            path = path.max(best);
+        }
+        if path.is_finite() {
+            path
+        } else {
+            1.0 // m == 0: degenerate, charge the homogeneous barrier
+        }
+    }
 }
 
 #[cfg(test)]
@@ -202,55 +394,151 @@ mod tests {
     }
 
     #[test]
-    fn homogeneous_node_latency_is_the_plain_model_bit_for_bit() {
+    fn round_time_mult_scales_alpha_only() {
         let m = LatencyModel { alpha: 0.01, beta: 1000.0 };
+        // mult 1 is the plain synchronous round, bit for bit.
+        assert_eq!(
+            m.round_time_mult(1.0, 2, 500).to_bits(),
+            m.round_time(2, 500).to_bits()
+        );
+        assert!((m.round_time_mult(3.0, 2, 500) - (0.03 + 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn homogeneous_node_latency_is_inert() {
         let nl = NodeLatency::default();
         assert!(!nl.is_heterogeneous());
         nl.validate().unwrap();
         assert_eq!(nl.multipliers(5), vec![1.0; 5]);
-        let p = nl.profile(5);
-        assert_eq!(p, StragglerProfile { max_mult: 1.0, median_mult: 1.0 });
-        assert_eq!(
-            m.round_time_straggler(&p, 2, 500).to_bits(),
-            m.round_time(2, 500).to_bits()
-        );
-        assert_eq!(
-            m.relaxed_round_time_straggler(&p, 2, 500, 3).to_bits(),
-            m.relaxed_round_time(2, 500, 3).to_bits()
-        );
     }
 
     #[test]
     fn straggler_draws_are_seeded_and_lognormal_shaped() {
-        let nl = NodeLatency { sigma: 0.8, seed: 17 };
+        let nl = NodeLatency { sigma: 0.8, seed: 17, corr: 0.0 };
         nl.validate().unwrap();
         assert!(nl.is_heterogeneous());
         // Deterministic in (seed, m).
         assert_eq!(nl.multipliers(10), nl.multipliers(10));
-        let other = NodeLatency { sigma: 0.8, seed: 18 };
+        let other = NodeLatency { sigma: 0.8, seed: 18, corr: 0.0 };
         assert_ne!(nl.multipliers(10), other.multipliers(10));
-        // All positive; max dominates the median (heavy right tail).
-        let p = nl.profile(20);
-        assert!(nl.multipliers(20).iter().all(|&x| x > 0.0));
-        assert!(p.max_mult > p.median_mult, "{p:?}");
+        // All positive; the max dominates the median (heavy right tail).
+        let mults = nl.multipliers(20);
+        assert!(mults.iter().all(|&x| x > 0.0));
+        let max = mults.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        assert!(max > crate::util::median(&mults));
         // The median of a median-1 lognormal sits near 1.
-        let big = NodeLatency { sigma: 0.5, seed: 3 }.profile(4001);
-        assert!((big.median_mult - 1.0).abs() < 0.1, "{}", big.median_mult);
+        let big = NodeLatency { sigma: 0.5, seed: 3, corr: 0.0 }.multipliers(4001);
+        assert!((crate::util::median(&big) - 1.0).abs() < 0.1);
         // Validation rejects nonsense.
-        assert!(NodeLatency { sigma: -0.1, seed: 0 }.validate().is_err());
-        assert!(NodeLatency { sigma: f64::NAN, seed: 0 }.validate().is_err());
+        assert!(NodeLatency { sigma: -0.1, seed: 0, corr: 0.0 }.validate().is_err());
+        assert!(NodeLatency { sigma: f64::NAN, seed: 0, corr: 0.0 }.validate().is_err());
+        assert!(NodeLatency { sigma: 0.5, seed: 0, corr: -0.1 }.validate().is_err());
+        assert!(NodeLatency { sigma: 0.5, seed: 0, corr: 1.5 }.validate().is_err());
+        assert!(NodeLatency { sigma: 0.5, seed: 0, corr: f64::NAN }.validate().is_err());
+        // corr without a sigma correlates nothing — rejected on every
+        // construction path (the builder runs this validate too), not
+        // just the TOML/CLI front-end.
+        assert!(NodeLatency { sigma: 0.0, seed: 0, corr: 0.5 }.validate().is_err());
     }
 
     #[test]
-    fn straggler_sync_charges_max_relaxed_charges_median() {
-        let m = LatencyModel { alpha: 0.01, beta: 1e12 }; // ~1e-9 s byte term
-        let p = StragglerProfile { max_mult: 3.0, median_mult: 1.1 };
-        let sync = m.round_time_straggler(&p, 2, 500);
-        assert!((sync - 0.03).abs() < 1e-7, "{sync}");
-        let relaxed = m.relaxed_round_time_straggler(&p, 2, 500, 2);
-        assert!((relaxed - 0.011 / 3.0).abs() < 1e-7, "{relaxed}");
-        // The straggler gap: sync pays the tail, relaxed hides it.
-        assert!(relaxed < sync / 3.0);
+    fn sampler_is_deterministic_and_resumable() {
+        let cfg = NodeLatency { sigma: 0.7, seed: 9, corr: 0.4 };
+        let mut a = StragglerSampler::new(cfg, 6);
+        let mut b = StragglerSampler::new(cfg, 6);
+        let seq_a: Vec<f64> = (0..20).map(|_| a.round_mult(0)).collect();
+        let seq_b: Vec<f64> = (0..20).map(|_| b.round_mult(0)).collect();
+        assert_eq!(seq_a, seq_b);
+        // Restore mid-stream: a fresh sampler fast-forwarded to the
+        // checkpointed (cursor, state) replays the tail bit-identically.
+        let mut c = StragglerSampler::new(cfg, 6);
+        for _ in 0..12 {
+            c.round_mult(0);
+        }
+        let (cursor, g) = c.state();
+        assert_eq!(cursor, 12);
+        let mut d = StragglerSampler::new(cfg, 6);
+        d.restore_state(cursor, g).unwrap();
+        for want in &seq_a[12..] {
+            assert_eq!(d.round_mult(0).to_bits(), want.to_bits());
+        }
+        // State length is validated.
+        let mut e = StragglerSampler::new(cfg, 6);
+        assert!(e.restore_state(3, vec![0.0; 4]).is_err());
+    }
+
+    #[test]
+    fn corr_one_freezes_the_round_zero_multipliers() {
+        let cfg = NodeLatency { sigma: 0.8, seed: 17, corr: 1.0 };
+        let mut s = StragglerSampler::new(cfg, 8);
+        let fixed_max = cfg
+            .multipliers(8)
+            .iter()
+            .copied()
+            .fold(f64::NEG_INFINITY, f64::max);
+        for _ in 0..10 {
+            assert_eq!(s.round_mult(0).to_bits(), fixed_max.to_bits());
+        }
+        // ... and slack cannot hide a persistently slow node: the
+        // window-min of a constant is the constant.
+        let mut relaxed = StragglerSampler::new(cfg, 8);
+        for _ in 0..10 {
+            assert_eq!(relaxed.round_mult(3).to_bits(), fixed_max.to_bits());
+        }
+    }
+
+    #[test]
+    fn slack_hides_transient_spikes_but_sync_pays_them() {
+        let cfg = NodeLatency { sigma: 0.8, seed: 5, corr: 0.0 };
+        let rounds = 40;
+        let mut sync = StragglerSampler::new(cfg, 6);
+        let mut relaxed = StragglerSampler::new(cfg, 6);
+        let sync_total: f64 = (0..rounds).map(|_| sync.round_mult(0)).sum();
+        let relaxed_total: f64 = (0..rounds).map(|_| relaxed.round_mult(2)).sum();
+        // i.i.d. spikes mostly vanish inside a 3-round window.
+        assert!(relaxed_total < sync_total, "{relaxed_total} vs {sync_total}");
+        // A slack-0 call on the relaxed sampler charges the full barrier
+        // again: this round's max, ignoring the window.
+        let full = relaxed.round_mult(0);
+        assert!(full > 0.0);
+    }
+
+    #[test]
+    fn per_node_slack_hides_only_the_lagged_node() {
+        // OneSlow: node 2 may lag 3 rounds; everyone else synchronizes.
+        let cfg = NodeLatency { sigma: 0.8, seed: 5, corr: 0.0 };
+        let rounds = 60;
+        let mut all = StragglerSampler::new(cfg, 6);
+        let mut one = StragglerSampler::new(cfg, 6);
+        one.set_node_slack(vec![0, 0, 3, 0, 0, 0]);
+        let mut none = StragglerSampler::new(cfg, 6);
+        none.set_node_slack(vec![0; 6]);
+        let all_total: f64 = (0..rounds).map(|_| all.round_mult(3)).sum();
+        let one_total: f64 = (0..rounds).map(|_| one.round_mult(3)).sum();
+        let none_total: f64 = (0..rounds).map(|_| none.round_mult(3)).sum();
+        // A zero slack profile charges the full synchronous path even on
+        // relaxed calls; lagging one node saves something; lagging all
+        // nodes saves the most.
+        assert!(one_total < none_total, "{one_total} vs {none_total}");
+        assert!(all_total < one_total, "{all_total} vs {one_total}");
+    }
+
+    #[test]
+    fn begin_call_resets_the_window() {
+        let cfg = NodeLatency { sigma: 0.8, seed: 11, corr: 0.0 };
+        // Two samplers over the same stream; one resets its window
+        // between rounds, so every charge is a full-window-1 barrier.
+        let mut windowed = StragglerSampler::new(cfg, 4);
+        let mut reset = StragglerSampler::new(cfg, 4);
+        let mut w_total = 0.0;
+        let mut r_total = 0.0;
+        for _ in 0..30 {
+            w_total += windowed.round_mult(2);
+            reset.begin_call();
+            r_total += reset.round_mult(2);
+        }
+        // A window that never grows past one round cannot hide spikes.
+        assert!(w_total < r_total, "{w_total} vs {r_total}");
     }
 
     #[test]

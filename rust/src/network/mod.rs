@@ -26,9 +26,16 @@
 //! * [`CommLedger`] — thread-safe message/byte/round counters (the data
 //!   source for the eq. (14)–(16) communication-load comparison);
 //! * [`LatencyModel`] — an α-β cost model mapping (rounds, bytes) to
-//!   simulated wall-clock time, with an optional seeded per-node
-//!   lognormal straggler distribution ([`NodeLatency`]): synchronous
-//!   barriers charge the max node, staleness-relaxed rounds the median.
+//!   simulated wall-clock time, with an optional per-round straggler
+//!   critical path ([`NodeLatency`] / [`StragglerSampler`]): every
+//!   gossip round samples each node's latency from a seeded AR(1)
+//!   lognormal stream, synchronous barriers charge that round's max
+//!   node, and staleness-relaxed rounds charge the slack-adjusted path
+//!   (transient spikes hide inside the slack window; persistently slow
+//!   nodes still gate);
+//! * [`StalenessSchedule`] — how iteration-level staleness ages are
+//!   assigned (seeded i.i.d. draws, a fixed lag, or one slow node at
+//!   constant lag — the Liang et al. Fig.-2 settings).
 
 mod accounting;
 mod fabric;
@@ -40,9 +47,9 @@ mod topology;
 pub use accounting::{CommLedger, CommSnapshot};
 pub use fabric::{
     AdaptiveDeltaPolicy, CommConfig, CommFabric, CommSchedule, LossyFabric, SemiSyncFabric,
-    SynchronousFabric,
+    StalenessSchedule, SynchronousFabric,
 };
 pub use gossip::GossipEngine;
-pub use latency::{LatencyModel, NodeLatency, StragglerProfile};
+pub use latency::{LatencyModel, NodeLatency, StragglerSampler};
 pub use mixing::{MixingMatrix, WeightRule};
 pub use topology::Topology;

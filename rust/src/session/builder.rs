@@ -4,8 +4,8 @@ use super::{StopPolicy, TrainSession};
 use crate::coordinator::{ConsensusMode, DssfnAlgorithm, TaskRef, TrainOptions};
 use crate::data::{lookup, ClassificationTask};
 use crate::network::{
-    AdaptiveDeltaPolicy, CommConfig, CommSchedule, LatencyModel, NodeLatency, Topology,
-    WeightRule,
+    AdaptiveDeltaPolicy, CommConfig, CommSchedule, LatencyModel, NodeLatency, StalenessSchedule,
+    Topology, WeightRule,
 };
 use crate::runtime::{ComputeBackend, NativeBackend};
 use crate::ssfn::{GrowthPolicy, SsfnArchitecture, TrainHyper};
@@ -52,6 +52,7 @@ pub struct SessionBuilder {
     adaptive_delta: Option<AdaptiveDeltaPolicy>,
     node_latency: NodeLatency,
     iter_staleness: usize,
+    iter_schedule: StalenessSchedule,
     latency: LatencyModel,
     threads: usize,
     record_cost_curve: bool,
@@ -92,6 +93,7 @@ impl SessionBuilder {
             adaptive_delta: None,
             node_latency: NodeLatency::default(),
             iter_staleness: 0,
+            iter_schedule: StalenessSchedule::default(),
             latency: LatencyModel::default(),
             threads: 0,
             record_cost_curve: true,
@@ -224,12 +226,32 @@ impl SessionBuilder {
         self
     }
 
-    /// Heterogeneous per-node latency (straggler) model: node `i`'s
-    /// barrier cost is `α·exp(σ·g_i)` from a seeded lognormal draw.
-    /// Synchronous rounds then charge the simulated clock the max node,
-    /// staleness-relaxed rounds the median — the trained model and the
-    /// traffic accounting are unaffected (stragglers slow the clock,
-    /// never the math).
+    /// Heterogeneous per-node latency (straggler) model: every gossip
+    /// round samples node `i`'s barrier cost `α·exp(σ·g_i(r))` from a
+    /// seeded lognormal stream whose latent slowness follows an AR(1)
+    /// recursion of correlation [`NodeLatency::corr`]. Synchronous
+    /// rounds then charge the simulated clock this round's max node,
+    /// staleness-relaxed rounds the slack-adjusted critical path — the
+    /// trained model and the traffic accounting are unaffected
+    /// (stragglers slow the clock, never the math).
+    ///
+    /// ```
+    /// use dssfn::network::NodeLatency;
+    /// use dssfn::session::SessionBuilder;
+    ///
+    /// // σ = 0.8 heterogeneity, slowness persisting over ~5 rounds.
+    /// let session = SessionBuilder::new()
+    ///     .dataset("quickstart")
+    ///     .layers(1)
+    ///     .hidden_extra(8)
+    ///     .admm_iterations(3)
+    ///     .nodes(4)
+    ///     .degree(1)
+    ///     .node_latency(NodeLatency { sigma: 0.8, seed: 7, corr: 0.8 })
+    ///     .build()
+    ///     .unwrap();
+    /// assert!(session.describe().contains("straggler(σ=0.8, ρ=0.8)"));
+    /// ```
     pub fn node_latency(mut self, node_latency: NodeLatency) -> Self {
         self.node_latency = node_latency;
         self
@@ -244,6 +266,34 @@ impl SessionBuilder {
     /// *rounds* inside one averaging instead.
     pub fn iter_staleness(mut self, s: usize) -> Self {
         self.iter_staleness = s;
+        self
+    }
+
+    /// How iteration-staleness ages are assigned when
+    /// [`SessionBuilder::iter_staleness`] is on: seeded i.i.d. draws
+    /// (the default), a fixed lag for every node, or one slow node at
+    /// constant lag (Liang et al.'s Fig.-2 fixed-delay sweeps).
+    ///
+    /// ```
+    /// use dssfn::network::StalenessSchedule;
+    /// use dssfn::session::SessionBuilder;
+    ///
+    /// // Every node reads exactly 1-iteration-old consensus state.
+    /// let session = SessionBuilder::new()
+    ///     .dataset("quickstart")
+    ///     .layers(1)
+    ///     .hidden_extra(8)
+    ///     .admm_iterations(4)
+    ///     .nodes(4)
+    ///     .degree(1)
+    ///     .iter_staleness(1)
+    ///     .iter_schedule(StalenessSchedule::FixedLag(1))
+    ///     .build()
+    ///     .unwrap();
+    /// assert!(session.describe().contains("fixed-lag(1)"));
+    /// ```
+    pub fn iter_schedule(mut self, schedule: StalenessSchedule) -> Self {
+        self.iter_schedule = schedule;
         self
     }
 
@@ -335,6 +385,7 @@ impl SessionBuilder {
             adaptive_delta: self.adaptive_delta,
             node_latency: self.node_latency,
             iter_staleness: self.iter_staleness,
+            iter_schedule: self.iter_schedule,
         };
         let alg = DssfnAlgorithm::with_comm(
             arch,
@@ -486,7 +537,7 @@ mod tests {
             .nodes(4)
             .degree(1)
             .exact_consensus()
-            .node_latency(NodeLatency { sigma: 0.5, seed: 1 })
+            .node_latency(NodeLatency { sigma: 0.5, seed: 1, corr: 0.0 })
             .build()
             .is_err());
         // Straggler sigma must be sane.
@@ -496,7 +547,7 @@ mod tests {
             .hidden_extra(8)
             .nodes(4)
             .degree(1)
-            .node_latency(NodeLatency { sigma: -0.5, seed: 1 })
+            .node_latency(NodeLatency { sigma: -0.5, seed: 1, corr: 0.0 })
             .build()
             .is_err());
     }
@@ -513,7 +564,7 @@ mod tests {
             .degree(1)
             .threads(1)
             .iter_staleness(2)
-            .node_latency(NodeLatency { sigma: 0.5, seed: 7 })
+            .node_latency(NodeLatency { sigma: 0.5, seed: 7, corr: 0.0 })
             .build()
             .unwrap();
         assert!(session.describe().contains("iter-stale(s=2)"), "{}", session.describe());

@@ -43,6 +43,42 @@
 //! [`crate::coordinator::DecentralizedTrainer::train_task`] behaviour
 //! **bit-identically** — in fact `train_task` is implemented on top of
 //! the session (pinned by `tests/coordinator_oracle.rs`).
+//!
+//! ## Checkpoint and resume
+//!
+//! A [`crate::coordinator::Checkpoint`] taken at any step boundary can
+//! be serialized, stored, and resumed later — the resumed run continues
+//! **bit-identically** (weights, cost curves, ledger, simulated clock,
+//! every seeded schedule):
+//!
+//! ```
+//! use dssfn::data::lookup;
+//! use dssfn::session::SessionBuilder;
+//! use dssfn::{resume_session, Checkpoint};
+//! use std::sync::Arc;
+//!
+//! let task = Arc::new(lookup("quickstart").unwrap().generator(3).generate().unwrap());
+//! let mut session = SessionBuilder::new()
+//!     .shared_task(Arc::clone(&task))
+//!     .seed(3)
+//!     .layers(1)
+//!     .hidden_extra(8)
+//!     .admm_iterations(3)
+//!     .nodes(4)
+//!     .degree(1)
+//!     .build()
+//!     .unwrap();
+//! session.step().unwrap(); // LayerPrepared
+//! session.step().unwrap(); // first ADMM iteration
+//! let bytes = session.checkpoint().unwrap().to_bytes();
+//! drop(session);
+//!
+//! // Later (any process): parse, resume, finish.
+//! let ck = Checkpoint::from_bytes(&bytes).unwrap();
+//! let mut resumed = resume_session(&ck, &task).unwrap();
+//! let (_model, report) = resumed.finish().unwrap();
+//! assert_eq!(report.layers.len(), 2); // layer 0 + the structured layer
+//! ```
 
 mod builder;
 mod driver;

@@ -276,6 +276,87 @@ fn unused_comm_flags_are_rejected_not_ignored() {
     assert!(text.contains("straggler(σ=0.5)"), "{text}");
 }
 
+/// The committed `docs/CLI.md` is exactly what the binary generates —
+/// the flag table, the usage text and the doc share one source, so they
+/// cannot drift.
+#[test]
+fn cli_doc_matches_committed_reference() {
+    let out = dssfn().arg("cli-doc").output().unwrap();
+    assert!(out.status.success());
+    let generated = String::from_utf8(out.stdout).unwrap();
+    assert_eq!(generated, dssfn::clidoc::markdown());
+    let committed = std::fs::read_to_string(
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../docs/CLI.md"),
+    )
+    .unwrap();
+    assert_eq!(
+        committed, generated,
+        "docs/CLI.md is stale; regenerate with `cargo run --release -- cli-doc > docs/CLI.md`"
+    );
+}
+
+#[test]
+fn straggler_corr_and_iter_schedule_flags() {
+    // --straggler-corr rides --straggler-sigma.
+    let out = dssfn()
+        .args(["train", "--dataset", "quickstart", "--straggler-corr", "0.5"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("straggler_sigma"));
+
+    // --iter-schedule shapes are validated at parse time...
+    let out = dssfn()
+        .args(["train", "--dataset", "quickstart", "--iter-schedule", "sometimes"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("iter_schedule"));
+
+    // ... and a non-default schedule rides --iter-staleness.
+    let out = dssfn()
+        .args(["train", "--dataset", "quickstart", "--iter-schedule", "fixed:2"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("iter_staleness"));
+
+    // info prints the full fabric line for a valid combination.
+    let out = dssfn()
+        .args([
+            "info", "--dataset", "quickstart", "--iter-staleness", "2",
+            "--iter-schedule", "oneslow:1:2", "--straggler-sigma", "0.5",
+            "--straggler-corr", "0.8",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("one-slow(node=1, lag=2)"), "{text}");
+    assert!(text.contains("straggler(σ=0.5, ρ=0.8)"), "{text}");
+
+    // A fixed-lag run trains end to end and reports its schedule.
+    let out = dssfn()
+        .args([
+            "train", "--dataset", "quickstart", "--layers", "1",
+            "--admm-iters", "8", "--nodes", "4", "--degree", "1",
+            "--iter-staleness", "2", "--iter-schedule", "fixed:1",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("fixed-lag(1)"), "{text}");
+}
+
 #[test]
 fn train_with_iter_staleness_and_straggler_model() {
     let out = dssfn()

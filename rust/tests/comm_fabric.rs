@@ -5,7 +5,7 @@
 //! checkpoint/resume of seeded schedules.
 
 use dssfn::data::lookup;
-use dssfn::network::{AdaptiveDeltaPolicy, CommSchedule, NodeLatency};
+use dssfn::network::{AdaptiveDeltaPolicy, CommSchedule, NodeLatency, StalenessSchedule};
 use dssfn::session::{SessionBuilder, StepEvent};
 use dssfn::{resume_session, Checkpoint};
 
@@ -186,9 +186,10 @@ fn semisync_adaptive_run_resumes_bit_identically() {
     assert_eq!(report.total_gossip_rounds(), one_report.total_gossip_rounds());
 }
 
-/// A heterogeneous (lognormal-α) cluster for the straggler tests.
+/// A heterogeneous (per-round lognormal-α) cluster for the straggler
+/// tests, with partially persistent slowness (AR(1) ρ = 0.6).
 fn straggler() -> NodeLatency {
-    NodeLatency { sigma: 0.8, seed: 17 }
+    NodeLatency { sigma: 0.8, seed: 17, corr: 0.6 }
 }
 
 /// The straggler model's simulated-seconds ordering: a heterogeneous
@@ -398,6 +399,165 @@ fn iteration_staleness_run_resumes_bit_identically() {
         one_report.simulated_comm_secs.to_bits(),
         "straggler clock drifted across resume"
     );
+}
+
+/// Liang et al.'s Fig.-2 fixed-delay setting: a `FixedLag` schedule
+/// consumes no randomness, so two fresh runs are bit-identical, and a
+/// mid-layer checkpoint resumes bit-identically — straggler clock
+/// (per-round AR(1) draws, v4 cursor + state) included.
+#[test]
+fn fixed_lag_schedule_is_deterministic_and_resumes_bit_identically() {
+    let task = std::sync::Arc::new(lookup("quickstart").unwrap().generator(5).generate().unwrap());
+    let builder = || {
+        SessionBuilder::new()
+            .shared_task(std::sync::Arc::clone(&task))
+            .seed(5)
+            .layers(2)
+            .hidden_extra(12)
+            .admm_iterations(12)
+            .nodes(4)
+            .degree(1)
+            .gossip_delta(1e-8)
+            .threads(2)
+            .iter_staleness(2)
+            .iter_schedule(StalenessSchedule::FixedLag(2))
+            .node_latency(straggler())
+    };
+    let (one_model, one_report) = builder().build().unwrap().run_to_completion().unwrap();
+    let one_model = one_model.into_ssfn().unwrap();
+    assert!(one_report.mode.contains("fixed-lag(2)"), "{}", one_report.mode);
+
+    // Two fresh runs are identical (no draws to diverge on)...
+    let (two_model, two_report) = builder().build().unwrap().run_to_completion().unwrap();
+    let two_model = two_model.into_ssfn().unwrap();
+    assert_eq!(two_model.output().max_abs_diff(one_model.output()), 0.0);
+    assert_eq!(two_report.full_cost_curve(), one_report.full_cost_curve());
+
+    // ... and the fixed ages genuinely differ from the i.i.d. draws.
+    let (_, iid_report) = SessionBuilder::new()
+        .shared_task(std::sync::Arc::clone(&task))
+        .seed(5)
+        .layers(2)
+        .hidden_extra(12)
+        .admm_iterations(12)
+        .nodes(4)
+        .degree(1)
+        .gossip_delta(1e-8)
+        .threads(2)
+        .iter_staleness(2)
+        .node_latency(straggler())
+        .build()
+        .unwrap()
+        .run_to_completion()
+        .unwrap();
+    assert_ne!(iid_report.full_cost_curve(), one_report.full_cost_curve());
+
+    // Interrupt mid-layer-1, serialize, restore, finish: bit-identical,
+    // simulated clock included.
+    let mut session = builder().build().unwrap();
+    let ck = loop {
+        match session.step().unwrap() {
+            Some(StepEvent::AdmmIteration { layer: 1, iteration: 5, .. }) => {
+                break session.checkpoint().unwrap();
+            }
+            Some(_) => {}
+            None => panic!("session finished before the checkpoint point"),
+        }
+    };
+    let bytes = ck.to_bytes();
+    drop(session);
+    let ck = Checkpoint::from_bytes(&bytes).unwrap();
+    assert_eq!(ck.comm_config().iter_schedule, StalenessSchedule::FixedLag(2));
+    let mut resumed = resume_session(&ck, &task).unwrap();
+    let (model, report) = resumed.finish().unwrap();
+    let model = model.into_ssfn().unwrap();
+    assert_eq!(model.output().max_abs_diff(one_model.output()), 0.0);
+    for (a, b) in model.weights().iter().zip(one_model.weights()) {
+        assert_eq!(a.max_abs_diff(b), 0.0, "restored weight drifted");
+    }
+    assert_eq!(report.full_cost_curve(), one_report.full_cost_curve());
+    assert_eq!(report.comm_total, one_report.comm_total);
+    assert_eq!(
+        report.simulated_comm_secs.to_bits(),
+        one_report.simulated_comm_secs.to_bits(),
+        "per-round straggler clock drifted across resume"
+    );
+}
+
+/// The `OneSlow` critical path: only the lagged node earns barrier
+/// slack, so the simulated clock orders fixed-lag (every node relaxed)
+/// ≤ one-slow (one node relaxed) ≤ fully synchronous — with identical
+/// traffic and bit-identical models throughout. And under fully
+/// persistent slowness (ρ = 1) the lagged node is *the* node charged on
+/// the critical path: slack hides transient spikes, never a node that
+/// is slow every round, so every variant charges exactly the
+/// synchronous clock.
+#[test]
+fn one_slow_lagged_node_is_the_one_charged_on_the_critical_path() {
+    let transient = NodeLatency { sigma: 0.8, seed: 17, corr: 0.0 };
+    let run = |schedule: Option<StalenessSchedule>, latency: NodeLatency| {
+        let mut b = mnist_small_builder().node_latency(latency);
+        if let Some(s) = schedule {
+            b = b.iter_staleness(2).iter_schedule(s);
+        }
+        let (model, report) = b.build().unwrap().run_to_completion().unwrap();
+        (model.into_ssfn().unwrap(), report)
+    };
+
+    let (sync_model, sync) = run(None, transient);
+    let (one_model, one) = run(Some(StalenessSchedule::OneSlow { node: 2, lag: 2 }), transient);
+    let (_fixed_model, fixed) = run(Some(StalenessSchedule::FixedLag(2)), transient);
+
+    // Identical traffic; the relaxation is in the waiting.
+    assert_eq!(one.comm_total, sync.comm_total);
+    assert_eq!(fixed.comm_total, sync.comm_total);
+    assert!(one.mode.contains("one-slow(node=2, lag=2)"), "{}", one.mode);
+
+    // fixed ≤ one-slow ≤ sync: every node's slack ≥ one node's slack ≥
+    // none (same per-round draws — the round counts are identical).
+    assert!(
+        one.simulated_comm_secs < sync.simulated_comm_secs,
+        "one-slow {} did not beat sync {}",
+        one.simulated_comm_secs,
+        sync.simulated_comm_secs
+    );
+    assert!(
+        fixed.simulated_comm_secs < one.simulated_comm_secs,
+        "fixed-lag {} did not beat one-slow {} (only the lagged node may hide)",
+        fixed.simulated_comm_secs,
+        one.simulated_comm_secs
+    );
+
+    // Staleness perturbs the iterate (stale consensus reads), so the
+    // models are *not* bit-identical to the no-staleness run — but the
+    // synchronous drain keeps the final-layer objective within the same
+    // 5% acceptance band the i.i.d. schedule is held to.
+    let sync_cost = sync.layers.last().unwrap().final_cost().unwrap();
+    for (name, report) in [("one-slow", &one), ("fixed-lag", &fixed)] {
+        let cost = report.layers.last().unwrap().final_cost().unwrap();
+        assert!(
+            (cost - sync_cost).abs() <= 0.05 * sync_cost.abs(),
+            "{name} final-layer cost {cost} vs sync {sync_cost}"
+        );
+    }
+
+    // ρ = 1: each node keeps one multiplier forever. The lagged node is
+    // slow *every* round, so its window-min is itself — the critical
+    // path charges it in full and one-slow's clock equals sync's, bit
+    // for bit. And stragglers never touch the math: the persistent-ρ
+    // one-slow model is bit-identical to the transient-ρ one (same
+    // schedule, same seed — only the simulated clock differs).
+    let persistent = NodeLatency { sigma: 0.8, seed: 17, corr: 1.0 };
+    let (sync_p_model, sync_p) = run(None, persistent);
+    let (one_p_model, one_p) =
+        run(Some(StalenessSchedule::OneSlow { node: 2, lag: 2 }), persistent);
+    assert_eq!(
+        one_p.simulated_comm_secs.to_bits(),
+        sync_p.simulated_comm_secs.to_bits(),
+        "persistent slowness must not hide inside the slack window"
+    );
+    assert_eq!(one_p_model.output().max_abs_diff(one_model.output()), 0.0);
+    assert_eq!(sync_p_model.output().max_abs_diff(sync_model.output()), 0.0);
 }
 
 /// The synchronous fabric really is the old path: a default-schedule
