@@ -1,0 +1,223 @@
+//! Bench E7 — the churn figure: training under seeded node crash /
+//! rejoin faults, per communication mode. The robustness counterpart
+//! of `fig_straggler`: it quantifies what membership churn costs — in
+//! simulated seconds, in bytes (restricted live-set mixing contracts
+//! slower on the thinned ring, plus catch-up replay traffic), and in
+//! final training cost — and that the degradation is graceful.
+//!
+//! ```text
+//! cargo bench --bench fig_churn [-- --dataset mnist-small]
+//!                               [-- --layers 1] [-- --rejoin 0.7]
+//!                               [-- --json BENCH_fig_churn.json]
+//! ```
+//!
+//! Sweeps the per-averaging crash probability over
+//! {0, 0.02, 0.05, 0.1, 0.2} crossed with the communication mode —
+//! `sync` (the paper's barrier) and `semisync` (round staleness s = 2)
+//! — on the default 10-node degree-2 ring with a 7-node quorum, and
+//! emits `BENCH_fig_churn.json` rows of `{crash_p, mode, sim_secs,
+//! bytes, final_cost, crashes, rejoins, stall_rounds}`.
+//!
+//! Asserted invariants (the acceptance criteria of the churn PR):
+//!
+//! * every faulty run actually churns (crashes > 0, and the heaviest
+//!   crash rate stalls below quorum at least once);
+//! * within each mode, simulated seconds and shipped bytes are
+//!   non-decreasing in the crash rate — faults cost wall-clock and
+//!   traffic (slower restricted contraction + catch-up replay), they
+//!   never make a run cheaper;
+//! * mild churn (crash-p ≤ 0.05 with rejoin) degrades gracefully: the
+//!   final training cost stays within 5% of the fault-free run.
+
+use dssfn::network::ChaosConfig;
+use dssfn::session::SessionBuilder;
+use dssfn::util::human_secs;
+use dssfn::StepEvent;
+
+struct Row {
+    crash_p: f64,
+    mode: &'static str,
+    sim_secs: f64,
+    bytes: u64,
+    final_cost: f64,
+    crashes: u64,
+    rejoins: u64,
+    stall_rounds: u64,
+}
+
+fn write_json(path: &str, rows: &[Row]) -> std::io::Result<()> {
+    let mut s = String::from("[\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "  {{\"crash_p\": {}, \"mode\": \"{}\", \"sim_secs\": {:e}, \
+             \"bytes\": {}, \"final_cost\": {:e}, \"crashes\": {}, \
+             \"rejoins\": {}, \"stall_rounds\": {}}}{}\n",
+            r.crash_p,
+            r.mode,
+            r.sim_secs,
+            r.bytes,
+            r.final_cost,
+            r.crashes,
+            r.rejoins,
+            r.stall_rounds,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("]\n");
+    std::fs::write(path, s)
+}
+
+fn main() -> dssfn::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let arg = |key: &str| {
+        args.iter()
+            .position(|a| a == key)
+            .and_then(|i| args.get(i + 1))
+            .cloned()
+    };
+    let dataset = arg("--dataset").unwrap_or_else(|| "mnist-small".to_string());
+    let layers: usize = arg("--layers").and_then(|s| s.parse().ok()).unwrap_or(1);
+    let rejoin_p: f64 = arg("--rejoin").and_then(|s| s.parse().ok()).unwrap_or(0.7);
+    let json_path = arg("--json").unwrap_or_else(|| "BENCH_fig_churn.json".to_string());
+
+    const CRASH_PS: [f64; 5] = [0.0, 0.02, 0.05, 0.1, 0.2];
+    const STALENESS: usize = 2;
+    const MIN_NODES: usize = 7;
+    let seed = 11u64;
+    // Membership stream: verified to churn at every faulty rate, stall
+    // at the heaviest one, and leave the mild (p = 0.05) run fully
+    // rejoined by its final averaging call.
+    let chaos_seed = 14u64;
+
+    let modes: [(&str, bool); 2] = [("sync", false), ("semisync", true)];
+
+    let builder = |crash_p: f64, semisync: bool| {
+        let mut b = SessionBuilder::new()
+            .dataset(dataset.clone())
+            .seed(seed)
+            .layers(layers)
+            .hidden_extra(30)
+            .admm_iterations(20)
+            .nodes(10)
+            .degree(2)
+            .gossip_delta(1e-8)
+            .record_cost_curve(true);
+        if semisync {
+            b = b.staleness(STALENESS);
+        }
+        if crash_p > 0.0 {
+            b = b.chaos(ChaosConfig {
+                crash_p,
+                rejoin_p,
+                seed: chaos_seed,
+                min_nodes: MIN_NODES,
+            });
+        }
+        b
+    };
+
+    println!(
+        "FIG_CHURN on '{dataset}': M=10 d=2 K=20 L={layers}, \
+         rejoin={rejoin_p}, quorum={MIN_NODES}"
+    );
+    println!(
+        "{:>7} {:>9} {:>14} {:>12} {:>14} {:>8} {:>8} {:>7}",
+        "crash-p", "mode", "sim secs", "MiB", "final cost", "crashes", "rejoins", "stalls"
+    );
+
+    let mut rows: Vec<Row> = Vec::new();
+    for &crash_p in &CRASH_PS {
+        for &(mode, semisync) in &modes {
+            let mut session = builder(crash_p, semisync).build()?;
+            let (mut crashes, mut rejoins, mut stall_rounds) = (0u64, 0u64, 0u64);
+            while let Some(ev) = session.step()? {
+                match ev {
+                    StepEvent::NodeDropped { .. } => crashes += 1,
+                    StepEvent::NodeRejoined { .. } => rejoins += 1,
+                    StepEvent::QuorumStalled { rounds, .. } => stall_rounds += rounds,
+                    _ => {}
+                }
+            }
+            let (_, report) = session.finish()?;
+            let final_cost = report
+                .layers
+                .last()
+                .and_then(|l| l.final_cost())
+                .unwrap_or(f64::NAN);
+            let row = Row {
+                crash_p,
+                mode,
+                sim_secs: report.simulated_comm_secs,
+                bytes: report.comm_total.bytes,
+                final_cost,
+                crashes,
+                rejoins,
+                stall_rounds,
+            };
+            println!(
+                "{:>7} {:>9} {:>14} {:>12.3} {:>14.6} {:>8} {:>8} {:>7}",
+                crash_p,
+                mode,
+                human_secs(row.sim_secs),
+                row.bytes as f64 / (1u64 << 20) as f64,
+                final_cost,
+                crashes,
+                rejoins,
+                stall_rounds
+            );
+            rows.push(row);
+        }
+    }
+
+    // Churn is real: every faulty run crashes at least once, and the
+    // heaviest rate dips below the quorum.
+    for r in rows.iter().filter(|r| r.crash_p > 0.0) {
+        assert!(r.crashes > 0, "{}/p={}: no crash fired", r.mode, r.crash_p);
+    }
+    let max_p = CRASH_PS[CRASH_PS.len() - 1];
+    for &(mode, _) in &modes {
+        let at = |p: f64| {
+            rows.iter()
+                .find(|r| r.crash_p == p && r.mode == mode)
+                .expect("row recorded")
+        };
+        assert!(
+            at(max_p).stall_rounds > 0,
+            "{mode}/p={max_p}: quorum never stalled"
+        );
+        // Faults cost time and traffic — monotonically in the rate.
+        for w in CRASH_PS.windows(2) {
+            let (lo, hi) = (at(w[0]), at(w[1]));
+            assert!(
+                hi.sim_secs >= lo.sim_secs,
+                "{mode}: sim secs fell from {} (p={}) to {} (p={})",
+                lo.sim_secs,
+                w[0],
+                hi.sim_secs,
+                w[1]
+            );
+            assert!(
+                hi.bytes >= lo.bytes,
+                "{mode}: bytes fell from {} (p={}) to {} (p={})",
+                lo.bytes,
+                w[0],
+                hi.bytes,
+                w[1]
+            );
+        }
+        // Graceful degradation: mild churn stays within 5% of the
+        // fault-free final cost.
+        let c0 = at(0.0).final_cost;
+        for &p in CRASH_PS.iter().filter(|&&p| p > 0.0 && p <= 0.05) {
+            let c = at(p).final_cost;
+            assert!(
+                (c - c0).abs() <= 0.05 * c0.abs().max(1e-12),
+                "{mode}: final cost {c} at p={p} strays >5% from fault-free {c0}"
+            );
+        }
+    }
+
+    write_json(&json_path, &rows).map_err(dssfn::Error::Io)?;
+    eprintln!("wrote {json_path} ({} rows)", rows.len());
+    Ok(())
+}

@@ -23,7 +23,8 @@ pub const COMMANDS: &[(&str, &str)] = &[
 ];
 
 /// One CLI flag: its value shape (empty = boolean switch), the commands
-/// it affects, its default, and a one-line description.
+/// it affects, its default, its `--config` file key, and a one-line
+/// description.
 pub struct Flag {
     /// Flag name including the leading `--`.
     pub name: &'static str,
@@ -33,6 +34,9 @@ pub struct Flag {
     pub commands: &'static str,
     /// Default when the flag is absent (`""` = none / off).
     pub default: &'static str,
+    /// The `section.key` a `--config` TOML file uses for the same knob
+    /// (`""` = CLI-only, no file equivalent).
+    pub toml: &'static str,
     /// One-line description.
     pub help: &'static str,
 }
@@ -41,71 +45,90 @@ pub struct Flag {
 /// `docs/CLI.md` are rendered from.
 pub const FLAGS: &[Flag] = &[
     Flag { name: "--config", value: "FILE", commands: "train central sweep info", default: "",
-        help: "load a TOML experiment file first; later flags override it" },
+        toml: "", help: "load a TOML experiment file first; later flags override it" },
     Flag { name: "--dataset", value: "KEY", commands: "train central sweep info", default: "quickstart",
-        help: "dataset registry key (see `dssfn datasets`)" },
+        toml: "experiment.dataset", help: "dataset registry key (see `dssfn datasets`)" },
     Flag { name: "--seed", value: "S", commands: "train central sweep info", default: "0xD55F",
-        help: "master seed: data, random matrices, comm schedules, stragglers" },
+        toml: "experiment.seed", help: "master seed: data, random matrices, comm schedules, stragglers" },
     Flag { name: "--layers", value: "L", commands: "train central sweep info", default: "20 (5 for -small presets)",
-        help: "SSFN depth L" },
+        toml: "model.layers", help: "SSFN depth L" },
     Flag { name: "--admm-iters", value: "K", commands: "train central sweep info", default: "100 (50 for -small presets)",
-        help: "ADMM iterations per layer K" },
+        toml: "admm.iterations", help: "ADMM iterations per layer K" },
     Flag { name: "--mu0", value: "F", commands: "train central sweep info", default: "0.01",
-        help: "Lagrangian mu for the input-layer solve" },
+        toml: "admm.mu0", help: "Lagrangian mu for the input-layer solve" },
     Flag { name: "--mul", value: "F", commands: "train central sweep info", default: "1.0",
-        help: "Lagrangian mu for the hidden-layer solves" },
+        toml: "admm.mul", help: "Lagrangian mu for the hidden-layer solves" },
     Flag { name: "--nodes", value: "M", commands: "train sweep info", default: "20 (10 for -small presets)",
-        help: "worker count M" },
+        toml: "network.nodes", help: "worker count M" },
     Flag { name: "--degree", value: "D", commands: "train sweep info", default: "4 (2 for -small presets)",
-        help: "circular-topology degree d" },
+        toml: "network.degree", help: "circular-topology degree d" },
     Flag { name: "--degrees", value: "1,2,...", commands: "sweep", default: "1..=M/2",
-        help: "explicit degree list for the sweep" },
+        toml: "", help: "explicit degree list for the sweep" },
     Flag { name: "--exact-consensus", value: "", commands: "train sweep info", default: "",
-        help: "idealized exact averaging instead of gossip (ablation)" },
+        toml: "network.exact_consensus", help: "idealized exact averaging instead of gossip (ablation)" },
     Flag { name: "--schedule", value: "sync|semisync|lossy", commands: "train sweep info", default: "sync",
-        help: "communication fabric: synchronous, bounded-staleness, or lossy gossip" },
+        toml: "network.schedule", help: "communication fabric: synchronous, bounded-staleness, or lossy gossip" },
     Flag { name: "--staleness", value: "S", commands: "train sweep info", default: "2 when semisync",
-        help: "semisync only: neighbour reads up to S rounds stale" },
+        toml: "network.staleness", help: "semisync only: neighbour reads up to S rounds stale" },
     Flag { name: "--loss-p", value: "P", commands: "train sweep info", default: "0.1 when lossy",
-        help: "lossy only: per-round, per-edge drop probability in [0,1)" },
+        toml: "network.loss_p", help: "lossy only: per-round, per-edge drop probability in [0,1)" },
     Flag { name: "--adaptive-delta", value: "MAX", commands: "train sweep info", default: "",
-        help: "L-FGADMM adaptive consensus tolerance: loosen gossip delta up to MAX on cost plateaus" },
+        toml: "network.adaptive_delta", help: "L-FGADMM adaptive consensus tolerance: loosen gossip delta up to MAX on cost plateaus" },
     Flag { name: "--adaptive-period", value: "P", commands: "train sweep info", default: "1",
-        help: "L-FGADMM communication-period doubling cap (skips whole averaging calls on plateaus)" },
+        toml: "network.adaptive_period", help: "L-FGADMM communication-period doubling cap (skips whole averaging calls on plateaus)" },
     Flag { name: "--iter-staleness", value: "S", commands: "train sweep info", default: "0",
-        help: "bounded-staleness ADMM (Liang et al. 2020): updates read consensus state up to S iterations old" },
+        toml: "network.iter_staleness", help: "bounded-staleness ADMM (Liang et al. 2020): updates read consensus state up to S iterations old" },
     Flag { name: "--iter-schedule", value: "iid|fixed:D|oneslow:NODE:LAG", commands: "train sweep info", default: "iid",
-        help: "how staleness ages are assigned: seeded draws, a fixed lag, or one slow node" },
+        toml: "network.iter_schedule", help: "how staleness ages are assigned: seeded draws, a fixed lag, or one slow node" },
     Flag { name: "--straggler-sigma", value: "F", commands: "train sweep info", default: "0",
-        help: "per-round lognormal latency heterogeneity (0 = the paper's homogeneous cluster)" },
+        toml: "network.straggler_sigma", help: "per-round lognormal latency heterogeneity (0 = the paper's homogeneous cluster)" },
     Flag { name: "--straggler-seed", value: "N", commands: "train sweep info", default: "0",
-        help: "seed of the per-round, per-node straggler draw stream" },
+        toml: "network.straggler_seed", help: "seed of the per-round, per-node straggler draw stream" },
     Flag { name: "--straggler-corr", value: "R", commands: "train sweep info", default: "0",
-        help: "AR(1) persistence of slowness in [0,1]: 0 = transient spikes, 1 = fixed multipliers" },
+        toml: "network.straggler_corr", help: "AR(1) persistence of slowness in [0,1]: 0 = transient spikes, 1 = fixed multipliers" },
+    Flag { name: "--chaos-crash-p", value: "P", commands: "train sweep info", default: "0",
+        toml: "network.chaos_crash_p", help: "per-averaging node crash probability in [0,1) (0 = fault-free)" },
+    Flag { name: "--chaos-rejoin-p", value: "P", commands: "train sweep info", default: "0",
+        toml: "network.chaos_rejoin_p", help: "per-averaging rejoin probability for crashed nodes (0 = crashes are permanent)" },
+    Flag { name: "--chaos-seed", value: "N", commands: "train sweep info", default: "0",
+        toml: "network.chaos_seed", help: "seed of the membership churn stream (crash, rejoin and backoff draws)" },
+    Flag { name: "--min-nodes", value: "Q", commands: "train sweep info", default: "1",
+        toml: "network.min_nodes", help: "quorum: averaging stalls (sim-time accrues, no traffic) while fewer than Q nodes are live" },
     Flag { name: "--backend", value: "native|pjrt", commands: "train info", default: "native",
-        help: "compute backend for the dense kernels" },
+        toml: "runtime.backend", help: "compute backend for the dense kernels" },
     Flag { name: "--artifacts", value: "DIR", commands: "train info", default: "artifacts",
-        help: "HLO artifact directory for the PJRT backend" },
+        toml: "runtime.artifacts", help: "HLO artifact directory for the PJRT backend" },
     Flag { name: "--threads", value: "N", commands: "train sweep", default: "0 (auto)",
-        help: "worker threads (node fan-out first, leftovers to intra-node kernels)" },
+        toml: "runtime.threads", help: "worker threads (node fan-out first, leftovers to intra-node kernels)" },
     Flag { name: "--no-curve", value: "", commands: "train sweep", default: "",
-        help: "skip per-iteration cost recording (throughput runs)" },
+        toml: "runtime.record_cost_curve", help: "skip per-iteration cost recording (throughput runs)" },
     Flag { name: "--verbose", value: "", commands: "train", default: "",
-        help: "stream every typed StepEvent to stderr" },
+        toml: "", help: "stream every typed StepEvent to stderr" },
     Flag { name: "--csv", value: "PATH", commands: "train sweep", default: "",
-        help: "write the cost curve (train) or sweep rows (sweep) as CSV" },
+        toml: "", help: "write the cost curve (train) or sweep rows (sweep) as CSV" },
     Flag { name: "--checkpoint", value: "PATH", commands: "train", default: "",
-        help: "snapshot the full session state at every layer boundary" },
+        toml: "", help: "snapshot the full session state at every layer boundary" },
     Flag { name: "--checkpoint-every", value: "K", commands: "train", default: "",
-        help: "additionally snapshot every K ADMM iterations (needs --checkpoint)" },
+        toml: "", help: "additionally snapshot every K ADMM iterations (needs --checkpoint)" },
     Flag { name: "--resume", value: "PATH", commands: "train", default: "",
-        help: "continue a checkpoint bit-identically (the file carries the run's configuration)" },
+        toml: "", help: "continue a checkpoint bit-identically (the file carries the run's configuration)" },
     Flag { name: "--max-bytes", value: "N", commands: "train", default: "",
-        help: "stop after N communicated bytes (model stays well-formed)" },
+        toml: "", help: "stop after N communicated bytes (model stays well-formed)" },
     Flag { name: "--max-sim-secs", value: "S", commands: "train", default: "",
-        help: "stop after S simulated seconds (compute + alpha-beta comm)" },
+        toml: "", help: "stop after S simulated seconds (compute + alpha-beta comm)" },
     Flag { name: "--cost-plateau", value: "F", commands: "train", default: "",
-        help: "stop growing layers once the relative cost improvement falls below F" },
+        toml: "", help: "stop growing layers once the relative cost improvement falls below F" },
+];
+
+/// `--config` file keys with no flag equivalent — the rest of the
+/// hand-maintained key list in `config.rs`'s header comment, folded in
+/// here so `docs/CLI.md` documents the whole TOML surface.
+pub const TOML_ONLY: &[(&str, &str)] = &[
+    ("model.hidden_extra", "hidden width is n = 2Q + hidden_extra (paper: 1000)"),
+    ("admm.eps", "explicit Frobenius projection radius (default 2Q)"),
+    ("network.delta", "gossip consensus tolerance per averaging call (default 1e-9)"),
+    ("network.alpha", "latency model: per-round setup cost in seconds (default 1e-3)"),
+    ("network.beta", "latency model: link bandwidth in bytes/second (default 1.25e8)"),
 ];
 
 /// One row of the cross-knob rejection matrix: a knob, the
@@ -155,6 +178,16 @@ pub const CONFLICTS: &[Conflict] = &[
         names: "straggler_sigma" },
     Conflict { knob: "`--straggler-corr`", rejected_when: "`--straggler-sigma` is 0 (no slowness to correlate)",
         names: "straggler_sigma" },
+    Conflict { knob: "`--chaos-crash-p`", rejected_when: "`--exact-consensus` is set",
+        names: "exact_consensus" },
+    Conflict { knob: "`--chaos-crash-p`", rejected_when: "`--iter-staleness` is set (frozen state has no staleness age)",
+        names: "staleness" },
+    Conflict { knob: "`--chaos-rejoin-p`", rejected_when: "`--chaos-crash-p` is 0 (nothing ever crashes)",
+        names: "chaos_crash_p" },
+    Conflict { knob: "`--chaos-seed`", rejected_when: "`--chaos-crash-p` is 0 (nothing is drawn)",
+        names: "chaos_crash_p" },
+    Conflict { knob: "`--min-nodes`", rejected_when: "`--chaos-crash-p` is 0, Q = 0, or Q > M",
+        names: "min_nodes" },
     Conflict { knob: "`--checkpoint-every`", rejected_when: "`--checkpoint` is not set, or K = 0",
         names: "checkpoint" },
     Conflict { knob: "any training flag", rejected_when: "`--resume` is set (the checkpoint carries the configuration)",
@@ -216,11 +249,14 @@ pub fn markdown() -> String {
         s.push_str(&format!("| `{name}` | {purpose} |\n"));
     }
     s.push_str(
-        "\n## Flags\n\nThe *commands* column lists where a flag has effect. Flags a\n\
-         configuration does not read are **errors, not silent no-ops** — see the\n\
-         rejection matrix below.\n\n",
+        "\n## Flags\n\nThe *commands* column lists where a flag has effect. The *TOML key*\n\
+         column is the `--config` file spelling of the same knob (— = CLI-only).\n\
+         Flags a configuration does not read are **errors, not silent no-ops**\n\
+         — see the rejection matrix below.\n\n",
     );
-    s.push_str("| flag | value | commands | default | description |\n|---|---|---|---|---|\n");
+    s.push_str(
+        "| flag | value | commands | default | TOML key | description |\n|---|---|---|---|---|---|\n",
+    );
     for f in FLAGS {
         let value = if f.value.is_empty() {
             "switch".to_string()
@@ -232,14 +268,27 @@ pub fn markdown() -> String {
         } else {
             format!("`{}`", escape_cell(f.default))
         };
+        let toml = if f.toml.is_empty() {
+            "—".to_string()
+        } else {
+            format!("`{}`", f.toml)
+        };
         s.push_str(&format!(
-            "| `{}` | {} | {} | {} | {} |\n",
+            "| `{}` | {} | {} | {} | {} | {} |\n",
             f.name,
             value,
             f.commands,
             default,
+            toml,
             escape_cell(f.help)
         ));
+    }
+    s.push_str(
+        "\n### TOML-only keys\n\nA few `--config` file keys have no flag equivalent:\n\n",
+    );
+    s.push_str("| TOML key | purpose |\n|---|---|\n");
+    for (key, purpose) in TOML_ONLY {
+        s.push_str(&format!("| `{key}` | {purpose} |\n"));
     }
     s.push_str(
         "\n## Cross-knob rejection matrix\n\nEvery row is enforced by `ExperimentConfig::comm_config()` (the one\n\
@@ -288,6 +337,13 @@ mod tests {
         for c in CONFLICTS {
             assert!(md.contains(c.names), "matrix missing {}", c.names);
         }
+        // Every TOML key (from flags and the TOML-only table) is rendered.
+        for f in FLAGS.iter().filter(|f| !f.toml.is_empty()) {
+            assert!(md.contains(f.toml), "markdown missing TOML key {}", f.toml);
+        }
+        for (key, _) in TOML_ONLY {
+            assert!(md.contains(key), "markdown missing TOML-only key {key}");
+        }
     }
 
     #[test]
@@ -304,6 +360,22 @@ mod tests {
                     f.name
                 );
             }
+            // TOML keys are `section.key` under a known section.
+            if !f.toml.is_empty() {
+                let section = f.toml.split('.').next().unwrap();
+                assert!(
+                    ["experiment", "model", "admm", "network", "runtime"].contains(&section),
+                    "{}: unknown TOML section '{section}'",
+                    f.name
+                );
+            }
+        }
+        // TOML-only keys must not shadow a flag's key.
+        for (key, _) in TOML_ONLY {
+            assert!(
+                FLAGS.iter().all(|f| f.toml != *key),
+                "TOML-only key {key} duplicates a flag's key"
+            );
         }
         // No duplicate flag names.
         for (i, f) in FLAGS.iter().enumerate() {

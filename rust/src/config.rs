@@ -35,6 +35,10 @@
 //! straggler_sigma = 0.5    # lognormal per-round α heterogeneity (0 = homogeneous)
 //! straggler_seed = 7       # seed of the per-round straggler draw
 //! straggler_corr = 0.8     # AR(1) persistence of slowness (0 = iid, 1 = fixed)
+//! chaos_crash_p = 0.05     # per-averaging node crash probability (0 = no faults)
+//! chaos_rejoin_p = 0.5     # per-averaging rejoin probability for crashed nodes
+//! chaos_seed = 7           # seed of the membership churn stream
+//! min_nodes = 2            # quorum: averaging stalls below this live count
 //! alpha = 0.001
 //! beta = 125000000.0
 //!
@@ -47,8 +51,8 @@
 use crate::coordinator::{ConsensusMode, TrainOptions};
 use crate::data::{lookup, ClassificationTask};
 use crate::network::{
-    AdaptiveDeltaPolicy, CommSchedule, LatencyModel, NodeLatency, StalenessSchedule, Topology,
-    WeightRule,
+    AdaptiveDeltaPolicy, ChaosConfig, CommSchedule, LatencyModel, NodeLatency, StalenessSchedule,
+    Topology, WeightRule,
 };
 use crate::ssfn::{SsfnArchitecture, TrainHyper};
 use crate::{Error, Result};
@@ -122,6 +126,17 @@ pub struct ExperimentConfig {
     /// AR(1) persistence of each node's slowness in `[0, 1]`: 0 draws
     /// every round independently, 1 freezes the round-0 multipliers.
     pub straggler_corr: f64,
+    /// Per-averaging node crash probability of the fault-injection
+    /// layer (0 = no faults, the default).
+    pub chaos_crash_p: f64,
+    /// Per-averaging rejoin probability for crashed nodes.
+    pub chaos_rejoin_p: f64,
+    /// Seed of the membership churn stream.
+    pub chaos_seed: u64,
+    /// Quorum gate: averaging stalls (simulated time accrues, no
+    /// traffic) while fewer than this many nodes are live. `None`
+    /// leaves the gate at 1 (never stall).
+    pub min_nodes: Option<usize>,
     /// Use exact averaging instead of gossip (ablation).
     pub exact_consensus: bool,
     /// α of the latency model (s/round).
@@ -162,6 +177,10 @@ impl Default for ExperimentConfig {
             straggler_sigma: 0.0,
             straggler_seed: 0,
             straggler_corr: 0.0,
+            chaos_crash_p: 0.0,
+            chaos_rejoin_p: 0.0,
+            chaos_seed: 0,
+            min_nodes: None,
             exact_consensus: false,
             alpha: 1e-3,
             beta: 125e6,
@@ -245,6 +264,10 @@ impl ExperimentConfig {
             "network.straggler_sigma" => self.straggler_sigma = num(key, value)?,
             "network.straggler_seed" => self.straggler_seed = num(key, value)?,
             "network.straggler_corr" => self.straggler_corr = num(key, value)?,
+            "network.chaos_crash_p" => self.chaos_crash_p = num(key, value)?,
+            "network.chaos_rejoin_p" => self.chaos_rejoin_p = num(key, value)?,
+            "network.chaos_seed" => self.chaos_seed = num(key, value)?,
+            "network.min_nodes" => self.min_nodes = Some(num(key, value)?),
             "network.exact_consensus" => self.exact_consensus = num(key, value)?,
             "network.alpha" => self.alpha = num(key, value)?,
             "network.beta" => self.beta = num(key, value)?,
@@ -371,6 +394,46 @@ impl ExperimentConfig {
                     .into(),
             ));
         }
+        // Chaos knobs that configure nothing are errors, not silent
+        // no-ops — same policy as the straggler seed above.
+        if self.chaos_crash_p == 0.0 {
+            if self.chaos_seed != 0 {
+                return Err(Error::Config(
+                    "chaos_seed needs chaos_crash_p > 0 (a fault-free run draws \
+                     nothing from the seed)"
+                        .into(),
+                ));
+            }
+            if self.chaos_rejoin_p != 0.0 {
+                return Err(Error::Config(
+                    "chaos_rejoin_p needs chaos_crash_p > 0 (no node ever crashes, \
+                     so nothing can rejoin)"
+                        .into(),
+                ));
+            }
+            if self.min_nodes.is_some() {
+                return Err(Error::Config(
+                    "min_nodes needs chaos_crash_p > 0 (no node ever crashes, so \
+                     the quorum gate would never engage)"
+                        .into(),
+                ));
+            }
+        }
+        let min_nodes = match self.min_nodes {
+            Some(0) => {
+                return Err(Error::Config(
+                    "min_nodes quorum must be at least 1".into(),
+                ))
+            }
+            Some(q) if q > self.nodes => {
+                return Err(Error::Config(format!(
+                    "min_nodes quorum {q} exceeds the cluster size M = {}",
+                    self.nodes
+                )))
+            }
+            Some(q) => q,
+            None => 1,
+        };
         let iter_schedule = parse_iter_schedule(&self.iter_schedule)?;
         let adaptive_delta = match self.adaptive_delta {
             Some(max_delta) => Some(AdaptiveDeltaPolicy {
@@ -421,6 +484,13 @@ impl ExperimentConfig {
                         .into(),
                 ));
             }
+            if self.chaos_crash_p != 0.0 {
+                return Err(Error::Config(
+                    "chaos_crash_p applies to gossip consensus only \
+                     (exact_consensus is set)"
+                        .into(),
+                ));
+            }
         }
         let comm = crate::network::CommConfig {
             schedule,
@@ -432,6 +502,12 @@ impl ExperimentConfig {
             },
             iter_staleness: self.iter_staleness,
             iter_schedule,
+            chaos: ChaosConfig {
+                crash_p: self.chaos_crash_p,
+                rejoin_p: self.chaos_rejoin_p,
+                seed: self.chaos_seed,
+                min_nodes,
+            },
         };
         if !self.exact_consensus {
             comm.validate_with_iterations(
@@ -492,6 +568,7 @@ impl ExperimentConfig {
                 .node_latency(comm.node_latency)
                 .iter_staleness(comm.iter_staleness)
                 .iter_schedule(comm.iter_schedule)
+                .chaos(comm.chaos)
         };
         if let Some(policy) = comm.adaptive_delta {
             b = b.adaptive_delta(policy);
@@ -932,6 +1009,68 @@ exact_consensus = true
         .unwrap();
         let err = cfg.comm_config().unwrap_err();
         assert!(err.to_string().contains("exact_consensus"), "{err}");
+    }
+
+    #[test]
+    fn chaos_keys_parse_validate_and_lower() {
+        // The full knob set lowers into the typed config.
+        let cfg = ExperimentConfig::from_toml(
+            "[network]\nchaos_crash_p = 0.05\nchaos_rejoin_p = 0.5\n\
+             chaos_seed = 7\nmin_nodes = 2",
+        )
+        .unwrap();
+        let comm = cfg.comm_config().unwrap();
+        assert_eq!(
+            comm.chaos,
+            ChaosConfig { crash_p: 0.05, rejoin_p: 0.5, seed: 7, min_nodes: 2 }
+        );
+        // A seed (or rejoin probability, or quorum) without a crash
+        // probability draws/gates nothing — rejected, not ignored.
+        for body in [
+            "chaos_seed = 7",
+            "chaos_rejoin_p = 0.5",
+            "min_nodes = 2",
+        ] {
+            let cfg =
+                ExperimentConfig::from_toml(&format!("[network]\n{body}")).unwrap();
+            let err = cfg.comm_config().unwrap_err();
+            assert!(err.to_string().contains("chaos_crash_p"), "{body}: {err}");
+        }
+        // Quorum bounds: at least 1, at most M.
+        let cfg = ExperimentConfig::from_toml(
+            "[network]\nchaos_crash_p = 0.1\nmin_nodes = 0",
+        )
+        .unwrap();
+        assert!(cfg.comm_config().is_err());
+        let cfg = ExperimentConfig::from_toml(
+            "[network]\nnodes = 4\nchaos_crash_p = 0.1\nmin_nodes = 5",
+        )
+        .unwrap();
+        let err = cfg.comm_config().unwrap_err();
+        assert!(err.to_string().contains("cluster size"), "{err}");
+        // Exact consensus takes no fault injection.
+        let cfg = ExperimentConfig::from_toml(
+            "[network]\nexact_consensus = true\nchaos_crash_p = 0.1",
+        )
+        .unwrap();
+        let err = cfg.comm_config().unwrap_err();
+        assert!(err.to_string().contains("exact_consensus"), "{err}");
+        // Probability range comes from ChaosConfig::validate.
+        let cfg = ExperimentConfig::from_toml("[network]\nchaos_crash_p = 1.5").unwrap();
+        assert!(cfg.comm_config().is_err());
+        // A valid config lowers into the builder.
+        let cfg = ExperimentConfig::from_toml(
+            "[experiment]\ndataset = \"quickstart\"\n\
+             [network]\nchaos_crash_p = 0.05\nchaos_rejoin_p = 0.5\nchaos_seed = 7",
+        )
+        .unwrap();
+        assert!(cfg.session_builder().is_ok());
+        // ... but not combined with iteration staleness.
+        let cfg = ExperimentConfig::from_toml(
+            "[network]\nchaos_crash_p = 0.05\nchaos_rejoin_p = 0.5\niter_staleness = 2",
+        )
+        .unwrap();
+        assert!(cfg.comm_config().is_err());
     }
 
     #[test]

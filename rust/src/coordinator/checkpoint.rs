@@ -31,8 +31,8 @@ use crate::admm::NodeState;
 use crate::linalg::Matrix;
 use crate::metrics::LayerRecord;
 use crate::network::{
-    AdaptiveDeltaPolicy, CommConfig, CommSchedule, CommSnapshot, LatencyModel, NodeLatency,
-    StalenessSchedule, Topology, WeightRule,
+    AdaptiveDeltaPolicy, ChaosConfig, CommConfig, CommSchedule, CommSnapshot, LatencyModel,
+    NodeLatency, StalenessSchedule, Topology, WeightRule,
 };
 use crate::ssfn::{SsfnArchitecture, TrainHyper};
 use crate::{Error, Result};
@@ -40,6 +40,12 @@ use std::io;
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"DSSFNCKP";
+/// Version 5 added seeded fault injection ([`ChaosConfig`]): the chaos
+/// knobs in the comm config plus the runtime membership cursor, the
+/// per-node liveness mask, and the cumulative quorum-stall count, so a
+/// run checkpointed mid-outage resumes bit-identically (same fault
+/// stream, same frozen nodes). v1–v4 snapshots upgrade with the
+/// zero-fault default — exactly the behaviour every older run had.
 /// Version 4 added the per-round straggler critical path: the AR(1)
 /// temporal-correlation knob (`NodeLatency::corr`), the iteration
 /// staleness age schedule ([`StalenessSchedule`]), and the straggler
@@ -57,7 +63,7 @@ const MAGIC: &[u8; 8] = b"DSSFNCKP";
 /// heterogeneous resume replays the run under the per-round clock model
 /// from round 0 (the aggregate charging it was written under no longer
 /// exists; model weights and traffic are unaffected either way).
-const VERSION: u32 = 4;
+const VERSION: u32 = 5;
 
 /// Where inside the layer state machine the snapshot was taken.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -123,6 +129,15 @@ pub struct Checkpoint {
     /// depends on every past round, so rebuilding it would mean
     /// replaying the whole draw history.
     pub(crate) straggler_g: Vec<f64>,
+    /// Fault-injection membership cursor (chaos steps drawn so far); 0
+    /// for fault-free runs.
+    pub(crate) chaos_cursor: u64,
+    /// Per-node liveness at the snapshot; empty (= all live) for
+    /// fault-free runs. Carried verbatim so a resume mid-outage keeps
+    /// the same nodes frozen.
+    pub(crate) chaos_live: Vec<bool>,
+    /// Cumulative quorum-stalled membership redraws so far.
+    pub(crate) chaos_stalls: u64,
     pub(crate) comm_before: CommSnapshot,
     pub(crate) ledger_total: CommSnapshot,
     pub(crate) sim_secs: f64,
@@ -164,6 +179,14 @@ impl Checkpoint {
     /// The communication configuration of the checkpointed run.
     pub fn comm_config(&self) -> CommConfig {
         self.comm
+    }
+
+    /// Per-node liveness at the snapshot. Empty means the run carries no
+    /// fault-injection state (fault-free, or chaos never engaged); any
+    /// `false` entry means the snapshot landed mid-outage and the resume
+    /// must keep that node frozen.
+    pub fn chaos_liveness(&self) -> &[bool] {
+        &self.chaos_live
     }
 
     /// Stream the versioned binary format into any writer. The bytes
@@ -275,6 +298,12 @@ impl Checkpoint {
                     }
                 }
             }
+            if version >= 5 {
+                w.f64(self.comm.chaos.crash_p)?;
+                w.f64(self.comm.chaos.rejoin_p)?;
+                w.u64(self.comm.chaos.seed)?;
+                w.u64(self.comm.chaos.min_nodes as u64)?;
+            }
         }
         // Growth policy, task fingerprint.
         w.opt_f64(self.growth)?;
@@ -314,6 +343,14 @@ impl Checkpoint {
         if version >= 4 {
             w.u64(self.straggler_cursor)?;
             w.f64s(&self.straggler_g)?;
+        }
+        if version >= 5 {
+            w.u64(self.chaos_cursor)?;
+            w.u64(self.chaos_live.len() as u64)?;
+            for &alive in &self.chaos_live {
+                w.u8(alive as u8)?;
+            }
+            w.u64(self.chaos_stalls)?;
         }
         w.snapshot(&self.comm_before)?;
         w.snapshot(&self.ledger_total)?;
@@ -449,7 +486,26 @@ impl Checkpoint {
             } else {
                 StalenessSchedule::Iid
             };
-            CommConfig { schedule, adaptive_delta, node_latency, iter_staleness, iter_schedule }
+            // v4 predates fault injection: the zero-fault default is
+            // exactly the (churn-free) run every v4 file described.
+            let chaos = if version >= 5 {
+                ChaosConfig {
+                    crash_p: r.f64()?,
+                    rejoin_p: r.f64()?,
+                    seed: r.u64()?,
+                    min_nodes: r.usize_()?,
+                }
+            } else {
+                ChaosConfig::default()
+            };
+            CommConfig {
+                schedule,
+                adaptive_delta,
+                node_latency,
+                iter_staleness,
+                iter_schedule,
+                chaos,
+            }
         } else {
             CommConfig::default()
         };
@@ -500,6 +556,23 @@ impl Checkpoint {
         } else {
             (0, Vec::new())
         };
+        let (chaos_cursor, chaos_live, chaos_stalls) = if version >= 5 {
+            let cursor = r.u64()?;
+            let n = r.usize_()?;
+            let mut live = Vec::with_capacity(n.min(1 << 20));
+            for _ in 0..n {
+                live.push(match r.u8()? {
+                    0 => false,
+                    1 => true,
+                    t => {
+                        return Err(Error::Checkpoint(format!("bad liveness tag {t}")));
+                    }
+                });
+            }
+            (cursor, live, r.u64()?)
+        } else {
+            (0, Vec::new(), 0)
+        };
         let comm_before = r.snapshot()?;
         let ledger_total = r.snapshot()?;
         let sim_secs = r.f64()?;
@@ -543,6 +616,9 @@ impl Checkpoint {
             stale_hist,
             straggler_cursor,
             straggler_g,
+            chaos_cursor,
+            chaos_live,
+            chaos_stalls,
             comm_before,
             ledger_total,
             sim_secs,
@@ -793,6 +869,7 @@ mod tests {
                 node_latency: NodeLatency { sigma: 0.25, seed: 99, corr: 0.5 },
                 iter_staleness: 0,
                 iter_schedule: StalenessSchedule::Iid,
+                chaos: ChaosConfig { crash_p: 0.05, rejoin_p: 0.5, seed: 13, min_nodes: 2 },
             },
             growth: Some(0.25),
             dataset: "oracle-toy".into(),
@@ -823,6 +900,9 @@ mod tests {
             stale_hist: vec![Matrix::from_fn(3, 3, |r, c| (r + 2 * c) as f64 * 0.25)],
             straggler_cursor: 44,
             straggler_g: vec![0.25, -1.5],
+            chaos_cursor: 21,
+            chaos_live: vec![true, false],
+            chaos_stalls: 3,
             comm_before: CommSnapshot { messages: 10, bytes: 80, rounds: 5, scalars: 10 },
             ledger_total: CommSnapshot { messages: 20, bytes: 160, rounds: 10, scalars: 20 },
             sim_secs: 1.25,
@@ -863,6 +943,10 @@ mod tests {
         assert_eq!(back.stale_hist[0].max_abs_diff(&ck.stale_hist[0]), 0.0);
         assert_eq!(back.straggler_cursor, 44);
         assert_eq!(back.straggler_g, ck.straggler_g);
+        assert_eq!(back.comm.chaos, ck.comm.chaos);
+        assert_eq!(back.chaos_cursor, 21);
+        assert_eq!(back.chaos_live, vec![true, false]);
+        assert_eq!(back.chaos_stalls, 3);
         assert_eq!(back.growth, ck.growth);
         assert_eq!(back.train_checksum, ck.train_checksum);
         assert_eq!(back.dataset(), "oracle-toy");
@@ -903,6 +987,7 @@ mod tests {
                 node_latency: NodeLatency { sigma: 1.5, seed: 4, corr: 0.25 },
                 iter_staleness: 3,
                 iter_schedule: StalenessSchedule::Iid,
+                chaos: ChaosConfig { crash_p: 0.1, rejoin_p: 0.25, seed: 3, min_nodes: 1 },
             };
             let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
             assert_eq!(back.comm, ck.comm);
@@ -1000,6 +1085,9 @@ mod tests {
         ck.stale_hist = Vec::new();
         ck.straggler_cursor = 0;
         ck.straggler_g = Vec::new();
+        ck.chaos_cursor = 0;
+        ck.chaos_live = Vec::new();
+        ck.chaos_stalls = 0;
         ck
     }
 
@@ -1064,6 +1152,10 @@ mod tests {
         ck.stale_hist = Vec::new();
         ck.straggler_cursor = 0;
         ck.straggler_g = Vec::new();
+        ck.comm.chaos = ChaosConfig::default();
+        ck.chaos_cursor = 0;
+        ck.chaos_live = Vec::new();
+        ck.chaos_stalls = 0;
         let mut buf = Vec::new();
         ck.write_versioned(&mut buf, 2).unwrap();
         let back = Checkpoint::from_bytes(&buf).unwrap();
@@ -1088,6 +1180,10 @@ mod tests {
         ck.stale_hist = vec![Matrix::zeros(3, 3); 2 * 2];
         ck.straggler_cursor = 0;
         ck.straggler_g = Vec::new();
+        ck.comm.chaos = ChaosConfig::default();
+        ck.chaos_cursor = 0;
+        ck.chaos_live = Vec::new();
+        ck.chaos_stalls = 0;
         let mut buf = Vec::new();
         ck.write_versioned(&mut buf, 3).unwrap();
         assert_eq!(buf[8], 3); // really a v3 stream
@@ -1102,6 +1198,83 @@ mod tests {
         // The sampler restarts at round 0 on resume.
         assert_eq!(back.straggler_cursor, 0);
         assert!(back.straggler_g.is_empty());
+    }
+
+    #[test]
+    fn v4_checkpoints_upgrade_with_zero_fault_chaos() {
+        // A v4 run carried the full straggler/staleness machinery but
+        // predates fault injection entirely.
+        let mut ck = sample();
+        ck.comm.chaos = ChaosConfig::default();
+        ck.chaos_cursor = 0;
+        ck.chaos_live = Vec::new();
+        ck.chaos_stalls = 0;
+        let mut buf = Vec::new();
+        ck.write_versioned(&mut buf, 4).unwrap();
+        assert_eq!(buf[8], 4); // really a v4 stream
+        assert!(buf.len() < ck.to_bytes().len());
+        let back = Checkpoint::from_bytes(&buf).unwrap();
+        assert_eq!(back.comm, ck.comm);
+        assert_eq!(back.comm.chaos, ChaosConfig::default());
+        assert_eq!(back.straggler_cursor, ck.straggler_cursor);
+        assert_eq!(back.straggler_g, ck.straggler_g);
+        assert_eq!(back.chaos_cursor, 0);
+        assert!(back.chaos_live.is_empty());
+        assert_eq!(back.chaos_stalls, 0);
+    }
+
+    #[test]
+    fn reader_survives_truncation_at_every_byte_of_every_version() {
+        // Fuzz-style: any prefix of any supported on-disk version must
+        // be a clean Err — never a panic, hang, or huge allocation.
+        let ck = sample();
+        for version in 1..=VERSION {
+            let mut fixture = ck.clone();
+            if version < 5 {
+                fixture.comm.chaos = ChaosConfig::default();
+            }
+            let mut buf = Vec::new();
+            fixture.write_versioned(&mut buf, version).unwrap();
+            for cut in 0..buf.len() {
+                assert!(
+                    Checkpoint::from_bytes(&buf[..cut]).is_err(),
+                    "v{version} truncated at {cut} parsed"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn reader_survives_bitflips_and_hostile_length_prefixes() {
+        let ck = sample();
+        let buf = ck.to_bytes();
+        // Single-bit flips across the whole stream: the parse may
+        // legitimately succeed (a flipped float bit is still a float)
+        // but must never panic or blow up allocation.
+        for i in 0..buf.len() {
+            let mut bad = buf.clone();
+            bad[i] ^= 0x80;
+            let _ = Checkpoint::from_bytes(&bad);
+        }
+        // Hostile length prefixes must fail fast, not OOM: the decoder
+        // caps pre-allocation and grows buffers only as bytes actually
+        // arrive. Stamp u64::MAX over the dataset-string length (the
+        // 8 bytes preceding the name on the wire)...
+        let pos = buf
+            .windows(10)
+            .position(|w| w == b"oracle-toy")
+            .expect("dataset name on the wire");
+        let mut bad = buf.clone();
+        bad[pos - 8..pos].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(Checkpoint::from_bytes(&bad).is_err());
+        // ... and over every 8-byte window with a huge-but-not-MAX
+        // count, which also exercises matrix/vector length prefixes.
+        let huge = (1u64 << 60).to_le_bytes();
+        for off in (9..buf.len().saturating_sub(8)).step_by(64) {
+            let mut bad = buf.clone();
+            bad[off..off + 8].copy_from_slice(&huge);
+            let _ = Checkpoint::from_bytes(&bad); // must return, not die
+        }
     }
 
     #[test]

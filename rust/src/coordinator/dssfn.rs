@@ -34,8 +34,8 @@ use crate::data::{shard_uniform, ClassificationTask, Dataset};
 use crate::linalg::Matrix;
 use crate::metrics::{error_db, LayerRecord, TrainReport};
 use crate::network::{
-    CommConfig, CommFabric, CommLedger, CommSchedule, CommSnapshot, GossipEngine, MixingMatrix,
-    StalenessSchedule,
+    ChaosFabric, ChaosSnapshot, CommConfig, CommFabric, CommLedger, CommSchedule, CommSnapshot,
+    GossipEngine, MixingMatrix, StalenessSchedule,
 };
 use crate::runtime::ComputeBackend;
 use crate::session::{
@@ -146,6 +146,10 @@ pub struct DssfnAlgorithm<'t> {
     /// flat (slot `(k % s) * M + i` holds node `i`'s average from
     /// iteration `k`). Empty when staleness is off.
     stale_hist: Vec<Matrix>,
+    /// Per-node liveness under fault injection: `live[i]` is false while
+    /// node `i` is crashed (its O/Λ/Z state frozen until it rejoins).
+    /// All-true when chaos is off, so the fault-free path is untouched.
+    live: Vec<bool>,
 }
 
 impl<'t> DssfnAlgorithm<'t> {
@@ -229,7 +233,21 @@ impl<'t> DssfnAlgorithm<'t> {
                     engine.set_straggler(comm.node_latency);
                 }
                 let comm_seed = SplitMix64::new(seed ^ 0x636f_6d6d_5eed).next_u64();
-                Some(comm.schedule.build_fabric(engine, comm_seed)?)
+                let fabric = comm.schedule.build_fabric(engine, comm_seed)?;
+                if comm.chaos.enabled() {
+                    // Fault injection wraps whichever fabric the schedule
+                    // built. A zero-fault config never constructs the
+                    // wrapper, so the default path stays the unwrapped
+                    // fabric, bit for bit.
+                    Some(Box::new(ChaosFabric::new(
+                        fabric,
+                        comm.chaos,
+                        opts.topology.clone(),
+                        opts.latency,
+                    )?) as Box<dyn CommFabric>)
+                } else {
+                    Some(fabric)
+                }
             }
             ConsensusMode::Exact => {
                 if comm.schedule != CommSchedule::Synchronous
@@ -237,10 +255,13 @@ impl<'t> DssfnAlgorithm<'t> {
                     || comm.iter_staleness > 0
                     || comm.iter_schedule != StalenessSchedule::Iid
                     || comm.node_latency.is_heterogeneous()
+                    || comm.chaos.enabled()
+                    || comm.chaos.min_nodes > 1
                 {
                     return Err(Error::Config(
-                        "communication schedules, adaptive δ, iteration staleness \
-                         and the straggler model apply to gossip consensus only"
+                        "communication schedules, adaptive δ, iteration staleness, \
+                         the straggler model and fault injection apply to gossip \
+                         consensus only"
                             .into(),
                     ));
                 }
@@ -319,6 +340,7 @@ impl<'t> DssfnAlgorithm<'t> {
             iter_seed: SplitMix64::new(seed ^ 0x17e7_5741_1e5f_5eed).next_u64(),
             iter_stale_cursor: 0,
             stale_hist: Vec::new(),
+            live: vec![true; m],
         })
     }
 
@@ -402,6 +424,26 @@ impl<'t> DssfnAlgorithm<'t> {
                 fab.engine()
                     .restore_straggler_state(ck.straggler_cursor, ck.straggler_g.clone())?;
             }
+        }
+        // Fault-injection state: the membership cursor, liveness mask and
+        // stall counter resume the chaos schedule bit-identically — even
+        // from a checkpoint taken mid-outage. A fabric without chaos
+        // support rejects a non-empty mask (default trait impl), so a
+        // checkpoint/config mismatch fails loudly here.
+        if !ck.chaos_live.is_empty() {
+            let fab = alg.fabric.as_ref().ok_or_else(|| {
+                Error::Checkpoint(
+                    "checkpoint carries fault-injection state but the restored run \
+                     has no communication fabric (exact consensus)"
+                        .into(),
+                )
+            })?;
+            fab.restore_chaos_state(ChaosSnapshot {
+                cursor: ck.chaos_cursor,
+                live: ck.chaos_live.clone(),
+                stall_rounds: ck.chaos_stalls,
+            })?;
+            alg.live = ck.chaos_live.clone();
         }
         alg.current_delta = ck.current_delta;
         if ck.current_period == 0 {
@@ -560,9 +602,17 @@ impl<'t> DssfnAlgorithm<'t> {
         let params = self.hyper.admm_params(self.layer, q);
 
         // (1) O-update, fanned out, written into each node's state.
+        // Crashed nodes (fault injection) are skipped: their O/Λ/Z stay
+        // frozen at the pre-crash values until they rejoin. The mask is
+        // the one left by the *previous* averaging — this iteration's
+        // membership step happens inside the fabric call below.
         {
             let solvers = &self.solvers;
+            let live = &self.live;
             for_each_node_mut(&mut self.states, self.threads, |i, st| {
+                if !live[i] {
+                    return Ok(());
+                }
                 let NodeState { o, lambda, z } = st;
                 solvers[i].o_update_into(z, lambda, o)
             })?;
@@ -627,6 +677,36 @@ impl<'t> DssfnAlgorithm<'t> {
                     };
                     self.gossip_rounds += rounds;
                     gossip_event = Some((rounds, bytes));
+                    // Fault-injection bookkeeping: surface the membership
+                    // changes this call produced as events and adopt the
+                    // post-averaging live set. Chaos off (or a plain
+                    // fabric) drains empty and reports no mask, so this
+                    // is a no-op on the fault-free path.
+                    let drain = fab.drain_chaos();
+                    for &node in &drain.crashed {
+                        events.push(StepEvent::NodeDropped {
+                            layer: self.layer,
+                            iteration: k,
+                            node,
+                        });
+                    }
+                    for &node in &drain.rejoined {
+                        events.push(StepEvent::NodeRejoined {
+                            layer: self.layer,
+                            iteration: k,
+                            node,
+                        });
+                    }
+                    if drain.stall_rounds > 0 {
+                        events.push(StepEvent::QuorumStalled {
+                            layer: self.layer,
+                            iteration: k,
+                            rounds: drain.stall_rounds,
+                        });
+                    }
+                    if let Some(mask) = fab.live_mask() {
+                        self.live = mask;
+                    }
                 }
                 (ConsensusMode::Gossip { .. }, None) => unreachable!(),
             }
@@ -640,7 +720,11 @@ impl<'t> DssfnAlgorithm<'t> {
             // Averaging skipped (period doubling): the consensus Z is
             // held fixed — still identical on every node — and the dual
             // ascent keeps charging the constraint violation against it.
-            for st in self.states.iter_mut() {
+            // Crashed nodes stay frozen.
+            for (i, st) in self.states.iter_mut().enumerate() {
+                if !self.live[i] {
+                    continue;
+                }
                 st.lambda.axpy(1.0, &st.o)?;
                 st.lambda.axpy(-1.0, &st.z)?;
             }
@@ -690,7 +774,14 @@ impl<'t> DssfnAlgorithm<'t> {
             }
             self.iter_stale_cursor += 1;
         } else {
-            for (st, sv) in self.states.iter_mut().zip(&self.s_vals) {
+            // Post-averaging mask: a node that crashed during this call
+            // must not project the live set's consensus; one that just
+            // rejoined reads the catch-up average the fabric installed.
+            let live = &self.live;
+            for (i, (st, sv)) in self.states.iter_mut().zip(&self.s_vals).enumerate() {
+                if !live[i] {
+                    continue;
+                }
                 st.z.copy_from(sv)?;
                 st.z.project_frobenius(params.eps);
                 st.lambda.axpy(1.0, &st.o)?;
@@ -737,10 +828,16 @@ impl<'t> DssfnAlgorithm<'t> {
         // O(M·Q·n) scan; the per-layer disagreement in LayerRecord is
         // still always computed once, in the advance phase.
         let gap = if self.opts.record_cost_curve {
-            let z0 = &self.states[0].z;
+            // Measured over the live set: crashed nodes hold frozen
+            // pre-crash state and would report a spurious gap. Fault-free
+            // runs have every node live, so the reference stays node 0.
+            let rep = self.live.iter().position(|&l| l).unwrap_or(0);
+            let z0 = &self.states[rep].z;
             self.states
                 .iter()
-                .map(|s| s.z.max_abs_diff(z0))
+                .enumerate()
+                .filter(|&(i, _)| self.live[i])
+                .map(|(_, s)| s.z.max_abs_diff(z0))
                 .fold(0.0, f64::max)
         } else {
             0.0
@@ -783,12 +880,19 @@ impl<'t> DssfnAlgorithm<'t> {
     fn do_advance(&mut self, events: &mut Vec<StepEvent>) -> Result<()> {
         let m = self.opts.nodes;
 
-        // Consensus diagnostics.
-        let z0 = self.states[0].z.clone();
+        // Consensus diagnostics, over the live set: crashed nodes hold
+        // frozen pre-crash state (fault injection) and would otherwise
+        // report a spurious disagreement. Every node is live on the
+        // fault-free path, so `rep` is node 0 there and the numbers are
+        // exactly the historical ones.
+        let rep = self.live.iter().position(|&l| l).unwrap_or(0);
+        let z0 = self.states[rep].z.clone();
         let disagreement = self
             .states
             .iter()
-            .map(|s| s.z.max_abs_diff(&z0))
+            .enumerate()
+            .filter(|&(i, _)| self.live[i])
+            .map(|(_, s)| s.z.max_abs_diff(&z0))
             .fold(0.0, f64::max);
 
         // Global layer cost (for the record, and for size estimation).
@@ -816,10 +920,23 @@ impl<'t> DssfnAlgorithm<'t> {
         let last_layer = self.layer == self.arch.layers || stop_growth || budget_stop;
         if !last_layer {
             let r_next = self.random.layer(self.layer + 1);
-            let ws: Vec<Matrix> = {
+            let mut ws: Vec<Matrix> = {
                 let states = &self.states;
                 for_each_node(m, self.threads, |i| build_weight(&states[i].z, r_next))?
             };
+            // Crashed nodes would build a weight from stale Z; forward
+            // them through the live representative's weight instead so
+            // their features stay coherent with the cluster when they
+            // rejoin in a later layer. No-op (and no clones) when every
+            // node is live.
+            if self.live.iter().any(|&l| !l) {
+                let w_rep = ws[rep].clone();
+                for (i, w) in ws.iter_mut().enumerate() {
+                    if !self.live[i] {
+                        *w = w_rep.clone();
+                    }
+                }
+            }
             let new_ys: Vec<Matrix> = {
                 let backend = &self.backend;
                 let ys = &self.ys;
@@ -976,6 +1093,15 @@ impl Algorithm for DssfnAlgorithm<'_> {
             .as_ref()
             .and_then(|f| f.engine().straggler_state())
             .unwrap_or((0, Vec::new()));
+        // Chaos runtime state lives in the fabric wrapper; a fault-free
+        // run checkpoints the empty mask (the v5 codec's "no chaos"
+        // encoding, which restore treats as all-live).
+        let (chaos_cursor, chaos_live, chaos_stalls) = self
+            .fabric
+            .as_ref()
+            .and_then(|f| f.chaos_state())
+            .map(|s| (s.cursor, s.live, s.stall_rounds))
+            .unwrap_or((0, Vec::new(), 0));
         Ok(Checkpoint {
             seed: self.seed,
             arch: self.arch,
@@ -1001,6 +1127,9 @@ impl Algorithm for DssfnAlgorithm<'_> {
             stale_hist,
             straggler_cursor,
             straggler_g,
+            chaos_cursor,
+            chaos_live,
+            chaos_stalls,
             comm_before: self.comm_before,
             ledger_total: self.ledger.snapshot(),
             sim_secs: self.sim_comm_secs(),

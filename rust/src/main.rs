@@ -19,8 +19,12 @@
 //! fixed-lag / one-slow-node ages), and `--straggler-sigma` /
 //! `--straggler-corr` simulate a heterogeneous cluster where every
 //! round's barrier pays that round's slowest node (AR(1)-persistent
-//! slowness). Flags that the selected schedule does not read (e.g.
-//! `--staleness` under `sync`) are rejected, not ignored.
+//! slowness). `--chaos-crash-p` / `--chaos-rejoin-p` / `--chaos-seed`
+//! inject seeded node crash/rejoin churn (the live set keeps mixing,
+//! crashed nodes freeze and catch up on rejoin) and `--min-nodes`
+//! stalls averaging below a quorum. Flags that the selected schedule
+//! does not read (e.g. `--staleness` under `sync`) are rejected, not
+//! ignored.
 //!
 //! The build environment has no `clap`; argument parsing is a small
 //! hand-rolled matcher (see [`Args`]) whose switch list comes from the
@@ -171,6 +175,18 @@ fn build_config(args: &Args) -> Result<ExperimentConfig, String> {
     if let Some(v) = args.parsed("straggler-corr")? {
         cfg.straggler_corr = v;
     }
+    if let Some(v) = args.parsed("chaos-crash-p")? {
+        cfg.chaos_crash_p = v;
+    }
+    if let Some(v) = args.parsed("chaos-rejoin-p")? {
+        cfg.chaos_rejoin_p = v;
+    }
+    if let Some(v) = args.parsed("chaos-seed")? {
+        cfg.chaos_seed = v;
+    }
+    if let Some(v) = args.parsed("min-nodes")? {
+        cfg.min_nodes = Some(v);
+    }
     if args.has("exact-consensus") {
         cfg.exact_consensus = true;
     }
@@ -228,7 +244,8 @@ fn cmd_train(args: &Args) -> Result<(), String> {
                 "mu0", "mul", "threads", "exact-consensus", "no-curve", "schedule",
                 "staleness", "loss-p", "adaptive-delta", "adaptive-period",
                 "iter-staleness", "iter-schedule", "straggler-sigma", "straggler-seed",
-                "straggler-corr",
+                "straggler-corr", "chaos-crash-p", "chaos-rejoin-p", "chaos-seed",
+                "min-nodes",
             ] {
                 if args.has(flag) {
                     return Err(format!(

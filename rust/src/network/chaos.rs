@@ -1,0 +1,918 @@
+//! Seeded fault injection: node crash / rejoin churn, live-set mixing,
+//! and quorum gating on top of any [`CommFabric`].
+//!
+//! Real clusters do not merely have *slow* workers (the straggler model
+//! of [`super::NodeLatency`]) — they have *absent* ones. [`ChaosPlan`]
+//! draws per-call crash and rejoin decisions from a dedicated stream
+//! keyed on `(chaos_seed, membership cursor, node order)`, the same
+//! determinism discipline as [`super::StragglerSampler`]: the fault
+//! schedule is a pure function of the cursor, so two runs with the same
+//! seed replay identical outages and a checkpoint mid-outage resumes
+//! bit-identically.
+//!
+//! [`ChaosFabric`] wraps any inner fabric and enforces the protocol
+//! under churn:
+//!
+//! * **Live-set mixing** — while nodes are down, consensus runs over the
+//!   induced live subgraph via [`MixingMatrix::build_restricted`]
+//!   (Metropolis reweighting, doubly-stochastic invariant preserved);
+//!   dead nodes' values are left untouched (the trainer freezes their
+//!   Z/dual state). A crash pattern that disconnects the live set is a
+//!   clean `Err`, never silent divergence.
+//! * **Catch-up** — a rejoining node re-enters by adopting the mean of
+//!   the surviving nodes' current values (the consensus it missed),
+//!   charged as one extra message of payload plus
+//!   [`LatencyModel::backoff_time`] simulated seconds with a seeded
+//!   retry count (exponential-backoff accounting).
+//! * **Quorum gating** — while fewer than `min_nodes` nodes are live the
+//!   round stalls: simulated time accrues (one α barrier per stalled
+//!   round), no traffic moves, and membership is redrawn at the next
+//!   cursor until quorum recovers.
+//!
+//! A zero-fault plan (`crash_p = 0`) delegates every call verbatim to
+//! the inner fabric without consuming randomness — bit-identical to the
+//! unwrapped run, pinned by `tests/chaos.rs`.
+
+use std::sync::Mutex;
+
+use super::{CommFabric, CommSchedule, GossipEngine, LatencyModel, MixingMatrix, Topology};
+use crate::linalg::Matrix;
+use crate::util::{Rng, Xoshiro256StarStar};
+use crate::{Error, Result};
+
+/// Hard cap on consecutive quorum-stalled membership redraws per
+/// averaging call: beyond this the run aborts instead of spinning.
+const MAX_STALL_ROUNDS: u64 = 100_000;
+
+/// Retry attempts drawn per rejoin event are capped at this many
+/// exponential-backoff doublings.
+const MAX_RETRY_ATTEMPTS: u32 = 10;
+
+/// Serializable fault-injection configuration — the churn half of
+/// [`super::CommConfig`]. Stored in checkpoints (v5) and lowered from
+/// TOML / CLI flags.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChaosConfig {
+    /// Per-averaging-call probability that each live node crashes.
+    /// `0` (the default) disables fault injection entirely.
+    pub crash_p: f64,
+    /// Per-averaging-call probability that each dead node rejoins.
+    pub rejoin_p: f64,
+    /// Seed of the fault stream. Independent from the model, data and
+    /// schedule seeds.
+    pub seed: u64,
+    /// Quorum: an averaging call stalls (simulated time accrues, no
+    /// traffic) while fewer than this many nodes are live. `1` (the
+    /// default) only stalls when *every* node is down.
+    pub min_nodes: usize,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        Self { crash_p: 0.0, rejoin_p: 0.0, seed: 0, min_nodes: 1 }
+    }
+}
+
+impl ChaosConfig {
+    /// Whether fault injection is active at all.
+    pub fn enabled(&self) -> bool {
+        self.crash_p > 0.0
+    }
+
+    /// Validate parameter ranges and reject silent no-ops: a rejoin
+    /// probability or chaos seed without a crash probability would be
+    /// ignored wholesale — the same bug class as a straggler seed
+    /// without a straggler σ.
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0..1.0).contains(&self.crash_p) {
+            return Err(Error::Config(format!(
+                "chaos crash probability must be in [0,1), got {}",
+                self.crash_p
+            )));
+        }
+        if !(0.0..=1.0).contains(&self.rejoin_p) {
+            return Err(Error::Config(format!(
+                "chaos rejoin probability must be in [0,1], got {}",
+                self.rejoin_p
+            )));
+        }
+        if !self.enabled() {
+            if self.rejoin_p > 0.0 {
+                return Err(Error::Config(
+                    "chaos rejoin_p is set but crash_p is 0: no node ever crashes, so \
+                     the rejoin probability would be silently ignored — set crash_p \
+                     or drop the knob"
+                        .into(),
+                ));
+            }
+            if self.seed != 0 {
+                return Err(Error::Config(
+                    "chaos seed is set but crash_p is 0: the fault stream would never \
+                     be drawn from, so the seed would be silently ignored — set \
+                     crash_p or drop the knob"
+                        .into(),
+                ));
+            }
+        }
+        if self.min_nodes == 0 {
+            return Err(Error::Config(
+                "min_nodes quorum must be >= 1 (a round cannot proceed with zero \
+                 live nodes)"
+                    .into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Short display tag for reports and mode strings.
+    pub fn describe(&self) -> String {
+        let mut s = format!("chaos(p={}", self.crash_p);
+        if self.rejoin_p > 0.0 {
+            s.push_str(&format!(", rejoin={}", self.rejoin_p));
+        }
+        if self.min_nodes > 1 {
+            s.push_str(&format!(", quorum={}", self.min_nodes));
+        }
+        s.push(')');
+        s
+    }
+}
+
+/// The membership changes one [`ChaosPlan::step`] produced.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MembershipStep {
+    /// Nodes that crashed in this step, ascending.
+    pub crashed: Vec<usize>,
+    /// Nodes that rejoined in this step with their drawn retry-attempt
+    /// counts (exponential-backoff accounting), ascending by node.
+    pub rejoined: Vec<(usize, u32)>,
+}
+
+/// The seeded fault schedule: a pure function of `(seed, cursor)`.
+///
+/// Each step derives a fresh stream `seed_from_u64(seed).derive(cursor)`
+/// and consumes one uniform draw per node in index order (a live node
+/// crashes if `u < crash_p`; a dead node rejoins if `u < rejoin_p`),
+/// then one geometric retry-count draw per rejoiner in index order.
+/// Replaying a cursor therefore replays the exact membership decision —
+/// the property the checkpoint chaos cursor relies on.
+#[derive(Debug, Clone)]
+pub struct ChaosPlan {
+    cfg: ChaosConfig,
+}
+
+impl ChaosPlan {
+    /// Build a plan from a validated configuration.
+    pub fn new(cfg: ChaosConfig) -> Result<Self> {
+        cfg.validate()?;
+        Ok(Self { cfg })
+    }
+
+    /// The configuration this plan draws from.
+    pub fn config(&self) -> ChaosConfig {
+        self.cfg
+    }
+
+    /// Apply one membership step at `cursor`, mutating `live` in place.
+    pub fn step(&self, cursor: u64, live: &mut [bool]) -> MembershipStep {
+        let mut rng = Xoshiro256StarStar::seed_from_u64(self.cfg.seed).derive(cursor);
+        let mut out = MembershipStep::default();
+        for (node, alive) in live.iter_mut().enumerate() {
+            let u = rng.next_f64();
+            if *alive {
+                if u < self.cfg.crash_p {
+                    *alive = false;
+                    out.crashed.push(node);
+                }
+            } else if u < self.cfg.rejoin_p {
+                *alive = true;
+                out.rejoined.push((node, 0));
+            }
+        }
+        // Retry accounting: each rejoiner's catch-up fetch succeeds on a
+        // geometrically-drawn attempt (p = 1/2 per retry), capped.
+        for (_, attempts) in out.rejoined.iter_mut() {
+            let mut a = 1u32;
+            while a < MAX_RETRY_ATTEMPTS && rng.next_f64() < 0.5 {
+                a += 1;
+            }
+            *attempts = a;
+        }
+        out
+    }
+}
+
+/// The one-call event summary the trainer drains after each averaging:
+/// which nodes dropped, which rejoined, and how many rounds the call
+/// stalled below quorum. Emptied by [`CommFabric::drain_chaos`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ChaosDrain {
+    /// Nodes that crashed during this call (in event order).
+    pub crashed: Vec<usize>,
+    /// Nodes that rejoined during this call (in event order).
+    pub rejoined: Vec<usize>,
+    /// Membership redraws spent stalled below the `min_nodes` quorum.
+    pub stall_rounds: u64,
+}
+
+impl ChaosDrain {
+    /// No events at all.
+    pub fn is_empty(&self) -> bool {
+        self.crashed.is_empty() && self.rejoined.is_empty() && self.stall_rounds == 0
+    }
+}
+
+/// The checkpointable chaos runtime state: the membership cursor, the
+/// per-node liveness mask, and the cumulative stall count. Restoring
+/// this (plus the inner fabric's call cursor) replays the fault
+/// schedule bit-identically — including from mid-outage.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosSnapshot {
+    /// Membership steps drawn so far.
+    pub cursor: u64,
+    /// Per-node liveness at the snapshot.
+    pub live: Vec<bool>,
+    /// Total quorum-stalled rounds so far.
+    pub stall_rounds: u64,
+}
+
+/// Cached live-set mixing plan for one particular liveness mask.
+struct RestrictedMix {
+    /// The mask this plan was built for.
+    mask: Vec<bool>,
+    /// Live node indices, ascending (row `k` of `mix` ↔ `ids[k]`).
+    ids: Vec<usize>,
+    /// Restricted Metropolis matrix over the live subgraph.
+    mix: MixingMatrix,
+    /// Directed off-diagonal message count per round.
+    msgs: u64,
+    /// Maximum live-node degree (off-diagonal nonzeros in one row).
+    max_deg: usize,
+}
+
+struct ChaosState {
+    /// Per-node liveness.
+    live: Vec<bool>,
+    /// Liveness at the start of the current call (catch-up donors).
+    prev_live: Vec<bool>,
+    /// Membership cursor: steps drawn so far.
+    cursor: u64,
+    /// Cumulative quorum-stalled rounds.
+    stall_total: u64,
+    /// Latest rejoiner retry-attempt draw per node.
+    attempts: Vec<u32>,
+    /// Events since the last [`CommFabric::drain_chaos`].
+    drain: ChaosDrain,
+    /// Cached restricted mixing plan (invalidated on mask change).
+    restricted: Option<RestrictedMix>,
+    /// Scratch: donor mean for catch-up.
+    mean: Matrix,
+    /// Scratch banks for dense live-set mixing rounds.
+    bank: Vec<Matrix>,
+    out: Vec<Matrix>,
+}
+
+/// Fault-injection wrapper over any [`CommFabric`]. With a zero-fault
+/// plan every method delegates verbatim (no randomness consumed, no
+/// state touched) — the bit-identity invariant. With churn enabled,
+/// each averaging call runs: membership step → quorum gate → catch-up
+/// for rejoiners → either the inner fabric (all nodes live) or
+/// restricted live-set mixing (some down).
+pub struct ChaosFabric {
+    inner: Box<dyn CommFabric>,
+    plan: ChaosPlan,
+    topology: Topology,
+    latency: LatencyModel,
+    state: Mutex<ChaosState>,
+}
+
+impl ChaosFabric {
+    /// Wrap `inner`. `topology` must describe the same cluster the
+    /// inner fabric mixes over; `latency` prices catch-up transfers and
+    /// stall barriers (use the same model as the engine's).
+    pub fn new(
+        inner: Box<dyn CommFabric>,
+        cfg: ChaosConfig,
+        topology: Topology,
+        latency: LatencyModel,
+    ) -> Result<Self> {
+        let plan = ChaosPlan::new(cfg)?;
+        let m = inner.mixing().num_nodes();
+        if topology.num_nodes() != m {
+            return Err(Error::Network(format!(
+                "chaos topology has {} nodes but the fabric mixes over {m}",
+                topology.num_nodes()
+            )));
+        }
+        if cfg.min_nodes > m {
+            return Err(Error::Config(format!(
+                "min_nodes quorum {} exceeds the cluster size M = {m}",
+                cfg.min_nodes
+            )));
+        }
+        Ok(Self {
+            inner,
+            plan,
+            topology,
+            latency,
+            state: Mutex::new(ChaosState {
+                live: vec![true; m],
+                prev_live: vec![true; m],
+                cursor: 0,
+                stall_total: 0,
+                attempts: vec![0; m],
+                drain: ChaosDrain::default(),
+                restricted: None,
+                mean: Matrix::zeros(1, 1),
+                bank: Vec::new(),
+                out: Vec::new(),
+            }),
+        })
+    }
+
+    /// The fault plan.
+    pub fn plan(&self) -> &ChaosPlan {
+        &self.plan
+    }
+
+    /// Charge `dt` simulated seconds to the engine's shared clock.
+    fn charge_clock(&self, dt: f64) {
+        let engine = self.inner.engine();
+        engine.set_simulated_seconds(engine.simulated_seconds() + dt);
+    }
+
+    /// Record one membership step's events into the drain buffers.
+    fn absorb_step(st: &mut ChaosState, step: MembershipStep) {
+        for node in step.crashed {
+            st.drain.crashed.push(node);
+        }
+        for (node, attempts) in step.rejoined {
+            st.attempts[node] = attempts;
+            st.drain.rejoined.push(node);
+        }
+    }
+
+    /// The chaos-enabled averaging path: membership step, quorum gate,
+    /// catch-up, then inner delegation (all live) or live-set mixing.
+    fn average_chaotic(
+        &self,
+        values: &mut [Matrix],
+        delta: f64,
+        slack: Option<usize>,
+    ) -> Result<(usize, u64)> {
+        let st = &mut *self.state.lock().expect("chaos state poisoned");
+        let m = st.live.len();
+        if values.len() != m {
+            return Err(Error::Network(format!(
+                "chaos fabric mixes over {m} nodes, got {} value matrices",
+                values.len()
+            )));
+        }
+        st.prev_live.copy_from_slice(&st.live);
+
+        // Membership step, then the quorum gate: while below quorum the
+        // round stalls — one α barrier of simulated time per redraw, no
+        // traffic — and membership is redrawn at the next cursor.
+        let step = self.plan.step(st.cursor, &mut st.live);
+        st.cursor += 1;
+        Self::absorb_step(st, step);
+        let cfg = self.plan.config();
+        let mut stalls = 0u64;
+        while st.live.iter().filter(|&&l| l).count() < cfg.min_nodes {
+            if cfg.rejoin_p == 0.0 {
+                return Err(Error::Network(format!(
+                    "quorum lost: {} of {} nodes live (min_nodes = {}) and rejoin is \
+                     disabled — membership can never recover",
+                    st.live.iter().filter(|&&l| l).count(),
+                    m,
+                    cfg.min_nodes
+                )));
+            }
+            if stalls >= MAX_STALL_ROUNDS {
+                return Err(Error::Network(format!(
+                    "quorum stalled for {stalls} membership redraws without recovering \
+                     (min_nodes = {})",
+                    cfg.min_nodes
+                )));
+            }
+            self.charge_clock(self.latency.round_time(0, 0));
+            stalls += 1;
+            let step = self.plan.step(st.cursor, &mut st.live);
+            st.cursor += 1;
+            Self::absorb_step(st, step);
+        }
+        st.drain.stall_rounds += stalls;
+        st.stall_total += stalls;
+
+        // Catch-up: every node live now but dead at the start of the
+        // call adopts the mean of the surviving nodes' current values —
+        // the consensus state it missed — charged as one message of
+        // payload plus a backoff-priced transfer.
+        let (rows, cols) = values[0].shape();
+        let scalars = (rows * cols) as u64;
+        let mut catchup_bytes = 0u64;
+        let donors: Vec<usize> =
+            (0..m).filter(|&i| st.prev_live[i] && st.live[i]).collect();
+        for j in 0..m {
+            if !(st.live[j] && !st.prev_live[j]) || donors.is_empty() {
+                continue;
+            }
+            if st.mean.shape() != (rows, cols) {
+                st.mean = Matrix::zeros(rows, cols);
+            }
+            st.mean.fill_zero();
+            let w = 1.0 / donors.len() as f64;
+            for &i in &donors {
+                st.mean.axpy(w, &values[i]);
+            }
+            values[j].copy_from(&st.mean);
+            self.inner.engine().ledger().record_message(scalars);
+            catchup_bytes += scalars * 8;
+            self.charge_clock(self.latency.backoff_time(st.attempts[j], scalars * 8));
+        }
+
+        if st.live.iter().all(|&l| l) {
+            // Full membership: the inner fabric runs its native schedule.
+            let (rounds, bytes) = match slack {
+                Some(s) => self.inner.average_relaxed(values, delta, s)?,
+                None => self.inner.average(values, delta)?,
+            };
+            return Ok((rounds, bytes + catchup_bytes));
+        }
+
+        // Live-set mixing: dense rounds over the restricted Metropolis
+        // matrix; dead nodes' values are left untouched (frozen by the
+        // trainer). The inner call cursor still advances so a later
+        // full-membership call replays the schedule it would have had.
+        let stale = st
+            .restricted
+            .as_ref()
+            .map(|r| r.mask != st.live)
+            .unwrap_or(true);
+        if stale {
+            let mix = MixingMatrix::build_restricted(&self.topology, &st.live)?;
+            let ids: Vec<usize> =
+                (0..m).filter(|&i| st.live[i]).collect();
+            let n = ids.len();
+            let mut msgs = 0u64;
+            let mut max_deg = 0usize;
+            for k in 0..n {
+                let mut deg = 0usize;
+                for l in 0..n {
+                    if l != k && mix.matrix().get(k, l) != 0.0 {
+                        deg += 1;
+                    }
+                }
+                msgs += deg as u64;
+                max_deg = max_deg.max(deg);
+            }
+            st.restricted = Some(RestrictedMix { mask: st.live.clone(), ids, mix, msgs, max_deg });
+        }
+        let r = st.restricted.as_ref().expect("restricted plan just built");
+        let n = r.ids.len();
+        let rounds = r.mix.consensus_rounds(delta);
+        if st.bank.len() != n || st.bank.first().map(|b| b.shape()) != Some((rows, cols)) {
+            st.bank = (0..n).map(|_| Matrix::zeros(rows, cols)).collect();
+            st.out = (0..n).map(|_| Matrix::zeros(rows, cols)).collect();
+        }
+        for (k, &i) in r.ids.iter().enumerate() {
+            st.bank[k].copy_from(&values[i]);
+        }
+        let ledger = self.inner.engine().ledger().clone();
+        for _ in 0..rounds {
+            for k in 0..n {
+                st.out[k].fill_zero();
+                for l in 0..n {
+                    let h = r.mix.matrix().get(k, l);
+                    if h != 0.0 {
+                        st.out[k].axpy(h, &st.bank[l]);
+                    }
+                }
+            }
+            std::mem::swap(&mut st.bank, &mut st.out);
+            ledger.record_round(r.msgs, scalars);
+            self.charge_clock(self.latency.round_time(r.max_deg, scalars * 8));
+        }
+        for (k, &i) in r.ids.iter().enumerate() {
+            values[i].copy_from(&st.bank[k]);
+        }
+        // Keep the inner schedule cursor aligned with the call count.
+        self.inner.set_calls(self.inner.calls() + 1);
+        Ok((rounds, catchup_bytes + rounds * r.msgs * scalars * 8))
+    }
+}
+
+impl CommFabric for ChaosFabric {
+    fn engine(&self) -> &GossipEngine {
+        self.inner.engine()
+    }
+
+    fn schedule(&self) -> CommSchedule {
+        self.inner.schedule()
+    }
+
+    fn describe(&self) -> String {
+        if self.plan.config().enabled() {
+            format!("{} {}", self.inner.describe(), self.plan.config().describe())
+        } else {
+            self.inner.describe()
+        }
+    }
+
+    fn average(&self, values: &mut [Matrix], delta: f64) -> Result<(usize, u64)> {
+        if !self.plan.config().enabled() {
+            return self.inner.average(values, delta);
+        }
+        self.average_chaotic(values, delta, None)
+    }
+
+    fn average_relaxed(
+        &self,
+        values: &mut [Matrix],
+        delta: f64,
+        slack: usize,
+    ) -> Result<(usize, u64)> {
+        if !self.plan.config().enabled() {
+            return self.inner.average_relaxed(values, delta, slack);
+        }
+        self.average_chaotic(values, delta, Some(slack))
+    }
+
+    fn calls(&self) -> u64 {
+        self.inner.calls()
+    }
+
+    fn set_calls(&self, calls: u64) {
+        self.inner.set_calls(calls)
+    }
+
+    fn live_mask(&self) -> Option<Vec<bool>> {
+        Some(self.state.lock().expect("chaos state poisoned").live.clone())
+    }
+
+    fn drain_chaos(&self) -> ChaosDrain {
+        std::mem::take(&mut self.state.lock().expect("chaos state poisoned").drain)
+    }
+
+    fn chaos_state(&self) -> Option<ChaosSnapshot> {
+        let st = self.state.lock().expect("chaos state poisoned");
+        Some(ChaosSnapshot {
+            cursor: st.cursor,
+            live: st.live.clone(),
+            stall_rounds: st.stall_total,
+        })
+    }
+
+    fn restore_chaos_state(&self, snapshot: ChaosSnapshot) -> Result<()> {
+        let mut st = self.state.lock().expect("chaos state poisoned");
+        if snapshot.live.len() != st.live.len() {
+            return Err(Error::Checkpoint(format!(
+                "chaos liveness mask has {} nodes, fabric has {}",
+                snapshot.live.len(),
+                st.live.len()
+            )));
+        }
+        st.cursor = snapshot.cursor;
+        st.live.copy_from_slice(&snapshot.live);
+        st.stall_total = snapshot.stall_rounds;
+        st.restricted = None;
+        st.drain = ChaosDrain::default();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::{CommLedger, SynchronousFabric, WeightRule};
+    use std::sync::Arc;
+
+    fn engine(m: usize, d: usize) -> GossipEngine {
+        let mix = MixingMatrix::build(
+            &Topology::Circular { nodes: m, degree: d },
+            WeightRule::EqualNeighbor,
+        )
+        .unwrap();
+        GossipEngine::new(mix, Arc::new(CommLedger::new()), LatencyModel::default())
+    }
+
+    fn chaos_fabric(m: usize, d: usize, cfg: ChaosConfig) -> ChaosFabric {
+        ChaosFabric::new(
+            Box::new(SynchronousFabric::new(engine(m, d))),
+            cfg,
+            Topology::Circular { nodes: m, degree: d },
+            LatencyModel::default(),
+        )
+        .unwrap()
+    }
+
+    fn rand_values(m: usize, rows: usize, cols: usize, seed: u64) -> Vec<Matrix> {
+        let mut rng = Xoshiro256StarStar::seed_from_u64(seed);
+        (0..m)
+            .map(|_| Matrix::from_fn(rows, cols, |_, _| rng.uniform(-3.0, 3.0)))
+            .collect()
+    }
+
+    #[test]
+    fn config_validation_rejects_silent_noops_and_bad_ranges() {
+        ChaosConfig::default().validate().unwrap();
+        let on = ChaosConfig { crash_p: 0.1, rejoin_p: 0.5, seed: 7, min_nodes: 2 };
+        on.validate().unwrap();
+        assert!(ChaosConfig { crash_p: 1.0, ..on }.validate().is_err());
+        assert!(ChaosConfig { crash_p: -0.1, ..on }.validate().is_err());
+        assert!(ChaosConfig { rejoin_p: 1.5, ..on }.validate().is_err());
+        assert!(ChaosConfig { min_nodes: 0, ..on }.validate().is_err());
+        // Rejoin / seed without crash_p would be silently ignored.
+        assert!(
+            ChaosConfig { rejoin_p: 0.5, ..ChaosConfig::default() }.validate().is_err()
+        );
+        assert!(ChaosConfig { seed: 3, ..ChaosConfig::default() }.validate().is_err());
+        // Describe renders only the knobs that are set.
+        assert_eq!(on.describe(), "chaos(p=0.1, rejoin=0.5, quorum=2)");
+        assert_eq!(
+            ChaosConfig { crash_p: 0.2, rejoin_p: 0.0, seed: 0, min_nodes: 1 }.describe(),
+            "chaos(p=0.2)"
+        );
+    }
+
+    #[test]
+    fn plan_is_a_pure_function_of_the_cursor() {
+        let cfg = ChaosConfig { crash_p: 0.4, rejoin_p: 0.6, seed: 11, min_nodes: 1 };
+        let plan = ChaosPlan::new(cfg).unwrap();
+        let mut a = vec![true, false, true, false, true];
+        let mut b = a.clone();
+        let sa = plan.step(3, &mut a);
+        let sb = plan.step(3, &mut b);
+        assert_eq!(sa, sb);
+        assert_eq!(a, b);
+        // A different cursor draws a different decision (with these
+        // probabilities some of the first few cursors must differ).
+        let mut any_diff = false;
+        for cursor in 0..8 {
+            let mut c = vec![true, false, true, false, true];
+            let sc = plan.step(cursor, &mut c);
+            if sc != sa || c != a {
+                any_diff = true;
+            }
+        }
+        assert!(any_diff, "all cursors produced identical membership steps");
+        // Retry attempts are bounded.
+        for cursor in 0..50 {
+            let mut all_dead = vec![false; 6];
+            let step = plan.step(cursor, &mut all_dead);
+            for (_, attempts) in step.rejoined {
+                assert!((1..=MAX_RETRY_ATTEMPTS).contains(&attempts));
+            }
+        }
+    }
+
+    #[test]
+    fn disabled_chaos_is_bit_identical_to_the_unwrapped_fabric() {
+        let chaos = chaos_fabric(8, 2, ChaosConfig::default());
+        let plain = SynchronousFabric::new(engine(8, 2));
+        let mut a = rand_values(8, 3, 4, 17);
+        let mut b = a.clone();
+        for _ in 0..3 {
+            let (ra, ba) = chaos.average(&mut a, 1e-9).unwrap();
+            let (rb, bb) = plain.average(&mut b, 1e-9).unwrap();
+            assert_eq!(ra, rb);
+            assert_eq!(ba, bb);
+        }
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.max_abs_diff(y), 0.0);
+        }
+        assert_eq!(
+            chaos.engine().simulated_seconds().to_bits(),
+            plain.engine().simulated_seconds().to_bits()
+        );
+        assert_eq!(
+            chaos.engine().ledger().snapshot(),
+            plain.engine().ledger().snapshot()
+        );
+        assert_eq!(chaos.calls(), 3);
+        assert!(chaos.drain_chaos().is_empty());
+        // Disabled chaos never advances the membership cursor.
+        assert_eq!(chaos.chaos_state().unwrap().cursor, 0);
+        assert_eq!(chaos.describe(), "sync");
+    }
+
+    #[test]
+    fn chaotic_runs_are_deterministic_and_charge_more() {
+        let cfg = ChaosConfig { crash_p: 0.3, rejoin_p: 0.7, seed: 5, min_nodes: 1 };
+        let a = chaos_fabric(8, 2, cfg);
+        let b = chaos_fabric(8, 2, cfg);
+        let plain = SynchronousFabric::new(engine(8, 2));
+        let mut va = rand_values(8, 2, 3, 23);
+        let mut vb = va.clone();
+        let mut vp = va.clone();
+        let mut events = 0usize;
+        for _ in 0..6 {
+            let (ra, bytes_a) = a.average(&mut va, 1e-6).unwrap();
+            let (rb, bytes_b) = b.average(&mut vb, 1e-6).unwrap();
+            plain.average(&mut vp, 1e-6).unwrap();
+            assert_eq!(ra, rb);
+            assert_eq!(bytes_a, bytes_b);
+            let da = a.drain_chaos();
+            let db = b.drain_chaos();
+            assert_eq!(da, db);
+            events += da.crashed.len() + da.rejoined.len();
+        }
+        for (x, y) in va.iter().zip(&vb) {
+            assert_eq!(x.max_abs_diff(y), 0.0);
+        }
+        assert_eq!(
+            a.engine().simulated_seconds().to_bits(),
+            b.engine().simulated_seconds().to_bits()
+        );
+        assert!(events > 0, "crash_p = 0.3 over 6 calls produced no churn");
+        assert_eq!(a.chaos_state(), b.chaos_state());
+        // Churn (catch-up transfers, restricted rounds) never makes the
+        // run cheaper than the fault-free one on the simulated clock.
+        assert!(
+            a.engine().simulated_seconds() >= plain.engine().simulated_seconds(),
+            "chaos clock {} < fault-free {}",
+            a.engine().simulated_seconds(),
+            plain.engine().simulated_seconds()
+        );
+        // The values only ever mix convexly: they stay in the initial hull.
+        let lo = -3.0 - 1e-9;
+        let hi = 3.0 + 1e-9;
+        for v in &va {
+            for &x in v.as_slice() {
+                assert!((lo..=hi).contains(&x), "{x} escaped the convex hull");
+            }
+        }
+    }
+
+    #[test]
+    fn quorum_stall_accrues_time_without_traffic() {
+        // min_nodes = M: any crash stalls the call until everyone is back.
+        let cfg = ChaosConfig { crash_p: 0.5, rejoin_p: 0.9, seed: 2, min_nodes: 4 };
+        let fab = chaos_fabric(4, 1, cfg);
+        let mut vals = rand_values(4, 2, 2, 31);
+        let mut stalled = 0u64;
+        for _ in 0..12 {
+            fab.average(&mut vals, 1e-6).unwrap();
+            stalled += fab.drain_chaos().stall_rounds;
+        }
+        assert!(stalled > 0, "crash_p = 0.5 never tripped the full quorum");
+        assert_eq!(fab.chaos_state().unwrap().stall_rounds, stalled);
+        // Stall time is α per redraw on top of the mixing rounds.
+        let plain = SynchronousFabric::new(engine(4, 1));
+        let mut vp = rand_values(4, 2, 2, 31);
+        for _ in 0..12 {
+            plain.average(&mut vp, 1e-6).unwrap();
+        }
+        assert!(fab.engine().simulated_seconds() > plain.engine().simulated_seconds());
+        // With rejoin disabled, a lost quorum is a hard error.
+        let dead_end =
+            ChaosConfig { crash_p: 0.9, rejoin_p: 0.0, seed: 1, min_nodes: 4 };
+        let fab = chaos_fabric(4, 1, dead_end);
+        let mut vals = rand_values(4, 2, 2, 31);
+        let mut failed = false;
+        for _ in 0..20 {
+            if fab.average(&mut vals, 1e-6).is_err() {
+                failed = true;
+                break;
+            }
+        }
+        assert!(failed, "quorum loss without rejoin should error");
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_bit_identically_mid_outage() {
+        let cfg = ChaosConfig { crash_p: 0.35, rejoin_p: 0.5, seed: 9, min_nodes: 1 };
+        let a = chaos_fabric(6, 1, cfg);
+        let mut va = rand_values(6, 2, 2, 41);
+        for _ in 0..5 {
+            a.average(&mut va, 1e-6).unwrap();
+            a.drain_chaos();
+        }
+        // Snapshot (ideally mid-outage — with these rates some node is
+        // usually down at call 5; the restore path is exercised either way).
+        let snap = a.chaos_state().unwrap();
+        let calls = a.calls();
+        let b = chaos_fabric(6, 1, cfg);
+        b.restore_chaos_state(snap.clone()).unwrap();
+        b.set_calls(calls);
+        let mut vb = va.clone();
+        for _ in 0..4 {
+            let (ra, _) = a.average(&mut va, 1e-6).unwrap();
+            let (rb, _) = b.average(&mut vb, 1e-6).unwrap();
+            assert_eq!(ra, rb);
+            assert_eq!(a.drain_chaos(), b.drain_chaos());
+        }
+        for (x, y) in va.iter().zip(&vb) {
+            assert_eq!(x.max_abs_diff(y), 0.0);
+        }
+        assert_eq!(a.chaos_state(), b.chaos_state());
+        // A mask of the wrong width is rejected.
+        let bad = ChaosSnapshot { cursor: 0, live: vec![true; 3], stall_rounds: 0 };
+        assert!(b.restore_chaos_state(bad).is_err());
+    }
+
+    #[test]
+    fn construction_validates_quorum_and_topology_width() {
+        let cfg = ChaosConfig { crash_p: 0.1, rejoin_p: 0.5, seed: 1, min_nodes: 9 };
+        assert!(ChaosFabric::new(
+            Box::new(SynchronousFabric::new(engine(4, 1))),
+            cfg,
+            Topology::Circular { nodes: 4, degree: 1 },
+            LatencyModel::default(),
+        )
+        .is_err());
+        let cfg = ChaosConfig { crash_p: 0.1, rejoin_p: 0.5, seed: 1, min_nodes: 1 };
+        assert!(ChaosFabric::new(
+            Box::new(SynchronousFabric::new(engine(4, 1))),
+            cfg,
+            Topology::Circular { nodes: 6, degree: 1 },
+            LatencyModel::default(),
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn catchup_charges_bytes_and_backoff_time() {
+        // Deterministically engineer one crash + one rejoin: find a seed
+        // whose first step crashes exactly one node and whose second step
+        // rejoins it (crash_p small enough that double events are rare).
+        let mut chosen = None;
+        for seed in 0..200u64 {
+            let cfg = ChaosConfig { crash_p: 0.25, rejoin_p: 0.95, seed, min_nodes: 1 };
+            let plan = ChaosPlan::new(cfg).unwrap();
+            let mut live = vec![true; 6];
+            let s0 = plan.step(0, &mut live);
+            if s0.crashed.len() != 1 {
+                continue;
+            }
+            let s1 = plan.step(1, &mut live);
+            if s1.rejoined.len() == 1 && s1.crashed.is_empty() && live.iter().all(|&l| l)
+            {
+                chosen = Some(cfg);
+                break;
+            }
+        }
+        let cfg = chosen.expect("no seed under 200 gives crash-then-rejoin");
+        let fab = chaos_fabric(6, 2, cfg);
+        let mut vals = rand_values(6, 2, 2, 3);
+        // Call 1: one node down -> restricted mixing over 5 nodes.
+        fab.average(&mut vals, 1e-6).unwrap();
+        let d1 = fab.drain_chaos();
+        assert_eq!(d1.crashed.len(), 1);
+        let mask = fab.live_mask().unwrap();
+        assert_eq!(mask.iter().filter(|&&l| !l).count(), 1);
+        let bytes_before = fab.engine().ledger().snapshot().bytes;
+        let clock_before = fab.engine().simulated_seconds();
+        // Call 2: the node rejoins -> catch-up message + backoff time,
+        // then the full-membership inner schedule.
+        let (_, bytes) = fab.average(&mut vals, 1e-6).unwrap();
+        let d2 = fab.drain_chaos();
+        assert_eq!(d2.rejoined.len(), 1);
+        assert!(fab.live_mask().unwrap().iter().all(|&l| l));
+        let ledger_delta = fab.engine().ledger().snapshot().bytes - bytes_before;
+        assert_eq!(bytes, ledger_delta, "returned bytes must match the ledger");
+        // The catch-up payload is one full matrix: 2*2 scalars * 8 bytes,
+        // on top of whatever the inner schedule moved.
+        let plain = SynchronousFabric::new(engine(6, 2));
+        let mut vp = vals.clone();
+        let (_, plain_bytes) = plain.average(&mut vp, 1e-6).unwrap();
+        assert_eq!(bytes, plain_bytes + 4 * 8);
+        // Backoff time: at least one α barrier beyond the inner rounds.
+        let chaos_dt = fab.engine().simulated_seconds() - clock_before;
+        let plain_dt = plain.engine().simulated_seconds();
+        assert!(
+            chaos_dt > plain_dt,
+            "catch-up charged no extra time: {chaos_dt} vs {plain_dt}"
+        );
+    }
+
+    #[test]
+    fn dead_node_values_are_untouched_by_restricted_mixing() {
+        let mut chosen = None;
+        for seed in 0..200u64 {
+            let cfg = ChaosConfig { crash_p: 0.2, rejoin_p: 0.0001, seed, min_nodes: 1 };
+            let plan = ChaosPlan::new(cfg).unwrap();
+            let mut live = vec![true; 6];
+            if plan.step(0, &mut live).crashed.len() == 1 {
+                chosen = Some(cfg);
+                break;
+            }
+        }
+        let cfg = chosen.expect("no seed under 200 crashes exactly one node first");
+        let fab = chaos_fabric(6, 2, cfg);
+        let mut vals = rand_values(6, 2, 2, 51);
+        let before = vals.clone();
+        fab.average(&mut vals, 1e-9).unwrap();
+        let mask = fab.live_mask().unwrap();
+        let dead: Vec<usize> = (0..6).filter(|&i| !mask[i]).collect();
+        assert_eq!(dead.len(), 1);
+        // Frozen: the dead node's matrix is bit-identical to its input.
+        assert_eq!(vals[dead[0]].max_abs_diff(&before[dead[0]]), 0.0);
+        // Live nodes reached consensus among themselves.
+        let live: Vec<usize> = (0..6).filter(|&i| mask[i]).collect();
+        let v0 = &vals[live[0]];
+        for &i in &live[1..] {
+            assert!(vals[i].max_abs_diff(v0) < 1e-7, "live set did not converge");
+        }
+    }
+}

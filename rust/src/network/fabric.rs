@@ -36,6 +36,7 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use super::chaos::{ChaosConfig, ChaosDrain, ChaosSnapshot};
 use super::{GossipEngine, MixingMatrix, NodeLatency};
 use crate::linalg::Matrix;
 use crate::util::Xoshiro256StarStar;
@@ -341,6 +342,10 @@ pub struct CommConfig {
     /// constant lag). Ignored — and required to be the default
     /// [`StalenessSchedule::Iid`] — when staleness is off.
     pub iter_schedule: StalenessSchedule,
+    /// Seeded fault injection (node crash/rejoin churn, quorum gating).
+    /// The zero-fault default is bit-identical to no chaos wrapper at
+    /// all.
+    pub chaos: ChaosConfig,
 }
 
 impl CommConfig {
@@ -383,6 +388,15 @@ impl CommConfig {
                 self.iter_schedule.describe()
             )));
         }
+        self.chaos.validate()?;
+        if self.chaos.enabled() && self.iter_staleness > 0 {
+            return Err(Error::Config(
+                "fault injection cannot combine with iteration staleness: both \
+                 change which consensus state a node reads, and the composed \
+                 semantics are undefined — pick one"
+                    .into(),
+            ));
+        }
         Ok(())
     }
 
@@ -416,6 +430,12 @@ impl CommConfig {
                 )));
             }
         }
+        if self.chaos.min_nodes > nodes {
+            return Err(Error::Config(format!(
+                "min_nodes quorum {} exceeds the cluster size M = {nodes}",
+                self.chaos.min_nodes
+            )));
+        }
         Ok(())
     }
 
@@ -445,6 +465,10 @@ impl CommConfig {
             } else {
                 s.push_str(&format!(" straggler(σ={})", self.node_latency.sigma));
             }
+        }
+        if self.chaos.enabled() {
+            s.push(' ');
+            s.push_str(&self.chaos.describe());
         }
         s
     }
@@ -503,6 +527,39 @@ pub trait CommFabric: Send + Sync {
     /// Convenience accessor for the mixing matrix.
     fn mixing(&self) -> &MixingMatrix {
         self.engine().mixing()
+    }
+
+    /// Per-node liveness after the last averaging call, when this
+    /// fabric injects faults. `None` for fault-free fabrics (everyone
+    /// is always live).
+    fn live_mask(&self) -> Option<Vec<bool>> {
+        None
+    }
+
+    /// Take-and-clear the churn events (crashes, rejoins, quorum
+    /// stalls) accumulated since the previous drain. Fault-free
+    /// fabrics always return the empty drain.
+    fn drain_chaos(&self) -> ChaosDrain {
+        ChaosDrain::default()
+    }
+
+    /// The checkpointable fault-injection runtime state (membership
+    /// cursor, liveness mask, cumulative stalls). `None` for
+    /// fault-free fabrics.
+    fn chaos_state(&self) -> Option<ChaosSnapshot> {
+        None
+    }
+
+    /// Restore fault-injection state from a checkpoint. Fault-free
+    /// fabrics reject the call: a checkpoint that carries chaos state
+    /// cannot resume onto a run configured without chaos.
+    fn restore_chaos_state(&self, snapshot: ChaosSnapshot) -> Result<()> {
+        let _ = snapshot;
+        Err(Error::Checkpoint(
+            "checkpoint carries fault-injection state but the configured fabric is \
+             fault-free"
+                .into(),
+        ))
     }
 }
 
@@ -1027,6 +1084,36 @@ mod tests {
             ..ok
         };
         assert!(bad.validate_with_iterations(1e-9, true, 5, 4).is_err());
+    }
+
+    #[test]
+    fn comm_config_validates_chaos_knobs() {
+        let ok = CommConfig {
+            chaos: ChaosConfig { crash_p: 0.1, rejoin_p: 0.5, seed: 1, min_nodes: 2 },
+            ..CommConfig::default()
+        };
+        ok.validate_for(1e-9, false).unwrap();
+        ok.validate_with_iterations(1e-9, false, 5, 4).unwrap();
+        // Quorum larger than the cluster is caught by the sized check.
+        assert!(ok.validate_with_iterations(1e-9, false, 5, 1).is_err());
+        // Fault injection composes with schedules but not with
+        // iteration staleness.
+        let bad = CommConfig { iter_staleness: 2, ..ok };
+        assert!(bad.validate_for(1e-9, true).is_err());
+        let ok_lossy = CommConfig {
+            schedule: CommSchedule::Lossy { loss_p: 0.2 },
+            ..ok
+        };
+        ok_lossy.validate_for(1e-9, false).unwrap();
+        // Silent no-op knobs (seed without crash_p) bubble up.
+        let bad = CommConfig {
+            chaos: ChaosConfig { crash_p: 0.0, rejoin_p: 0.0, seed: 9, min_nodes: 1 },
+            ..CommConfig::default()
+        };
+        assert!(bad.validate_for(1e-9, false).is_err());
+        // Chaos renders as a relaxation token; the default renders none.
+        assert_eq!(ok.relaxation_tokens(), " chaos(p=0.1, rejoin=0.5, quorum=2)");
+        assert_eq!(CommConfig::default().relaxation_tokens(), "");
     }
 
     #[test]

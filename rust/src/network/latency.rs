@@ -126,6 +126,20 @@ impl LatencyModel {
     ) -> f64 {
         self.alpha * mult + (max_degree as u64 * bytes_per_neighbor) as f64 / self.beta
     }
+
+    /// Simulated seconds a rejoining node's catch-up transfer costs under
+    /// exponential-backoff retries: attempt `a` (0-based) pays a barrier
+    /// of `α·2^a` before the node reaches a live peer, and the payload
+    /// serializes once on the successful attempt. `attempts = 1` is a
+    /// clean first-try fetch, `α + bytes/β`; the total barrier cost is
+    /// `α·(2^attempts − 1)`.
+    pub fn backoff_time(&self, attempts: u32, bytes: u64) -> f64 {
+        let mut barrier = 0.0;
+        for a in 0..attempts.min(63) {
+            barrier += self.alpha * (1u64 << a) as f64;
+        }
+        barrier + bytes as f64 / self.beta
+    }
 }
 
 /// Seeded per-node latency heterogeneity: node `i`'s barrier cost in
@@ -391,6 +405,22 @@ mod tests {
         // slack 1 halves alpha, leaves the serialization term alone.
         assert!((m.relaxed_round_time(2, 500, 1) - (0.005 + 1.0)).abs() < 1e-12);
         assert!(m.relaxed_round_time(2, 500, 4) < m.round_time(2, 500));
+    }
+
+    #[test]
+    fn backoff_time_doubles_the_barrier_per_retry() {
+        let m = LatencyModel { alpha: 0.01, beta: 1000.0 };
+        // One clean attempt is exactly a synchronous fetch.
+        assert_eq!(m.backoff_time(1, 500).to_bits(), (0.01 + 0.5).to_bits());
+        // attempts = 3: α·(1 + 2 + 4) + bytes/β.
+        assert!((m.backoff_time(3, 500) - (0.07 + 0.5)).abs() < 1e-12);
+        // Monotone in attempts; the payload term never multiplies.
+        assert!(m.backoff_time(4, 500) > m.backoff_time(3, 500));
+        assert!(
+            m.backoff_time(4, 500) - m.backoff_time(4, 0) - 0.5 < 1e-12
+        );
+        // Zero attempts degenerates to pure serialization.
+        assert_eq!(m.backoff_time(0, 1000).to_bits(), 1.0f64.to_bits());
     }
 
     #[test]

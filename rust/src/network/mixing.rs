@@ -76,6 +76,78 @@ impl MixingMatrix {
         Ok(mm)
     }
 
+    /// Metropolis–Hastings mixing restricted to the `live` subset of a
+    /// topology's nodes — the fault-injection path: the induced subgraph
+    /// keeps an edge only when *both* endpoints are live, degrees are
+    /// recomputed on the live set, and the result is doubly stochastic
+    /// over the live nodes (row `k` corresponds to the `k`-th live node
+    /// in ascending index order). Dead nodes must never silently
+    /// partition consensus, so a live set whose induced subgraph is
+    /// disconnected is a clean `Err`, not a divergent mix.
+    pub fn build_restricted(topology: &Topology, live: &[bool]) -> Result<Self> {
+        let adj = topology.neighbor_sets()?;
+        if live.len() != adj.len() {
+            return Err(Error::Network(format!(
+                "live mask of {} entries for a {}-node topology",
+                live.len(),
+                adj.len()
+            )));
+        }
+        let ids: Vec<usize> = (0..adj.len()).filter(|&i| live[i]).collect();
+        if ids.is_empty() {
+            return Err(Error::Network("no live nodes to mix over".into()));
+        }
+        let mut local = vec![usize::MAX; adj.len()];
+        for (k, &i) in ids.iter().enumerate() {
+            local[i] = k;
+        }
+        // Induced adjacency (including self) in live-local indices.
+        let sub: Vec<Vec<usize>> = ids
+            .iter()
+            .map(|&i| adj[i].iter().filter(|&&j| live[j]).map(|&j| local[j]).collect())
+            .collect();
+        // Connectivity over the live set: a crash pattern that splits the
+        // graph cannot reach consensus and must be reported, not mixed.
+        let n = sub.len();
+        let mut seen = vec![false; n];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        while let Some(k) = stack.pop() {
+            for &l in &sub[k] {
+                if !seen[l] {
+                    seen[l] = true;
+                    stack.push(l);
+                }
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            let cut: Vec<usize> = (0..n).filter(|&k| !seen[k]).map(|k| ids[k]).collect();
+            return Err(Error::Network(format!(
+                "crash pattern disconnects the live set: nodes {cut:?} are \
+                 unreachable from live node {}",
+                ids[0]
+            )));
+        }
+        let mut h = Matrix::zeros(n, n);
+        let deg: Vec<usize> = sub.iter().map(|s| s.len() - 1).collect();
+        for (k, set) in sub.iter().enumerate() {
+            let mut diag = 1.0;
+            for &l in set {
+                if l == k {
+                    continue;
+                }
+                let w = 1.0 / (1.0 + deg[k].max(deg[l]) as f64);
+                h.set(k, l, w);
+                diag -= w;
+            }
+            h.set(k, k, diag);
+        }
+        let lambda2 = second_eigenvalue(&h);
+        let mm = Self { h, lambda2 };
+        mm.validate()?;
+        Ok(mm)
+    }
+
     /// Validate rows/columns sum to 1 and entries are non-negative.
     fn validate(&self) -> Result<()> {
         let m = self.h.rows();
@@ -271,6 +343,112 @@ mod tests {
             }
         }
         assert_eq!(checked, 36);
+    }
+
+    #[test]
+    fn restricted_metropolis_doubly_stochastic_on_live_subsets_property() {
+        // Fault-injection counterpart of the 36-instance sweep above:
+        // for every RandomGeometric instance, sweep live subsets (every
+        // single-node crash plus seeded multi-node crash patterns).
+        // Whenever the induced live subgraph stays connected the
+        // restricted Metropolis matrix must be exactly doubly stochastic
+        // with a contracting gap (λ₂ < 1); a disconnecting pattern must
+        // be a clean Err — never a silently divergent mix.
+        use crate::util::{Rng, Xoshiro256StarStar};
+        let m = 16usize;
+        let mut instances = 0;
+        let mut connected_subsets = 0;
+        for seed in 0..12u64 {
+            for &radius in &[0.3, 0.45, 0.7] {
+                let t = Topology::RandomGeometric { nodes: m, radius, seed };
+                let mut masks: Vec<Vec<bool>> = Vec::new();
+                for dead in 0..m {
+                    let mut mask = vec![true; m];
+                    mask[dead] = false;
+                    masks.push(mask);
+                }
+                let mut rng = Xoshiro256StarStar::seed_from_u64(seed ^ 0xc4a0_5);
+                for _ in 0..6 {
+                    let mask: Vec<bool> = (0..m).map(|_| rng.next_f64() < 0.7).collect();
+                    if mask.iter().any(|&l| l) {
+                        masks.push(mask);
+                    }
+                }
+                for mask in &masks {
+                    match MixingMatrix::build_restricted(&t, mask) {
+                        Ok(mm) => {
+                            let n = mm.num_nodes();
+                            assert_eq!(n, mask.iter().filter(|&&l| l).count());
+                            for i in 0..n {
+                                let mut row = 0.0;
+                                let mut col = 0.0;
+                                for j in 0..n {
+                                    let hij = mm.matrix().get(i, j);
+                                    assert!(
+                                        hij >= -1e-12,
+                                        "negative h[{i},{j}]={hij} ({seed},{radius})"
+                                    );
+                                    row += hij;
+                                    col += mm.matrix().get(j, i);
+                                }
+                                assert!((row - 1.0).abs() < 1e-9, "row {i}={row}");
+                                assert!((col - 1.0).abs() < 1e-9, "col {i}={col}");
+                            }
+                            assert!(mm.lambda2() < 1.0, "λ2={} ({seed},{radius})", mm.lambda2());
+                            connected_subsets += 1;
+                        }
+                        Err(e) => {
+                            // Only a genuine partition may be rejected.
+                            let msg = e.to_string();
+                            assert!(
+                                msg.contains("disconnects the live set"),
+                                "unexpected restricted-mixing error: {msg}"
+                            );
+                        }
+                    }
+                }
+                instances += 1;
+            }
+        }
+        assert_eq!(instances, 36);
+        assert!(connected_subsets > 36, "sweep barely exercised: {connected_subsets}");
+    }
+
+    #[test]
+    fn restricted_metropolis_rejects_disconnecting_crashes() {
+        // Killing the hub of a star strands every leaf: the live set is
+        // disconnected and the build must fail loudly.
+        let t = Topology::Star { nodes: 6 };
+        let mut mask = vec![true; 6];
+        mask[0] = false;
+        let err = MixingMatrix::build_restricted(&t, &mask).unwrap_err();
+        assert!(err.to_string().contains("disconnects the live set"), "{err}");
+        // A ring loses connectivity when two opposite nodes die.
+        let ring = Topology::Circular { nodes: 8, degree: 1 };
+        let mut mask = vec![true; 8];
+        mask[0] = false;
+        mask[4] = false;
+        assert!(MixingMatrix::build_restricted(&ring, &mask).is_err());
+        // ... but an adjacent pair only shortens the path: still valid.
+        let mut mask = vec![true; 8];
+        mask[0] = false;
+        mask[1] = false;
+        let mm = MixingMatrix::build_restricted(&ring, &mask).unwrap();
+        assert_eq!(mm.num_nodes(), 6);
+        assert!(mm.lambda2() < 1.0);
+        // Degenerate masks are rejected.
+        assert!(MixingMatrix::build_restricted(&ring, &[true; 3]).is_err());
+        assert!(MixingMatrix::build_restricted(&ring, &[false; 8]).is_err());
+        // All-live restriction equals the unrestricted Metropolis build.
+        let full = MixingMatrix::build(&ring, WeightRule::Metropolis).unwrap();
+        let all = MixingMatrix::build_restricted(&ring, &[true; 8]).unwrap();
+        assert_eq!(all.matrix().max_abs_diff(full.matrix()), 0.0);
+        // A single live node is the trivial 1×1 identity: one round.
+        let mut one = vec![false; 8];
+        one[3] = true;
+        let mm = MixingMatrix::build_restricted(&ring, &one).unwrap();
+        assert_eq!(mm.num_nodes(), 1);
+        assert_eq!(mm.consensus_rounds(1e-9), 1);
     }
 
     #[test]

@@ -35,9 +35,16 @@
 //!   nodes still gate);
 //! * [`StalenessSchedule`] — how iteration-level staleness ages are
 //!   assigned (seeded i.i.d. draws, a fixed lag, or one slow node at
-//!   constant lag — the Liang et al. Fig.-2 settings).
+//!   constant lag — the Liang et al. Fig.-2 settings);
+//! * [`ChaosFabric`] / [`ChaosPlan`] — seeded fault injection on top of
+//!   any fabric: node crash/rejoin churn with live-set (restricted
+//!   Metropolis) mixing, catch-up replay for rejoiners, and a
+//!   `min_nodes` quorum gate that stalls the round until membership
+//!   recovers. A zero-fault plan is bit-identical to the unwrapped
+//!   fabric.
 
 mod accounting;
+mod chaos;
 mod fabric;
 mod gossip;
 mod latency;
@@ -45,6 +52,7 @@ mod mixing;
 mod topology;
 
 pub use accounting::{CommLedger, CommSnapshot};
+pub use chaos::{ChaosConfig, ChaosDrain, ChaosFabric, ChaosPlan, ChaosSnapshot, MembershipStep};
 pub use fabric::{
     AdaptiveDeltaPolicy, CommConfig, CommFabric, CommSchedule, LossyFabric, SemiSyncFabric,
     StalenessSchedule, SynchronousFabric,

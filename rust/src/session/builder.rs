@@ -4,8 +4,8 @@ use super::{StopPolicy, TrainSession};
 use crate::coordinator::{ConsensusMode, DssfnAlgorithm, TaskRef, TrainOptions};
 use crate::data::{lookup, ClassificationTask};
 use crate::network::{
-    AdaptiveDeltaPolicy, CommConfig, CommSchedule, LatencyModel, NodeLatency, StalenessSchedule,
-    Topology, WeightRule,
+    AdaptiveDeltaPolicy, ChaosConfig, CommConfig, CommSchedule, LatencyModel, NodeLatency,
+    StalenessSchedule, Topology, WeightRule,
 };
 use crate::runtime::{ComputeBackend, NativeBackend};
 use crate::ssfn::{GrowthPolicy, SsfnArchitecture, TrainHyper};
@@ -53,6 +53,7 @@ pub struct SessionBuilder {
     node_latency: NodeLatency,
     iter_staleness: usize,
     iter_schedule: StalenessSchedule,
+    chaos: ChaosConfig,
     latency: LatencyModel,
     threads: usize,
     record_cost_curve: bool,
@@ -94,6 +95,7 @@ impl SessionBuilder {
             node_latency: NodeLatency::default(),
             iter_staleness: 0,
             iter_schedule: StalenessSchedule::default(),
+            chaos: ChaosConfig::default(),
             latency: LatencyModel::default(),
             threads: 0,
             record_cost_curve: true,
@@ -297,6 +299,33 @@ impl SessionBuilder {
         self
     }
 
+    /// Seeded fault injection: per-averaging node crash/rejoin churn
+    /// with live-set (restricted Metropolis) mixing, catch-up replay for
+    /// rejoiners and a `min_nodes` quorum gate ([`ChaosConfig`]). The
+    /// zero-fault default is bit-identical to no fault layer at all;
+    /// applies to gossip consensus only.
+    ///
+    /// ```
+    /// use dssfn::network::ChaosConfig;
+    /// use dssfn::session::SessionBuilder;
+    ///
+    /// let session = SessionBuilder::new()
+    ///     .dataset("quickstart")
+    ///     .layers(1)
+    ///     .hidden_extra(8)
+    ///     .admm_iterations(3)
+    ///     .nodes(4)
+    ///     .degree(1)
+    ///     .chaos(ChaosConfig { crash_p: 0.1, rejoin_p: 0.5, seed: 7, min_nodes: 2 })
+    ///     .build()
+    ///     .unwrap();
+    /// assert!(session.describe().contains("chaos(p=0.1, rejoin=0.5, quorum=2)"));
+    /// ```
+    pub fn chaos(mut self, chaos: ChaosConfig) -> Self {
+        self.chaos = chaos;
+        self
+    }
+
     /// α-β latency model parameters (s/round, bytes/s).
     pub fn latency(mut self, alpha: f64, beta: f64) -> Self {
         self.latency = LatencyModel { alpha, beta };
@@ -386,6 +415,7 @@ impl SessionBuilder {
             node_latency: self.node_latency,
             iter_staleness: self.iter_staleness,
             iter_schedule: self.iter_schedule,
+            chaos: self.chaos,
         };
         let alg = DssfnAlgorithm::with_comm(
             arch,
@@ -550,6 +580,79 @@ mod tests {
             .node_latency(NodeLatency { sigma: -0.5, seed: 1, corr: 0.0 })
             .build()
             .is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_chaos_config() {
+        // Fault injection requires gossip consensus.
+        assert!(SessionBuilder::new()
+            .dataset("quickstart")
+            .layers(1)
+            .hidden_extra(8)
+            .nodes(4)
+            .degree(1)
+            .exact_consensus()
+            .chaos(ChaosConfig { crash_p: 0.1, rejoin_p: 0.5, seed: 1, min_nodes: 1 })
+            .build()
+            .is_err());
+        // ... and cannot combine with iteration staleness.
+        assert!(SessionBuilder::new()
+            .dataset("quickstart")
+            .layers(1)
+            .hidden_extra(8)
+            .nodes(4)
+            .degree(1)
+            .iter_staleness(2)
+            .chaos(ChaosConfig { crash_p: 0.1, rejoin_p: 0.5, seed: 1, min_nodes: 1 })
+            .build()
+            .is_err());
+        // Quorum larger than the cluster.
+        assert!(SessionBuilder::new()
+            .dataset("quickstart")
+            .layers(1)
+            .hidden_extra(8)
+            .nodes(4)
+            .degree(1)
+            .chaos(ChaosConfig { crash_p: 0.1, rejoin_p: 0.5, seed: 1, min_nodes: 5 })
+            .build()
+            .is_err());
+        // Seed without a crash probability is a silent no-op.
+        assert!(SessionBuilder::new()
+            .dataset("quickstart")
+            .layers(1)
+            .hidden_extra(8)
+            .nodes(4)
+            .degree(1)
+            .chaos(ChaosConfig { crash_p: 0.0, rejoin_p: 0.0, seed: 9, min_nodes: 1 })
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn chaos_session_trains_and_reports_its_mode() {
+        let session = SessionBuilder::new()
+            .dataset("quickstart")
+            .seed(3)
+            .layers(1)
+            .hidden_extra(10)
+            .admm_iterations(6)
+            .nodes(4)
+            // Complete graph: every live subset stays connected, so no
+            // seeded crash pattern can disconnect the restricted mix.
+            .topology(Topology::Complete { nodes: 4 })
+            .threads(1)
+            .chaos(ChaosConfig { crash_p: 0.15, rejoin_p: 0.6, seed: 11, min_nodes: 2 })
+            .build()
+            .unwrap();
+        assert!(
+            session.describe().contains("chaos(p=0.15, rejoin=0.6, quorum=2)"),
+            "{}",
+            session.describe()
+        );
+        let (_model, report) = session.run_to_completion().unwrap();
+        assert!(report.mode.contains("chaos(p=0.15"));
+        assert!(report.comm_total.bytes > 0);
+        assert!(report.simulated_comm_secs > 0.0);
     }
 
     #[test]

@@ -192,6 +192,40 @@ pub enum StepEvent {
         /// Whether this was the final layer of the run.
         last: bool,
     },
+    /// A node crashed during the preceding consensus averaging (seeded
+    /// fault injection, [`crate::network::ChaosFabric`]). Its Z/dual
+    /// state is frozen until it rejoins; consensus continues over the
+    /// live set.
+    NodeDropped {
+        /// Layer index.
+        layer: usize,
+        /// ADMM iteration whose averaging observed the crash.
+        iteration: usize,
+        /// The crashed node's index.
+        node: usize,
+    },
+    /// A crashed node rejoined: it caught up by adopting the surviving
+    /// nodes' consensus state (charged as extra bytes and backoff
+    /// simulated time) and resumes normal iteration.
+    NodeRejoined {
+        /// Layer index.
+        layer: usize,
+        /// ADMM iteration whose averaging observed the rejoin.
+        iteration: usize,
+        /// The rejoined node's index.
+        node: usize,
+    },
+    /// A consensus averaging stalled below the `min_nodes` quorum:
+    /// membership was redrawn `rounds` times (simulated time accrued,
+    /// no traffic) before enough nodes were live to proceed.
+    QuorumStalled {
+        /// Layer index.
+        layer: usize,
+        /// ADMM iteration whose averaging stalled.
+        iteration: usize,
+        /// Membership redraws spent below quorum.
+        rounds: u64,
+    },
     /// The session is complete; call [`TrainSession::finish`] (or let
     /// [`TrainSession::run_to_completion`] return) for the model.
     Finished {

@@ -40,6 +40,23 @@ pub trait TrainObserver {
         let _ = (layer, iteration, delta);
     }
 
+    /// A node crashed during the preceding consensus averaging (fault
+    /// injection only).
+    fn on_node_dropped(&mut self, layer: usize, iteration: usize, node: usize) {
+        let _ = (layer, iteration, node);
+    }
+
+    /// A crashed node rejoined and caught up (fault injection only).
+    fn on_node_rejoined(&mut self, layer: usize, iteration: usize, node: usize) {
+        let _ = (layer, iteration, node);
+    }
+
+    /// A consensus averaging stalled below the `min_nodes` quorum for
+    /// `rounds` membership redraws (fault injection only).
+    fn on_quorum_stalled(&mut self, layer: usize, iteration: usize, rounds: u64) {
+        let _ = (layer, iteration, rounds);
+    }
+
     /// A layer finished.
     fn on_layer_advanced(&mut self, layer: usize, cost: f64, last: bool) {
         let _ = (layer, cost, last);
@@ -74,6 +91,15 @@ pub(super) fn dispatch(obs: &mut dyn TrainObserver, event: &StepEvent) {
         }
         StepEvent::DeltaAdjusted { layer, iteration, delta } => {
             obs.on_delta_adjusted(layer, iteration, delta)
+        }
+        StepEvent::NodeDropped { layer, iteration, node } => {
+            obs.on_node_dropped(layer, iteration, node)
+        }
+        StepEvent::NodeRejoined { layer, iteration, node } => {
+            obs.on_node_rejoined(layer, iteration, node)
+        }
+        StepEvent::QuorumStalled { layer, iteration, rounds } => {
+            obs.on_quorum_stalled(layer, iteration, rounds)
         }
         StepEvent::LayerAdvanced { layer, cost, last } => {
             obs.on_layer_advanced(layer, cost, last)
@@ -115,6 +141,30 @@ mod tests {
                 self.finished += 1;
             }
         }
+        struct Churn {
+            dropped: Vec<usize>,
+            rejoined: Vec<usize>,
+            stalls: u64,
+        }
+        impl TrainObserver for Churn {
+            fn on_node_dropped(&mut self, _l: usize, _k: usize, node: usize) {
+                self.dropped.push(node);
+            }
+            fn on_node_rejoined(&mut self, _l: usize, _k: usize, node: usize) {
+                self.rejoined.push(node);
+            }
+            fn on_quorum_stalled(&mut self, _l: usize, _k: usize, rounds: u64) {
+                self.stalls += rounds;
+            }
+        }
+        let mut ch = Churn { dropped: Vec::new(), rejoined: Vec::new(), stalls: 0 };
+        dispatch(&mut ch, &StepEvent::NodeDropped { layer: 0, iteration: 2, node: 3 });
+        dispatch(&mut ch, &StepEvent::NodeRejoined { layer: 0, iteration: 4, node: 3 });
+        dispatch(&mut ch, &StepEvent::QuorumStalled { layer: 1, iteration: 0, rounds: 7 });
+        assert_eq!(ch.dropped, vec![3]);
+        assert_eq!(ch.rejoined, vec![3]);
+        assert_eq!(ch.stalls, 7);
+
         let mut c = Counter { layers: 0, iters: 0, finished: 0 };
         dispatch(&mut c, &StepEvent::LayerAdvanced { layer: 0, cost: 1.0, last: false });
         dispatch(

@@ -1,0 +1,218 @@
+//! Integration: seeded fault injection through the full session stack.
+//!
+//! Pins the two ISSUE acceptance invariants:
+//!
+//! 1. **Zero-fault oracle** — a run whose `ChaosPlan` is enabled but
+//!    never fires is bit-identical (weights, cost curve, bytes,
+//!    simulated seconds) to the same run on the unwrapped fabric.
+//! 2. **Mid-outage resume** — a checkpoint taken while a node is down
+//!    resumes bit-identically: same final model, same report, same
+//!    churn schedule.
+
+use std::sync::Arc;
+
+use dssfn::data::lookup;
+use dssfn::network::{ChaosConfig, ChaosPlan};
+use dssfn::session::SessionBuilder;
+use dssfn::{resume_session, Checkpoint, StepEvent};
+
+/// Quickstart task shared between runs so data generation cannot differ.
+fn task(seed: u64) -> Arc<dssfn::data::ClassificationTask> {
+    Arc::new(lookup("quickstart").unwrap().generator(seed).generate().unwrap())
+}
+
+fn is_churn_event(ev: &StepEvent) -> bool {
+    matches!(
+        ev,
+        StepEvent::NodeDropped { .. }
+            | StepEvent::NodeRejoined { .. }
+            | StepEvent::QuorumStalled { .. }
+    )
+}
+
+#[test]
+fn zero_fault_chaos_session_matches_the_unwrapped_run_bit_for_bit() {
+    // Find a chaos seed whose stream fires no crash in the first 256
+    // membership steps at this (tiny but nonzero) crash probability:
+    // the plan is *enabled*, so every averaging call runs the full
+    // chaos path — membership step, quorum gate, catch-up scan — yet
+    // no fault ever triggers. The run must be indistinguishable from
+    // the unwrapped fabric down to the last bit.
+    let m = 4;
+    let crash_p = 1e-12;
+    let mut chosen = None;
+    'seed: for seed in 0..64u64 {
+        let cfg = ChaosConfig { crash_p, rejoin_p: 0.0, seed, min_nodes: 1 };
+        let plan = ChaosPlan::new(cfg).unwrap();
+        for cursor in 0..256 {
+            let mut live = vec![true; m];
+            if !plan.step(cursor, &mut live).crashed.is_empty() {
+                continue 'seed;
+            }
+        }
+        chosen = Some(cfg);
+        break;
+    }
+    let chaos = chosen.expect("no fault-free chaos seed in 0..64");
+
+    let task = task(3);
+    let run = |chaos_cfg: Option<ChaosConfig>| {
+        let mut b = SessionBuilder::new()
+            .shared_task(Arc::clone(&task))
+            .seed(3)
+            .layers(2)
+            .hidden_extra(12)
+            .admm_iterations(6)
+            .nodes(m)
+            .degree(2)
+            .threads(1);
+        if let Some(c) = chaos_cfg {
+            b = b.chaos(c);
+        }
+        let mut session = b.build().unwrap();
+        let mut churn = 0usize;
+        while let Some(ev) = session.step().unwrap() {
+            if is_churn_event(&ev) {
+                churn += 1;
+            }
+        }
+        let (model, report) = session.finish().unwrap();
+        (model.into_ssfn().unwrap(), report, churn)
+    };
+
+    let (m_plain, r_plain, churn_plain) = run(None);
+    let (m_chaos, r_chaos, churn_chaos) = run(Some(chaos));
+
+    assert_eq!(churn_plain, 0);
+    assert_eq!(churn_chaos, 0, "the zero-fault plan fired a churn event");
+    assert_eq!(m_plain.weights().len(), m_chaos.weights().len());
+    for (a, b) in m_plain.weights().iter().zip(m_chaos.weights()) {
+        assert_eq!(a.max_abs_diff(b), 0.0);
+    }
+    assert_eq!(m_plain.output().max_abs_diff(m_chaos.output()), 0.0);
+    assert_eq!(r_plain.full_cost_curve(), r_chaos.full_cost_curve());
+    assert_eq!(r_plain.comm_total, r_chaos.comm_total);
+    assert_eq!(
+        r_plain.simulated_comm_secs.to_bits(),
+        r_chaos.simulated_comm_secs.to_bits()
+    );
+    // The chaos run still declares itself in the mode string.
+    assert!(r_chaos.mode.contains("chaos(p="), "mode: {}", r_chaos.mode);
+    assert!(!r_plain.mode.contains("chaos"), "mode: {}", r_plain.mode);
+}
+
+#[test]
+fn mid_outage_checkpoint_resumes_bit_identically() {
+    let task = task(5);
+    let cfg = ChaosConfig { crash_p: 0.3, rejoin_p: 0.6, seed: 9, min_nodes: 2 };
+    // Degree 2 on 4 nodes is the complete graph: no crash pattern can
+    // disconnect the live set, so the run never errors on topology.
+    let build = || {
+        SessionBuilder::new()
+            .shared_task(Arc::clone(&task))
+            .seed(5)
+            .layers(2)
+            .hidden_extra(12)
+            .admm_iterations(6)
+            .nodes(4)
+            .degree(2)
+            .threads(1)
+            .chaos(cfg)
+            .build()
+            .unwrap()
+    };
+
+    // Reference: one uninterrupted run.
+    let mut reference = build();
+    let mut churn = 0usize;
+    while let Some(ev) = reference.step().unwrap() {
+        if is_churn_event(&ev) {
+            churn += 1;
+        }
+    }
+    assert!(churn > 0, "crash_p = 0.3 over 12 calls produced no churn");
+    let (ref_model, ref_report) = reference.finish().unwrap();
+    let ref_model = ref_model.into_ssfn().unwrap();
+
+    // Interrupted run: checkpoint at the first step boundary where some
+    // node is down (mid-outage), serialize, drop, resume, finish.
+    let mut session = build();
+    let mut ck_bytes = None;
+    while let Some(ev) = session.step().unwrap() {
+        if matches!(ev, StepEvent::NodeDropped { .. }) {
+            let ck = session.checkpoint().unwrap();
+            if ck.chaos_liveness().iter().any(|&l| !l) {
+                ck_bytes = Some(ck.to_bytes());
+                break;
+            }
+        }
+    }
+    let bytes = ck_bytes.expect("no mid-outage step boundary before the run finished");
+    drop(session);
+
+    let ck = Checkpoint::from_bytes(&bytes).unwrap();
+    assert!(
+        ck.chaos_liveness().iter().any(|&l| !l),
+        "snapshot did not land mid-outage"
+    );
+    assert!(ck.comm_config().chaos.enabled());
+    let mut resumed = resume_session(&ck, &task).unwrap();
+    let (model, report) = resumed.finish().unwrap();
+    let model = model.into_ssfn().unwrap();
+
+    assert_eq!(model.weights().len(), ref_model.weights().len());
+    for (a, b) in model.weights().iter().zip(ref_model.weights()) {
+        assert_eq!(a.max_abs_diff(b), 0.0);
+    }
+    assert_eq!(model.output().max_abs_diff(ref_model.output()), 0.0);
+    assert_eq!(report.full_cost_curve(), ref_report.full_cost_curve());
+    assert_eq!(report.comm_total, ref_report.comm_total);
+    assert_eq!(
+        report.simulated_comm_secs.to_bits(),
+        ref_report.simulated_comm_secs.to_bits()
+    );
+    assert_eq!(report.train_accuracy, ref_report.train_accuracy);
+}
+
+#[test]
+fn churn_degrades_gracefully_and_charges_for_recovery() {
+    // Same run at increasing crash probability: sim-time and stall
+    // exposure must not shrink, and a mild churn rate must not wreck
+    // the model (rejoin catch-up keeps the live set coherent).
+    let task = task(7);
+    let run = |crash_p: f64| {
+        let mut b = SessionBuilder::new()
+            .shared_task(Arc::clone(&task))
+            .seed(7)
+            .layers(1)
+            .hidden_extra(12)
+            .admm_iterations(8)
+            .nodes(4)
+            .degree(2)
+            .threads(1);
+        if crash_p > 0.0 {
+            b = b.chaos(ChaosConfig {
+                crash_p,
+                rejoin_p: 0.7,
+                seed: 21,
+                min_nodes: 1,
+            });
+        }
+        let mut session = b.build().unwrap();
+        while session.step().unwrap().is_some() {}
+        let (_, report) = session.finish().unwrap();
+        report
+    };
+    let fault_free = run(0.0);
+    let mild = run(0.05);
+    let heavy = run(0.3);
+    assert!(mild.simulated_comm_secs >= fault_free.simulated_comm_secs);
+    assert!(heavy.simulated_comm_secs >= mild.simulated_comm_secs);
+    // Mild churn stays within 5% of the fault-free final cost.
+    let c0 = fault_free.final_cost().unwrap();
+    let c1 = mild.final_cost().unwrap();
+    assert!(
+        (c1 - c0).abs() <= 0.05 * c0.abs().max(1e-12),
+        "mild churn final cost {c1} strays >5% from fault-free {c0}"
+    );
+}

@@ -358,6 +358,95 @@ fn straggler_corr_and_iter_schedule_flags() {
 }
 
 #[test]
+fn chaos_flags_validate_and_train() {
+    // Every chaos knob that would be a silent no-op without a crash
+    // probability is rejected with a pointer at --chaos-crash-p.
+    for args in [
+        ["train", "--dataset", "quickstart", "--chaos-seed", "7"],
+        ["train", "--dataset", "quickstart", "--chaos-rejoin-p", "0.5"],
+        ["train", "--dataset", "quickstart", "--min-nodes", "2"],
+    ] {
+        let out = dssfn().args(args).output().unwrap();
+        assert!(!out.status.success());
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains("chaos_crash_p"), "stderr: {err}");
+    }
+
+    // Quorum bounds: 0 and > M are both refused.
+    let out = dssfn()
+        .args([
+            "train", "--dataset", "quickstart", "--nodes", "4",
+            "--chaos-crash-p", "0.1", "--min-nodes", "0",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("min_nodes"));
+    let out = dssfn()
+        .args([
+            "train", "--dataset", "quickstart", "--nodes", "4",
+            "--chaos-crash-p", "0.1", "--min-nodes", "5",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("min_nodes"));
+
+    // Fault injection needs gossip: exact consensus refuses it ...
+    let out = dssfn()
+        .args([
+            "train", "--dataset", "quickstart", "--exact-consensus",
+            "--chaos-crash-p", "0.1",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("exact_consensus"));
+
+    // ... and so does iteration staleness (frozen state has no age).
+    let out = dssfn()
+        .args([
+            "train", "--dataset", "quickstart", "--iter-staleness", "2",
+            "--chaos-crash-p", "0.1",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("staleness"));
+
+    // Chaos knobs conflict with --resume like every training flag.
+    let out = dssfn()
+        .args(["train", "--resume", "nope.ckpt", "--chaos-crash-p", "0.1"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("cannot be combined"));
+
+    // A churn run trains end to end and reports its mode. Degree 2 on
+    // 4 nodes is the complete graph, so no crash pattern can disconnect
+    // the live set.
+    let out = dssfn()
+        .args([
+            "train", "--dataset", "quickstart", "--layers", "1",
+            "--admm-iters", "8", "--nodes", "4", "--degree", "2",
+            "--chaos-crash-p", "0.15", "--chaos-rejoin-p", "0.6",
+            "--chaos-seed", "11", "--min-nodes", "2",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        text.contains("chaos(p=0.15, rejoin=0.6, quorum=2)"),
+        "chaos tag missing from mode:\n{text}"
+    );
+}
+
+#[test]
 fn train_with_iter_staleness_and_straggler_model() {
     let out = dssfn()
         .args([
