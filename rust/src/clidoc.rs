@@ -15,6 +15,8 @@
 /// The subcommands and their one-line purposes.
 pub const COMMANDS: &[(&str, &str)] = &[
     ("train", "train the decentralized SSFN (session-driven: typed events, checkpoints, budgets)"),
+    ("serve", "coordinate a real multi-process run over TCP (workers join with `worker`)"),
+    ("worker", "run one shard's node process against a `serve` coordinator"),
     ("central", "train the centralized baseline on the full data"),
     ("sweep", "degree sweep over the circular topology (Fig. 4)"),
     ("datasets", "list registered datasets"),
@@ -44,23 +46,23 @@ pub struct Flag {
 /// Every flag the binary accepts — the one table the usage text and
 /// `docs/CLI.md` are rendered from.
 pub const FLAGS: &[Flag] = &[
-    Flag { name: "--config", value: "FILE", commands: "train central sweep info", default: "",
+    Flag { name: "--config", value: "FILE", commands: "train serve worker central sweep info", default: "",
         toml: "", help: "load a TOML experiment file first; later flags override it" },
-    Flag { name: "--dataset", value: "KEY", commands: "train central sweep info", default: "quickstart",
+    Flag { name: "--dataset", value: "KEY", commands: "train serve worker central sweep info", default: "quickstart",
         toml: "experiment.dataset", help: "dataset registry key (see `dssfn datasets`)" },
-    Flag { name: "--seed", value: "S", commands: "train central sweep info", default: "0xD55F",
+    Flag { name: "--seed", value: "S", commands: "train serve worker central sweep info", default: "0xD55F",
         toml: "experiment.seed", help: "master seed: data, random matrices, comm schedules, stragglers" },
-    Flag { name: "--layers", value: "L", commands: "train central sweep info", default: "20 (5 for -small presets)",
+    Flag { name: "--layers", value: "L", commands: "train serve worker central sweep info", default: "20 (5 for -small presets)",
         toml: "model.layers", help: "SSFN depth L" },
-    Flag { name: "--admm-iters", value: "K", commands: "train central sweep info", default: "100 (50 for -small presets)",
+    Flag { name: "--admm-iters", value: "K", commands: "train serve worker central sweep info", default: "100 (50 for -small presets)",
         toml: "admm.iterations", help: "ADMM iterations per layer K" },
-    Flag { name: "--mu0", value: "F", commands: "train central sweep info", default: "0.01",
+    Flag { name: "--mu0", value: "F", commands: "train serve worker central sweep info", default: "0.01",
         toml: "admm.mu0", help: "Lagrangian mu for the input-layer solve" },
-    Flag { name: "--mul", value: "F", commands: "train central sweep info", default: "1.0",
+    Flag { name: "--mul", value: "F", commands: "train serve worker central sweep info", default: "1.0",
         toml: "admm.mul", help: "Lagrangian mu for the hidden-layer solves" },
-    Flag { name: "--nodes", value: "M", commands: "train sweep info", default: "20 (10 for -small presets)",
+    Flag { name: "--nodes", value: "M", commands: "train serve worker sweep info", default: "20 (10 for -small presets)",
         toml: "network.nodes", help: "worker count M" },
-    Flag { name: "--degree", value: "D", commands: "train sweep info", default: "4 (2 for -small presets)",
+    Flag { name: "--degree", value: "D", commands: "train serve worker sweep info", default: "4 (2 for -small presets)",
         toml: "network.degree", help: "circular-topology degree d" },
     Flag { name: "--degrees", value: "1,2,...", commands: "sweep", default: "1..=M/2",
         toml: "", help: "explicit degree list for the sweep" },
@@ -100,12 +102,12 @@ pub const FLAGS: &[Flag] = &[
         toml: "runtime.artifacts", help: "HLO artifact directory for the PJRT backend" },
     Flag { name: "--threads", value: "N", commands: "train sweep", default: "0 (auto)",
         toml: "runtime.threads", help: "worker threads (node fan-out first, leftovers to intra-node kernels)" },
-    Flag { name: "--no-curve", value: "", commands: "train sweep", default: "",
+    Flag { name: "--no-curve", value: "", commands: "train serve worker sweep", default: "",
         toml: "runtime.record_cost_curve", help: "skip per-iteration cost recording (throughput runs)" },
-    Flag { name: "--verbose", value: "", commands: "train", default: "",
+    Flag { name: "--verbose", value: "", commands: "train serve", default: "",
         toml: "", help: "stream every typed StepEvent to stderr" },
-    Flag { name: "--csv", value: "PATH", commands: "train sweep", default: "",
-        toml: "", help: "write the cost curve (train) or sweep rows (sweep) as CSV" },
+    Flag { name: "--csv", value: "PATH", commands: "train serve sweep", default: "",
+        toml: "", help: "write the cost curve (train, serve) or sweep rows (sweep) as CSV" },
     Flag { name: "--checkpoint", value: "PATH", commands: "train", default: "",
         toml: "", help: "snapshot the full session state at every layer boundary" },
     Flag { name: "--checkpoint-every", value: "K", commands: "train", default: "",
@@ -118,6 +120,20 @@ pub const FLAGS: &[Flag] = &[
         toml: "", help: "stop after S simulated seconds (compute + alpha-beta comm)" },
     Flag { name: "--cost-plateau", value: "F", commands: "train", default: "",
         toml: "", help: "stop growing layers once the relative cost improvement falls below F" },
+    Flag { name: "--bind", value: "ADDR", commands: "serve", default: "",
+        toml: "", help: "TCP address to listen on for workers (port 0 picks a free port)" },
+    Flag { name: "--min-clients", value: "K", commands: "serve", default: "0 (= all M)",
+        toml: "", help: "start once K distinct shards have joined; absent shards count as crashed and may rejoin later" },
+    Flag { name: "--connect", value: "ADDR", commands: "worker", default: "",
+        toml: "", help: "the `serve` coordinator's address" },
+    Flag { name: "--shard", value: "I", commands: "worker", default: "",
+        toml: "", help: "this worker's shard index in 0..M (each index joins exactly once)" },
+    Flag { name: "--io-timeout", value: "SECS", commands: "serve worker", default: "none (30s handshakes)",
+        toml: "", help: "read/write timeout on wire connections; 0 = block forever" },
+    Flag { name: "--reconnect-max", value: "N", commands: "worker", default: "5",
+        toml: "", help: "reconnect attempts after a lost connection (exponential backoff, then server catch-up)" },
+    Flag { name: "--weights-out", value: "PATH", commands: "train serve", default: "",
+        toml: "", help: "write the trained weight stack + output matrix (byte-diffable across transports)" },
 ];
 
 /// `--config` file keys with no flag equivalent — the rest of the
@@ -194,6 +210,14 @@ pub const CONFLICTS: &[Conflict] = &[
         names: "cannot be combined" },
     Conflict { knob: "`--backend pjrt`", rejected_when: "`--resume` is set (checkpoints do not record a backend)",
         names: "native" },
+    Conflict { knob: "transport flags (`--bind`, `--connect`, `--shard`, `--min-clients`, `--io-timeout`, `--reconnect-max`)", rejected_when: "`--resume` is set (a wire run cannot resume a checkpoint)",
+        names: "cannot be combined" },
+    Conflict { knob: "`--exact-consensus`", rejected_when: "under `serve`/`worker` (the wire run is real gossip)",
+        names: "gossip consensus" },
+    Conflict { knob: "`--backend pjrt`", rejected_when: "under `serve`/`worker` (bit-identical f64s need one backend everywhere)",
+        names: "native" },
+    Conflict { knob: "`--schedule semisync|lossy`, `--adaptive-delta`, `--iter-staleness`, `--straggler-sigma`, `--chaos-crash-p`", rejected_when: "under `serve`/`worker` (relaxations are simulated; wire faults come from real processes)",
+        names: "simulation-only" },
 ];
 
 /// Whether `key` (without the leading `--`) is a bare switch, derived

@@ -654,29 +654,34 @@ impl Checkpoint {
 }
 
 // ---------------------------------------------------------------------
-// Minimal little-endian codec over std::io.
+// Minimal little-endian codec over std::io. Shared with the wire
+// transport (`transport::wire` re-encodes the same primitives inside
+// length-prefixed frames), so the two formats cannot drift.
 
-struct Encoder<W: io::Write> {
+pub(crate) struct Encoder<W: io::Write> {
     w: W,
 }
 
 impl<W: io::Write> Encoder<W> {
-    fn bytes(&mut self, b: &[u8]) -> Result<()> {
+    pub(crate) fn new(w: W) -> Self {
+        Self { w }
+    }
+    pub(crate) fn bytes(&mut self, b: &[u8]) -> Result<()> {
         self.w.write_all(b).map_err(Error::Io)
     }
-    fn u8(&mut self, v: u8) -> Result<()> {
+    pub(crate) fn u8(&mut self, v: u8) -> Result<()> {
         self.bytes(&[v])
     }
-    fn u32(&mut self, v: u32) -> Result<()> {
+    pub(crate) fn u32(&mut self, v: u32) -> Result<()> {
         self.bytes(&v.to_le_bytes())
     }
-    fn u64(&mut self, v: u64) -> Result<()> {
+    pub(crate) fn u64(&mut self, v: u64) -> Result<()> {
         self.bytes(&v.to_le_bytes())
     }
-    fn f64(&mut self, v: f64) -> Result<()> {
+    pub(crate) fn f64(&mut self, v: f64) -> Result<()> {
         self.bytes(&v.to_le_bytes())
     }
-    fn opt_f64(&mut self, v: Option<f64>) -> Result<()> {
+    pub(crate) fn opt_f64(&mut self, v: Option<f64>) -> Result<()> {
         match v {
             Some(x) => {
                 self.u8(1)?;
@@ -685,18 +690,18 @@ impl<W: io::Write> Encoder<W> {
             None => self.u8(0),
         }
     }
-    fn string(&mut self, s: &str) -> Result<()> {
+    pub(crate) fn string(&mut self, s: &str) -> Result<()> {
         self.u64(s.len() as u64)?;
         self.bytes(s.as_bytes())
     }
-    fn f64s(&mut self, xs: &[f64]) -> Result<()> {
+    pub(crate) fn f64s(&mut self, xs: &[f64]) -> Result<()> {
         self.u64(xs.len() as u64)?;
         for &x in xs {
             self.f64(x)?;
         }
         Ok(())
     }
-    fn matrix(&mut self, m: &Matrix) -> Result<()> {
+    pub(crate) fn matrix(&mut self, m: &Matrix) -> Result<()> {
         self.u64(m.rows() as u64)?;
         self.u64(m.cols() as u64)?;
         for &x in m.as_slice() {
@@ -704,27 +709,27 @@ impl<W: io::Write> Encoder<W> {
         }
         Ok(())
     }
-    fn matrices(&mut self, ms: &[Matrix]) -> Result<()> {
+    pub(crate) fn matrices(&mut self, ms: &[Matrix]) -> Result<()> {
         self.u64(ms.len() as u64)?;
         for m in ms {
             self.matrix(m)?;
         }
         Ok(())
     }
-    fn snapshot(&mut self, s: &CommSnapshot) -> Result<()> {
+    pub(crate) fn snapshot(&mut self, s: &CommSnapshot) -> Result<()> {
         self.u64(s.messages)?;
         self.u64(s.bytes)?;
         self.u64(s.rounds)?;
         self.u64(s.scalars)
     }
-    fn flush(&mut self) -> Result<()> {
+    pub(crate) fn flush(&mut self) -> Result<()> {
         self.w.flush().map_err(Error::Io)
     }
 }
 
 /// Map an unexpected-EOF to the codec's own truncation error; pass
 /// genuine I/O failures through.
-fn read_err(e: io::Error) -> Error {
+pub(crate) fn read_err(e: io::Error) -> Error {
     if e.kind() == io::ErrorKind::UnexpectedEof {
         Error::Checkpoint("truncated checkpoint".into())
     } else {
@@ -732,12 +737,15 @@ fn read_err(e: io::Error) -> Error {
     }
 }
 
-struct Decoder<R: io::Read> {
+pub(crate) struct Decoder<R: io::Read> {
     r: R,
 }
 
 impl<R: io::Read> Decoder<R> {
-    fn take(&mut self, n: usize) -> Result<Vec<u8>> {
+    pub(crate) fn new(r: R) -> Self {
+        Self { r }
+    }
+    pub(crate) fn take(&mut self, n: usize) -> Result<Vec<u8>> {
         // Grow as bytes actually arrive so a bogus length prefix cannot
         // force a huge up-front allocation.
         let mut out = Vec::with_capacity(n.min(1 << 20));
@@ -751,44 +759,44 @@ impl<R: io::Read> Decoder<R> {
         }
         Ok(out)
     }
-    fn u8(&mut self) -> Result<u8> {
+    pub(crate) fn u8(&mut self) -> Result<u8> {
         let mut b = [0u8; 1];
         self.r.read_exact(&mut b).map_err(read_err)?;
         Ok(b[0])
     }
-    fn u32(&mut self) -> Result<u32> {
+    pub(crate) fn u32(&mut self) -> Result<u32> {
         let mut b = [0u8; 4];
         self.r.read_exact(&mut b).map_err(read_err)?;
         Ok(u32::from_le_bytes(b))
     }
-    fn u64(&mut self) -> Result<u64> {
+    pub(crate) fn u64(&mut self) -> Result<u64> {
         let mut b = [0u8; 8];
         self.r.read_exact(&mut b).map_err(read_err)?;
         Ok(u64::from_le_bytes(b))
     }
-    fn usize_(&mut self) -> Result<usize> {
+    pub(crate) fn usize_(&mut self) -> Result<usize> {
         let v = self.u64()?;
         usize::try_from(v).map_err(|_| Error::Checkpoint(format!("count {v} overflows usize")))
     }
-    fn f64(&mut self) -> Result<f64> {
+    pub(crate) fn f64(&mut self) -> Result<f64> {
         let mut b = [0u8; 8];
         self.r.read_exact(&mut b).map_err(read_err)?;
         Ok(f64::from_le_bytes(b))
     }
-    fn opt_f64(&mut self) -> Result<Option<f64>> {
+    pub(crate) fn opt_f64(&mut self) -> Result<Option<f64>> {
         match self.u8()? {
             0 => Ok(None),
             1 => Ok(Some(self.f64()?)),
             t => Err(Error::Checkpoint(format!("bad option tag {t}"))),
         }
     }
-    fn string(&mut self) -> Result<String> {
+    pub(crate) fn string(&mut self) -> Result<String> {
         let n = self.usize_()?;
         let b = self.take(n)?;
         String::from_utf8(b)
             .map_err(|_| Error::Checkpoint("non-utf8 string in checkpoint".into()))
     }
-    fn f64s(&mut self) -> Result<Vec<f64>> {
+    pub(crate) fn f64s(&mut self) -> Result<Vec<f64>> {
         let n = self.usize_()?;
         let mut out = Vec::with_capacity(n.min(1 << 20));
         for _ in 0..n {
@@ -796,7 +804,7 @@ impl<R: io::Read> Decoder<R> {
         }
         Ok(out)
     }
-    fn matrix(&mut self) -> Result<Matrix> {
+    pub(crate) fn matrix(&mut self) -> Result<Matrix> {
         let rows = self.usize_()?;
         let cols = self.usize_()?;
         let len = rows.saturating_mul(cols);
@@ -807,7 +815,7 @@ impl<R: io::Read> Decoder<R> {
         Matrix::from_vec(rows, cols, data)
             .map_err(|e| Error::Checkpoint(format!("bad matrix in checkpoint: {e}")))
     }
-    fn matrices(&mut self) -> Result<Vec<Matrix>> {
+    pub(crate) fn matrices(&mut self) -> Result<Vec<Matrix>> {
         let n = self.usize_()?;
         let mut out = Vec::with_capacity(n.min(1 << 20));
         for _ in 0..n {
@@ -815,7 +823,7 @@ impl<R: io::Read> Decoder<R> {
         }
         Ok(out)
     }
-    fn snapshot(&mut self) -> Result<CommSnapshot> {
+    pub(crate) fn snapshot(&mut self) -> Result<CommSnapshot> {
         Ok(CommSnapshot {
             messages: self.u64()?,
             bytes: self.u64()?,
@@ -824,7 +832,7 @@ impl<R: io::Read> Decoder<R> {
         })
     }
     /// Assert end-of-stream.
-    fn finish(mut self) -> Result<()> {
+    pub(crate) fn finish(mut self) -> Result<()> {
         let mut b = [0u8; 1];
         loop {
             match self.r.read(&mut b) {

@@ -29,14 +29,14 @@ use super::{
     default_threads, for_each_node, for_each_node_mut, ConsensusMode, ParallelismBudget,
     TrainOptions,
 };
-use crate::admm::{LocalSolve, NodeState};
-use crate::data::{shard_uniform, ClassificationTask, Dataset};
+use crate::data::{shard_uniform, ClassificationTask};
 use crate::linalg::Matrix;
 use crate::metrics::{error_db, LayerRecord, TrainReport};
 use crate::network::{
     ChaosFabric, ChaosSnapshot, CommConfig, CommFabric, CommLedger, CommSchedule, CommSnapshot,
     GossipEngine, MixingMatrix, StalenessSchedule,
 };
+use crate::node::NodeActor;
 use crate::runtime::ComputeBackend;
 use crate::session::{
     Algorithm, AlgorithmOutput, SessionProgress, StepEvent, StopReason, TrainedModel,
@@ -70,7 +70,7 @@ impl TaskRef<'_> {
 /// cannot distinguish the same dataset generated from a different seed;
 /// this catches that on restore instead of silently training on wrong
 /// data.
-fn task_checksum(task: &ClassificationTask) -> u64 {
+pub(crate) fn task_checksum(task: &ClassificationTask) -> u64 {
     // Both splits: the test set feeds the final report's accuracies, so
     // a restored run must see the same test data too.
     task.train.x.frobenius_norm_sq().to_bits()
@@ -102,7 +102,11 @@ pub struct DssfnAlgorithm<'t> {
     growth: Option<GrowthPolicy>,
 
     threads: usize,
-    shards: Vec<Dataset>,
+    /// The protocol participants: each actor owns its shard, features
+    /// and ADMM state ([`NodeActor`]); the coordinator only moves `Q×n`
+    /// shares between them and the fabric — the same boundary the wire
+    /// transport puts a TCP connection on.
+    nodes: Vec<NodeActor>,
     random: RandomMatrices,
     ledger: Arc<CommLedger>,
     fabric: Option<Box<dyn CommFabric>>,
@@ -110,15 +114,12 @@ pub struct DssfnAlgorithm<'t> {
     report: TrainReport,
     sw: Stopwatch,
     wall_base: f64,
-    ys: Vec<Matrix>,
     weights: Vec<Matrix>,
     final_o: Option<Matrix>,
     prev_layer_cost: Option<f64>,
 
     layer: usize,
     phase: Phase,
-    solvers: Vec<Box<dyn LocalSolve>>,
-    states: Vec<NodeState>,
     s_vals: Vec<Matrix>,
     avg: Matrix,
     cost_curve: Vec<f64>,
@@ -199,7 +200,7 @@ impl<'t> DssfnAlgorithm<'t> {
         backend.set_intra_threads(budget.intra_threads);
         let threads = budget.node_threads;
 
-        let shards: Vec<Dataset> = shard_uniform(&task.get().train, m)?;
+        let shards = shard_uniform(&task.get().train, m)?;
         let random = RandomMatrices::generate(&arch, seed)?;
 
         // Network plumbing (only in gossip mode). The schedule seed is
@@ -300,8 +301,13 @@ impl<'t> DssfnAlgorithm<'t> {
             ..Default::default()
         };
 
-        // Per-node features, starting at the raw shard inputs.
-        let ys: Vec<Matrix> = shards.iter().map(|s| s.x.clone()).collect();
+        // The participants: one actor per shard, features starting at
+        // the raw shard inputs.
+        let nodes: Vec<NodeActor> = shards
+            .into_iter()
+            .enumerate()
+            .map(|(i, shard)| NodeActor::new(i, shard))
+            .collect();
 
         Ok(Self {
             arch,
@@ -313,21 +319,18 @@ impl<'t> DssfnAlgorithm<'t> {
             task,
             growth,
             threads,
-            shards,
+            nodes,
             random,
             ledger,
             fabric,
             report,
             sw: Stopwatch::new(),
             wall_base: 0.0,
-            ys,
             weights: Vec::with_capacity(arch.layers),
             final_o: None,
             prev_layer_cost: None,
             layer: 0,
             phase: Phase::Prepare,
-            solvers: Vec::new(),
-            states: Vec::new(),
             s_vals: Vec::new(),
             avg: Matrix::zeros(0, 0),
             cost_curve: Vec::new(),
@@ -455,7 +458,9 @@ impl<'t> DssfnAlgorithm<'t> {
         alg.iters_since_comm = ck.iters_since_comm as usize;
         alg.iter_stale_cursor = ck.iter_stale_cursor;
         alg.report.layers = ck.report_layers.clone();
-        alg.ys = ck.ys.clone();
+        for (actor, y) in alg.nodes.iter_mut().zip(&ck.ys) {
+            actor.set_features(y.clone());
+        }
         alg.weights = ck.weights.clone();
         alg.prev_layer_cost = ck.prev_layer_cost;
         alg.wall_base = ck.wall_base;
@@ -498,7 +503,7 @@ impl<'t> DssfnAlgorithm<'t> {
             )));
         }
         let q = self.arch.num_classes;
-        let feat_dim = self.ys[0].rows();
+        let feat_dim = self.nodes[0].features().rows();
         for st in &ck.states {
             if st.z.shape() != (q, feat_dim) {
                 return Err(Error::Checkpoint(format!(
@@ -509,16 +514,15 @@ impl<'t> DssfnAlgorithm<'t> {
         }
         let params = self.hyper.admm_params(self.layer, q);
         params.validate()?;
-        let solvers = {
+        {
             let backend = &self.backend;
-            let ys = &self.ys;
-            let shards = &self.shards;
-            for_each_node(m, self.threads, |i| {
-                backend.prepare_layer(&ys[i], &shards[i].t, params.mu)
-            })?
-        };
-        self.solvers = solvers;
-        self.states = ck.states.clone();
+            for_each_node_mut(&mut self.nodes, self.threads, |_, actor| {
+                actor.prepare_solver(backend.as_ref(), params.mu)
+            })?;
+        }
+        for (actor, st) in self.nodes.iter_mut().zip(&ck.states) {
+            actor.set_state(st.clone());
+        }
         self.s_vals = (0..m).map(|_| Matrix::zeros(q, feat_dim)).collect();
         self.avg = Matrix::zeros(q, feat_dim);
         // The staleness history ring cannot be rebuilt (it holds past
@@ -556,20 +560,16 @@ impl<'t> DssfnAlgorithm<'t> {
         self.comm_before = self.ledger.snapshot();
         let params = self.hyper.admm_params(self.layer, q);
         params.validate()?;
-        let feat_dim = self.ys[0].rows();
-        let solvers = {
-            let backend = &self.backend;
-            let ys = &self.ys;
-            let shards = &self.shards;
-            for_each_node(m, self.threads, |i| {
-                backend.prepare_layer(&ys[i], &shards[i].t, params.mu)
-            })?
-        };
-        self.solvers = solvers;
+        let feat_dim = self.nodes[0].features().rows();
         // All iteration buffers are preallocated here; the iterate phase
-        // writes into them in place (per-node workspaces live inside the
-        // solvers, built during prepare).
-        self.states = (0..m).map(|_| NodeState::zeros(q, feat_dim)).collect();
+        // writes into them in place (per-node workspaces live inside
+        // each actor's solver, built during prepare).
+        {
+            let backend = &self.backend;
+            for_each_node_mut(&mut self.nodes, self.threads, |_, actor| {
+                actor.prepare(backend.as_ref(), params.mu, q)
+            })?;
+        }
         self.s_vals = (0..m).map(|_| Matrix::zeros(q, feat_dim)).collect();
         self.avg = Matrix::zeros(q, feat_dim);
         self.cost_curve = Vec::new();
@@ -601,20 +601,18 @@ impl<'t> DssfnAlgorithm<'t> {
         let q = self.arch.num_classes;
         let params = self.hyper.admm_params(self.layer, q);
 
-        // (1) O-update, fanned out, written into each node's state.
+        // (1) O-update, fanned out, written into each actor's state.
         // Crashed nodes (fault injection) are skipped: their O/Λ/Z stay
         // frozen at the pre-crash values until they rejoin. The mask is
         // the one left by the *previous* averaging — this iteration's
         // membership step happens inside the fabric call below.
         {
-            let solvers = &self.solvers;
             let live = &self.live;
-            for_each_node_mut(&mut self.states, self.threads, |i, st| {
+            for_each_node_mut(&mut self.nodes, self.threads, |i, actor| {
                 if !live[i] {
                     return Ok(());
                 }
-                let NodeState { o, lambda, z } = st;
-                solvers[i].o_update_into(z, lambda, o)
+                actor.o_update()
             })?;
         }
         // Which relaxations apply to this iteration. The layer's final
@@ -641,10 +639,10 @@ impl<'t> DssfnAlgorithm<'t> {
 
         let mut gossip_event: Option<(usize, u64)> = None;
         if comm_this_iter {
-            // (2) Averaging of O + Λ.
-            for (sv, st) in self.s_vals.iter_mut().zip(&self.states) {
-                sv.copy_from(&st.o)?;
-                sv.axpy(1.0, &st.lambda)?;
+            // (2) Averaging of O + Λ: every actor stages its share into
+            // the contiguous exchange bank the fabric averages in place.
+            for (sv, actor) in self.s_vals.iter_mut().zip(&self.nodes) {
+                actor.stage_share(sv)?;
             }
             match (&self.opts.consensus, &self.fabric) {
                 (ConsensusMode::Exact, _) => {
@@ -721,12 +719,12 @@ impl<'t> DssfnAlgorithm<'t> {
             // held fixed — still identical on every node — and the dual
             // ascent keeps charging the constraint violation against it.
             // Crashed nodes stay frozen.
-            for (i, st) in self.states.iter_mut().enumerate() {
-                if !self.live[i] {
+            let live = &self.live;
+            for (i, actor) in self.nodes.iter_mut().enumerate() {
+                if !live[i] {
                     continue;
                 }
-                st.lambda.axpy(1.0, &st.o)?;
-                st.lambda.axpy(-1.0, &st.z)?;
+                actor.hold_dual()?;
             }
         } else if s > 0 {
             // Iteration-level bounded staleness (Liang et al. 2020):
@@ -739,7 +737,9 @@ impl<'t> DssfnAlgorithm<'t> {
             // Reads never reach before the layer's first averaging.
             let mut rng =
                 Xoshiro256StarStar::seed_from_u64(self.iter_seed).derive(self.iter_stale_cursor);
-            for (i, st) in self.states.iter_mut().enumerate() {
+            let s_vals = &self.s_vals;
+            let stale_hist = &self.stale_hist;
+            for (i, actor) in self.nodes.iter_mut().enumerate() {
                 let a = if relaxed_iter {
                     match self.comm.iter_schedule {
                         StalenessSchedule::Iid => rng.next_below(s + 1).min(k),
@@ -756,14 +756,11 @@ impl<'t> DssfnAlgorithm<'t> {
                     0
                 };
                 let src = if a == 0 {
-                    &self.s_vals[i]
+                    &s_vals[i]
                 } else {
-                    &self.stale_hist[((k - a) % s) * m + i]
+                    &stale_hist[((k - a) % s) * m + i]
                 };
-                st.z.copy_from(src)?;
-                st.z.project_frobenius(params.eps);
-                st.lambda.axpy(1.0, &st.o)?;
-                st.lambda.axpy(-1.0, &st.z)?;
+                actor.absorb(src, params.eps)?;
             }
             // Archive this iteration's fresh averages for future stale
             // reads (after every node has read — slot k % s still holds
@@ -778,14 +775,11 @@ impl<'t> DssfnAlgorithm<'t> {
             // must not project the live set's consensus; one that just
             // rejoined reads the catch-up average the fabric installed.
             let live = &self.live;
-            for (i, (st, sv)) in self.states.iter_mut().zip(&self.s_vals).enumerate() {
+            for (i, (actor, sv)) in self.nodes.iter_mut().zip(&self.s_vals).enumerate() {
                 if !live[i] {
                     continue;
                 }
-                st.z.copy_from(sv)?;
-                st.z.project_frobenius(params.eps);
-                st.lambda.axpy(1.0, &st.o)?;
-                st.lambda.axpy(-1.0, &st.z)?;
+                actor.absorb(sv, params.eps)?;
             }
         }
         // Cost recording (same condition and order as the legacy loop).
@@ -793,9 +787,8 @@ impl<'t> DssfnAlgorithm<'t> {
         let mut delta_event: Option<f64> = None;
         if self.opts.record_cost_curve {
             let costs: Vec<f64> = {
-                let solvers = &self.solvers;
-                let states = &self.states;
-                for_each_node(m, self.threads, |i| solvers[i].cost(&states[i].z))?
+                let nodes = &self.nodes;
+                for_each_node(m, self.threads, |i| nodes[i].cost())?
             };
             let c: f64 = costs.iter().sum();
             // Adaptive-δ controller (L-FGADMM-style): a plateaued cost
@@ -832,12 +825,12 @@ impl<'t> DssfnAlgorithm<'t> {
             // pre-crash state and would report a spurious gap. Fault-free
             // runs have every node live, so the reference stays node 0.
             let rep = self.live.iter().position(|&l| l).unwrap_or(0);
-            let z0 = &self.states[rep].z;
-            self.states
+            let z0 = &self.nodes[rep].state().z;
+            self.nodes
                 .iter()
                 .enumerate()
                 .filter(|&(i, _)| self.live[i])
-                .map(|(_, s)| s.z.max_abs_diff(z0))
+                .map(|(_, n)| n.state().z.max_abs_diff(z0))
                 .fold(0.0, f64::max)
         } else {
             0.0
@@ -886,13 +879,13 @@ impl<'t> DssfnAlgorithm<'t> {
         // fault-free path, so `rep` is node 0 there and the numbers are
         // exactly the historical ones.
         let rep = self.live.iter().position(|&l| l).unwrap_or(0);
-        let z0 = self.states[rep].z.clone();
+        let z0 = self.nodes[rep].state().z.clone();
         let disagreement = self
-            .states
+            .nodes
             .iter()
             .enumerate()
             .filter(|&(i, _)| self.live[i])
-            .map(|(_, s)| s.z.max_abs_diff(&z0))
+            .map(|(_, n)| n.state().z.max_abs_diff(&z0))
             .fold(0.0, f64::max);
 
         // Global layer cost (for the record, and for size estimation).
@@ -900,9 +893,8 @@ impl<'t> DssfnAlgorithm<'t> {
             Some(c) => c,
             None => {
                 let costs: Vec<f64> = {
-                    let solvers = &self.solvers;
-                    let states = &self.states;
-                    for_each_node(m, self.threads, |i| solvers[i].cost(&states[i].z))?
+                    let nodes = &self.nodes;
+                    for_each_node(m, self.threads, |i| nodes[i].cost())?
                 };
                 costs.iter().sum()
             }
@@ -921,8 +913,8 @@ impl<'t> DssfnAlgorithm<'t> {
         if !last_layer {
             let r_next = self.random.layer(self.layer + 1);
             let mut ws: Vec<Matrix> = {
-                let states = &self.states;
-                for_each_node(m, self.threads, |i| build_weight(&states[i].z, r_next))?
+                let nodes = &self.nodes;
+                for_each_node(m, self.threads, |i| build_weight(&nodes[i].state().z, r_next))?
             };
             // Crashed nodes would build a weight from stale Z; forward
             // them through the live representative's weight instead so
@@ -937,12 +929,13 @@ impl<'t> DssfnAlgorithm<'t> {
                     }
                 }
             }
-            let new_ys: Vec<Matrix> = {
+            {
                 let backend = &self.backend;
-                let ys = &self.ys;
-                for_each_node(m, self.threads, |i| backend.layer_forward(&ws[i], &ys[i]))?
-            };
-            self.ys = new_ys;
+                let ws = &ws;
+                for_each_node_mut(&mut self.nodes, self.threads, |i, actor| {
+                    actor.advance(backend.as_ref(), &ws[i])
+                })?;
+            }
             self.weights.push(ws.into_iter().next().expect("m >= 1"));
         } else {
             self.final_o = Some(z0);
@@ -960,8 +953,9 @@ impl<'t> DssfnAlgorithm<'t> {
         events.push(StepEvent::LayerAdvanced { layer, cost: layer_cost, last: last_layer });
 
         // Drop the per-layer transients eagerly.
-        self.solvers = Vec::new();
-        self.states = Vec::new();
+        for actor in &mut self.nodes {
+            actor.drop_layer();
+        }
         self.s_vals = Vec::new();
         self.avg = Matrix::zeros(0, 0);
         self.stale_hist = Vec::new();
@@ -1079,7 +1073,7 @@ impl Algorithm for DssfnAlgorithm<'_> {
         };
         let states = match self.phase {
             Phase::Prepare => Vec::new(),
-            _ => self.states.clone(),
+            _ => self.nodes.iter().map(|n| n.state().clone()).collect(),
         };
         let stale_hist = match self.phase {
             Phase::Prepare => Vec::new(),
@@ -1115,7 +1109,7 @@ impl Algorithm for DssfnAlgorithm<'_> {
             layer: self.layer as u64,
             phase,
             weights: self.weights.clone(),
-            ys: self.ys.clone(),
+            ys: self.nodes.iter().map(|n| n.features().clone()).collect(),
             states,
             cost_curve: self.cost_curve.clone(),
             gossip_rounds: self.gossip_rounds as u64,

@@ -74,7 +74,9 @@ mod dssfn;
 mod pool;
 
 pub use checkpoint::Checkpoint;
+pub(crate) use checkpoint::{read_err, Decoder, Encoder};
 pub use dssfn::{DssfnAlgorithm, TaskRef};
+pub(crate) use dssfn::task_checksum;
 pub use pool::{default_threads, for_each_node, for_each_node_mut, ParallelismBudget};
 
 use crate::config::ExperimentConfig;

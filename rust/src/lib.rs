@@ -92,10 +92,12 @@ pub mod data;
 pub mod linalg;
 pub mod metrics;
 pub mod network;
+pub mod node;
 pub mod runtime;
 pub mod session;
 pub mod ssfn;
 pub mod testing;
+pub mod transport;
 pub mod util;
 
 pub use config::ExperimentConfig;

@@ -35,8 +35,11 @@ use dssfn::config::{BackendKind, ExperimentConfig};
 use dssfn::coordinator::DecentralizedTrainer;
 use dssfn::data::{dataset_names, lookup, table1_rows, ClassificationTask};
 use dssfn::metrics::CsvWriter;
-use dssfn::session::{StepEvent, StopPolicy};
+use dssfn::session::{StepEvent, StopPolicy, TrainSession};
 use dssfn::ssfn::CentralizedTrainer;
+use dssfn::transport::{
+    run_worker, write_model_weights, ServeAlgorithm, ServeOptions, TcpAccept, WorkerOptions,
+};
 use dssfn::util::human_secs;
 use dssfn::Checkpoint;
 use std::collections::BTreeMap;
@@ -245,7 +248,8 @@ fn cmd_train(args: &Args) -> Result<(), String> {
                 "staleness", "loss-p", "adaptive-delta", "adaptive-period",
                 "iter-staleness", "iter-schedule", "straggler-sigma", "straggler-seed",
                 "straggler-corr", "chaos-crash-p", "chaos-rejoin-p", "chaos-seed",
-                "min-nodes",
+                "min-nodes", "bind", "connect", "shard", "min-clients", "io-timeout",
+                "reconnect-max",
             ] {
                 if args.has(flag) {
                     return Err(format!(
@@ -323,7 +327,17 @@ fn cmd_train(args: &Args) -> Result<(), String> {
             }
         }
     }
-    let (_model, report) = session.finish().map_err(|e| e.to_string())?;
+    let (model, report) = session.finish().map_err(|e| e.to_string())?;
+    report_session_outputs(args, model, &report)
+}
+
+/// The shared tail of `train` and `serve`: summary lines, `--csv` cost
+/// curve, `--weights-out` byte-diffable weight dump.
+fn report_session_outputs(
+    args: &Args,
+    model: dssfn::session::TrainedModel,
+    report: &dssfn::metrics::TrainReport,
+) -> Result<(), String> {
     println!("{}", report.summary());
     println!(
         "simulated total time (compute + α-β comm): {}",
@@ -338,6 +352,80 @@ fn cmd_train(args: &Args) -> Result<(), String> {
             .map_err(|e| e.to_string())?;
         eprintln!("wrote cost curve to {path}");
     }
+    if let Some(path) = args.get("weights-out") {
+        let ssfn = model.into_ssfn().map_err(|e| e.to_string())?;
+        write_model_weights(std::path::Path::new(path), &ssfn).map_err(|e| e.to_string())?;
+        eprintln!("wrote model weights to {path}");
+    }
+    Ok(())
+}
+
+/// Parse `--io-timeout SECS` (0 = block forever).
+fn io_timeout_flag(args: &Args) -> Result<Option<std::time::Duration>, String> {
+    match args.parsed::<f64>("io-timeout")? {
+        None => Ok(None),
+        Some(s) if s.is_finite() && s >= 0.0 => Ok(Some(std::time::Duration::from_secs_f64(s))),
+        Some(s) => Err(format!("bad value '{s}' for --io-timeout")),
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let cfg = build_config(args)?;
+    let bind = args
+        .get("bind")
+        .ok_or_else(|| "serve needs --bind ADDR".to_string())?;
+    let min_clients = args.parsed::<usize>("min-clients")?.unwrap_or(0);
+    let io_timeout = io_timeout_flag(args)?;
+    let listener = TcpAccept::bind(bind).map_err(|e| e.to_string())?;
+    eprintln!(
+        "serving dSSFN on '{}' at tcp://{} (M={}, d={}, L={}, K={}); waiting for {} worker(s)",
+        cfg.dataset,
+        listener.local_addr(),
+        cfg.nodes,
+        cfg.degree,
+        cfg.layers,
+        cfg.admm_iterations,
+        if min_clients == 0 {
+            cfg.nodes
+        } else {
+            min_clients
+        },
+    );
+    let opts = ServeOptions {
+        min_clients,
+        io_timeout,
+    };
+    let algo = ServeAlgorithm::new(&cfg, Box::new(listener), opts).map_err(|e| e.to_string())?;
+    let mut session = TrainSession::from_algorithm(Box::new(algo));
+    if args.has("verbose") {
+        session.observe_fn(|ev| eprintln!("event: {ev:?}"));
+    }
+    let (model, report) = session.finish().map_err(|e| e.to_string())?;
+    report_session_outputs(args, model, &report)
+}
+
+fn cmd_worker(args: &Args) -> Result<(), String> {
+    let cfg = build_config(args)?;
+    let connect = args
+        .get("connect")
+        .ok_or_else(|| "worker needs --connect ADDR".to_string())?;
+    let shard = args
+        .parsed::<usize>("shard")?
+        .ok_or_else(|| "worker needs --shard INDEX".to_string())?;
+    let opts = WorkerOptions {
+        shard,
+        io_timeout: io_timeout_flag(args)?,
+        reconnect_max: args.parsed::<u32>("reconnect-max")?.unwrap_or(5),
+    };
+    eprintln!(
+        "worker shard {shard}/{} on '{}' connecting to {connect}",
+        cfg.nodes, cfg.dataset
+    );
+    let summary = run_worker(&cfg, connect, opts).map_err(|e| e.to_string())?;
+    println!(
+        "worker shard {} finished after {} layer(s)",
+        summary.shard, summary.layers
+    );
     Ok(())
 }
 
@@ -486,6 +574,8 @@ fn main() -> ExitCode {
     };
     let result = match cmd.as_str() {
         "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
+        "worker" => cmd_worker(&args),
         "central" => cmd_central(&args),
         "sweep" => cmd_sweep(&args),
         "datasets" => {

@@ -1,0 +1,329 @@
+//! The `dssfn worker` side: one [`NodeActor`] driven as a pure reactor.
+//!
+//! A worker owns exactly what a node owns in the paper: its data shard
+//! (generated locally from the shared seed — data never travels), the
+//! layer features, and the ADMM variables. All control flows from the
+//! server: the worker answers [`Message::Step`] with its staged share,
+//! absorbs [`Message::Mixed`], reports costs when asked, builds its own
+//! weight on [`Message::Advance`] and rebuilds everything from a
+//! [`Message::CatchUp`] replay after a reconnect. Because the actor
+//! methods are the exact per-node operations the in-process coordinator
+//! calls, a fault-free wire run is bit-identical to `dssfn train`.
+//!
+//! Connection loss triggers seeded-exponential-backoff reconnects (up
+//! to `--reconnect-max`); a `Reject` naming "already connected" is
+//! retried too, because the server may simply not have timed out the
+//! worker's previous corpse yet. Any other rejection is fatal and
+//! carries the server's reason verbatim.
+
+use crate::admm::NodeState;
+use crate::config::ExperimentConfig;
+use crate::coordinator::task_checksum;
+use crate::data::shard_uniform;
+use crate::linalg::Matrix;
+use crate::node::NodeActor;
+use crate::runtime::NativeBackend;
+use crate::ssfn::{build_weight, RandomMatrices};
+use crate::transport::server::validate_transport_config;
+use crate::transport::wire::{self, config_fingerprint, Message, PROTOCOL_VERSION};
+use crate::transport::Conn;
+use crate::{Error, Result};
+use std::net::TcpStream;
+use std::thread;
+use std::time::Duration;
+
+/// Knobs of a worker run beyond the experiment config.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerOptions {
+    /// This worker's shard index in `0..M`.
+    pub shard: usize,
+    /// Read/write timeout on the server connection.
+    pub io_timeout: Option<Duration>,
+    /// Reconnect attempts after a mid-run connection loss (0: give up
+    /// immediately). The initial connect always gets at least 8 tries so
+    /// workers can race the server's start-up.
+    pub reconnect_max: u32,
+}
+
+impl Default for WorkerOptions {
+    fn default() -> Self {
+        Self {
+            shard: 0,
+            io_timeout: None,
+            reconnect_max: 5,
+        }
+    }
+}
+
+/// What a finished worker reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkerSummary {
+    /// The shard this worker trained.
+    pub shard: usize,
+    /// Layers trained when the server sent the final advance.
+    pub layers: usize,
+}
+
+/// Run a worker against a TCP server at `connect_addr`.
+pub fn run_worker(
+    cfg: &ExperimentConfig,
+    connect_addr: &str,
+    opts: WorkerOptions,
+) -> Result<WorkerSummary> {
+    let addr = connect_addr.to_string();
+    run_worker_with(cfg, opts, move || {
+        let stream = TcpStream::connect(&addr)
+            .map_err(|e| Error::Network(format!("cannot connect to {addr}: {e}")))?;
+        stream.set_nodelay(true)?;
+        Ok(Box::new(stream) as Box<dyn Conn>)
+    })
+}
+
+/// One handshake attempt's outcome.
+enum Attempt {
+    Admitted(Box<dyn Conn>),
+    Retry(Error),
+    Fatal(Error),
+}
+
+fn attempt_handshake<F>(
+    connect: &mut F,
+    hello: &Message,
+    io_timeout: Option<Duration>,
+    scratch: &mut Vec<u8>,
+) -> Attempt
+where
+    F: FnMut() -> Result<Box<dyn Conn>>,
+{
+    let mut conn = match connect() {
+        Ok(c) => c,
+        Err(e) => return Attempt::Retry(e),
+    };
+    if let Err(e) = conn.set_io_timeout(io_timeout) {
+        return Attempt::Retry(e);
+    }
+    if let Err(e) = wire::send(conn.as_mut(), scratch, hello) {
+        return Attempt::Retry(e);
+    }
+    match wire::recv(conn.as_mut(), scratch) {
+        Ok(Message::Welcome { .. }) => Attempt::Admitted(conn),
+        Ok(Message::Reject { reason }) => {
+            let err = Error::Network(format!("server rejected worker: {reason}"));
+            // The server may not have reaped this worker's previous
+            // connection yet; that resolves itself, so keep trying.
+            if reason.contains("already connected") {
+                Attempt::Retry(err)
+            } else {
+                Attempt::Fatal(err)
+            }
+        }
+        Ok(other) => Attempt::Fatal(Error::Network(format!(
+            "protocol violation: expected Welcome or Reject, got {}",
+            other.name()
+        ))),
+        Err(e) => Attempt::Retry(e),
+    }
+}
+
+/// Connect + handshake with exponential backoff: attempt `a` sleeps
+/// `50ms · 2^a` (capped) first. Mismatch rejections are fatal right
+/// away; connect failures and "already connected" are retried.
+fn establish<F>(
+    connect: &mut F,
+    hello: &Message,
+    io_timeout: Option<Duration>,
+    attempts: u32,
+    scratch: &mut Vec<u8>,
+) -> Result<Box<dyn Conn>>
+where
+    F: FnMut() -> Result<Box<dyn Conn>>,
+{
+    let mut last: Option<Error> = None;
+    for a in 0..=attempts {
+        if a > 0 {
+            thread::sleep(Duration::from_millis(50u64 << a.min(6)));
+        }
+        match attempt_handshake(connect, hello, io_timeout, scratch) {
+            Attempt::Admitted(conn) => return Ok(conn),
+            Attempt::Retry(e) => last = Some(e),
+            Attempt::Fatal(e) => return Err(e),
+        }
+    }
+    Err(last.unwrap_or_else(|| Error::Network("could not reach the server".into())))
+}
+
+/// Run a worker over an arbitrary connection factory — the loopback
+/// tests drive the entire protocol through this with in-process pipes.
+pub fn run_worker_with<F>(
+    cfg: &ExperimentConfig,
+    opts: WorkerOptions,
+    mut connect: F,
+) -> Result<WorkerSummary>
+where
+    F: FnMut() -> Result<Box<dyn Conn>>,
+{
+    validate_transport_config(cfg)?;
+    let arch = cfg.architecture()?;
+    let hyper = cfg.hyper();
+    let m = cfg.nodes;
+    if opts.shard >= m {
+        return Err(Error::Config(format!(
+            "--shard {} is out of range for --nodes {m}",
+            opts.shard
+        )));
+    }
+    let q = arch.num_classes;
+    // Everything below is generated locally from the shared (seed,
+    // config): the same task, the same uniform sharding, the same
+    // random-matrix stream the server and every sibling worker derive.
+    let task = cfg.generate_task()?;
+    let checksum = task_checksum(&task);
+    let shard = shard_uniform(&task.train, m)?
+        .into_iter()
+        .nth(opts.shard)
+        .expect("shard index validated above");
+    let mut actor = NodeActor::new(opts.shard, shard);
+    let backend = NativeBackend::new();
+    let random = RandomMatrices::generate(&arch, cfg.seed)?;
+    let hello = Message::Hello {
+        protocol: PROTOCOL_VERSION,
+        shard: opts.shard as u64,
+        nodes: m as u64,
+        config_fp: config_fingerprint(cfg),
+        task_checksum: checksum,
+    };
+
+    let mut scratch: Vec<u8> = Vec::new();
+    let mut share = Matrix::zeros(0, 0);
+    let mut prepared: Option<usize> = None;
+    let mut first = true;
+    'session: loop {
+        if !first && opts.reconnect_max == 0 {
+            return Err(Error::Network(
+                "connection to the server lost (reconnects disabled)".into(),
+            ));
+        }
+        let attempts = if first {
+            opts.reconnect_max.max(8)
+        } else {
+            opts.reconnect_max
+        };
+        let mut conn = establish(&mut connect, &hello, opts.io_timeout, attempts, &mut scratch)?;
+        first = false;
+        // Local layer state is stale after any reconnect; the server's
+        // CatchUp rebuilds it.
+        prepared = None;
+        loop {
+            let msg = match wire::recv(conn.as_mut(), &mut scratch) {
+                Ok(m) => m,
+                Err(_) => continue 'session,
+            };
+            match msg {
+                Message::Step { layer, iteration } => {
+                    let layer = layer as usize;
+                    let params = hyper.admm_params(layer, q);
+                    if prepared != Some(layer) {
+                        actor.prepare(&backend, params.mu, q)?;
+                        prepared = Some(layer);
+                        share = Matrix::zeros(q, actor.features().rows());
+                    }
+                    actor.o_update()?;
+                    actor.stage_share(&mut share)?;
+                    let reply = Message::Share {
+                        layer: layer as u64,
+                        iteration,
+                        s: share,
+                    };
+                    let sent = wire::send(conn.as_mut(), &mut scratch, &reply);
+                    share = match reply {
+                        Message::Share { s, .. } => s,
+                        _ => unreachable!(),
+                    };
+                    if sent.is_err() {
+                        continue 'session;
+                    }
+                }
+                Message::Mixed {
+                    layer,
+                    iteration,
+                    last_iter: _,
+                    s,
+                } => {
+                    let params = hyper.admm_params(layer as usize, q);
+                    actor.absorb(&s, params.eps)?;
+                    if cfg.record_cost_curve {
+                        let reply = Message::Cost {
+                            layer,
+                            iteration,
+                            cost: actor.cost()?,
+                        };
+                        if wire::send(conn.as_mut(), &mut scratch, &reply).is_err() {
+                            continue 'session;
+                        }
+                    }
+                }
+                Message::CostProbe { layer } => {
+                    let reply = Message::Cost {
+                        layer,
+                        iteration: 0,
+                        cost: actor.cost()?,
+                    };
+                    if wire::send(conn.as_mut(), &mut scratch, &reply).is_err() {
+                        continue 'session;
+                    }
+                }
+                Message::Advance { layer, last } => {
+                    let layer = layer as usize;
+                    if last {
+                        actor.drop_layer();
+                        return Ok(WorkerSummary {
+                            shard: opts.shard,
+                            layers: layer + 1,
+                        });
+                    }
+                    let w = build_weight(&actor.state().z, random.layer(layer + 1))?;
+                    actor.advance(&backend, &w)?;
+                    prepared = None;
+                }
+                Message::CatchUp {
+                    layer,
+                    iteration: _,
+                    weights,
+                    s,
+                } => {
+                    let layer = layer as usize;
+                    // Rebuild from first principles: raw shard features
+                    // replayed through the server's weight stack, fresh
+                    // solver, consensus adopted (Z = Π_ε(s̄), Λ = O = 0).
+                    let x = actor.shard().x.clone();
+                    actor.set_features(x);
+                    actor.drop_layer();
+                    for w in &weights {
+                        actor.advance(&backend, w)?;
+                    }
+                    let params = hyper.admm_params(layer, q);
+                    actor.prepare(&backend, params.mu, q)?;
+                    let mut st = NodeState::zeros(q, actor.features().rows());
+                    if s.shape() != st.z.shape() {
+                        return Err(Error::Network(format!(
+                            "catch-up share shape {:?} does not match layer shape {:?}",
+                            s.shape(),
+                            st.z.shape()
+                        )));
+                    }
+                    st.z.copy_from(&s)?;
+                    st.z.project_frobenius(params.eps);
+                    actor.set_state(st);
+                    prepared = Some(layer);
+                    share = Matrix::zeros(q, actor.features().rows());
+                }
+                other => {
+                    return Err(Error::Network(format!(
+                        "protocol violation: unexpected {} from the server",
+                        other.name()
+                    )))
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! Length-prefixed frames: `u64` little-endian payload length, then the
+//! payload bytes.
+//!
+//! The framing layer is deliberately hostile-input-proof, in the same
+//! style as the checkpoint reader (and fuzzed the same way in
+//! `tests/transport.rs`):
+//!
+//! * the length prefix is capped at [`MAX_FRAME`] — a crafted
+//!   `u64::MAX` prefix is a clean `Err`, never an allocation;
+//! * the payload is read in bounded chunks into a scratch buffer whose
+//!   capacity only ever grows to what a peer actually delivered, so a
+//!   liar announcing a huge frame and hanging up costs one chunk;
+//! * truncation at any byte surfaces as [`crate::Error::Network`], never
+//!   a panic.
+//!
+//! One scratch `Vec<u8>` per connection is reused for both directions'
+//! payloads (encode into it, frame it out; read a frame into it, decode
+//! from it) — the "no double-buffering" property the streaming
+//! checkpoint codec was built for.
+
+use crate::{Error, Result};
+use std::io::{Read, Write};
+
+/// Hard cap on a single frame's payload (1 GiB). The biggest legitimate
+/// frame is a rejoin catch-up carrying a worker's weight stack; even the
+/// full-size MNIST preset stays far below this.
+pub const MAX_FRAME: u64 = 1 << 30;
+
+/// Read chunk granularity — bounds what a hostile length prefix can
+/// make a single `read` call buffer.
+const CHUNK: usize = 64 * 1024;
+
+fn net_err(e: std::io::Error) -> Error {
+    match e.kind() {
+        std::io::ErrorKind::UnexpectedEof => {
+            Error::Network("connection closed mid-frame".into())
+        }
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+            Error::Network("i/o timeout".into())
+        }
+        _ => Error::Network(format!("i/o failure: {e}")),
+    }
+}
+
+/// Write `payload` as one frame. The caller owns (and reuses) the
+/// payload buffer; this function allocates nothing.
+pub fn write_frame<W: Write + ?Sized>(w: &mut W, payload: &[u8]) -> Result<()> {
+    let len = payload.len() as u64;
+    if len > MAX_FRAME {
+        return Err(Error::Network(format!(
+            "refusing to send a {len}-byte frame (cap {MAX_FRAME})"
+        )));
+    }
+    w.write_all(&len.to_le_bytes()).map_err(net_err)?;
+    w.write_all(payload).map_err(net_err)?;
+    w.flush().map_err(net_err)
+}
+
+/// Read one frame into `buf` (cleared first, capacity reused). Returns
+/// a clean `Err` on truncation, oversized prefixes or transport
+/// failure — never panics, never allocates more than the bytes the peer
+/// actually sent plus one chunk.
+pub fn read_frame<R: Read + ?Sized>(r: &mut R, buf: &mut Vec<u8>) -> Result<()> {
+    let mut len_bytes = [0u8; 8];
+    r.read_exact(&mut len_bytes).map_err(net_err)?;
+    let len = u64::from_le_bytes(len_bytes);
+    if len > MAX_FRAME {
+        return Err(Error::Network(format!(
+            "frame announces {len} bytes (cap {MAX_FRAME}) — corrupt or hostile peer"
+        )));
+    }
+    buf.clear();
+    let mut remaining = len as usize;
+    let mut chunk = [0u8; CHUNK];
+    while remaining > 0 {
+        let want = remaining.min(CHUNK);
+        r.read_exact(&mut chunk[..want]).map_err(net_err)?;
+        buf.extend_from_slice(&chunk[..want]);
+        remaining -= want;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrips_and_reuses_the_buffer() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, b"hello").unwrap();
+        write_frame(&mut wire, b"").unwrap();
+        write_frame(&mut wire, &[7u8; 1000]).unwrap();
+        let mut r = &wire[..];
+        let mut buf = Vec::new();
+        read_frame(&mut r, &mut buf).unwrap();
+        assert_eq!(buf, b"hello");
+        read_frame(&mut r, &mut buf).unwrap();
+        assert!(buf.is_empty());
+        read_frame(&mut r, &mut buf).unwrap();
+        assert_eq!(buf.len(), 1000);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn hostile_length_prefix_is_err_not_alloc() {
+        for len in [u64::MAX, MAX_FRAME + 1, 1 << 60] {
+            let mut wire = len.to_le_bytes().to_vec();
+            wire.extend_from_slice(&[0u8; 16]);
+            let mut buf = Vec::new();
+            let err = read_frame(&mut &wire[..], &mut buf).unwrap_err();
+            assert!(err.to_string().contains("cap"), "{err}");
+            assert!(buf.capacity() < CHUNK * 2);
+        }
+    }
+
+    #[test]
+    fn truncation_at_every_byte_is_err() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &[42u8; 37]).unwrap();
+        for cut in 0..wire.len() {
+            let mut buf = Vec::new();
+            assert!(read_frame(&mut &wire[..cut], &mut buf).is_err(), "cut {cut}");
+        }
+    }
+}

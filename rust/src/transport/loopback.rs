@@ -1,0 +1,212 @@
+//! In-process loopback transport: duplex byte pipes that implement
+//! [`Conn`], and a queue-backed [`Accept`].
+//!
+//! This is how the oracle tests run the *entire* wire protocol —
+//! framing, handshake, rendezvous, per-round barrier — without a socket:
+//! worker reactors run on plain threads, each end of a [`duplex`] pair
+//! behaving exactly like a blocking `TcpStream`. Dropping either end
+//! closes both directions, so a crashed worker thread surfaces on the
+//! server as an EOF mid-frame — the same observable a dropped TCP peer
+//! produces — which is what lets the chaos-semantics tests drive
+//! crash/rejoin through the loopback too.
+
+use crate::transport::{Accept, Conn};
+use crate::Result;
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// One direction of a pipe: a byte queue plus a closed flag.
+struct PipeState {
+    buf: VecDeque<u8>,
+    closed: bool,
+}
+
+type Channel = Arc<(Mutex<PipeState>, Condvar)>;
+
+fn channel() -> Channel {
+    Arc::new((
+        Mutex::new(PipeState {
+            buf: VecDeque::new(),
+            closed: false,
+        }),
+        Condvar::new(),
+    ))
+}
+
+fn close(ch: &Channel) {
+    let (lock, cv) = &**ch;
+    lock.lock().expect("pipe lock poisoned").closed = true;
+    cv.notify_all();
+}
+
+/// One end of an in-process duplex byte pipe. Blocking reads, infinite
+/// buffering on writes, EOF/`BrokenPipe` once the peer end is dropped.
+pub struct PipeEnd {
+    rx: Channel,
+    tx: Channel,
+}
+
+/// A connected pair of pipe ends — bytes written to one are read from
+/// the other, in both directions.
+pub fn duplex() -> (PipeEnd, PipeEnd) {
+    let a = channel();
+    let b = channel();
+    (
+        PipeEnd {
+            rx: a.clone(),
+            tx: b.clone(),
+        },
+        PipeEnd { rx: b, tx: a },
+    )
+}
+
+impl Read for PipeEnd {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        if buf.is_empty() {
+            return Ok(0);
+        }
+        let (lock, cv) = &*self.rx;
+        let mut st = lock.lock().expect("pipe lock poisoned");
+        loop {
+            if !st.buf.is_empty() {
+                let mut n = 0;
+                while n < buf.len() {
+                    match st.buf.pop_front() {
+                        Some(b) => {
+                            buf[n] = b;
+                            n += 1;
+                        }
+                        None => break,
+                    }
+                }
+                return Ok(n);
+            }
+            if st.closed {
+                return Ok(0); // EOF
+            }
+            st = cv.wait(st).expect("pipe lock poisoned");
+        }
+    }
+}
+
+impl Write for PipeEnd {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        let (lock, cv) = &*self.tx;
+        let mut st = lock.lock().expect("pipe lock poisoned");
+        if st.closed {
+            return Err(io::Error::new(
+                io::ErrorKind::BrokenPipe,
+                "loopback peer closed",
+            ));
+        }
+        st.buf.extend(buf.iter().copied());
+        cv.notify_all();
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+impl Drop for PipeEnd {
+    fn drop(&mut self) {
+        // Close both directions so a blocked peer wakes with EOF (read)
+        // or BrokenPipe (write) instead of hanging forever.
+        close(&self.rx);
+        close(&self.tx);
+    }
+}
+
+impl Conn for PipeEnd {}
+
+/// [`Accept`] over a shared queue of pre-established connections — the
+/// loopback stand-in for a listening socket. Tests push the server-side
+/// [`PipeEnd`]s (or any [`Conn`]) in and hand the listener to
+/// `ServeAlgorithm`; rejoin tests push a fresh pair mid-run.
+#[derive(Clone, Default)]
+pub struct LoopbackListener {
+    queue: Arc<Mutex<VecDeque<Box<dyn Conn>>>>,
+}
+
+impl LoopbackListener {
+    /// An empty listener.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Enqueue a connection for the server to accept.
+    pub fn push(&self, conn: Box<dyn Conn>) {
+        self.queue
+            .lock()
+            .expect("listener lock poisoned")
+            .push_back(conn);
+    }
+}
+
+impl Accept for LoopbackListener {
+    fn poll(&mut self) -> Result<Option<Box<dyn Conn>>> {
+        Ok(self
+            .queue
+            .lock()
+            .expect("listener lock poisoned")
+            .pop_front())
+    }
+
+    fn describe(&self) -> String {
+        "loopback".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn duplex_moves_bytes_both_ways() {
+        let (mut a, mut b) = duplex();
+        a.write_all(b"ping").unwrap();
+        let mut got = [0u8; 4];
+        b.read_exact(&mut got).unwrap();
+        assert_eq!(&got, b"ping");
+        b.write_all(b"pong").unwrap();
+        a.read_exact(&mut got).unwrap();
+        assert_eq!(&got, b"pong");
+    }
+
+    #[test]
+    fn dropping_one_end_unblocks_the_other() {
+        let (a, mut b) = duplex();
+        let t = thread::spawn(move || {
+            let mut buf = [0u8; 1];
+            // Blocks until the peer drops, then sees EOF.
+            b.read(&mut buf).unwrap()
+        });
+        drop(a);
+        assert_eq!(t.join().unwrap(), 0);
+    }
+
+    #[test]
+    fn write_after_peer_drop_is_broken_pipe() {
+        let (mut a, b) = duplex();
+        drop(b);
+        let err = a.write_all(b"x").unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::BrokenPipe);
+    }
+
+    #[test]
+    fn listener_hands_out_in_fifo_order() {
+        let listener = LoopbackListener::new();
+        let mut l = listener.clone();
+        assert!(l.poll().unwrap().is_none());
+        let (a, _keep_a) = duplex();
+        let (b, _keep_b) = duplex();
+        listener.push(Box::new(a));
+        listener.push(Box::new(b));
+        assert!(l.poll().unwrap().is_some());
+        assert!(l.poll().unwrap().is_some());
+        assert!(l.poll().unwrap().is_none());
+    }
+}

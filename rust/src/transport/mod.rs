@@ -1,0 +1,141 @@
+//! Real wire transport: `dssfn serve` / `dssfn worker` over TCP.
+//!
+//! Everything else in this crate *simulates* the network; this module
+//! pays for it on a socket. A coordinator process ([`server`]) and `M`
+//! worker processes ([`client`]) run the same per-layer consensus-ADMM
+//! protocol the in-process [`crate::coordinator::DssfnAlgorithm`] runs,
+//! with each worker holding one [`crate::node::NodeActor`] — its shard,
+//! features and ADMM state never leave the process. The only payload
+//! that crosses the wire is the `Q×n` share `S_m = O_m + Λ_m` (up), the
+//! mixed share (down) and an `f64` cost sample — exactly the paper's
+//! communication pattern.
+//!
+//! The stack, bottom-up:
+//!
+//! * [`frame`] — length-prefixed frames over any [`Conn`], with a hard
+//!   size cap and bounded incremental reads (hostile peers cannot force
+//!   an unbounded allocation).
+//! * [`wire`] — the typed [`wire::Message`] set, encoded with the
+//!   checkpoint v5 streaming codec (one scratch buffer per connection,
+//!   no double-buffering), plus the handshake fingerprints.
+//! * [`server`] / [`client`] — the coordinator `Algorithm` (driven
+//!   through the ordinary session API) and the worker reactor loop.
+//! * [`loopback`] — an in-process duplex-pipe [`Conn`] so the whole
+//!   wire protocol runs under the oracle tests, bit-identical to the
+//!   in-process `SynchronousFabric` path.
+//!
+//! Determinism is the design bar, not an afterthought: a fault-free
+//! `serve` + `M × worker` run produces byte-identical weights and cost
+//! curve to `dssfn train` at the same seed, because both sides execute
+//! the same seeded math on the same locally generated data and the wire
+//! moves raw little-endian `f64` bits. CI pins this with a localhost
+//! 4-worker run byte-diffed against the in-process run, twice.
+
+pub mod client;
+pub mod frame;
+pub mod loopback;
+pub mod server;
+pub mod wire;
+
+pub use client::{run_worker, run_worker_with, WorkerOptions, WorkerSummary};
+pub use loopback::{duplex, LoopbackListener, PipeEnd};
+pub use server::{rendezvous, Handshake, ServeAlgorithm, ServeOptions};
+pub use wire::{config_fingerprint, Message, PROTOCOL_VERSION};
+
+use crate::coordinator::Encoder;
+use crate::ssfn::SsfnModel;
+use crate::{Error, Result};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+/// A bidirectional byte transport a protocol endpoint runs over: a
+/// [`TcpStream`] in deployment, a [`loopback::PipeEnd`] under tests.
+pub trait Conn: Read + Write + Send {
+    /// Install a read/write timeout (`None` = block forever). The
+    /// loopback pipe ignores this — its peer lives in the same process
+    /// and closing an end unblocks the other.
+    fn set_io_timeout(&mut self, _timeout: Option<Duration>) -> Result<()> {
+        Ok(())
+    }
+}
+
+impl Conn for TcpStream {
+    fn set_io_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        // A zero Duration is an error to std; treat it as "no timeout"
+        // rather than letting a `--io-timeout 0` request fail obscurely.
+        let t = timeout.filter(|t| !t.is_zero());
+        self.set_read_timeout(t)?;
+        self.set_write_timeout(t)?;
+        Ok(())
+    }
+}
+
+/// A connection source the server polls between protocol steps — the
+/// seam that lets rendezvous and mid-run rejoin run identically over
+/// TCP and over the in-process loopback queue.
+pub trait Accept: Send {
+    /// Non-blocking: the next pending connection, if any.
+    fn poll(&mut self) -> Result<Option<Box<dyn Conn>>>;
+    /// Where this listener accepts from (diagnostics only).
+    fn describe(&self) -> String;
+}
+
+/// [`Accept`] over a non-blocking [`TcpListener`].
+pub struct TcpAccept {
+    listener: TcpListener,
+    addr: String,
+}
+
+impl TcpAccept {
+    /// Bind `addr` (e.g. `127.0.0.1:7878`) and start listening.
+    pub fn bind(addr: &str) -> Result<Self> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| Error::Network(format!("cannot bind {addr}: {e}")))?;
+        listener.set_nonblocking(true)?;
+        let addr = listener
+            .local_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| addr.to_string());
+        Ok(Self { listener, addr })
+    }
+
+    /// The bound address (useful when binding port 0 in tests).
+    pub fn local_addr(&self) -> &str {
+        &self.addr
+    }
+}
+
+impl Accept for TcpAccept {
+    fn poll(&mut self) -> Result<Option<Box<dyn Conn>>> {
+        match self.listener.accept() {
+            Ok((stream, _)) => {
+                // The accepted socket must block (with timeouts); only
+                // the listener itself polls.
+                stream.set_nonblocking(false)?;
+                stream.set_nodelay(true)?;
+                Ok(Some(Box::new(stream)))
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(None),
+            Err(e) => Err(Error::Network(format!("accept failed: {e}"))),
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!("tcp://{}", self.addr)
+    }
+}
+
+/// Write a trained model's weight stack + output matrix to `path` in
+/// the checkpoint codec's matrix layout — the byte-diffable artifact
+/// behind `--weights-out`, which CI uses to pin that the networked run
+/// reproduces the in-process run bit-for-bit.
+pub fn write_model_weights(path: &std::path::Path, model: &SsfnModel) -> Result<()> {
+    let file = std::fs::File::create(path)?;
+    let mut enc = Encoder::new(std::io::BufWriter::new(file));
+    enc.bytes(b"DSSFNWTS")?;
+    enc.u32(1)?;
+    enc.matrices(model.weights())?;
+    enc.matrix(model.output())?;
+    enc.flush()
+}

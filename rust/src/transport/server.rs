@@ -1,0 +1,1090 @@
+//! The `dssfn serve` side: rendezvous, handshake validation and the
+//! coordinator [`Algorithm`] that drives `M` remote workers through the
+//! per-layer consensus-ADMM protocol.
+//!
+//! [`ServeAlgorithm`] is the wire twin of
+//! [`crate::coordinator::DssfnAlgorithm`]: the same phase machine
+//! (prepare → K iterations → advance), the same gossip math
+//! ([`GossipEngine::consensus_average_measured`] over the shares staged
+//! in node order), the same cost/diagnostic bookkeeping — but each
+//! node's O/Λ/Z state lives in a worker process's
+//! [`crate::node::NodeActor`] and only the `Q×n` shares cross the wire.
+//! The server mirrors `Z` locally (`z[i] = Π_ε(s̄_i)`) so weight
+//! building, growth decisions and the final model come out bit-identical
+//! to the in-process run on the fault-free path.
+//!
+//! ## Rendezvous and churn
+//!
+//! Start-up gates on `min_clients` distinct shards completing the
+//! handshake (default: all `M`). Shards absent at the gate are treated
+//! like crashed nodes under the existing chaos semantics: averaging runs
+//! over the restricted live-set mixing matrix
+//! ([`MixingMatrix::build_restricted`]), their mirrored state stays
+//! frozen, and the layer advance forwards them through the live
+//! representative's weight. A dropped TCP peer mid-run surfaces as
+//! [`StepEvent::NodeDropped`]; a reconnecting worker is re-admitted
+//! through the same handshake and caught up with a
+//! [`Message::CatchUp`] payload ([`StepEvent::NodeRejoined`]). When the
+//! live set falls below `min_clients` the round stalls (bounded by the
+//! I/O timeout, surfaced as [`StepEvent::QuorumStalled`]) and then fails
+//! with a clean `Err` — never a hang.
+//!
+//! Wire-path stalls are *real* time, so they are not charged to the
+//! simulated communication clock; the gossip charges themselves are
+//! identical to the in-process fabric because they come from the same
+//! engine. A rejoin charges its catch-up share to the ledger plus a
+//! seeded [`LatencyModel::backoff_time`] to the simulated clock — the
+//! same accounting rule `ChaosFabric` applies in-process.
+
+use crate::config::{BackendKind, ExperimentConfig};
+use crate::coordinator::{task_checksum, ConsensusMode};
+use crate::data::ClassificationTask;
+use crate::linalg::Matrix;
+use crate::metrics::{error_db, LayerRecord, TrainReport};
+use crate::network::{
+    CommLedger, CommSchedule, CommSnapshot, GossipEngine, LatencyModel, MixingMatrix, Topology,
+};
+use crate::session::{
+    Algorithm, AlgorithmOutput, SessionProgress, StepEvent, StopReason, TrainedModel,
+};
+use crate::ssfn::{build_weight, GrowthPolicy, RandomMatrices, SsfnArchitecture, TrainHyper};
+use crate::transport::wire::{self, config_fingerprint, Message, PROTOCOL_VERSION};
+use crate::transport::{Accept, Conn};
+use crate::util::{Rng, SplitMix64, Stopwatch};
+use crate::{Error, Result};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Fallback bound on handshake reads and quorum stalls when no
+/// `--io-timeout` is configured — a silent or half-dead peer must never
+/// hang the server.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Knobs of a serve run beyond the experiment config.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServeOptions {
+    /// Distinct shards required before training starts, and the mid-run
+    /// quorum. `0` means all `M` nodes.
+    pub min_clients: usize,
+    /// Per-connection read/write timeout (`None`: block, with the
+    /// `HANDSHAKE_TIMEOUT` fallback on handshakes and stalls).
+    pub io_timeout: Option<Duration>,
+}
+
+/// What the server requires a [`Message::Hello`] to match. `admit` is a
+/// pure function so every rejection path is unit-testable without a
+/// socket.
+#[derive(Debug, Clone, Copy)]
+pub struct Handshake {
+    /// Required protocol version.
+    pub protocol: u32,
+    /// Cluster size `M`; shard indices must be `< nodes`.
+    pub nodes: usize,
+    /// [`config_fingerprint`] of the experiment config.
+    pub config_fp: u64,
+    /// [`task_checksum`] of the locally generated dataset.
+    pub task_checksum: u64,
+}
+
+impl Handshake {
+    /// Validate a greeting against this server's expectations and the
+    /// set of already-connected shards. Returns the shard index to
+    /// admit, or a human-readable rejection naming the exact mismatch.
+    pub fn admit(&self, hello: &Message, taken: &[bool]) -> std::result::Result<usize, String> {
+        let (protocol, shard, nodes, config_fp, task_checksum) = match hello {
+            Message::Hello {
+                protocol,
+                shard,
+                nodes,
+                config_fp,
+                task_checksum,
+            } => (*protocol, *shard, *nodes, *config_fp, *task_checksum),
+            other => {
+                return Err(format!(
+                    "expected a Hello greeting, got {}",
+                    other.name()
+                ))
+            }
+        };
+        if protocol != self.protocol {
+            return Err(format!(
+                "protocol version mismatch: server speaks v{}, worker speaks v{protocol}",
+                self.protocol
+            ));
+        }
+        if nodes != self.nodes as u64 {
+            return Err(format!(
+                "cluster size mismatch: server runs M={}, worker was configured for M={nodes}",
+                self.nodes
+            ));
+        }
+        if config_fp != self.config_fp {
+            return Err(format!(
+                "config fingerprint mismatch (server {:#018x}, worker {config_fp:#018x}): \
+                 the two processes were launched with different math-relevant flags",
+                self.config_fp
+            ));
+        }
+        if task_checksum != self.task_checksum {
+            return Err(format!(
+                "dataset checksum mismatch (server {:#018x}, worker {task_checksum:#018x}): \
+                 the locally generated shards differ",
+                self.task_checksum
+            ));
+        }
+        if shard >= self.nodes as u64 {
+            return Err(format!(
+                "shard {shard} is out of range for M={}",
+                self.nodes
+            ));
+        }
+        let i = shard as usize;
+        if taken[i] {
+            return Err(format!("shard {i} is already connected"));
+        }
+        Ok(i)
+    }
+}
+
+/// Reject every config knob the wire transport cannot honour, naming
+/// the flag. Shared by `serve` and `worker` so both sides fail the same
+/// way before any socket work.
+pub(crate) fn validate_transport_config(cfg: &ExperimentConfig) -> Result<()> {
+    if cfg.exact_consensus {
+        return Err(Error::Config(
+            "serve/worker runs gossip consensus only; drop --exact-consensus".into(),
+        ));
+    }
+    if cfg.backend != BackendKind::Native {
+        return Err(Error::Config(
+            "serve/worker supports the native backend only (every worker must \
+             produce bit-identical f64s); drop --backend"
+                .into(),
+        ));
+    }
+    let comm = cfg.comm_config()?;
+    if comm.schedule != CommSchedule::Synchronous {
+        return Err(Error::Config(format!(
+            "serve/worker implements the synchronous schedule only; \
+             --schedule {} is simulation-only",
+            cfg.schedule
+        )));
+    }
+    if comm.adaptive_delta.is_some() {
+        return Err(Error::Config(
+            "--adaptive-delta is simulation-only; not supported over the wire \
+             transport"
+                .into(),
+        ));
+    }
+    if comm.iter_staleness > 0 {
+        return Err(Error::Config(
+            "--iter-staleness is simulation-only; not supported over the wire \
+             transport"
+                .into(),
+        ));
+    }
+    if comm.node_latency.is_heterogeneous() {
+        return Err(Error::Config(
+            "--straggler-sigma is simulation-only; real workers are their own \
+             stragglers"
+                .into(),
+        ));
+    }
+    if comm.chaos.enabled() {
+        return Err(Error::Config(
+            "--chaos-crash-p is simulation-only; over the wire, crash/rejoin \
+             comes from real worker processes (gate with --min-clients)"
+                .into(),
+        ));
+    }
+    Ok(())
+}
+
+/// Collect worker connections until `min_clients` distinct shards have
+/// completed the handshake. Mismatched greetings are rejected with a
+/// reason and dropped; the returned vector has one slot per shard
+/// (`None` = absent at the gate, treated as dead-from-start).
+pub fn rendezvous(
+    listener: &mut dyn Accept,
+    expect: &Handshake,
+    min_clients: usize,
+    io_timeout: Option<Duration>,
+) -> Result<Vec<Option<Box<dyn Conn>>>> {
+    let m = expect.nodes;
+    let mut peers: Vec<Option<Box<dyn Conn>>> = (0..m).map(|_| None).collect();
+    let mut scratch = Vec::new();
+    let mut admitted = 0usize;
+    loop {
+        while let Some(mut conn) = listener.poll()? {
+            let taken: Vec<bool> = peers.iter().map(|p| p.is_some()).collect();
+            if let Some(i) = greet(conn.as_mut(), &mut scratch, expect, &taken, io_timeout) {
+                peers[i] = Some(conn);
+                admitted += 1;
+            }
+        }
+        if admitted >= min_clients {
+            return Ok(peers);
+        }
+        thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Run the handshake on one fresh connection: read the Hello (bounded
+/// by the handshake timeout), admit or reject. Returns the admitted
+/// shard index; any failure path drops the connection.
+fn greet(
+    conn: &mut dyn Conn,
+    scratch: &mut Vec<u8>,
+    expect: &Handshake,
+    taken: &[bool],
+    io_timeout: Option<Duration>,
+) -> Option<usize> {
+    conn.set_io_timeout(Some(io_timeout.unwrap_or(HANDSHAKE_TIMEOUT)))
+        .ok()?;
+    let hello = wire::recv(conn, scratch).ok()?;
+    match expect.admit(&hello, taken) {
+        Ok(i) => {
+            conn.set_io_timeout(io_timeout).ok()?;
+            wire::send(
+                conn,
+                scratch,
+                &Message::Welcome {
+                    protocol: PROTOCOL_VERSION,
+                },
+            )
+            .ok()?;
+            Some(i)
+        }
+        Err(reason) => {
+            let _ = wire::send(conn, scratch, &Message::Reject { reason });
+            None
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Prepare,
+    Iterate { k: usize },
+    Advance,
+    Done,
+}
+
+/// The serve-side coordinator as a session [`Algorithm`] — `dssfn
+/// serve` drives it through the ordinary
+/// [`crate::session::TrainSession`] loop, so observers, stop policies
+/// and the CLI event printer all work unchanged over the wire.
+pub struct ServeAlgorithm {
+    arch: SsfnArchitecture,
+    hyper: TrainHyper,
+    seed: u64,
+    delta: f64,
+    m: usize,
+    min_clients: usize,
+    io_timeout: Option<Duration>,
+    record_cost_curve: bool,
+    task: ClassificationTask,
+    growth: Option<GrowthPolicy>,
+    random: RandomMatrices,
+    topology: Topology,
+    latency: LatencyModel,
+    ledger: Arc<CommLedger>,
+    /// Full-cluster gossip engine (the fault-free path).
+    engine: GossipEngine,
+    /// Restricted engine while any node is dead; shares the ledger, and
+    /// the simulated clock is transferred on every live-set change.
+    restricted: Option<GossipEngine>,
+    listener: Box<dyn Accept>,
+    expect: Handshake,
+    peers: Vec<Option<Box<dyn Conn>>>,
+    live: Vec<bool>,
+    scratch: Vec<u8>,
+
+    report: TrainReport,
+    sw: Stopwatch,
+    weights: Vec<Matrix>,
+    final_o: Option<Matrix>,
+    prev_layer_cost: Option<f64>,
+
+    layer: usize,
+    phase: Phase,
+    /// The exchange bank, staged in node order — the same contiguous
+    /// slice layout the in-process fabric averages, fed by frames
+    /// instead of actor method calls.
+    s_vals: Vec<Matrix>,
+    /// Server-side mirror of each node's consensus variable
+    /// `Z_i = Π_ε(s̄_i)`, updated after every averaging; frozen for dead
+    /// nodes, exactly like the in-process chaos semantics.
+    z: Vec<Matrix>,
+    /// Last cost each node reported; dead nodes contribute their frozen
+    /// value to the global sum (fault-case curves may deviate from the
+    /// in-process run — the bit-identity bar is fault-free only).
+    last_costs: Vec<f64>,
+    cost_curve: Vec<f64>,
+    gossip_rounds: usize,
+    comm_before: CommSnapshot,
+    stop_reason: Option<StopReason>,
+    rejoin_seed: u64,
+    rejoin_count: u64,
+    announced_absent: bool,
+}
+
+impl ServeAlgorithm {
+    /// Validate the config for wire use, generate the task locally,
+    /// then block in rendezvous until `min_clients` workers are in.
+    pub fn new(
+        cfg: &ExperimentConfig,
+        mut listener: Box<dyn Accept>,
+        opts: ServeOptions,
+    ) -> Result<Self> {
+        validate_transport_config(cfg)?;
+        let arch = cfg.architecture()?;
+        let hyper = cfg.hyper();
+        let topts = cfg.train_options()?;
+        let m = topts.nodes;
+        let min_clients = if opts.min_clients == 0 { m } else { opts.min_clients };
+        if min_clients > m {
+            return Err(Error::Config(format!(
+                "--min-clients {min_clients} exceeds the cluster size M = {m}"
+            )));
+        }
+        let delta = match topts.consensus {
+            ConsensusMode::Gossip { delta } => delta,
+            ConsensusMode::Exact => unreachable!("rejected by validate_transport_config"),
+        };
+        let task = cfg.generate_task()?;
+        let random = RandomMatrices::generate(&arch, cfg.seed)?;
+        let expect = Handshake {
+            protocol: PROTOCOL_VERSION,
+            nodes: m,
+            config_fp: config_fingerprint(cfg),
+            task_checksum: task_checksum(&task),
+        };
+        let mode = format!(
+            "dssfn-serve({}, gossip δ={delta:.0e}, ≥{min_clients}/{m} workers) on {}",
+            topts.topology.describe(),
+            listener.describe()
+        );
+        let peers = rendezvous(listener.as_mut(), &expect, min_clients, opts.io_timeout)?;
+        let live: Vec<bool> = peers.iter().map(|p| p.is_some()).collect();
+        let ledger = Arc::new(CommLedger::new());
+        let mix = MixingMatrix::build(&topts.topology, topts.weight_rule)?;
+        let engine = GossipEngine::new(mix, Arc::clone(&ledger), topts.latency);
+        let restricted = if live.iter().all(|&l| l) {
+            None
+        } else {
+            let rmix = MixingMatrix::build_restricted(&topts.topology, &live)?;
+            Some(GossipEngine::new(rmix, Arc::clone(&ledger), topts.latency))
+        };
+        let report = TrainReport {
+            dataset: task.name.clone(),
+            mode,
+            ..Default::default()
+        };
+        Ok(Self {
+            arch,
+            hyper,
+            seed: cfg.seed,
+            delta,
+            m,
+            min_clients,
+            io_timeout: opts.io_timeout,
+            record_cost_curve: cfg.record_cost_curve,
+            task,
+            growth: None,
+            random,
+            topology: topts.topology,
+            latency: topts.latency,
+            ledger,
+            engine,
+            restricted,
+            listener,
+            expect,
+            peers,
+            live,
+            scratch: Vec::new(),
+            report,
+            sw: Stopwatch::new(),
+            weights: Vec::with_capacity(arch.layers),
+            final_o: None,
+            prev_layer_cost: None,
+            layer: 0,
+            phase: Phase::Prepare,
+            s_vals: Vec::new(),
+            z: Vec::new(),
+            last_costs: vec![0.0; m],
+            cost_curve: Vec::new(),
+            gossip_rounds: 0,
+            comm_before: CommSnapshot::default(),
+            stop_reason: None,
+            rejoin_seed: SplitMix64::new(cfg.seed ^ 0x7e30_1a5e_ed15_7a9b).next_u64(),
+            rejoin_count: 0,
+            announced_absent: false,
+        })
+    }
+
+    fn live_count(&self) -> usize {
+        self.live.iter().filter(|&&l| l).count()
+    }
+
+    fn rep(&self) -> usize {
+        self.live.iter().position(|&l| l).unwrap_or(0)
+    }
+
+    fn simulated_seconds(&self) -> f64 {
+        self.restricted
+            .as_ref()
+            .unwrap_or(&self.engine)
+            .simulated_seconds()
+    }
+
+    /// Rebuild the mixing engine for the current live set, transferring
+    /// the simulated clock — the same dual-engine bookkeeping
+    /// `ChaosFabric` does in-process.
+    fn rebuild_engine(&mut self) -> Result<()> {
+        let clock = self.simulated_seconds();
+        if self.live.iter().all(|&l| l) {
+            self.restricted = None;
+            self.engine.set_simulated_seconds(clock);
+        } else {
+            let mix = MixingMatrix::build_restricted(&self.topology, &self.live)?;
+            let eng = GossipEngine::new(mix, Arc::clone(&self.ledger), self.latency);
+            eng.set_simulated_seconds(clock);
+            self.restricted = Some(eng);
+        }
+        Ok(())
+    }
+
+    fn send_to(&mut self, i: usize, msg: &Message) -> Result<()> {
+        match self.peers[i].as_mut() {
+            Some(conn) => wire::send(conn.as_mut(), &mut self.scratch, msg),
+            None => Err(Error::Network(format!("shard {i} is not connected"))),
+        }
+    }
+
+    fn recv_from(&mut self, i: usize) -> Result<Message> {
+        match self.peers[i].as_mut() {
+            Some(conn) => wire::recv(conn.as_mut(), &mut self.scratch),
+            None => Err(Error::Network(format!("shard {i} is not connected"))),
+        }
+    }
+
+    /// A peer failed mid-protocol: close it, freeze its mirrored state,
+    /// restrict the mixing to the survivors.
+    fn drop_peer(
+        &mut self,
+        i: usize,
+        iteration: usize,
+        events: &mut Vec<StepEvent>,
+    ) -> Result<()> {
+        self.peers[i] = None;
+        if self.live[i] {
+            self.live[i] = false;
+            events.push(StepEvent::NodeDropped {
+                layer: self.layer,
+                iteration,
+                node: i,
+            });
+            self.rebuild_engine()?;
+        }
+        Ok(())
+    }
+
+    /// Admit any pending connections as rejoiners for iteration `k`:
+    /// handshake, catch-up payload (mirror weight stack + current
+    /// consensus share), liveness + engine update, and the in-process
+    /// chaos accounting rule (ledger charge + seeded backoff on the
+    /// simulated clock). With `step_now` the rejoiner is immediately
+    /// stepped through the in-flight iteration so a quorum stall can
+    /// resolve mid-round.
+    fn admit_joiners(
+        &mut self,
+        k: usize,
+        step_now: bool,
+        events: &mut Vec<StepEvent>,
+    ) -> Result<()> {
+        loop {
+            let mut conn = match self.listener.poll()? {
+                Some(c) => c,
+                None => return Ok(()),
+            };
+            let i = match greet(
+                conn.as_mut(),
+                &mut self.scratch,
+                &self.expect,
+                &self.live,
+                self.io_timeout,
+            ) {
+                Some(i) => i,
+                None => continue,
+            };
+            let rep = self.rep();
+            let catch_up = Message::CatchUp {
+                layer: self.layer as u64,
+                iteration: k as u64,
+                weights: self.weights.clone(),
+                s: self.s_vals[rep].clone(),
+            };
+            if wire::send(conn.as_mut(), &mut self.scratch, &catch_up).is_err() {
+                continue;
+            }
+            self.peers[i] = Some(conn);
+            self.live[i] = true;
+            events.push(StepEvent::NodeRejoined {
+                layer: self.layer,
+                iteration: k,
+                node: i,
+            });
+            // Accounting: the catch-up share crosses the network, and
+            // the rejoin costs a seeded exponential-backoff delay on the
+            // simulated clock — mirroring ChaosFabric's rejoin charge.
+            let (q, feat) = self.s_vals[rep].shape();
+            let scalars = (q * feat) as u64;
+            self.ledger.record_message(scalars);
+            let draw = SplitMix64::new(self.rejoin_seed ^ self.rejoin_count).next_u64();
+            self.rejoin_count += 1;
+            let attempts = 1 + (draw % 3) as u32;
+            let clock = self.simulated_seconds();
+            let backoff = self.latency.backoff_time(attempts, scalars * 8);
+            self.rebuild_engine()?;
+            self.restricted
+                .as_ref()
+                .unwrap_or(&self.engine)
+                .set_simulated_seconds(clock + backoff);
+            if step_now {
+                // The round is already in flight: step the rejoiner so
+                // it contributes a fresh share to this averaging.
+                let step = Message::Step {
+                    layer: self.layer as u64,
+                    iteration: k as u64,
+                };
+                if self.send_to(i, &step).is_err() {
+                    self.drop_peer(i, k, events)?;
+                    continue;
+                }
+                if !self.collect_share(i, k, events)? {
+                    continue;
+                }
+            }
+        }
+    }
+
+    /// Receive shard `i`'s share for iteration `k` into the exchange
+    /// bank. Returns false (peer dropped) on any protocol violation.
+    fn collect_share(
+        &mut self,
+        i: usize,
+        k: usize,
+        events: &mut Vec<StepEvent>,
+    ) -> Result<bool> {
+        match self.recv_from(i) {
+            Ok(Message::Share {
+                layer,
+                iteration,
+                s,
+            }) if layer as usize == self.layer
+                && iteration as usize == k
+                && s.shape() == self.s_vals[i].shape() =>
+            {
+                self.s_vals[i].copy_from(&s)?;
+                Ok(true)
+            }
+            _ => {
+                self.drop_peer(i, k, events)?;
+                Ok(false)
+            }
+        }
+    }
+
+    /// Block until the live set is back above the quorum, admitting
+    /// rejoiners as they arrive. Bounded by the I/O timeout: a quorum
+    /// that never recovers is a clean `Err`, not a hang.
+    fn await_quorum(&mut self, k: usize, events: &mut Vec<StepEvent>) -> Result<()> {
+        if self.live_count() >= self.min_clients {
+            return Ok(());
+        }
+        let deadline = Instant::now() + self.io_timeout.unwrap_or(HANDSHAKE_TIMEOUT);
+        let mut waited = 0u64;
+        while self.live_count() < self.min_clients {
+            self.admit_joiners(k, true, events)?;
+            if self.live_count() >= self.min_clients {
+                break;
+            }
+            if Instant::now() >= deadline {
+                return Err(Error::Network(format!(
+                    "quorum lost at layer {} iteration {k}: {}/{} workers live \
+                     (need {})",
+                    self.layer,
+                    self.live_count(),
+                    self.m,
+                    self.min_clients
+                )));
+            }
+            thread::sleep(Duration::from_millis(5));
+            waited += 1;
+        }
+        if waited > 0 {
+            events.push(StepEvent::QuorumStalled {
+                layer: self.layer,
+                iteration: k,
+                rounds: waited,
+            });
+        }
+        Ok(())
+    }
+
+    fn do_prepare(&mut self, events: &mut Vec<StepEvent>) -> Result<()> {
+        let q = self.arch.num_classes;
+        let feat_dim = if self.layer == 0 {
+            self.arch.input_dim
+        } else {
+            self.arch.hidden
+        };
+        self.comm_before = self.ledger.snapshot();
+        let params = self.hyper.admm_params(self.layer, q);
+        params.validate()?;
+        self.s_vals = (0..self.m).map(|_| Matrix::zeros(q, feat_dim)).collect();
+        self.z = (0..self.m).map(|_| Matrix::zeros(q, feat_dim)).collect();
+        // Dead nodes' cost contribution resets with the layer — the
+        // server has no data, so it cannot price a dead node's fresh
+        // layer (a documented fault-path deviation from in-process).
+        self.last_costs = vec![0.0; self.m];
+        self.cost_curve = Vec::new();
+        self.gossip_rounds = 0;
+        if !self.announced_absent {
+            self.announced_absent = true;
+            for i in 0..self.m {
+                if !self.live[i] {
+                    events.push(StepEvent::NodeDropped {
+                        layer: self.layer,
+                        iteration: 0,
+                        node: i,
+                    });
+                }
+            }
+        }
+        self.phase = Phase::Iterate { k: 0 };
+        events.push(StepEvent::LayerPrepared {
+            layer: self.layer,
+            feat_dim,
+        });
+        Ok(())
+    }
+
+    fn do_iterate(&mut self, k: usize, events: &mut Vec<StepEvent>) -> Result<()> {
+        let q = self.arch.num_classes;
+        let params = self.hyper.admm_params(self.layer, q);
+        let last_iter =
+            k + 1 >= params.iterations || (self.stop_reason.is_some() && self.layer >= 1);
+
+        // Rejoiners admitted at the top of an iteration take part in it
+        // fully: Step will reach them with everyone else.
+        self.admit_joiners(k, false, events)?;
+
+        // (1) Dispatch the O-update and (2) collect the staged shares,
+        // node order — the server-side image of the in-process
+        // stage_share loop.
+        let step = Message::Step {
+            layer: self.layer as u64,
+            iteration: k as u64,
+        };
+        for i in 0..self.m {
+            if !self.live[i] {
+                continue;
+            }
+            if self.send_to(i, &step).is_err() {
+                self.drop_peer(i, k, events)?;
+            }
+        }
+        for i in 0..self.m {
+            if !self.live[i] {
+                continue;
+            }
+            self.collect_share(i, k, events)?;
+        }
+        self.await_quorum(k, events)?;
+
+        // (3) The same consensus averaging the in-process fabric runs,
+        // over the same contiguous bank — identical math, identical
+        // ledger and simulated-clock charges.
+        let (rounds, bytes) = {
+            let engine = self.restricted.as_ref().unwrap_or(&self.engine);
+            engine.consensus_average_measured(&mut self.s_vals, self.delta)?
+        };
+        self.gossip_rounds += rounds;
+
+        // (4) Return the mixed shares; mirror Z for live nodes.
+        for i in 0..self.m {
+            if !self.live[i] {
+                continue;
+            }
+            let mixed = Message::Mixed {
+                layer: self.layer as u64,
+                iteration: k as u64,
+                last_iter,
+                s: self.s_vals[i].clone(),
+            };
+            if self.send_to(i, &mixed).is_err() {
+                self.drop_peer(i, k, events)?;
+                continue;
+            }
+            self.z[i].copy_from(&self.s_vals[i])?;
+            self.z[i].project_frobenius(params.eps);
+        }
+
+        // (5) Cost samples, summed in node order (bit-identical to the
+        // in-process reduction on the fault-free path).
+        let mut cost = None;
+        if self.record_cost_curve {
+            for i in 0..self.m {
+                if !self.live[i] {
+                    continue;
+                }
+                match self.recv_from(i) {
+                    Ok(Message::Cost { cost: c, .. }) => self.last_costs[i] = c,
+                    _ => self.drop_peer(i, k, events)?,
+                }
+            }
+            let c: f64 = self.last_costs.iter().sum();
+            self.cost_curve.push(c);
+            cost = Some(c);
+        }
+        let gap = if self.record_cost_curve {
+            let rep = self.rep();
+            let z0 = &self.z[rep];
+            self.z
+                .iter()
+                .enumerate()
+                .filter(|&(i, _)| self.live[i])
+                .map(|(_, z)| z.max_abs_diff(z0))
+                .fold(0.0, f64::max)
+        } else {
+            0.0
+        };
+
+        events.push(StepEvent::GossipRound {
+            layer: self.layer,
+            iteration: k,
+            rounds,
+            bytes,
+        });
+        events.push(StepEvent::AdmmIteration {
+            layer: self.layer,
+            iteration: k,
+            cost,
+            consensus_gap: gap,
+        });
+
+        self.phase = if last_iter {
+            Phase::Advance
+        } else {
+            Phase::Iterate { k: k + 1 }
+        };
+        Ok(())
+    }
+
+    fn do_advance(&mut self, events: &mut Vec<StepEvent>) -> Result<()> {
+        let q = self.arch.num_classes;
+        let params = self.hyper.admm_params(self.layer, q);
+        let k_last = params.iterations.saturating_sub(1);
+
+        let rep = self.rep();
+        let z0 = self.z[rep].clone();
+        let disagreement = self
+            .z
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| self.live[i])
+            .map(|(_, z)| z.max_abs_diff(&z0))
+            .fold(0.0, f64::max);
+
+        // Global layer cost: the recorded curve's tail, or one probe
+        // round when curves are off.
+        let layer_cost = match self.cost_curve.last().copied() {
+            Some(c) => c,
+            None => {
+                let probe = Message::CostProbe {
+                    layer: self.layer as u64,
+                };
+                for i in 0..self.m {
+                    if !self.live[i] {
+                        continue;
+                    }
+                    if self.send_to(i, &probe).is_err() {
+                        self.drop_peer(i, k_last, events)?;
+                        continue;
+                    }
+                    match self.recv_from(i) {
+                        Ok(Message::Cost { cost: c, .. }) => self.last_costs[i] = c,
+                        _ => self.drop_peer(i, k_last, events)?,
+                    }
+                }
+                self.last_costs.iter().sum()
+            }
+        };
+        let stop_growth = match (self.growth, self.prev_layer_cost) {
+            (Some(p), Some(prev)) => p.should_stop(prev, layer_cost),
+            _ => false,
+        };
+        self.prev_layer_cost = Some(layer_cost);
+
+        let budget_stop = self.stop_reason.is_some() && self.layer >= 1;
+        let last_layer = self.layer == self.arch.layers || stop_growth || budget_stop;
+
+        // Tell every live worker; each builds its own weight from its
+        // own Z (same per-node math as in-process) — the server only
+        // mirrors node 0's weight for the model and catch-up payloads
+        // (the live representative's when node 0 is dead, matching the
+        // in-process w_rep forwarding rule).
+        let advance = Message::Advance {
+            layer: self.layer as u64,
+            last: last_layer,
+        };
+        for i in 0..self.m {
+            if !self.live[i] {
+                continue;
+            }
+            if self.send_to(i, &advance).is_err() {
+                self.drop_peer(i, k_last, events)?;
+            }
+        }
+        if !last_layer {
+            let r_next = self.random.layer(self.layer + 1);
+            let src = if self.live[0] { 0 } else { rep };
+            self.weights.push(build_weight(&self.z[src], r_next)?);
+        } else {
+            self.final_o = Some(z0);
+        }
+
+        let layer = self.layer;
+        self.report.layers.push(LayerRecord {
+            layer,
+            cost_curve: std::mem::take(&mut self.cost_curve),
+            wall_secs: self.sw.split(&format!("layer{layer}")),
+            gossip_rounds: self.gossip_rounds,
+            comm: self.ledger.snapshot().since(&self.comm_before),
+            consensus_disagreement: disagreement,
+        });
+        events.push(StepEvent::LayerAdvanced {
+            layer,
+            cost: layer_cost,
+            last: last_layer,
+        });
+
+        self.s_vals = Vec::new();
+        self.z = Vec::new();
+        self.gossip_rounds = 0;
+
+        if last_layer {
+            self.phase = Phase::Done;
+            let reason = if budget_stop {
+                self.stop_reason.unwrap_or(StopReason::Requested)
+            } else if stop_growth {
+                StopReason::GrowthStopped
+            } else {
+                StopReason::Completed
+            };
+            events.push(StepEvent::Finished { reason });
+        } else {
+            self.layer += 1;
+            self.phase = Phase::Prepare;
+        }
+        Ok(())
+    }
+}
+
+impl Algorithm for ServeAlgorithm {
+    fn describe(&self) -> String {
+        self.report.mode.clone()
+    }
+
+    fn is_done(&self) -> bool {
+        self.phase == Phase::Done
+    }
+
+    fn advance(&mut self, events: &mut Vec<StepEvent>) -> Result<()> {
+        match self.phase {
+            Phase::Prepare => self.do_prepare(events),
+            Phase::Iterate { k } => self.do_iterate(k, events),
+            Phase::Advance => self.do_advance(events),
+            Phase::Done => Err(Error::Config("serve session already finished".into())),
+        }
+    }
+
+    fn finalize(&mut self) -> Result<AlgorithmOutput> {
+        if self.phase != Phase::Done {
+            return Err(Error::Config(
+                "finalize called before the session finished".into(),
+            ));
+        }
+        let final_o = self
+            .final_o
+            .take()
+            .ok_or_else(|| Error::Config("session already finalized".into()))?;
+        let arch = SsfnArchitecture {
+            layers: self.weights.len(),
+            ..self.arch
+        };
+        let weights = std::mem::take(&mut self.weights);
+        let model = crate::ssfn::SsfnModel::new(arch, weights, final_o)?;
+        let (train_acc, test_acc, err_db) = (
+            model.accuracy(&self.task.train)?,
+            model.accuracy(&self.task.test)?,
+            error_db(
+                model.residual_sq(&self.task.train)?,
+                self.task.train.t.frobenius_norm_sq(),
+            ),
+        );
+        self.report.train_accuracy = train_acc;
+        self.report.test_accuracy = test_acc;
+        self.report.train_error_db = err_db;
+        self.report.wall_secs = self.sw.elapsed();
+        self.report.comm_total = self.ledger.snapshot();
+        self.report.simulated_comm_secs = self.simulated_seconds();
+        let report = std::mem::take(&mut self.report);
+        Ok(AlgorithmOutput {
+            model: TrainedModel::Ssfn(model),
+            report,
+        })
+    }
+
+    fn progress(&self) -> SessionProgress {
+        SessionProgress {
+            comm_bytes: self.ledger.snapshot().bytes,
+            simulated_secs: self.simulated_seconds() + self.sw.elapsed(),
+        }
+    }
+
+    fn request_stop(&mut self, reason: StopReason) {
+        if self.stop_reason.is_none() && self.phase != Phase::Done {
+            self.stop_reason = Some(reason);
+        }
+    }
+
+    fn adopt_cost_plateau(&mut self, min_relative_improvement: f64) -> bool {
+        if self.growth.is_none() {
+            self.growth = Some(GrowthPolicy {
+                min_relative_improvement,
+            });
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn expect() -> Handshake {
+        Handshake {
+            protocol: PROTOCOL_VERSION,
+            nodes: 4,
+            config_fp: 0xAA,
+            task_checksum: 0xBB,
+        }
+    }
+
+    fn hello(shard: u64) -> Message {
+        Message::Hello {
+            protocol: PROTOCOL_VERSION,
+            shard,
+            nodes: 4,
+            config_fp: 0xAA,
+            task_checksum: 0xBB,
+        }
+    }
+
+    #[test]
+    fn admit_accepts_a_matching_worker() {
+        assert_eq!(expect().admit(&hello(2), &[false; 4]), Ok(2));
+    }
+
+    #[test]
+    fn admit_names_every_mismatch() {
+        let e = expect();
+        let taken = [false; 4];
+
+        let mut bad = hello(0);
+        if let Message::Hello { protocol, .. } = &mut bad {
+            *protocol = 99;
+        }
+        assert!(e.admit(&bad, &taken).unwrap_err().contains("protocol version"));
+
+        let mut bad = hello(0);
+        if let Message::Hello { nodes, .. } = &mut bad {
+            *nodes = 5;
+        }
+        assert!(e.admit(&bad, &taken).unwrap_err().contains("cluster size"));
+
+        let mut bad = hello(0);
+        if let Message::Hello { config_fp, .. } = &mut bad {
+            *config_fp = 1;
+        }
+        assert!(e.admit(&bad, &taken).unwrap_err().contains("config fingerprint"));
+
+        let mut bad = hello(0);
+        if let Message::Hello { task_checksum, .. } = &mut bad {
+            *task_checksum = 1;
+        }
+        assert!(e.admit(&bad, &taken).unwrap_err().contains("dataset checksum"));
+
+        assert!(e.admit(&hello(4), &taken).unwrap_err().contains("out of range"));
+
+        let mut taken = [false; 4];
+        taken[1] = true;
+        assert!(e
+            .admit(&hello(1), &taken)
+            .unwrap_err()
+            .contains("already connected"));
+
+        let not_hello = Message::CostProbe { layer: 0 };
+        assert!(e.admit(&not_hello, &[false; 4]).unwrap_err().contains("Hello"));
+    }
+
+    #[test]
+    fn transport_config_rejects_simulation_knobs() {
+        let ok = ExperimentConfig::named_dataset("satimage-small").unwrap();
+        assert!(validate_transport_config(&ok).is_ok());
+
+        let mut c = ok.clone();
+        c.exact_consensus = true;
+        assert!(validate_transport_config(&c).is_err());
+
+        let mut c = ok.clone();
+        c.schedule = "semisync".into();
+        assert!(validate_transport_config(&c)
+            .unwrap_err()
+            .to_string()
+            .contains("schedule"));
+
+        let mut c = ok.clone();
+        c.adaptive_delta = Some(1e-6);
+        assert!(validate_transport_config(&c)
+            .unwrap_err()
+            .to_string()
+            .contains("adaptive-delta"));
+
+        let mut c = ok.clone();
+        c.iter_staleness = 2;
+        assert!(validate_transport_config(&c)
+            .unwrap_err()
+            .to_string()
+            .contains("iter-staleness"));
+
+        let mut c = ok.clone();
+        c.straggler_sigma = 0.5;
+        assert!(validate_transport_config(&c)
+            .unwrap_err()
+            .to_string()
+            .contains("straggler"));
+
+        let mut c = ok.clone();
+        c.chaos_crash_p = 0.1;
+        assert!(validate_transport_config(&c)
+            .unwrap_err()
+            .to_string()
+            .contains("chaos"));
+    }
+}

@@ -1,0 +1,423 @@
+//! The typed message set of the serve/worker protocol, plus the
+//! handshake fingerprints.
+//!
+//! Messages are encoded with the checkpoint v5 streaming codec
+//! ([`Encoder`]/[`Decoder`]) straight into the connection's scratch
+//! buffer — one `Vec<u8>` per connection serves both directions, no
+//! double-buffering. Every message starts with a one-byte tag; matrices
+//! ride in the checkpoint's `rows, cols, f64-LE…` layout, which is what
+//! makes the wire bit-transparent: the `f64` a worker computed is the
+//! `f64` the server averages.
+//!
+//! ## Protocol sketch (server-driven; the worker is a pure reactor)
+//!
+//! ```text
+//! worker                         server
+//!   Hello ───────────────────────▶        handshake: version, config
+//!         ◀─────────────── Welcome         fingerprint, task checksum,
+//!         ◀──────────────(Reject)          shard index all validated
+//!
+//!         ◀────────────────── Step        per ADMM iteration
+//!   Share ───────────────────────▶        (S_m = O_m + Λ_m, Q×n)
+//!         ◀───────────────── Mixed        gossip-averaged share
+//!   Cost  ───────────────────────▶        (when curves are recorded)
+//!
+//!         ◀───────────── CostProbe        layer end without curves
+//!   Cost  ───────────────────────▶
+//!         ◀─────────────── Advance        build W_l, forward features
+//!
+//!         ◀─────────────── CatchUp        rejoin: weight stack replay
+//! ```
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::{Decoder, Encoder};
+use crate::linalg::Matrix;
+use crate::transport::{frame, Conn};
+use crate::{Error, Result};
+
+/// Bumped on any incompatible change to the message set or handshake.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// One protocol message. Tags are stable wire constants; see the module
+/// docs for the exchange pattern.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    /// Worker → server greeting carrying everything the server needs to
+    /// admit or reject the peer with a precise reason.
+    Hello {
+        protocol: u32,
+        shard: u64,
+        nodes: u64,
+        config_fp: u64,
+        task_checksum: u64,
+    },
+    /// Server → worker: admitted.
+    Welcome { protocol: u32 },
+    /// Server → worker: refused, with the mismatch spelled out.
+    Reject { reason: String },
+    /// Server → worker: run one ADMM O-update for `(layer, iteration)`
+    /// (preparing the layer solver first if this is iteration 0) and
+    /// reply with [`Message::Share`].
+    Step { layer: u64, iteration: u64 },
+    /// Worker → server: the staged share `S_m = O_m + Λ_m`.
+    Share { layer: u64, iteration: u64, s: Matrix },
+    /// Server → worker: the gossip-averaged share to absorb
+    /// (`Z = Π_ε(s)`, dual ascent). When `last_iter` and curves are on,
+    /// the worker replies with [`Message::Cost`].
+    Mixed {
+        layer: u64,
+        iteration: u64,
+        last_iter: bool,
+        s: Matrix,
+    },
+    /// Worker → server: local cost `‖T_m − Z_m Y_m‖²_F`.
+    Cost {
+        layer: u64,
+        iteration: u64,
+        cost: f64,
+    },
+    /// Server → worker: report the current layer cost (used at layer end
+    /// when per-iteration curves are disabled).
+    CostProbe { layer: u64 },
+    /// Server → worker: the layer is done — build `W_l` from the local
+    /// `Z_m` and the shared random matrix, forward the features. `last`
+    /// means the run is over after this.
+    Advance { layer: u64, last: bool },
+    /// Server → worker: rejoin payload. Replay the raw shard features
+    /// through `weights`, prepare the layer solver, then adopt the
+    /// consensus share `s` (`Z = Π_ε(s)`, `Λ = 0`, `O = 0`) and resume
+    /// at `(layer, iteration)`.
+    CatchUp {
+        layer: u64,
+        iteration: u64,
+        weights: Vec<Matrix>,
+        s: Matrix,
+    },
+}
+
+impl Message {
+    /// Compact variant name for diagnostics (a Debug dump would print
+    /// whole matrices).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Message::Hello { .. } => "Hello",
+            Message::Welcome { .. } => "Welcome",
+            Message::Reject { .. } => "Reject",
+            Message::Step { .. } => "Step",
+            Message::Share { .. } => "Share",
+            Message::Mixed { .. } => "Mixed",
+            Message::Cost { .. } => "Cost",
+            Message::CostProbe { .. } => "CostProbe",
+            Message::Advance { .. } => "Advance",
+            Message::CatchUp { .. } => "CatchUp",
+        }
+    }
+
+    /// Serialize into `buf` (cleared first; capacity reused).
+    pub fn encode_into(&self, buf: &mut Vec<u8>) -> Result<()> {
+        buf.clear();
+        let mut e = Encoder::new(&mut *buf);
+        match self {
+            Message::Hello {
+                protocol,
+                shard,
+                nodes,
+                config_fp,
+                task_checksum,
+            } => {
+                e.u8(1)?;
+                e.u32(*protocol)?;
+                e.u64(*shard)?;
+                e.u64(*nodes)?;
+                e.u64(*config_fp)?;
+                e.u64(*task_checksum)?;
+            }
+            Message::Welcome { protocol } => {
+                e.u8(2)?;
+                e.u32(*protocol)?;
+            }
+            Message::Reject { reason } => {
+                e.u8(3)?;
+                e.string(reason)?;
+            }
+            Message::Step { layer, iteration } => {
+                e.u8(4)?;
+                e.u64(*layer)?;
+                e.u64(*iteration)?;
+            }
+            Message::Share { layer, iteration, s } => {
+                e.u8(5)?;
+                e.u64(*layer)?;
+                e.u64(*iteration)?;
+                e.matrix(s)?;
+            }
+            Message::Mixed {
+                layer,
+                iteration,
+                last_iter,
+                s,
+            } => {
+                e.u8(6)?;
+                e.u64(*layer)?;
+                e.u64(*iteration)?;
+                e.u8(u8::from(*last_iter))?;
+                e.matrix(s)?;
+            }
+            Message::Cost {
+                layer,
+                iteration,
+                cost,
+            } => {
+                e.u8(7)?;
+                e.u64(*layer)?;
+                e.u64(*iteration)?;
+                e.f64(*cost)?;
+            }
+            Message::CostProbe { layer } => {
+                e.u8(8)?;
+                e.u64(*layer)?;
+            }
+            Message::Advance { layer, last } => {
+                e.u8(9)?;
+                e.u64(*layer)?;
+                e.u8(u8::from(*last))?;
+            }
+            Message::CatchUp {
+                layer,
+                iteration,
+                weights,
+                s,
+            } => {
+                e.u8(10)?;
+                e.u64(*layer)?;
+                e.u64(*iteration)?;
+                e.matrices(weights)?;
+                e.matrix(s)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse one message from a complete frame payload. Any malformed
+    /// input — unknown tag, truncated fields, trailing bytes, bad bool —
+    /// is a clean [`Error::Network`], never a panic.
+    pub fn decode(buf: &[u8]) -> Result<Message> {
+        Self::decode_inner(buf).map_err(|e| match e {
+            Error::Checkpoint(m) => Error::Network(format!("bad frame: {m}")),
+            Error::Io(e) => Error::Network(format!("bad frame: {e}")),
+            other => other,
+        })
+    }
+
+    fn decode_inner(buf: &[u8]) -> Result<Message> {
+        let mut d = Decoder::new(buf);
+        let tag = d.u8()?;
+        let msg = match tag {
+            1 => Message::Hello {
+                protocol: d.u32()?,
+                shard: d.u64()?,
+                nodes: d.u64()?,
+                config_fp: d.u64()?,
+                task_checksum: d.u64()?,
+            },
+            2 => Message::Welcome { protocol: d.u32()? },
+            3 => Message::Reject { reason: d.string()? },
+            4 => Message::Step {
+                layer: d.u64()?,
+                iteration: d.u64()?,
+            },
+            5 => Message::Share {
+                layer: d.u64()?,
+                iteration: d.u64()?,
+                s: d.matrix()?,
+            },
+            6 => Message::Mixed {
+                layer: d.u64()?,
+                iteration: d.u64()?,
+                last_iter: decode_bool(d.u8()?)?,
+                s: d.matrix()?,
+            },
+            7 => Message::Cost {
+                layer: d.u64()?,
+                iteration: d.u64()?,
+                cost: d.f64()?,
+            },
+            8 => Message::CostProbe { layer: d.u64()? },
+            9 => Message::Advance {
+                layer: d.u64()?,
+                last: decode_bool(d.u8()?)?,
+            },
+            10 => Message::CatchUp {
+                layer: d.u64()?,
+                iteration: d.u64()?,
+                weights: d.matrices()?,
+                s: d.matrix()?,
+            },
+            t => {
+                return Err(Error::Network(format!("bad frame: unknown message tag {t}")))
+            }
+        };
+        d.finish()
+            .map_err(|_| Error::Network("bad frame: trailing bytes after message".into()))?;
+        Ok(msg)
+    }
+}
+
+fn decode_bool(b: u8) -> Result<bool> {
+    match b {
+        0 => Ok(false),
+        1 => Ok(true),
+        t => Err(Error::Network(format!("bad frame: bad bool tag {t}"))),
+    }
+}
+
+/// Encode `msg` into `scratch` and ship it as one frame.
+pub fn send(conn: &mut dyn Conn, scratch: &mut Vec<u8>, msg: &Message) -> Result<()> {
+    msg.encode_into(scratch)?;
+    frame::write_frame(conn, scratch)
+}
+
+/// Receive one frame into `scratch` and parse it.
+pub fn recv(conn: &mut dyn Conn, scratch: &mut Vec<u8>) -> Result<Message> {
+    frame::read_frame(conn, scratch)?;
+    Message::decode(scratch)
+}
+
+/// FNV-1a 64 over the canonical encoding of every config field that
+/// shapes the math. Server and workers must agree on all of these for
+/// the runs to be bit-identical, so the handshake compares fingerprints
+/// instead of trusting the operator to pass identical flags. Display
+/// knobs (`--verbose`, `--csv`, artifact paths) are deliberately
+/// excluded; `record_cost_curve` is included because it changes what the
+/// workers compute per iteration.
+pub fn config_fingerprint(cfg: &ExperimentConfig) -> u64 {
+    let mut h = Fnv1a::new();
+    h.bytes(cfg.dataset.as_bytes());
+    h.u64(cfg.dataset.len() as u64);
+    h.u64(cfg.seed);
+    h.u64(cfg.layers as u64);
+    h.u64(cfg.hidden_extra as u64);
+    h.u64(cfg.admm_iterations as u64);
+    h.u64(cfg.mu0.to_bits());
+    h.u64(cfg.mul.to_bits());
+    match cfg.eps {
+        None => h.u64(0),
+        Some(e) => {
+            h.u64(1);
+            h.u64(e.to_bits());
+        }
+    }
+    h.u64(cfg.nodes as u64);
+    h.u64(cfg.degree as u64);
+    h.u64(cfg.delta.to_bits());
+    h.u64(cfg.alpha.to_bits());
+    h.u64(cfg.beta.to_bits());
+    h.u64(u64::from(cfg.record_cost_curve));
+    h.finish()
+}
+
+struct Fnv1a(u64);
+
+impl Fnv1a {
+    fn new() -> Self {
+        Self(0xcbf2_9ce4_8422_2325)
+    }
+    fn bytes(&mut self, b: &[u8]) {
+        for &byte in b {
+            self.0 ^= u64::from(byte);
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_messages() -> Vec<Message> {
+        let m = Matrix::from_fn(2, 3, |i, j| (i * 3 + j) as f64 - 2.5);
+        vec![
+            Message::Hello {
+                protocol: PROTOCOL_VERSION,
+                shard: 3,
+                nodes: 10,
+                config_fp: 0xDEAD_BEEF,
+                task_checksum: 42,
+            },
+            Message::Welcome {
+                protocol: PROTOCOL_VERSION,
+            },
+            Message::Reject {
+                reason: "who are you".into(),
+            },
+            Message::Step {
+                layer: 2,
+                iteration: 7,
+            },
+            Message::Share {
+                layer: 2,
+                iteration: 7,
+                s: m.clone(),
+            },
+            Message::Mixed {
+                layer: 2,
+                iteration: 7,
+                last_iter: true,
+                s: m.clone(),
+            },
+            Message::Cost {
+                layer: 2,
+                iteration: 7,
+                cost: 1.25,
+            },
+            Message::CostProbe { layer: 2 },
+            Message::Advance {
+                layer: 2,
+                last: false,
+            },
+            Message::CatchUp {
+                layer: 2,
+                iteration: 7,
+                weights: vec![m.clone(), m.clone()],
+                s: m,
+            },
+        ]
+    }
+
+    #[test]
+    fn every_message_roundtrips() {
+        let mut buf = Vec::new();
+        for msg in sample_messages() {
+            msg.encode_into(&mut buf).unwrap();
+            assert_eq!(Message::decode(&buf).unwrap(), msg);
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_and_unknown_tags_are_errors() {
+        let mut buf = Vec::new();
+        Message::CostProbe { layer: 1 }.encode_into(&mut buf).unwrap();
+        buf.push(0);
+        assert!(Message::decode(&buf).is_err());
+        assert!(Message::decode(&[99]).is_err());
+        assert!(Message::decode(&[]).is_err());
+    }
+
+    #[test]
+    fn fingerprint_tracks_math_knobs_only() {
+        let a = ExperimentConfig::named_dataset("satimage-small").unwrap();
+        let mut b = a.clone();
+        assert_eq!(config_fingerprint(&a), config_fingerprint(&b));
+        b.seed += 1;
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&b));
+        let mut c = a.clone();
+        c.artifacts_dir = "elsewhere".into();
+        assert_eq!(config_fingerprint(&a), config_fingerprint(&c));
+    }
+}

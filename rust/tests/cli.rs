@@ -276,6 +276,64 @@ fn unused_comm_flags_are_rejected_not_ignored() {
     assert!(text.contains("straggler(σ=0.5)"), "{text}");
 }
 
+#[test]
+fn transport_flags_validate() {
+    // Transport flags conflict with --resume like every training flag.
+    for args in [
+        ["train", "--resume", "nope.ckpt", "--bind", "127.0.0.1:0"],
+        ["train", "--resume", "nope.ckpt", "--shard", "1"],
+        ["train", "--resume", "nope.ckpt", "--min-clients", "2"],
+    ] {
+        let out = dssfn().args(args).output().unwrap();
+        assert!(!out.status.success());
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains("cannot be combined"), "stderr: {err}");
+    }
+
+    // serve/worker run the real wire: simulated relaxations are refused
+    // before any socket work.
+    let out = dssfn()
+        .args([
+            "worker", "--connect", "127.0.0.1:1", "--shard", "0",
+            "--dataset", "quickstart", "--schedule", "lossy",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("simulation-only"));
+    let out = dssfn()
+        .args([
+            "serve", "--bind", "127.0.0.1:0", "--dataset", "quickstart",
+            "--exact-consensus",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("gossip consensus"));
+
+    // Missing required transport flags fail fast.
+    let out = dssfn().args(["serve", "--dataset", "quickstart"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--bind"));
+    let out = dssfn()
+        .args(["worker", "--connect", "127.0.0.1:1", "--dataset", "quickstart"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--shard"));
+
+    // A shard outside 0..M is refused before connecting anywhere.
+    let out = dssfn()
+        .args([
+            "worker", "--connect", "127.0.0.1:1", "--shard", "99",
+            "--dataset", "quickstart",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("out of range"));
+}
+
 /// The committed `docs/CLI.md` is exactly what the binary generates —
 /// the flag table, the usage text and the doc share one source, so they
 /// cannot drift.

@@ -1,0 +1,428 @@
+//! Integration: the wire transport (`serve`/`worker`) over the
+//! in-process loopback.
+//!
+//! The determinism bar: a fault-free loopback run — full framing,
+//! handshake, rendezvous, per-round barrier — must be *bit-identical*
+//! to the in-process synchronous run at the same seed. Plus the
+//! checkpoint-fuzz-style hostility suite for the frame/message codec
+//! (truncation at every byte, hostile length prefixes, seeded
+//! bit-flips: always a clean `Err`, never a panic or an unbounded
+//! allocation), and the crash/rejoin semantics driven through real
+//! worker reactors.
+
+use dssfn::config::ExperimentConfig;
+use dssfn::linalg::Matrix;
+use dssfn::session::{StepEvent, TrainSession};
+use dssfn::transport::{
+    duplex, frame, run_worker_with, wire, Conn, LoopbackListener, Message, ServeAlgorithm,
+    ServeOptions, WorkerOptions, WorkerSummary, PROTOCOL_VERSION,
+};
+use dssfn::util::{Rng, SplitMix64};
+use dssfn::{Error, Result};
+use std::cell::RefCell;
+use std::io::Read;
+use std::thread;
+
+fn toy_config() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::named_dataset("quickstart").unwrap();
+    cfg.seed = 0xBEEF;
+    cfg.nodes = 4;
+    cfg.degree = 1;
+    cfg.layers = 2;
+    cfg.admm_iterations = 6;
+    cfg
+}
+
+/// A connect factory that hands out one pre-pushed loopback pair, then
+/// errors (the fault-free tests never reconnect).
+fn one_shot(listener: &LoopbackListener) -> impl FnMut() -> Result<Box<dyn Conn>> {
+    let (server_end, worker_end) = duplex();
+    listener.push(Box::new(server_end));
+    let mut end = Some(worker_end);
+    move || {
+        end.take()
+            .map(|e| Box::new(e) as Box<dyn Conn>)
+            .ok_or_else(|| Error::Network("one-shot loopback conn already used".into()))
+    }
+}
+
+#[test]
+fn loopback_run_is_bit_identical_to_in_process() {
+    let cfg = toy_config();
+
+    // Reference: the ordinary in-process synchronous run.
+    let session = cfg.session_builder().unwrap().build().unwrap();
+    let (ref_model, ref_report) = session.run_to_completion().unwrap();
+    let ref_model = ref_model.into_ssfn().unwrap();
+
+    // Wire: one server, M worker reactors on threads, loopback pipes.
+    let listener = LoopbackListener::new();
+    let mut handles = Vec::new();
+    for shard in 0..cfg.nodes {
+        let connect = one_shot(&listener);
+        let cfg_w = cfg.clone();
+        handles.push(thread::spawn(move || {
+            run_worker_with(
+                &cfg_w,
+                WorkerOptions {
+                    shard,
+                    ..WorkerOptions::default()
+                },
+                connect,
+            )
+        }));
+    }
+    let algo = ServeAlgorithm::new(&cfg, Box::new(listener), ServeOptions::default()).unwrap();
+    let session = TrainSession::from_algorithm(Box::new(algo));
+    let (model, report) = session.run_to_completion().unwrap();
+    let model = model.into_ssfn().unwrap();
+    for h in handles {
+        let summary = h.join().unwrap().unwrap();
+        assert_eq!(summary.layers, report.layers.len());
+    }
+
+    // Bit-identical: weights, output, cost curve, headline metrics.
+    assert_eq!(model.weights().len(), ref_model.weights().len());
+    for (w, r) in model.weights().iter().zip(ref_model.weights()) {
+        assert_eq!(w.max_abs_diff(r), 0.0);
+    }
+    assert_eq!(model.output().max_abs_diff(ref_model.output()), 0.0);
+    assert_eq!(report.full_cost_curve(), ref_report.full_cost_curve());
+    assert_eq!(
+        report.test_accuracy.to_bits(),
+        ref_report.test_accuracy.to_bits()
+    );
+    // Both sides charge the same simulated ledger (only consensus
+    // averaging is billed; the wire itself is real, not simulated).
+    assert_eq!(report.comm_total.bytes, ref_report.comm_total.bytes);
+}
+
+#[test]
+fn handshake_rejects_mismatches_cleanly() {
+    let mut cfg = toy_config();
+    cfg.nodes = 2;
+    cfg.layers = 1;
+    cfg.admm_iterations = 3;
+
+    let listener = LoopbackListener::new();
+    let l = listener.clone();
+    let cfg_s = cfg.clone();
+    let server = thread::spawn(move || -> Result<()> {
+        let algo = ServeAlgorithm::new(&cfg_s, Box::new(l), ServeOptions::default())?;
+        TrainSession::from_algorithm(Box::new(algo)).run_to_completion()?;
+        Ok(())
+    });
+
+    // A future protocol version is named in the rejection.
+    let (mut we, se) = duplex();
+    listener.push(Box::new(se));
+    let mut scratch = Vec::new();
+    wire::send(
+        &mut we,
+        &mut scratch,
+        &Message::Hello {
+            protocol: PROTOCOL_VERSION + 1,
+            shard: 0,
+            nodes: 2,
+            config_fp: 0,
+            task_checksum: 0,
+        },
+    )
+    .unwrap();
+    match wire::recv(&mut we, &mut scratch).unwrap() {
+        Message::Reject { reason } => {
+            assert!(reason.contains("protocol version"), "{reason}")
+        }
+        other => panic!("expected Reject, got {other:?}"),
+    }
+    drop(we);
+
+    // A different seed changes the config fingerprint: fatal, named.
+    let mut bad = cfg.clone();
+    bad.seed ^= 1;
+    let err = run_worker_with(&bad, WorkerOptions::default(), one_shot(&listener)).unwrap_err();
+    assert!(err.to_string().contains("config fingerprint"), "{err}");
+
+    // A different cluster size is named before the fingerprint.
+    let mut bad = cfg.clone();
+    bad.nodes = 3;
+    let err = run_worker_with(&bad, WorkerOptions::default(), one_shot(&listener)).unwrap_err();
+    assert!(err.to_string().contains("cluster size"), "{err}");
+
+    // An out-of-range shard never even connects.
+    let err = run_worker_with(
+        &cfg,
+        WorkerOptions {
+            shard: 2,
+            ..WorkerOptions::default()
+        },
+        || Err(Error::Network("must not connect".into())),
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("out of range"), "{err}");
+
+    // The server survived every reject: real workers complete the run.
+    let mut handles = Vec::new();
+    for shard in 0..cfg.nodes {
+        let connect = one_shot(&listener);
+        let cfg_w = cfg.clone();
+        handles.push(thread::spawn(move || {
+            run_worker_with(
+                &cfg_w,
+                WorkerOptions {
+                    shard,
+                    ..WorkerOptions::default()
+                },
+                connect,
+            )
+        }));
+    }
+    server.join().unwrap().unwrap();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+}
+
+#[test]
+fn absent_worker_rejoins_via_catch_up() {
+    let mut cfg = toy_config();
+    cfg.nodes = 2;
+
+    let listener = LoopbackListener::new();
+    // Worker 0 is present from the start; shard 1 stays dark.
+    let connect0 = one_shot(&listener);
+    let cfg0 = cfg.clone();
+    let worker0 = thread::spawn(move || {
+        run_worker_with(
+            &cfg0,
+            WorkerOptions {
+                shard: 0,
+                ..WorkerOptions::default()
+            },
+            connect0,
+        )
+    });
+
+    let events: RefCell<Vec<StepEvent>> = RefCell::new(Vec::new());
+    let worker1: RefCell<Option<thread::JoinHandle<Result<WorkerSummary>>>> = RefCell::new(None);
+    // With a quorum of 1, rendezvous proceeds with shard 1 treated as
+    // crashed-from-the-start (restricted mixing over the live set).
+    let algo = ServeAlgorithm::new(
+        &cfg,
+        Box::new(listener.clone()),
+        ServeOptions {
+            min_clients: 1,
+            io_timeout: None,
+        },
+    )
+    .unwrap();
+    let mut session = TrainSession::from_algorithm(Box::new(algo));
+    session.observe_fn(|ev| {
+        events.borrow_mut().push(*ev);
+        // Deterministic mid-run rejoin: once iteration 2 of layer 0 has
+        // completed, shard 1 connects and is caught up by the server.
+        if let StepEvent::AdmmIteration {
+            layer: 0,
+            iteration: 2,
+            ..
+        } = ev
+        {
+            if worker1.borrow().is_none() {
+                let connect1 = one_shot(&listener);
+                let cfg1 = cfg.clone();
+                *worker1.borrow_mut() = Some(thread::spawn(move || {
+                    run_worker_with(
+                        &cfg1,
+                        WorkerOptions {
+                            shard: 1,
+                            ..WorkerOptions::default()
+                        },
+                        connect1,
+                    )
+                }));
+            }
+        }
+    });
+    let (model, report) = session.finish().unwrap();
+    drop(session);
+
+    let summary0 = worker0.join().unwrap().unwrap();
+    let summary1 = worker1
+        .into_inner()
+        .expect("rejoin never triggered")
+        .join()
+        .unwrap()
+        .unwrap();
+    assert_eq!(summary0.layers, report.layers.len());
+    assert_eq!(summary1.layers, report.layers.len());
+
+    let evs = events.into_inner();
+    assert!(
+        evs.iter()
+            .any(|e| matches!(e, StepEvent::NodeDropped { node: 1, .. })),
+        "missing NodeDropped for the absent shard"
+    );
+    assert!(
+        evs.iter()
+            .any(|e| matches!(e, StepEvent::NodeRejoined { node: 1, .. })),
+        "missing NodeRejoined after the catch-up"
+    );
+
+    let model = model.into_ssfn().unwrap();
+    assert_eq!(report.layers.len(), 2);
+    assert!(report.test_accuracy.is_finite());
+    assert!(model.output().frobenius_norm_sq().is_finite());
+}
+
+// ---- frame/message hostility suite (checkpoint-fuzz style) ----
+
+fn sample_messages() -> Vec<Message> {
+    vec![
+        Message::Hello {
+            protocol: PROTOCOL_VERSION,
+            shard: 3,
+            nodes: 8,
+            config_fp: 0x1234_5678_9abc_def0,
+            task_checksum: 0x0fed_cba9_8765_4321,
+        },
+        Message::Welcome {
+            protocol: PROTOCOL_VERSION,
+        },
+        Message::Reject {
+            reason: "config fingerprint mismatch".into(),
+        },
+        Message::Step {
+            layer: 1,
+            iteration: 7,
+        },
+        Message::Share {
+            layer: 1,
+            iteration: 7,
+            s: Matrix::from_fn(2, 3, |r, c| (r * 3 + c) as f64 * 0.5 - 1.0),
+        },
+        Message::Mixed {
+            layer: 1,
+            iteration: 7,
+            last_iter: true,
+            s: Matrix::from_fn(2, 3, |r, c| (r + c) as f64),
+        },
+        Message::Cost {
+            layer: 1,
+            iteration: 7,
+            cost: 42.25,
+        },
+        Message::CostProbe { layer: 1 },
+        Message::Advance {
+            layer: 1,
+            last: false,
+        },
+        Message::CatchUp {
+            layer: 2,
+            iteration: 5,
+            weights: vec![Matrix::zeros(2, 2), Matrix::from_fn(1, 4, |_, c| c as f64)],
+            s: Matrix::zeros(2, 3),
+        },
+    ]
+}
+
+fn encode_stream(msgs: &[Message]) -> Vec<u8> {
+    let mut stream = Vec::new();
+    let mut payload = Vec::new();
+    for m in msgs {
+        m.encode_into(&mut payload).unwrap();
+        frame::write_frame(&mut stream, &payload).unwrap();
+    }
+    stream
+}
+
+/// Parse messages until the bytes run out (clean boundary) or a frame /
+/// decode error. Returns how many full messages parsed and the outcome.
+fn drain(mut bytes: &[u8]) -> (usize, Result<()>) {
+    let mut buf = Vec::new();
+    let mut n = 0;
+    loop {
+        if bytes.is_empty() {
+            return (n, Ok(()));
+        }
+        match frame::read_frame(&mut bytes, &mut buf) {
+            Ok(()) => match Message::decode(&buf) {
+                Ok(_) => n += 1,
+                Err(e) => return (n, Err(e)),
+            },
+            Err(e) => return (n, Err(e)),
+        }
+    }
+}
+
+#[test]
+fn wire_stream_survives_truncation_at_every_byte() {
+    let msgs = sample_messages();
+    let stream = encode_stream(&msgs);
+    let (n, res) = drain(&stream);
+    assert_eq!(n, msgs.len());
+    res.unwrap();
+    for cut in 0..stream.len() {
+        let (n, res) = drain(&stream[..cut]);
+        // A truncated stream either errors or yields a clean strict
+        // prefix of complete frames — never a panic, never a hang.
+        assert!(
+            res.is_err() || n < msgs.len(),
+            "cut at {cut} parsed the full stream"
+        );
+    }
+}
+
+#[test]
+fn wire_stream_survives_seeded_bitflips() {
+    let msgs = sample_messages();
+    let stream = encode_stream(&msgs);
+    let mut rng = SplitMix64::new(0xF1_1F);
+    for _ in 0..300 {
+        let mut fuzzed = stream.clone();
+        let pos = (rng.next_u64() as usize) % fuzzed.len();
+        let bit = (rng.next_u64() % 8) as u8;
+        fuzzed[pos] ^= 1 << bit;
+        // Must not panic or allocate unboundedly; Err and float-payload
+        // reinterpretation are both acceptable outcomes.
+        let _ = drain(&fuzzed);
+    }
+}
+
+#[test]
+fn hostile_length_prefixes_are_rejected_without_allocation() {
+    for len in [u64::MAX, frame::MAX_FRAME + 1, 1u64 << 60] {
+        let mut bytes = len.to_le_bytes().to_vec();
+        bytes.extend_from_slice(&[0u8; 32]);
+        let mut buf = Vec::new();
+        let err = frame::read_frame(&mut &bytes[..], &mut buf).unwrap_err();
+        assert!(err.to_string().contains("cap"), "{err}");
+        assert!(buf.capacity() < 1 << 20, "hostile prefix preallocated");
+    }
+}
+
+/// A reader that trickles one byte per `read` call — frames must
+/// reassemble across arbitrarily fragmented reads.
+struct OneByte<'a>(&'a [u8]);
+
+impl Read for OneByte<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if self.0.is_empty() || buf.is_empty() {
+            return Ok(0);
+        }
+        buf[0] = self.0[0];
+        self.0 = &self.0[1..];
+        Ok(1)
+    }
+}
+
+#[test]
+fn frames_reassemble_from_one_byte_reads() {
+    let msgs = sample_messages();
+    let stream = encode_stream(&msgs);
+    let mut r = OneByte(&stream);
+    let mut buf = Vec::new();
+    for m in &msgs {
+        frame::read_frame(&mut r, &mut buf).unwrap();
+        assert_eq!(&Message::decode(&buf).unwrap(), m);
+    }
+}
