@@ -1,0 +1,307 @@
+//! Bench E8 — the scale figure: simulated seconds and shipped bytes
+//! versus cluster size M ∈ {16, 64, 256, 1024}, per topology (the
+//! paper's degree-2 ring and a random-geometric graph) and per
+//! simulated-seconds engine (the closed-form per-round charge and the
+//! discrete-event per-node simulator). The capstone of the sparse
+//! O(M·degree) gossip state: a thousand-node cluster is simulated at
+//! engine level without ever materializing a dense M×M mixing bank.
+//!
+//! ```text
+//! cargo bench --bench fig_scale [-- --max-nodes 64]
+//!                               [-- --json BENCH_fig_scale.json]
+//! ```
+//!
+//! Every run is seeded and allocation-order deterministic: two
+//! invocations with the same arguments emit byte-identical JSON (CI
+//! diffs them).
+//!
+//! Asserted invariants (the acceptance criteria of the scale PR):
+//!
+//! * the clock engine never changes the traffic: closed-form and event
+//!   runs ship byte-identical payload totals;
+//! * at σ = 0 the event engine reproduces the closed-form simulated
+//!   seconds **bit-exactly** (every node finishes every round at the
+//!   same instant, so the per-node DAG collapses to the barrier);
+//! * at σ > 0 the event clock is never slower than the closed-form
+//!   barrier — waiting only for staleness-bounded dependencies can
+//!   only hide slowness, never add it;
+//! * the mixing state is sparse: `nnz ≤ M·(max_degree+1)`, and from
+//!   M = 256 up the stored entries are under an eighth of a dense M×M
+//!   bank;
+//! * averaging is non-expansive and conserves the global mean.
+
+use dssfn::linalg::Matrix;
+use dssfn::network::{
+    CommLedger, GossipEngine, LatencyModel, MixingMatrix, NodeLatency, Topology, WeightRule,
+};
+use dssfn::util::human_secs;
+use std::sync::Arc;
+
+/// Straggler heterogeneity for the σ > 0 rows.
+const SIGMA: f64 = 0.4;
+const CORR: f64 = 0.3;
+const STRAGGLER_SEED: u64 = 7;
+/// Gossip rounds per run, split into calls so the event engine crosses
+/// averaging-call boundaries (the sampler's slack window resets there).
+const CALLS: [usize; 3] = [60, 45, 45];
+
+struct Row {
+    nodes: usize,
+    topology: &'static str,
+    clock: &'static str,
+    rounds: u64,
+    bytes: u64,
+    sim_secs: f64,
+    nnz: usize,
+    max_degree: usize,
+    lambda2: f64,
+}
+
+fn write_json(path: &str, rows: &[Row]) -> std::io::Result<()> {
+    let mut s = String::from("[\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "  {{\"nodes\": {}, \"topology\": \"{}\", \"clock\": \"{}\", \
+             \"rounds\": {}, \"bytes\": {}, \"sim_secs\": {:e}, \
+             \"nnz\": {}, \"max_degree\": {}, \"lambda2\": {:.12}}}{}\n",
+            r.nodes,
+            r.topology,
+            r.clock,
+            r.rounds,
+            r.bytes,
+            r.sim_secs,
+            r.nnz,
+            r.max_degree,
+            r.lambda2,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("]\n");
+    std::fs::write(path, s)
+}
+
+fn topology(kind: &str, m: usize) -> Topology {
+    match kind {
+        "ring" => Topology::Circular { nodes: m, degree: 2 },
+        // Radius at the connectivity threshold sqrt(ln M / M); the
+        // generator bridges any leftover components deterministically.
+        "rgg" => Topology::RandomGeometric {
+            nodes: m,
+            radius: ((m as f64).ln() / m as f64).sqrt(),
+            seed: 42,
+        },
+        other => unreachable!("unknown topology kind {other}"),
+    }
+}
+
+fn weight_rule(kind: &str) -> WeightRule {
+    match kind {
+        // The ring is regular, so the paper's equal-neighbour weights
+        // apply; the irregular RGG needs Metropolis–Hastings.
+        "ring" => WeightRule::EqualNeighbor,
+        _ => WeightRule::Metropolis,
+    }
+}
+
+fn engine(mix: MixingMatrix, sigma: f64, event: bool) -> GossipEngine {
+    let mut e = GossipEngine::new(mix, Arc::new(CommLedger::new()), LatencyModel::default());
+    if sigma > 0.0 {
+        e.set_straggler(NodeLatency { sigma, seed: STRAGGLER_SEED, corr: CORR });
+    }
+    e.set_event_clock(event);
+    e
+}
+
+/// Deterministic per-node payload bank (integer-derived, so the initial
+/// values are bit-identical across runs and platforms).
+fn values(m: usize, rows: usize, cols: usize) -> Vec<Matrix> {
+    (0..m)
+        .map(|i| {
+            Matrix::from_fn(rows, cols, |r, c| ((i * 31 + r * 7 + c * 3) % 97) as f64 - 48.0)
+        })
+        .collect()
+}
+
+fn mean_and_spread(bank: &[Matrix]) -> (f64, f64) {
+    let (r, c) = bank[0].shape();
+    let mut mean = 0.0;
+    for v in bank {
+        for i in 0..r {
+            for j in 0..c {
+                mean += v.get(i, j);
+            }
+        }
+    }
+    mean /= (bank.len() * r * c) as f64;
+    let cell_mean = |i: usize, j: usize| {
+        bank.iter().map(|v| v.get(i, j)).sum::<f64>() / bank.len() as f64
+    };
+    let mut spread: f64 = 0.0;
+    for i in 0..r {
+        for j in 0..c {
+            let cm = cell_mean(i, j);
+            for v in bank {
+                spread = spread.max((v.get(i, j) - cm).abs());
+            }
+        }
+    }
+    (mean, spread)
+}
+
+/// Drive one engine through the call schedule; returns (rounds, bytes,
+/// sim secs) plus the final value bank for the invariant checks.
+fn run(e: &GossipEngine, mut bank: Vec<Matrix>) -> dssfn::Result<(u64, u64, f64, Vec<Matrix>)> {
+    let mut rounds = 0u64;
+    for &r in &CALLS {
+        e.mix_rounds(&mut bank, r)?;
+        rounds += r as u64;
+    }
+    let snap = e.ledger().snapshot();
+    Ok((rounds, snap.bytes, e.simulated_seconds(), bank))
+}
+
+fn main() -> dssfn::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let arg = |key: &str| {
+        args.iter()
+            .position(|a| a == key)
+            .and_then(|i| args.get(i + 1))
+            .cloned()
+    };
+    let max_nodes: usize = arg("--max-nodes").and_then(|s| s.parse().ok()).unwrap_or(1024);
+    let json_path = arg("--json").unwrap_or_else(|| "BENCH_fig_scale.json".to_string());
+
+    const SIZES: [usize; 4] = [16, 64, 256, 1024];
+    let sizes: Vec<usize> = SIZES.iter().copied().filter(|&m| m <= max_nodes).collect();
+    assert!(!sizes.is_empty(), "--max-nodes below the smallest size 16");
+
+    println!(
+        "FIG_SCALE: M in {sizes:?}, topologies [ring(d=2), rgg], \
+         {} rounds/run, payload 8x16 f64/node, sigma={SIGMA}",
+        CALLS.iter().sum::<usize>()
+    );
+    println!(
+        "{:>6} {:>6} {:>12} {:>7} {:>8} {:>10} {:>14} {:>14}",
+        "M", "topo", "nnz", "maxdeg", "lambda2", "MiB", "sim closed", "sim event"
+    );
+
+    let mut rows: Vec<Row> = Vec::new();
+    for &m in &sizes {
+        for kind in ["ring", "rgg"] {
+            let topo = topology(kind, m);
+            let mix = MixingMatrix::build(&topo, weight_rule(kind))?;
+            let (nnz, lambda2) = (mix.nnz(), mix.lambda2());
+            let max_degree = (0..m)
+                .map(|i| mix.neighbors(i).0.len() - 1)
+                .max()
+                .unwrap_or(0);
+            // Sparse by construction: O(M·degree) stored entries, and a
+            // real win over a dense M×M bank from 256 nodes up.
+            assert!(
+                nnz <= m * (max_degree + 1),
+                "{kind}/M={m}: nnz {nnz} exceeds M*(maxdeg+1)"
+            );
+            if m >= 256 {
+                assert!(
+                    8 * nnz < m * m,
+                    "{kind}/M={m}: nnz {nnz} is not sparse against a dense bank"
+                );
+            }
+
+            // σ = 0 clock agreement, bit-exact. A 1×1 payload suffices:
+            // the clock charge depends on rounds and bytes, and both
+            // engines see the same ones.
+            let cf0 = engine(mix.clone(), 0.0, false);
+            let ev0 = engine(mix.clone(), 0.0, true);
+            let (_, _, t_cf0, _) = run(&cf0, values(m, 1, 1))?;
+            let (_, _, t_ev0, _) = run(&ev0, values(m, 1, 1))?;
+            assert!(
+                t_cf0.to_bits() == t_ev0.to_bits(),
+                "{kind}/M={m}: sigma=0 event clock {t_ev0} != closed-form {t_cf0}"
+            );
+
+            // σ > 0: the recorded rows. Same seeded straggler stream on
+            // both engines; only the charging model differs.
+            let (mean0, spread0) = mean_and_spread(&values(m, 8, 16));
+            let cf = engine(mix.clone(), SIGMA, false);
+            let ev = engine(mix.clone(), SIGMA, true);
+            let (rounds, bytes_cf, t_cf, bank_cf) = run(&cf, values(m, 8, 16))?;
+            let (_, bytes_ev, t_ev, bank_ev) = run(&ev, values(m, 8, 16))?;
+            assert_eq!(
+                bytes_cf, bytes_ev,
+                "{kind}/M={m}: the clock engine changed the traffic"
+            );
+            assert!(
+                t_ev <= t_cf,
+                "{kind}/M={m}: event clock {t_ev} slower than the barrier {t_cf}"
+            );
+            assert!(t_ev > 0.0, "{kind}/M={m}: event clock never advanced");
+            // The mixing math is clock-independent and doubly
+            // stochastic: identical banks, conserved mean, shrunk (or
+            // at worst unchanged) spread.
+            for (a, b) in bank_cf.iter().zip(&bank_ev) {
+                assert!(
+                    a.max_abs_diff(b) == 0.0,
+                    "{kind}/M={m}: clock engine changed the averaging"
+                );
+            }
+            let (mean1, spread1) = mean_and_spread(&bank_cf);
+            assert!(
+                (mean1 - mean0).abs() <= 1e-8 * mean0.abs().max(1.0),
+                "{kind}/M={m}: mean drifted {mean0} -> {mean1}"
+            );
+            assert!(
+                spread1 <= spread0,
+                "{kind}/M={m}: spread grew {spread0} -> {spread1}"
+            );
+
+            println!(
+                "{:>6} {:>6} {:>12} {:>7} {:>8.5} {:>10.3} {:>14} {:>14}",
+                m,
+                kind,
+                nnz,
+                max_degree,
+                lambda2,
+                bytes_cf as f64 / (1u64 << 20) as f64,
+                human_secs(t_cf),
+                human_secs(t_ev),
+            );
+            for (clock, bytes, sim_secs) in
+                [("closed-form", bytes_cf, t_cf), ("event", bytes_ev, t_ev)]
+            {
+                rows.push(Row {
+                    nodes: m,
+                    topology: kind,
+                    clock,
+                    rounds,
+                    bytes,
+                    sim_secs,
+                    nnz,
+                    max_degree,
+                    lambda2,
+                });
+            }
+        }
+    }
+
+    // Traffic grows with the cluster: more nodes ship more bytes per
+    // round on both topologies.
+    for kind in ["ring", "rgg"] {
+        let per_m: Vec<u64> = sizes
+            .iter()
+            .map(|&m| {
+                rows.iter()
+                    .find(|r| r.nodes == m && r.topology == kind && r.clock == "event")
+                    .expect("row recorded")
+                    .bytes
+            })
+            .collect();
+        for w in per_m.windows(2) {
+            assert!(w[1] > w[0], "{kind}: bytes fell as M grew: {per_m:?}");
+        }
+    }
+
+    write_json(&json_path, &rows).map_err(dssfn::Error::Io)?;
+    eprintln!("wrote {json_path} ({} rows)", rows.len());
+    Ok(())
+}

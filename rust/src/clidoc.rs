@@ -96,6 +96,8 @@ pub const FLAGS: &[Flag] = &[
         toml: "network.chaos_seed", help: "seed of the membership churn stream (crash, rejoin and backoff draws)" },
     Flag { name: "--min-nodes", value: "Q", commands: "train sweep info", default: "1",
         toml: "network.min_nodes", help: "quorum: averaging stalls (sim-time accrues, no traffic) while fewer than Q nodes are live" },
+    Flag { name: "--clock", value: "closed-form|event", commands: "train sweep info", default: "closed-form",
+        toml: "network.clock", help: "simulated-seconds engine: the closed-form per-round charge, or the per-node discrete-event simulator (each node waits only for its own staleness-bounded dependencies)" },
     Flag { name: "--backend", value: "native|pjrt", commands: "train info", default: "native",
         toml: "runtime.backend", help: "compute backend for the dense kernels" },
     Flag { name: "--artifacts", value: "DIR", commands: "train info", default: "artifacts",
@@ -204,6 +206,12 @@ pub const CONFLICTS: &[Conflict] = &[
         names: "chaos_crash_p" },
     Conflict { knob: "`--min-nodes`", rejected_when: "`--chaos-crash-p` is 0, Q = 0, or Q > M",
         names: "min_nodes" },
+    Conflict { knob: "`--clock event`", rejected_when: "`--exact-consensus` is set (exact averaging schedules no gossip rounds)",
+        names: "exact_consensus" },
+    Conflict { knob: "`--clock event`", rejected_when: "schedule is `lossy` (a dropped edge has no completion event)",
+        names: "lossy" },
+    Conflict { knob: "`--clock event`", rejected_when: "`--chaos-crash-p` is set (churn reshapes the dependency DAG mid-call)",
+        names: "fault injection" },
     Conflict { knob: "`--checkpoint-every`", rejected_when: "`--checkpoint` is not set, or K = 0",
         names: "checkpoint" },
     Conflict { knob: "any training flag", rejected_when: "`--resume` is set (the checkpoint carries the configuration)",
@@ -216,7 +224,7 @@ pub const CONFLICTS: &[Conflict] = &[
         names: "gossip consensus" },
     Conflict { knob: "`--backend pjrt`", rejected_when: "under `serve`/`worker` (bit-identical f64s need one backend everywhere)",
         names: "native" },
-    Conflict { knob: "`--schedule semisync|lossy`, `--adaptive-delta`, `--iter-staleness`, `--straggler-sigma`, `--chaos-crash-p`", rejected_when: "under `serve`/`worker` (relaxations are simulated; wire faults come from real processes)",
+    Conflict { knob: "`--schedule semisync|lossy`, `--adaptive-delta`, `--iter-staleness`, `--straggler-sigma`, `--chaos-crash-p`, `--clock event`", rejected_when: "under `serve`/`worker` (relaxations are simulated; wire faults come from real processes)",
         names: "simulation-only" },
 ];
 

@@ -39,6 +39,7 @@
 //! chaos_rejoin_p = 0.5     # per-averaging rejoin probability for crashed nodes
 //! chaos_seed = 7           # seed of the membership churn stream
 //! min_nodes = 2            # quorum: averaging stalls below this live count
+//! clock = "closed-form"    # simulated-seconds engine: "closed-form" or "event"
 //! alpha = 0.001
 //! beta = 125000000.0
 //!
@@ -137,6 +138,11 @@ pub struct ExperimentConfig {
     /// traffic) while fewer than this many nodes are live. `None`
     /// leaves the gate at 1 (never stall).
     pub min_nodes: Option<usize>,
+    /// Which engine charges simulated seconds per gossip round:
+    /// `"closed-form"` (the default scalar critical-path formula) or
+    /// `"event"` (the discrete-event simulator with per-node
+    /// round-completion events).
+    pub clock: String,
     /// Use exact averaging instead of gossip (ablation).
     pub exact_consensus: bool,
     /// α of the latency model (s/round).
@@ -181,6 +187,7 @@ impl Default for ExperimentConfig {
             chaos_rejoin_p: 0.0,
             chaos_seed: 0,
             min_nodes: None,
+            clock: "closed-form".into(),
             exact_consensus: false,
             alpha: 1e-3,
             beta: 125e6,
@@ -268,6 +275,10 @@ impl ExperimentConfig {
             "network.chaos_rejoin_p" => self.chaos_rejoin_p = num(key, value)?,
             "network.chaos_seed" => self.chaos_seed = num(key, value)?,
             "network.min_nodes" => self.min_nodes = Some(num(key, value)?),
+            "network.clock" => {
+                crate::simulator::SimClock::parse(value)?; // validate early
+                self.clock = value.to_string();
+            }
             "network.exact_consensus" => self.exact_consensus = num(key, value)?,
             "network.alpha" => self.alpha = num(key, value)?,
             "network.beta" => self.beta = num(key, value)?,
@@ -435,6 +446,7 @@ impl ExperimentConfig {
             None => 1,
         };
         let iter_schedule = parse_iter_schedule(&self.iter_schedule)?;
+        let clock = crate::simulator::SimClock::parse(&self.clock)?;
         let adaptive_delta = match self.adaptive_delta {
             Some(max_delta) => Some(AdaptiveDeltaPolicy {
                 max_delta,
@@ -491,6 +503,14 @@ impl ExperimentConfig {
                         .into(),
                 ));
             }
+            if clock.is_event() {
+                return Err(Error::Config(
+                    "clock = \"event\" applies to gossip consensus only \
+                     (exact_consensus is set): exact averaging simulates \
+                     no per-node gossip rounds to schedule"
+                        .into(),
+                ));
+            }
         }
         let comm = crate::network::CommConfig {
             schedule,
@@ -508,6 +528,7 @@ impl ExperimentConfig {
                 seed: self.chaos_seed,
                 min_nodes,
             },
+            clock,
         };
         if !self.exact_consensus {
             comm.validate_with_iterations(
@@ -569,6 +590,7 @@ impl ExperimentConfig {
                 .iter_staleness(comm.iter_staleness)
                 .iter_schedule(comm.iter_schedule)
                 .chaos(comm.chaos)
+                .clock(comm.clock)
         };
         if let Some(policy) = comm.adaptive_delta {
             b = b.adaptive_delta(policy);
@@ -1071,6 +1093,53 @@ exact_consensus = true
         )
         .unwrap();
         assert!(cfg.comm_config().is_err());
+    }
+
+    #[test]
+    fn clock_key_parses_validates_and_lowers() {
+        use crate::simulator::SimClock;
+        // The default is the closed-form engine.
+        assert_eq!(
+            ExperimentConfig::default().comm_config().unwrap().clock,
+            SimClock::ClosedForm
+        );
+        // The event engine lowers into the typed config and the builder.
+        let cfg = ExperimentConfig::from_toml(
+            "[experiment]\ndataset = \"quickstart\"\n[network]\nclock = \"event\"",
+        )
+        .unwrap();
+        assert_eq!(cfg.comm_config().unwrap().clock, SimClock::Event);
+        assert!(cfg.session_builder().is_ok());
+        // Unknown engine names are rejected at TOML-apply time already.
+        assert!(ExperimentConfig::from_toml("[network]\nclock = \"wall\"").is_err());
+        // The event engine cannot model lossy gossip...
+        let cfg = ExperimentConfig::from_toml(
+            "[network]\nclock = \"event\"\nschedule = \"lossy\"",
+        )
+        .unwrap();
+        let err = cfg.comm_config().unwrap_err();
+        assert!(err.to_string().contains("lossy"), "{err}");
+        // ... or fault injection ...
+        let cfg = ExperimentConfig::from_toml(
+            "[network]\nclock = \"event\"\nchaos_crash_p = 0.05\nchaos_rejoin_p = 0.5",
+        )
+        .unwrap();
+        let err = cfg.comm_config().unwrap_err();
+        assert!(err.to_string().contains("fault injection"), "{err}");
+        // ... and exact consensus has no gossip rounds to schedule.
+        let cfg = ExperimentConfig::from_toml(
+            "[network]\nexact_consensus = true\nclock = \"event\"",
+        )
+        .unwrap();
+        let err = cfg.comm_config().unwrap_err();
+        assert!(err.to_string().contains("exact_consensus"), "{err}");
+        // Event + semisync + stragglers is a supported combination.
+        let cfg = ExperimentConfig::from_toml(
+            "[network]\nclock = \"event\"\nschedule = \"semisync\"\nstaleness = 2\n\
+             straggler_sigma = 0.5\nstraggler_seed = 9",
+        )
+        .unwrap();
+        assert!(cfg.comm_config().is_ok());
     }
 
     #[test]

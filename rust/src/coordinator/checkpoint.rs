@@ -34,12 +34,20 @@ use crate::network::{
     AdaptiveDeltaPolicy, ChaosConfig, CommConfig, CommSchedule, CommSnapshot, LatencyModel,
     NodeLatency, StalenessSchedule, Topology, WeightRule,
 };
+use crate::simulator::SimClock;
 use crate::ssfn::{SsfnArchitecture, TrainHyper};
 use crate::{Error, Result};
 use std::io;
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"DSSFNCKP";
+/// Version 6 added the discrete-event clock engine (`--clock event`):
+/// the clock-engine tag in the comm config plus the event clock's
+/// runtime state (lifetime round counter, per-node completion times),
+/// so an event-clock run checkpointed mid-training resumes its
+/// simulated-time trajectory bit-identically. v1–v5 snapshots upgrade
+/// with the closed-form clock and no event state — exactly the engine
+/// every older run charged under.
 /// Version 5 added seeded fault injection ([`ChaosConfig`]): the chaos
 /// knobs in the comm config plus the runtime membership cursor, the
 /// per-node liveness mask, and the cumulative quorum-stall count, so a
@@ -63,7 +71,7 @@ const MAGIC: &[u8; 8] = b"DSSFNCKP";
 /// heterogeneous resume replays the run under the per-round clock model
 /// from round 0 (the aggregate charging it was written under no longer
 /// exists; model weights and traffic are unaffected either way).
-const VERSION: u32 = 5;
+const VERSION: u32 = 6;
 
 /// Where inside the layer state machine the snapshot was taken.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -129,6 +137,14 @@ pub struct Checkpoint {
     /// depends on every past round, so rebuilding it would mean
     /// replaying the whole draw history.
     pub(crate) straggler_g: Vec<f64>,
+    /// Event-clock lifetime round counter (gossip rounds the
+    /// discrete-event engine has simulated); 0 for closed-form runs.
+    pub(crate) event_rounds: u64,
+    /// Event-clock per-node completion times; empty for closed-form
+    /// runs. Carried verbatim: each node's next round starts at its own
+    /// (and its in-window neighbours') recorded finish times, so the
+    /// vector is the engine's complete cross-call state.
+    pub(crate) event_times: Vec<f64>,
     /// Fault-injection membership cursor (chaos steps drawn so far); 0
     /// for fault-free runs.
     pub(crate) chaos_cursor: u64,
@@ -304,6 +320,12 @@ impl Checkpoint {
                 w.u64(self.comm.chaos.seed)?;
                 w.u64(self.comm.chaos.min_nodes as u64)?;
             }
+            if version >= 6 {
+                w.u8(match self.comm.clock {
+                    SimClock::ClosedForm => 0,
+                    SimClock::Event => 1,
+                })?;
+            }
         }
         // Growth policy, task fingerprint.
         w.opt_f64(self.growth)?;
@@ -351,6 +373,10 @@ impl Checkpoint {
                 w.u8(alive as u8)?;
             }
             w.u64(self.chaos_stalls)?;
+        }
+        if version >= 6 {
+            w.u64(self.event_rounds)?;
+            w.f64s(&self.event_times)?;
         }
         w.snapshot(&self.comm_before)?;
         w.snapshot(&self.ledger_total)?;
@@ -498,6 +524,17 @@ impl Checkpoint {
             } else {
                 ChaosConfig::default()
             };
+            // v5 predates the event engine: the closed-form clock is
+            // exactly what every older run charged under.
+            let clock = if version >= 6 {
+                match r.u8()? {
+                    0 => SimClock::ClosedForm,
+                    1 => SimClock::Event,
+                    t => return Err(Error::Checkpoint(format!("unknown clock-engine tag {t}"))),
+                }
+            } else {
+                SimClock::ClosedForm
+            };
             CommConfig {
                 schedule,
                 adaptive_delta,
@@ -505,6 +542,7 @@ impl Checkpoint {
                 iter_staleness,
                 iter_schedule,
                 chaos,
+                clock,
             }
         } else {
             CommConfig::default()
@@ -573,6 +611,11 @@ impl Checkpoint {
         } else {
             (0, Vec::new(), 0)
         };
+        let (event_rounds, event_times) = if version >= 6 {
+            (r.u64()?, r.f64s()?)
+        } else {
+            (0, Vec::new())
+        };
         let comm_before = r.snapshot()?;
         let ledger_total = r.snapshot()?;
         let sim_secs = r.f64()?;
@@ -616,6 +659,8 @@ impl Checkpoint {
             stale_hist,
             straggler_cursor,
             straggler_g,
+            event_rounds,
+            event_times,
             chaos_cursor,
             chaos_live,
             chaos_stalls,
@@ -878,6 +923,7 @@ mod tests {
                 iter_staleness: 0,
                 iter_schedule: StalenessSchedule::Iid,
                 chaos: ChaosConfig { crash_p: 0.05, rejoin_p: 0.5, seed: 13, min_nodes: 2 },
+                clock: SimClock::Event,
             },
             growth: Some(0.25),
             dataset: "oracle-toy".into(),
@@ -908,6 +954,8 @@ mod tests {
             stale_hist: vec![Matrix::from_fn(3, 3, |r, c| (r + 2 * c) as f64 * 0.25)],
             straggler_cursor: 44,
             straggler_g: vec![0.25, -1.5],
+            event_rounds: 66,
+            event_times: vec![1.5, 2.25],
             chaos_cursor: 21,
             chaos_live: vec![true, false],
             chaos_stalls: 3,
@@ -951,6 +999,9 @@ mod tests {
         assert_eq!(back.stale_hist[0].max_abs_diff(&ck.stale_hist[0]), 0.0);
         assert_eq!(back.straggler_cursor, 44);
         assert_eq!(back.straggler_g, ck.straggler_g);
+        assert_eq!(back.comm.clock, SimClock::Event);
+        assert_eq!(back.event_rounds, 66);
+        assert_eq!(back.event_times, ck.event_times);
         assert_eq!(back.comm.chaos, ck.comm.chaos);
         assert_eq!(back.chaos_cursor, 21);
         assert_eq!(back.chaos_live, vec![true, false]);
@@ -996,6 +1047,7 @@ mod tests {
                 iter_staleness: 3,
                 iter_schedule: StalenessSchedule::Iid,
                 chaos: ChaosConfig { crash_p: 0.1, rejoin_p: 0.25, seed: 3, min_nodes: 1 },
+                clock: SimClock::ClosedForm,
             };
             let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
             assert_eq!(back.comm, ck.comm);
@@ -1096,6 +1148,8 @@ mod tests {
         ck.chaos_cursor = 0;
         ck.chaos_live = Vec::new();
         ck.chaos_stalls = 0;
+        ck.event_rounds = 0;
+        ck.event_times = Vec::new();
         ck
     }
 
@@ -1164,6 +1218,9 @@ mod tests {
         ck.chaos_cursor = 0;
         ck.chaos_live = Vec::new();
         ck.chaos_stalls = 0;
+        ck.comm.clock = SimClock::ClosedForm;
+        ck.event_rounds = 0;
+        ck.event_times = Vec::new();
         let mut buf = Vec::new();
         ck.write_versioned(&mut buf, 2).unwrap();
         let back = Checkpoint::from_bytes(&buf).unwrap();
@@ -1192,6 +1249,9 @@ mod tests {
         ck.chaos_cursor = 0;
         ck.chaos_live = Vec::new();
         ck.chaos_stalls = 0;
+        ck.comm.clock = SimClock::ClosedForm;
+        ck.event_rounds = 0;
+        ck.event_times = Vec::new();
         let mut buf = Vec::new();
         ck.write_versioned(&mut buf, 3).unwrap();
         assert_eq!(buf[8], 3); // really a v3 stream
@@ -1217,6 +1277,9 @@ mod tests {
         ck.chaos_cursor = 0;
         ck.chaos_live = Vec::new();
         ck.chaos_stalls = 0;
+        ck.comm.clock = SimClock::ClosedForm;
+        ck.event_rounds = 0;
+        ck.event_times = Vec::new();
         let mut buf = Vec::new();
         ck.write_versioned(&mut buf, 4).unwrap();
         assert_eq!(buf[8], 4); // really a v4 stream
@@ -1232,6 +1295,30 @@ mod tests {
     }
 
     #[test]
+    fn v5_checkpoints_upgrade_with_closed_form_clock() {
+        // A v5 run carried the full chaos machinery but predates the
+        // discrete-event clock engine: its simulated clock is the scalar
+        // closed-form charge in `sim_secs`, nothing more.
+        let mut ck = sample();
+        ck.comm.clock = SimClock::ClosedForm;
+        ck.event_rounds = 0;
+        ck.event_times = Vec::new();
+        let mut buf = Vec::new();
+        ck.write_versioned(&mut buf, 5).unwrap();
+        assert_eq!(buf[8], 5); // really a v5 stream
+        assert!(buf.len() < ck.to_bytes().len());
+        let back = Checkpoint::from_bytes(&buf).unwrap();
+        assert_eq!(back.comm, ck.comm);
+        assert_eq!(back.comm.clock, SimClock::ClosedForm);
+        assert_eq!(back.comm.chaos, ck.comm.chaos);
+        assert_eq!(back.chaos_cursor, ck.chaos_cursor);
+        assert_eq!(back.chaos_live, ck.chaos_live);
+        assert_eq!(back.event_rounds, 0);
+        assert!(back.event_times.is_empty());
+        assert_eq!(back.sim_secs.to_bits(), ck.sim_secs.to_bits());
+    }
+
+    #[test]
     fn reader_survives_truncation_at_every_byte_of_every_version() {
         // Fuzz-style: any prefix of any supported on-disk version must
         // be a clean Err — never a panic, hang, or huge allocation.
@@ -1240,6 +1327,11 @@ mod tests {
             let mut fixture = ck.clone();
             if version < 5 {
                 fixture.comm.chaos = ChaosConfig::default();
+            }
+            if version < 6 {
+                fixture.comm.clock = SimClock::ClosedForm;
+                fixture.event_rounds = 0;
+                fixture.event_times = Vec::new();
             }
             let mut buf = Vec::new();
             fixture.write_versioned(&mut buf, version).unwrap();

@@ -233,6 +233,15 @@ impl<'t> DssfnAlgorithm<'t> {
                 if comm.node_latency.is_heterogeneous() {
                     engine.set_straggler(comm.node_latency);
                 }
+                // Discrete-event clock engine (`--clock event`): per-node
+                // round-completion events over the bounded-staleness
+                // dependency DAG replace the closed-form per-round
+                // charge. validate_with_iterations above already rejected
+                // the combinations the engine cannot model (lossy
+                // schedules, fault injection).
+                if comm.clock.is_event() {
+                    engine.set_event_clock(true);
+                }
                 let comm_seed = SplitMix64::new(seed ^ 0x636f_6d6d_5eed).next_u64();
                 let fabric = comm.schedule.build_fabric(engine, comm_seed)?;
                 if comm.chaos.enabled() {
@@ -258,11 +267,12 @@ impl<'t> DssfnAlgorithm<'t> {
                     || comm.node_latency.is_heterogeneous()
                     || comm.chaos.enabled()
                     || comm.chaos.min_nodes > 1
+                    || comm.clock.is_event()
                 {
                     return Err(Error::Config(
                         "communication schedules, adaptive δ, iteration staleness, \
-                         the straggler model and fault injection apply to gossip \
-                         consensus only"
+                         the straggler model, fault injection and the event clock \
+                         apply to gossip consensus only"
                             .into(),
                     ));
                 }
@@ -447,6 +457,22 @@ impl<'t> DssfnAlgorithm<'t> {
                 stall_rounds: ck.chaos_stalls,
             })?;
             alg.live = ck.chaos_live.clone();
+        }
+        // Event-clock state: the engine's round counter and per-node
+        // completion times resume the discrete-event simulation
+        // bit-identically. The engine rejects state for a closed-form
+        // run and a node-count mismatch, so checkpoint/config drift
+        // fails loudly instead of silently re-zeroing the clock.
+        if ck.comm.clock.is_event() || !ck.event_times.is_empty() {
+            let fab = alg.fabric.as_ref().ok_or_else(|| {
+                Error::Checkpoint(
+                    "checkpoint carries event-clock state but the restored run \
+                     has no communication fabric (exact consensus)"
+                        .into(),
+                )
+            })?;
+            fab.engine()
+                .restore_event_state(ck.event_rounds, &ck.event_times)?;
         }
         alg.current_delta = ck.current_delta;
         if ck.current_period == 0 {
@@ -1096,6 +1122,15 @@ impl Algorithm for DssfnAlgorithm<'_> {
             .and_then(|f| f.chaos_state())
             .map(|s| (s.cursor, s.live, s.stall_rounds))
             .unwrap_or((0, Vec::new(), 0));
+        // Event-clock state: the engine's lifetime round counter and the
+        // per-node completion times. Closed-form runs carry none (their
+        // scalar clock is `sim_secs`), which the v6 codec encodes as the
+        // empty vector.
+        let (event_rounds, event_times) = self
+            .fabric
+            .as_ref()
+            .and_then(|f| f.engine().event_state())
+            .unwrap_or((0, Vec::new()));
         Ok(Checkpoint {
             seed: self.seed,
             arch: self.arch,
@@ -1121,6 +1156,8 @@ impl Algorithm for DssfnAlgorithm<'_> {
             stale_hist,
             straggler_cursor,
             straggler_g,
+            event_rounds,
+            event_times,
             chaos_cursor,
             chaos_live,
             chaos_stalls,

@@ -95,6 +95,7 @@ pub mod network;
 pub mod node;
 pub mod runtime;
 pub mod session;
+pub mod simulator;
 pub mod ssfn;
 pub mod testing;
 pub mod transport;

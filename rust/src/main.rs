@@ -22,9 +22,12 @@
 //! slowness). `--chaos-crash-p` / `--chaos-rejoin-p` / `--chaos-seed`
 //! inject seeded node crash/rejoin churn (the live set keeps mixing,
 //! crashed nodes freeze and catch up on rejoin) and `--min-nodes`
-//! stalls averaging below a quorum. Flags that the selected schedule
-//! does not read (e.g. `--staleness` under `sync`) are rejected, not
-//! ignored.
+//! stalls averaging below a quorum. `--clock event` swaps the
+//! closed-form simulated-seconds charge for the per-node discrete-event
+//! engine (each node advances when its slowest dependency finishes,
+//! instead of every round paying the global maximum). Flags that the
+//! selected schedule does not read (e.g. `--staleness` under `sync`)
+//! are rejected, not ignored.
 //!
 //! The build environment has no `clap`; argument parsing is a small
 //! hand-rolled matcher (see [`Args`]) whose switch list comes from the
@@ -190,6 +193,13 @@ fn build_config(args: &Args) -> Result<ExperimentConfig, String> {
     if let Some(v) = args.parsed("min-nodes")? {
         cfg.min_nodes = Some(v);
     }
+    if let Some(s) = args.get("clock") {
+        // Validate the engine name early; cross-knob rules (lossy,
+        // chaos, exact consensus) are checked when the typed comm
+        // config is built.
+        dssfn::simulator::SimClock::parse(s).map_err(|e| e.to_string())?;
+        cfg.clock = s.to_string();
+    }
     if args.has("exact-consensus") {
         cfg.exact_consensus = true;
     }
@@ -248,8 +258,8 @@ fn cmd_train(args: &Args) -> Result<(), String> {
                 "staleness", "loss-p", "adaptive-delta", "adaptive-period",
                 "iter-staleness", "iter-schedule", "straggler-sigma", "straggler-seed",
                 "straggler-corr", "chaos-crash-p", "chaos-rejoin-p", "chaos-seed",
-                "min-nodes", "bind", "connect", "shard", "min-clients", "io-timeout",
-                "reconnect-max",
+                "min-nodes", "clock", "bind", "connect", "shard", "min-clients",
+                "io-timeout", "reconnect-max",
             ] {
                 if args.has(flag) {
                     return Err(format!(

@@ -457,12 +457,8 @@ impl ChaosFabric {
             let mut msgs = 0u64;
             let mut max_deg = 0usize;
             for k in 0..n {
-                let mut deg = 0usize;
-                for l in 0..n {
-                    if l != k && mix.matrix().get(k, l) != 0.0 {
-                        deg += 1;
-                    }
-                }
+                let (cols, _) = mix.neighbors(k);
+                let deg = cols.iter().filter(|&&l| l != k).count();
                 msgs += deg as u64;
                 max_deg = max_deg.max(deg);
             }
@@ -482,11 +478,11 @@ impl ChaosFabric {
         for _ in 0..rounds {
             for k in 0..n {
                 st.out[k].fill_zero();
-                for l in 0..n {
-                    let h = r.mix.matrix().get(k, l);
-                    if h != 0.0 {
-                        st.out[k].axpy(h, &st.bank[l]);
-                    }
+                // CSR columns are ascending — the same order the dense
+                // get-and-skip scan visited, so the mix is bit-identical.
+                let (cols, weights) = r.mix.neighbors(k);
+                for (&l, &h) in cols.iter().zip(weights) {
+                    st.out[k].axpy(h, &st.bank[l]);
                 }
             }
             std::mem::swap(&mut st.bank, &mut st.out);

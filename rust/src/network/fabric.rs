@@ -39,6 +39,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use super::chaos::{ChaosConfig, ChaosDrain, ChaosSnapshot};
 use super::{GossipEngine, MixingMatrix, NodeLatency};
 use crate::linalg::Matrix;
+use crate::simulator::SimClock;
 use crate::util::Xoshiro256StarStar;
 use crate::{Error, Result};
 
@@ -346,6 +347,13 @@ pub struct CommConfig {
     /// The zero-fault default is bit-identical to no chaos wrapper at
     /// all.
     pub chaos: ChaosConfig,
+    /// Which engine charges simulated seconds per gossip round: the
+    /// paper's closed-form `dt` (the default, bit-identical to all
+    /// pre-event behaviour) or the per-node discrete-event simulator
+    /// ([`crate::simulator::EventClock`]). Event mode changes the
+    /// *clock only* — the mixing math, round counts and traffic
+    /// accounting are identical bit for bit.
+    pub clock: SimClock,
 }
 
 impl CommConfig {
@@ -396,6 +404,26 @@ impl CommConfig {
                  semantics are undefined — pick one"
                     .into(),
             ));
+        }
+        if self.clock.is_event() {
+            if matches!(self.schedule, CommSchedule::Lossy { .. }) {
+                return Err(Error::Config(
+                    "--clock event cannot simulate the lossy schedule: the \
+                     per-round delivered-edge set has no per-node completion \
+                     events to model — use --clock closed-form with --schedule \
+                     lossy"
+                        .into(),
+                ));
+            }
+            if self.chaos.enabled() {
+                return Err(Error::Config(
+                    "--clock event cannot combine with fault injection: chaos \
+                     membership steps charge the scalar closed-form clock, \
+                     which would desynchronize the per-node event times — \
+                     pick one"
+                        .into(),
+                ));
+            }
         }
         Ok(())
     }
@@ -469,6 +497,9 @@ impl CommConfig {
         if self.chaos.enabled() {
             s.push(' ');
             s.push_str(&self.chaos.describe());
+        }
+        if self.clock.is_event() {
+            s.push_str(" clock=event");
         }
         s
     }
@@ -1114,6 +1145,50 @@ mod tests {
         // Chaos renders as a relaxation token; the default renders none.
         assert_eq!(ok.relaxation_tokens(), " chaos(p=0.1, rejoin=0.5, quorum=2)");
         assert_eq!(CommConfig::default().relaxation_tokens(), "");
+    }
+
+    #[test]
+    fn comm_config_validates_clock_engine_combos() {
+        // The event clock rides sync and semi-sync schedules...
+        let ok = CommConfig { clock: SimClock::Event, ..CommConfig::default() };
+        ok.validate_for(1e-9, false).unwrap();
+        let ok = CommConfig {
+            clock: SimClock::Event,
+            schedule: CommSchedule::SemiSync { staleness: 2 },
+            ..CommConfig::default()
+        };
+        ok.validate_for(1e-9, false).unwrap();
+        // ... and composes with stragglers and iteration staleness.
+        let ok = CommConfig {
+            clock: SimClock::Event,
+            iter_staleness: 2,
+            node_latency: NodeLatency { sigma: 0.5, seed: 1, corr: 0.0 },
+            ..CommConfig::default()
+        };
+        ok.validate_for(1e-9, false).unwrap();
+        // Lossy has no per-node completion events to simulate.
+        let bad = CommConfig {
+            clock: SimClock::Event,
+            schedule: CommSchedule::Lossy { loss_p: 0.2 },
+            ..CommConfig::default()
+        };
+        let err = bad.validate_for(1e-9, false).unwrap_err();
+        assert!(err.to_string().contains("lossy"), "got: {err}");
+        // Chaos membership steps charge the scalar clock.
+        let bad = CommConfig {
+            clock: SimClock::Event,
+            chaos: ChaosConfig { crash_p: 0.1, rejoin_p: 0.5, seed: 1, min_nodes: 2 },
+            ..CommConfig::default()
+        };
+        let err = bad.validate_for(1e-9, false).unwrap_err();
+        assert!(err.to_string().contains("fault injection"), "got: {err}");
+        // The mode string names the engine only when it deviates.
+        assert_eq!(
+            CommConfig { clock: SimClock::Event, ..CommConfig::default() }
+                .relaxation_tokens(),
+            " clock=event"
+        );
+        assert!(!CommConfig::default().relaxation_tokens().contains("clock"));
     }
 
     #[test]

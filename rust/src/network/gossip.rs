@@ -28,6 +28,7 @@ use std::sync::{Arc, Mutex, PoisonError};
 
 use super::{CommLedger, LatencyModel, MixingMatrix, NodeLatency, StragglerSampler};
 use crate::linalg::Matrix;
+use crate::simulator::EventClock;
 use crate::util::{Rng, Xoshiro256StarStar};
 use crate::{Error, Result};
 
@@ -67,6 +68,15 @@ pub struct GossipEngine {
     node_slack: Option<Vec<usize>>,
     /// Simulated communication clock, f64 bits in an atomic.
     sim_clock_bits: Arc<AtomicU64>,
+    /// Discrete-event per-node clock (`--clock event`, see
+    /// [`crate::simulator`]). `None` (the default) charges the
+    /// closed-form per-round `dt` — bit-identical to all pre-event
+    /// behaviour. When installed, mixing calls skip the per-round
+    /// charge and instead simulate each node's completion times,
+    /// storing the slowest node's clock into `sim_clock_bits`. Behind
+    /// a mutex (never contended: one consensus averaging runs at a
+    /// time) because each call advances the per-node times.
+    event: Mutex<Option<EventClock>>,
     /// Persistent scratch bank for the double-buffered rounds. Lazily
     /// (re)built when the payload shape changes; a mutex (never
     /// contended: one consensus averaging runs at a time) keeps the
@@ -97,6 +107,12 @@ impl Clone for GossipEngine {
             // The simulated clock stays shared (as before); the scratch
             // bank is per-engine cache state and starts empty.
             sim_clock_bits: Arc::clone(&self.sim_clock_bits),
+            event: Mutex::new(
+                self.event
+                    .lock()
+                    .unwrap_or_else(PoisonError::into_inner)
+                    .clone(),
+            ),
             scratch: Mutex::new(Vec::new()),
             hist: Mutex::new(Vec::new()),
         }
@@ -109,9 +125,12 @@ impl GossipEngine {
         let m = mixing.num_nodes();
         let plan: Vec<NodePlan> = (0..m)
             .map(|i| {
-                let row = mixing.row(i);
-                let nbrs: Vec<usize> = (0..m).filter(|&j| row[j] != 0.0).collect();
-                let weights: Vec<f64> = nbrs.iter().map(|&j| row[j]).collect();
+                // CSR rows store exactly the nonzero entries in ascending
+                // column order — the same neighbour order the dense-row
+                // scan produced, so the averaging stays bit-identical.
+                let (cols, row_weights) = mixing.neighbors(i);
+                let nbrs: Vec<usize> = cols.to_vec();
+                let weights: Vec<f64> = row_weights.to_vec();
                 let w0 = weights.first().copied().unwrap_or(0.0);
                 let equal = weights.iter().all(|&w| w == w0);
                 NodePlan { nbrs, weights, equal }
@@ -131,6 +150,7 @@ impl GossipEngine {
             straggler: Mutex::new(None),
             node_slack: None,
             sim_clock_bits: Arc::new(AtomicU64::new(0f64.to_bits())),
+            event: Mutex::new(None),
             scratch: Mutex::new(Vec::new()),
             hist: Mutex::new(Vec::new()),
         }
@@ -210,6 +230,79 @@ impl GossipEngine {
         }
     }
 
+    /// Select the clock engine: `true` installs the discrete-event
+    /// per-node simulator ([`crate::simulator::EventClock`]) over this
+    /// engine's topology with all node clocks at 0; `false` restores
+    /// the closed-form charge (the default, bit-identical to all
+    /// pre-event behaviour).
+    pub fn set_event_clock(&mut self, enabled: bool) {
+        let slot = self.event.get_mut().unwrap_or_else(PoisonError::into_inner);
+        *slot = if enabled {
+            Some(EventClock::new(&self.mixing))
+        } else {
+            None
+        };
+    }
+
+    /// Whether the discrete-event clock engine is installed.
+    pub fn event_enabled(&self) -> bool {
+        self.event
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .is_some()
+    }
+
+    /// The event clock's checkpointable `(rounds_done, per-node times)`
+    /// state, when the event engine is installed.
+    pub fn event_state(&self) -> Option<(u64, Vec<f64>)> {
+        self.event
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .as_ref()
+            .map(|e| e.state())
+    }
+
+    /// Restore a checkpointed event-clock `(rounds_done, times)` pair so
+    /// the resumed run replays per-node completion times exactly
+    /// (checkpoint resume; requires the event engine to be installed).
+    pub fn restore_event_state(&self, rounds_done: u64, times: &[f64]) -> Result<()> {
+        match self
+            .event
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .as_mut()
+        {
+            Some(e) => e.restore_state(rounds_done, times),
+            None => Err(Error::Checkpoint(
+                "checkpoint carries event-clock state but the run uses the closed-form clock"
+                    .into(),
+            )),
+        }
+    }
+
+    /// Run the discrete-event simulation for one finished averaging
+    /// call and store the new global clock (the slowest node's time).
+    /// The straggler sampler — when installed — advances one cursor
+    /// step per round, exactly the budget the closed-form path spends,
+    /// so the two engines stay checkpoint-compatible.
+    fn event_advance<S>(&self, rounds: usize, payload_bytes: u64, slack_of_round: S)
+    where
+        S: Fn(usize) -> usize,
+    {
+        let mut guard = self.event.lock().unwrap_or_else(PoisonError::into_inner);
+        let Some(ev) = guard.as_mut() else { return };
+        let mut sam = self.straggler.lock().unwrap_or_else(PoisonError::into_inner);
+        let t = ev.advance_call(
+            rounds,
+            payload_bytes,
+            &self.latency,
+            slack_of_round,
+            self.node_slack.as_deref(),
+            sam.as_mut(),
+        );
+        self.sim_clock_bits.store(t.to_bits(), Ordering::Relaxed);
+    }
+
     /// Reset the straggler sampler's slack window at an averaging-call
     /// boundary (windows never span calls, so checkpoints taken between
     /// calls need no window state).
@@ -273,9 +366,18 @@ impl GossipEngine {
         f64::from_bits(self.sim_clock_bits.load(Ordering::Relaxed))
     }
 
-    /// Reset the simulated clock.
+    /// Reset the simulated clock (and, in event mode, every per-node
+    /// completion time).
     pub fn reset_clock(&self) {
         self.sim_clock_bits.store(0f64.to_bits(), Ordering::Relaxed);
+        if let Some(ev) = self
+            .event
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .as_mut()
+        {
+            ev.reset();
+        }
     }
 
     /// Overwrite the simulated clock — used when a checkpointed training
@@ -365,6 +467,7 @@ impl GossipEngine {
         }
         let scalars = (shape.0 * shape.1) as u64;
         self.begin_straggler_call();
+        let event_on = self.event_enabled();
         // Ping-pong between `values` and the engine's persistent scratch
         // bank: each round writes into the other bank and swaps buffer
         // ownership, so there is no per-round copy-back and no per-call
@@ -391,7 +494,13 @@ impl GossipEngine {
                 std::mem::swap(v, s);
             }
             self.ledger.record_round(self.msgs_per_round, scalars);
-            self.advance_clock(self.round_dt(scalars * 8, clock_slack));
+            if !event_on {
+                self.advance_clock(self.round_dt(scalars * 8, clock_slack));
+            }
+        }
+        drop(bank);
+        if event_on {
+            self.event_advance(rounds, scalars * 8, |_| clock_slack);
         }
         Ok(())
     }
@@ -455,6 +564,15 @@ impl GossipEngine {
             return Err(Error::Network(format!(
                 "loss probability must be in [0,1), got {loss_p}"
             )));
+        }
+        if self.event_enabled() {
+            // The per-round delivered-edge set would need per-edge event
+            // modelling the DAG does not carry; the config layer rejects
+            // this combination up front, this is the engine-level guard.
+            return Err(Error::Network(
+                "the event clock does not model lossy gossip; use --clock closed-form"
+                    .into(),
+            ));
         }
         let shape = self.check_values(values)?;
         let m = values.len();
@@ -572,6 +690,7 @@ impl GossipEngine {
         }
         let scalars = (shape.0 * shape.1) as u64;
         self.begin_straggler_call();
+        let event_on = self.event_enabled();
         let mut bank = self.scratch_bank(m, shape);
         let mut hist = self.hist_bank(m, shape, staleness);
         // Pre-fill every history slot with the initial values: stale
@@ -614,12 +733,28 @@ impl GossipEngine {
                 std::mem::swap(v, s);
             }
             self.ledger.record_round(self.msgs_per_round, scalars);
-            let dt = if relaxed {
-                self.round_dt(scalars * 8, staleness)
-            } else {
-                self.round_dt(scalars * 8, 0)
-            };
-            self.advance_clock(dt);
+            if !event_on {
+                let dt = if relaxed {
+                    self.round_dt(scalars * 8, staleness)
+                } else {
+                    self.round_dt(scalars * 8, 0)
+                };
+                self.advance_clock(dt);
+            }
+        }
+        drop(bank);
+        drop(hist);
+        if event_on {
+            // Relaxed rounds grant the staleness window; the trailing
+            // flush rounds synchronize fully — the same ramp the
+            // closed-form charge models.
+            self.event_advance(rounds, scalars * 8, |r| {
+                if r + staleness < rounds {
+                    staleness
+                } else {
+                    0
+                }
+            });
         }
         Ok(())
     }
@@ -1002,6 +1137,142 @@ mod tests {
         let plain = engine(6, 1);
         assert!(plain.straggler_state().is_none());
         assert!(plain.restore_straggler_state(1, vec![0.0; 6]).is_err());
+    }
+
+    #[test]
+    fn event_clock_is_bit_identical_to_closed_form_when_homogeneous() {
+        // σ = 0, slack 0: the event engine must reproduce the closed
+        // form bit for bit, across calls and payload shapes.
+        let closed = engine(8, 1);
+        let mut event = engine(8, 1);
+        event.set_event_clock(true);
+        assert!(event.event_enabled());
+        let mut a = rand_values(8, 2, 3, 61);
+        let mut b = a.clone();
+        closed.mix_rounds(&mut a, 9).unwrap();
+        event.mix_rounds(&mut b, 9).unwrap();
+        let mut a2 = rand_values(8, 4, 2, 62);
+        let mut b2 = a2.clone();
+        closed.mix_rounds(&mut a2, 4).unwrap();
+        event.mix_rounds(&mut b2, 4).unwrap();
+        assert_eq!(
+            closed.simulated_seconds().to_bits(),
+            event.simulated_seconds().to_bits()
+        );
+        // The math and the traffic are untouched by the clock engine.
+        for (x, y) in a2.iter().zip(&b2) {
+            assert_eq!(x.max_abs_diff(y), 0.0);
+        }
+        assert_eq!(closed.ledger().snapshot(), event.ledger().snapshot());
+        let (rounds_done, times) = event.event_state().unwrap();
+        assert_eq!(rounds_done, 13);
+        assert_eq!(times.len(), 8);
+    }
+
+    #[test]
+    fn event_clock_never_exceeds_closed_form_under_stragglers() {
+        let mk = |ev: bool| {
+            let mut e = engine(10, 1);
+            e.set_straggler(NodeLatency { sigma: 0.6, seed: 77, corr: 0.2 });
+            e.set_event_clock(ev);
+            e
+        };
+        let closed = mk(false);
+        let event = mk(true);
+        let mut a = rand_values(10, 2, 2, 63);
+        let mut b = a.clone();
+        closed.mix_rounds(&mut a, 25).unwrap();
+        event.mix_rounds(&mut b, 25).unwrap();
+        assert!(event.simulated_seconds() > 0.0);
+        // Local ring barriers beat the global critical path.
+        assert!(event.simulated_seconds() < closed.simulated_seconds());
+        // Replays are bit-identical (heap ties break on seq).
+        let event2 = mk(true);
+        let mut c = rand_values(10, 2, 2, 63);
+        event2.mix_rounds(&mut c, 25).unwrap();
+        assert_eq!(
+            event.simulated_seconds().to_bits(),
+            event2.simulated_seconds().to_bits()
+        );
+        // Both engines consumed the same sampler budget: the resumable
+        // cursor is clock-engine independent.
+        assert_eq!(
+            closed.straggler_state().unwrap().0,
+            event.straggler_state().unwrap().0
+        );
+    }
+
+    #[test]
+    fn event_clock_semisync_charges_less_than_full_barrier() {
+        let mk = || {
+            let mut e = engine(8, 1);
+            e.set_straggler(NodeLatency { sigma: 0.8, seed: 5, corr: 0.0 });
+            e.set_event_clock(true);
+            e
+        };
+        let sync = mk();
+        let semi = mk();
+        let mut a = rand_values(8, 2, 2, 64);
+        let mut b = a.clone();
+        sync.mix_rounds(&mut a, 20).unwrap();
+        semi.mix_rounds_semisync(&mut b, 20, 3, 9, 0).unwrap();
+        assert!(semi.simulated_seconds() < sync.simulated_seconds());
+        assert_eq!(sync.ledger().snapshot(), semi.ledger().snapshot());
+    }
+
+    #[test]
+    fn event_state_restores_bit_identical_clock_charges() {
+        let mk = || {
+            let mut e = engine(6, 1);
+            e.set_straggler(NodeLatency { sigma: 0.5, seed: 13, corr: 0.4 });
+            e.set_event_clock(true);
+            e
+        };
+        let a = mk();
+        let mut va = rand_values(6, 2, 2, 65);
+        a.mix_rounds(&mut va, 8).unwrap();
+        let (rounds_done, times) = a.event_state().unwrap();
+        let (cursor, g) = a.straggler_state().unwrap();
+        // Fresh engine fast-forwarded to the checkpointed state.
+        let b = mk();
+        b.restore_event_state(rounds_done, &times).unwrap();
+        b.restore_straggler_state(cursor, g).unwrap();
+        b.set_simulated_seconds(a.simulated_seconds());
+        let mut xa = rand_values(6, 2, 2, 66);
+        let mut xb = xa.clone();
+        a.mix_rounds_relaxed_clock(&mut xa, 7, 2).unwrap();
+        b.mix_rounds_relaxed_clock(&mut xb, 7, 2).unwrap();
+        assert_eq!(
+            a.simulated_seconds().to_bits(),
+            b.simulated_seconds().to_bits()
+        );
+        let (ra, ta) = a.event_state().unwrap();
+        let (rb, tb) = b.event_state().unwrap();
+        assert_eq!(ra, rb);
+        for (x, y) in ta.iter().zip(&tb) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // Closed-form engines reject event state; reset clears it.
+        let plain = engine(6, 1);
+        assert!(plain.event_state().is_none());
+        assert!(plain.restore_event_state(1, &[0.0; 6]).is_err());
+        a.reset_clock();
+        assert_eq!(a.simulated_seconds(), 0.0);
+        assert_eq!(a.event_state().unwrap(), (0, vec![0.0; 6]));
+    }
+
+    #[test]
+    fn event_clock_rejects_lossy_gossip() {
+        let mut e = engine(6, 1);
+        e.set_event_clock(true);
+        let mut rng = Xoshiro256StarStar::seed_from_u64(1);
+        let mut vals = rand_values(6, 2, 2, 67);
+        let err = e.mix_rounds_lossy(&mut vals, 3, 0.2, &mut rng).unwrap_err();
+        assert!(err.to_string().contains("lossy"), "got: {err}");
+        // Switching back to the closed form re-enables it.
+        e.set_event_clock(false);
+        assert!(!e.event_enabled());
+        e.mix_rounds_lossy(&mut vals, 3, 0.2, &mut rng).unwrap();
     }
 
     #[test]

@@ -353,6 +353,21 @@ impl StragglerSampler {
         self.hist[slot * self.m + i]
     }
 
+    /// Advance one round and write each node's multiplier
+    /// `exp(σ·g_i(r))` into `out` (length `m`). Consumes the same
+    /// `(seed, cursor, node order)` stream as [`StragglerSampler::round_mult`]
+    /// — one cursor step per round — so the event-driven simulator and
+    /// the closed-form critical path draw identical trajectories and
+    /// share one checkpoint cursor. The window ring is untouched (the
+    /// event engine keeps its own per-round banks).
+    pub fn node_mults(&mut self, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.m);
+        self.advance_round();
+        for (o, &g) in out.iter_mut().zip(&self.g) {
+            *o = (self.cfg.sigma * g).exp();
+        }
+    }
+
     /// Advance one round and return the barrier multiplier the clock
     /// charges: the per-round critical path. `slack = 0` is the full
     /// barrier (`max_i` of this round's draws); `slack > 0` is the
@@ -495,6 +510,28 @@ mod tests {
         // State length is validated.
         let mut e = StragglerSampler::new(cfg, 6);
         assert!(e.restore_state(3, vec![0.0; 4]).is_err());
+    }
+
+    #[test]
+    fn node_mults_shares_the_round_mult_stream() {
+        let cfg = NodeLatency { sigma: 0.7, seed: 13, corr: 0.5 };
+        let mut a = StragglerSampler::new(cfg, 5);
+        let mut b = StragglerSampler::new(cfg, 5);
+        let mut bank = vec![0.0; 5];
+        for _ in 0..10 {
+            let path = a.round_mult(0);
+            b.node_mults(&mut bank);
+            // Slack 0: the closed-form charge is this round's max node.
+            let max = bank.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+            assert_eq!(path.to_bits(), max.to_bits());
+        }
+        // One cursor step per round on both paths, identical AR(1) state.
+        assert_eq!(a.state().0, 10);
+        assert_eq!(a.state(), b.state());
+        // The streams stay aligned even when the modes interleave.
+        b.round_mult(0);
+        a.node_mults(&mut bank);
+        assert_eq!(a.state(), b.state());
     }
 
     #[test]

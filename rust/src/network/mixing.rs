@@ -6,9 +6,19 @@
 //! `δ` is therefore `B(δ) = ⌈ln(1/δ) / (−ln λ₂)⌉`. As the circular degree
 //! `d` grows, `λ₂` drops and `B` collapses — this is the mechanism behind
 //! the paper's Fig. 4 "transition jump" of training time versus degree.
+//!
+//! ## Sparse storage (§Scale)
+//!
+//! `H` is stored CSR-style: per-row sorted neighbour columns and their
+//! weights, O(M·degree) memory instead of a dense M×M bank — the
+//! representation that takes the simulator from tens of nodes to
+//! thousands. Exact zeros are never stored, so a row's columns are
+//! precisely its gossip neighbours. The spectral analysis runs on the
+//! sparse rows with the dense kernel's lane structure replicated (see
+//! [`second_eigenvalue`]), keeping `λ₂` bit-identical to the historical
+//! dense computation on every graph.
 
 use super::Topology;
-use crate::linalg::Matrix;
 use crate::{Error, Result};
 
 /// Weight assignment rule for the mixing matrix.
@@ -24,10 +34,15 @@ pub enum WeightRule {
     Metropolis,
 }
 
-/// A validated doubly-stochastic mixing matrix over a topology.
+/// A validated doubly-stochastic mixing matrix over a topology, stored
+/// sparsely (CSR): `cols[row_ptr[i]..row_ptr[i+1]]` are node `i`'s
+/// neighbour columns in ascending order (self included when its weight
+/// is nonzero) and `weights` the matching entries.
 #[derive(Debug, Clone)]
 pub struct MixingMatrix {
-    h: Matrix,
+    row_ptr: Vec<usize>,
+    cols: Vec<usize>,
+    weights: Vec<f64>,
     lambda2: f64,
 }
 
@@ -37,7 +52,11 @@ impl MixingMatrix {
     pub fn build(topology: &Topology, rule: WeightRule) -> Result<Self> {
         let adj = topology.neighbor_sets()?;
         let m = adj.len();
-        let mut h = Matrix::zeros(m, m);
+        let mut row_ptr = Vec::with_capacity(m + 1);
+        row_ptr.push(0usize);
+        let nnz_hint: usize = adj.iter().map(|s| s.len()).sum();
+        let mut cols = Vec::with_capacity(nnz_hint);
+        let mut weights = Vec::with_capacity(nnz_hint);
         match rule {
             WeightRule::EqualNeighbor => {
                 let deg0 = adj[0].len();
@@ -46,32 +65,26 @@ impl MixingMatrix {
                         "equal-neighbour weights need a regular graph; use Metropolis".into(),
                     ));
                 }
-                for (i, set) in adj.iter().enumerate() {
+                for set in &adj {
                     let w = 1.0 / set.len() as f64;
                     for &j in set {
-                        h.set(i, j, w);
+                        cols.push(j);
+                        weights.push(w);
                     }
+                    row_ptr.push(cols.len());
                 }
             }
             WeightRule::Metropolis => {
                 // degrees excluding self.
                 let deg: Vec<usize> = adj.iter().map(|s| s.len() - 1).collect();
                 for (i, set) in adj.iter().enumerate() {
-                    let mut diag = 1.0;
-                    for &j in set {
-                        if j == i {
-                            continue;
-                        }
-                        let w = 1.0 / (1.0 + deg[i].max(deg[j]) as f64);
-                        h.set(i, j, w);
-                        diag -= w;
-                    }
-                    h.set(i, i, diag);
+                    metropolis_row(i, set, &deg, &mut cols, &mut weights);
+                    row_ptr.push(cols.len());
                 }
             }
         }
-        let lambda2 = second_eigenvalue(&h);
-        let mm = Self { h, lambda2 };
+        let lambda2 = second_eigenvalue(m, &row_ptr, &cols, &weights);
+        let mm = Self { row_ptr, cols, weights, lambda2 };
         mm.validate()?;
         Ok(mm)
     }
@@ -128,57 +141,61 @@ impl MixingMatrix {
                 ids[0]
             )));
         }
-        let mut h = Matrix::zeros(n, n);
         let deg: Vec<usize> = sub.iter().map(|s| s.len() - 1).collect();
+        let mut row_ptr = Vec::with_capacity(n + 1);
+        row_ptr.push(0usize);
+        let nnz_hint: usize = sub.iter().map(|s| s.len()).sum();
+        let mut cols = Vec::with_capacity(nnz_hint);
+        let mut weights = Vec::with_capacity(nnz_hint);
         for (k, set) in sub.iter().enumerate() {
-            let mut diag = 1.0;
-            for &l in set {
-                if l == k {
-                    continue;
-                }
-                let w = 1.0 / (1.0 + deg[k].max(deg[l]) as f64);
-                h.set(k, l, w);
-                diag -= w;
-            }
-            h.set(k, k, diag);
+            metropolis_row(k, set, &deg, &mut cols, &mut weights);
+            row_ptr.push(cols.len());
         }
-        let lambda2 = second_eigenvalue(&h);
-        let mm = Self { h, lambda2 };
+        let lambda2 = second_eigenvalue(n, &row_ptr, &cols, &weights);
+        let mm = Self { row_ptr, cols, weights, lambda2 };
         mm.validate()?;
         Ok(mm)
     }
 
-    /// Validate rows/columns sum to 1 and entries are non-negative.
+    /// Validate rows/columns sum to 1 and entries are non-negative —
+    /// O(nnz), using a column-scatter pass for the column sums.
     fn validate(&self) -> Result<()> {
-        let m = self.h.rows();
+        let m = self.num_nodes();
+        let mut col_sums = vec![0.0f64; m];
         for i in 0..m {
+            let (cols, weights) = self.neighbors(i);
             let mut row = 0.0;
-            let mut col = 0.0;
-            for j in 0..m {
-                let hij = self.h.get(i, j);
+            for (&j, &hij) in cols.iter().zip(weights) {
                 if hij < -1e-12 {
                     return Err(Error::Network(format!("negative weight h[{i},{j}]={hij}")));
                 }
                 row += hij;
-                col += self.h.get(j, i);
+                col_sums[j] += hij;
             }
-            if (row - 1.0).abs() > 1e-9 || (col - 1.0).abs() > 1e-9 {
+            if (row - 1.0).abs() > 1e-9 {
                 return Err(Error::Network(format!(
-                    "not doubly stochastic: row{i}={row:.12}, col{i}={col:.12}"
+                    "not doubly stochastic: row{i}={row:.12}"
+                )));
+            }
+        }
+        for (i, &col) in col_sums.iter().enumerate() {
+            if (col - 1.0).abs() > 1e-9 {
+                return Err(Error::Network(format!(
+                    "not doubly stochastic: col{i}={col:.12}"
                 )));
             }
         }
         Ok(())
     }
 
-    /// The matrix itself.
-    pub fn matrix(&self) -> &Matrix {
-        &self.h
-    }
-
     /// Number of nodes.
     pub fn num_nodes(&self) -> usize {
-        self.h.rows()
+        self.row_ptr.len() - 1
+    }
+
+    /// Stored (nonzero) entries — O(M·degree), the scale invariant.
+    pub fn nnz(&self) -> usize {
+        self.cols.len()
     }
 
     /// Second-largest eigenvalue modulus `λ₂` (consensus contraction rate).
@@ -199,17 +216,110 @@ impl MixingMatrix {
         b.ceil().max(1.0) as usize
     }
 
-    /// Weight row for node `i` (its neighbour averaging coefficients).
-    pub fn row(&self, i: usize) -> &[f64] {
-        self.h.row(i)
+    /// Node `i`'s stored row: `(columns, weights)`, columns ascending.
+    pub fn neighbors(&self, i: usize) -> (&[usize], &[f64]) {
+        let (lo, hi) = (self.row_ptr[i], self.row_ptr[i + 1]);
+        (&self.cols[lo..hi], &self.weights[lo..hi])
+    }
+
+    /// Entry `h_ij` (0 for a non-edge). O(log degree) per lookup — for
+    /// bulk access iterate [`MixingMatrix::neighbors`] instead.
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        let (cols, weights) = self.neighbors(i);
+        match cols.binary_search(&j) {
+            Ok(k) => weights[k],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Largest entry-wise |difference| against `other`, treating both as
+    /// dense matrices (missing entries are 0). Panics on shape mismatch.
+    pub fn max_abs_diff(&self, other: &MixingMatrix) -> f64 {
+        let m = self.num_nodes();
+        assert_eq!(m, other.num_nodes(), "mixing matrices of different sizes");
+        let mut worst = 0.0f64;
+        for i in 0..m {
+            let (ac, aw) = self.neighbors(i);
+            let (bc, bw) = other.neighbors(i);
+            let (mut p, mut q) = (0usize, 0usize);
+            while p < ac.len() || q < bc.len() {
+                let d = match (ac.get(p), bc.get(q)) {
+                    (Some(&ja), Some(&jb)) if ja == jb => {
+                        let d = (aw[p] - bw[q]).abs();
+                        p += 1;
+                        q += 1;
+                        d
+                    }
+                    (Some(&ja), Some(&jb)) if ja < jb => {
+                        p += 1;
+                        aw[p - 1].abs()
+                    }
+                    (Some(_), Some(_)) => {
+                        q += 1;
+                        bw[q - 1].abs()
+                    }
+                    (Some(_), None) => {
+                        p += 1;
+                        aw[p - 1].abs()
+                    }
+                    (None, Some(_)) => {
+                        q += 1;
+                        bw[q - 1].abs()
+                    }
+                    (None, None) => unreachable!(),
+                };
+                worst = worst.max(d);
+            }
+        }
+        worst
+    }
+}
+
+/// Emit one Metropolis row into the CSR arrays: off-diagonal weights
+/// `1/(1+max(deg_i,deg_j))`, diagonal absorbing the slack — subtracted
+/// in ascending-neighbour order, the exact historical arithmetic. Exact
+/// zeros are dropped so the stored columns are precisely the row's
+/// gossip neighbours.
+fn metropolis_row(
+    i: usize,
+    set: &[usize],
+    deg: &[usize],
+    cols: &mut Vec<usize>,
+    weights: &mut Vec<f64>,
+) {
+    let mut diag = 1.0;
+    for &j in set {
+        if j == i {
+            continue;
+        }
+        diag -= 1.0 / (1.0 + deg[i].max(deg[j]) as f64);
+    }
+    for &j in set {
+        if j == i {
+            if diag != 0.0 {
+                cols.push(i);
+                weights.push(diag);
+            }
+            continue;
+        }
+        let w = 1.0 / (1.0 + deg[i].max(deg[j]) as f64);
+        cols.push(j);
+        weights.push(w);
     }
 }
 
 /// `λ₂` via power iteration on `H` deflated by the all-ones eigenvector.
 /// `H` is symmetric here (undirected graphs, symmetric rules), so power
 /// iteration on the deflated operator converges to `|λ₂|`.
-fn second_eigenvalue(h: &Matrix) -> f64 {
-    let m = h.rows();
+///
+/// The row product replicates [`crate::linalg::dot`]'s 4-lane structure
+/// with lanes assigned by **dense column index** (`j % 4` inside the
+/// 4-aligned prefix, a sequential tail after it). Zero entries only ever
+/// add `±0.0` to a lane that is never `-0.0` (lanes start at `+0.0` and
+/// round-to-nearest addition cannot produce `-0.0` from non-`-0.0`
+/// inputs), so skipping them is bit-identical to the dense kernel — the
+/// property the sparse-vs-dense λ₂ tests pin down.
+fn second_eigenvalue(m: usize, row_ptr: &[usize], cols: &[usize], weights: &[f64]) -> f64 {
     if m == 1 {
         return 0.0;
     }
@@ -224,7 +334,8 @@ fn second_eigenvalue(h: &Matrix) -> f64 {
     for _ in 0..2000 {
         // w = H v
         for (i, wi) in w.iter_mut().enumerate() {
-            *wi = crate::linalg::dot(h.row(i), &v);
+            *wi = sparse_row_dot(&cols[row_ptr[i]..row_ptr[i + 1]],
+                &weights[row_ptr[i]..row_ptr[i + 1]], &v, m);
         }
         center(&mut w);
         let norm = w.iter().map(|x| x * x).sum::<f64>().sqrt();
@@ -241,6 +352,26 @@ fn second_eigenvalue(h: &Matrix) -> f64 {
         lambda = new_lambda;
     }
     lambda
+}
+
+/// Sparse row · dense vector with the dense `dot` kernel's reduction
+/// order (4 lanes by dense index over the 4-aligned prefix, then a
+/// sequential tail). `cols` ascending; `m` is the dense length.
+fn sparse_row_dot(cols: &[usize], weights: &[f64], v: &[f64], m: usize) -> f64 {
+    let aligned = (m / 4) * 4;
+    let mut lanes = [0.0f64; 4];
+    let mut k = 0;
+    while k < cols.len() && cols[k] < aligned {
+        let j = cols[k];
+        lanes[j % 4] += weights[k] * v[j];
+        k += 1;
+    }
+    let mut s = lanes[0] + lanes[1] + lanes[2] + lanes[3];
+    while k < cols.len() {
+        s += weights[k] * v[cols[k]];
+        k += 1;
+    }
+    s
 }
 
 fn center(v: &mut [f64]) {
@@ -262,6 +393,7 @@ fn normalize(v: &mut [f64]) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::Matrix;
 
     fn circ(m: usize, d: usize) -> MixingMatrix {
         MixingMatrix::build(
@@ -271,14 +403,95 @@ mod tests {
         .unwrap()
     }
 
+    /// Independent dense reference: the exact pre-sparse construction
+    /// (dense M×M bank, `linalg::dot` power iteration), used to pin the
+    /// CSR refactor bit-for-bit.
+    fn dense_metropolis(adj: &[Vec<usize>]) -> (Matrix, f64) {
+        let m = adj.len();
+        let deg: Vec<usize> = adj.iter().map(|s| s.len() - 1).collect();
+        let mut h = Matrix::zeros(m, m);
+        for (i, set) in adj.iter().enumerate() {
+            let mut diag = 1.0;
+            for &j in set {
+                if j == i {
+                    continue;
+                }
+                let w = 1.0 / (1.0 + deg[i].max(deg[j]) as f64);
+                h.set(i, j, w);
+                diag -= w;
+            }
+            h.set(i, i, diag);
+        }
+        let l2 = dense_second_eigenvalue(&h);
+        (h, l2)
+    }
+
+    fn dense_second_eigenvalue(h: &Matrix) -> f64 {
+        let m = h.rows();
+        if m == 1 {
+            return 0.0;
+        }
+        let mut v: Vec<f64> = (0..m)
+            .map(|i| if i % 2 == 0 { 1.0 } else { -1.0 } + i as f64 * 1e-3)
+            .collect();
+        center(&mut v);
+        normalize(&mut v);
+        let mut lambda = 0.0;
+        let mut w = vec![0.0; m];
+        for _ in 0..2000 {
+            for (i, wi) in w.iter_mut().enumerate() {
+                *wi = crate::linalg::dot(h.row(i), &v);
+            }
+            center(&mut w);
+            let norm = w.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if norm < 1e-300 {
+                return 0.0;
+            }
+            let new_lambda = norm;
+            for (vi, wi) in v.iter_mut().zip(&w) {
+                *vi = wi / norm;
+            }
+            if (new_lambda - lambda).abs() < 1e-13 {
+                return new_lambda;
+            }
+            lambda = new_lambda;
+        }
+        lambda
+    }
+
+    /// Entry-by-entry bit comparison of a sparse matrix against a dense
+    /// reference, including the zeros (sparse must store none).
+    fn assert_bit_identical_to_dense(mm: &MixingMatrix, h: &Matrix, tag: &str) {
+        let m = mm.num_nodes();
+        assert_eq!(m, h.rows(), "{tag}: size");
+        let mut nnz = 0;
+        for i in 0..m {
+            for j in 0..m {
+                assert_eq!(
+                    mm.get(i, j).to_bits(),
+                    h.get(i, j).to_bits(),
+                    "{tag}: h[{i},{j}] sparse {} vs dense {}",
+                    mm.get(i, j),
+                    h.get(i, j)
+                );
+                if h.get(i, j) != 0.0 {
+                    nnz += 1;
+                }
+            }
+        }
+        assert_eq!(mm.nnz(), nnz, "{tag}: sparse stores a zero entry");
+    }
+
     #[test]
     fn equal_neighbor_weights_match_paper() {
         let mm = circ(10, 2);
         // |N_i| = 5, so every connected weight is 1/5.
-        assert!((mm.matrix().get(0, 0) - 0.2).abs() < 1e-12);
-        assert!((mm.matrix().get(0, 1) - 0.2).abs() < 1e-12);
-        assert!((mm.matrix().get(0, 8) - 0.2).abs() < 1e-12);
-        assert_eq!(mm.matrix().get(0, 3), 0.0);
+        assert!((mm.get(0, 0) - 0.2).abs() < 1e-12);
+        assert!((mm.get(0, 1) - 0.2).abs() < 1e-12);
+        assert!((mm.get(0, 8) - 0.2).abs() < 1e-12);
+        assert_eq!(mm.get(0, 3), 0.0);
+        // O(M·degree): 10 nodes × 5 neighbours.
+        assert_eq!(mm.nnz(), 50);
     }
 
     #[test]
@@ -324,15 +537,15 @@ mod tests {
                     let mut row = 0.0;
                     let mut col = 0.0;
                     for j in 0..m {
-                        let hij = mm.matrix().get(i, j);
+                        let hij = mm.get(i, j);
                         assert!(hij >= -1e-12, "negative h[{i},{j}]={hij} ({seed},{radius})");
                         // Symmetric rule on an undirected graph.
                         assert!(
-                            (hij - mm.matrix().get(j, i)).abs() < 1e-12,
+                            (hij - mm.get(j, i)).abs() < 1e-12,
                             "asymmetric Metropolis weights ({seed},{radius})"
                         );
                         row += hij;
-                        col += mm.matrix().get(j, i);
+                        col += mm.get(j, i);
                     }
                     assert!((row - 1.0).abs() < 1e-9, "row {i} sums to {row} ({seed},{radius})");
                     assert!((col - 1.0).abs() < 1e-9, "col {i} sums to {col} ({seed},{radius})");
@@ -343,6 +556,82 @@ mod tests {
             }
         }
         assert_eq!(checked, 36);
+    }
+
+    #[test]
+    fn sparse_metropolis_bit_identical_to_dense_reference_property() {
+        // The CSR refactor must be invisible: over the standing 36
+        // RandomGeometric instances, every stored entry, every implicit
+        // zero and the power-iterated λ₂ are bit-identical to the dense
+        // M×M construction the code used before the sparse storage.
+        let mut checked = 0;
+        for seed in 0..12u64 {
+            for &radius in &[0.3, 0.45, 0.7] {
+                let t = Topology::RandomGeometric { nodes: 16, radius, seed };
+                let adj = t.neighbor_sets().unwrap();
+                let (h, l2) = dense_metropolis(&adj);
+                let mm = MixingMatrix::build(&t, WeightRule::Metropolis).unwrap();
+                let tag = format!("rgg({seed},{radius})");
+                assert_bit_identical_to_dense(&mm, &h, &tag);
+                assert_eq!(mm.lambda2().to_bits(), l2.to_bits(), "{tag}: λ₂ drifted");
+                checked += 1;
+            }
+        }
+        assert_eq!(checked, 36);
+    }
+
+    #[test]
+    fn restricted_sparse_bit_identical_to_dense_on_every_live_mask_property() {
+        // Same dense-reference pin for the fault-injection path: every
+        // restricted live-set mask the chaos sweep uses (each single-node
+        // crash plus the seeded multi-node patterns) must produce a CSR
+        // matrix bit-identical to the dense restricted construction,
+        // λ₂ included.
+        use crate::util::{Rng, Xoshiro256StarStar};
+        let m = 16usize;
+        let mut compared = 0;
+        for seed in 0..12u64 {
+            for &radius in &[0.3, 0.45, 0.7] {
+                let t = Topology::RandomGeometric { nodes: m, radius, seed };
+                let adj = t.neighbor_sets().unwrap();
+                let mut masks: Vec<Vec<bool>> = Vec::new();
+                for dead in 0..m {
+                    let mut mask = vec![true; m];
+                    mask[dead] = false;
+                    masks.push(mask);
+                }
+                let mut rng = Xoshiro256StarStar::seed_from_u64(seed ^ 0xc4a0_5);
+                for _ in 0..6 {
+                    let mask: Vec<bool> = (0..m).map(|_| rng.next_f64() < 0.7).collect();
+                    if mask.iter().any(|&l| l) {
+                        masks.push(mask);
+                    }
+                }
+                for mask in &masks {
+                    let Ok(mm) = MixingMatrix::build_restricted(&t, mask) else {
+                        continue;
+                    };
+                    // Dense reference over the induced live subgraph.
+                    let ids: Vec<usize> = (0..m).filter(|&i| mask[i]).collect();
+                    let mut local = vec![usize::MAX; m];
+                    for (k, &i) in ids.iter().enumerate() {
+                        local[i] = k;
+                    }
+                    let sub: Vec<Vec<usize>> = ids
+                        .iter()
+                        .map(|&i| {
+                            adj[i].iter().filter(|&&j| mask[j]).map(|&j| local[j]).collect()
+                        })
+                        .collect();
+                    let (h, l2) = dense_metropolis(&sub);
+                    let tag = format!("rgg({seed},{radius}) mask {mask:?}");
+                    assert_bit_identical_to_dense(&mm, &h, &tag);
+                    assert_eq!(mm.lambda2().to_bits(), l2.to_bits(), "{tag}: λ₂ drifted");
+                    compared += 1;
+                }
+            }
+        }
+        assert!(compared > 36, "sweep barely exercised: {compared}");
     }
 
     #[test]
@@ -383,13 +672,13 @@ mod tests {
                                 let mut row = 0.0;
                                 let mut col = 0.0;
                                 for j in 0..n {
-                                    let hij = mm.matrix().get(i, j);
+                                    let hij = mm.get(i, j);
                                     assert!(
                                         hij >= -1e-12,
                                         "negative h[{i},{j}]={hij} ({seed},{radius})"
                                     );
                                     row += hij;
-                                    col += mm.matrix().get(j, i);
+                                    col += mm.get(j, i);
                                 }
                                 assert!((row - 1.0).abs() < 1e-9, "row {i}={row}");
                                 assert!((col - 1.0).abs() < 1e-9, "col {i}={col}");
@@ -442,7 +731,7 @@ mod tests {
         // All-live restriction equals the unrestricted Metropolis build.
         let full = MixingMatrix::build(&ring, WeightRule::Metropolis).unwrap();
         let all = MixingMatrix::build_restricted(&ring, &[true; 8]).unwrap();
-        assert_eq!(all.matrix().max_abs_diff(full.matrix()), 0.0);
+        assert_eq!(all.max_abs_diff(&full), 0.0);
         // A single live node is the trivial 1×1 identity: one round.
         let mut one = vec![false; 8];
         one[3] = true;
@@ -521,5 +810,16 @@ mod tests {
     #[should_panic]
     fn consensus_rounds_rejects_bad_delta() {
         circ(5, 1).consensus_rounds(1.5);
+    }
+
+    #[test]
+    fn sparse_storage_is_linear_in_degree_at_scale() {
+        // 1024-node ring: 3 stored entries per row, not a 1 MiB-entry
+        // dense bank. (The allocation-level pin lives in
+        // tests/scale_mem.rs with a counting allocator.)
+        let mm = circ(1024, 1);
+        assert_eq!(mm.num_nodes(), 1024);
+        assert_eq!(mm.nnz(), 3 * 1024);
+        assert!(mm.lambda2() < 1.0 && mm.lambda2() > 0.99);
     }
 }

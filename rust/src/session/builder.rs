@@ -8,6 +8,7 @@ use crate::network::{
     StalenessSchedule, Topology, WeightRule,
 };
 use crate::runtime::{ComputeBackend, NativeBackend};
+use crate::simulator::SimClock;
 use crate::ssfn::{GrowthPolicy, SsfnArchitecture, TrainHyper};
 use crate::{Error, Result};
 use std::sync::Arc;
@@ -54,6 +55,7 @@ pub struct SessionBuilder {
     iter_staleness: usize,
     iter_schedule: StalenessSchedule,
     chaos: ChaosConfig,
+    clock: SimClock,
     latency: LatencyModel,
     threads: usize,
     record_cost_curve: bool,
@@ -96,6 +98,7 @@ impl SessionBuilder {
             iter_staleness: 0,
             iter_schedule: StalenessSchedule::default(),
             chaos: ChaosConfig::default(),
+            clock: SimClock::ClosedForm,
             latency: LatencyModel::default(),
             threads: 0,
             record_cost_curve: true,
@@ -326,6 +329,39 @@ impl SessionBuilder {
         self
     }
 
+    /// Which engine charges simulated seconds per gossip round:
+    /// [`SimClock::ClosedForm`] (the default scalar critical-path
+    /// formula — bit-identical to every pre-event-engine run) or
+    /// [`SimClock::Event`] (the discrete-event simulator: per-node
+    /// round-completion events over the bounded-staleness dependency
+    /// DAG). The engines agree bitwise on homogeneous full-barrier
+    /// rounds; under stragglers the event clock reports the (tighter)
+    /// per-node critical path. The trained model and the traffic
+    /// accounting are identical either way — the engine only decides
+    /// what the simulated clock reads. Applies to gossip consensus
+    /// only, and cannot model the lossy schedule or fault injection.
+    ///
+    /// ```
+    /// use dssfn::session::SessionBuilder;
+    /// use dssfn::simulator::SimClock;
+    ///
+    /// let session = SessionBuilder::new()
+    ///     .dataset("quickstart")
+    ///     .layers(1)
+    ///     .hidden_extra(8)
+    ///     .admm_iterations(3)
+    ///     .nodes(4)
+    ///     .degree(1)
+    ///     .clock(SimClock::Event)
+    ///     .build()
+    ///     .unwrap();
+    /// assert!(session.describe().contains("clock=event"));
+    /// ```
+    pub fn clock(mut self, clock: SimClock) -> Self {
+        self.clock = clock;
+        self
+    }
+
     /// α-β latency model parameters (s/round, bytes/s).
     pub fn latency(mut self, alpha: f64, beta: f64) -> Self {
         self.latency = LatencyModel { alpha, beta };
@@ -416,6 +452,7 @@ impl SessionBuilder {
             iter_staleness: self.iter_staleness,
             iter_schedule: self.iter_schedule,
             chaos: self.chaos,
+            clock: self.clock,
         };
         let alg = DssfnAlgorithm::with_comm(
             arch,
@@ -626,6 +663,80 @@ mod tests {
             .chaos(ChaosConfig { crash_p: 0.0, rejoin_p: 0.0, seed: 9, min_nodes: 1 })
             .build()
             .is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_clock_config() {
+        // The event engine has no per-node completion events to model a
+        // delivered-edge lottery with.
+        assert!(SessionBuilder::new()
+            .dataset("quickstart")
+            .layers(1)
+            .hidden_extra(8)
+            .nodes(4)
+            .degree(1)
+            .clock(SimClock::Event)
+            .comm_fabric(CommSchedule::Lossy { loss_p: 0.1 })
+            .build()
+            .is_err());
+        // ... cannot combine with fault injection ...
+        assert!(SessionBuilder::new()
+            .dataset("quickstart")
+            .layers(1)
+            .hidden_extra(8)
+            .nodes(4)
+            .degree(1)
+            .clock(SimClock::Event)
+            .chaos(ChaosConfig { crash_p: 0.1, rejoin_p: 0.5, seed: 1, min_nodes: 1 })
+            .build()
+            .is_err());
+        // ... and requires gossip consensus.
+        assert!(SessionBuilder::new()
+            .dataset("quickstart")
+            .layers(1)
+            .hidden_extra(8)
+            .nodes(4)
+            .degree(1)
+            .exact_consensus()
+            .clock(SimClock::Event)
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn event_clock_session_trains_and_matches_closed_form_model() {
+        let build = |clock: SimClock| {
+            SessionBuilder::new()
+                .dataset("quickstart")
+                .seed(3)
+                .layers(1)
+                .hidden_extra(10)
+                .admm_iterations(4)
+                .nodes(4)
+                .degree(1)
+                .threads(1)
+                .node_latency(NodeLatency { sigma: 0.5, seed: 7, corr: 0.3 })
+                .clock(clock)
+                .build()
+                .unwrap()
+        };
+        let ev = build(SimClock::Event);
+        assert!(ev.describe().contains("clock=event"), "{}", ev.describe());
+        let (m_ev, r_ev) = ev.run_to_completion().unwrap();
+        let (m_cf, r_cf) = build(SimClock::ClosedForm).run_to_completion().unwrap();
+        // The clock engine never touches the math or the traffic...
+        let (m_ev, m_cf) = (m_ev.into_ssfn().unwrap(), m_cf.into_ssfn().unwrap());
+        assert_eq!(m_ev.output().max_abs_diff(m_cf.output()), 0.0);
+        assert_eq!(r_ev.comm_total, r_cf.comm_total);
+        // ... only what the simulated clock reads: the per-node critical
+        // path is never later than the closed-form full-barrier charge.
+        assert!(r_ev.simulated_comm_secs > 0.0);
+        assert!(
+            r_ev.simulated_comm_secs <= r_cf.simulated_comm_secs,
+            "event {} > closed-form {}",
+            r_ev.simulated_comm_secs,
+            r_cf.simulated_comm_secs
+        );
     }
 
     #[test]

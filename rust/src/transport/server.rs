@@ -199,6 +199,13 @@ pub(crate) fn validate_transport_config(cfg: &ExperimentConfig) -> Result<()> {
                 .into(),
         ));
     }
+    if comm.clock.is_event() {
+        return Err(Error::Config(
+            "--clock event is simulation-only; the wire run advances in real \
+             time, not simulated seconds"
+                .into(),
+        ));
+    }
     Ok(())
 }
 
@@ -1086,5 +1093,12 @@ mod tests {
             .unwrap_err()
             .to_string()
             .contains("chaos"));
+
+        let mut c = ok.clone();
+        c.clock = "event".into();
+        assert!(validate_transport_config(&c)
+            .unwrap_err()
+            .to_string()
+            .contains("simulation-only"));
     }
 }

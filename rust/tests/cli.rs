@@ -505,6 +505,95 @@ fn chaos_flags_validate_and_train() {
 }
 
 #[test]
+fn clock_flag_validates_and_trains() {
+    // Unknown engine names fail at flag-parse time.
+    let out = dssfn()
+        .args(["train", "--dataset", "quickstart", "--clock", "wall"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("clock"));
+
+    // The event engine schedules per-node gossip rounds: exact
+    // consensus, lossy gossip and fault injection all refuse it.
+    let out = dssfn()
+        .args([
+            "train", "--dataset", "quickstart", "--exact-consensus",
+            "--clock", "event",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("exact_consensus"));
+    let out = dssfn()
+        .args([
+            "train", "--dataset", "quickstart", "--schedule", "lossy",
+            "--clock", "event",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("lossy"));
+    let out = dssfn()
+        .args([
+            "train", "--dataset", "quickstart", "--chaos-crash-p", "0.1",
+            "--clock", "event",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("fault injection"));
+
+    // --clock conflicts with --resume like every training flag, and is
+    // simulation-only under the wire transport.
+    let out = dssfn()
+        .args(["train", "--resume", "nope.ckpt", "--clock", "event"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("cannot be combined"));
+    let out = dssfn()
+        .args([
+            "worker", "--connect", "127.0.0.1:1", "--shard", "0",
+            "--dataset", "quickstart", "--clock", "event",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("simulation-only"));
+
+    // info surfaces the engine in the fabric line ...
+    let out = dssfn()
+        .args(["info", "--dataset", "quickstart", "--clock", "event"])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(String::from_utf8_lossy(&out.stdout).contains("clock=event"));
+
+    // ... and an event-clock run trains end to end, reporting its mode.
+    let out = dssfn()
+        .args([
+            "train", "--dataset", "quickstart", "--layers", "1",
+            "--admm-iters", "8", "--nodes", "4", "--degree", "1",
+            "--straggler-sigma", "0.5", "--straggler-seed", "7",
+            "--clock", "event",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("clock=event"), "mode missing clock=event:\n{text}");
+}
+
+#[test]
 fn train_with_iter_staleness_and_straggler_model() {
     let out = dssfn()
         .args([

@@ -401,6 +401,89 @@ fn iteration_staleness_run_resumes_bit_identically() {
     );
 }
 
+/// Event-clock runs — per-node completion times, round counter,
+/// straggler cursor — checkpoint and resume bit-identically (the v6
+/// event state). The per-node DAG makes the interrupted and one-shot
+/// clocks agree only if the checkpoint carries every node's time, not
+/// just the global maximum, so this is the test that fails if the v6
+/// runtime block is dropped or mis-ordered.
+#[test]
+fn event_clock_run_resumes_bit_identically() {
+    use dssfn::simulator::SimClock;
+    let task = std::sync::Arc::new(lookup("quickstart").unwrap().generator(9).generate().unwrap());
+    let builder = || {
+        SessionBuilder::new()
+            .shared_task(std::sync::Arc::clone(&task))
+            .seed(9)
+            .layers(2)
+            .hidden_extra(12)
+            .admm_iterations(12)
+            .nodes(4)
+            .degree(1)
+            .gossip_delta(1e-8)
+            .threads(2)
+            .node_latency(straggler())
+            .clock(SimClock::Event)
+    };
+    let (one_model, one_report) = builder().build().unwrap().run_to_completion().unwrap();
+    let one_model = one_model.into_ssfn().unwrap();
+    assert!(one_report.mode.contains("clock=event"), "{}", one_report.mode);
+
+    // Interrupt mid-layer-1, serialize, restore, finish.
+    let mut session = builder().build().unwrap();
+    let ck = loop {
+        match session.step().unwrap() {
+            Some(StepEvent::AdmmIteration { layer: 1, iteration: 5, .. }) => {
+                break session.checkpoint().unwrap();
+            }
+            Some(_) => {}
+            None => panic!("session finished before the checkpoint point"),
+        }
+    };
+    let bytes = ck.to_bytes();
+    drop(session);
+
+    let ck = Checkpoint::from_bytes(&bytes).unwrap();
+    let mut resumed = resume_session(&ck, &task).unwrap();
+    let (model, report) = resumed.finish().unwrap();
+    let model = model.into_ssfn().unwrap();
+
+    assert_eq!(model.output().max_abs_diff(one_model.output()), 0.0);
+    for (a, b) in model.weights().iter().zip(one_model.weights()) {
+        assert_eq!(a.max_abs_diff(b), 0.0, "restored weight drifted");
+    }
+    assert_eq!(report.full_cost_curve(), one_report.full_cost_curve());
+    assert_eq!(report.comm_total, one_report.comm_total);
+    assert_eq!(
+        report.simulated_comm_secs.to_bits(),
+        one_report.simulated_comm_secs.to_bits(),
+        "event clock drifted across resume"
+    );
+    // The relaxation the event engine models is real: the same run
+    // under the closed-form barrier is never faster.
+    let (_, barrier_report) = SessionBuilder::new()
+        .shared_task(std::sync::Arc::clone(&task))
+        .seed(9)
+        .layers(2)
+        .hidden_extra(12)
+        .admm_iterations(12)
+        .nodes(4)
+        .degree(1)
+        .gossip_delta(1e-8)
+        .threads(2)
+        .node_latency(straggler())
+        .build()
+        .unwrap()
+        .run_to_completion()
+        .unwrap();
+    assert!(
+        report.simulated_comm_secs <= barrier_report.simulated_comm_secs,
+        "event clock {} slower than the closed-form barrier {}",
+        report.simulated_comm_secs,
+        barrier_report.simulated_comm_secs
+    );
+}
+
 /// Liang et al.'s Fig.-2 fixed-delay setting: a `FixedLag` schedule
 /// consumes no randomness, so two fresh runs are bit-identical, and a
 /// mid-layer checkpoint resumes bit-identically — straggler clock

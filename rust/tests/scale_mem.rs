@@ -1,0 +1,122 @@
+//! Scale-memory pin: a 1024-node cluster simulation never materializes
+//! a dense M×M mixing bank.
+//!
+//! The sparse CSR rewrite of [`dssfn::network::MixingMatrix`] is the
+//! load-bearing change that takes the simulator from tens of nodes to
+//! thousands — O(M·degree) stored entries instead of M² f64s. This test
+//! pins the invariant mechanically: a counting `#[global_allocator]`
+//! records the largest single allocation made while building the mixing
+//! state and driving gossip (straggler sampler and event clock
+//! installed), and asserts it stays far below the 8·M² bytes a dense
+//! bank would need. A regression that reintroduces any dense M×M
+//! structure — the matrix itself, a scratch copy, a dense spectral
+//! workspace — fails here, not in a profiler.
+//!
+//! This file is its own test binary, so the allocator hook observes
+//! nothing but this test.
+
+use dssfn::linalg::Matrix;
+use dssfn::network::{
+    CommLedger, GossipEngine, LatencyModel, MixingMatrix, NodeLatency, Topology, WeightRule,
+};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Forwards to the system allocator, recording the largest single
+/// allocation seen while `TRACKING` is on.
+struct CountingAlloc;
+
+static TRACKING: AtomicBool = AtomicBool::new(false);
+static LARGEST: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if TRACKING.load(Ordering::Relaxed) {
+            LARGEST.fetch_max(layout.size(), Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if TRACKING.load(Ordering::Relaxed) {
+            LARGEST.fetch_max(new_size, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+#[test]
+fn thousand_node_cluster_never_allocates_a_dense_bank() {
+    const M: usize = 1024;
+    // A dense mixing bank would be one 8·M² = 8 MiB allocation; the
+    // whole sparse pipeline should stay two orders of magnitude below.
+    const DENSE_BANK: usize = 8 * M * M;
+    const SPARSE_CEILING: usize = 2 << 20;
+
+    let topologies = [
+        ("ring", Topology::Circular { nodes: M, degree: 2 }, WeightRule::EqualNeighbor),
+        (
+            "rgg",
+            Topology::RandomGeometric {
+                nodes: M,
+                radius: ((M as f64).ln() / M as f64).sqrt(),
+                seed: 42,
+            },
+            WeightRule::Metropolis,
+        ),
+    ];
+
+    for (name, topo, rule) in topologies {
+        LARGEST.store(0, Ordering::Relaxed);
+        TRACKING.store(true, Ordering::Relaxed);
+
+        // The full engine-level pipeline at M = 1024: sparse build
+        // (including the spectral λ₂ analysis), straggler sampler,
+        // event clock, and a dozen gossip rounds over per-node payloads.
+        let mix = MixingMatrix::build(&topo, rule).unwrap();
+        assert!(mix.nnz() < M * M / 8, "{name}: mixing state is not sparse");
+        let mut engine =
+            GossipEngine::new(mix, Arc::new(CommLedger::new()), LatencyModel::default());
+        engine.set_straggler(NodeLatency { sigma: 0.4, seed: 7, corr: 0.3 });
+        engine.set_event_clock(true);
+        let mut bank: Vec<Matrix> = (0..M)
+            .map(|i| Matrix::from_fn(2, 4, |r, c| ((i * 31 + r * 7 + c) % 97) as f64))
+            .collect();
+        engine.mix_rounds(&mut bank, 12).unwrap();
+
+        // The chaos path stays sparse too: restricted live-set mixing
+        // (scattered single-node crashes keep the degree-2 ring
+        // connected — node i-1 still reaches i+1 directly).
+        if name == "ring" {
+            let live: Vec<bool> = (0..M).map(|i| i % 97 != 0).collect();
+            let restricted = MixingMatrix::build_restricted(&topo, &live).unwrap();
+            assert!(
+                restricted.nnz() < M * M / 8,
+                "{name}: restricted mixing state is not sparse"
+            );
+        }
+
+        TRACKING.store(false, Ordering::Relaxed);
+        let largest = LARGEST.load(Ordering::Relaxed);
+        assert!(
+            engine.simulated_seconds() > 0.0,
+            "{name}: the event clock never advanced"
+        );
+        assert!(
+            largest < DENSE_BANK,
+            "{name}: a {largest}-byte allocation is dense-bank sized (>= {DENSE_BANK})"
+        );
+        assert!(
+            largest <= SPARSE_CEILING,
+            "{name}: largest allocation {largest} exceeds the sparse ceiling {SPARSE_CEILING}"
+        );
+    }
+}
