@@ -68,19 +68,19 @@ pub const FLAGS: &[Flag] = &[
         toml: "", help: "explicit degree list for the sweep" },
     Flag { name: "--exact-consensus", value: "", commands: "train sweep info", default: "",
         toml: "network.exact_consensus", help: "idealized exact averaging instead of gossip (ablation)" },
-    Flag { name: "--schedule", value: "sync|semisync|lossy", commands: "train sweep info", default: "sync",
+    Flag { name: "--schedule", value: "sync|semisync|lossy", commands: "train serve worker sweep info", default: "sync",
         toml: "network.schedule", help: "communication fabric: synchronous, bounded-staleness, or lossy gossip" },
-    Flag { name: "--staleness", value: "S", commands: "train sweep info", default: "2 when semisync",
+    Flag { name: "--staleness", value: "S", commands: "train serve worker sweep info", default: "2 when semisync",
         toml: "network.staleness", help: "semisync only: neighbour reads up to S rounds stale" },
-    Flag { name: "--loss-p", value: "P", commands: "train sweep info", default: "0.1 when lossy",
+    Flag { name: "--loss-p", value: "P", commands: "train serve worker sweep info", default: "0.1 when lossy",
         toml: "network.loss_p", help: "lossy only: per-round, per-edge drop probability in [0,1)" },
-    Flag { name: "--adaptive-delta", value: "MAX", commands: "train sweep info", default: "",
+    Flag { name: "--adaptive-delta", value: "MAX", commands: "train serve worker sweep info", default: "",
         toml: "network.adaptive_delta", help: "L-FGADMM adaptive consensus tolerance: loosen gossip delta up to MAX on cost plateaus" },
-    Flag { name: "--adaptive-period", value: "P", commands: "train sweep info", default: "1",
+    Flag { name: "--adaptive-period", value: "P", commands: "train serve worker sweep info", default: "1",
         toml: "network.adaptive_period", help: "L-FGADMM communication-period doubling cap (skips whole averaging calls on plateaus)" },
-    Flag { name: "--iter-staleness", value: "S", commands: "train sweep info", default: "0",
+    Flag { name: "--iter-staleness", value: "S", commands: "train serve worker sweep info", default: "0",
         toml: "network.iter_staleness", help: "bounded-staleness ADMM (Liang et al. 2020): updates read consensus state up to S iterations old" },
-    Flag { name: "--iter-schedule", value: "iid|fixed:D|oneslow:NODE:LAG", commands: "train sweep info", default: "iid",
+    Flag { name: "--iter-schedule", value: "iid|fixed:D|oneslow:NODE:LAG", commands: "train serve worker sweep info", default: "iid",
         toml: "network.iter_schedule", help: "how staleness ages are assigned: seeded draws, a fixed lag, or one slow node" },
     Flag { name: "--straggler-sigma", value: "F", commands: "train sweep info", default: "0",
         toml: "network.straggler_sigma", help: "per-round lognormal latency heterogeneity (0 = the paper's homogeneous cluster)" },
@@ -224,7 +224,7 @@ pub const CONFLICTS: &[Conflict] = &[
         names: "gossip consensus" },
     Conflict { knob: "`--backend pjrt`", rejected_when: "under `serve`/`worker` (bit-identical f64s need one backend everywhere)",
         names: "native" },
-    Conflict { knob: "`--schedule semisync|lossy`, `--adaptive-delta`, `--iter-staleness`, `--straggler-sigma`, `--chaos-crash-p`, `--clock event`", rejected_when: "under `serve`/`worker` (relaxations are simulated; wire faults come from real processes)",
+    Conflict { knob: "`--straggler-sigma`, `--chaos-crash-p`, `--clock event`", rejected_when: "under `serve`/`worker` (simulated cluster physics; real workers are their own stragglers and failures, and the wire advances in real time)",
         names: "simulation-only" },
 ];
 

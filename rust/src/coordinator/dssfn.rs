@@ -17,17 +17,27 @@
 //! `tests/coordinator_oracle.rs` pins the equivalence against the
 //! sequential `admm::solve_decentralized` oracle.
 //!
+//! Every per-node operation goes through a [`NodeDriver`]
+//! ([`crate::node::driver`]): the in-process driver calls
+//! [`crate::node::NodeActor`]s on the thread pool (the default, built by
+//! [`DssfnAlgorithm::with_comm`]), the wire driver speaks the transport
+//! protocol to worker processes ([`crate::transport`]'s
+//! `ServeAlgorithm::new` builds this machine over it via
+//! [`DssfnAlgorithm::assemble`]). The phase machine — schedules,
+//! adaptive δ, staleness, events, checkpoints — exists exactly once.
+//!
 //! [`DssfnAlgorithm::checkpoint`] snapshots the machine between any two
 //! `advance` calls; [`DssfnAlgorithm::restore`] rebuilds the derived
 //! state (shards, random matrices, Gram factors) deterministically and
 //! continues bit-identically — the oracle test checkpoints mid-layer,
 //! serializes, restores and compares every learned matrix at
-//! `max_abs_diff == 0.0`.
+//! `max_abs_diff == 0.0`. Checkpointing is an in-process-driver
+//! capability: worker state lives in remote processes, so serve
+//! sessions refuse it.
 
 use super::checkpoint::{Checkpoint, CkPhase};
 use super::{
-    default_threads, for_each_node, for_each_node_mut, ConsensusMode, ParallelismBudget,
-    TrainOptions,
+    default_threads, for_each_node_mut, ConsensusMode, ParallelismBudget, TrainOptions,
 };
 use crate::data::{shard_uniform, ClassificationTask};
 use crate::linalg::Matrix;
@@ -36,12 +46,12 @@ use crate::network::{
     ChaosFabric, ChaosSnapshot, CommConfig, CommFabric, CommLedger, CommSchedule, CommSnapshot,
     GossipEngine, MixingMatrix, StalenessSchedule,
 };
-use crate::node::NodeActor;
+use crate::node::{DriverCtx, InProcessDriver, NodeActor, NodeDriver};
 use crate::runtime::ComputeBackend;
 use crate::session::{
     Algorithm, AlgorithmOutput, SessionProgress, StepEvent, StopReason, TrainedModel,
 };
-use crate::ssfn::{build_weight, GrowthPolicy, RandomMatrices, SsfnArchitecture, TrainHyper};
+use crate::ssfn::{GrowthPolicy, RandomMatrices, SsfnArchitecture, TrainHyper};
 use crate::util::{Rng, SplitMix64, Stopwatch, Xoshiro256StarStar};
 use crate::{Error, Result};
 use std::sync::Arc;
@@ -97,16 +107,13 @@ pub struct DssfnAlgorithm<'t> {
     opts: TrainOptions,
     comm: CommConfig,
     seed: u64,
-    backend: Arc<dyn ComputeBackend>,
     task: TaskRef<'t>,
     growth: Option<GrowthPolicy>,
 
-    threads: usize,
-    /// The protocol participants: each actor owns its shard, features
-    /// and ADMM state ([`NodeActor`]); the coordinator only moves `Q×n`
-    /// shares between them and the fabric — the same boundary the wire
-    /// transport puts a TCP connection on.
-    nodes: Vec<NodeActor>,
+    /// The per-node I/O seam: in-process actors on the thread pool, or
+    /// the wire transport to worker processes. The phase machine below
+    /// is driver-agnostic — same operations, same order, same bits.
+    driver: Box<dyn NodeDriver>,
     random: RandomMatrices,
     ledger: Arc<CommLedger>,
     fabric: Option<Box<dyn CommFabric>>,
@@ -122,6 +129,9 @@ pub struct DssfnAlgorithm<'t> {
     phase: Phase,
     s_vals: Vec<Matrix>,
     avg: Matrix,
+    /// Per-node cost bank, filled by the driver on recording iterations.
+    /// Entries of dead nodes keep their previous value between fills.
+    costs: Vec<f64>,
     cost_curve: Vec<f64>,
     gossip_rounds: usize,
     comm_before: CommSnapshot,
@@ -147,9 +157,10 @@ pub struct DssfnAlgorithm<'t> {
     /// flat (slot `(k % s) * M + i` holds node `i`'s average from
     /// iteration `k`). Empty when staleness is off.
     stale_hist: Vec<Matrix>,
-    /// Per-node liveness under fault injection: `live[i]` is false while
-    /// node `i` is crashed (its O/Λ/Z state frozen until it rejoins).
-    /// All-true when chaos is off, so the fault-free path is untouched.
+    /// Per-node liveness: `live[i]` is false while node `i` is crashed
+    /// (fault injection freezes its O/Λ/Z; a wire peer drop does the
+    /// same until the worker reconnects). All-true when nothing churns,
+    /// so the fault-free path is untouched.
     live: Vec<bool>,
 }
 
@@ -200,13 +211,49 @@ impl<'t> DssfnAlgorithm<'t> {
         backend.set_intra_threads(budget.intra_threads);
         let threads = budget.node_threads;
 
+        // The participants: one actor per shard, features starting at
+        // the raw shard inputs.
         let shards = shard_uniform(&task.get().train, m)?;
+        let nodes: Vec<NodeActor> = shards
+            .into_iter()
+            .enumerate()
+            .map(|(i, shard)| NodeActor::new(i, shard))
+            .collect();
+        let driver = Box::new(InProcessDriver::new(nodes, threads, Arc::clone(&backend)));
+        let ledger = Arc::new(CommLedger::new());
+        Self::assemble(arch, hyper, opts, comm, seed, backend, task, growth, driver, ledger, None)
+    }
+
+    /// Assemble the phase machine over an explicit [`NodeDriver`] and a
+    /// shared communication ledger. [`DssfnAlgorithm::with_comm`] calls
+    /// this with the in-process driver; the wire transport's
+    /// `ServeAlgorithm::new` calls it with a `WireDriver` sharing the
+    /// same ledger `Arc` (rejoin catch-up traffic is charged there too)
+    /// and a serve-flavoured mode string.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn assemble(
+        arch: SsfnArchitecture,
+        hyper: TrainHyper,
+        opts: TrainOptions,
+        comm: CommConfig,
+        seed: u64,
+        backend: Arc<dyn ComputeBackend>,
+        task: TaskRef<'t>,
+        growth: Option<GrowthPolicy>,
+        driver: Box<dyn NodeDriver>,
+        ledger: Arc<CommLedger>,
+        mode: Option<String>,
+    ) -> Result<Self> {
+        arch.validate()?;
+        opts.validate()?;
+        let m = opts.nodes;
         let random = RandomMatrices::generate(&arch, seed)?;
 
         // Network plumbing (only in gossip mode). The schedule seed is
         // derived from the master seed, so every run configuration is a
-        // pure function of (config, seed) as before.
-        let ledger = Arc::new(CommLedger::new());
+        // pure function of (config, seed) as before — and identical
+        // between the in-process and wire drivers, which is what makes
+        // a loopback serve run bit-equal to the simulator.
         let fabric = match opts.consensus {
             ConsensusMode::Gossip { delta } => {
                 comm.validate_with_iterations(
@@ -286,50 +333,43 @@ impl<'t> DssfnAlgorithm<'t> {
         };
         let report = TrainReport {
             dataset: task.get().name.clone(),
-            mode: format!(
-                "dssfn({}, {}, {})",
-                opts.topology.describe(),
-                match opts.consensus {
-                    ConsensusMode::Exact => "exact-avg".to_string(),
-                    ConsensusMode::Gossip { delta } => {
-                        let mut s = format!("gossip δ={delta:.0e}");
-                        if comm.schedule != CommSchedule::Synchronous {
-                            s.push(' ');
-                            s.push_str(&comm.schedule.describe());
+            mode: mode.unwrap_or_else(|| {
+                format!(
+                    "dssfn({}, {}, {})",
+                    opts.topology.describe(),
+                    match opts.consensus {
+                        ConsensusMode::Exact => "exact-avg".to_string(),
+                        ConsensusMode::Gossip { delta } => {
+                            let mut s = format!("gossip δ={delta:.0e}");
+                            if comm.schedule != CommSchedule::Synchronous {
+                                s.push(' ');
+                                s.push_str(&comm.schedule.describe());
+                            }
+                            if comm.adaptive_delta.is_some() {
+                                s.push_str(" adaptive-δ");
+                            }
+                            // Shared with `dssfn info` (CommConfig owns the
+                            // formatter, so report and info cannot drift).
+                            s.push_str(&comm.relaxation_tokens());
+                            s
                         }
-                        if comm.adaptive_delta.is_some() {
-                            s.push_str(" adaptive-δ");
-                        }
-                        // Shared with `dssfn info` (CommConfig owns the
-                        // formatter, so report and info cannot drift).
-                        s.push_str(&comm.relaxation_tokens());
-                        s
-                    }
-                },
-                backend.name()
-            ),
+                    },
+                    backend.name()
+                )
+            }),
             ..Default::default()
         };
 
-        // The participants: one actor per shard, features starting at
-        // the raw shard inputs.
-        let nodes: Vec<NodeActor> = shards
-            .into_iter()
-            .enumerate()
-            .map(|(i, shard)| NodeActor::new(i, shard))
-            .collect();
-
+        let live = driver.initial_live(m);
         Ok(Self {
             arch,
             hyper,
             opts,
             comm,
             seed,
-            backend,
             task,
             growth,
-            threads,
-            nodes,
+            driver,
             random,
             ledger,
             fabric,
@@ -343,6 +383,7 @@ impl<'t> DssfnAlgorithm<'t> {
             phase: Phase::Prepare,
             s_vals: Vec::new(),
             avg: Matrix::zeros(0, 0),
+            costs: Vec::new(),
             cost_curve: Vec::new(),
             gossip_rounds: 0,
             comm_before: CommSnapshot::default(),
@@ -353,7 +394,7 @@ impl<'t> DssfnAlgorithm<'t> {
             iter_seed: SplitMix64::new(seed ^ 0x17e7_5741_1e5f_5eed).next_u64(),
             iter_stale_cursor: 0,
             stale_hist: Vec::new(),
-            live: vec![true; m],
+            live,
         })
     }
 
@@ -484,8 +525,14 @@ impl<'t> DssfnAlgorithm<'t> {
         alg.iters_since_comm = ck.iters_since_comm as usize;
         alg.iter_stale_cursor = ck.iter_stale_cursor;
         alg.report.layers = ck.report_layers.clone();
-        for (actor, y) in alg.nodes.iter_mut().zip(&ck.ys) {
-            actor.set_features(y.clone());
+        {
+            let ip = alg
+                .driver
+                .in_process()
+                .expect("with_comm builds an in-process driver");
+            for (actor, y) in ip.nodes.iter_mut().zip(&ck.ys) {
+                actor.set_features(y.clone());
+            }
         }
         alg.weights = ck.weights.clone();
         alg.prev_layer_cost = ck.prev_layer_cost;
@@ -516,6 +563,25 @@ impl<'t> DssfnAlgorithm<'t> {
         self.growth = Some(policy);
     }
 
+    /// A [`DriverCtx`] over the algorithm state the driver may touch.
+    /// Written as a macro-free inline block at each call site would
+    /// repeat four field borrows; this keeps them in one place. (The
+    /// borrows are all of distinct fields, so the `&mut self.driver`
+    /// receiver at the call sites stays disjoint.)
+    fn ctx<'a>(
+        layer: usize,
+        live: &'a mut Vec<bool>,
+        fabric: &'a Option<Box<dyn CommFabric>>,
+        weights: &'a [Matrix],
+    ) -> DriverCtx<'a> {
+        DriverCtx {
+            layer,
+            live,
+            engine: fabric.as_ref().map(|f| f.engine()),
+            weights,
+        }
+    }
+
     /// Rebuild the mid-layer transient state a checkpoint does not carry
     /// verbatim: the per-node solvers (re-derived from the restored
     /// features, bit-identical) and the averaging scratch buffers.
@@ -529,7 +595,12 @@ impl<'t> DssfnAlgorithm<'t> {
             )));
         }
         let q = self.arch.num_classes;
-        let feat_dim = self.nodes[0].features().rows();
+        let params = self.hyper.admm_params(self.layer, q);
+        params.validate()?;
+        let ip = self.driver.in_process().ok_or_else(|| {
+            Error::Checkpoint("checkpoint restore requires the in-process driver".into())
+        })?;
+        let feat_dim = ip.nodes[0].features().rows();
         for st in &ck.states {
             if st.z.shape() != (q, feat_dim) {
                 return Err(Error::Checkpoint(format!(
@@ -538,19 +609,19 @@ impl<'t> DssfnAlgorithm<'t> {
                 )));
             }
         }
-        let params = self.hyper.admm_params(self.layer, q);
-        params.validate()?;
         {
-            let backend = &self.backend;
-            for_each_node_mut(&mut self.nodes, self.threads, |_, actor| {
+            let backend = Arc::clone(&ip.backend);
+            let threads = ip.threads;
+            for_each_node_mut(&mut ip.nodes, threads, |_, actor| {
                 actor.prepare_solver(backend.as_ref(), params.mu)
             })?;
         }
-        for (actor, st) in self.nodes.iter_mut().zip(&ck.states) {
+        for (actor, st) in ip.nodes.iter_mut().zip(&ck.states) {
             actor.set_state(st.clone());
         }
         self.s_vals = (0..m).map(|_| Matrix::zeros(q, feat_dim)).collect();
         self.avg = Matrix::zeros(q, feat_dim);
+        self.costs = vec![0.0; m];
         // The staleness history ring cannot be rebuilt (it holds past
         // averaging results), so the checkpoint carries it verbatim.
         let s = self.comm.iter_staleness;
@@ -573,6 +644,12 @@ impl<'t> DssfnAlgorithm<'t> {
     }
 
     fn sim_comm_secs(&self) -> f64 {
+        // A driver mid-fault holds the clock on its own restricted
+        // engine (wire transport during an outage); otherwise the
+        // fabric's engine is the single source of simulated time.
+        if let Some(secs) = self.driver.simulated_seconds() {
+            return secs;
+        }
         self.fabric
             .as_ref()
             .map(|f| f.engine().simulated_seconds())
@@ -586,18 +663,16 @@ impl<'t> DssfnAlgorithm<'t> {
         self.comm_before = self.ledger.snapshot();
         let params = self.hyper.admm_params(self.layer, q);
         params.validate()?;
-        let feat_dim = self.nodes[0].features().rows();
         // All iteration buffers are preallocated here; the iterate phase
         // writes into them in place (per-node workspaces live inside
         // each actor's solver, built during prepare).
-        {
-            let backend = &self.backend;
-            for_each_node_mut(&mut self.nodes, self.threads, |_, actor| {
-                actor.prepare(backend.as_ref(), params.mu, q)
-            })?;
-        }
+        let feat_dim = {
+            let mut ctx = Self::ctx(self.layer, &mut self.live, &self.fabric, &self.weights);
+            self.driver.prepare_layer(&mut ctx, q, params.mu, events)?
+        };
         self.s_vals = (0..m).map(|_| Matrix::zeros(q, feat_dim)).collect();
         self.avg = Matrix::zeros(q, feat_dim);
+        self.costs = vec![0.0; m];
         self.cost_curve = Vec::new();
         self.gossip_rounds = 0;
         // Each layer starts back at the configured base δ and period 1;
@@ -627,20 +702,17 @@ impl<'t> DssfnAlgorithm<'t> {
         let q = self.arch.num_classes;
         let params = self.hyper.admm_params(self.layer, q);
 
-        // (1) O-update, fanned out, written into each actor's state.
-        // Crashed nodes (fault injection) are skipped: their O/Λ/Z stay
-        // frozen at the pre-crash values until they rejoin. The mask is
-        // the one left by the *previous* averaging — this iteration's
-        // membership step happens inside the fabric call below.
+        // (0) Driver's top-of-iteration hook: the wire driver admits
+        // pending rejoiners here (handshake, catch-up, liveness flip) —
+        // before the O-update, exactly where the legacy serve loop did.
+        // In-process runs do nothing (chaos churn happens inside the
+        // fabric's averaging call below).
         {
-            let live = &self.live;
-            for_each_node_mut(&mut self.nodes, self.threads, |i, actor| {
-                if !live[i] {
-                    return Ok(());
-                }
-                actor.o_update()
-            })?;
+            let mut ctx = Self::ctx(self.layer, &mut self.live, &self.fabric, &self.weights);
+            self.driver
+                .begin_iteration(&mut ctx, k, &mut self.s_vals, events)?;
         }
+
         // Which relaxations apply to this iteration. The layer's final
         // iteration (by count or by budget truncation) always
         // synchronizes, and iteration staleness additionally drains the
@@ -665,10 +737,14 @@ impl<'t> DssfnAlgorithm<'t> {
 
         let mut gossip_event: Option<(usize, u64)> = None;
         if comm_this_iter {
-            // (2) Averaging of O + Λ: every actor stages its share into
+            // (1)+(2) O-update on every live node (crashed nodes keep
+            // their O/Λ/Z frozen at the pre-crash values until they
+            // rejoin), then every node's share `S = O + Λ` staged into
             // the contiguous exchange bank the fabric averages in place.
-            for (sv, actor) in self.s_vals.iter_mut().zip(&self.nodes) {
-                actor.stage_share(sv)?;
+            {
+                let mut ctx = Self::ctx(self.layer, &mut self.live, &self.fabric, &self.weights);
+                self.driver
+                    .collect_shares(&mut ctx, k, &mut self.s_vals, events)?;
             }
             match (&self.opts.consensus, &self.fabric) {
                 (ConsensusMode::Exact, _) => {
@@ -690,14 +766,28 @@ impl<'t> DssfnAlgorithm<'t> {
                     } else {
                         *delta
                     };
-                    let (rounds, bytes) = if relaxed_iter {
-                        // The barrier slack the clock may claim is the
-                        // largest age the schedule can produce (s for
-                        // i.i.d. draws, the configured lag otherwise).
-                        let slack = self.comm.iter_schedule.clock_slack(s);
-                        fab.average_relaxed(&mut self.s_vals, eff_delta, slack)?
-                    } else {
-                        fab.average(&mut self.s_vals, eff_delta)?
+                    let (rounds, bytes) = match self.driver.mix_restricted(&mut self.s_vals, eff_delta)? {
+                        // The driver averaged over a restricted live set
+                        // (wire transport mid-outage). Bump the fabric's
+                        // schedule cursor so seeded schedules stay
+                        // aligned across the outage — the same rule
+                        // ChaosFabric applies to its restricted rounds.
+                        Some(rb) => {
+                            fab.set_calls(fab.calls() + 1);
+                            rb
+                        }
+                        None => {
+                            if relaxed_iter {
+                                // The barrier slack the clock may claim is
+                                // the largest age the schedule can produce
+                                // (s for i.i.d. draws, the configured lag
+                                // otherwise).
+                                let slack = self.comm.iter_schedule.clock_slack(s);
+                                fab.average_relaxed(&mut self.s_vals, eff_delta, slack)?
+                            } else {
+                                fab.average(&mut self.s_vals, eff_delta)?
+                            }
+                        }
                     };
                     self.gossip_rounds += rounds;
                     gossip_event = Some((rounds, bytes));
@@ -744,14 +834,10 @@ impl<'t> DssfnAlgorithm<'t> {
             // Averaging skipped (period doubling): the consensus Z is
             // held fixed — still identical on every node — and the dual
             // ascent keeps charging the constraint violation against it.
-            // Crashed nodes stay frozen.
-            let live = &self.live;
-            for (i, actor) in self.nodes.iter_mut().enumerate() {
-                if !live[i] {
-                    continue;
-                }
-                actor.hold_dual()?;
-            }
+            // Crashed nodes stay frozen. (The O-update of this iteration
+            // happens inside the driver's hold round too.)
+            let mut ctx = Self::ctx(self.layer, &mut self.live, &self.fabric, &self.weights);
+            self.driver.hold_round(&mut ctx, k, events)?;
         } else if s > 0 {
             // Iteration-level bounded staleness (Liang et al. 2020):
             // each node projects a consensus average up to `s` ADMM
@@ -763,30 +849,38 @@ impl<'t> DssfnAlgorithm<'t> {
             // Reads never reach before the layer's first averaging.
             let mut rng =
                 Xoshiro256StarStar::seed_from_u64(self.iter_seed).derive(self.iter_stale_cursor);
-            let s_vals = &self.s_vals;
-            let stale_hist = &self.stale_hist;
-            for (i, actor) in self.nodes.iter_mut().enumerate() {
-                let a = if relaxed_iter {
-                    match self.comm.iter_schedule {
-                        StalenessSchedule::Iid => rng.next_below(s + 1).min(k),
-                        StalenessSchedule::FixedLag(d) => d.min(k),
-                        StalenessSchedule::OneSlow { node, lag } => {
-                            if i == node {
-                                lag.min(k)
-                            } else {
-                                0
+            let sources: Vec<&Matrix> = {
+                let s_vals = &self.s_vals;
+                let stale_hist = &self.stale_hist;
+                (0..m)
+                    .map(|i| {
+                        let a = if relaxed_iter {
+                            match self.comm.iter_schedule {
+                                StalenessSchedule::Iid => rng.next_below(s + 1).min(k),
+                                StalenessSchedule::FixedLag(d) => d.min(k),
+                                StalenessSchedule::OneSlow { node, lag } => {
+                                    if i == node {
+                                        lag.min(k)
+                                    } else {
+                                        0
+                                    }
+                                }
                             }
+                        } else {
+                            0
+                        };
+                        if a == 0 {
+                            &s_vals[i]
+                        } else {
+                            &stale_hist[((k - a) % s) * m + i]
                         }
-                    }
-                } else {
-                    0
-                };
-                let src = if a == 0 {
-                    &s_vals[i]
-                } else {
-                    &stale_hist[((k - a) % s) * m + i]
-                };
-                actor.absorb(src, params.eps)?;
+                    })
+                    .collect()
+            };
+            {
+                let mut ctx = Self::ctx(self.layer, &mut self.live, &self.fabric, &self.weights);
+                self.driver
+                    .deliver_mixed(&mut ctx, k, last_iter, params.eps, &sources, events)?;
             }
             // Archive this iteration's fresh averages for future stale
             // reads (after every node has read — slot k % s still holds
@@ -800,23 +894,21 @@ impl<'t> DssfnAlgorithm<'t> {
             // Post-averaging mask: a node that crashed during this call
             // must not project the live set's consensus; one that just
             // rejoined reads the catch-up average the fabric installed.
-            let live = &self.live;
-            for (i, (actor, sv)) in self.nodes.iter_mut().zip(&self.s_vals).enumerate() {
-                if !live[i] {
-                    continue;
-                }
-                actor.absorb(sv, params.eps)?;
-            }
+            // (The driver skips dead nodes.)
+            let sources: Vec<&Matrix> = self.s_vals.iter().collect();
+            let mut ctx = Self::ctx(self.layer, &mut self.live, &self.fabric, &self.weights);
+            self.driver
+                .deliver_mixed(&mut ctx, k, last_iter, params.eps, &sources, events)?;
         }
         // Cost recording (same condition and order as the legacy loop).
         let mut cost = None;
         let mut delta_event: Option<f64> = None;
         if self.opts.record_cost_curve {
-            let costs: Vec<f64> = {
-                let nodes = &self.nodes;
-                for_each_node(m, self.threads, |i| nodes[i].cost())?
-            };
-            let c: f64 = costs.iter().sum();
+            {
+                let mut ctx = Self::ctx(self.layer, &mut self.live, &self.fabric, &self.weights);
+                self.driver.collect_costs(&mut ctx, k, &mut self.costs, events)?;
+            }
+            let c: f64 = self.costs.iter().sum();
             // Adaptive-δ controller (L-FGADMM-style): a plateaued cost
             // loosens the working δ (and doubles the working period) for
             // the *next* averaging, renewed progress snaps both back.
@@ -851,13 +943,14 @@ impl<'t> DssfnAlgorithm<'t> {
             // pre-crash state and would report a spurious gap. Fault-free
             // runs have every node live, so the reference stays node 0.
             let rep = self.live.iter().position(|&l| l).unwrap_or(0);
-            let z0 = &self.nodes[rep].state().z;
-            self.nodes
-                .iter()
-                .enumerate()
-                .filter(|&(i, _)| self.live[i])
-                .map(|(_, n)| n.state().z.max_abs_diff(z0))
-                .fold(0.0, f64::max)
+            let z0 = self.driver.z(rep);
+            let mut gap = 0.0_f64;
+            for i in 0..m {
+                if self.live[i] {
+                    gap = gap.max(self.driver.z(i).max_abs_diff(z0));
+                }
+            }
+            gap
         } else {
             0.0
         };
@@ -898,6 +991,8 @@ impl<'t> DssfnAlgorithm<'t> {
     /// feature forward (or final-output freeze on the last layer).
     fn do_advance(&mut self, events: &mut Vec<StepEvent>) -> Result<()> {
         let m = self.opts.nodes;
+        let q = self.arch.num_classes;
+        let k_last = self.hyper.admm_params(self.layer, q).iterations.saturating_sub(1);
 
         // Consensus diagnostics, over the live set: crashed nodes hold
         // frozen pre-crash state (fault injection) and would otherwise
@@ -905,24 +1000,25 @@ impl<'t> DssfnAlgorithm<'t> {
         // fault-free path, so `rep` is node 0 there and the numbers are
         // exactly the historical ones.
         let rep = self.live.iter().position(|&l| l).unwrap_or(0);
-        let z0 = self.nodes[rep].state().z.clone();
-        let disagreement = self
-            .nodes
-            .iter()
-            .enumerate()
-            .filter(|&(i, _)| self.live[i])
-            .map(|(_, n)| n.state().z.max_abs_diff(&z0))
-            .fold(0.0, f64::max);
+        let z0 = self.driver.z(rep).clone();
+        let mut disagreement = 0.0_f64;
+        for i in 0..m {
+            if self.live[i] {
+                disagreement = disagreement.max(self.driver.z(i).max_abs_diff(&z0));
+            }
+        }
 
         // Global layer cost (for the record, and for size estimation).
         let layer_cost = match self.cost_curve.last().copied() {
             Some(c) => c,
             None => {
-                let costs: Vec<f64> = {
-                    let nodes = &self.nodes;
-                    for_each_node(m, self.threads, |i| nodes[i].cost())?
-                };
-                costs.iter().sum()
+                {
+                    let mut ctx =
+                        Self::ctx(self.layer, &mut self.live, &self.fabric, &self.weights);
+                    self.driver
+                        .probe_costs(&mut ctx, k_last, &mut self.costs, events)?;
+                }
+                self.costs.iter().sum()
             }
         };
         // Self-size estimation: stop growing once the cost flattens.
@@ -938,32 +1034,16 @@ impl<'t> DssfnAlgorithm<'t> {
         let last_layer = self.layer == self.arch.layers || stop_growth || budget_stop;
         if !last_layer {
             let r_next = self.random.layer(self.layer + 1);
-            let mut ws: Vec<Matrix> = {
-                let nodes = &self.nodes;
-                for_each_node(m, self.threads, |i| build_weight(&nodes[i].state().z, r_next))?
+            let w0 = {
+                let mut ctx = Self::ctx(self.layer, &mut self.live, &self.fabric, &self.weights);
+                self.driver
+                    .advance_layer(&mut ctx, k_last, Some(r_next), rep, events)?
             };
-            // Crashed nodes would build a weight from stale Z; forward
-            // them through the live representative's weight instead so
-            // their features stay coherent with the cluster when they
-            // rejoin in a later layer. No-op (and no clones) when every
-            // node is live.
-            if self.live.iter().any(|&l| !l) {
-                let w_rep = ws[rep].clone();
-                for (i, w) in ws.iter_mut().enumerate() {
-                    if !self.live[i] {
-                        *w = w_rep.clone();
-                    }
-                }
-            }
-            {
-                let backend = &self.backend;
-                let ws = &ws;
-                for_each_node_mut(&mut self.nodes, self.threads, |i, actor| {
-                    actor.advance(backend.as_ref(), &ws[i])
-                })?;
-            }
-            self.weights.push(ws.into_iter().next().expect("m >= 1"));
+            self.weights
+                .push(w0.ok_or_else(|| Error::Config("driver advanced without a weight".into()))?);
         } else {
+            let mut ctx = Self::ctx(self.layer, &mut self.live, &self.fabric, &self.weights);
+            self.driver.advance_layer(&mut ctx, k_last, None, rep, events)?;
             self.final_o = Some(z0);
         }
 
@@ -979,9 +1059,7 @@ impl<'t> DssfnAlgorithm<'t> {
         events.push(StepEvent::LayerAdvanced { layer, cost: layer_cost, last: last_layer });
 
         // Drop the per-layer transients eagerly.
-        for actor in &mut self.nodes {
-            actor.drop_layer();
-        }
+        self.driver.end_layer();
         self.s_vals = Vec::new();
         self.avg = Matrix::zeros(0, 0);
         self.stale_hist = Vec::new();
@@ -1087,6 +1165,13 @@ impl Algorithm for DssfnAlgorithm<'_> {
     }
 
     fn checkpoint(&self) -> Result<Checkpoint> {
+        let ip = self.driver.in_process_ref().ok_or_else(|| {
+            Error::Checkpoint(
+                "serve sessions cannot checkpoint: per-node state lives in remote \
+                 worker processes"
+                    .into(),
+            )
+        })?;
         let phase = match self.phase {
             Phase::Prepare => CkPhase::Prepare,
             Phase::Iterate { k } => CkPhase::Iterate(k as u64),
@@ -1099,7 +1184,7 @@ impl Algorithm for DssfnAlgorithm<'_> {
         };
         let states = match self.phase {
             Phase::Prepare => Vec::new(),
-            _ => self.nodes.iter().map(|n| n.state().clone()).collect(),
+            _ => ip.nodes.iter().map(|n| n.state().clone()).collect(),
         };
         let stale_hist = match self.phase {
             Phase::Prepare => Vec::new(),
@@ -1144,7 +1229,7 @@ impl Algorithm for DssfnAlgorithm<'_> {
             layer: self.layer as u64,
             phase,
             weights: self.weights.clone(),
-            ys: self.nodes.iter().map(|n| n.features().clone()).collect(),
+            ys: ip.nodes.iter().map(|n| n.features().clone()).collect(),
             states,
             cost_curve: self.cost_curve.clone(),
             gossip_rounds: self.gossip_rounds as u64,

@@ -1,0 +1,398 @@
+//! The per-node I/O seam of the dSSFN phase machine.
+//!
+//! [`crate::coordinator::DssfnAlgorithm`] owns the *algorithm* — phase
+//! transitions, the communication schedule, adaptive δ, staleness
+//! bookkeeping, cost curves, checkpoints. What it does **not** own is
+//! where the `M` nodes live: behind a `Vec` of in-process
+//! [`NodeActor`]s, or behind `M` TCP connections to worker processes.
+//! [`NodeDriver`] is that seam. Every per-node operation the phase
+//! machine performs (prepare, O-update + share staging, mixed-share
+//! delivery, dual-ascent holds, cost sampling, the layer advance) goes
+//! through this trait, so exactly one copy of the phase machine exists
+//! and `dssfn serve` hosts every [`crate::network::CommFabric`]
+//! schedule the in-process coordinator does.
+//!
+//! Two implementations:
+//!
+//! * [`InProcessDriver`] (here) — the direct `NodeActor` + thread-pool
+//!   path. Method bodies are verbatim the per-node loops the
+//!   coordinator ran before the seam existed, so in-process runs are
+//!   bit-identical to the pre-refactor machine.
+//! * `WireDriver` ([`crate::transport::server`]) — the serve side:
+//!   `Step`/`Share`/`Mixed`/`Hold`/`Cost` frames to worker processes,
+//!   with rendezvous, rejoin catch-up and quorum stalls.
+//!
+//! The driver deliberately does **not** own the exchange bank: the
+//! fabric averages all `M` staged shares as one contiguous
+//! `&mut [Matrix]`, so the algorithm owns that slice and passes it in.
+//! Liveness is likewise algorithm state (chaos injection mutates it via
+//! the fabric; a wire peer drop mutates it via the driver) and is
+//! passed in through [`DriverCtx`].
+
+use crate::coordinator::{for_each_node, for_each_node_mut};
+use crate::linalg::Matrix;
+use crate::network::GossipEngine;
+use crate::node::NodeActor;
+use crate::runtime::ComputeBackend;
+use crate::session::StepEvent;
+use crate::ssfn::build_weight;
+use crate::Result;
+use std::sync::Arc;
+
+/// Algorithm state a driver call may read or mutate: the current layer,
+/// the liveness mask (a wire driver drops/readmits peers mid-call), the
+/// fabric's gossip engine (for simulated-clock transfer on live-set
+/// changes; `None` under exact consensus) and the weight stack built so
+/// far (rejoin catch-up payloads).
+pub struct DriverCtx<'a> {
+    /// Current layer index.
+    pub layer: usize,
+    /// Per-node liveness; drivers that observe churn mutate it.
+    pub live: &'a mut Vec<bool>,
+    /// The communication fabric's engine, when one exists.
+    pub engine: Option<&'a GossipEngine>,
+    /// Weights of every completed layer (node 0's copies).
+    pub weights: &'a [Matrix],
+}
+
+/// The per-node I/O contract between [`crate::coordinator::DssfnAlgorithm`]
+/// and its `M` protocol participants. See the module docs for the two
+/// implementations and the ownership rules.
+///
+/// Methods that can observe membership churn take [`DriverCtx`] and may
+/// flip `ctx.live` entries and push `NodeDropped`/`NodeRejoined` events;
+/// the in-process driver leaves both alone (chaos churn flows through
+/// the fabric instead).
+pub trait NodeDriver: Send {
+    /// Short tag for diagnostics.
+    fn describe(&self) -> &'static str;
+
+    /// The liveness mask a fresh run starts from (a wire rendezvous may
+    /// gate on fewer than `M` workers; in-process runs start all-live).
+    fn initial_live(&self, m: usize) -> Vec<bool> {
+        vec![true; m]
+    }
+
+    /// Top-of-iteration hook. The wire driver admits pending rejoiners
+    /// here (handshake + catch-up from `ctx.weights` and `bank`);
+    /// in-process runs need nothing.
+    fn begin_iteration(
+        &mut self,
+        ctx: &mut DriverCtx<'_>,
+        k: usize,
+        bank: &mut [Matrix],
+        events: &mut Vec<StepEvent>,
+    ) -> Result<()> {
+        let _ = (ctx, k, bank, events);
+        Ok(())
+    }
+
+    /// Prepare every node for the layer solve (Gram build + factor,
+    /// ADMM state zeroed at `Q×feat_dim`). Returns the layer's feature
+    /// dimension.
+    fn prepare_layer(
+        &mut self,
+        ctx: &mut DriverCtx<'_>,
+        q: usize,
+        mu: f64,
+        events: &mut Vec<StepEvent>,
+    ) -> Result<usize>;
+
+    /// One O-update on every live node, then stage each share
+    /// `S_m = O_m + Λ_m` into the bank in node order.
+    fn collect_shares(
+        &mut self,
+        ctx: &mut DriverCtx<'_>,
+        k: usize,
+        bank: &mut [Matrix],
+        events: &mut Vec<StepEvent>,
+    ) -> Result<()>;
+
+    /// Averaging override for a restricted live set. `Ok(None)` (the
+    /// default, and always the in-process answer) means the fabric
+    /// handles the averaging — the bit-identical path. The wire driver
+    /// returns `Some((rounds, bytes))` while peers are dead: its
+    /// restricted engine averages the survivors, and the caller bumps
+    /// the fabric's schedule cursor to keep seeded schedules aligned
+    /// (the same rule `ChaosFabric` applies in-process).
+    fn mix_restricted(&mut self, bank: &mut [Matrix], delta: f64) -> Result<Option<(usize, u64)>> {
+        let _ = (bank, delta);
+        Ok(None)
+    }
+
+    /// Deliver each live node its averaged share: `Z = Π_ε(sources[i])`,
+    /// then dual ascent. `sources` has one entry per node — usually the
+    /// bank slots, but under iteration staleness the algorithm routes
+    /// some nodes an older average.
+    fn deliver_mixed(
+        &mut self,
+        ctx: &mut DriverCtx<'_>,
+        k: usize,
+        last_iter: bool,
+        eps: f64,
+        sources: &[&Matrix],
+        events: &mut Vec<StepEvent>,
+    ) -> Result<()>;
+
+    /// A communication-skipped iteration (L-FGADMM period doubling):
+    /// O-update + dual ascent against the held `Z` on every live node,
+    /// no averaging.
+    fn hold_round(
+        &mut self,
+        ctx: &mut DriverCtx<'_>,
+        k: usize,
+        events: &mut Vec<StepEvent>,
+    ) -> Result<()>;
+
+    /// Fill the per-node cost bank `‖T_m − Z_m Y_m‖²_F`. Entries of
+    /// dead nodes keep their previous value (their frozen state prices
+    /// the in-process sum; the server cannot ask a dead worker).
+    fn collect_costs(
+        &mut self,
+        ctx: &mut DriverCtx<'_>,
+        k: usize,
+        costs: &mut [f64],
+        events: &mut Vec<StepEvent>,
+    ) -> Result<()>;
+
+    /// Layer-end cost sampling when no per-iteration curve was recorded.
+    fn probe_costs(
+        &mut self,
+        ctx: &mut DriverCtx<'_>,
+        k_last: usize,
+        costs: &mut [f64],
+        events: &mut Vec<StepEvent>,
+    ) -> Result<()>;
+
+    /// Node `i`'s consensus variable `Z_i` (the wire driver's local
+    /// mirror). Read-only diagnostics + weight/output builds.
+    fn z(&self, i: usize) -> &Matrix;
+
+    /// Advance past the layer. With `r_next` the nodes build their
+    /// weights and forward their features; the returned matrix is the
+    /// representative weight for the model stack (node 0's, or the live
+    /// representative's when node 0 is dead). `r_next = None` means the
+    /// run is over after this layer — nodes wind down, nothing returns.
+    fn advance_layer(
+        &mut self,
+        ctx: &mut DriverCtx<'_>,
+        k_last: usize,
+        r_next: Option<&Matrix>,
+        rep: usize,
+        events: &mut Vec<StepEvent>,
+    ) -> Result<Option<Matrix>>;
+
+    /// Drop per-layer transients after the advance.
+    fn end_layer(&mut self);
+
+    /// Simulated-clock override: `Some` while the driver's own engine
+    /// (not the fabric's) holds the clock — the wire driver during a
+    /// restricted-live-set stretch. `None` otherwise.
+    fn simulated_seconds(&self) -> Option<f64> {
+        None
+    }
+
+    /// Checkpoint/restore escape hatch: the in-process driver exposes
+    /// its actors (features + ADMM state live here); a wire driver
+    /// returns `None` — worker state lives in remote processes, so
+    /// serve sessions do not checkpoint.
+    fn in_process(&mut self) -> Option<&mut InProcessDriver> {
+        None
+    }
+
+    /// Read-only form of [`NodeDriver::in_process`].
+    fn in_process_ref(&self) -> Option<&InProcessDriver> {
+        None
+    }
+}
+
+/// The direct-call driver: `M` [`NodeActor`]s in this process, per-node
+/// work fanned out over the coordinator thread pool. Method bodies are
+/// the exact per-node loops `DssfnAlgorithm` ran before the seam
+/// existed — bit-identical, thread-split-independent.
+pub struct InProcessDriver {
+    pub(crate) nodes: Vec<NodeActor>,
+    pub(crate) threads: usize,
+    pub(crate) backend: Arc<dyn ComputeBackend>,
+}
+
+impl InProcessDriver {
+    /// Wrap `nodes` with a node-fan-out thread budget and the compute
+    /// backend every per-node kernel runs through.
+    pub fn new(nodes: Vec<NodeActor>, threads: usize, backend: Arc<dyn ComputeBackend>) -> Self {
+        Self { nodes, threads, backend }
+    }
+
+    fn fill_costs(&self, costs: &mut [f64]) -> Result<()> {
+        // All `M` nodes, dead included: a frozen node's cached solver
+        // still prices its frozen state, exactly the legacy sum.
+        let sampled: Vec<f64> = {
+            let nodes = &self.nodes;
+            for_each_node(self.nodes.len(), self.threads, |i| nodes[i].cost())?
+        };
+        costs.copy_from_slice(&sampled);
+        Ok(())
+    }
+
+    fn o_update_live(&mut self, live: &[bool]) -> Result<()> {
+        for_each_node_mut(&mut self.nodes, self.threads, |i, actor| {
+            if !live[i] {
+                return Ok(());
+            }
+            actor.o_update()
+        })
+    }
+}
+
+impl NodeDriver for InProcessDriver {
+    fn describe(&self) -> &'static str {
+        "in-process"
+    }
+
+    fn prepare_layer(
+        &mut self,
+        _ctx: &mut DriverCtx<'_>,
+        q: usize,
+        mu: f64,
+        _events: &mut Vec<StepEvent>,
+    ) -> Result<usize> {
+        let feat_dim = self.nodes[0].features().rows();
+        {
+            let backend = &self.backend;
+            for_each_node_mut(&mut self.nodes, self.threads, |_, actor| {
+                actor.prepare(backend.as_ref(), mu, q)
+            })?;
+        }
+        Ok(feat_dim)
+    }
+
+    fn collect_shares(
+        &mut self,
+        ctx: &mut DriverCtx<'_>,
+        _k: usize,
+        bank: &mut [Matrix],
+        _events: &mut Vec<StepEvent>,
+    ) -> Result<()> {
+        // O-update fanned out over the live set (crashed nodes keep
+        // their frozen O/Λ/Z), then every actor — dead ones included —
+        // stages into its bank slot in node order.
+        self.o_update_live(ctx.live)?;
+        for (sv, actor) in bank.iter_mut().zip(&self.nodes) {
+            actor.stage_share(sv)?;
+        }
+        Ok(())
+    }
+
+    fn deliver_mixed(
+        &mut self,
+        ctx: &mut DriverCtx<'_>,
+        _k: usize,
+        _last_iter: bool,
+        eps: f64,
+        sources: &[&Matrix],
+        _events: &mut Vec<StepEvent>,
+    ) -> Result<()> {
+        for (i, actor) in self.nodes.iter_mut().enumerate() {
+            if !ctx.live[i] {
+                continue;
+            }
+            actor.absorb(sources[i], eps)?;
+        }
+        Ok(())
+    }
+
+    fn hold_round(
+        &mut self,
+        ctx: &mut DriverCtx<'_>,
+        _k: usize,
+        _events: &mut Vec<StepEvent>,
+    ) -> Result<()> {
+        self.o_update_live(ctx.live)?;
+        for (i, actor) in self.nodes.iter_mut().enumerate() {
+            if !ctx.live[i] {
+                continue;
+            }
+            actor.hold_dual()?;
+        }
+        Ok(())
+    }
+
+    fn collect_costs(
+        &mut self,
+        _ctx: &mut DriverCtx<'_>,
+        _k: usize,
+        costs: &mut [f64],
+        _events: &mut Vec<StepEvent>,
+    ) -> Result<()> {
+        self.fill_costs(costs)
+    }
+
+    fn probe_costs(
+        &mut self,
+        _ctx: &mut DriverCtx<'_>,
+        _k_last: usize,
+        costs: &mut [f64],
+        _events: &mut Vec<StepEvent>,
+    ) -> Result<()> {
+        self.fill_costs(costs)
+    }
+
+    fn z(&self, i: usize) -> &Matrix {
+        &self.nodes[i].state().z
+    }
+
+    fn advance_layer(
+        &mut self,
+        ctx: &mut DriverCtx<'_>,
+        _k_last: usize,
+        r_next: Option<&Matrix>,
+        rep: usize,
+        _events: &mut Vec<StepEvent>,
+    ) -> Result<Option<Matrix>> {
+        let r = match r_next {
+            Some(r) => r,
+            // Last layer: the actors keep their state for the caller's
+            // final-output read; end_layer drops it.
+            None => return Ok(None),
+        };
+        let m = self.nodes.len();
+        let mut ws: Vec<Matrix> = {
+            let nodes = &self.nodes;
+            for_each_node(m, self.threads, |i| build_weight(&nodes[i].state().z, r))?
+        };
+        // Crashed nodes would build a weight from stale Z; forward them
+        // through the live representative's weight instead so their
+        // features stay coherent with the cluster when they rejoin in a
+        // later layer. No-op (and no clones) when every node is live.
+        if ctx.live.iter().any(|&l| !l) {
+            let w_rep = ws[rep].clone();
+            for (i, w) in ws.iter_mut().enumerate() {
+                if !ctx.live[i] {
+                    *w = w_rep.clone();
+                }
+            }
+        }
+        {
+            let backend = &self.backend;
+            let ws = &ws;
+            for_each_node_mut(&mut self.nodes, self.threads, |i, actor| {
+                actor.advance(backend.as_ref(), &ws[i])
+            })?;
+        }
+        Ok(Some(ws.into_iter().next().expect("m >= 1")))
+    }
+
+    fn end_layer(&mut self) {
+        for actor in &mut self.nodes {
+            actor.drop_layer();
+        }
+    }
+
+    fn in_process(&mut self) -> Option<&mut InProcessDriver> {
+        Some(self)
+    }
+
+    fn in_process_ref(&self) -> Option<&InProcessDriver> {
+        Some(self)
+    }
+}

@@ -6,12 +6,14 @@
 //! Gram solver and the ADMM variables `(O_m, Λ_m, Z_m)` — lives behind
 //! one type that talks to the rest of the system only through explicit
 //! method calls carrying `Q×n` matrices. The coordinator
-//! ([`crate::coordinator::DssfnAlgorithm`]) holds a `Vec<NodeActor>` and
-//! a fabric handle; the wire transport ([`crate::transport`]) holds a
-//! single `NodeActor` per worker process and moves the same matrices
-//! over TCP frames instead of through a `Vec`. Both paths execute the
-//! identical per-node operation sequence, which is what makes the
-//! networked run bit-identical to the in-process one.
+//! ([`crate::coordinator::DssfnAlgorithm`]) reaches its actors through
+//! the [`NodeDriver`] seam ([`driver`]): [`InProcessDriver`] holds a
+//! `Vec<NodeActor>` and fans per-node calls over the thread pool, while
+//! the wire transport ([`crate::transport`]) holds a single `NodeActor`
+//! per worker process and moves the same matrices over TCP frames. Both
+//! drivers execute the identical per-node operation sequence under the
+//! one phase machine, which is what makes the networked run
+//! bit-identical to the in-process one.
 //!
 //! The actor deliberately does **not** own the exchange buffer its share
 //! `S_m = O_m + Λ_m` is averaged in: consensus averaging needs all `M`
@@ -24,6 +26,10 @@ use crate::data::Dataset;
 use crate::linalg::Matrix;
 use crate::runtime::ComputeBackend;
 use crate::{Error, Result};
+
+mod driver;
+
+pub use driver::{DriverCtx, InProcessDriver, NodeDriver};
 
 /// One protocol participant: shard, features, solver and ADMM state.
 ///

@@ -4,11 +4,19 @@
 //! (generated locally from the shared seed — data never travels), the
 //! layer features, and the ADMM variables. All control flows from the
 //! server: the worker answers [`Message::Step`] with its staged share,
-//! absorbs [`Message::Mixed`], reports costs when asked, builds its own
-//! weight on [`Message::Advance`] and rebuilds everything from a
-//! [`Message::CatchUp`] replay after a reconnect. Because the actor
-//! methods are the exact per-node operations the in-process coordinator
-//! calls, a fault-free wire run is bit-identical to `dssfn train`.
+//! absorbs [`Message::Mixed`], runs dual-ascent-only rounds on
+//! [`Message::Hold`] (adaptive period doubling), reports costs when
+//! asked, builds its own weight on [`Message::Advance`] and rebuilds
+//! layer state from a [`Message::CatchUp`] after a reconnect. Because
+//! the actor methods are the exact per-node operations the in-process
+//! coordinator calls, a fault-free wire run is bit-identical to
+//! `dssfn train` under every wire-capable schedule.
+//!
+//! The worker keeps its own **layer-boundary snapshot**: its features
+//! already embed every weight the server has advanced it through (the
+//! count is tracked in `have` and declared in each `Hello`), so a
+//! rejoin catch-up ships only the weights past that boundary — O(1)
+//! instead of O(layers) for the common drop-and-reconnect case.
 //!
 //! Connection loss triggers seeded-exponential-backoff reconnects (up
 //! to `--reconnect-max`); a `Reject` naming "already connected" is
@@ -185,17 +193,16 @@ where
     let mut actor = NodeActor::new(opts.shard, shard);
     let backend = NativeBackend::new();
     let random = RandomMatrices::generate(&arch, cfg.seed)?;
-    let hello = Message::Hello {
-        protocol: PROTOCOL_VERSION,
-        shard: opts.shard as u64,
-        nodes: m as u64,
-        config_fp: config_fingerprint(cfg),
-        task_checksum: checksum,
-    };
+    let schedule = cfg.comm_config()?.schedule.describe();
+    let config_fp = config_fingerprint(cfg);
 
     let mut scratch: Vec<u8> = Vec::new();
     let mut share = Matrix::zeros(0, 0);
     let mut prepared: Option<usize> = None;
+    // Layer-boundary snapshot depth: how many weights the actor's
+    // features already embed. Declared in every Hello so a rejoin
+    // catch-up ships only the missing tail.
+    let mut have: usize = 0;
     let mut first = true;
     'session: loop {
         if !first && opts.reconnect_max == 0 {
@@ -207,6 +214,16 @@ where
             opts.reconnect_max.max(8)
         } else {
             opts.reconnect_max
+        };
+        // Rebuilt per attempt round: `have` advances as layers complete.
+        let hello = Message::Hello {
+            protocol: PROTOCOL_VERSION,
+            shard: opts.shard as u64,
+            nodes: m as u64,
+            config_fp,
+            task_checksum: checksum,
+            schedule: schedule.clone(),
+            have_layer: have as u64,
         };
         let mut conn = establish(&mut connect, &hello, opts.io_timeout, attempts, &mut scratch)?;
         first = false;
@@ -272,6 +289,29 @@ where
                         continue 'session;
                     }
                 }
+                Message::Hold { layer, iteration } => {
+                    // Averaging skipped this iteration (adaptive period
+                    // doubling): O-update, then dual ascent against the
+                    // held Z. Cost still records — skipped iterations
+                    // repeat the last averaged objective in the curve.
+                    if prepared != Some(layer as usize) {
+                        return Err(Error::Network(format!(
+                            "protocol violation: Hold for unprepared layer {layer}"
+                        )));
+                    }
+                    actor.o_update()?;
+                    actor.hold_dual()?;
+                    if cfg.record_cost_curve {
+                        let reply = Message::Cost {
+                            layer,
+                            iteration,
+                            cost: actor.cost()?,
+                        };
+                        if wire::send(conn.as_mut(), &mut scratch, &reply).is_err() {
+                            continue 'session;
+                        }
+                    }
+                }
                 Message::Advance { layer, last } => {
                     let layer = layer as usize;
                     if last {
@@ -283,23 +323,47 @@ where
                     }
                     let w = build_weight(&actor.state().z, random.layer(layer + 1))?;
                     actor.advance(&backend, &w)?;
+                    have += 1;
                     prepared = None;
                 }
                 Message::CatchUp {
                     layer,
                     iteration: _,
+                    from_layer,
                     weights,
                     s,
                 } => {
                     let layer = layer as usize;
-                    // Rebuild from first principles: raw shard features
-                    // replayed through the server's weight stack, fresh
-                    // solver, consensus adopted (Z = Π_ε(s̄), Λ = O = 0).
-                    let x = actor.shard().x.clone();
-                    actor.set_features(x);
-                    actor.drop_layer();
+                    let from = from_layer as usize;
+                    // The server ships weights from our declared
+                    // boundary on; our features already embed the first
+                    // `have` weights, so only the tail is forwarded —
+                    // the O(1) rejoin. A from-scratch payload (from = 0
+                    // without a matching boundary) replays the raw
+                    // shard; any other boundary mismatch is a protocol
+                    // violation.
+                    if from != have {
+                        if from == 0 {
+                            let x = actor.shard().x.clone();
+                            actor.set_features(x);
+                            actor.drop_layer();
+                            have = 0;
+                        } else {
+                            return Err(Error::Network(format!(
+                                "protocol violation: catch-up from layer {from}, \
+                                 worker snapshot is at layer {have}"
+                            )));
+                        }
+                    }
                     for w in &weights {
                         actor.advance(&backend, w)?;
+                        have += 1;
+                    }
+                    if have != layer {
+                        return Err(Error::Network(format!(
+                            "protocol violation: catch-up left the weight stack at \
+                             layer {have}, server is at layer {layer}"
+                        )));
                     }
                     let params = hyper.admm_params(layer, q);
                     actor.prepare(&backend, params.mu, q)?;

@@ -1,17 +1,19 @@
 //! The `dssfn serve` side: rendezvous, handshake validation and the
-//! coordinator [`Algorithm`] that drives `M` remote workers through the
-//! per-layer consensus-ADMM protocol.
+//! [`WireDriver`] that lets the one dSSFN phase machine
+//! ([`crate::coordinator::DssfnAlgorithm`]) drive `M` remote workers.
 //!
-//! [`ServeAlgorithm`] is the wire twin of
-//! [`crate::coordinator::DssfnAlgorithm`]: the same phase machine
-//! (prepare → K iterations → advance), the same gossip math
-//! ([`GossipEngine::consensus_average_measured`] over the shares staged
-//! in node order), the same cost/diagnostic bookkeeping — but each
-//! node's O/Λ/Z state lives in a worker process's
-//! [`crate::node::NodeActor`] and only the `Q×n` shares cross the wire.
-//! The server mirrors `Z` locally (`z[i] = Π_ε(s̄_i)`) so weight
-//! building, growth decisions and the final model come out bit-identical
-//! to the in-process run on the fault-free path.
+//! There is no serve-side copy of the phase machine. [`ServeAlgorithm`]
+//! is a constructor: it validates the config for wire use, blocks in
+//! rendezvous, and assembles the ordinary `DssfnAlgorithm` over a
+//! [`WireDriver`] — so every [`crate::network::CommFabric`] schedule the
+//! in-process coordinator runs (sync, semisync, lossy, adaptive-δ,
+//! iteration staleness) runs identically over the wire: the same
+//! engine, the same seeded schedule draws, the same
+//! [`StepEvent`] stream. Each node's O/Λ/Z state lives in a worker
+//! process's [`crate::node::NodeActor`] and only the `Q×n` shares cross
+//! the wire; the driver mirrors `Z` locally (`z[i] = Π_ε(s̄_i)`) so
+//! weight building, growth decisions and the final model come out
+//! bit-identical to the in-process run on the fault-free path.
 //!
 //! ## Rendezvous and churn
 //!
@@ -24,33 +26,39 @@
 //! representative's weight. A dropped TCP peer mid-run surfaces as
 //! [`StepEvent::NodeDropped`]; a reconnecting worker is re-admitted
 //! through the same handshake and caught up with a
-//! [`Message::CatchUp`] payload ([`StepEvent::NodeRejoined`]). When the
-//! live set falls below `min_clients` the round stalls (bounded by the
-//! I/O timeout, surfaced as [`StepEvent::QuorumStalled`]) and then fails
-//! with a clean `Err` — never a hang.
+//! [`Message::CatchUp`] payload ([`StepEvent::NodeRejoined`]) shipping
+//! only the weights the worker is missing (its `Hello` declares the
+//! layer boundary it already holds). When the live set falls below
+//! `min_clients` the round stalls (bounded by the I/O timeout, surfaced
+//! as [`StepEvent::QuorumStalled`]) and then fails with a clean `Err` —
+//! never a hang.
 //!
 //! Wire-path stalls are *real* time, so they are not charged to the
 //! simulated communication clock; the gossip charges themselves are
 //! identical to the in-process fabric because they come from the same
 //! engine. A rejoin charges its catch-up share to the ledger plus a
 //! seeded [`LatencyModel::backoff_time`] to the simulated clock — the
-//! same accounting rule `ChaosFabric` applies in-process.
+//! same accounting rule `ChaosFabric` applies in-process. While any
+//! peer is dead the driver averages the survivors over the restricted
+//! engine — a plain synchronous dense round regardless of the
+//! configured schedule — and the fabric's schedule cursor is bumped per
+//! skipped call so seeded schedules realign when the cluster heals
+//! (both are documented fault-path deviations; the bit-identity bar is
+//! fault-free only).
 
 use crate::config::{BackendKind, ExperimentConfig};
-use crate::coordinator::{task_checksum, ConsensusMode};
-use crate::data::ClassificationTask;
+use crate::coordinator::{task_checksum, ConsensusMode, DssfnAlgorithm, TaskRef};
 use crate::linalg::Matrix;
-use crate::metrics::{error_db, LayerRecord, TrainReport};
 use crate::network::{
-    CommLedger, CommSchedule, CommSnapshot, GossipEngine, LatencyModel, MixingMatrix, Topology,
+    CommLedger, CommSchedule, GossipEngine, LatencyModel, MixingMatrix, Topology,
 };
-use crate::session::{
-    Algorithm, AlgorithmOutput, SessionProgress, StepEvent, StopReason, TrainedModel,
-};
-use crate::ssfn::{build_weight, GrowthPolicy, RandomMatrices, SsfnArchitecture, TrainHyper};
+use crate::node::{DriverCtx, NodeDriver};
+use crate::runtime::{ComputeBackend, NativeBackend};
+use crate::session::StepEvent;
+use crate::ssfn::{build_weight, SsfnArchitecture};
 use crate::transport::wire::{self, config_fingerprint, Message, PROTOCOL_VERSION};
 use crate::transport::{Accept, Conn};
-use crate::util::{Rng, SplitMix64, Stopwatch};
+use crate::util::{Rng, SplitMix64};
 use crate::{Error, Result};
 use std::sync::Arc;
 use std::thread;
@@ -75,7 +83,7 @@ pub struct ServeOptions {
 /// What the server requires a [`Message::Hello`] to match. `admit` is a
 /// pure function so every rejection path is unit-testable without a
 /// socket.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct Handshake {
     /// Required protocol version.
     pub protocol: u32,
@@ -85,6 +93,10 @@ pub struct Handshake {
     pub config_fp: u64,
     /// [`task_checksum`] of the locally generated dataset.
     pub task_checksum: u64,
+    /// Communication schedule name (`CommSchedule::describe`). Also
+    /// folded into the fingerprint; checked separately so a mismatch is
+    /// rejected *by name* instead of as an opaque fingerprint diff.
+    pub schedule: String,
 }
 
 impl Handshake {
@@ -92,14 +104,16 @@ impl Handshake {
     /// set of already-connected shards. Returns the shard index to
     /// admit, or a human-readable rejection naming the exact mismatch.
     pub fn admit(&self, hello: &Message, taken: &[bool]) -> std::result::Result<usize, String> {
-        let (protocol, shard, nodes, config_fp, task_checksum) = match hello {
+        let (protocol, shard, nodes, config_fp, task_checksum, schedule) = match hello {
             Message::Hello {
                 protocol,
                 shard,
                 nodes,
                 config_fp,
                 task_checksum,
-            } => (*protocol, *shard, *nodes, *config_fp, *task_checksum),
+                schedule,
+                have_layer: _,
+            } => (*protocol, *shard, *nodes, *config_fp, *task_checksum, schedule),
             other => {
                 return Err(format!(
                     "expected a Hello greeting, got {}",
@@ -117,6 +131,12 @@ impl Handshake {
             return Err(format!(
                 "cluster size mismatch: server runs M={}, worker was configured for M={nodes}",
                 self.nodes
+            ));
+        }
+        if schedule != &self.schedule {
+            return Err(format!(
+                "schedule mismatch: server runs {}, worker was configured for {schedule}",
+                self.schedule
             ));
         }
         if config_fp != self.config_fp {
@@ -150,6 +170,14 @@ impl Handshake {
 /// Reject every config knob the wire transport cannot honour, naming
 /// the flag. Shared by `serve` and `worker` so both sides fail the same
 /// way before any socket work.
+///
+/// Communication *schedules* (semisync, lossy), adaptive δ and
+/// iteration staleness are NOT rejected: they are seeded math over the
+/// staged share bank, which the unified phase machine runs identically
+/// over the wire. What stays simulation-only is everything that fakes
+/// cluster *physics*: the straggler model, crash-injection chaos and
+/// the event clock — real workers are their own stragglers and
+/// failures, and the wire run advances in real time.
 pub(crate) fn validate_transport_config(cfg: &ExperimentConfig) -> Result<()> {
     if cfg.exact_consensus {
         return Err(Error::Config(
@@ -164,27 +192,6 @@ pub(crate) fn validate_transport_config(cfg: &ExperimentConfig) -> Result<()> {
         ));
     }
     let comm = cfg.comm_config()?;
-    if comm.schedule != CommSchedule::Synchronous {
-        return Err(Error::Config(format!(
-            "serve/worker implements the synchronous schedule only; \
-             --schedule {} is simulation-only",
-            cfg.schedule
-        )));
-    }
-    if comm.adaptive_delta.is_some() {
-        return Err(Error::Config(
-            "--adaptive-delta is simulation-only; not supported over the wire \
-             transport"
-                .into(),
-        ));
-    }
-    if comm.iter_staleness > 0 {
-        return Err(Error::Config(
-            "--iter-staleness is simulation-only; not supported over the wire \
-             transport"
-                .into(),
-        ));
-    }
     if comm.node_latency.is_heterogeneous() {
         return Err(Error::Config(
             "--straggler-sigma is simulation-only; real workers are their own \
@@ -226,7 +233,7 @@ pub fn rendezvous(
     loop {
         while let Some(mut conn) = listener.poll()? {
             let taken: Vec<bool> = peers.iter().map(|p| p.is_some()).collect();
-            if let Some(i) = greet(conn.as_mut(), &mut scratch, expect, &taken, io_timeout) {
+            if let Some((i, _)) = greet(conn.as_mut(), &mut scratch, expect, &taken, io_timeout) {
                 peers[i] = Some(conn);
                 admitted += 1;
             }
@@ -240,17 +247,23 @@ pub fn rendezvous(
 
 /// Run the handshake on one fresh connection: read the Hello (bounded
 /// by the handshake timeout), admit or reject. Returns the admitted
-/// shard index; any failure path drops the connection.
+/// shard index and the layer boundary the worker already holds (its
+/// locally snapshotted weight stack depth — 0 for a fresh worker); any
+/// failure path drops the connection.
 fn greet(
     conn: &mut dyn Conn,
     scratch: &mut Vec<u8>,
     expect: &Handshake,
     taken: &[bool],
     io_timeout: Option<Duration>,
-) -> Option<usize> {
+) -> Option<(usize, u64)> {
     conn.set_io_timeout(Some(io_timeout.unwrap_or(HANDSHAKE_TIMEOUT)))
         .ok()?;
     let hello = wire::recv(conn, scratch).ok()?;
+    let have = match &hello {
+        Message::Hello { have_layer, .. } => *have_layer,
+        _ => 0,
+    };
     match expect.admit(&hello, taken) {
         Ok(i) => {
             conn.set_io_timeout(io_timeout).ok()?;
@@ -262,7 +275,7 @@ fn greet(
                 },
             )
             .ok()?;
-            Some(i)
+            Some((i, have))
         }
         Err(reason) => {
             let _ = wire::send(conn, scratch, &Message::Reject { reason });
@@ -271,192 +284,63 @@ fn greet(
     }
 }
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum Phase {
-    Prepare,
-    Iterate { k: usize },
-    Advance,
-    Done,
+fn live_count(live: &[bool]) -> usize {
+    live.iter().filter(|&&l| l).count()
 }
 
-/// The serve-side coordinator as a session [`Algorithm`] — `dssfn
-/// serve` drives it through the ordinary
-/// [`crate::session::TrainSession`] loop, so observers, stop policies
-/// and the CLI event printer all work unchanged over the wire.
-pub struct ServeAlgorithm {
-    arch: SsfnArchitecture,
-    hyper: TrainHyper,
-    seed: u64,
-    delta: f64,
+/// The wire [`NodeDriver`]: per-node operations become protocol frames
+/// to `M` worker processes. Owns everything socket-shaped — peers,
+/// rendezvous listener, handshake expectations, the restricted-live-set
+/// engine — and mirrors each node's `Z` so the phase machine's
+/// diagnostics and weight builds read local matrices.
+pub struct WireDriver {
     m: usize,
     min_clients: usize,
     io_timeout: Option<Duration>,
     record_cost_curve: bool,
-    task: ClassificationTask,
-    growth: Option<GrowthPolicy>,
-    random: RandomMatrices,
+    arch: SsfnArchitecture,
     topology: Topology,
     latency: LatencyModel,
     ledger: Arc<CommLedger>,
-    /// Full-cluster gossip engine (the fault-free path).
-    engine: GossipEngine,
-    /// Restricted engine while any node is dead; shares the ledger, and
-    /// the simulated clock is transferred on every live-set change.
-    restricted: Option<GossipEngine>,
     listener: Box<dyn Accept>,
     expect: Handshake,
     peers: Vec<Option<Box<dyn Conn>>>,
-    live: Vec<bool>,
     scratch: Vec<u8>,
-
-    report: TrainReport,
-    sw: Stopwatch,
-    weights: Vec<Matrix>,
-    final_o: Option<Matrix>,
-    prev_layer_cost: Option<f64>,
-
-    layer: usize,
-    phase: Phase,
-    /// The exchange bank, staged in node order — the same contiguous
-    /// slice layout the in-process fabric averages, fed by frames
-    /// instead of actor method calls.
-    s_vals: Vec<Matrix>,
+    /// Restricted engine while any node is dead; shares the ledger with
+    /// the fabric's engine, and the simulated clock is transferred on
+    /// every live-set change.
+    restricted: Option<GossipEngine>,
     /// Server-side mirror of each node's consensus variable
     /// `Z_i = Π_ε(s̄_i)`, updated after every averaging; frozen for dead
     /// nodes, exactly like the in-process chaos semantics.
     z: Vec<Matrix>,
-    /// Last cost each node reported; dead nodes contribute their frozen
-    /// value to the global sum (fault-case curves may deviate from the
-    /// in-process run — the bit-identity bar is fault-free only).
-    last_costs: Vec<f64>,
-    cost_curve: Vec<f64>,
-    gossip_rounds: usize,
-    comm_before: CommSnapshot,
-    stop_reason: Option<StopReason>,
     rejoin_seed: u64,
     rejoin_count: u64,
     announced_absent: bool,
 }
 
-impl ServeAlgorithm {
-    /// Validate the config for wire use, generate the task locally,
-    /// then block in rendezvous until `min_clients` workers are in.
-    pub fn new(
-        cfg: &ExperimentConfig,
-        mut listener: Box<dyn Accept>,
-        opts: ServeOptions,
-    ) -> Result<Self> {
-        validate_transport_config(cfg)?;
-        let arch = cfg.architecture()?;
-        let hyper = cfg.hyper();
-        let topts = cfg.train_options()?;
-        let m = topts.nodes;
-        let min_clients = if opts.min_clients == 0 { m } else { opts.min_clients };
-        if min_clients > m {
-            return Err(Error::Config(format!(
-                "--min-clients {min_clients} exceeds the cluster size M = {m}"
-            )));
+impl WireDriver {
+    fn sim_secs(&self, engine: Option<&GossipEngine>) -> f64 {
+        match (&self.restricted, engine) {
+            (Some(r), _) => r.simulated_seconds(),
+            (None, Some(e)) => e.simulated_seconds(),
+            (None, None) => 0.0,
         }
-        let delta = match topts.consensus {
-            ConsensusMode::Gossip { delta } => delta,
-            ConsensusMode::Exact => unreachable!("rejected by validate_transport_config"),
-        };
-        let task = cfg.generate_task()?;
-        let random = RandomMatrices::generate(&arch, cfg.seed)?;
-        let expect = Handshake {
-            protocol: PROTOCOL_VERSION,
-            nodes: m,
-            config_fp: config_fingerprint(cfg),
-            task_checksum: task_checksum(&task),
-        };
-        let mode = format!(
-            "dssfn-serve({}, gossip δ={delta:.0e}, ≥{min_clients}/{m} workers) on {}",
-            topts.topology.describe(),
-            listener.describe()
-        );
-        let peers = rendezvous(listener.as_mut(), &expect, min_clients, opts.io_timeout)?;
-        let live: Vec<bool> = peers.iter().map(|p| p.is_some()).collect();
-        let ledger = Arc::new(CommLedger::new());
-        let mix = MixingMatrix::build(&topts.topology, topts.weight_rule)?;
-        let engine = GossipEngine::new(mix, Arc::clone(&ledger), topts.latency);
-        let restricted = if live.iter().all(|&l| l) {
-            None
-        } else {
-            let rmix = MixingMatrix::build_restricted(&topts.topology, &live)?;
-            Some(GossipEngine::new(rmix, Arc::clone(&ledger), topts.latency))
-        };
-        let report = TrainReport {
-            dataset: task.name.clone(),
-            mode,
-            ..Default::default()
-        };
-        Ok(Self {
-            arch,
-            hyper,
-            seed: cfg.seed,
-            delta,
-            m,
-            min_clients,
-            io_timeout: opts.io_timeout,
-            record_cost_curve: cfg.record_cost_curve,
-            task,
-            growth: None,
-            random,
-            topology: topts.topology,
-            latency: topts.latency,
-            ledger,
-            engine,
-            restricted,
-            listener,
-            expect,
-            peers,
-            live,
-            scratch: Vec::new(),
-            report,
-            sw: Stopwatch::new(),
-            weights: Vec::with_capacity(arch.layers),
-            final_o: None,
-            prev_layer_cost: None,
-            layer: 0,
-            phase: Phase::Prepare,
-            s_vals: Vec::new(),
-            z: Vec::new(),
-            last_costs: vec![0.0; m],
-            cost_curve: Vec::new(),
-            gossip_rounds: 0,
-            comm_before: CommSnapshot::default(),
-            stop_reason: None,
-            rejoin_seed: SplitMix64::new(cfg.seed ^ 0x7e30_1a5e_ed15_7a9b).next_u64(),
-            rejoin_count: 0,
-            announced_absent: false,
-        })
     }
 
-    fn live_count(&self) -> usize {
-        self.live.iter().filter(|&&l| l).count()
-    }
-
-    fn rep(&self) -> usize {
-        self.live.iter().position(|&l| l).unwrap_or(0)
-    }
-
-    fn simulated_seconds(&self) -> f64 {
-        self.restricted
-            .as_ref()
-            .unwrap_or(&self.engine)
-            .simulated_seconds()
-    }
-
-    /// Rebuild the mixing engine for the current live set, transferring
-    /// the simulated clock — the same dual-engine bookkeeping
-    /// `ChaosFabric` does in-process.
-    fn rebuild_engine(&mut self) -> Result<()> {
-        let clock = self.simulated_seconds();
-        if self.live.iter().all(|&l| l) {
+    /// Rebuild the restricted mixing engine for the current live set,
+    /// transferring the simulated clock — the same dual-engine
+    /// bookkeeping `ChaosFabric` does in-process. `engine` is the
+    /// fabric's full-cluster engine (the fault-free clock holder).
+    fn rebuild_engine(&mut self, live: &[bool], engine: Option<&GossipEngine>) -> Result<()> {
+        let clock = self.sim_secs(engine);
+        if live.iter().all(|&l| l) {
             self.restricted = None;
-            self.engine.set_simulated_seconds(clock);
+            if let Some(e) = engine {
+                e.set_simulated_seconds(clock);
+            }
         } else {
-            let mix = MixingMatrix::build_restricted(&self.topology, &self.live)?;
+            let mix = MixingMatrix::build_restricted(&self.topology, live)?;
             let eng = GossipEngine::new(mix, Arc::clone(&self.ledger), self.latency);
             eng.set_simulated_seconds(clock);
             self.restricted = Some(eng);
@@ -482,34 +366,38 @@ impl ServeAlgorithm {
     /// restrict the mixing to the survivors.
     fn drop_peer(
         &mut self,
+        ctx: &mut DriverCtx<'_>,
         i: usize,
         iteration: usize,
         events: &mut Vec<StepEvent>,
     ) -> Result<()> {
         self.peers[i] = None;
-        if self.live[i] {
-            self.live[i] = false;
+        if ctx.live[i] {
+            ctx.live[i] = false;
             events.push(StepEvent::NodeDropped {
-                layer: self.layer,
+                layer: ctx.layer,
                 iteration,
                 node: i,
             });
-            self.rebuild_engine()?;
+            let engine = ctx.engine;
+            self.rebuild_engine(ctx.live, engine)?;
         }
         Ok(())
     }
 
     /// Admit any pending connections as rejoiners for iteration `k`:
-    /// handshake, catch-up payload (mirror weight stack + current
-    /// consensus share), liveness + engine update, and the in-process
-    /// chaos accounting rule (ledger charge + seeded backoff on the
-    /// simulated clock). With `step_now` the rejoiner is immediately
-    /// stepped through the in-flight iteration so a quorum stall can
-    /// resolve mid-round.
+    /// handshake, catch-up payload (the weights the worker is missing
+    /// past its declared layer boundary + the current consensus share),
+    /// liveness + engine update, and the in-process chaos accounting
+    /// rule (ledger charge + seeded backoff on the simulated clock).
+    /// With `step_now` the rejoiner is immediately stepped through the
+    /// in-flight iteration so a quorum stall can resolve mid-round.
     fn admit_joiners(
         &mut self,
+        ctx: &mut DriverCtx<'_>,
         k: usize,
         step_now: bool,
+        bank: &mut [Matrix],
         events: &mut Vec<StepEvent>,
     ) -> Result<()> {
         loop {
@@ -517,61 +405,74 @@ impl ServeAlgorithm {
                 Some(c) => c,
                 None => return Ok(()),
             };
-            let i = match greet(
+            let (i, have) = match greet(
                 conn.as_mut(),
                 &mut self.scratch,
                 &self.expect,
-                &self.live,
+                ctx.live,
                 self.io_timeout,
             ) {
-                Some(i) => i,
+                Some(r) => r,
                 None => continue,
             };
-            let rep = self.rep();
+            let rep = ctx.live.iter().position(|&l| l).unwrap_or(0);
+            // A worker that kept its layer-boundary snapshot only needs
+            // the weights past its boundary — O(1) rejoin instead of
+            // O(layers). A boundary ahead of the server (stale process
+            // from another run surviving the fingerprint — it cannot,
+            // but be safe) replays from scratch.
+            let from = if have as usize <= ctx.layer {
+                have as usize
+            } else {
+                0
+            };
             let catch_up = Message::CatchUp {
-                layer: self.layer as u64,
+                layer: ctx.layer as u64,
                 iteration: k as u64,
-                weights: self.weights.clone(),
-                s: self.s_vals[rep].clone(),
+                from_layer: from as u64,
+                weights: ctx.weights[from..].to_vec(),
+                s: bank[rep].clone(),
             };
             if wire::send(conn.as_mut(), &mut self.scratch, &catch_up).is_err() {
                 continue;
             }
             self.peers[i] = Some(conn);
-            self.live[i] = true;
+            ctx.live[i] = true;
             events.push(StepEvent::NodeRejoined {
-                layer: self.layer,
+                layer: ctx.layer,
                 iteration: k,
                 node: i,
             });
             // Accounting: the catch-up share crosses the network, and
             // the rejoin costs a seeded exponential-backoff delay on the
             // simulated clock — mirroring ChaosFabric's rejoin charge.
-            let (q, feat) = self.s_vals[rep].shape();
+            let (q, feat) = bank[rep].shape();
             let scalars = (q * feat) as u64;
             self.ledger.record_message(scalars);
             let draw = SplitMix64::new(self.rejoin_seed ^ self.rejoin_count).next_u64();
             self.rejoin_count += 1;
             let attempts = 1 + (draw % 3) as u32;
-            let clock = self.simulated_seconds();
+            let engine = ctx.engine;
+            let clock = self.sim_secs(engine);
             let backoff = self.latency.backoff_time(attempts, scalars * 8);
-            self.rebuild_engine()?;
-            self.restricted
-                .as_ref()
-                .unwrap_or(&self.engine)
-                .set_simulated_seconds(clock + backoff);
+            self.rebuild_engine(ctx.live, engine)?;
+            match (&self.restricted, engine) {
+                (Some(r), _) => r.set_simulated_seconds(clock + backoff),
+                (None, Some(e)) => e.set_simulated_seconds(clock + backoff),
+                (None, None) => {}
+            }
             if step_now {
                 // The round is already in flight: step the rejoiner so
                 // it contributes a fresh share to this averaging.
                 let step = Message::Step {
-                    layer: self.layer as u64,
+                    layer: ctx.layer as u64,
                     iteration: k as u64,
                 };
                 if self.send_to(i, &step).is_err() {
-                    self.drop_peer(i, k, events)?;
+                    self.drop_peer(ctx, i, k, events)?;
                     continue;
                 }
-                if !self.collect_share(i, k, events)? {
+                if !self.collect_share(ctx, i, k, bank, events)? {
                     continue;
                 }
             }
@@ -582,8 +483,10 @@ impl ServeAlgorithm {
     /// bank. Returns false (peer dropped) on any protocol violation.
     fn collect_share(
         &mut self,
+        ctx: &mut DriverCtx<'_>,
         i: usize,
         k: usize,
+        bank: &mut [Matrix],
         events: &mut Vec<StepEvent>,
     ) -> Result<bool> {
         match self.recv_from(i) {
@@ -591,15 +494,15 @@ impl ServeAlgorithm {
                 layer,
                 iteration,
                 s,
-            }) if layer as usize == self.layer
+            }) if layer as usize == ctx.layer
                 && iteration as usize == k
-                && s.shape() == self.s_vals[i].shape() =>
+                && s.shape() == bank[i].shape() =>
             {
-                self.s_vals[i].copy_from(&s)?;
+                bank[i].copy_from(&s)?;
                 Ok(true)
             }
             _ => {
-                self.drop_peer(i, k, events)?;
+                self.drop_peer(ctx, i, k, events)?;
                 Ok(false)
             }
         }
@@ -608,23 +511,29 @@ impl ServeAlgorithm {
     /// Block until the live set is back above the quorum, admitting
     /// rejoiners as they arrive. Bounded by the I/O timeout: a quorum
     /// that never recovers is a clean `Err`, not a hang.
-    fn await_quorum(&mut self, k: usize, events: &mut Vec<StepEvent>) -> Result<()> {
-        if self.live_count() >= self.min_clients {
+    fn await_quorum(
+        &mut self,
+        ctx: &mut DriverCtx<'_>,
+        k: usize,
+        bank: &mut [Matrix],
+        events: &mut Vec<StepEvent>,
+    ) -> Result<()> {
+        if live_count(ctx.live) >= self.min_clients {
             return Ok(());
         }
         let deadline = Instant::now() + self.io_timeout.unwrap_or(HANDSHAKE_TIMEOUT);
         let mut waited = 0u64;
-        while self.live_count() < self.min_clients {
-            self.admit_joiners(k, true, events)?;
-            if self.live_count() >= self.min_clients {
+        while live_count(ctx.live) < self.min_clients {
+            self.admit_joiners(ctx, k, true, bank, events)?;
+            if live_count(ctx.live) >= self.min_clients {
                 break;
             }
             if Instant::now() >= deadline {
                 return Err(Error::Network(format!(
                     "quorum lost at layer {} iteration {k}: {}/{} workers live \
                      (need {})",
-                    self.layer,
-                    self.live_count(),
+                    ctx.layer,
+                    live_count(ctx.live),
                     self.m,
                     self.min_clients
                 )));
@@ -634,349 +543,362 @@ impl ServeAlgorithm {
         }
         if waited > 0 {
             events.push(StepEvent::QuorumStalled {
-                layer: self.layer,
+                layer: ctx.layer,
                 iteration: k,
                 rounds: waited,
             });
         }
         Ok(())
     }
+}
 
-    fn do_prepare(&mut self, events: &mut Vec<StepEvent>) -> Result<()> {
-        let q = self.arch.num_classes;
-        let feat_dim = if self.layer == 0 {
+impl NodeDriver for WireDriver {
+    fn describe(&self) -> &'static str {
+        "wire"
+    }
+
+    fn initial_live(&self, _m: usize) -> Vec<bool> {
+        self.peers.iter().map(|p| p.is_some()).collect()
+    }
+
+    fn begin_iteration(
+        &mut self,
+        ctx: &mut DriverCtx<'_>,
+        k: usize,
+        bank: &mut [Matrix],
+        events: &mut Vec<StepEvent>,
+    ) -> Result<()> {
+        // Rejoiners admitted at the top of an iteration take part in it
+        // fully: Step (or Hold) will reach them with everyone else.
+        self.admit_joiners(ctx, k, false, bank, events)
+    }
+
+    fn prepare_layer(
+        &mut self,
+        ctx: &mut DriverCtx<'_>,
+        q: usize,
+        _mu: f64,
+        events: &mut Vec<StepEvent>,
+    ) -> Result<usize> {
+        // Workers prepare lazily on their first Step of the layer; the
+        // server only sizes its mirrors. (The worker's shard row count
+        // varies, but the share dimension Q×feat is architecture-pure.)
+        let feat_dim = if ctx.layer == 0 {
             self.arch.input_dim
         } else {
             self.arch.hidden
         };
-        self.comm_before = self.ledger.snapshot();
-        let params = self.hyper.admm_params(self.layer, q);
-        params.validate()?;
-        self.s_vals = (0..self.m).map(|_| Matrix::zeros(q, feat_dim)).collect();
         self.z = (0..self.m).map(|_| Matrix::zeros(q, feat_dim)).collect();
-        // Dead nodes' cost contribution resets with the layer — the
-        // server has no data, so it cannot price a dead node's fresh
-        // layer (a documented fault-path deviation from in-process).
-        self.last_costs = vec![0.0; self.m];
-        self.cost_curve = Vec::new();
-        self.gossip_rounds = 0;
         if !self.announced_absent {
             self.announced_absent = true;
             for i in 0..self.m {
-                if !self.live[i] {
+                if !ctx.live[i] {
                     events.push(StepEvent::NodeDropped {
-                        layer: self.layer,
+                        layer: ctx.layer,
                         iteration: 0,
                         node: i,
                     });
                 }
             }
         }
-        self.phase = Phase::Iterate { k: 0 };
-        events.push(StepEvent::LayerPrepared {
-            layer: self.layer,
-            feat_dim,
-        });
-        Ok(())
+        Ok(feat_dim)
     }
 
-    fn do_iterate(&mut self, k: usize, events: &mut Vec<StepEvent>) -> Result<()> {
-        let q = self.arch.num_classes;
-        let params = self.hyper.admm_params(self.layer, q);
-        let last_iter =
-            k + 1 >= params.iterations || (self.stop_reason.is_some() && self.layer >= 1);
-
-        // Rejoiners admitted at the top of an iteration take part in it
-        // fully: Step will reach them with everyone else.
-        self.admit_joiners(k, false, events)?;
-
-        // (1) Dispatch the O-update and (2) collect the staged shares,
-        // node order — the server-side image of the in-process
-        // stage_share loop.
+    fn collect_shares(
+        &mut self,
+        ctx: &mut DriverCtx<'_>,
+        k: usize,
+        bank: &mut [Matrix],
+        events: &mut Vec<StepEvent>,
+    ) -> Result<()> {
+        // Dispatch the O-update and collect the staged shares, node
+        // order — the wire image of the in-process stage_share loop.
         let step = Message::Step {
-            layer: self.layer as u64,
+            layer: ctx.layer as u64,
             iteration: k as u64,
         };
         for i in 0..self.m {
-            if !self.live[i] {
+            if !ctx.live[i] {
                 continue;
             }
             if self.send_to(i, &step).is_err() {
-                self.drop_peer(i, k, events)?;
+                self.drop_peer(ctx, i, k, events)?;
             }
         }
         for i in 0..self.m {
-            if !self.live[i] {
+            if !ctx.live[i] {
                 continue;
             }
-            self.collect_share(i, k, events)?;
+            self.collect_share(ctx, i, k, bank, events)?;
         }
-        self.await_quorum(k, events)?;
+        self.await_quorum(ctx, k, bank, events)
+    }
 
-        // (3) The same consensus averaging the in-process fabric runs,
-        // over the same contiguous bank — identical math, identical
-        // ledger and simulated-clock charges.
-        let (rounds, bytes) = {
-            let engine = self.restricted.as_ref().unwrap_or(&self.engine);
-            engine.consensus_average_measured(&mut self.s_vals, self.delta)?
-        };
-        self.gossip_rounds += rounds;
+    fn mix_restricted(&mut self, bank: &mut [Matrix], delta: f64) -> Result<Option<(usize, u64)>> {
+        // While any peer is dead the survivors average over the
+        // restricted engine: a plain synchronous dense round regardless
+        // of the configured schedule (documented fault-path deviation —
+        // a reshaped live set has no seeded-schedule alignment). The
+        // caller bumps the fabric cursor to keep the healed cluster's
+        // draws aligned.
+        match &self.restricted {
+            Some(engine) => Ok(Some(engine.consensus_average_measured(bank, delta)?)),
+            None => Ok(None),
+        }
+    }
 
-        // (4) Return the mixed shares; mirror Z for live nodes.
+    fn deliver_mixed(
+        &mut self,
+        ctx: &mut DriverCtx<'_>,
+        k: usize,
+        last_iter: bool,
+        eps: f64,
+        sources: &[&Matrix],
+        events: &mut Vec<StepEvent>,
+    ) -> Result<()> {
+        // Return the mixed (possibly stale-routed) shares; mirror Z for
+        // live nodes.
         for i in 0..self.m {
-            if !self.live[i] {
+            if !ctx.live[i] {
                 continue;
             }
             let mixed = Message::Mixed {
-                layer: self.layer as u64,
+                layer: ctx.layer as u64,
                 iteration: k as u64,
                 last_iter,
-                s: self.s_vals[i].clone(),
+                s: sources[i].clone(),
             };
             if self.send_to(i, &mixed).is_err() {
-                self.drop_peer(i, k, events)?;
+                self.drop_peer(ctx, i, k, events)?;
                 continue;
             }
-            self.z[i].copy_from(&self.s_vals[i])?;
-            self.z[i].project_frobenius(params.eps);
+            self.z[i].copy_from(sources[i])?;
+            self.z[i].project_frobenius(eps);
         }
-
-        // (5) Cost samples, summed in node order (bit-identical to the
-        // in-process reduction on the fault-free path).
-        let mut cost = None;
-        if self.record_cost_curve {
-            for i in 0..self.m {
-                if !self.live[i] {
-                    continue;
-                }
-                match self.recv_from(i) {
-                    Ok(Message::Cost { cost: c, .. }) => self.last_costs[i] = c,
-                    _ => self.drop_peer(i, k, events)?,
-                }
-            }
-            let c: f64 = self.last_costs.iter().sum();
-            self.cost_curve.push(c);
-            cost = Some(c);
-        }
-        let gap = if self.record_cost_curve {
-            let rep = self.rep();
-            let z0 = &self.z[rep];
-            self.z
-                .iter()
-                .enumerate()
-                .filter(|&(i, _)| self.live[i])
-                .map(|(_, z)| z.max_abs_diff(z0))
-                .fold(0.0, f64::max)
-        } else {
-            0.0
-        };
-
-        events.push(StepEvent::GossipRound {
-            layer: self.layer,
-            iteration: k,
-            rounds,
-            bytes,
-        });
-        events.push(StepEvent::AdmmIteration {
-            layer: self.layer,
-            iteration: k,
-            cost,
-            consensus_gap: gap,
-        });
-
-        self.phase = if last_iter {
-            Phase::Advance
-        } else {
-            Phase::Iterate { k: k + 1 }
-        };
         Ok(())
     }
 
-    fn do_advance(&mut self, events: &mut Vec<StepEvent>) -> Result<()> {
-        let q = self.arch.num_classes;
-        let params = self.hyper.admm_params(self.layer, q);
-        let k_last = params.iterations.saturating_sub(1);
-
-        let rep = self.rep();
-        let z0 = self.z[rep].clone();
-        let disagreement = self
-            .z
-            .iter()
-            .enumerate()
-            .filter(|&(i, _)| self.live[i])
-            .map(|(_, z)| z.max_abs_diff(&z0))
-            .fold(0.0, f64::max);
-
-        // Global layer cost: the recorded curve's tail, or one probe
-        // round when curves are off.
-        let layer_cost = match self.cost_curve.last().copied() {
-            Some(c) => c,
-            None => {
-                let probe = Message::CostProbe {
-                    layer: self.layer as u64,
-                };
-                for i in 0..self.m {
-                    if !self.live[i] {
-                        continue;
-                    }
-                    if self.send_to(i, &probe).is_err() {
-                        self.drop_peer(i, k_last, events)?;
-                        continue;
-                    }
-                    match self.recv_from(i) {
-                        Ok(Message::Cost { cost: c, .. }) => self.last_costs[i] = c,
-                        _ => self.drop_peer(i, k_last, events)?,
-                    }
-                }
-                self.last_costs.iter().sum()
+    fn hold_round(
+        &mut self,
+        ctx: &mut DriverCtx<'_>,
+        k: usize,
+        events: &mut Vec<StepEvent>,
+    ) -> Result<()> {
+        // A communication-skipped iteration (adaptive period doubling):
+        // the workers run O-update + dual ascent against their held Z.
+        // The Z mirrors are untouched — Z does not move on a hold.
+        let hold = Message::Hold {
+            layer: ctx.layer as u64,
+            iteration: k as u64,
+        };
+        for i in 0..self.m {
+            if !ctx.live[i] {
+                continue;
             }
-        };
-        let stop_growth = match (self.growth, self.prev_layer_cost) {
-            (Some(p), Some(prev)) => p.should_stop(prev, layer_cost),
-            _ => false,
-        };
-        self.prev_layer_cost = Some(layer_cost);
+            if self.send_to(i, &hold).is_err() {
+                self.drop_peer(ctx, i, k, events)?;
+            }
+        }
+        Ok(())
+    }
 
-        let budget_stop = self.stop_reason.is_some() && self.layer >= 1;
-        let last_layer = self.layer == self.arch.layers || stop_growth || budget_stop;
+    fn collect_costs(
+        &mut self,
+        ctx: &mut DriverCtx<'_>,
+        k: usize,
+        costs: &mut [f64],
+        events: &mut Vec<StepEvent>,
+    ) -> Result<()> {
+        // Cost samples in node order; dead nodes keep their last
+        // reported value (reset with each layer — the server cannot
+        // price a dead node's fresh layer; documented deviation).
+        debug_assert!(self.record_cost_curve);
+        for i in 0..self.m {
+            if !ctx.live[i] {
+                continue;
+            }
+            match self.recv_from(i) {
+                Ok(Message::Cost { cost: c, .. }) => costs[i] = c,
+                _ => self.drop_peer(ctx, i, k, events)?,
+            }
+        }
+        Ok(())
+    }
 
+    fn probe_costs(
+        &mut self,
+        ctx: &mut DriverCtx<'_>,
+        k_last: usize,
+        costs: &mut [f64],
+        events: &mut Vec<StepEvent>,
+    ) -> Result<()> {
+        let probe = Message::CostProbe {
+            layer: ctx.layer as u64,
+        };
+        for i in 0..self.m {
+            if !ctx.live[i] {
+                continue;
+            }
+            if self.send_to(i, &probe).is_err() {
+                self.drop_peer(ctx, i, k_last, events)?;
+                continue;
+            }
+            match self.recv_from(i) {
+                Ok(Message::Cost { cost: c, .. }) => costs[i] = c,
+                _ => self.drop_peer(ctx, i, k_last, events)?,
+            }
+        }
+        Ok(())
+    }
+
+    fn z(&self, i: usize) -> &Matrix {
+        &self.z[i]
+    }
+
+    fn advance_layer(
+        &mut self,
+        ctx: &mut DriverCtx<'_>,
+        k_last: usize,
+        r_next: Option<&Matrix>,
+        rep: usize,
+        events: &mut Vec<StepEvent>,
+    ) -> Result<Option<Matrix>> {
         // Tell every live worker; each builds its own weight from its
         // own Z (same per-node math as in-process) — the server only
         // mirrors node 0's weight for the model and catch-up payloads
         // (the live representative's when node 0 is dead, matching the
         // in-process w_rep forwarding rule).
         let advance = Message::Advance {
-            layer: self.layer as u64,
-            last: last_layer,
+            layer: ctx.layer as u64,
+            last: r_next.is_none(),
         };
         for i in 0..self.m {
-            if !self.live[i] {
+            if !ctx.live[i] {
                 continue;
             }
             if self.send_to(i, &advance).is_err() {
-                self.drop_peer(i, k_last, events)?;
+                self.drop_peer(ctx, i, k_last, events)?;
             }
         }
-        if !last_layer {
-            let r_next = self.random.layer(self.layer + 1);
-            let src = if self.live[0] { 0 } else { rep };
-            self.weights.push(build_weight(&self.z[src], r_next)?);
-        } else {
-            self.final_o = Some(z0);
+        match r_next {
+            Some(r) => {
+                let src = if ctx.live[0] { 0 } else { rep };
+                Ok(Some(build_weight(&self.z[src], r)?))
+            }
+            None => Ok(None),
         }
+    }
 
-        let layer = self.layer;
-        self.report.layers.push(LayerRecord {
-            layer,
-            cost_curve: std::mem::take(&mut self.cost_curve),
-            wall_secs: self.sw.split(&format!("layer{layer}")),
-            gossip_rounds: self.gossip_rounds,
-            comm: self.ledger.snapshot().since(&self.comm_before),
-            consensus_disagreement: disagreement,
-        });
-        events.push(StepEvent::LayerAdvanced {
-            layer,
-            cost: layer_cost,
-            last: last_layer,
-        });
-
-        self.s_vals = Vec::new();
+    fn end_layer(&mut self) {
         self.z = Vec::new();
-        self.gossip_rounds = 0;
+    }
 
-        if last_layer {
-            self.phase = Phase::Done;
-            let reason = if budget_stop {
-                self.stop_reason.unwrap_or(StopReason::Requested)
-            } else if stop_growth {
-                StopReason::GrowthStopped
-            } else {
-                StopReason::Completed
-            };
-            events.push(StepEvent::Finished { reason });
-        } else {
-            self.layer += 1;
-            self.phase = Phase::Prepare;
-        }
-        Ok(())
+    fn simulated_seconds(&self) -> Option<f64> {
+        // While restricted, the driver's engine holds the clock; the
+        // algorithm falls back to the fabric's engine otherwise.
+        self.restricted.as_ref().map(|r| r.simulated_seconds())
     }
 }
 
-impl Algorithm for ServeAlgorithm {
-    fn describe(&self) -> String {
-        self.report.mode.clone()
-    }
+/// The serve-side constructor: validate the config for wire use,
+/// generate the task locally, block in rendezvous until `min_clients`
+/// workers are in, then assemble the ordinary
+/// [`DssfnAlgorithm`] over a [`WireDriver`] — `dssfn serve` drives the
+/// result through the ordinary [`crate::session::TrainSession`] loop,
+/// so observers, stop policies and the CLI event printer all work
+/// unchanged over the wire.
+pub struct ServeAlgorithm;
 
-    fn is_done(&self) -> bool {
-        self.phase == Phase::Done
-    }
-
-    fn advance(&mut self, events: &mut Vec<StepEvent>) -> Result<()> {
-        match self.phase {
-            Phase::Prepare => self.do_prepare(events),
-            Phase::Iterate { k } => self.do_iterate(k, events),
-            Phase::Advance => self.do_advance(events),
-            Phase::Done => Err(Error::Config("serve session already finished".into())),
+impl ServeAlgorithm {
+    /// Build the unified phase machine over the wire driver. The
+    /// returned algorithm is the same type the in-process path runs —
+    /// one machine, two drivers.
+    pub fn new(
+        cfg: &ExperimentConfig,
+        mut listener: Box<dyn Accept>,
+        opts: ServeOptions,
+    ) -> Result<DssfnAlgorithm<'static>> {
+        validate_transport_config(cfg)?;
+        let arch = cfg.architecture()?;
+        let hyper = cfg.hyper();
+        let topts = cfg.train_options()?;
+        let comm = cfg.comm_config()?;
+        let m = topts.nodes;
+        let min_clients = if opts.min_clients == 0 { m } else { opts.min_clients };
+        if min_clients > m {
+            return Err(Error::Config(format!(
+                "--min-clients {min_clients} exceeds the cluster size M = {m}"
+            )));
         }
-    }
-
-    fn finalize(&mut self) -> Result<AlgorithmOutput> {
-        if self.phase != Phase::Done {
-            return Err(Error::Config(
-                "finalize called before the session finished".into(),
-            ));
-        }
-        let final_o = self
-            .final_o
-            .take()
-            .ok_or_else(|| Error::Config("session already finalized".into()))?;
-        let arch = SsfnArchitecture {
-            layers: self.weights.len(),
-            ..self.arch
+        let delta = match topts.consensus {
+            ConsensusMode::Gossip { delta } => delta,
+            ConsensusMode::Exact => unreachable!("rejected by validate_transport_config"),
         };
-        let weights = std::mem::take(&mut self.weights);
-        let model = crate::ssfn::SsfnModel::new(arch, weights, final_o)?;
-        let (train_acc, test_acc, err_db) = (
-            model.accuracy(&self.task.train)?,
-            model.accuracy(&self.task.test)?,
-            error_db(
-                model.residual_sq(&self.task.train)?,
-                self.task.train.t.frobenius_norm_sq(),
-            ),
-        );
-        self.report.train_accuracy = train_acc;
-        self.report.test_accuracy = test_acc;
-        self.report.train_error_db = err_db;
-        self.report.wall_secs = self.sw.elapsed();
-        self.report.comm_total = self.ledger.snapshot();
-        self.report.simulated_comm_secs = self.simulated_seconds();
-        let report = std::mem::take(&mut self.report);
-        Ok(AlgorithmOutput {
-            model: TrainedModel::Ssfn(model),
-            report,
-        })
-    }
-
-    fn progress(&self) -> SessionProgress {
-        SessionProgress {
-            comm_bytes: self.ledger.snapshot().bytes,
-            simulated_secs: self.simulated_seconds() + self.sw.elapsed(),
-        }
-    }
-
-    fn request_stop(&mut self, reason: StopReason) {
-        if self.stop_reason.is_none() && self.phase != Phase::Done {
-            self.stop_reason = Some(reason);
-        }
-    }
-
-    fn adopt_cost_plateau(&mut self, min_relative_improvement: f64) -> bool {
-        if self.growth.is_none() {
-            self.growth = Some(GrowthPolicy {
-                min_relative_improvement,
-            });
-        }
-        true
+        let task = cfg.generate_task()?;
+        let expect = Handshake {
+            protocol: PROTOCOL_VERSION,
+            nodes: m,
+            config_fp: config_fingerprint(cfg),
+            task_checksum: task_checksum(&task),
+            schedule: comm.schedule.describe(),
+        };
+        let mode = {
+            let mut gossip = format!("gossip δ={delta:.0e}");
+            if comm.schedule != CommSchedule::Synchronous {
+                gossip.push(' ');
+                gossip.push_str(&comm.schedule.describe());
+            }
+            if comm.adaptive_delta.is_some() {
+                gossip.push_str(" adaptive-δ");
+            }
+            gossip.push_str(&comm.relaxation_tokens());
+            format!(
+                "dssfn-serve({}, {gossip}, ≥{min_clients}/{m} workers) on {}",
+                topts.topology.describe(),
+                listener.describe()
+            )
+        };
+        let peers = rendezvous(listener.as_mut(), &expect, min_clients, opts.io_timeout)?;
+        let live: Vec<bool> = peers.iter().map(|p| p.is_some()).collect();
+        let ledger = Arc::new(CommLedger::new());
+        let restricted = if live.iter().all(|&l| l) {
+            None
+        } else {
+            let rmix = MixingMatrix::build_restricted(&topts.topology, &live)?;
+            Some(GossipEngine::new(rmix, Arc::clone(&ledger), topts.latency))
+        };
+        let driver = Box::new(WireDriver {
+            m,
+            min_clients,
+            io_timeout: opts.io_timeout,
+            record_cost_curve: cfg.record_cost_curve,
+            arch,
+            topology: topts.topology.clone(),
+            latency: topts.latency,
+            ledger: Arc::clone(&ledger),
+            listener,
+            expect,
+            peers,
+            scratch: Vec::new(),
+            restricted,
+            z: Vec::new(),
+            rejoin_seed: SplitMix64::new(cfg.seed ^ 0x7e30_1a5e_ed15_7a9b).next_u64(),
+            rejoin_count: 0,
+            announced_absent: false,
+        });
+        DssfnAlgorithm::assemble(
+            arch,
+            hyper,
+            topts,
+            comm,
+            cfg.seed,
+            Arc::new(NativeBackend::new()) as Arc<dyn ComputeBackend>,
+            TaskRef::Shared(Arc::new(task)),
+            None,
+            driver,
+            ledger,
+            Some(mode),
+        )
     }
 }
 
@@ -990,6 +912,7 @@ mod tests {
             nodes: 4,
             config_fp: 0xAA,
             task_checksum: 0xBB,
+            schedule: "sync".into(),
         }
     }
 
@@ -1000,6 +923,8 @@ mod tests {
             nodes: 4,
             config_fp: 0xAA,
             task_checksum: 0xBB,
+            schedule: "sync".into(),
+            have_layer: 0,
         }
     }
 
@@ -1024,6 +949,18 @@ mod tests {
             *nodes = 5;
         }
         assert!(e.admit(&bad, &taken).unwrap_err().contains("cluster size"));
+
+        // A schedule mismatch is named before the fingerprint check, so
+        // the operator sees the knob, not an opaque hash diff.
+        let mut bad = hello(0);
+        if let Message::Hello { schedule, config_fp, .. } = &mut bad {
+            *schedule = "semisync(s=2)".into();
+            *config_fp = 1;
+        }
+        assert!(e
+            .admit(&bad, &taken)
+            .unwrap_err()
+            .contains("schedule mismatch"));
 
         let mut bad = hello(0);
         if let Message::Hello { config_fp, .. } = &mut bad {
@@ -1051,34 +988,32 @@ mod tests {
     }
 
     #[test]
-    fn transport_config_rejects_simulation_knobs() {
+    fn transport_config_accepts_schedules_rejects_cluster_physics() {
         let ok = ExperimentConfig::named_dataset("satimage-small").unwrap();
         assert!(validate_transport_config(&ok).is_ok());
 
-        let mut c = ok.clone();
-        c.exact_consensus = true;
-        assert!(validate_transport_config(&c).is_err());
-
+        // Lifted by the NodeDriver unification: seeded schedule math
+        // runs identically over the wire.
         let mut c = ok.clone();
         c.schedule = "semisync".into();
-        assert!(validate_transport_config(&c)
-            .unwrap_err()
-            .to_string()
-            .contains("schedule"));
+        assert!(validate_transport_config(&c).is_ok());
+
+        let mut c = ok.clone();
+        c.schedule = "lossy".into();
+        assert!(validate_transport_config(&c).is_ok());
 
         let mut c = ok.clone();
         c.adaptive_delta = Some(1e-6);
-        assert!(validate_transport_config(&c)
-            .unwrap_err()
-            .to_string()
-            .contains("adaptive-delta"));
+        assert!(validate_transport_config(&c).is_ok());
 
         let mut c = ok.clone();
         c.iter_staleness = 2;
-        assert!(validate_transport_config(&c)
-            .unwrap_err()
-            .to_string()
-            .contains("iter-staleness"));
+        assert!(validate_transport_config(&c).is_ok());
+
+        // Still simulation-only: simulated cluster physics.
+        let mut c = ok.clone();
+        c.exact_consensus = true;
+        assert!(validate_transport_config(&c).is_err());
 
         let mut c = ok.clone();
         c.straggler_sigma = 0.5;

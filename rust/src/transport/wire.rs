@@ -22,11 +22,16 @@
 //!         ◀───────────────── Mixed        gossip-averaged share
 //!   Cost  ───────────────────────▶        (when curves are recorded)
 //!
+//!         ◀────────────────── Hold        averaging skipped (adaptive
+//!   Cost  ───────────────────────▶         period doubling): dual
+//!                                          ascent against the held Z
+//!
 //!         ◀───────────── CostProbe        layer end without curves
 //!   Cost  ───────────────────────▶
 //!         ◀─────────────── Advance        build W_l, forward features
 //!
-//!         ◀─────────────── CatchUp        rejoin: weight stack replay
+//!         ◀─────────────── CatchUp        rejoin: ships the weights
+//!                                          past the worker's snapshot
 //! ```
 
 use crate::config::ExperimentConfig;
@@ -36,20 +41,29 @@ use crate::transport::{frame, Conn};
 use crate::{Error, Result};
 
 /// Bumped on any incompatible change to the message set or handshake.
-pub const PROTOCOL_VERSION: u32 = 1;
+/// v2: Hello carries the schedule name and the worker's layer-boundary
+/// snapshot depth, CatchUp ships a partial weight stack (`from_layer`),
+/// and Hold (tag 11) covers communication-skipped iterations.
+pub const PROTOCOL_VERSION: u32 = 2;
 
 /// One protocol message. Tags are stable wire constants; see the module
 /// docs for the exchange pattern.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Message {
     /// Worker → server greeting carrying everything the server needs to
-    /// admit or reject the peer with a precise reason.
+    /// admit or reject the peer with a precise reason. `schedule` names
+    /// the communication schedule (also folded into `config_fp`; named
+    /// here so a mismatch rejects by name, not as an opaque hash diff);
+    /// `have_layer` is the depth of the worker's locally snapshotted
+    /// weight stack, so a rejoin catch-up ships only the missing tail.
     Hello {
         protocol: u32,
         shard: u64,
         nodes: u64,
         config_fp: u64,
         task_checksum: u64,
+        schedule: String,
+        have_layer: u64,
     },
     /// Server → worker: admitted.
     Welcome { protocol: u32 },
@@ -79,17 +93,26 @@ pub enum Message {
     /// Server → worker: report the current layer cost (used at layer end
     /// when per-iteration curves are disabled).
     CostProbe { layer: u64 },
+    /// Server → worker: a communication-skipped iteration (adaptive
+    /// period doubling): run the O-update and dual ascent against the
+    /// held `Z`, no averaging. When curves are on, the worker replies
+    /// with [`Message::Cost`] — skipped iterations still record.
+    Hold { layer: u64, iteration: u64 },
     /// Server → worker: the layer is done — build `W_l` from the local
     /// `Z_m` and the shared random matrix, forward the features. `last`
     /// means the run is over after this.
     Advance { layer: u64, last: bool },
-    /// Server → worker: rejoin payload. Replay the raw shard features
-    /// through `weights`, prepare the layer solver, then adopt the
-    /// consensus share `s` (`Z = Π_ε(s)`, `Λ = 0`, `O = 0`) and resume
-    /// at `(layer, iteration)`.
+    /// Server → worker: rejoin payload. `weights` holds the completed
+    /// layers from `from_layer` on — a worker whose Hello declared
+    /// `have_layer = from_layer` forwards only this tail through its
+    /// snapshotted features (O(1) instead of O(layers)); `from_layer = 0`
+    /// replays the raw shard from scratch. Then prepare the layer
+    /// solver, adopt the consensus share `s` (`Z = Π_ε(s)`, `Λ = 0`,
+    /// `O = 0`) and resume at `(layer, iteration)`.
     CatchUp {
         layer: u64,
         iteration: u64,
+        from_layer: u64,
         weights: Vec<Matrix>,
         s: Matrix,
     },
@@ -108,6 +131,7 @@ impl Message {
             Message::Mixed { .. } => "Mixed",
             Message::Cost { .. } => "Cost",
             Message::CostProbe { .. } => "CostProbe",
+            Message::Hold { .. } => "Hold",
             Message::Advance { .. } => "Advance",
             Message::CatchUp { .. } => "CatchUp",
         }
@@ -124,6 +148,8 @@ impl Message {
                 nodes,
                 config_fp,
                 task_checksum,
+                schedule,
+                have_layer,
             } => {
                 e.u8(1)?;
                 e.u32(*protocol)?;
@@ -131,6 +157,8 @@ impl Message {
                 e.u64(*nodes)?;
                 e.u64(*config_fp)?;
                 e.u64(*task_checksum)?;
+                e.string(schedule)?;
+                e.u64(*have_layer)?;
             }
             Message::Welcome { protocol } => {
                 e.u8(2)?;
@@ -185,14 +213,21 @@ impl Message {
             Message::CatchUp {
                 layer,
                 iteration,
+                from_layer,
                 weights,
                 s,
             } => {
                 e.u8(10)?;
                 e.u64(*layer)?;
                 e.u64(*iteration)?;
+                e.u64(*from_layer)?;
                 e.matrices(weights)?;
                 e.matrix(s)?;
+            }
+            Message::Hold { layer, iteration } => {
+                e.u8(11)?;
+                e.u64(*layer)?;
+                e.u64(*iteration)?;
             }
         }
         Ok(())
@@ -219,6 +254,8 @@ impl Message {
                 nodes: d.u64()?,
                 config_fp: d.u64()?,
                 task_checksum: d.u64()?,
+                schedule: d.string()?,
+                have_layer: d.u64()?,
             },
             2 => Message::Welcome { protocol: d.u32()? },
             3 => Message::Reject { reason: d.string()? },
@@ -250,8 +287,13 @@ impl Message {
             10 => Message::CatchUp {
                 layer: d.u64()?,
                 iteration: d.u64()?,
+                from_layer: d.u64()?,
                 weights: d.matrices()?,
                 s: d.matrix()?,
+            },
+            11 => Message::Hold {
+                layer: d.u64()?,
+                iteration: d.u64()?,
             },
             t => {
                 return Err(Error::Network(format!("bad frame: unknown message tag {t}")))
@@ -289,7 +331,11 @@ pub fn recv(conn: &mut dyn Conn, scratch: &mut Vec<u8>) -> Result<Message> {
 /// instead of trusting the operator to pass identical flags. Display
 /// knobs (`--verbose`, `--csv`, artifact paths) are deliberately
 /// excluded; `record_cost_curve` is included because it changes what the
-/// workers compute per iteration.
+/// workers compute per iteration. Since the NodeDriver unification,
+/// communication schedules, staleness, loss probability and the
+/// adaptive-δ controller all run over the wire — they change which
+/// iterations communicate and what each node projects, so they are
+/// math-relevant and fingerprinted too.
 pub fn config_fingerprint(cfg: &ExperimentConfig) -> u64 {
     let mut h = Fnv1a::new();
     h.bytes(cfg.dataset.as_bytes());
@@ -313,6 +359,33 @@ pub fn config_fingerprint(cfg: &ExperimentConfig) -> u64 {
     h.u64(cfg.alpha.to_bits());
     h.u64(cfg.beta.to_bits());
     h.u64(u64::from(cfg.record_cost_curve));
+    h.bytes(cfg.schedule.as_bytes());
+    h.u64(cfg.schedule.len() as u64);
+    match cfg.staleness {
+        None => h.u64(0),
+        Some(s) => {
+            h.u64(1);
+            h.u64(s as u64);
+        }
+    }
+    match cfg.loss_p {
+        None => h.u64(0),
+        Some(p) => {
+            h.u64(1);
+            h.u64(p.to_bits());
+        }
+    }
+    match cfg.adaptive_delta {
+        None => h.u64(0),
+        Some(d) => {
+            h.u64(1);
+            h.u64(d.to_bits());
+        }
+    }
+    h.u64(cfg.adaptive_period as u64);
+    h.u64(cfg.iter_staleness as u64);
+    h.bytes(cfg.iter_schedule.as_bytes());
+    h.u64(cfg.iter_schedule.len() as u64);
     h.finish()
 }
 
@@ -349,6 +422,8 @@ mod tests {
                 nodes: 10,
                 config_fp: 0xDEAD_BEEF,
                 task_checksum: 42,
+                schedule: "semisync(s=2)".into(),
+                have_layer: 1,
             },
             Message::Welcome {
                 protocol: PROTOCOL_VERSION,
@@ -377,6 +452,10 @@ mod tests {
                 cost: 1.25,
             },
             Message::CostProbe { layer: 2 },
+            Message::Hold {
+                layer: 2,
+                iteration: 7,
+            },
             Message::Advance {
                 layer: 2,
                 last: false,
@@ -384,6 +463,7 @@ mod tests {
             Message::CatchUp {
                 layer: 2,
                 iteration: 7,
+                from_layer: 1,
                 weights: vec![m.clone(), m.clone()],
                 s: m,
             },
@@ -419,5 +499,42 @@ mod tests {
         let mut c = a.clone();
         c.artifacts_dir = "elsewhere".into();
         assert_eq!(config_fingerprint(&a), config_fingerprint(&c));
+    }
+
+    #[test]
+    fn fingerprint_covers_the_wire_capable_schedule_knobs() {
+        let a = ExperimentConfig::named_dataset("satimage-small").unwrap();
+
+        let mut c = a.clone();
+        c.schedule = "semisync".into();
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&c));
+
+        let mut c = a.clone();
+        c.schedule = "semisync".into();
+        c.staleness = Some(3);
+        let mut d = c.clone();
+        d.staleness = Some(4);
+        assert_ne!(config_fingerprint(&c), config_fingerprint(&d));
+
+        let mut c = a.clone();
+        c.schedule = "lossy".into();
+        c.loss_p = Some(0.1);
+        let mut d = c.clone();
+        d.loss_p = Some(0.2);
+        assert_ne!(config_fingerprint(&c), config_fingerprint(&d));
+
+        let mut c = a.clone();
+        c.adaptive_delta = Some(1e-6);
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&c));
+        let mut d = c.clone();
+        d.adaptive_period = 4;
+        assert_ne!(config_fingerprint(&c), config_fingerprint(&d));
+
+        let mut c = a.clone();
+        c.iter_staleness = 2;
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&c));
+        let mut d = c.clone();
+        d.iter_schedule = "fixed-lag:1".into();
+        assert_ne!(config_fingerprint(&c), config_fingerprint(&d));
     }
 }

@@ -290,17 +290,86 @@ fn transport_flags_validate() {
         assert!(err.contains("cannot be combined"), "stderr: {err}");
     }
 
-    // serve/worker run the real wire: simulated relaxations are refused
-    // before any socket work.
+    // Communication schedules are seeded math over the share bank and
+    // run identically over the wire — serve/worker accept them. The
+    // probes fail *past* transport validation on a later, named check
+    // (shard range for worker, quorum range for serve), proving the
+    // schedule itself was not refused.
+    for sched_flags in [
+        ["--schedule", "semisync"],
+        ["--schedule", "lossy"],
+        ["--adaptive-delta", "1e-4"],
+        ["--iter-staleness", "2"],
+    ] {
+        let out = dssfn()
+            .args([
+                "worker", "--connect", "127.0.0.1:1", "--shard", "99",
+                "--dataset", "quickstart",
+            ])
+            .args(sched_flags)
+            .output()
+            .unwrap();
+        assert!(!out.status.success());
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(
+            !err.contains("simulation-only"),
+            "{sched_flags:?} wrongly rejected as simulation-only: {err}"
+        );
+        assert!(err.contains("out of range"), "stderr: {err}");
+
+        let out = dssfn()
+            .args([
+                "serve", "--bind", "127.0.0.1:0", "--min-clients", "99",
+                "--dataset", "quickstart",
+            ])
+            .args(sched_flags)
+            .output()
+            .unwrap();
+        assert!(!out.status.success());
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(
+            !err.contains("simulation-only"),
+            "{sched_flags:?} wrongly rejected as simulation-only: {err}"
+        );
+        assert!(err.contains("exceeds the cluster size"), "stderr: {err}");
+    }
+
+    // What stays simulation-only is the faked cluster physics: the
+    // straggler model, crash-injection chaos and the event clock. Each
+    // is refused by name before any socket work.
     let out = dssfn()
         .args([
             "worker", "--connect", "127.0.0.1:1", "--shard", "0",
-            "--dataset", "quickstart", "--schedule", "lossy",
+            "--dataset", "quickstart", "--straggler-sigma", "0.5",
         ])
         .output()
         .unwrap();
     assert!(!out.status.success());
-    assert!(String::from_utf8_lossy(&out.stderr).contains("simulation-only"));
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("simulation-only"), "stderr: {err}");
+    assert!(err.contains("--straggler-sigma"), "stderr: {err}");
+    let out = dssfn()
+        .args([
+            "worker", "--connect", "127.0.0.1:1", "--shard", "0",
+            "--dataset", "quickstart", "--chaos-crash-p", "0.1",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("simulation-only"), "stderr: {err}");
+    assert!(err.contains("--chaos-crash-p"), "stderr: {err}");
+    let out = dssfn()
+        .args([
+            "serve", "--bind", "127.0.0.1:0", "--dataset", "quickstart",
+            "--clock", "event",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("simulation-only"), "stderr: {err}");
+    assert!(err.contains("--clock event"), "stderr: {err}");
     let out = dssfn()
         .args([
             "serve", "--bind", "127.0.0.1:0", "--dataset", "quickstart",

@@ -20,7 +20,9 @@ use dssfn::transport::{
 use dssfn::util::{Rng, SplitMix64};
 use dssfn::{Error, Result};
 use std::cell::RefCell;
-use std::io::Read;
+use std::io::{Read, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::thread;
 
 fn toy_config() -> ExperimentConfig {
@@ -46,11 +48,12 @@ fn one_shot(listener: &LoopbackListener) -> impl FnMut() -> Result<Box<dyn Conn>
     }
 }
 
-#[test]
-fn loopback_run_is_bit_identical_to_in_process() {
-    let cfg = toy_config();
-
-    // Reference: the ordinary in-process synchronous run.
+/// The determinism bar, parameterised over the comm schedule: run the
+/// same config in-process (reference) and as serve + M loopback worker
+/// reactors, and assert the two runs are *bit-identical* — weights,
+/// output, cost curve, headline metrics, simulated ledger.
+fn assert_loopback_matches_in_process(cfg: &ExperimentConfig) {
+    // Reference: the ordinary in-process run over the same phase machine.
     let session = cfg.session_builder().unwrap().build().unwrap();
     let (ref_model, ref_report) = session.run_to_completion().unwrap();
     let ref_model = ref_model.into_ssfn().unwrap();
@@ -72,7 +75,7 @@ fn loopback_run_is_bit_identical_to_in_process() {
             )
         }));
     }
-    let algo = ServeAlgorithm::new(&cfg, Box::new(listener), ServeOptions::default()).unwrap();
+    let algo = ServeAlgorithm::new(cfg, Box::new(listener), ServeOptions::default()).unwrap();
     let session = TrainSession::from_algorithm(Box::new(algo));
     let (model, report) = session.run_to_completion().unwrap();
     let model = model.into_ssfn().unwrap();
@@ -95,6 +98,41 @@ fn loopback_run_is_bit_identical_to_in_process() {
     // Both sides charge the same simulated ledger (only consensus
     // averaging is billed; the wire itself is real, not simulated).
     assert_eq!(report.comm_total.bytes, ref_report.comm_total.bytes);
+}
+
+#[test]
+fn loopback_run_is_bit_identical_to_in_process() {
+    assert_loopback_matches_in_process(&toy_config());
+}
+
+#[test]
+fn loopback_semisync_is_bit_identical_to_in_process() {
+    let mut cfg = toy_config();
+    cfg.schedule = "semisync".into(); // staleness defaults to s = 2
+    assert_loopback_matches_in_process(&cfg);
+}
+
+#[test]
+fn loopback_lossy_is_bit_identical_to_in_process() {
+    let mut cfg = toy_config();
+    cfg.schedule = "lossy".into(); // loss_p defaults to 0.1
+    assert_loopback_matches_in_process(&cfg);
+}
+
+#[test]
+fn loopback_adaptive_delta_is_bit_identical_to_in_process() {
+    let mut cfg = toy_config();
+    cfg.adaptive_delta = Some(1e-6);
+    cfg.adaptive_period = 4; // plateaus may double the period: Hold frames
+    cfg.record_cost_curve = true; // adaptive δ steers off the cost curve
+    assert_loopback_matches_in_process(&cfg);
+}
+
+#[test]
+fn loopback_iter_staleness_is_bit_identical_to_in_process() {
+    let mut cfg = toy_config();
+    cfg.iter_staleness = 2; // ADMM updates up to 2 iterations stale
+    assert_loopback_matches_in_process(&cfg);
 }
 
 #[test]
@@ -126,6 +164,8 @@ fn handshake_rejects_mismatches_cleanly() {
             nodes: 2,
             config_fp: 0,
             task_checksum: 0,
+            schedule: "sync".into(),
+            have_layer: 0,
         },
     )
     .unwrap();
@@ -148,6 +188,13 @@ fn handshake_rejects_mismatches_cleanly() {
     bad.nodes = 3;
     let err = run_worker_with(&bad, WorkerOptions::default(), one_shot(&listener)).unwrap_err();
     assert!(err.to_string().contains("cluster size"), "{err}");
+
+    // A different comm schedule is named before the fingerprint (the
+    // fingerprint also covers it, but the name beats an opaque hash).
+    let mut bad = cfg.clone();
+    bad.schedule = "semisync".into();
+    let err = run_worker_with(&bad, WorkerOptions::default(), one_shot(&listener)).unwrap_err();
+    assert!(err.to_string().contains("schedule mismatch"), "{err}");
 
     // An out-of-range shard never even connects.
     let err = run_worker_with(
@@ -274,6 +321,248 @@ fn absent_worker_rejoins_via_catch_up() {
     assert!(model.output().frobenius_norm_sq().is_finite());
 }
 
+#[test]
+fn late_joiner_at_layer_one_replays_the_weight_stack() {
+    // A worker that first appears after layer 0 has advanced declares
+    // `have_layer = 0` in its Hello, so the catch-up ships the full
+    // weight stack (from_layer = 0) and the worker replays it through
+    // its raw shard before adopting the layer-1 consensus share.
+    let mut cfg = toy_config();
+    cfg.nodes = 2;
+
+    let listener = LoopbackListener::new();
+    let connect0 = one_shot(&listener);
+    let cfg0 = cfg.clone();
+    let worker0 = thread::spawn(move || {
+        run_worker_with(
+            &cfg0,
+            WorkerOptions {
+                shard: 0,
+                ..WorkerOptions::default()
+            },
+            connect0,
+        )
+    });
+
+    let events: RefCell<Vec<StepEvent>> = RefCell::new(Vec::new());
+    let worker1: RefCell<Option<thread::JoinHandle<Result<WorkerSummary>>>> = RefCell::new(None);
+    let algo = ServeAlgorithm::new(
+        &cfg,
+        Box::new(listener.clone()),
+        ServeOptions {
+            min_clients: 1,
+            io_timeout: None,
+        },
+    )
+    .unwrap();
+    let mut session = TrainSession::from_algorithm(Box::new(algo));
+    session.observe_fn(|ev| {
+        events.borrow_mut().push(*ev);
+        if let StepEvent::AdmmIteration {
+            layer: 1,
+            iteration: 2,
+            ..
+        } = ev
+        {
+            if worker1.borrow().is_none() {
+                let connect1 = one_shot(&listener);
+                let cfg1 = cfg.clone();
+                *worker1.borrow_mut() = Some(thread::spawn(move || {
+                    run_worker_with(
+                        &cfg1,
+                        WorkerOptions {
+                            shard: 1,
+                            ..WorkerOptions::default()
+                        },
+                        connect1,
+                    )
+                }));
+            }
+        }
+    });
+    let (model, report) = session.finish().unwrap();
+    drop(session);
+
+    let summary0 = worker0.join().unwrap().unwrap();
+    let summary1 = worker1
+        .into_inner()
+        .expect("rejoin never triggered")
+        .join()
+        .unwrap()
+        .unwrap();
+    assert_eq!(summary0.layers, report.layers.len());
+    assert_eq!(summary1.layers, report.layers.len());
+
+    let evs = events.into_inner();
+    assert!(
+        evs.iter()
+            .any(|e| matches!(e, StepEvent::NodeDropped { node: 1, .. })),
+        "missing NodeDropped for the absent shard"
+    );
+    assert!(
+        evs.iter()
+            .any(|e| matches!(e, StepEvent::NodeRejoined { node: 1, layer: 1, .. })),
+        "missing NodeRejoined at layer 1"
+    );
+
+    let model = model.into_ssfn().unwrap();
+    assert_eq!(report.layers.len(), 2);
+    assert!(report.test_accuracy.is_finite());
+    assert!(model.output().frobenius_norm_sq().is_finite());
+}
+
+/// A conn that starts failing every read and write once the shared kill
+/// switch flips — a mid-run TCP drop, seen from the worker's side.
+struct KillSwitch {
+    inner: Box<dyn Conn>,
+    dead: Arc<AtomicBool>,
+}
+
+impl KillSwitch {
+    fn check(&self) -> std::io::Result<()> {
+        if self.dead.load(Ordering::SeqCst) {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::ConnectionReset,
+                "kill switch flipped",
+            ));
+        }
+        Ok(())
+    }
+}
+
+impl Read for KillSwitch {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        self.check()?;
+        self.inner.read(buf)
+    }
+}
+
+impl Write for KillSwitch {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.check()?;
+        self.inner.write(buf)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+impl Conn for KillSwitch {}
+
+/// A connect factory whose first conn is pre-pushed (visible to the
+/// rendezvous) and killable; reconnects get fresh, reliable pipes.
+fn flaky_then_fresh(
+    listener: &LoopbackListener,
+    dead: &Arc<AtomicBool>,
+) -> impl FnMut() -> Result<Box<dyn Conn>> {
+    let (server_end, worker_end) = duplex();
+    listener.push(Box::new(server_end));
+    let mut first = Some(Box::new(KillSwitch {
+        inner: Box::new(worker_end),
+        dead: Arc::clone(dead),
+    }) as Box<dyn Conn>);
+    let listener = listener.clone();
+    move || match first.take() {
+        Some(c) => Ok(c),
+        None => {
+            let (server_end, worker_end) = duplex();
+            listener.push(Box::new(server_end));
+            Ok(Box::new(worker_end) as Box<dyn Conn>)
+        }
+    }
+}
+
+#[test]
+fn reconnect_after_layer_advance_catches_up_in_o1() {
+    // A worker that crashes *after* advancing past layer 0 keeps its
+    // layer-boundary snapshot (features embedding the first weight), so
+    // its reconnect Hello declares `have_layer = 1` and the catch-up
+    // ships an empty weight tail — the O(1) rejoin path.
+    let mut cfg = toy_config();
+    cfg.nodes = 2;
+
+    let listener = LoopbackListener::new();
+    let dead = Arc::new(AtomicBool::new(false));
+
+    let connect0 = one_shot(&listener);
+    let cfg0 = cfg.clone();
+    let worker0 = thread::spawn(move || {
+        run_worker_with(
+            &cfg0,
+            WorkerOptions {
+                shard: 0,
+                ..WorkerOptions::default()
+            },
+            connect0,
+        )
+    });
+    let connect1 = flaky_then_fresh(&listener, &dead);
+    let cfg1 = cfg.clone();
+    let worker1 = thread::spawn(move || {
+        run_worker_with(
+            &cfg1,
+            WorkerOptions {
+                shard: 1,
+                ..WorkerOptions::default()
+            },
+            connect1,
+        )
+    });
+
+    let events: RefCell<Vec<StepEvent>> = RefCell::new(Vec::new());
+    // Quorum of 1: the run survives the drop with restricted mixing
+    // while the killed worker reconnects.
+    let algo = ServeAlgorithm::new(
+        &cfg,
+        Box::new(listener),
+        ServeOptions {
+            min_clients: 1,
+            io_timeout: None,
+        },
+    )
+    .unwrap();
+    let mut session = TrainSession::from_algorithm(Box::new(algo));
+    session.observe_fn(|ev| {
+        events.borrow_mut().push(*ev);
+        // Once layer 1 is underway, worker 1's conn starts failing; its
+        // next I/O errors and it reconnects with `have_layer = 1`.
+        if let StepEvent::AdmmIteration {
+            layer: 1,
+            iteration: 0,
+            ..
+        } = ev
+        {
+            dead.store(true, Ordering::SeqCst);
+        }
+    });
+    let (model, report) = session.finish().unwrap();
+    drop(session);
+
+    let summary0 = worker0.join().unwrap().unwrap();
+    let summary1 = worker1.join().unwrap().unwrap();
+    assert_eq!(summary0.layers, report.layers.len());
+    assert_eq!(summary1.layers, report.layers.len());
+    assert!(dead.load(Ordering::SeqCst), "kill switch never flipped");
+
+    let evs = events.into_inner();
+    assert!(
+        evs.iter()
+            .any(|e| matches!(e, StepEvent::NodeDropped { node: 1, layer: 1, .. })),
+        "missing NodeDropped for the killed worker"
+    );
+    assert!(
+        evs.iter()
+            .any(|e| matches!(e, StepEvent::NodeRejoined { node: 1, layer: 1, .. })),
+        "missing NodeRejoined after the O(1) catch-up"
+    );
+
+    let model = model.into_ssfn().unwrap();
+    assert_eq!(report.layers.len(), 2);
+    assert!(report.test_accuracy.is_finite());
+    assert!(model.output().frobenius_norm_sq().is_finite());
+}
+
 // ---- frame/message hostility suite (checkpoint-fuzz style) ----
 
 fn sample_messages() -> Vec<Message> {
@@ -284,6 +573,8 @@ fn sample_messages() -> Vec<Message> {
             nodes: 8,
             config_fp: 0x1234_5678_9abc_def0,
             task_checksum: 0x0fed_cba9_8765_4321,
+            schedule: "semisync(s=2)".into(),
+            have_layer: 1,
         },
         Message::Welcome {
             protocol: PROTOCOL_VERSION,
@@ -316,9 +607,14 @@ fn sample_messages() -> Vec<Message> {
             layer: 1,
             last: false,
         },
+        Message::Hold {
+            layer: 1,
+            iteration: 3,
+        },
         Message::CatchUp {
             layer: 2,
             iteration: 5,
+            from_layer: 1,
             weights: vec![Matrix::zeros(2, 2), Matrix::from_fn(1, 4, |_, c| c as f64)],
             s: Matrix::zeros(2, 3),
         },
