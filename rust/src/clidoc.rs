@@ -98,6 +98,8 @@ pub const FLAGS: &[Flag] = &[
         toml: "network.min_nodes", help: "quorum: averaging stalls (sim-time accrues, no traffic) while fewer than Q nodes are live" },
     Flag { name: "--clock", value: "closed-form|event", commands: "train sweep info", default: "closed-form",
         toml: "network.clock", help: "simulated-seconds engine: the closed-form per-round charge, or the per-node discrete-event simulator (each node waits only for its own staleness-bounded dependencies)" },
+    Flag { name: "--compress", value: "none|qN|topk:F", commands: "train serve worker sweep info", default: "none",
+        toml: "network.compress", help: "gossip message compression with per-edge error feedback: N-bit stochastic uniform quantization (1<=N<=8) or magnitude top-k keeping fraction F" },
     Flag { name: "--backend", value: "native|pjrt", commands: "train info", default: "native",
         toml: "runtime.backend", help: "compute backend for the dense kernels" },
     Flag { name: "--artifacts", value: "DIR", commands: "train info", default: "artifacts",
@@ -212,6 +214,12 @@ pub const CONFLICTS: &[Conflict] = &[
         names: "lossy" },
     Conflict { knob: "`--clock event`", rejected_when: "`--chaos-crash-p` is set (churn reshapes the dependency DAG mid-call)",
         names: "fault injection" },
+    Conflict { knob: "`--compress`", rejected_when: "`--exact-consensus` is set (exact averaging exchanges no messages to compress)",
+        names: "exact_consensus" },
+    Conflict { knob: "`--compress`", rejected_when: "`--chaos-crash-p` is set (churn rebuilds the mixing plan the per-edge error-feedback accumulators are keyed on)",
+        names: "fault injection" },
+    Conflict { knob: "`--compress q0|q9|topk:0|topk:1.5|...`", rejected_when: "always (bits must be 1..=8, the kept fraction inside (0, 1))",
+        names: "compress" },
     Conflict { knob: "`--checkpoint-every`", rejected_when: "`--checkpoint` is not set, or K = 0",
         names: "checkpoint" },
     Conflict { knob: "any training flag", rejected_when: "`--resume` is set (the checkpoint carries the configuration)",

@@ -40,6 +40,7 @@
 //! chaos_seed = 7           # seed of the membership churn stream
 //! min_nodes = 2            # quorum: averaging stalls below this live count
 //! clock = "closed-form"    # simulated-seconds engine: "closed-form" or "event"
+//! compress = "q4"          # gossip compression: "none", "qN" (N-bit) or "topk:F"
 //! alpha = 0.001
 //! beta = 125000000.0
 //!
@@ -52,8 +53,8 @@
 use crate::coordinator::{ConsensusMode, TrainOptions};
 use crate::data::{lookup, ClassificationTask};
 use crate::network::{
-    AdaptiveDeltaPolicy, ChaosConfig, CommSchedule, LatencyModel, NodeLatency, StalenessSchedule,
-    Topology, WeightRule,
+    AdaptiveDeltaPolicy, ChaosConfig, CommSchedule, CompressionConfig, LatencyModel, NodeLatency,
+    StalenessSchedule, Topology, WeightRule,
 };
 use crate::ssfn::{SsfnArchitecture, TrainHyper};
 use crate::{Error, Result};
@@ -143,6 +144,11 @@ pub struct ExperimentConfig {
     /// `"event"` (the discrete-event simulator with per-node
     /// round-completion events).
     pub clock: String,
+    /// Gossip message compression: `"none"` (the default raw-f64
+    /// exchange), `"qN"` (N-bit stochastic uniform quantization,
+    /// 1 ≤ N ≤ 8) or `"topk:F"` (magnitude top-k keeping fraction F),
+    /// each with per-edge error feedback. `None` means uncompressed.
+    pub compress: Option<String>,
     /// Use exact averaging instead of gossip (ablation).
     pub exact_consensus: bool,
     /// α of the latency model (s/round).
@@ -188,6 +194,7 @@ impl Default for ExperimentConfig {
             chaos_seed: 0,
             min_nodes: None,
             clock: "closed-form".into(),
+            compress: None,
             exact_consensus: false,
             alpha: 1e-3,
             beta: 125e6,
@@ -278,6 +285,10 @@ impl ExperimentConfig {
             "network.clock" => {
                 crate::simulator::SimClock::parse(value)?; // validate early
                 self.clock = value.to_string();
+            }
+            "network.compress" => {
+                CompressionConfig::parse(value)?.validate()?; // validate early
+                self.compress = Some(value.to_string());
             }
             "network.exact_consensus" => self.exact_consensus = num(key, value)?,
             "network.alpha" => self.alpha = num(key, value)?,
@@ -447,6 +458,14 @@ impl ExperimentConfig {
         };
         let iter_schedule = parse_iter_schedule(&self.iter_schedule)?;
         let clock = crate::simulator::SimClock::parse(&self.clock)?;
+        let compression = match &self.compress {
+            Some(s) => {
+                let c = CompressionConfig::parse(s)?;
+                c.validate()?;
+                c
+            }
+            None => CompressionConfig::None,
+        };
         let adaptive_delta = match self.adaptive_delta {
             Some(max_delta) => Some(AdaptiveDeltaPolicy {
                 max_delta,
@@ -511,6 +530,14 @@ impl ExperimentConfig {
                         .into(),
                 ));
             }
+            if compression.is_enabled() {
+                return Err(Error::Config(
+                    "compress applies to gossip consensus only \
+                     (exact_consensus is set): exact averaging exchanges \
+                     no messages to compress"
+                        .into(),
+                ));
+            }
         }
         let comm = crate::network::CommConfig {
             schedule,
@@ -529,6 +556,7 @@ impl ExperimentConfig {
                 min_nodes,
             },
             clock,
+            compression,
         };
         if !self.exact_consensus {
             comm.validate_with_iterations(
@@ -591,6 +619,7 @@ impl ExperimentConfig {
                 .iter_schedule(comm.iter_schedule)
                 .chaos(comm.chaos)
                 .clock(comm.clock)
+                .compression(comm.compression)
         };
         if let Some(policy) = comm.adaptive_delta {
             b = b.adaptive_delta(policy);
@@ -1137,6 +1166,59 @@ exact_consensus = true
         let cfg = ExperimentConfig::from_toml(
             "[network]\nclock = \"event\"\nschedule = \"semisync\"\nstaleness = 2\n\
              straggler_sigma = 0.5\nstraggler_seed = 9",
+        )
+        .unwrap();
+        assert!(cfg.comm_config().is_ok());
+    }
+
+    #[test]
+    fn compress_key_parses_validates_and_lowers() {
+        // The default is uncompressed.
+        assert_eq!(
+            ExperimentConfig::default().comm_config().unwrap().compression,
+            CompressionConfig::None
+        );
+        // Quantization and top-k forms lower into the typed config and
+        // the builder.
+        let cfg = ExperimentConfig::from_toml(
+            "[experiment]\ndataset = \"quickstart\"\n[network]\ncompress = \"q4\"",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.comm_config().unwrap().compression,
+            CompressionConfig::Quantize { bits: 4 }
+        );
+        assert!(cfg.session_builder().is_ok());
+        let cfg = ExperimentConfig::from_toml("[network]\ncompress = \"topk:0.1\"").unwrap();
+        assert_eq!(
+            cfg.comm_config().unwrap().compression,
+            CompressionConfig::TopK { frac: 0.1 }
+        );
+        // An explicit "none" is the uncompressed default.
+        let cfg = ExperimentConfig::from_toml("[network]\ncompress = \"none\"").unwrap();
+        assert_eq!(cfg.comm_config().unwrap().compression, CompressionConfig::None);
+        // Malformed and out-of-range forms are rejected at TOML-apply
+        // time already.
+        assert!(ExperimentConfig::from_toml("[network]\ncompress = \"zip\"").is_err());
+        assert!(ExperimentConfig::from_toml("[network]\ncompress = \"q9\"").is_err());
+        assert!(ExperimentConfig::from_toml("[network]\ncompress = \"topk:1.5\"").is_err());
+        // Exact consensus exchanges no messages to compress.
+        let cfg = ExperimentConfig::from_toml(
+            "[network]\nexact_consensus = true\ncompress = \"q4\"",
+        )
+        .unwrap();
+        let err = cfg.comm_config().unwrap_err();
+        assert!(err.to_string().contains("exact_consensus"), "{err}");
+        // ... and fault injection would orphan the error-feedback state.
+        let cfg = ExperimentConfig::from_toml(
+            "[network]\ncompress = \"q4\"\nchaos_crash_p = 0.05\nchaos_rejoin_p = 0.5",
+        )
+        .unwrap();
+        let err = cfg.comm_config().unwrap_err();
+        assert!(err.to_string().contains("fault injection"), "{err}");
+        // Compression composes with the relaxed schedules.
+        let cfg = ExperimentConfig::from_toml(
+            "[network]\ncompress = \"q4\"\nschedule = \"semisync\"\nstaleness = 2",
         )
         .unwrap();
         assert!(cfg.comm_config().is_ok());

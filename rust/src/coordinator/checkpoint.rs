@@ -31,8 +31,8 @@ use crate::admm::NodeState;
 use crate::linalg::Matrix;
 use crate::metrics::LayerRecord;
 use crate::network::{
-    AdaptiveDeltaPolicy, ChaosConfig, CommConfig, CommSchedule, CommSnapshot, LatencyModel,
-    NodeLatency, StalenessSchedule, Topology, WeightRule,
+    AdaptiveDeltaPolicy, ChaosConfig, CommConfig, CommSchedule, CommSnapshot, CompressionConfig,
+    LatencyModel, NodeLatency, StalenessSchedule, Topology, WeightRule,
 };
 use crate::simulator::SimClock;
 use crate::ssfn::{SsfnArchitecture, TrainHyper};
@@ -41,6 +41,13 @@ use std::io;
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"DSSFNCKP";
+/// Version 7 added compressed gossip ([`CompressionConfig`]): the
+/// compression knob in the comm config plus the compressor's runtime
+/// state (round cursor, per-edge error-feedback accumulators), so a
+/// quantized/sparsified run checkpointed mid-layer resumes its dither
+/// stream and residuals bit-identically. v1–v6 snapshots upgrade with
+/// compression off and no accumulator state — exactly the raw-f64
+/// exchange every older run performed.
 /// Version 6 added the discrete-event clock engine (`--clock event`):
 /// the clock-engine tag in the comm config plus the event clock's
 /// runtime state (lifetime round counter, per-node completion times),
@@ -71,7 +78,7 @@ const MAGIC: &[u8; 8] = b"DSSFNCKP";
 /// heterogeneous resume replays the run under the per-round clock model
 /// from round 0 (the aggregate charging it was written under no longer
 /// exists; model weights and traffic are unaffected either way).
-const VERSION: u32 = 6;
+const VERSION: u32 = 7;
 
 /// Where inside the layer state machine the snapshot was taken.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -145,6 +152,14 @@ pub struct Checkpoint {
     /// (and its in-window neighbours') recorded finish times, so the
     /// vector is the engine's complete cross-call state.
     pub(crate) event_times: Vec<f64>,
+    /// Compressor round cursor (mixing rounds the dither stream has
+    /// keyed so far); 0 for uncompressed runs.
+    pub(crate) compress_cursor: u64,
+    /// Per-edge error-feedback accumulators at the snapshot; empty for
+    /// uncompressed runs or before the first compressed round. Carried
+    /// verbatim: each residual depends on every past round's quantized
+    /// messages, so rebuilding it would mean replaying the whole run.
+    pub(crate) compress_err: Vec<Matrix>,
     /// Fault-injection membership cursor (chaos steps drawn so far); 0
     /// for fault-free runs.
     pub(crate) chaos_cursor: u64,
@@ -326,6 +341,19 @@ impl Checkpoint {
                     SimClock::Event => 1,
                 })?;
             }
+            if version >= 7 {
+                match self.comm.compression {
+                    CompressionConfig::None => w.u8(0)?,
+                    CompressionConfig::Quantize { bits } => {
+                        w.u8(1)?;
+                        w.u8(bits)?;
+                    }
+                    CompressionConfig::TopK { frac } => {
+                        w.u8(2)?;
+                        w.f64(frac)?;
+                    }
+                }
+            }
         }
         // Growth policy, task fingerprint.
         w.opt_f64(self.growth)?;
@@ -377,6 +405,10 @@ impl Checkpoint {
         if version >= 6 {
             w.u64(self.event_rounds)?;
             w.f64s(&self.event_times)?;
+        }
+        if version >= 7 {
+            w.u64(self.compress_cursor)?;
+            w.matrices(&self.compress_err)?;
         }
         w.snapshot(&self.comm_before)?;
         w.snapshot(&self.ledger_total)?;
@@ -535,6 +567,18 @@ impl Checkpoint {
             } else {
                 SimClock::ClosedForm
             };
+            // v6 predates compressed gossip: raw-f64 exchange (no
+            // compression) is exactly what every older run performed.
+            let compression = if version >= 7 {
+                match r.u8()? {
+                    0 => CompressionConfig::None,
+                    1 => CompressionConfig::Quantize { bits: r.u8()? },
+                    2 => CompressionConfig::TopK { frac: r.f64()? },
+                    t => return Err(Error::Checkpoint(format!("unknown compression tag {t}"))),
+                }
+            } else {
+                CompressionConfig::None
+            };
             CommConfig {
                 schedule,
                 adaptive_delta,
@@ -543,6 +587,7 @@ impl Checkpoint {
                 iter_schedule,
                 chaos,
                 clock,
+                compression,
             }
         } else {
             CommConfig::default()
@@ -616,6 +661,11 @@ impl Checkpoint {
         } else {
             (0, Vec::new())
         };
+        let (compress_cursor, compress_err) = if version >= 7 {
+            (r.u64()?, r.matrices()?)
+        } else {
+            (0, Vec::new())
+        };
         let comm_before = r.snapshot()?;
         let ledger_total = r.snapshot()?;
         let sim_secs = r.f64()?;
@@ -661,6 +711,8 @@ impl Checkpoint {
             straggler_g,
             event_rounds,
             event_times,
+            compress_cursor,
+            compress_err,
             chaos_cursor,
             chaos_live,
             chaos_stalls,
@@ -924,6 +976,7 @@ mod tests {
                 iter_schedule: StalenessSchedule::Iid,
                 chaos: ChaosConfig { crash_p: 0.05, rejoin_p: 0.5, seed: 13, min_nodes: 2 },
                 clock: SimClock::Event,
+                compression: CompressionConfig::Quantize { bits: 4 },
             },
             growth: Some(0.25),
             dataset: "oracle-toy".into(),
@@ -956,6 +1009,11 @@ mod tests {
             straggler_g: vec![0.25, -1.5],
             event_rounds: 66,
             event_times: vec![1.5, 2.25],
+            compress_cursor: 9,
+            compress_err: vec![
+                Matrix::from_fn(3, 3, |r, c| (r as f64 - c as f64) * 0.0625),
+                Matrix::from_fn(3, 3, |r, c| (r * 3 + c) as f64 * -0.03125),
+            ],
             chaos_cursor: 21,
             chaos_live: vec![true, false],
             chaos_stalls: 3,
@@ -1002,6 +1060,12 @@ mod tests {
         assert_eq!(back.comm.clock, SimClock::Event);
         assert_eq!(back.event_rounds, 66);
         assert_eq!(back.event_times, ck.event_times);
+        assert_eq!(back.comm.compression, CompressionConfig::Quantize { bits: 4 });
+        assert_eq!(back.compress_cursor, 9);
+        assert_eq!(back.compress_err.len(), 2);
+        for (a, b) in back.compress_err.iter().zip(&ck.compress_err) {
+            assert_eq!(a.max_abs_diff(b), 0.0);
+        }
         assert_eq!(back.comm.chaos, ck.comm.chaos);
         assert_eq!(back.chaos_cursor, 21);
         assert_eq!(back.chaos_live, vec![true, false]);
@@ -1048,9 +1112,32 @@ mod tests {
                 iter_schedule: StalenessSchedule::Iid,
                 chaos: ChaosConfig { crash_p: 0.1, rejoin_p: 0.25, seed: 3, min_nodes: 1 },
                 clock: SimClock::ClosedForm,
+                compression: CompressionConfig::TopK { frac: 0.25 },
             };
             let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
             assert_eq!(back.comm, ck.comm);
+        }
+    }
+
+    #[test]
+    fn roundtrip_covers_every_compression_variant() {
+        for compression in [
+            CompressionConfig::None,
+            CompressionConfig::Quantize { bits: 1 },
+            CompressionConfig::Quantize { bits: 8 },
+            CompressionConfig::TopK { frac: 0.1 },
+        ] {
+            let mut ck = sample();
+            ck.comm = CommConfig { compression, ..ck.comm };
+            if !compression.is_enabled() {
+                ck.compress_cursor = 0;
+                ck.compress_err = Vec::new();
+            }
+            let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+            assert_eq!(back.comm.compression, compression);
+            assert_eq!(back.comm, ck.comm);
+            assert_eq!(back.compress_cursor, ck.compress_cursor);
+            assert_eq!(back.compress_err.len(), ck.compress_err.len());
         }
     }
 
@@ -1150,6 +1237,8 @@ mod tests {
         ck.chaos_stalls = 0;
         ck.event_rounds = 0;
         ck.event_times = Vec::new();
+        ck.compress_cursor = 0;
+        ck.compress_err = Vec::new();
         ck
     }
 
@@ -1221,6 +1310,9 @@ mod tests {
         ck.comm.clock = SimClock::ClosedForm;
         ck.event_rounds = 0;
         ck.event_times = Vec::new();
+        ck.comm.compression = CompressionConfig::None;
+        ck.compress_cursor = 0;
+        ck.compress_err = Vec::new();
         let mut buf = Vec::new();
         ck.write_versioned(&mut buf, 2).unwrap();
         let back = Checkpoint::from_bytes(&buf).unwrap();
@@ -1252,6 +1344,9 @@ mod tests {
         ck.comm.clock = SimClock::ClosedForm;
         ck.event_rounds = 0;
         ck.event_times = Vec::new();
+        ck.comm.compression = CompressionConfig::None;
+        ck.compress_cursor = 0;
+        ck.compress_err = Vec::new();
         let mut buf = Vec::new();
         ck.write_versioned(&mut buf, 3).unwrap();
         assert_eq!(buf[8], 3); // really a v3 stream
@@ -1280,6 +1375,9 @@ mod tests {
         ck.comm.clock = SimClock::ClosedForm;
         ck.event_rounds = 0;
         ck.event_times = Vec::new();
+        ck.comm.compression = CompressionConfig::None;
+        ck.compress_cursor = 0;
+        ck.compress_err = Vec::new();
         let mut buf = Vec::new();
         ck.write_versioned(&mut buf, 4).unwrap();
         assert_eq!(buf[8], 4); // really a v4 stream
@@ -1303,6 +1401,9 @@ mod tests {
         ck.comm.clock = SimClock::ClosedForm;
         ck.event_rounds = 0;
         ck.event_times = Vec::new();
+        ck.comm.compression = CompressionConfig::None;
+        ck.compress_cursor = 0;
+        ck.compress_err = Vec::new();
         let mut buf = Vec::new();
         ck.write_versioned(&mut buf, 5).unwrap();
         assert_eq!(buf[8], 5); // really a v5 stream
@@ -1319,6 +1420,30 @@ mod tests {
     }
 
     #[test]
+    fn v6_checkpoints_upgrade_with_compression_off() {
+        // A v6 run carried the full event-clock machinery but predates
+        // compressed gossip: every message was raw f64, so compression
+        // off with no accumulator state is exactly the run it described.
+        let mut ck = sample();
+        ck.comm.compression = CompressionConfig::None;
+        ck.compress_cursor = 0;
+        ck.compress_err = Vec::new();
+        let mut buf = Vec::new();
+        ck.write_versioned(&mut buf, 6).unwrap();
+        assert_eq!(buf[8], 6); // really a v6 stream
+        assert!(buf.len() < ck.to_bytes().len());
+        let back = Checkpoint::from_bytes(&buf).unwrap();
+        assert_eq!(back.comm, ck.comm);
+        assert_eq!(back.comm.compression, CompressionConfig::None);
+        assert_eq!(back.comm.clock, ck.comm.clock);
+        assert_eq!(back.event_rounds, ck.event_rounds);
+        assert_eq!(back.event_times, ck.event_times);
+        assert_eq!(back.chaos_cursor, ck.chaos_cursor);
+        assert_eq!(back.compress_cursor, 0);
+        assert!(back.compress_err.is_empty());
+    }
+
+    #[test]
     fn reader_survives_truncation_at_every_byte_of_every_version() {
         // Fuzz-style: any prefix of any supported on-disk version must
         // be a clean Err — never a panic, hang, or huge allocation.
@@ -1332,6 +1457,11 @@ mod tests {
                 fixture.comm.clock = SimClock::ClosedForm;
                 fixture.event_rounds = 0;
                 fixture.event_times = Vec::new();
+            }
+            if version < 7 {
+                fixture.comm.compression = CompressionConfig::None;
+                fixture.compress_cursor = 0;
+                fixture.compress_err = Vec::new();
             }
             let mut buf = Vec::new();
             fixture.write_versioned(&mut buf, version).unwrap();

@@ -289,6 +289,16 @@ impl<'t> DssfnAlgorithm<'t> {
                 if comm.clock.is_event() {
                     engine.set_event_clock(true);
                 }
+                // Compressed gossip: the engine compresses every non-self
+                // edge message with per-edge error feedback. The dither
+                // seed is derived from the master seed (its own label, so
+                // the stream is independent of the schedule seed below) —
+                // identical between the in-process and wire drivers, which
+                // keeps compressed loopback runs bit-equal too.
+                if comm.compression.is_enabled() {
+                    let dither_seed = SplitMix64::new(seed ^ 0xd17e_b175_eed0_c04e).next_u64();
+                    engine.set_compression(comm.compression, dither_seed);
+                }
                 let comm_seed = SplitMix64::new(seed ^ 0x636f_6d6d_5eed).next_u64();
                 let fabric = comm.schedule.build_fabric(engine, comm_seed)?;
                 if comm.chaos.enabled() {
@@ -315,11 +325,13 @@ impl<'t> DssfnAlgorithm<'t> {
                     || comm.chaos.enabled()
                     || comm.chaos.min_nodes > 1
                     || comm.clock.is_event()
+                    || comm.compression.is_enabled()
                 {
                     return Err(Error::Config(
                         "communication schedules, adaptive δ, iteration staleness, \
-                         the straggler model, fault injection and the event clock \
-                         apply to gossip consensus only"
+                         the straggler model, fault injection, the event clock and \
+                         compression apply to gossip consensus only (exact_consensus \
+                         exchanges no messages to compress)"
                             .into(),
                     ));
                 }
@@ -514,6 +526,25 @@ impl<'t> DssfnAlgorithm<'t> {
             })?;
             fab.engine()
                 .restore_event_state(ck.event_rounds, &ck.event_times)?;
+        }
+        // Compression state: the dither cursor and the per-edge
+        // error-feedback accumulators resume compressed mixing
+        // bit-identically (the residuals decide future message values).
+        // An uncompressed engine rejects carried state, so a
+        // checkpoint/config mismatch fails loudly by name.
+        if ck.comm.compression.is_enabled()
+            || ck.compress_cursor > 0
+            || !ck.compress_err.is_empty()
+        {
+            let fab = alg.fabric.as_ref().ok_or_else(|| {
+                Error::Checkpoint(
+                    "checkpoint carries compression state but the restored run \
+                     has no communication fabric (exact consensus)"
+                        .into(),
+                )
+            })?;
+            fab.engine()
+                .restore_compression_state(ck.compress_cursor, ck.compress_err.clone())?;
         }
         alg.current_delta = ck.current_delta;
         if ck.current_period == 0 {
@@ -1216,6 +1247,15 @@ impl Algorithm for DssfnAlgorithm<'_> {
             .as_ref()
             .and_then(|f| f.engine().event_state())
             .unwrap_or((0, Vec::new()));
+        // Compression state: the dither cursor and the per-edge
+        // error-feedback bank — residuals carry across averaging calls,
+        // so a mid-run snapshot must ship them (checkpoint v7).
+        // Uncompressed runs carry the empty bank.
+        let (compress_cursor, compress_err) = self
+            .fabric
+            .as_ref()
+            .and_then(|f| f.engine().compression_state())
+            .unwrap_or((0, Vec::new()));
         Ok(Checkpoint {
             seed: self.seed,
             arch: self.arch,
@@ -1243,6 +1283,8 @@ impl Algorithm for DssfnAlgorithm<'_> {
             straggler_g,
             event_rounds,
             event_times,
+            compress_cursor,
+            compress_err,
             chaos_cursor,
             chaos_live,
             chaos_stalls,

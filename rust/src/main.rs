@@ -25,7 +25,10 @@
 //! stalls averaging below a quorum. `--clock event` swaps the
 //! closed-form simulated-seconds charge for the per-node discrete-event
 //! engine (each node advances when its slowest dependency finishes,
-//! instead of every round paying the global maximum). Flags that the
+//! instead of every round paying the global maximum). `--compress`
+//! quantizes (`qN`) or top-k-sparsifies (`topk:F`) every gossip message
+//! with per-edge error feedback, billing the compressed wire bytes
+//! while the exchange pattern stays the paper's. Flags that the
 //! selected schedule does not read (e.g. `--staleness` under `sync`)
 //! are rejected, not ignored.
 //!
@@ -200,6 +203,15 @@ fn build_config(args: &Args) -> Result<ExperimentConfig, String> {
         dssfn::simulator::SimClock::parse(s).map_err(|e| e.to_string())?;
         cfg.clock = s.to_string();
     }
+    if let Some(s) = args.get("compress") {
+        // Validate the spelling and the knob ranges early; cross-knob
+        // rules (chaos, exact consensus) are checked when the typed
+        // comm config is built.
+        dssfn::network::CompressionConfig::parse(s)
+            .and_then(|c| c.validate())
+            .map_err(|e| e.to_string())?;
+        cfg.compress = Some(s.to_string());
+    }
     if args.has("exact-consensus") {
         cfg.exact_consensus = true;
     }
@@ -258,8 +270,8 @@ fn cmd_train(args: &Args) -> Result<(), String> {
                 "staleness", "loss-p", "adaptive-delta", "adaptive-period",
                 "iter-staleness", "iter-schedule", "straggler-sigma", "straggler-seed",
                 "straggler-corr", "chaos-crash-p", "chaos-rejoin-p", "chaos-seed",
-                "min-nodes", "clock", "bind", "connect", "shard", "min-clients",
-                "io-timeout", "reconnect-max",
+                "min-nodes", "clock", "compress", "bind", "connect", "shard",
+                "min-clients", "io-timeout", "reconnect-max",
             ] {
                 if args.has(flag) {
                     return Err(format!(

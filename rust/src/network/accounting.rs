@@ -59,6 +59,24 @@ impl CommLedger {
             .fetch_add(messages * scalars_per_msg * 8, Ordering::Relaxed);
     }
 
+    /// Record one synchronous round of *compressed* messages: scalars
+    /// stay logical (each message still carries `scalars_per_msg`
+    /// values of information — eq. (14)/(15) counts exchanges), but the
+    /// wire cost is the compressor's `bytes_per_msg`.
+    pub fn record_round_compressed(
+        &self,
+        messages: u64,
+        scalars_per_msg: u64,
+        bytes_per_msg: u64,
+    ) {
+        self.rounds.fetch_add(1, Ordering::Relaxed);
+        self.messages.fetch_add(messages, Ordering::Relaxed);
+        self.scalars
+            .fetch_add(messages * scalars_per_msg, Ordering::Relaxed);
+        self.bytes
+            .fetch_add(messages * bytes_per_msg, Ordering::Relaxed);
+    }
+
     /// Record a single point-to-point message of `scalars` f64 values
     /// (used by the master-worker baseline which has no gossip rounds).
     pub fn record_message(&self, scalars: u64) {
@@ -114,6 +132,17 @@ mod tests {
         assert_eq!(s.bytes, 2007 * 8);
         l.reset();
         assert_eq!(l.snapshot(), CommSnapshot::default());
+    }
+
+    #[test]
+    fn compressed_rounds_bill_compressed_bytes_but_logical_scalars() {
+        let l = CommLedger::new();
+        l.record_round_compressed(10, 100, 58); // q4: 8 + 100*4/8
+        let s = l.snapshot();
+        assert_eq!(s.rounds, 1);
+        assert_eq!(s.messages, 10);
+        assert_eq!(s.scalars, 1000);
+        assert_eq!(s.bytes, 580);
     }
 
     #[test]

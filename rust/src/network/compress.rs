@@ -1,0 +1,515 @@
+//! Compressed gossip messages: stochastic uniform quantization, top-k
+//! sparsification, and per-edge error feedback.
+//!
+//! The paper's B(δ) analysis prices consensus *rounds*; on a real wire
+//! the bottleneck is *bytes*. Following L-FGADMM (Elgabli et al., 2019),
+//! ADMM-style consensus tolerates aggressive message compression as
+//! long as the part a message drops is **fed back**: each directed edge
+//! `j → i` keeps an accumulator `e`, the sender transmits
+//! `m = C(x_j + e)` and stores the residual `e' = (x_j + e) − m`, so
+//! the quantization error is re-offered every round instead of being
+//! lost — the compressed consensus still contracts to the average, only
+//! with a geometrically decaying bias term.
+//!
+//! Two compressors ship, behind the [`CompressionConfig`] knob:
+//!
+//! * **Stochastic uniform quantization** (`qN`, 1–8 bits): values are
+//!   scaled into `[−1, 1]` by the message's max magnitude and rounded
+//!   to one of `2^N − 1` levels with a *seeded dither* draw deciding
+//!   round-up vs round-down, so the quantizer is unbiased conditional
+//!   on the scale (`E[Q(v)] = v` over the dither stream).
+//! * **Top-k sparsification** (`topk:F`): only the `⌈F·n⌉` largest-
+//!   magnitude entries of `x + e` survive, at full precision; every
+//!   dropped entry moves wholesale into the error accumulator, so the
+//!   split conserves each element bit-exactly.
+//!
+//! Determinism discipline (ARCHITECTURE.md rule 2): the dither stream
+//! is keyed on `(dither seed, round cursor, directed edge)` — a pure
+//! mapping, so checkpoint resume only needs the cursor, and per-edge
+//! streams stay independent (a lossy-dropped edge consumes nothing from
+//! its neighbours). The accumulators themselves *do* carry across
+//! averaging calls, which is why checkpoint v7 serializes them.
+
+use crate::linalg::Matrix;
+use crate::util::{Rng, Xoshiro256StarStar};
+use crate::{Error, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+/// Which compressor the gossip engine applies to every non-self edge
+/// message. Serializable (checkpoint v7 comm block), `Copy`, and part
+/// of [`super::CommConfig`].
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum CompressionConfig {
+    /// Full-precision `f64` messages — the historical exchange.
+    #[default]
+    None,
+    /// Stochastic uniform quantization at `bits` ∈ 1..=8 per scalar
+    /// (plus one `f64` scale per message).
+    Quantize {
+        /// Bits per scalar.
+        bits: u8,
+    },
+    /// Magnitude top-k sparsification: keep `⌈frac·n⌉` entries at full
+    /// precision (each shipped as a 4-byte index + 8-byte value).
+    TopK {
+        /// Fraction of entries kept, in (0, 1).
+        frac: f64,
+    },
+}
+
+impl CompressionConfig {
+    /// Parse the CLI/TOML spelling: `none`, `qN` (N ∈ 1..=8) or
+    /// `topk:F` (F ∈ (0,1)).
+    pub fn parse(s: &str) -> Result<Self> {
+        let cfg = if s == "none" {
+            Self::None
+        } else if let Some(bits) = s.strip_prefix('q') {
+            let bits: u8 = bits.parse().map_err(|_| {
+                Error::Config(format!("unknown compression '{s}' (expected none, qN or topk:F)"))
+            })?;
+            Self::Quantize { bits }
+        } else if let Some(frac) = s.strip_prefix("topk:") {
+            let frac: f64 = frac.parse().map_err(|_| {
+                Error::Config(format!("unknown compression '{s}' (expected none, qN or topk:F)"))
+            })?;
+            Self::TopK { frac }
+        } else {
+            return Err(Error::Config(format!(
+                "unknown compression '{s}' (expected none, qN or topk:F)"
+            )));
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// The spelling `parse` accepts — also the name the wire handshake
+    /// compares, and the token `relaxation_tokens` renders.
+    pub fn describe(&self) -> String {
+        match self {
+            Self::None => "none".into(),
+            Self::Quantize { bits } => format!("q{bits}"),
+            Self::TopK { frac } => format!("topk:{frac}"),
+        }
+    }
+
+    /// Range-check the knobs.
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            Self::None => Ok(()),
+            Self::Quantize { bits } => {
+                if (1..=8).contains(&bits) {
+                    Ok(())
+                } else {
+                    Err(Error::Config(format!(
+                        "compress: quantization bits must be in 1..=8, got {bits}"
+                    )))
+                }
+            }
+            Self::TopK { frac } => {
+                if frac > 0.0 && frac < 1.0 {
+                    Ok(())
+                } else {
+                    Err(Error::Config(format!(
+                        "compress: top-k fraction must be in (0, 1), got {frac}"
+                    )))
+                }
+            }
+        }
+    }
+
+    /// Whether any compression is applied.
+    pub fn is_enabled(&self) -> bool {
+        *self != Self::None
+    }
+
+    /// How many entries a top-k message keeps out of `n` (≥ 1).
+    pub fn kept(&self, n: usize) -> usize {
+        match *self {
+            Self::TopK { frac } => (((frac * n as f64).ceil()) as usize).clamp(1, n),
+            _ => n,
+        }
+    }
+
+    /// Bytes one compressed message of `scalars` entries costs on the
+    /// (simulated) wire: full-width `f64`s, a scale + packed levels, or
+    /// index/value pairs.
+    pub fn message_bytes(&self, scalars: u64) -> u64 {
+        match *self {
+            Self::None => 8 * scalars,
+            Self::Quantize { bits } => 8 + (scalars * bits as u64).div_ceil(8),
+            Self::TopK { .. } => 12 * self.kept(scalars as usize) as u64,
+        }
+    }
+}
+
+/// Per-edge compression state: error-feedback accumulators (one matrix
+/// per directed-edge slot of the mix plan), the message scratch, and
+/// the top-k index buffer — persistent, so steady-state rounds stay
+/// allocation-free (`tests/alloc_free.rs` discipline).
+struct Bank {
+    err: Vec<Matrix>,
+    msg: Matrix,
+    idx: Vec<usize>,
+    rows: usize,
+    cols: usize,
+}
+
+/// The runtime compressor a [`super::GossipEngine`] owns when
+/// compression is enabled: the seeded dither stream, the global round
+/// cursor, and the per-edge error-feedback bank.
+pub struct Compressor {
+    cfg: CompressionConfig,
+    seed: u64,
+    cursor: AtomicU64,
+    bank: Mutex<Bank>,
+}
+
+impl Clone for Compressor {
+    fn clone(&self) -> Self {
+        // The accumulators and the cursor are *semantic* state (they
+        // decide future message values), so a cloned engine must mix
+        // identically — clone them, not just the config.
+        let bank = self.bank.lock().unwrap();
+        Self {
+            cfg: self.cfg,
+            seed: self.seed,
+            cursor: AtomicU64::new(self.cursor.load(Ordering::Relaxed)),
+            bank: Mutex::new(Bank {
+                err: bank.err.clone(),
+                msg: bank.msg.clone(),
+                idx: bank.idx.clone(),
+                rows: bank.rows,
+                cols: bank.cols,
+            }),
+        }
+    }
+}
+
+impl Compressor {
+    /// Build a compressor for the given config and dither seed.
+    pub fn new(cfg: CompressionConfig, seed: u64) -> Self {
+        Self {
+            cfg,
+            seed,
+            cursor: AtomicU64::new(0),
+            bank: Mutex::new(Bank {
+                err: Vec::new(),
+                msg: Matrix::zeros(0, 0),
+                idx: Vec::new(),
+                rows: 0,
+                cols: 0,
+            }),
+        }
+    }
+
+    /// The configured compression.
+    pub fn config(&self) -> CompressionConfig {
+        self.cfg
+    }
+
+    /// Claim the next mixing round's dither key. Called once per
+    /// compressed mixing round; the pre-increment value keys the round.
+    pub fn begin_round(&self) -> u64 {
+        self.cursor.fetch_add(1, Ordering::Relaxed)
+    }
+
+    fn locked(&self, rows: usize, cols: usize) -> MutexGuard<'_, Bank> {
+        let mut b = self.bank.lock().unwrap();
+        if b.rows != rows || b.cols != cols {
+            // Payload shape changed (layer boundary): the old residuals
+            // have no meaning for the new problem — start clean. This
+            // is deterministic, so resumed runs rebuild identically.
+            b.err.clear();
+            b.msg = Matrix::zeros(rows, cols);
+            b.idx = Vec::with_capacity(rows * cols);
+            b.rows = rows;
+            b.cols = cols;
+        }
+        b
+    }
+
+    fn ensure_edge(b: &mut Bank, edge: usize) {
+        while b.err.len() <= edge {
+            b.err.push(Matrix::zeros(b.rows, b.cols));
+        }
+    }
+
+    /// Compress `src + e_edge` into `bank.msg`, leaving the residual in
+    /// `e_edge`.
+    fn compress_msg(&self, b: &mut Bank, edge: usize, round: u64, src: &Matrix) -> Result<()> {
+        Self::ensure_edge(b, edge);
+        let Bank { err, msg, idx, .. } = b;
+        let e = &mut err[edge];
+        msg.copy_from(src)?;
+        msg.axpy(1.0, e)?; // t = x + e
+
+        match self.cfg {
+            CompressionConfig::None => {
+                e.fill_zero();
+            }
+            CompressionConfig::Quantize { bits } => {
+                let t = msg.as_mut_slice();
+                let scale = t.iter().fold(0.0f64, |a, v| a.max(v.abs()));
+                let es = e.as_mut_slice();
+                if scale == 0.0 {
+                    // An all-zero message quantizes to itself exactly.
+                    for r in es.iter_mut() {
+                        *r = 0.0;
+                    }
+                } else {
+                    let levels = ((1u32 << bits) - 1) as f64;
+                    let mut rng = Xoshiro256StarStar::seed_from_u64(self.seed)
+                        .derive(round)
+                        .derive(edge as u64);
+                    for (v, r) in t.iter_mut().zip(es.iter_mut()) {
+                        // y ∈ [0, levels]; dither picks floor vs ceil
+                        // with probability = the fractional part, so
+                        // E[level] = y and the dequantized value is
+                        // unbiased for *v (conditional on the scale).
+                        let y = (*v / scale + 1.0) / 2.0 * levels;
+                        let floor = y.floor();
+                        let up = rng.next_f64() < y - floor;
+                        let level = if up { floor + 1.0 } else { floor };
+                        let q = (level / levels * 2.0 - 1.0) * scale;
+                        *r = *v - q;
+                        *v = q;
+                    }
+                }
+            }
+            CompressionConfig::TopK { .. } => {
+                let n = msg.rows() * msg.cols();
+                let k = self.cfg.kept(n);
+                let t = msg.as_mut_slice();
+                idx.clear();
+                idx.extend(0..n);
+                // Largest magnitude first; ties broken by index so the
+                // selection is platform-independent.
+                idx.sort_unstable_by(|&a, &b| {
+                    t[b].abs()
+                        .total_cmp(&t[a].abs())
+                        .then_with(|| a.cmp(&b))
+                });
+                // Each entry moves wholesale into the message (rank
+                // < k) or the residual (rank >= k): the split conserves
+                // every element bit-exactly.
+                e.copy_from(msg)?;
+                let es = e.as_mut_slice();
+                for &i in &idx[..k] {
+                    es[i] = 0.0;
+                }
+                for &i in &idx[k..] {
+                    t[i] = 0.0;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// One compressed edge delivery: `out += weight · C(src + e_edge)`,
+    /// with `e_edge` updated to the residual. Only call for *delivered*
+    /// edges — a dropped (lossy) edge must leave its accumulator
+    /// untouched, exactly as if the sender never built the message.
+    pub fn accumulate(
+        &self,
+        edge: usize,
+        round: u64,
+        weight: f64,
+        src: &Matrix,
+        out: &mut Matrix,
+    ) -> Result<()> {
+        let mut b = self.locked(src.rows(), src.cols());
+        self.compress_msg(&mut b, edge, round, src)?;
+        out.axpy(weight, &b.msg)
+    }
+
+    /// Compress one message and return `(message, residual)` — the
+    /// test/bench surface over the same path `accumulate` uses.
+    pub fn compress(&self, edge: usize, round: u64, src: &Matrix) -> Result<(Matrix, Matrix)> {
+        let mut b = self.locked(src.rows(), src.cols());
+        self.compress_msg(&mut b, edge, round, src)?;
+        let msg = b.msg.clone();
+        let err = b.err[edge].clone();
+        Ok((msg, err))
+    }
+
+    /// Zero every error accumulator (the round cursor is untouched).
+    pub fn reset(&self) {
+        let mut b = self.bank.lock().unwrap();
+        for e in &mut b.err {
+            e.fill_zero();
+        }
+    }
+
+    /// Snapshot `(round cursor, error-feedback bank)` for checkpoint v7.
+    pub fn state(&self) -> (u64, Vec<Matrix>) {
+        let b = self.bank.lock().unwrap();
+        (self.cursor.load(Ordering::Relaxed), b.err.clone())
+    }
+
+    /// Restore a checkpointed `(cursor, bank)` snapshot.
+    pub fn restore(&self, cursor: u64, err: Vec<Matrix>) -> Result<()> {
+        let (rows, cols) = match err.first() {
+            Some(m) => (m.rows(), m.cols()),
+            None => (0, 0),
+        };
+        if err.iter().any(|m| m.rows() != rows || m.cols() != cols) {
+            return Err(Error::Checkpoint(
+                "compression error-feedback bank has mixed shapes".into(),
+            ));
+        }
+        self.cursor.store(cursor, Ordering::Relaxed);
+        let mut b = self.bank.lock().unwrap();
+        b.err = err;
+        b.msg = Matrix::zeros(rows, cols);
+        b.idx = Vec::with_capacity(rows * cols);
+        b.rows = rows;
+        b.cols = cols;
+        Ok(())
+    }
+}
+
+impl std::fmt::Debug for Compressor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Compressor")
+            .field("cfg", &self.cfg)
+            .field("seed", &self.seed)
+            .field("cursor", &self.cursor.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_describe() {
+        for s in ["none", "q1", "q4", "q8", "topk:0.1", "topk:0.5"] {
+            let cfg = CompressionConfig::parse(s).unwrap();
+            assert_eq!(cfg.describe(), s);
+            assert_eq!(CompressionConfig::parse(&cfg.describe()).unwrap(), cfg);
+        }
+        for s in ["q0", "q9", "q", "topk:0", "topk:1", "topk:-0.1", "topk:x", "gzip"] {
+            assert!(CompressionConfig::parse(s).is_err(), "{s} parsed");
+        }
+        assert!(!CompressionConfig::None.is_enabled());
+        assert!(CompressionConfig::parse("q4").unwrap().is_enabled());
+    }
+
+    #[test]
+    fn message_bytes_orders_below_full_width() {
+        let n = 640u64;
+        let full = CompressionConfig::None.message_bytes(n);
+        assert_eq!(full, 8 * n);
+        let q4 = CompressionConfig::Quantize { bits: 4 }.message_bytes(n);
+        assert_eq!(q4, 8 + n / 2);
+        let q1 = CompressionConfig::Quantize { bits: 1 }.message_bytes(n);
+        assert_eq!(q1, 8 + n / 8);
+        let topk = CompressionConfig::TopK { frac: 0.1 }.message_bytes(n);
+        assert_eq!(topk, 12 * 64);
+        assert!(q1 < q4 && q4 < topk && topk < full);
+        // k never rounds to zero.
+        assert_eq!(CompressionConfig::TopK { frac: 0.01 }.kept(3), 1);
+    }
+
+    #[test]
+    fn quantize_levels_cover_the_range_and_feed_back() {
+        let comp = Compressor::new(CompressionConfig::Quantize { bits: 2 }, 7);
+        let src = Matrix::from_fn(2, 3, |r, c| (r * 3 + c) as f64 - 2.5);
+        let (msg, err) = comp.compress(0, 0, &src).unwrap();
+        let scale = src.as_slice().iter().fold(0.0f64, |a, v| a.max(v.abs()));
+        for (i, (&m, &e)) in msg.as_slice().iter().zip(err.as_slice()).enumerate() {
+            // Every output sits on one of the 4 levels of [-scale, scale].
+            let y = (m / scale + 1.0) / 2.0 * 3.0;
+            assert!((y - y.round()).abs() < 1e-9, "entry {i} off-level: {m}");
+            // The residual is exactly what the message dropped.
+            assert_eq!((src.as_slice()[i] - m).to_bits(), e.to_bits());
+        }
+    }
+
+    #[test]
+    fn top_k_keeps_exactly_k_and_conserves_bit_exactly() {
+        let comp = Compressor::new(CompressionConfig::TopK { frac: 0.25 }, 3);
+        let src = Matrix::from_fn(3, 4, |r, c| ((r * 4 + c) as f64 - 6.0) * 1.7);
+        let (msg, err) = comp.compress(0, 0, &src).unwrap();
+        let kept = msg.as_slice().iter().filter(|v| **v != 0.0).count();
+        assert_eq!(kept, 3); // ceil(0.25 * 12)
+        for ((&m, &e), &t) in msg.as_slice().iter().zip(err.as_slice()).zip(src.as_slice()) {
+            let conserved = (m.to_bits() == t.to_bits() && e == 0.0)
+                || (e.to_bits() == t.to_bits() && m == 0.0);
+            assert!(conserved, "element split is lossy: t={t} m={m} e={e}");
+        }
+    }
+
+    #[test]
+    fn dither_stream_is_keyed_per_round_and_edge() {
+        let comp = Compressor::new(CompressionConfig::Quantize { bits: 1 }, 11);
+        let src = Matrix::from_fn(4, 4, |r, c| ((r * 4 + c) as f64).sin());
+        comp.reset();
+        let (m_r0, _) = comp.compress(0, 0, &src).unwrap();
+        comp.reset();
+        let (m_r1, _) = comp.compress(0, 1, &src).unwrap();
+        comp.reset();
+        let (m_e1, _) = comp.compress(1, 0, &src).unwrap();
+        comp.reset();
+        let (m_again, _) = comp.compress(0, 0, &src).unwrap();
+        // Pure (seed, round, edge) → draw mapping: replays exactly ...
+        assert_eq!(m_r0.max_abs_diff(&m_again), 0.0);
+        // ... and distinct keys give distinct dithers.
+        assert!(m_r0.max_abs_diff(&m_r1) > 0.0);
+        assert!(m_r0.max_abs_diff(&m_e1) > 0.0);
+    }
+
+    #[test]
+    fn error_feedback_reoffers_the_residual() {
+        // With 1-bit quantization a constant message is reproduced
+        // exactly every round, while a mixed one leaves a residual that
+        // the next round's t = x + e folds back in: over many rounds
+        // the *average* delivered value converges to the true value.
+        let comp = Compressor::new(CompressionConfig::Quantize { bits: 1 }, 5);
+        let src = Matrix::from_fn(1, 2, |_, c| if c == 0 { 1.0 } else { 0.25 });
+        let rounds = 4000;
+        let mut sum = [0.0f64; 2];
+        for round in 0..rounds {
+            let (m, _) = comp.compress(0, round, &src).unwrap();
+            sum[0] += m.as_slice()[0];
+            sum[1] += m.as_slice()[1];
+        }
+        let mean = [sum[0] / rounds as f64, sum[1] / rounds as f64];
+        assert!((mean[0] - 1.0).abs() < 0.05, "mean {:?}", mean);
+        assert!((mean[1] - 0.25).abs() < 0.05, "mean {:?}", mean);
+    }
+
+    #[test]
+    fn shape_change_resets_the_bank_and_restore_round_trips() {
+        let comp = Compressor::new(CompressionConfig::TopK { frac: 0.5 }, 9);
+        let a = Matrix::from_fn(2, 2, |r, c| (r + 2 * c) as f64 + 0.5);
+        comp.compress(0, 0, &a).unwrap();
+        let (cursor, bank) = comp.state();
+        assert!(bank[0].as_slice().iter().any(|&v| v != 0.0));
+
+        // A clone carries the semantic state ...
+        let cloned = comp.clone();
+        let (c2, b2) = cloned.state();
+        assert_eq!(c2, cursor);
+        assert_eq!(b2[0].max_abs_diff(&bank[0]), 0.0);
+
+        // ... restore round-trips it ...
+        let fresh = Compressor::new(CompressionConfig::TopK { frac: 0.5 }, 9);
+        fresh.restore(cursor, bank.clone()).unwrap();
+        let (m1, _) = comp.compress(0, 7, &a).unwrap();
+        let (m2, _) = fresh.compress(0, 7, &a).unwrap();
+        assert_eq!(m1.max_abs_diff(&m2), 0.0);
+
+        // ... a new payload shape starts clean ...
+        let b = Matrix::from_fn(3, 1, |r, _| r as f64 - 1.0);
+        comp.compress(0, 8, &b).unwrap();
+        let (_, bank_b) = comp.state();
+        assert_eq!(bank_b[0].rows(), 3);
+
+        // ... and a mixed-shape bank is refused.
+        let hostile = vec![Matrix::zeros(2, 2), Matrix::zeros(1, 1)];
+        assert!(fresh.restore(0, hostile).is_err());
+    }
+}

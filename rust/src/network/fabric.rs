@@ -37,7 +37,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::chaos::{ChaosConfig, ChaosDrain, ChaosSnapshot};
-use super::{GossipEngine, MixingMatrix, NodeLatency};
+use super::{CompressionConfig, GossipEngine, MixingMatrix, NodeLatency};
 use crate::linalg::Matrix;
 use crate::simulator::SimClock;
 use crate::util::Xoshiro256StarStar;
@@ -354,6 +354,12 @@ pub struct CommConfig {
     /// *clock only* — the mixing math, round counts and traffic
     /// accounting are identical bit for bit.
     pub clock: SimClock,
+    /// Message compression for every non-self gossip edge (stochastic
+    /// quantization or top-k sparsification with per-edge error
+    /// feedback, see [`crate::network::Compressor`]). The
+    /// [`CompressionConfig::None`] default is bit-identical to the
+    /// full-precision exchange.
+    pub compression: CompressionConfig,
 }
 
 impl CommConfig {
@@ -395,6 +401,15 @@ impl CommConfig {
                  off there are no ages to schedule)",
                 self.iter_schedule.describe()
             )));
+        }
+        self.compression.validate()?;
+        if self.compression.is_enabled() && self.chaos.enabled() {
+            return Err(Error::Config(
+                "compression cannot combine with fault injection (chaos): churn \
+                 rebuilds the live-set mixing plan mid-run, which would orphan \
+                 the per-edge error-feedback accumulators — pick one"
+                    .into(),
+            ));
         }
         self.chaos.validate()?;
         if self.chaos.enabled() && self.iter_staleness > 0 {
@@ -500,6 +515,9 @@ impl CommConfig {
         }
         if self.clock.is_event() {
             s.push_str(" clock=event");
+        }
+        if self.compression.is_enabled() {
+            s.push_str(&format!(" compress={}", self.compression.describe()));
         }
         s
     }
@@ -1145,6 +1163,48 @@ mod tests {
         // Chaos renders as a relaxation token; the default renders none.
         assert_eq!(ok.relaxation_tokens(), " chaos(p=0.1, rejoin=0.5, quorum=2)");
         assert_eq!(CommConfig::default().relaxation_tokens(), "");
+    }
+
+    #[test]
+    fn comm_config_validates_compression_knobs() {
+        // Compression composes with every schedule, adaptive δ,
+        // stragglers, iteration staleness and the event clock...
+        let ok = CommConfig {
+            compression: CompressionConfig::Quantize { bits: 4 },
+            ..CommConfig::default()
+        };
+        ok.validate_for(1e-9, false).unwrap();
+        let ok_semi = CommConfig {
+            schedule: CommSchedule::SemiSync { staleness: 2 },
+            compression: CompressionConfig::TopK { frac: 0.1 },
+            ..CommConfig::default()
+        };
+        ok_semi.validate_for(1e-9, false).unwrap();
+        let ok_event = CommConfig { clock: SimClock::Event, ..ok };
+        ok_event.validate_for(1e-9, false).unwrap();
+        // ... but not with fault injection (churn rebuilds the plan the
+        // per-edge accumulators are keyed on) ...
+        let bad = CommConfig {
+            chaos: ChaosConfig { crash_p: 0.1, rejoin_p: 0.5, seed: 1, min_nodes: 2 },
+            ..ok
+        };
+        let err = bad.validate_for(1e-9, false).unwrap_err();
+        assert!(err.to_string().contains("fault injection"), "got: {err}");
+        // ... and the knob ranges are checked.
+        let bad = CommConfig {
+            compression: CompressionConfig::Quantize { bits: 9 },
+            ..CommConfig::default()
+        };
+        assert!(bad.validate_for(1e-9, false).is_err());
+        let bad = CommConfig {
+            compression: CompressionConfig::TopK { frac: 1.5 },
+            ..CommConfig::default()
+        };
+        assert!(bad.validate_for(1e-9, false).is_err());
+        // The mode suffix names the compressor only when enabled.
+        assert_eq!(ok.relaxation_tokens(), " compress=q4");
+        assert_eq!(ok_semi.relaxation_tokens(), " compress=topk:0.1");
+        assert!(!CommConfig::default().relaxation_tokens().contains("compress"));
     }
 
     #[test]

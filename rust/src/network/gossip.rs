@@ -26,7 +26,10 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, PoisonError};
 
-use super::{CommLedger, LatencyModel, MixingMatrix, NodeLatency, StragglerSampler};
+use super::{
+    CommLedger, CompressionConfig, Compressor, LatencyModel, MixingMatrix, NodeLatency,
+    StragglerSampler,
+};
 use crate::linalg::Matrix;
 use crate::simulator::EventClock;
 use crate::util::{Rng, Xoshiro256StarStar};
@@ -86,6 +89,13 @@ pub struct GossipEngine {
     /// (`staleness` banks of `m` matrices, flat). Same lazy-rebuild
     /// policy as `scratch`; empty until a semi-sync round runs.
     hist: Mutex<Vec<Matrix>>,
+    /// Optional message compressor ([`Compressor`]): when installed,
+    /// every non-self edge delivery ships a quantized or sparsified
+    /// message with per-edge error feedback, the ledger bills the
+    /// compressed byte cost (scalars stay logical), and the simulated
+    /// clock charges the compressed payload. `None` (the default) is
+    /// bit-identical to all pre-compression behaviour.
+    compressor: Option<Compressor>,
 }
 
 impl Clone for GossipEngine {
@@ -115,6 +125,9 @@ impl Clone for GossipEngine {
             ),
             scratch: Mutex::new(Vec::new()),
             hist: Mutex::new(Vec::new()),
+            // Error-feedback accumulators and the dither cursor are
+            // semantic state: a cloned engine must mix identically.
+            compressor: self.compressor.clone(),
         }
     }
 }
@@ -153,6 +166,71 @@ impl GossipEngine {
             event: Mutex::new(None),
             scratch: Mutex::new(Vec::new()),
             hist: Mutex::new(Vec::new()),
+            compressor: None,
+        }
+    }
+
+    /// Install (or clear) message compression: every subsequent non-self
+    /// edge delivery ships `C(x + e)` with the per-edge residual fed
+    /// back next round (see [`Compressor`]). `CompressionConfig::None`
+    /// clears the compressor, restoring the full-precision exchange
+    /// bit-exactly. `seed` keys the dither stream.
+    pub fn set_compression(&mut self, cfg: CompressionConfig, seed: u64) {
+        self.compressor = if cfg.is_enabled() {
+            Some(Compressor::new(cfg, seed))
+        } else {
+            None
+        };
+    }
+
+    /// The installed compression configuration
+    /// ([`CompressionConfig::None`] when uncompressed).
+    pub fn compression(&self) -> CompressionConfig {
+        self.compressor
+            .as_ref()
+            .map(|c| c.config())
+            .unwrap_or_default()
+    }
+
+    /// The compressor's checkpointable `(dither cursor, error-feedback
+    /// bank)` pair, when compression is installed.
+    pub fn compression_state(&self) -> Option<(u64, Vec<Matrix>)> {
+        self.compressor.as_ref().map(|c| c.state())
+    }
+
+    /// Restore a checkpointed compression `(cursor, bank)` pair so the
+    /// resumed run replays the exact dither draws and re-offers the
+    /// exact residuals (checkpoint resume; requires compression to be
+    /// installed).
+    pub fn restore_compression_state(&self, cursor: u64, err: Vec<Matrix>) -> Result<()> {
+        match &self.compressor {
+            Some(c) => c.restore(cursor, err),
+            None => Err(Error::Checkpoint(
+                "checkpoint carries compression state but the run is uncompressed".into(),
+            )),
+        }
+    }
+
+    /// Bytes one edge message of `scalars` values costs on the
+    /// simulated wire under the installed compression (full-width
+    /// `f64`s when uncompressed) — the payload the clock charges.
+    fn payload_bytes(&self, scalars: u64) -> u64 {
+        match &self.compressor {
+            Some(c) => c.config().message_bytes(scalars),
+            None => scalars * 8,
+        }
+    }
+
+    /// Charge one mixing round to the ledger: logical scalars either
+    /// way, compressed bytes when a compressor is installed.
+    fn record_mix_round(&self, messages: u64, scalars: u64) {
+        match &self.compressor {
+            Some(c) => self.ledger.record_round_compressed(
+                messages,
+                scalars,
+                c.config().message_bytes(scalars),
+            ),
+            None => self.ledger.record_round(messages, scalars),
         }
     }
 
@@ -474,33 +552,57 @@ impl GossipEngine {
         // allocation (§Perf: the mixing loop dominates low-degree runs).
         let mut bank = self.scratch_bank(m, shape);
         for _ in 0..rounds {
-            for (p, out) in self.plan.iter().zip(bank.iter_mut()) {
-                // Equal-weight fast path (the paper's h_ij = 1/|N_i|):
-                // accumulate plain sums, scale once at the end.
-                out.copy_from(&values[p.nbrs[0]])?;
-                if p.equal {
-                    for &j in &p.nbrs[1..] {
-                        out.axpy(1.0, &values[j])?;
+            if let Some(comp) = &self.compressor {
+                // Compressed round: each non-self edge delivers
+                // `C(x_j + e)` with its residual fed back; a node's own
+                // value enters its sum at full precision (the error-
+                // feedback contraction argument needs the raw self
+                // term). Edge slots are numbered in (receiver,
+                // neighbour-slot) iteration order — a pure function of
+                // the fixed mix plan, so accumulators stay stable
+                // across rounds and resume.
+                let round = comp.begin_round();
+                let mut edge = 0usize;
+                for (i, (p, out)) in self.plan.iter().zip(bank.iter_mut()).enumerate() {
+                    out.fill_zero();
+                    for (&j, &w) in p.nbrs.iter().zip(&p.weights) {
+                        if j == i {
+                            out.axpy(w, &values[i])?;
+                        } else {
+                            comp.accumulate(edge, round, w, &values[j], out)?;
+                            edge += 1;
+                        }
                     }
-                    out.scale_inplace(p.weights[0]);
-                } else {
-                    out.scale_inplace(p.weights[0]);
-                    for (&j, &w) in p.nbrs[1..].iter().zip(&p.weights[1..]) {
-                        out.axpy(w, &values[j])?;
+                }
+            } else {
+                for (p, out) in self.plan.iter().zip(bank.iter_mut()) {
+                    // Equal-weight fast path (the paper's h_ij = 1/|N_i|):
+                    // accumulate plain sums, scale once at the end.
+                    out.copy_from(&values[p.nbrs[0]])?;
+                    if p.equal {
+                        for &j in &p.nbrs[1..] {
+                            out.axpy(1.0, &values[j])?;
+                        }
+                        out.scale_inplace(p.weights[0]);
+                    } else {
+                        out.scale_inplace(p.weights[0]);
+                        for (&j, &w) in p.nbrs[1..].iter().zip(&p.weights[1..]) {
+                            out.axpy(w, &values[j])?;
+                        }
                     }
                 }
             }
             for (v, s) in values.iter_mut().zip(bank.iter_mut()) {
                 std::mem::swap(v, s);
             }
-            self.ledger.record_round(self.msgs_per_round, scalars);
+            self.record_mix_round(self.msgs_per_round, scalars);
             if !event_on {
-                self.advance_clock(self.round_dt(scalars * 8, clock_slack));
+                self.advance_clock(self.round_dt(self.payload_bytes(scalars), clock_slack));
             }
         }
         drop(bank);
         if event_on {
-            self.event_advance(rounds, scalars * 8, |_| clock_slack);
+            self.event_advance(rounds, self.payload_bytes(scalars), |_| clock_slack);
         }
         Ok(())
     }
@@ -595,7 +697,13 @@ impl GossipEngine {
                     }
                 }
             }
+            let round = self.compressor.as_ref().map(|c| c.begin_round());
             let mut delivered: u64 = 0;
+            // Edge slots follow the same fixed (receiver, slot) order as
+            // the synchronous path; a dropped edge still claims its slot
+            // (but leaves its accumulator untouched — the sender never
+            // built the message), so slot ids are drop-independent.
+            let mut edge = 0usize;
             for (i, (p, out)) in self.plan.iter().zip(bank.iter_mut()).enumerate() {
                 // Effective self-weight: own weight plus — lazy
                 // correction — the weight of every dropped neighbour.
@@ -612,16 +720,22 @@ impl GossipEngine {
                         continue;
                     }
                     if !dropped.contains(&(i.min(j), i.max(j))) {
-                        out.axpy(w, &values[j])?;
+                        match (&self.compressor, round) {
+                            (Some(comp), Some(r)) => {
+                                comp.accumulate(edge, r, w, &values[j], out)?;
+                            }
+                            _ => out.axpy(w, &values[j])?,
+                        }
                         delivered += 1;
                     }
+                    edge += 1;
                 }
             }
             for (v, s) in values.iter_mut().zip(bank.iter_mut()) {
                 std::mem::swap(v, s);
             }
-            self.ledger.record_round(delivered, scalars);
-            self.advance_clock(self.round_dt(scalars * 8, 0));
+            self.record_mix_round(delivered, scalars);
+            self.advance_clock(self.round_dt(self.payload_bytes(scalars), 0));
         }
         Ok(())
     }
@@ -705,7 +819,9 @@ impl GossipEngine {
             // Relaxed rounds first; the trailing `staleness` rounds are
             // the synchronous flush.
             let relaxed = r + staleness < rounds;
+            let round_key = self.compressor.as_ref().map(|c| c.begin_round());
             let mut rng = call_rng.derive(r as u64);
+            let mut edge = 0usize;
             for (i, (p, out)) in self.plan.iter().zip(bank.iter_mut()).enumerate() {
                 out.fill_zero();
                 for (&j, &w) in p.nbrs.iter().zip(&p.weights) {
@@ -720,7 +836,17 @@ impl GossipEngine {
                             // pre-filled x_0 while r < a).
                             &hist[((r + staleness - a) % staleness) * m + j]
                         };
-                        out.axpy(w, src)?;
+                        // Compression applies to whatever value the
+                        // edge ships this round — stale or fresh; the
+                        // residual feeds the edge's next send either
+                        // way.
+                        match (&self.compressor, round_key) {
+                            (Some(comp), Some(key)) => {
+                                comp.accumulate(edge, key, w, src, out)?;
+                            }
+                            _ => out.axpy(w, src)?,
+                        }
+                        edge += 1;
                     }
                 }
             }
@@ -732,12 +858,12 @@ impl GossipEngine {
             for (v, s) in values.iter_mut().zip(bank.iter_mut()) {
                 std::mem::swap(v, s);
             }
-            self.ledger.record_round(self.msgs_per_round, scalars);
+            self.record_mix_round(self.msgs_per_round, scalars);
             if !event_on {
                 let dt = if relaxed {
-                    self.round_dt(scalars * 8, staleness)
+                    self.round_dt(self.payload_bytes(scalars), staleness)
                 } else {
-                    self.round_dt(scalars * 8, 0)
+                    self.round_dt(self.payload_bytes(scalars), 0)
                 };
                 self.advance_clock(dt);
             }
@@ -748,7 +874,7 @@ impl GossipEngine {
             // Relaxed rounds grant the staleness window; the trailing
             // flush rounds synchronize fully — the same ramp the
             // closed-form charge models.
-            self.event_advance(rounds, scalars * 8, |r| {
+            self.event_advance(rounds, self.payload_bytes(scalars), |r| {
                 if r + staleness < rounds {
                     staleness
                 } else {
@@ -1273,6 +1399,133 @@ mod tests {
         e.set_event_clock(false);
         assert!(!e.event_enabled());
         e.mix_rounds_lossy(&mut vals, 3, 0.2, &mut rng).unwrap();
+    }
+
+    #[test]
+    fn compressed_gossip_contracts_and_bills_fewer_bytes() {
+        let mut comp = engine(8, 2);
+        comp.set_compression(CompressionConfig::Quantize { bits: 4 }, 99);
+        assert_eq!(comp.compression().describe(), "q4");
+        let plain = engine(8, 2);
+        assert_eq!(plain.compression(), CompressionConfig::None);
+        let mut a = rand_values(8, 2, 3, 13);
+        let mut b = a.clone();
+        let avg = GossipEngine::exact_average(&a).unwrap();
+        let spread0 = a.iter().map(|v| v.max_abs_diff(&avg)).fold(0.0, f64::max);
+        comp.mix_rounds(&mut a, 60).unwrap();
+        plain.mix_rounds(&mut b, 60).unwrap();
+        // Error feedback keeps the compressed consensus contracting to a
+        // noise floor of order (one quantization step × edge weight) —
+        // far below the initial spread, though not exact.
+        let spread = a.iter().map(|v| v.max_abs_diff(&avg)).fold(0.0, f64::max);
+        assert!(spread < 0.5, "compressed spread {spread}");
+        assert!(spread < spread0 * 0.25, "no contraction: {spread0} -> {spread}");
+        // Traffic: identical logical scalars, strictly fewer bytes, and
+        // a strictly faster simulated clock (smaller β payload).
+        let cs = comp.ledger().snapshot();
+        let ps = plain.ledger().snapshot();
+        assert_eq!(cs.rounds, ps.rounds);
+        assert_eq!(cs.messages, ps.messages);
+        assert_eq!(cs.scalars, ps.scalars);
+        assert!(cs.bytes < ps.bytes, "q4 {} vs raw {}", cs.bytes, ps.bytes);
+        assert!(comp.simulated_seconds() < plain.simulated_seconds());
+    }
+
+    #[test]
+    fn compressed_mixing_is_deterministic_and_clones_semantic_state() {
+        let mk = || {
+            let mut e = engine(6, 1);
+            e.set_compression(CompressionConfig::Quantize { bits: 2 }, 7);
+            e
+        };
+        let e = mk();
+        let f = mk();
+        let mut a = rand_values(6, 2, 2, 14);
+        let mut b = a.clone();
+        e.mix_rounds(&mut a, 5).unwrap();
+        f.mix_rounds(&mut b, 5).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.max_abs_diff(y), 0.0);
+        }
+        // A clone mid-run carries the dither cursor and accumulators, so
+        // the continuation mixes bit-identically.
+        let g = e.clone();
+        let mut c = rand_values(6, 2, 2, 15);
+        let mut d = c.clone();
+        e.mix_rounds(&mut c, 5).unwrap();
+        g.mix_rounds(&mut d, 5).unwrap();
+        for (x, y) in c.iter().zip(&d) {
+            assert_eq!(x.max_abs_diff(y), 0.0);
+        }
+    }
+
+    #[test]
+    fn compression_state_restores_bit_identical_mixing() {
+        let mk = || {
+            let mut e = engine(6, 1);
+            e.set_compression(CompressionConfig::TopK { frac: 0.5 }, 31);
+            e
+        };
+        let a = mk();
+        let mut va = rand_values(6, 2, 3, 16);
+        a.mix_rounds(&mut va, 4).unwrap();
+        let (cursor, bank) = a.compression_state().unwrap();
+        assert_eq!(cursor, 4);
+        let b = mk();
+        b.restore_compression_state(cursor, bank).unwrap();
+        let mut xa = va.clone();
+        let mut xb = va.clone();
+        a.mix_rounds(&mut xa, 3).unwrap();
+        b.mix_rounds(&mut xb, 3).unwrap();
+        for (x, y) in xa.iter().zip(&xb) {
+            assert_eq!(x.max_abs_diff(y), 0.0);
+        }
+        // Uncompressed engines expose no state and reject restores.
+        let plain = engine(6, 1);
+        assert!(plain.compression_state().is_none());
+        assert!(plain.restore_compression_state(0, Vec::new()).is_err());
+        // CompressionConfig::None clears the compressor.
+        let mut off = mk();
+        off.set_compression(CompressionConfig::None, 0);
+        assert!(off.compression_state().is_none());
+    }
+
+    #[test]
+    fn compression_composes_with_semisync_and_lossy_schedules() {
+        let mk = |cfg| {
+            let mut e = engine(8, 2);
+            e.set_compression(cfg, 23);
+            e
+        };
+        // Semi-sync: contracts to the same noise floor, deterministic.
+        let e = mk(CompressionConfig::Quantize { bits: 4 });
+        let f = mk(CompressionConfig::Quantize { bits: 4 });
+        let mut a = rand_values(8, 2, 2, 26);
+        let mut b = a.clone();
+        let avg = GossipEngine::exact_average(&a).unwrap();
+        e.mix_rounds_semisync(&mut a, 60, 2, 9, 0).unwrap();
+        f.mix_rounds_semisync(&mut b, 60, 2, 9, 0).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.max_abs_diff(y), 0.0);
+        }
+        let spread = a.iter().map(|v| v.max_abs_diff(&avg)).fold(0.0, f64::max);
+        assert!(spread < 0.5, "compressed semisync spread {spread}");
+        // Lossy: dropped edges leave accumulators untouched, and the
+        // run is still deterministic in (engine seed, drop stream).
+        let g = mk(CompressionConfig::TopK { frac: 0.25 });
+        let h = mk(CompressionConfig::TopK { frac: 0.25 });
+        let mut c = rand_values(8, 2, 2, 27);
+        let mut d = c.clone();
+        let mut r1 = Xoshiro256StarStar::seed_from_u64(3);
+        let mut r2 = Xoshiro256StarStar::seed_from_u64(3);
+        g.mix_rounds_lossy(&mut c, 80, 0.2, &mut r1).unwrap();
+        h.mix_rounds_lossy(&mut d, 80, 0.2, &mut r2).unwrap();
+        for (x, y) in c.iter().zip(&d) {
+            assert_eq!(x.max_abs_diff(y), 0.0);
+        }
+        let avg_c = GossipEngine::exact_average(&rand_values(8, 2, 2, 27)).unwrap();
+        let spread_l = c.iter().map(|v| v.max_abs_diff(&avg_c)).fold(0.0, f64::max);
+        assert!(spread_l < 1.0, "compressed lossy spread {spread_l}");
     }
 
     #[test]

@@ -41,10 +41,16 @@
 //!   Metropolis) mixing, catch-up replay for rejoiners, and a
 //!   `min_nodes` quorum gate that stalls the round until membership
 //!   recovers. A zero-fault plan is bit-identical to the unwrapped
-//!   fabric.
+//!   fabric;
+//! * [`Compressor`] / [`CompressionConfig`] — compressed gossip
+//!   messages (stochastic uniform quantization with seeded dithering,
+//!   magnitude top-k sparsification) with per-edge error-feedback
+//!   accumulators, applied inside the engine's mixing paths so it
+//!   composes with every schedule above.
 
 mod accounting;
 mod chaos;
+mod compress;
 mod fabric;
 mod gossip;
 mod latency;
@@ -53,6 +59,7 @@ mod topology;
 
 pub use accounting::{CommLedger, CommSnapshot};
 pub use chaos::{ChaosConfig, ChaosDrain, ChaosFabric, ChaosPlan, ChaosSnapshot, MembershipStep};
+pub use compress::{CompressionConfig, Compressor};
 pub use fabric::{
     AdaptiveDeltaPolicy, CommConfig, CommFabric, CommSchedule, LossyFabric, SemiSyncFabric,
     StalenessSchedule, SynchronousFabric,

@@ -193,7 +193,9 @@ where
     let mut actor = NodeActor::new(opts.shard, shard);
     let backend = NativeBackend::new();
     let random = RandomMatrices::generate(&arch, cfg.seed)?;
-    let schedule = cfg.comm_config()?.schedule.describe();
+    let comm = cfg.comm_config()?;
+    let schedule = comm.schedule.describe();
+    let compression = comm.compression.describe();
     let config_fp = config_fingerprint(cfg);
 
     let mut scratch: Vec<u8> = Vec::new();
@@ -223,6 +225,7 @@ where
             config_fp,
             task_checksum: checksum,
             schedule: schedule.clone(),
+            compression: compression.clone(),
             have_layer: have as u64,
         };
         let mut conn = establish(&mut connect, &hello, opts.io_timeout, attempts, &mut scratch)?;

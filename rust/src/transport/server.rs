@@ -97,6 +97,11 @@ pub struct Handshake {
     /// folded into the fingerprint; checked separately so a mismatch is
     /// rejected *by name* instead of as an opaque fingerprint diff.
     pub schedule: String,
+    /// Gossip compression name (`CompressionConfig::describe`:
+    /// `none`/`qN`/`topk:F`). Like the schedule, it is folded into the
+    /// fingerprint but checked separately so a compressed server and an
+    /// uncompressed worker reject by name.
+    pub compression: String,
 }
 
 impl Handshake {
@@ -104,7 +109,8 @@ impl Handshake {
     /// set of already-connected shards. Returns the shard index to
     /// admit, or a human-readable rejection naming the exact mismatch.
     pub fn admit(&self, hello: &Message, taken: &[bool]) -> std::result::Result<usize, String> {
-        let (protocol, shard, nodes, config_fp, task_checksum, schedule) = match hello {
+        let (protocol, shard, nodes, config_fp, task_checksum, schedule, compression) = match hello
+        {
             Message::Hello {
                 protocol,
                 shard,
@@ -112,8 +118,17 @@ impl Handshake {
                 config_fp,
                 task_checksum,
                 schedule,
+                compression,
                 have_layer: _,
-            } => (*protocol, *shard, *nodes, *config_fp, *task_checksum, schedule),
+            } => (
+                *protocol,
+                *shard,
+                *nodes,
+                *config_fp,
+                *task_checksum,
+                schedule,
+                compression,
+            ),
             other => {
                 return Err(format!(
                     "expected a Hello greeting, got {}",
@@ -137,6 +152,13 @@ impl Handshake {
             return Err(format!(
                 "schedule mismatch: server runs {}, worker was configured for {schedule}",
                 self.schedule
+            ));
+        }
+        if compression != &self.compression {
+            return Err(format!(
+                "compression mismatch: server runs {}, worker was configured for \
+                 {compression}",
+                self.compression
             ));
         }
         if config_fp != self.config_fp {
@@ -171,10 +193,11 @@ impl Handshake {
 /// the flag. Shared by `serve` and `worker` so both sides fail the same
 /// way before any socket work.
 ///
-/// Communication *schedules* (semisync, lossy), adaptive δ and
-/// iteration staleness are NOT rejected: they are seeded math over the
-/// staged share bank, which the unified phase machine runs identically
-/// over the wire. What stays simulation-only is everything that fakes
+/// Communication *schedules* (semisync, lossy), adaptive δ, iteration
+/// staleness and gossip compression are NOT rejected: they are seeded
+/// math over the staged share bank, which the unified phase machine
+/// runs identically over the wire (the compressor lives inside the
+/// server's gossip engine; wire frames stay raw `f64`). What stays simulation-only is everything that fakes
 /// cluster *physics*: the straggler model, crash-injection chaos and
 /// the event clock — real workers are their own stragglers and
 /// failures, and the wire run advances in real time.
@@ -841,6 +864,7 @@ impl ServeAlgorithm {
             config_fp: config_fingerprint(cfg),
             task_checksum: task_checksum(&task),
             schedule: comm.schedule.describe(),
+            compression: comm.compression.describe(),
         };
         let mode = {
             let mut gossip = format!("gossip δ={delta:.0e}");
@@ -913,6 +937,7 @@ mod tests {
             config_fp: 0xAA,
             task_checksum: 0xBB,
             schedule: "sync".into(),
+            compression: "none".into(),
         }
     }
 
@@ -924,6 +949,7 @@ mod tests {
             config_fp: 0xAA,
             task_checksum: 0xBB,
             schedule: "sync".into(),
+            compression: "none".into(),
             have_layer: 0,
         }
     }
@@ -961,6 +987,18 @@ mod tests {
             .admit(&bad, &taken)
             .unwrap_err()
             .contains("schedule mismatch"));
+
+        // Same for compression: an uncompressed server rejects a q4
+        // worker by the knob's name, not the fingerprint diff.
+        let mut bad = hello(0);
+        if let Message::Hello { compression, config_fp, .. } = &mut bad {
+            *compression = "q4".into();
+            *config_fp = 1;
+        }
+        assert!(e
+            .admit(&bad, &taken)
+            .unwrap_err()
+            .contains("compression mismatch"));
 
         let mut bad = hello(0);
         if let Message::Hello { config_fp, .. } = &mut bad {
@@ -1008,6 +1046,14 @@ mod tests {
 
         let mut c = ok.clone();
         c.iter_staleness = 2;
+        assert!(validate_transport_config(&c).is_ok());
+
+        // Compressed gossip is engine math too: wire-capable.
+        let mut c = ok.clone();
+        c.compress = Some("q4".into());
+        assert!(validate_transport_config(&c).is_ok());
+        let mut c = ok.clone();
+        c.compress = Some("topk:0.1".into());
         assert!(validate_transport_config(&c).is_ok());
 
         // Still simulation-only: simulated cluster physics.

@@ -36,6 +36,7 @@
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::{Decoder, Encoder};
+use crate::network::CompressionConfig;
 use crate::linalg::Matrix;
 use crate::transport::{frame, Conn};
 use crate::{Error, Result};
@@ -44,7 +45,11 @@ use crate::{Error, Result};
 /// v2: Hello carries the schedule name and the worker's layer-boundary
 /// snapshot depth, CatchUp ships a partial weight stack (`from_layer`),
 /// and Hold (tag 11) covers communication-skipped iterations.
-pub const PROTOCOL_VERSION: u32 = 2;
+/// v3: Hello carries the compression name (`none`/`qN`/`topk:F`) so a
+/// compressed-gossip mismatch rejects by name; the shares themselves
+/// stay raw `f64` on the wire — the server's gossip engine compresses
+/// inside its mixing paths, before framing.
+pub const PROTOCOL_VERSION: u32 = 3;
 
 /// One protocol message. Tags are stable wire constants; see the module
 /// docs for the exchange pattern.
@@ -52,8 +57,9 @@ pub const PROTOCOL_VERSION: u32 = 2;
 pub enum Message {
     /// Worker → server greeting carrying everything the server needs to
     /// admit or reject the peer with a precise reason. `schedule` names
-    /// the communication schedule (also folded into `config_fp`; named
-    /// here so a mismatch rejects by name, not as an opaque hash diff);
+    /// the communication schedule and `compression` the gossip
+    /// compressor (both also folded into `config_fp`; named here so a
+    /// mismatch rejects by name, not as an opaque hash diff);
     /// `have_layer` is the depth of the worker's locally snapshotted
     /// weight stack, so a rejoin catch-up ships only the missing tail.
     Hello {
@@ -63,6 +69,7 @@ pub enum Message {
         config_fp: u64,
         task_checksum: u64,
         schedule: String,
+        compression: String,
         have_layer: u64,
     },
     /// Server → worker: admitted.
@@ -149,6 +156,7 @@ impl Message {
                 config_fp,
                 task_checksum,
                 schedule,
+                compression,
                 have_layer,
             } => {
                 e.u8(1)?;
@@ -158,6 +166,7 @@ impl Message {
                 e.u64(*config_fp)?;
                 e.u64(*task_checksum)?;
                 e.string(schedule)?;
+                e.string(compression)?;
                 e.u64(*have_layer)?;
             }
             Message::Welcome { protocol } => {
@@ -255,6 +264,7 @@ impl Message {
                 config_fp: d.u64()?,
                 task_checksum: d.u64()?,
                 schedule: d.string()?,
+                compression: d.string()?,
                 have_layer: d.u64()?,
             },
             2 => Message::Welcome { protocol: d.u32()? },
@@ -386,6 +396,18 @@ pub fn config_fingerprint(cfg: &ExperimentConfig) -> u64 {
     h.u64(cfg.iter_staleness as u64);
     h.bytes(cfg.iter_schedule.as_bytes());
     h.u64(cfg.iter_schedule.len() as u64);
+    // Hash the canonical compression name so `None` and an explicit
+    // "none" fingerprint identically; an unparseable spelling (caught
+    // long before any handshake) degrades to "none" rather than making
+    // the fingerprint fallible.
+    let compression = cfg
+        .compress
+        .as_deref()
+        .and_then(|s| CompressionConfig::parse(s).ok())
+        .unwrap_or(CompressionConfig::None)
+        .describe();
+    h.bytes(compression.as_bytes());
+    h.u64(compression.len() as u64);
     h.finish()
 }
 
@@ -423,6 +445,7 @@ mod tests {
                 config_fp: 0xDEAD_BEEF,
                 task_checksum: 42,
                 schedule: "semisync(s=2)".into(),
+                compression: "q4".into(),
                 have_layer: 1,
             },
             Message::Welcome {
@@ -535,6 +558,32 @@ mod tests {
         assert_ne!(config_fingerprint(&a), config_fingerprint(&c));
         let mut d = c.clone();
         d.iter_schedule = "fixed-lag:1".into();
+        assert_ne!(config_fingerprint(&c), config_fingerprint(&d));
+    }
+
+    #[test]
+    fn fingerprint_normalizes_the_compression_knob() {
+        let a = ExperimentConfig::named_dataset("satimage-small").unwrap();
+
+        // None and an explicit "none" are the same run.
+        let mut c = a.clone();
+        c.compress = Some("none".into());
+        assert_eq!(config_fingerprint(&a), config_fingerprint(&c));
+
+        // Any real compressor changes the math, and the bit-width /
+        // kept-fraction are part of its identity.
+        let mut c = a.clone();
+        c.compress = Some("q4".into());
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&c));
+        let mut d = c.clone();
+        d.compress = Some("q8".into());
+        assert_ne!(config_fingerprint(&c), config_fingerprint(&d));
+
+        let mut c = a.clone();
+        c.compress = Some("topk:0.1".into());
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&c));
+        let mut d = c.clone();
+        d.compress = Some("topk:0.25".into());
         assert_ne!(config_fingerprint(&c), config_fingerprint(&d));
     }
 }

@@ -403,6 +403,117 @@ fn transport_flags_validate() {
     assert!(String::from_utf8_lossy(&out.stderr).contains("out of range"));
 }
 
+#[test]
+fn compress_flag_matrix() {
+    // A quantized run trains end to end and reports the compressor in
+    // its mode line.
+    let out = dssfn()
+        .args([
+            "train", "--dataset", "quickstart", "--layers", "1",
+            "--admm-iters", "8", "--nodes", "4", "--degree", "1",
+            "--compress", "q4",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("compress=q4"), "compressor missing from mode:\n{text}");
+
+    // Malformed and out-of-range spellings fail at flag-parse time.
+    for bad in ["zip", "q0", "q9", "topk:0", "topk:1.5"] {
+        let out = dssfn()
+            .args(["train", "--dataset", "quickstart", "--compress", bad])
+            .output()
+            .unwrap();
+        assert!(!out.status.success(), "--compress {bad} accepted");
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains("compress"), "--compress {bad}: {err}");
+    }
+
+    // Exact averaging exchanges no messages to compress.
+    let out = dssfn()
+        .args([
+            "train", "--dataset", "quickstart", "--exact-consensus",
+            "--compress", "q4",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("exact_consensus"));
+
+    // Chaos churn would orphan the per-edge error-feedback state.
+    let out = dssfn()
+        .args([
+            "train", "--dataset", "quickstart", "--chaos-crash-p", "0.1",
+            "--compress", "q4",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("fault injection"));
+
+    // --compress conflicts with --resume like every training flag (the
+    // checkpoint carries the compressor and its accumulators).
+    let out = dssfn()
+        .args(["train", "--resume", "nope.ckpt", "--compress", "q4"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("cannot be combined"));
+
+    // Compression is seeded math inside the server's gossip engine and
+    // runs identically over the wire: serve/worker accept it. The
+    // probes fail *past* transport validation on a later, named check,
+    // proving the compressor itself was not refused.
+    for spec in ["q4", "topk:0.1"] {
+        let out = dssfn()
+            .args([
+                "worker", "--connect", "127.0.0.1:1", "--shard", "99",
+                "--dataset", "quickstart", "--compress", spec,
+            ])
+            .output()
+            .unwrap();
+        assert!(!out.status.success());
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(
+            !err.contains("simulation-only"),
+            "--compress {spec} wrongly rejected as simulation-only: {err}"
+        );
+        assert!(err.contains("out of range"), "stderr: {err}");
+
+        let out = dssfn()
+            .args([
+                "serve", "--bind", "127.0.0.1:0", "--min-clients", "99",
+                "--dataset", "quickstart", "--compress", spec,
+            ])
+            .output()
+            .unwrap();
+        assert!(!out.status.success());
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(
+            !err.contains("simulation-only"),
+            "--compress {spec} wrongly rejected as simulation-only: {err}"
+        );
+        assert!(err.contains("exceeds the cluster size"), "stderr: {err}");
+    }
+
+    // info surfaces the compressor in the fabric line.
+    let out = dssfn()
+        .args(["info", "--dataset", "quickstart", "--compress", "topk:0.1"])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(String::from_utf8_lossy(&out.stdout).contains("compress=topk:0.1"));
+}
+
 /// The committed `docs/CLI.md` is exactly what the binary generates —
 /// the flag table, the usage text and the doc share one source, so they
 /// cannot drift.

@@ -5,7 +5,9 @@
 //! checkpoint/resume of seeded schedules.
 
 use dssfn::data::lookup;
-use dssfn::network::{AdaptiveDeltaPolicy, CommSchedule, NodeLatency, StalenessSchedule};
+use dssfn::network::{
+    AdaptiveDeltaPolicy, CommSchedule, CompressionConfig, NodeLatency, StalenessSchedule,
+};
 use dssfn::session::{SessionBuilder, StepEvent};
 use dssfn::{resume_session, Checkpoint};
 
@@ -641,6 +643,163 @@ fn one_slow_lagged_node_is_the_one_charged_on_the_critical_path() {
     );
     assert_eq!(one_p_model.output().max_abs_diff(one_model.output()), 0.0);
     assert_eq!(sync_p_model.output().max_abs_diff(sync_model.output()), 0.0);
+}
+
+/// The acceptance criterion for compressed gossip: 4-bit quantization
+/// and top-10% sparsification (each with per-edge error feedback) land
+/// within 5% of the uncompressed final-layer cost on mnist-small while
+/// billing strictly fewer bytes — over an *identical* logical exchange,
+/// because the round count B(δ) comes from the spectral gap, not the
+/// values.
+#[test]
+fn compressed_gossip_matches_sync_cost_with_strictly_fewer_bytes() {
+    let (_, plain) = mnist_small_builder()
+        .build()
+        .unwrap()
+        .run_to_completion()
+        .unwrap();
+    let plain_cost = plain.layers.last().unwrap().final_cost().unwrap();
+    for spec in ["q4", "topk:0.1"] {
+        let (_, report) = mnist_small_builder()
+            .compression(CompressionConfig::parse(spec).unwrap())
+            .build()
+            .unwrap()
+            .run_to_completion()
+            .unwrap();
+        let cost = report.layers.last().unwrap().final_cost().unwrap();
+        assert!(
+            (cost - plain_cost).abs() <= 0.05 * plain_cost.abs(),
+            "{spec} final-layer cost {cost} vs uncompressed {plain_cost}"
+        );
+        assert_eq!(
+            (report.comm_total.rounds, report.comm_total.scalars),
+            (plain.comm_total.rounds, plain.comm_total.scalars),
+            "{spec}: the logical exchange must not change"
+        );
+        assert!(
+            report.comm_total.bytes < plain.comm_total.bytes,
+            "{spec} billed {} bytes, not fewer than uncompressed {}",
+            report.comm_total.bytes,
+            plain.comm_total.bytes
+        );
+        assert!(report.mode.contains(&format!("compress={spec}")), "{}", report.mode);
+    }
+}
+
+/// Compression composes with the relaxed schedules: under semisync,
+/// lossy, and the adaptive-δ controller, a q4 run stays within 5% of
+/// the same schedule's uncompressed final-layer cost and bills strictly
+/// fewer bytes. (Under adaptive δ the round counts may legitimately
+/// differ — the controller reads the compressed objective — so only the
+/// value-independent schedules pin the logical exchange.)
+#[test]
+fn compression_composes_with_every_relaxed_schedule() {
+    let q4 = || CompressionConfig::parse("q4").unwrap();
+    let cases: [(&str, fn(SessionBuilder) -> SessionBuilder); 3] = [
+        ("semisync", |b| b.staleness(2)),
+        ("lossy", |b| b.comm_fabric(CommSchedule::Lossy { loss_p: 0.2 })),
+        ("adaptive-δ", |b| {
+            b.adaptive_delta(AdaptiveDeltaPolicy {
+                max_delta: 1e-4,
+                plateau: 0.02,
+                loosen: 10.0,
+                period: 1,
+            })
+        }),
+    ];
+    for (name, shape) in cases {
+        let (_, plain) = shape(mnist_small_builder())
+            .build()
+            .unwrap()
+            .run_to_completion()
+            .unwrap();
+        let (_, comp) = shape(mnist_small_builder())
+            .compression(q4())
+            .build()
+            .unwrap()
+            .run_to_completion()
+            .unwrap();
+        let plain_cost = plain.layers.last().unwrap().final_cost().unwrap();
+        let comp_cost = comp.layers.last().unwrap().final_cost().unwrap();
+        assert!(
+            (comp_cost - plain_cost).abs() <= 0.05 * plain_cost.abs(),
+            "{name}+q4 final-layer cost {comp_cost} vs uncompressed {plain_cost}"
+        );
+        assert!(
+            comp.comm_total.bytes < plain.comm_total.bytes,
+            "{name}+q4 billed {} bytes, not fewer than uncompressed {}",
+            comp.comm_total.bytes,
+            plain.comm_total.bytes
+        );
+        if name != "adaptive-δ" {
+            assert_eq!(
+                (comp.comm_total.rounds, comp.comm_total.scalars),
+                (plain.comm_total.rounds, plain.comm_total.scalars),
+                "{name}+q4: seeded schedules are value-independent"
+            );
+        }
+        assert!(comp.mode.contains("compress=q4"), "{}", comp.mode);
+    }
+}
+
+/// Compressed runs — dither cursor, per-edge error-feedback
+/// accumulators (non-zero by mid-layer-1: every quantized round leaves
+/// residuals) — checkpoint and resume bit-identically under the
+/// semisync schedule: the v7 runtime block carries the compressor's
+/// whole history-dependent state.
+#[test]
+fn quantized_semisync_run_resumes_bit_identically() {
+    let task = std::sync::Arc::new(lookup("quickstart").unwrap().generator(5).generate().unwrap());
+    let builder = || {
+        SessionBuilder::new()
+            .shared_task(std::sync::Arc::clone(&task))
+            .seed(5)
+            .layers(2)
+            .hidden_extra(12)
+            .admm_iterations(12)
+            .nodes(4)
+            .degree(1)
+            .gossip_delta(1e-8)
+            .threads(2)
+            .staleness(2)
+            .compression(CompressionConfig::parse("q4").unwrap())
+    };
+    let (one_model, one_report) = builder().build().unwrap().run_to_completion().unwrap();
+    let one_model = one_model.into_ssfn().unwrap();
+    assert!(one_report.mode.contains("compress=q4"), "{}", one_report.mode);
+
+    // Interrupt mid-layer-1 (deep in the compressed dither stream),
+    // serialize, restore, finish.
+    let mut session = builder().build().unwrap();
+    let ck = loop {
+        match session.step().unwrap() {
+            Some(StepEvent::AdmmIteration { layer: 1, iteration: 5, .. }) => {
+                break session.checkpoint().unwrap();
+            }
+            Some(_) => {}
+            None => panic!("session finished before the checkpoint point"),
+        }
+    };
+    assert_eq!(ck.comm_config().compression.describe(), "q4");
+    let bytes = ck.to_bytes();
+    drop(session);
+
+    let ck = Checkpoint::from_bytes(&bytes).unwrap();
+    let mut resumed = resume_session(&ck, &task).unwrap();
+    let (model, report) = resumed.finish().unwrap();
+    let model = model.into_ssfn().unwrap();
+
+    assert_eq!(model.output().max_abs_diff(one_model.output()), 0.0);
+    for (a, b) in model.weights().iter().zip(one_model.weights()) {
+        assert_eq!(a.max_abs_diff(b), 0.0, "restored weight drifted");
+    }
+    assert_eq!(report.full_cost_curve(), one_report.full_cost_curve());
+    assert_eq!(report.comm_total, one_report.comm_total);
+    assert_eq!(
+        report.simulated_comm_secs.to_bits(),
+        one_report.simulated_comm_secs.to_bits(),
+        "compressed-payload clock drifted across resume"
+    );
 }
 
 /// The synchronous fabric really is the old path: a default-schedule

@@ -4,8 +4,10 @@
 use dssfn::data::{shard_uniform, shard_weighted, SynthClassification};
 use dssfn::linalg::Matrix;
 use dssfn::network::{
-    CommLedger, GossipEngine, LatencyModel, MixingMatrix, Topology, WeightRule,
+    CommLedger, CompressionConfig, Compressor, GossipEngine, LatencyModel, MixingMatrix,
+    Topology, WeightRule,
 };
+use dssfn::session::SessionBuilder;
 use dssfn::testing::property;
 use std::sync::Arc;
 
@@ -144,6 +146,121 @@ fn cholesky_solve_residuals_bounded() {
             x.max_abs_diff(&x_true)
         );
     });
+}
+
+#[test]
+fn stochastic_quantizer_is_unbiased_at_every_bit_width() {
+    // The dither draw picks round-up with probability equal to the
+    // fractional level, so E[Q(v)] = v conditional on the scale. Check
+    // the empirical mean over 10k independent dither draws per
+    // bit-width (accumulators reset between draws so pure quantization
+    // is measured, not error feedback). The first entry pins the scale
+    // at 1.0 and quantizes exactly; the rest sit between levels for
+    // every bit-width, so each draw genuinely dithers.
+    let targets = [1.0, 0.37, -0.61, 0.083];
+    let src = Matrix::from_fn(1, targets.len(), |_, c| targets[c]);
+    for bits in 1..=8u8 {
+        let comp = Compressor::new(CompressionConfig::Quantize { bits }, 0x5eed + bits as u64);
+        let draws = 10_000u64;
+        let mut sum = vec![0.0f64; targets.len()];
+        for round in 0..draws {
+            comp.reset();
+            let (msg, _) = comp.compress(0, round, &src).unwrap();
+            for (s, &m) in sum.iter_mut().zip(msg.as_slice()) {
+                *s += m;
+            }
+        }
+        for (i, (&t, s)) in targets.iter().zip(&sum).enumerate() {
+            let mean = s / draws as f64;
+            // Worst case (1 bit, v = 0.083): per-draw std < 1, so the
+            // standard error of the mean is < 0.01 — 0.05 is 5σ.
+            assert!(
+                (mean - t).abs() < 0.05,
+                "q{bits} entry {i}: mean {mean} vs target {t}"
+            );
+        }
+    }
+}
+
+#[test]
+fn top_k_split_conserves_every_element_bit_exactly() {
+    property("top-k split is exact", 24, |g| {
+        let rows = g.usize_in(1, 8);
+        let cols = g.usize_in(1, 8);
+        let n = rows * cols;
+        let frac = g.f64_in(0.05, 0.95);
+        let cfg = CompressionConfig::TopK { frac };
+        let comp = Compressor::new(cfg, g.case() as u64);
+        let k = cfg.kept(n);
+        // Round 1: e = 0, so t = src.
+        let src = g.matrix(rows, cols, 3.0);
+        let (msg, err) = comp.compress(0, 0, &src).unwrap();
+        let nz_src = src.as_slice().iter().filter(|v| **v != 0.0).count();
+        let kept = msg.as_slice().iter().filter(|v| **v != 0.0).count();
+        if nz_src >= k {
+            assert_eq!(kept, k, "frac={frac} n={n}");
+        } else {
+            assert!(kept <= k);
+        }
+        for ((&m, &e), &t) in msg.as_slice().iter().zip(err.as_slice()).zip(src.as_slice()) {
+            let conserved = (m.to_bits() == t.to_bits() && e == 0.0)
+                || (e.to_bits() == t.to_bits() && m == 0.0);
+            assert!(conserved, "lossy split: t={t} m={m} e={e}");
+        }
+        // Round 2: the accumulator is non-zero; the split must conserve
+        // t = src2 + e bit-exactly all the same.
+        let src2 = g.matrix(rows, cols, 3.0);
+        let mut expect = src2.clone();
+        expect.axpy(1.0, &err).unwrap();
+        let (msg2, err2) = comp.compress(0, 1, &src2).unwrap();
+        for ((&m, &e), &t) in msg2
+            .as_slice()
+            .iter()
+            .zip(err2.as_slice())
+            .zip(expect.as_slice())
+        {
+            let conserved = (m.to_bits() == t.to_bits() && e == 0.0)
+                || (e.to_bits() == t.to_bits() && m == 0.0);
+            assert!(conserved, "round-2 lossy split: t={t} m={m} e={e}");
+        }
+    });
+}
+
+#[test]
+fn disabled_compression_is_bit_identical_through_the_session_stack() {
+    // `--compress none` must run the exact pre-compression code path: a
+    // session with compression explicitly disabled produces the same
+    // model, curve and ledger bit-for-bit as one that never heard of
+    // the knob.
+    let builder = || {
+        SessionBuilder::new()
+            .dataset("quickstart")
+            .seed(5)
+            .layers(1)
+            .hidden_extra(8)
+            .admm_iterations(4)
+            .nodes(4)
+            .degree(1)
+            .record_cost_curve(true)
+            .threads(1)
+    };
+    let run = |b: SessionBuilder| -> dssfn::Result<_> {
+        let mut session = b.build()?;
+        while session.step()?.is_some() {}
+        session.finish()
+    };
+    let (m_plain, r_plain) = run(builder()).unwrap();
+    let (m_none, r_none) =
+        run(builder().compression(CompressionConfig::parse("none").unwrap())).unwrap();
+    assert_eq!(m_plain.weights().len(), m_none.weights().len());
+    for (a, b) in m_plain.weights().iter().zip(m_none.weights()) {
+        assert_eq!(a.max_abs_diff(b), 0.0);
+    }
+    assert_eq!(r_plain.comm_total, r_none.comm_total);
+    assert_eq!(
+        r_plain.simulated_comm_secs.to_bits(),
+        r_none.simulated_comm_secs.to_bits()
+    );
 }
 
 #[test]

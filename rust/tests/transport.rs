@@ -136,6 +136,25 @@ fn loopback_iter_staleness_is_bit_identical_to_in_process() {
 }
 
 #[test]
+fn loopback_compressed_is_bit_identical_to_in_process() {
+    // The compressor lives inside the server's gossip engine (shares
+    // are compressed before framing), so the compressed wire run —
+    // dither draws, error-feedback residuals, compressed byte billing —
+    // is bit-identical to the compressed in-process run.
+    let mut cfg = toy_config();
+    cfg.compress = Some("q4".into());
+    assert_loopback_matches_in_process(&cfg);
+}
+
+#[test]
+fn loopback_compressed_semisync_is_bit_identical_to_in_process() {
+    let mut cfg = toy_config();
+    cfg.compress = Some("topk:0.25".into());
+    cfg.schedule = "semisync".into();
+    assert_loopback_matches_in_process(&cfg);
+}
+
+#[test]
 fn handshake_rejects_mismatches_cleanly() {
     let mut cfg = toy_config();
     cfg.nodes = 2;
@@ -165,6 +184,7 @@ fn handshake_rejects_mismatches_cleanly() {
             config_fp: 0,
             task_checksum: 0,
             schedule: "sync".into(),
+            compression: "none".into(),
             have_layer: 0,
         },
     )
@@ -195,6 +215,13 @@ fn handshake_rejects_mismatches_cleanly() {
     bad.schedule = "semisync".into();
     let err = run_worker_with(&bad, WorkerOptions::default(), one_shot(&listener)).unwrap_err();
     assert!(err.to_string().contains("schedule mismatch"), "{err}");
+
+    // So is a different gossip compressor: a q4 worker against this
+    // uncompressed server is rejected by the knob's name.
+    let mut bad = cfg.clone();
+    bad.compress = Some("q4".into());
+    let err = run_worker_with(&bad, WorkerOptions::default(), one_shot(&listener)).unwrap_err();
+    assert!(err.to_string().contains("compression mismatch"), "{err}");
 
     // An out-of-range shard never even connects.
     let err = run_worker_with(
@@ -574,6 +601,7 @@ fn sample_messages() -> Vec<Message> {
             config_fp: 0x1234_5678_9abc_def0,
             task_checksum: 0x0fed_cba9_8765_4321,
             schedule: "semisync(s=2)".into(),
+            compression: "q4".into(),
             have_layer: 1,
         },
         Message::Welcome {
